@@ -1,0 +1,54 @@
+//! Ablation A1: fanin-constraint sweep — the accuracy ↔ hardware-cost
+//! trade-off that motivates FCP (paper §FCP).
+//!
+//! For each fanin γ, a fresh random model of JSC-S shape is synthesized and
+//! the LUT/FF/depth/fmax cost is reported alongside the enumeration cost
+//! 2^(γ·β). (Accuracy as a function of γ is a training-side property —
+//! `python -m compile.train --ablate-act` covers A2; this example isolates
+//! the hardware side, which needs no training.)
+//!
+//! ```bash
+//! cargo run --release --example ablation_fanin -- [--quick]
+//! ```
+
+use nullanet_tiny::flow::{run_flow, FlowConfig};
+use nullanet_tiny::fpga::timing::TimingModel;
+use nullanet_tiny::nn::model::random_model;
+use nullanet_tiny::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).expect("args");
+    let quick = args.get_bool("quick");
+    let bits = 2usize;
+    let fanins: Vec<usize> = if quick { vec![2, 3, 4] } else { vec![2, 3, 4, 5, 6] };
+
+    println!("A1: fanin sweep on JSC-S shape (16→64→32→5, β={bits})\n");
+    println!(
+        "| γ | fn bits | enum 2^n | LUTs | FFs | depth | fmax MHz | flow ms |"
+    );
+    println!("|---|---------|----------|------|-----|-------|----------|---------|");
+    let tm = TimingModel::vu9p();
+    for fanin in fanins {
+        let model = random_model("sweep", 16, &[64, 32, 5], fanin, bits, 99);
+        let t = std::time::Instant::now();
+        let cfg = FlowConfig { verify: false, ..Default::default() };
+        let r = run_flow(&model, &cfg, None).expect("flow");
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        let s = r.circuit.stats();
+        println!(
+            "| {fanin} | {:7} | {:8} | {:4} | {:3} | {:5} | {:8.0} | {:7.0} |",
+            fanin * bits,
+            1u64 << (fanin * bits),
+            s.luts,
+            s.ffs,
+            s.max_stage_depth,
+            tm.fmax_mhz(s.max_stage_depth),
+            ms,
+        );
+    }
+    println!(
+        "\nThe exponential enumeration column is why FCP exists: γ·β must stay\n\
+         small enough to enumerate, and LUT cost tracks the same exponential\n\
+         once γ·β exceeds the native LUT size (6)."
+    );
+}

@@ -1,0 +1,100 @@
+//! End-to-end driver (DESIGN.md F1): the full pipeline on the real
+//! workload — trained JSC model → combinational logic → Table-I row —
+//! proving all three layers compose:
+//!
+//!   L2/L1 (Python, already run by `make artifacts`): QAT + FCP training
+//!   with the Pallas masked-dense kernel, exported to model.json + HLO.
+//!   L3 (this binary): logic synthesis, verification, FPGA cost,
+//!   test-set accuracy via the bit-parallel simulator, and cross-check
+//!   against the PJRT numeric engine.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example jsc_flow -- --arch jsc-s
+//! ```
+
+use nullanet_tiny::baseline::{build_logicnets, AqpModel};
+use nullanet_tiny::data::Dataset;
+use nullanet_tiny::flow::{circuit_accuracy, run_flow, FlowConfig};
+use nullanet_tiny::fpga::area::Device;
+use nullanet_tiny::fpga::report::{format_table, Comparison, ResultRow};
+use nullanet_tiny::fpga::timing::TimingModel;
+use nullanet_tiny::nn::model::Model;
+use nullanet_tiny::runtime::PjrtEngine;
+use nullanet_tiny::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).expect("args");
+    let arch = args.get_str("arch", "jsc-s");
+    let dir = args.get_str("artifacts", "artifacts");
+
+    // ---- load the trained artifacts (built by `make artifacts`) ----
+    let model = Model::load(&format!("{dir}/{arch}.model.json"))
+        .expect("model artifact (run `make artifacts` first)");
+    let base_model = Model::load(&format!("{dir}/{arch}.logicnets.model.json"))
+        .expect("baseline model artifact");
+    let test = Dataset::load(&format!("{dir}/jsc_test.bin")).expect("test set");
+    println!("model: {}", model.summary());
+    println!("test set: {} samples\n", test.len());
+
+    // ---- the flow ----
+    let result = run_flow(&model, &FlowConfig::default(), None).expect("flow");
+    println!("{}", result.timer.report(&format!("{arch} flow stages (Fig. 1)")));
+
+    // ---- accuracy: exact NN vs logic circuit (must agree exactly) ----
+    let nn_acc = nullanet_tiny::nn::eval::accuracy(&model, &test.xs, &test.ys);
+    let logic_acc = circuit_accuracy(&model, &result.circuit, &test.xs, &test.ys);
+    println!("accuracy: quantized NN {:.2}%  |  logic circuit {:.2}%", nn_acc * 100.0, logic_acc * 100.0);
+    assert!((nn_acc - logic_acc).abs() < 1e-12, "logic must be bit-exact");
+
+    // ---- PJRT numeric cross-check ----
+    let hlo = format!("{dir}/{arch}.hlo.txt");
+    if std::path::Path::new(&hlo).exists() {
+        let out_w = model.layers.last().unwrap().out_width;
+        let engine = PjrtEngine::load(&hlo, 64, model.input_features, out_w).expect("pjrt");
+        let n = 2048.min(test.len());
+        let pjrt_pred = engine.classify_all(&test.xs[..n], model.num_classes).unwrap();
+        let rust_pred: Vec<usize> = test.xs[..n]
+            .iter()
+            .map(|x| nullanet_tiny::nn::eval::classify(&model, x))
+            .collect();
+        let agree = pjrt_pred.iter().zip(&rust_pred).filter(|(a, b)| a == b).count();
+        println!(
+            "PJRT ({}) agreement with integer eval: {}/{} ({:.2}%)",
+            engine.platform(),
+            agree,
+            n,
+            100.0 * agree as f64 / n as f64
+        );
+    }
+
+    // ---- hardware report + baseline comparison (one Table-I row) ----
+    let tm = TimingModel::vu9p();
+    let base = build_logicnets(&base_model, 6).expect("baseline flow");
+    let base_acc = circuit_accuracy(&base_model, &base.circuit, &test.xs, &test.ys);
+    let cmp = Comparison {
+        ours: ResultRow::from_stats(&arch.to_uppercase(), logic_acc, result.circuit.stats(), &tm),
+        baseline: ResultRow::from_stats(
+            &arch.to_uppercase(),
+            base_acc,
+            base.circuit.stats(),
+            &tm,
+        ),
+    };
+    println!("\n{}", format_table(std::slice::from_ref(&cmp)));
+
+    let dev = Device::vu9p();
+    let (lu, fu) = dev.utilization(&result.circuit.stats());
+    println!(
+        "VU9P utilization: {:.3}% LUTs, {:.3}% FFs  (device {})",
+        lu * 100.0,
+        fu * 100.0,
+        dev.name
+    );
+    let aqp = AqpModel::default();
+    println!(
+        "vs Google AQP-style arithmetic datapath: {:.1} ns vs our {:.2} ns ({:.2}x lower)",
+        aqp.latency_ns(&model),
+        cmp.ours.latency_ns,
+        aqp.latency_ns(&model) / cmp.ours.latency_ns
+    );
+}

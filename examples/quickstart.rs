@@ -1,0 +1,53 @@
+//! Quickstart: the NullaNet Tiny flow on a tiny model, start to finish.
+//!
+//! Builds a small random quantized fanin-constrained network (no training
+//! needed — the flow is training-agnostic), converts every neuron into
+//! optimized combinational logic, verifies the circuit is bit-exact against
+//! the network, and prints the hardware cost a VU9P-class FPGA would pay.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use nullanet_tiny::flow::{run_flow, FlowConfig};
+use nullanet_tiny::fpga::timing::TimingModel;
+use nullanet_tiny::logic::verilog::pipelined_to_verilog;
+use nullanet_tiny::nn::model::random_model;
+
+fn main() {
+    // 1. A model: 8 features → 10 → 6 → 3 classes, 2-bit activations,
+    //    fanin ≤ 3 (6-bit neuron functions — one native 6-LUT each).
+    let model = random_model("quickstart", 8, &[10, 6, 3], 3, 2, 42);
+    println!("model: {}\n", model.summary());
+
+    // 2. The flow: enumerate → ESPRESSO-II → AIG → 6-LUT map → retime.
+    let result = run_flow(&model, &FlowConfig::default(), None).expect("flow");
+    println!("{}", result.timer.report("flow stages"));
+
+    // 3. Hardware cost.
+    let stats = result.circuit.stats();
+    let tm = TimingModel::vu9p();
+    println!(
+        "hardware: {} LUTs, {} FFs, {} pipeline stages, worst stage depth {}",
+        stats.luts, stats.ffs, stats.latency_cycles, stats.max_stage_depth
+    );
+    println!(
+        "timing:   fmax {:.0} MHz, end-to-end latency {:.2} ns",
+        tm.fmax_mhz(stats.max_stage_depth),
+        tm.latency_ns(stats.latency_cycles, stats.max_stage_depth)
+    );
+    println!(
+        "espresso: {} cubes → {} cubes across {} neurons\n",
+        result.total_cubes_before, result.total_cubes_after, result.neurons
+    );
+
+    // 4. Bit-exactness (the flow already verified; show it explicitly).
+    nullanet_tiny::flow::build::verify_circuit(&model, &result.circuit, 1000, 7)
+        .expect("circuit ≡ quantized NN");
+    println!("verified: circuit ≡ quantized network on 1000 random samples");
+
+    // 5. RTL out (first lines).
+    let verilog = pipelined_to_verilog(&result.circuit, "quickstart");
+    let head: String = verilog.lines().take(6).collect::<Vec<_>>().join("\n");
+    println!("\nverilog preview:\n{head}\n…");
+}

@@ -1,0 +1,92 @@
+//! Serving demo: the coordinator routes batched inference requests to the
+//! combinational-logic engine (and, when artifacts exist, cross-checks a
+//! PJRT numeric engine), reporting latency/throughput percentiles.
+//!
+//! ```bash
+//! cargo run --release --example serve_logic -- --requests 20000 [--arch jsc-s]
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nullanet_tiny::coordinator::{BatchPolicy, PjrtSpec, Policy, Router};
+use nullanet_tiny::flow::{run_flow, FlowConfig};
+use nullanet_tiny::nn::model::{random_model, Model};
+use nullanet_tiny::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).expect("args");
+    let n_requests = args.get_usize("requests", 20_000).expect("--requests");
+    let arch = args.get_str("arch", "jsc-s");
+    let dir = args.get_str("artifacts", "artifacts");
+
+    // Use the trained model when available, else a stand-in.
+    let model_path = format!("{dir}/{arch}.model.json");
+    let (model, pjrt) = if std::path::Path::new(&model_path).exists() {
+        let m = Model::load(&model_path).expect("model");
+        let out_w = m.layers.last().unwrap().out_width;
+        let hlo = format!("{dir}/{arch}.hlo.txt");
+        let spec = std::path::Path::new(&hlo).exists().then(|| PjrtSpec {
+            hlo_path: hlo,
+            batch: 64,
+            in_features: m.input_features,
+            out_width: out_w,
+        });
+        (m, spec)
+    } else {
+        println!("(artifacts missing; serving a random model, logic only)");
+        (random_model("serve", 16, &[32, 16, 5], 3, 2, 7), None)
+    };
+    println!("model: {}", model.summary());
+
+    println!("synthesizing logic…");
+    let flow = run_flow(&model, &FlowConfig::default(), None).expect("flow");
+    let policy = if pjrt.is_some() { Policy::Compare } else { Policy::Logic };
+    let router = Arc::new(Router::start(
+        model.clone(),
+        flow.circuit.netlist.clone(),
+        pjrt,
+        policy,
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(100) },
+    ));
+
+    // Drive the server from 4 closed-loop clients.
+    println!("serving {n_requests} requests (policy {policy:?})…");
+    let t0 = Instant::now();
+    let per_client = n_requests / 4;
+    let mut joins = Vec::new();
+    for c in 0..4u64 {
+        let r = Arc::clone(&router);
+        let feats = model.input_features;
+        joins.push(std::thread::spawn(move || {
+            use nullanet_tiny::util::prng::Xoshiro256;
+            let mut rng = Xoshiro256::new(0x5EED ^ c);
+            for _ in 0..per_client {
+                let x: Vec<f64> = (0..feats).map(|_| 2.0 * rng.next_gaussian()).collect();
+                let rx = r.submit(x);
+                let _ = rx.recv_timeout(Duration::from_secs(30)).expect("reply");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall = t0.elapsed();
+
+    let m = router.metrics();
+    let served = 4 * per_client;
+    println!("\n── serving report ──");
+    println!("{}", m.report());
+    println!(
+        "throughput: {:.0} inferences/s (wall {:.2}s, {} batches, avg batch {:.1})",
+        served as f64 / wall.as_secs_f64(),
+        wall.as_secs_f64(),
+        m.batches.load(Ordering::Relaxed),
+        served as f64 / m.batches.load(Ordering::Relaxed).max(1) as f64,
+    );
+    if policy == Policy::Compare {
+        let dis = m.disagreements.load(Ordering::Relaxed);
+        println!("logic vs PJRT disagreements: {dis}/{served}");
+    }
+}

@@ -1,0 +1,132 @@
+"""AOT build: train → export model.json + HLO text + dataset binaries.
+
+This is the single Python entry point `make artifacts` runs; after it
+finishes, Python is never needed again — the Rust binary loads
+``artifacts/<arch>.hlo.txt`` via PJRT and ``artifacts/<arch>.model.json``
+for logic synthesis.
+
+Interchange is HLO **text**, not ``lowered.compiler_ir().serialize()``:
+jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage (from ``python/``):
+
+    python -m compile.aot --out-dir ../artifacts            # all archs
+    python -m compile.aot --out-dir ../artifacts --arch jsc-s --steps 1500
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import data as data_mod
+from compile import model as model_mod
+from compile import train as train_mod
+
+# Default training budget per arch (1-CPU environment; accuracy saturates
+# well before these step counts on the synthetic task).
+DEFAULT_STEPS = {"jsc-s": 3500, "jsc-m": 3500, "jsc-l": 2500}
+BATCH_EXPORT = 64  # batch size baked into the exported HLO
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower a jitted function to XLA HLO text via StableHLO."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_hlo(spec, params, masks, mean, std, path: str) -> None:
+    """Lower the full inference function (standardize → quantized forward →
+    output values) with the Pallas kernel on the MAC path."""
+    mean_j = jnp.asarray(mean.astype(np.float32))
+    std_j = jnp.asarray(std.astype(np.float32))
+    masks_j = [jnp.asarray(m) for m in masks]
+
+    def infer(x):
+        xn = (x - mean_j) / std_j
+        out = model_mod.forward(params, masks_j, xn, spec, use_kernel=True)
+        return (out,)
+
+    example = jax.ShapeDtypeStruct((BATCH_EXPORT, spec.input_features), jnp.float32)
+    lowered = jax.jit(infer).lower(example)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def build_arch(arch: str, out_dir: str, steps: int, seed: int,
+               quiet: bool = False) -> dict:
+    """Train both activation variants, export model JSONs + HLO."""
+    report = {"arch": arch}
+
+    # Our model (per-layer activation selection).
+    spec, params, masks, (mean, std), stats = train_mod.train(
+        arch, steps=steps, seed=seed, uniform_act=False, quiet=quiet)
+    exported = model_mod.export_model(spec, params, masks, mean, std)
+    model_mod.save_model_json(os.path.join(out_dir, f"{arch}.model.json"), exported)
+    export_hlo(spec, params, masks, mean, std,
+               os.path.join(out_dir, f"{arch}.hlo.txt"))
+    report["ours_acc"] = stats["final_test_acc"]
+    report["loss_curve"] = stats["loss_curve"]
+
+    # LogicNets-style baseline (uniform activations) — the accuracy
+    # comparator for Table I.
+    spec_b, params_b, masks_b, (mean_b, std_b), stats_b = train_mod.train(
+        arch, steps=steps, seed=seed, uniform_act=True, quiet=quiet)
+    exported_b = model_mod.export_model(spec_b, params_b, masks_b, mean_b, std_b)
+    model_mod.save_model_json(
+        os.path.join(out_dir, f"{arch}.logicnets.model.json"), exported_b)
+    report["baseline_acc"] = stats_b["final_test_acc"]
+    return report
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--arch", default=None, help="single arch (default: all)")
+    p.add_argument("--steps", type=int, default=None)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--quiet", action="store_true")
+    args = p.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    # Dataset binaries (shared by rust examples/benches). One draw, split —
+    # the class mixture itself is seed-dependent, so train/test must come
+    # from the SAME generate() call (train.py splits identically).
+    xs, ys = data_mod.generate(40_000, seed=1234)
+    data_mod.save(os.path.join(args.out_dir, "jsc_train.bin"), xs[:30_000], ys[:30_000])
+    data_mod.save(os.path.join(args.out_dir, "jsc_test.bin"), xs[30_000:], ys[30_000:])
+    x_tr = xs[:30_000]
+    x_te = xs[30_000:]
+    print(f"wrote datasets: {x_tr.shape[0]} train / {x_te.shape[0]} test")
+
+    archs = [args.arch] if args.arch else sorted(model_mod.ARCHS)
+    reports = []
+    for arch in archs:
+        steps = args.steps or DEFAULT_STEPS[arch]
+        print(f"=== building {arch} ({steps} steps) ===")
+        reports.append(build_arch(arch, args.out_dir, steps, args.seed,
+                                  quiet=args.quiet))
+
+    with open(os.path.join(args.out_dir, "training_report.json"), "w") as f:
+        json.dump(reports, f, indent=2)
+    for r in reports:
+        print(f"{r['arch']}: ours {r['ours_acc'] * 100:.2f}% vs "
+              f"uniform-act baseline {r['baseline_acc'] * 100:.2f}%")
+
+
+if __name__ == "__main__":
+    main()

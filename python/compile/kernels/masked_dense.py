@@ -1,0 +1,110 @@
+"""Pallas masked-dense kernel — the L1 compute hot-spot.
+
+The paper's training module spends its FLOPs in the fanin-masked dense
+layers (the very MACs the logic flow later eliminates from the FPGA). This
+kernel computes
+
+    y[bt, o] = Σ_i  x[bt, i] · (W[o, i] · M[o, i]) + b[o]
+
+tiled for a TPU: the grid walks (batch, out) tiles; each program instance
+keeps an (BM × IN) activation tile, an (BN × IN) masked-weight tile, and a
+(BM × BN) output tile resident in VMEM and drives the MXU with a single
+`jnp.dot` per tile (f32 accumulation). The mask product folds into the
+weight tile load, so HBM traffic per tile is one read of x, one read of W⊙M
+and one write of y — the hardware-adaptation story in DESIGN.md §7.
+
+CPU note: `interpret=True` is mandatory here — real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Interpret mode lowers
+to plain HLO, which is exactly what the AOT artifact wants.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: MXU-shaped (the systolic array is 128×128; 8-row granularity
+# for the VPU). Shapes smaller than a tile fall back to a single block.
+BM = 128  # batch tile
+BN = 128  # output-neuron tile
+
+
+def _kernel(x_ref, wm_ref, b_ref, o_ref):
+    """One (BM × BN) output tile: masked weights are pre-multiplied; the
+    MXU sees a plain f32 matmul."""
+    x = x_ref[...]          # [bm, in]
+    wm = wm_ref[...]        # [bn, in]
+    b = b_ref[...]          # [bn]
+    acc = jnp.dot(x, wm.T, preferred_element_type=jnp.float32)
+    o_ref[...] = acc + b[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_dense(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    mask: jnp.ndarray,
+    b: jnp.ndarray,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Masked dense layer via a Pallas kernel.
+
+    Args:
+      x: [batch, in] f32 activations.
+      w: [out, in] f32 weights.
+      mask: [out, in] f32 {0,1} fanin mask.
+      b: [out] f32 bias.
+      interpret: keep True on CPU (see module docstring).
+
+    Returns:
+      [batch, out] f32 pre-activations.
+    """
+    batch, in_dim = x.shape
+    out_dim, in_dim2 = w.shape
+    assert in_dim == in_dim2 and mask.shape == w.shape and b.shape == (out_dim,)
+
+    # The mask product is fused ahead of the kernel so the tile load already
+    # carries W ⊙ M (one HBM read, not two).
+    wm = (w * mask).astype(jnp.float32)
+
+    bm = min(BM, batch)
+    bn = min(BN, out_dim)
+    grid = (pl.cdiv(batch, bm), pl.cdiv(out_dim, bn))
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, in_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, in_dim), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, out_dim), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), wm, b.astype(jnp.float32))
+
+
+def vmem_bytes_estimate(batch: int, in_dim: int, out_dim: int) -> int:
+    """Per-instance VMEM footprint of the kernel (for DESIGN.md §Perf):
+    x tile + weight tile + bias + output tile, f32."""
+    bm = min(BM, batch)
+    bn = min(BN, out_dim)
+    return 4 * (bm * in_dim + bn * in_dim + bn + bm * bn)
+
+
+def mxu_utilization_estimate(batch: int, in_dim: int, out_dim: int) -> float:
+    """Fraction of MXU lanes busy for one tile: matmul dims padded to the
+    128×128 systolic array."""
+    bm = min(BM, batch)
+    bn = min(BN, out_dim)
+
+    def pad(v: int) -> int:
+        return ((v + 127) // 128) * 128
+
+    useful = bm * in_dim * bn
+    padded = pad(bm) * pad(in_dim) * pad(bn)
+    return useful / padded

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the Pallas masked-dense kernel (L1 correctness).
+
+``masked_dense_ref`` is the mathematical definition the kernel must match
+bit-for-bit on CPU (both run in f32):
+
+    y = x @ (W ⊙ M)^T + b
+
+where M is the fanin mask from FCP. The activation quantizer is applied
+*outside* the kernel (see model.py) so the kernel stays a pure MAC block —
+the operation NullaNet Tiny removes from the FPGA and the MXU executes
+during training/export.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_dense_ref(
+    x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray, b: jnp.ndarray
+) -> jnp.ndarray:
+    """Reference masked dense layer.
+
+    Args:
+      x: [batch, in] activations.
+      w: [out, in] float weights.
+      mask: [out, in] {0,1} fanin mask.
+      b: [out] bias.
+
+    Returns:
+      [batch, out] pre-activations.
+    """
+    wm = w * mask
+    return x @ wm.T + b[None, :]

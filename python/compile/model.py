@@ -1,0 +1,224 @@
+"""L2 — JAX model definitions: the JSC MLPs with QAT and FCP.
+
+The forward pass calls the L1 Pallas kernel (kernels.masked_dense) for every
+layer's MAC block, applies the per-layer activation quantizer (quant.py),
+and is what aot.py lowers to the HLO artifact. The training path uses the
+same math through the reference implementation (kernels.ref) so JAX autodiff
+plus STE gradients work untouched; pytest asserts both paths are bit-equal.
+
+Architectures (DESIGN.md §5, LogicNets-derived, per the paper):
+
+    JSC-S: 16 → 64 → 32 → 5,            β=2, γ=3  (6-bit neuron functions)
+    JSC-M: 16 → 64 → 32 → 32 → 5,       β=2, γ=4  (8-bit)
+    JSC-L: 16 → 32 → 64 → 192 → 192 → 16 → 5, β=3, γ=4  (12-bit)
+
+Per-layer activation selection (the paper's key QAT idea): the input is
+standardized (signed) → signed uniform quantizer; hidden layers are
+non-negative → PACT with learned α; the output layer uses a wider signed
+uniform quantizer feeding the off-chip argmax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import quant
+from compile.kernels.masked_dense import masked_dense
+from compile.kernels.ref import masked_dense_ref
+
+# alpha_init values selected on held-out validation (see EXPERIMENTS.md A2).
+ARCHS: dict[str, dict[str, Any]] = {
+    "jsc-s": {"widths": [64, 32, 5], "act_bits": 2, "fanin": 3, "alpha_init": 0.5},
+    "jsc-m": {"widths": [64, 32, 32, 5], "act_bits": 2, "fanin": 4, "alpha_init": 0.3},
+    "jsc-l": {"widths": [32, 64, 192, 192, 16, 5], "act_bits": 3, "fanin": 4,
+              "alpha_init": 0.5},
+}
+
+
+@dataclasses.dataclass
+class LayerSpec:
+    """Static layer description."""
+
+    in_width: int
+    out_width: int
+    fanin: int
+    act_kind: str  # "pact" | "signed_uniform"
+    act_bits: int
+    act_scale: float = 1.0  # for signed_uniform
+
+
+@dataclasses.dataclass
+class ModelSpec:
+    """Static model description."""
+
+    name: str
+    input_features: int
+    num_classes: int
+    input_bits: int
+    input_scale: float
+    layers: list[LayerSpec]
+    alpha_init: float = 2.0
+
+
+def make_spec(arch: str, uniform_act: bool = False) -> ModelSpec:
+    """Build the spec for a named architecture.
+
+    ``uniform_act=True`` is the LogicNets-style ablation: signed uniform
+    quantizers everywhere instead of per-layer selection (used to train the
+    baseline models whose accuracy Table I's (+Inc.) column is measured
+    against).
+    """
+    cfg = ARCHS[arch]
+    widths, act_bits, fanin = cfg["widths"], cfg["act_bits"], cfg["fanin"]
+    layers = []
+    in_w = 16
+    for li, out_w in enumerate(widths):
+        last = li == len(widths) - 1
+        if last:
+            # Wider signed output quantizer feeding argmax.
+            layers.append(
+                LayerSpec(in_w, out_w, fanin, "signed_uniform", act_bits + 2, 0.25)
+            )
+        elif uniform_act:
+            layers.append(LayerSpec(in_w, out_w, fanin, "signed_uniform", act_bits, 0.5))
+        else:
+            layers.append(LayerSpec(in_w, out_w, fanin, "pact", act_bits))
+        in_w = out_w
+    return ModelSpec(
+        name=arch,
+        input_features=16,
+        num_classes=5,
+        input_bits=act_bits,
+        input_scale=1.0,
+        layers=layers,
+        alpha_init=cfg.get("alpha_init", 2.0),
+    )
+
+
+def init_params(spec: ModelSpec, seed: int) -> dict:
+    """He-style init; masks start full; PACT α starts at 2.0."""
+    rng = np.random.RandomState(seed)
+    params = {"w": [], "b": [], "alpha": []}
+    masks = []
+    for l in spec.layers:
+        std = float(np.sqrt(2.0 / l.in_width))
+        params["w"].append(jnp.array(rng.randn(l.out_width, l.in_width) * std,
+                                     dtype=jnp.float32))
+        params["b"].append(jnp.zeros((l.out_width,), dtype=jnp.float32))
+        params["alpha"].append(jnp.array(spec.alpha_init, dtype=jnp.float32))
+        masks.append(np.ones((l.out_width, l.in_width), dtype=np.float32))
+    return {"params": params, "masks": masks}
+
+
+def input_quant_forward(x: jnp.ndarray, spec: ModelSpec) -> jnp.ndarray:
+    """Quantize standardized features (training fake-quant path)."""
+    return quant.signed_uniform_forward(x, spec.input_bits, spec.input_scale)
+
+
+def forward(
+    params: dict,
+    masks: list[np.ndarray],
+    x: jnp.ndarray,
+    spec: ModelSpec,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """Quantized forward pass. `use_kernel=True` routes MACs through the
+    Pallas kernel (export/inference path); False uses the autodiff-friendly
+    reference (training path). Both are bit-equal (pytest enforced)."""
+    h = input_quant_forward(x, spec)
+    for li, l in enumerate(spec.layers):
+        w = params["w"][li]
+        b = params["b"][li]
+        m = jnp.asarray(masks[li])
+        if use_kernel:
+            pre = masked_dense(h, w, m, b)
+        else:
+            pre = masked_dense_ref(h, w, m, b)
+        h = quant.apply_quant(
+            pre, l.act_kind, l.act_bits,
+            alpha=params["alpha"][li], scale=l.act_scale,
+        )
+    return h
+
+
+def predict(params: dict, masks: list[np.ndarray], x: jnp.ndarray,
+            spec: ModelSpec, use_kernel: bool = False) -> jnp.ndarray:
+    """Class predictions (argmax over quantized outputs)."""
+    out = forward(params, masks, x, spec, use_kernel=use_kernel)
+    return jnp.argmax(out[:, : spec.num_classes], axis=1)
+
+
+def loss_fn(params: dict, masks: list[np.ndarray], x: jnp.ndarray,
+            y: jnp.ndarray, spec: ModelSpec) -> jnp.ndarray:
+    """Cross entropy over the (quantized) output values. The output
+    quantizer's STE keeps this differentiable."""
+    out = forward(params, masks, x, spec)
+    logits = out[:, : spec.num_classes] * 8.0  # temperature for coarse codes
+    logp = jax.nn.log_softmax(logits, axis=1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Export to the Rust interchange format (model.json)
+# ---------------------------------------------------------------------------
+
+def export_model(
+    spec: ModelSpec,
+    params: dict,
+    masks: list[np.ndarray],
+    feature_mean: np.ndarray,
+    feature_std: np.ndarray,
+) -> dict:
+    """Serialize the trained model to the Rust flow's JSON schema.
+
+    Weights are exported masked (only surviving fanin entries, aligned with
+    the index list); quantizers as levels/thresholds tables.
+    """
+    layers = []
+    for li, l in enumerate(spec.layers):
+        w = np.asarray(params["w"][li], dtype=np.float64)
+        b = np.asarray(params["b"][li], dtype=np.float64)
+        m = masks[li] > 0
+        mask_idx = [sorted(np.nonzero(m[n])[0].tolist()) for n in range(l.out_width)]
+        weights = [[float(w[n, i]) for i in mask_idx[n]] for n in range(l.out_width)]
+        if l.act_kind == "pact":
+            act = quant.export_quantizer(
+                "pact", l.act_bits, alpha=float(params["alpha"][li])
+            )
+        else:
+            act = quant.export_quantizer(
+                "signed_uniform", l.act_bits, scale=l.act_scale
+            )
+        layers.append(
+            {
+                "in": l.in_width,
+                "out": l.out_width,
+                "mask": mask_idx,
+                "weights": weights,
+                "bias": [float(v) for v in b],
+                "act": act,
+            }
+        )
+    return {
+        "name": spec.name,
+        "input_features": spec.input_features,
+        "num_classes": spec.num_classes,
+        "feature_mean": [float(v) for v in feature_mean],
+        "feature_std": [float(v) for v in feature_std],
+        "input_quant": quant.export_quantizer(
+            "signed_uniform", spec.input_bits, scale=spec.input_scale
+        ),
+        "layers": layers,
+    }
+
+
+def save_model_json(path: str, exported: dict) -> None:
+    """Write the interchange JSON."""
+    with open(path, "w") as f:
+        json.dump(exported, f)

@@ -1,0 +1,89 @@
+"""Fanin-constrained pruning (FCP) — L2 training module.
+
+FCP forces every neuron to read at most ``fanin`` inputs so its function can
+be enumerated as a 2^(fanin·bits)-row truth table (NullaNet [32]). Two
+schemes from the paper:
+
+* **Gradual magnitude pruning** (Zhu & Gupta [11]): per-neuron top-k masks
+  tightened on a cubic schedule from full fanin down to the target.
+* **ADMM** (Boyd et al. [35], as applied by Zhang et al. [12]): the weights
+  are split W = Z with Z constrained to per-row k-sparsity; the augmented
+  Lagrangian alternates gradient steps on W, projection for Z, and dual
+  updates U += W − Z. At the end W is hard-projected onto the mask of Z.
+
+Both produce the same artifact: a boolean mask of shape [out, in] with at
+most ``fanin`` true entries per row.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def topk_row_mask(w: np.ndarray, k: int) -> np.ndarray:
+    """Boolean mask keeping the k largest-|w| entries of each row."""
+    out, inp = w.shape
+    k = min(k, inp)
+    mask = np.zeros_like(w, dtype=bool)
+    idx = np.argsort(-np.abs(w), axis=1)[:, :k]
+    rows = np.repeat(np.arange(out), k)
+    mask[rows, idx.ravel()] = True
+    return mask
+
+
+def gradual_schedule(step: int, begin: int, end: int, full: int, target: int) -> int:
+    """Cubic sparsity ramp of Zhu & Gupta: current per-row k at ``step``.
+
+    Before ``begin``: full fanin; after ``end``: target; in between the kept
+    count follows full - (full-target)·(1-(1-t)³).
+    """
+    if step < begin:
+        return full
+    if step >= end:
+        return target
+    t = (step - begin) / max(1, end - begin)
+    kept = full - (full - target) * (1.0 - (1.0 - t) ** 3)
+    return max(target, int(round(kept)))
+
+
+class GradualPruner:
+    """Stateful gradual FCP: call ``mask_for(step, weights)`` each time the
+    mask should be refreshed."""
+
+    def __init__(self, full: int, target: int, begin: int, end: int):
+        self.full = full
+        self.target = target
+        self.begin = begin
+        self.end = end
+
+    def mask_for(self, step: int, w: np.ndarray) -> np.ndarray:
+        k = gradual_schedule(step, self.begin, self.end, self.full, self.target)
+        return topk_row_mask(w, k)
+
+
+class AdmmPruner:
+    """ADMM-based FCP for one weight matrix."""
+
+    def __init__(self, shape: tuple[int, int], fanin: int, rho: float = 1e-2):
+        self.fanin = fanin
+        self.rho = rho
+        self.z = np.zeros(shape, dtype=np.float64)
+        self.u = np.zeros(shape, dtype=np.float64)
+
+    def project(self, w: np.ndarray) -> np.ndarray:
+        """Euclidean projection of w onto per-row k-sparse matrices."""
+        m = topk_row_mask(w, self.fanin)
+        return np.where(m, w, 0.0)
+
+    def update(self, w: np.ndarray) -> None:
+        """One ADMM round: Z-projection then dual ascent."""
+        self.z = self.project(w + self.u)
+        self.u = self.u + w - self.z
+
+    def penalty_grad(self, w: np.ndarray) -> np.ndarray:
+        """Gradient of (rho/2)·||W − Z + U||² w.r.t. W."""
+        return self.rho * (w - self.z + self.u)
+
+    def final_mask(self, w: np.ndarray) -> np.ndarray:
+        """Hard mask from the converged Z (ties broken by |w|)."""
+        return topk_row_mask(np.where(np.abs(self.z) > 0, w, 0.0), self.fanin)

@@ -1,0 +1,139 @@
+"""Activation quantizers with straight-through estimators (L2, QAT).
+
+NullaNet Tiny's key QAT idea is *per-layer activation selection*: layers
+whose inputs span negative values use a signed (sign/bipolar or symmetric
+uniform) quantizer, non-negative layers use PACT [9] with a learned clipping
+threshold alpha. Weights are NOT quantized — they dissolve into truth tables
+during logic synthesis — so QAT here means activation quantization plus
+fanin-constrained pruning (prune.py).
+
+Every quantizer exports ``levels`` (code -> reconstruction value) and
+``thresholds`` (decision boundaries) arrays; the Rust flow replays those
+tables verbatim, which is what makes the logic bit-exact against training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _round_ste(x: jnp.ndarray) -> jnp.ndarray:
+    """Round with a straight-through gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of a quantizer (exported to model.json)."""
+
+    kind: str  # "sign" | "signed_uniform" | "pact"
+    bits: int
+
+    @property
+    def num_levels(self) -> int:
+        return 1 << self.bits
+
+
+def sign_forward(x: jnp.ndarray) -> jnp.ndarray:
+    """Bipolar sign quantizer {-1, +1} with STE (clipped identity grad,
+    Hubara et al.): forward emits sign(x), backward passes gradients only
+    inside [-1, 1]."""
+    s = jnp.where(x >= 0, 1.0, -1.0)
+    xc = jnp.clip(x, -1.0, 1.0)
+    return xc + jax.lax.stop_gradient(s - xc)
+
+
+def sign_levels() -> tuple[np.ndarray, np.ndarray]:
+    return np.array([-1.0, 1.0]), np.array([0.0])
+
+
+def signed_uniform_forward(x: jnp.ndarray, bits: int, scale: float) -> jnp.ndarray:
+    """Symmetric signed uniform quantizer.
+
+    Codes c in [0, 2^bits) map to values (c - 2^(bits-1)) * scale; the
+    forward clamps to the representable range and rounds with STE.
+    """
+    n = 1 << bits
+    half = n // 2
+    lo = -half * scale
+    hi = (n - 1 - half) * scale
+    xc = jnp.clip(x, lo, hi)
+    q = _round_ste(xc / scale) * scale
+    return q
+
+
+def signed_uniform_levels(bits: int, scale: float) -> tuple[np.ndarray, np.ndarray]:
+    n = 1 << bits
+    half = n // 2
+    levels = (np.arange(n) - half) * scale
+    thresholds = (levels[:-1] + levels[1:]) / 2.0
+    return levels, thresholds
+
+
+def pact_forward(x: jnp.ndarray, alpha: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """PACT [9]: y = clip(x, 0, alpha) quantized to 2^bits uniform levels.
+
+    Gradients: STE inside [0, alpha]; d/dalpha = 1 where x > alpha (the
+    published PACT gradient).
+    """
+    n = (1 << bits) - 1
+    xc = jnp.clip(x, 0.0, alpha)
+    step = alpha / n
+    q = _round_ste(xc / step) * step
+    return q
+
+
+def pact_levels(alpha: float, bits: int) -> tuple[np.ndarray, np.ndarray]:
+    n = (1 << bits) - 1
+    levels = np.arange(1 << bits) * (alpha / n)
+    thresholds = (levels[:-1] + levels[1:]) / 2.0
+    return levels, thresholds
+
+
+def quantize_codes_np(x: np.ndarray, thresholds: np.ndarray) -> np.ndarray:
+    """NumPy code assignment (value -> code), matching the Rust
+    ``Quantizer::code_of`` contract: code = #thresholds <= v."""
+    return np.searchsorted(thresholds, x, side="right")
+
+
+def export_quantizer(kind: str, bits: int, **kw) -> dict:
+    """Serialize a quantizer to the model.json dict format."""
+    if kind == "sign":
+        levels, thr = sign_levels()
+        bits = 1
+    elif kind == "signed_uniform":
+        levels, thr = signed_uniform_levels(bits, kw["scale"])
+    elif kind == "pact":
+        levels, thr = pact_levels(kw["alpha"], bits)
+    else:
+        raise ValueError(f"unknown quantizer kind {kind!r}")
+    return {
+        "bits": int(bits),
+        "levels": [float(v) for v in levels],
+        "thresholds": [float(v) for v in thr],
+    }
+
+
+def apply_quant(
+    x: jnp.ndarray, kind: str, bits: int, alpha: jnp.ndarray | None = None,
+    scale: float = 1.0,
+) -> jnp.ndarray:
+    """Dispatch a quantizer forward by kind (training path)."""
+    if kind == "sign":
+        return sign_forward(x)
+    if kind == "signed_uniform":
+        return signed_uniform_forward(x, bits, scale)
+    if kind == "pact":
+        assert alpha is not None
+        return pact_forward(x, alpha, bits)
+    raise ValueError(f"unknown quantizer kind {kind!r}")
+
+
+def dequant_value_np(codes: np.ndarray, levels: np.ndarray) -> np.ndarray:
+    """Code -> value lookup (NumPy)."""
+    return levels[codes]

@@ -1,0 +1,205 @@
+"""QAT + FCP training loop (L2, build path only — never at serving time).
+
+Trains the JSC architectures with Adam (implemented in-tree; optax is not
+available offline), straight-through quantized activations, and
+fanin-constrained pruning on the gradual schedule (or ADMM with
+``--fcp admm``). Exports ``artifacts/<arch>.model.json`` for the Rust flow
+plus the ``<arch>.logicnets.model.json`` uniform-activation baseline
+(Table I's accuracy comparison).
+
+Usage (from ``python/``):
+
+    python -m compile.train --arch jsc-s --steps 3000
+    python -m compile.train --arch jsc-s --ablate-act     # A2 ablation
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as data_mod
+from compile import model as model_mod
+from compile import prune
+
+
+class Adam:
+    """Minimal Adam over a pytree (optax is unavailable offline)."""
+
+    def __init__(self, lr: float = 3e-3, b1: float = 0.9, b2: float = 0.999,
+                 eps: float = 1e-8):
+        self.lr, self.b1, self.b2, self.eps = lr, b1, b2, eps
+
+    def init(self, params):
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, g: self.b1 * m_ + (1 - self.b1) * g, state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: self.b2 * v_ + (1 - self.b2) * g * g, state["v"], grads)
+        mhat_scale = 1.0 / (1 - self.b1 ** t.astype(jnp.float32))
+        vhat_scale = 1.0 / (1 - self.b2 ** t.astype(jnp.float32))
+        new_params = jax.tree_util.tree_map(
+            lambda p, m_, v_: p - self.lr * (m_ * mhat_scale)
+            / (jnp.sqrt(v_ * vhat_scale) + self.eps),
+            params, m, v)
+        return new_params, {"m": m, "v": v, "t": t}
+
+
+def train(
+    arch: str,
+    steps: int = 3000,
+    batch: int = 256,
+    seed: int = 0,
+    uniform_act: bool = False,
+    fcp: str = "gradual",
+    train_samples: int = 30_000,
+    test_samples: int = 10_000,
+    lr: float = 3e-3,
+    log_every: int = 500,
+    quiet: bool = False,
+):
+    """Train one architecture; returns (spec, params, masks, stats dict)."""
+    spec = model_mod.make_spec(arch, uniform_act=uniform_act)
+    xs, ys = data_mod.generate(train_samples + test_samples, seed=1234)
+    x_train, y_train = xs[:train_samples], ys[:train_samples]
+    x_test, y_test = xs[train_samples:], ys[train_samples:]
+    mean, std = data_mod.standardize_stats(x_train)
+    xn_train = ((x_train - mean) / std).astype(np.float32)
+    xn_test = ((x_test - mean) / std).astype(np.float32)
+
+    state = model_mod.init_params(spec, seed)
+    params, masks = state["params"], state["masks"]
+    opt = Adam(lr=lr)
+    opt_state = opt.init(params)
+
+    # FCP state.
+    prune_begin, prune_end = int(steps * 0.25), int(steps * 0.7)
+    admm = None
+    if fcp == "admm":
+        admm = [
+            prune.AdmmPruner((l.out_width, l.in_width), l.fanin)
+            for l in spec.layers
+        ]
+
+    @jax.jit
+    def step_fn(params, opt_state, masks_j, xb, yb):
+        loss, grads = jax.value_and_grad(model_mod.loss_fn)(
+            params, masks_j, xb, yb, spec)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    @jax.jit
+    def acc_fn(params, masks_j, x, y):
+        pred = model_mod.predict(params, masks_j, x, spec)
+        return jnp.mean((pred == y).astype(jnp.float32))
+
+    rng = np.random.RandomState(seed)
+    t0 = time.time()
+    losses = []
+    for step in range(steps):
+        idx = rng.randint(0, train_samples, size=batch)
+        xb = jnp.asarray(xn_train[idx])
+        yb = jnp.asarray(y_train[idx].astype(np.int32))
+        masks_j = [jnp.asarray(m) for m in masks]
+        params, opt_state, loss = step_fn(params, opt_state, masks_j, xb, yb)
+        losses.append(float(loss))
+
+        # ---- FCP mask refresh ----
+        if fcp == "gradual" and step % 50 == 0 and step >= prune_begin:
+            for li, l in enumerate(spec.layers):
+                k = prune.gradual_schedule(
+                    step, prune_begin, prune_end, l.in_width, l.fanin)
+                w = np.asarray(params["w"][li])
+                masks[li] = prune.topk_row_mask(w, k).astype(np.float32)
+        elif fcp == "admm" and step % 50 == 0:
+            for li in range(len(spec.layers)):
+                w = np.asarray(params["w"][li], dtype=np.float64)
+                admm[li].update(w)
+                # penalty gradient applied directly (simple splitting)
+                g = admm[li].penalty_grad(w)
+                params["w"][li] = params["w"][li] - jnp.asarray(
+                    (0.1 * g).astype(np.float32))
+            if step >= prune_end:
+                for li in range(len(spec.layers)):
+                    w = np.asarray(params["w"][li], dtype=np.float64)
+                    masks[li] = admm[li].final_mask(w).astype(np.float32)
+
+        if not quiet and (step % log_every == 0 or step == steps - 1):
+            masks_j = [jnp.asarray(m) for m in masks]
+            a = float(acc_fn(params, masks_j, jnp.asarray(xn_test),
+                             jnp.asarray(y_test.astype(np.int32))))
+            print(f"[{arch}] step {step:5d} loss {float(loss):.4f} "
+                  f"test-acc {a * 100:.2f}%  ({time.time() - t0:.1f}s)")
+
+    # Final hard projection: every mask row exactly ≤ fanin.
+    for li, l in enumerate(spec.layers):
+        w = np.asarray(params["w"][li])
+        current = masks[li] > 0
+        if current.sum(axis=1).max() > l.fanin:
+            masks[li] = prune.topk_row_mask(
+                np.where(current, w, 0.0), l.fanin).astype(np.float32)
+        # zero pruned weights in the exported params for cleanliness
+        params["w"][li] = params["w"][li] * jnp.asarray(masks[li])
+
+    masks_j = [jnp.asarray(m) for m in masks]
+    final_acc = float(acc_fn(params, masks_j, jnp.asarray(xn_test),
+                             jnp.asarray(y_test.astype(np.int32))))
+    stats = {
+        "arch": arch,
+        "uniform_act": uniform_act,
+        "fcp": fcp,
+        "steps": steps,
+        "final_test_acc": final_acc,
+        "loss_curve": losses[:: max(1, steps // 200)],
+        "train_seconds": time.time() - t0,
+    }
+    if not quiet:
+        print(f"[{arch}] final test accuracy {final_acc * 100:.2f}% "
+              f"(uniform_act={uniform_act}, fcp={fcp})")
+    return spec, params, masks, (mean, std), stats
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="jsc-s", choices=sorted(model_mod.ARCHS))
+    p.add_argument("--steps", type=int, default=3000)
+    p.add_argument("--batch", type=int, default=256)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--fcp", default="gradual", choices=["gradual", "admm"])
+    p.add_argument("--ablate-act", action="store_true",
+                   help="A2 ablation: train both activation styles, report")
+    p.add_argument("--out", default=None, help="model.json output path")
+    args = p.parse_args()
+
+    if args.ablate_act:
+        results = {}
+        for uniform in (False, True):
+            *_, stats = train(args.arch, steps=args.steps, batch=args.batch,
+                              seed=args.seed, uniform_act=uniform, fcp=args.fcp)
+            results["uniform" if uniform else "per-layer"] = stats["final_test_acc"]
+        print("\n=== A2: per-layer activation selection ablation ===")
+        for k, v in results.items():
+            print(f"  {k:>10}: {v * 100:.2f}%")
+        print(f"  delta: {(results['per-layer'] - results['uniform']) * 100:+.2f}pp")
+        return
+
+    spec, params, masks, (mean, std), stats = train(
+        args.arch, steps=args.steps, batch=args.batch, seed=args.seed,
+        fcp=args.fcp)
+    if args.out:
+        exported = model_mod.export_model(spec, params, masks, mean, std)
+        model_mod.save_model_json(args.out, exported)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

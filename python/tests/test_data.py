@@ -1,0 +1,58 @@
+"""Synthetic JSC dataset + binary format tests."""
+
+import os
+import tempfile
+
+import numpy as np
+
+from compile import data
+
+
+def test_generate_deterministic():
+    x1, y1 = data.generate(200, seed=9)
+    x2, y2 = data.generate(200, seed=9)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    x3, _ = data.generate(200, seed=10)
+    assert not np.array_equal(x1, x3)
+
+
+def test_shapes_and_classes():
+    x, y = data.generate(1000, seed=1)
+    assert x.shape == (1000, 16)
+    assert x.dtype == np.float32
+    assert y.dtype == np.uint8
+    assert set(np.unique(y)) == {0, 1, 2, 3, 4}
+
+
+def test_task_difficulty_band():
+    """Nearest-class-mean accuracy must land in the 'hard but learnable'
+    band (same check as the Rust twin generator)."""
+    x, y = data.generate(4000, seed=7)
+    mean, std = data.standardize_stats(x[:3000])
+    z = (x - mean) / std
+    cm = np.stack([z[:3000][y[:3000] == c].mean(axis=0) for c in range(5)])
+    d = ((z[3000:, None, :] - cm[None, :, :]) ** 2).sum(axis=2)
+    acc = (d.argmin(axis=1) == y[3000:]).mean()
+    assert 0.45 < acc < 0.97, f"nearest-mean acc {acc}"
+
+
+def test_binary_roundtrip():
+    x, y = data.generate(50, seed=2)
+    with tempfile.TemporaryDirectory() as td:
+        p = os.path.join(td, "d.bin")
+        data.save(p, x, y)
+        x2, y2, c = data.load(p)
+        np.testing.assert_array_equal(x, x2)
+        np.testing.assert_array_equal(y, y2)
+        assert c == 5
+        # Exact layout contract with rust/src/data/dataset.rs.
+        raw = open(p, "rb").read()
+        assert raw[:4] == b"NNTD"
+        assert len(raw) == 20 + 50 * 16 * 4 + 50
+
+
+def test_standardize_stats_floor():
+    x = np.zeros((10, 16), dtype=np.float32)
+    mean, std = data.standardize_stats(x)
+    assert (std >= 1e-9).all()

@@ -1,0 +1,101 @@
+"""L1 kernel correctness: Pallas masked_dense vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and value distributions; assert_allclose with zero
+tolerance — both paths are f32 matmuls on CPU and must agree bitwise.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.masked_dense import (
+    masked_dense,
+    mxu_utilization_estimate,
+    vmem_bytes_estimate,
+)
+from compile.kernels.ref import masked_dense_ref
+
+
+def _run_both(x, w, m, b):
+    got = masked_dense(jnp.asarray(x), jnp.asarray(w), jnp.asarray(m), jnp.asarray(b))
+    want = masked_dense_ref(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(m), jnp.asarray(b)
+    )
+    return np.asarray(got), np.asarray(want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 200),
+    in_dim=st.integers(1, 48),
+    out_dim=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+    density=st.floats(0.05, 1.0),
+)
+def test_kernel_matches_ref_across_shapes(batch, in_dim, out_dim, seed, density):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(batch, in_dim).astype(np.float32)
+    w = rng.randn(out_dim, in_dim).astype(np.float32)
+    m = (rng.rand(out_dim, in_dim) < density).astype(np.float32)
+    b = rng.randn(out_dim).astype(np.float32)
+    got, want = _run_both(x, w, m, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_exceeds_one_tile(seed):
+    """Shapes beyond one 128×128 tile exercise the grid index maps."""
+    rng = np.random.RandomState(seed)
+    x = rng.randn(300, 16).astype(np.float32)
+    w = rng.randn(192, 16).astype(np.float32)
+    m = (rng.rand(192, 16) < 0.25).astype(np.float32)
+    b = rng.randn(192).astype(np.float32)
+    got, want = _run_both(x, w, m, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_mask_zeroes_contributions():
+    """A fully-zero mask must give exactly the bias."""
+    rng = np.random.RandomState(0)
+    x = rng.randn(8, 10).astype(np.float32)
+    w = rng.randn(4, 10).astype(np.float32)
+    m = np.zeros((4, 10), dtype=np.float32)
+    b = rng.randn(4).astype(np.float32)
+    got, _ = _run_both(x, w, m, b)
+    np.testing.assert_allclose(got, np.broadcast_to(b, (8, 4)), rtol=0, atol=0)  # bias-only path is exact
+
+
+def test_extreme_values():
+    """Large magnitudes must not diverge between kernel and ref."""
+    x = np.array([[1e20, -1e20, 1.0]], dtype=np.float32)
+    w = np.array([[1e-20, 1e-20, 1e20]], dtype=np.float32)
+    m = np.ones((1, 3), dtype=np.float32)
+    b = np.array([0.5], dtype=np.float32)
+    got, want = _run_both(x, w, m, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_jsc_shapes_bitexact():
+    """The exact JSC layer shapes used by the export path."""
+    rng = np.random.RandomState(7)
+    for (batch, i, o) in [(64, 16, 64), (64, 64, 32), (64, 32, 5), (64, 192, 192)]:
+        x = rng.randn(batch, i).astype(np.float32)
+        w = rng.randn(o, i).astype(np.float32)
+        m = (rng.rand(o, i) < 4 / i).astype(np.float32)
+        b = rng.randn(o).astype(np.float32)
+        got, want = _run_both(x, w, m, b)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_estimate_fits_budget():
+    """Per-instance VMEM must stay far below a TPU core's ~16 MiB."""
+    for (batch, i, o) in [(4096, 192, 192), (128, 16, 64)]:
+        assert vmem_bytes_estimate(batch, i, o) < 1 << 22  # 4 MiB
+
+
+def test_mxu_estimate_range():
+    u = mxu_utilization_estimate(128, 128, 128)
+    assert u == pytest.approx(1.0)
+    assert 0 < mxu_utilization_estimate(64, 16, 5) <= 1.0

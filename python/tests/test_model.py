@@ -1,0 +1,110 @@
+"""L2 model tests: kernel/ref path equality, export contract, code-level
+replay (the bit-exactness bridge to the Rust flow)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data, model, quant
+
+
+def _tiny_trained(arch="jsc-s", seed=0):
+    spec = model.make_spec(arch)
+    state = model.init_params(spec, seed)
+    params, masks = state["params"], state["masks"]
+    # prune to fanin immediately (no training needed for these tests)
+    from compile import prune
+    for li, l in enumerate(spec.layers):
+        masks[li] = prune.topk_row_mask(np.asarray(params["w"][li]), l.fanin).astype(
+            np.float32
+        )
+    return spec, params, masks
+
+
+def test_kernel_and_ref_paths_agree():
+    spec, params, masks = _tiny_trained()
+    x = np.random.RandomState(1).randn(32, 16).astype(np.float32)
+    a = np.asarray(model.forward(params, masks, jnp.asarray(x), spec, use_kernel=False))
+    b = np.asarray(model.forward(params, masks, jnp.asarray(x), spec, use_kernel=True))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_predict_shape_and_range():
+    spec, params, masks = _tiny_trained()
+    x = np.random.RandomState(2).randn(20, 16).astype(np.float32)
+    p = np.asarray(model.predict(params, masks, jnp.asarray(x), spec))
+    assert p.shape == (20,)
+    assert ((p >= 0) & (p < 5)).all()
+
+
+def test_export_schema():
+    spec, params, masks = _tiny_trained()
+    mean = np.zeros(16)
+    std = np.ones(16)
+    e = model.export_model(spec, params, masks, mean, std)
+    assert e["name"] == "jsc-s"
+    assert e["input_features"] == 16
+    assert len(e["layers"]) == 3
+    for li, l in enumerate(e["layers"]):
+        assert len(l["mask"]) == l["out"]
+        for n, (m, w) in enumerate(zip(l["mask"], l["weights"])):
+            assert len(m) == len(w) <= spec.layers[li].fanin
+            assert m == sorted(m)
+        q = l["act"]
+        assert len(q["levels"]) == 1 << q["bits"]
+        assert len(q["thresholds"]) == len(q["levels"]) - 1
+
+
+def _code_level_forward(e: dict, x: np.ndarray) -> np.ndarray:
+    """NumPy replay of the Rust nn::eval code-level semantics."""
+    mean = np.array(e["feature_mean"])
+    std = np.array(e["feature_std"])
+    iq = e["input_quant"]
+    z = (x - mean) / std
+    codes = quant.quantize_codes_np(z, np.array(iq["thresholds"]))
+    values = np.array(iq["levels"])[codes]
+    for l in e["layers"]:
+        q = l["act"]
+        out_vals = np.zeros((x.shape[0], l["out"]))
+        for n in range(l["out"]):
+            acc = l["bias"][n] + sum(
+                w * values[:, src] for w, src in zip(l["weights"][n], l["mask"][n])
+            )
+            c = quant.quantize_codes_np(acc, np.array(q["thresholds"]))
+            out_vals[:, n] = np.array(q["levels"])[c]
+        values = out_vals
+    return values
+
+
+def test_exported_tables_replay_jax_forward():
+    """The levels/thresholds replay (what Rust does) must classify samples
+    identically to the JAX fake-quant forward, modulo f32-vs-f64 threshold
+    ties (required < 2% of samples, none expected in practice)."""
+    spec, params, masks = _tiny_trained()
+    x, _ = data.generate(400, seed=3)
+    mean, std = data.standardize_stats(x)
+    e = model.export_model(spec, params, masks, mean, std)
+
+    xn = ((x - mean) / std).astype(np.float32)
+    jax_out = np.asarray(model.forward(params, masks, jnp.asarray(xn), spec))
+    jax_pred = jax_out[:, :5].argmax(axis=1)
+
+    replay_vals = _code_level_forward(e, x.astype(np.float64))
+    replay_pred = replay_vals[:, :5].argmax(axis=1)
+
+    agree = (jax_pred == replay_pred).mean()
+    assert agree > 0.98, f"code-level replay agreement {agree}"
+
+
+def test_uniform_act_spec():
+    s = model.make_spec("jsc-m", uniform_act=True)
+    assert all(l.act_kind == "signed_uniform" for l in s.layers)
+    s2 = model.make_spec("jsc-m", uniform_act=False)
+    assert s2.layers[0].act_kind == "pact"
+    assert s2.layers[-1].act_kind == "signed_uniform"  # output always signed
+
+
+def test_arch_table():
+    assert set(model.ARCHS) == {"jsc-s", "jsc-m", "jsc-l"}
+    for name, cfg in model.ARCHS.items():
+        assert cfg["widths"][-1] == 5
+        assert cfg["act_bits"] * cfg["fanin"] <= 12, "enumeration feasibility"

@@ -1,0 +1,65 @@
+"""FCP: gradual schedule and ADMM invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import prune
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    out=st.integers(1, 30),
+    inp=st.integers(1, 40),
+    k=st.integers(1, 40),
+    seed=st.integers(0, 10_000),
+)
+def test_topk_mask_row_budget(out, inp, k, seed):
+    rng = np.random.RandomState(seed)
+    w = rng.randn(out, inp)
+    m = prune.topk_row_mask(w, k)
+    assert m.shape == w.shape
+    assert (m.sum(axis=1) == min(k, inp)).all()
+    # kept entries dominate dropped entries in magnitude per row
+    for r in range(out):
+        if m[r].any() and (~m[r]).any():
+            assert np.abs(w[r][m[r]]).min() >= np.abs(w[r][~m[r]]).max() - 1e-12
+
+
+def test_gradual_schedule_monotone():
+    full, target = 64, 4
+    ks = [prune.gradual_schedule(s, 100, 900, full, target) for s in range(0, 1200, 10)]
+    assert ks[0] == full
+    assert ks[-1] == target
+    assert all(a >= b for a, b in zip(ks, ks[1:])), "schedule must tighten"
+
+
+def test_gradual_schedule_boundaries():
+    assert prune.gradual_schedule(0, 10, 20, 8, 2) == 8
+    assert prune.gradual_schedule(10, 10, 20, 8, 2) == 8  # t=0 keeps full
+    assert prune.gradual_schedule(20, 10, 20, 8, 2) == 2
+    assert prune.gradual_schedule(99, 10, 20, 8, 2) == 2
+
+
+def test_admm_converges_to_sparse():
+    rng = np.random.RandomState(3)
+    w = rng.randn(6, 16)
+    pr = prune.AdmmPruner(w.shape, fanin=3, rho=0.1)
+    # Simulate training: W drifts toward Z under the penalty.
+    for _ in range(200):
+        g = pr.penalty_grad(w)
+        w = w - 0.5 * g
+        pr.update(w)
+    m = pr.final_mask(w)
+    assert (m.sum(axis=1) <= 3).all()
+    # Penalty must have pulled the pruned entries toward zero.
+    assert np.abs(w[~m]).mean() < np.abs(w[m]).mean()
+
+
+def test_admm_projection_idempotent():
+    rng = np.random.RandomState(5)
+    w = rng.randn(4, 10)
+    pr = prune.AdmmPruner(w.shape, fanin=2)
+    p1 = pr.project(w)
+    p2 = pr.project(p1)
+    np.testing.assert_array_equal(p1, p2)
+    assert ((p1 != 0).sum(axis=1) <= 2).all()

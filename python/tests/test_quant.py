@@ -1,0 +1,89 @@
+"""Quantizer semantics + the levels/thresholds export contract with Rust."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+
+def test_sign_forward_values():
+    x = jnp.array([-2.0, -0.1, 0.0, 0.1, 2.0])
+    y = np.asarray(quant.sign_forward(x))
+    np.testing.assert_array_equal(y, [-1.0, -1.0, 1.0, 1.0, 1.0])
+
+
+def test_sign_ste_gradient_clips():
+    g = jax.grad(lambda x: quant.sign_forward(x).sum())(jnp.array([-2.0, 0.5, 2.0]))
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 0.0])
+
+
+def test_pact_forward_range_and_grads():
+    alpha = jnp.array(2.0)
+    x = jnp.array([-1.0, 0.5, 1.9, 5.0])
+    y = np.asarray(quant.pact_forward(x, alpha, bits=2))
+    assert y.min() >= 0.0 and y.max() <= 2.0
+    # d/dalpha: 1 per element clipped above (the dominant PACT term) plus
+    # the exact quantization-step term for interior elements
+    # (round(xc/step) − xc/step)/n — compute the analytical value.
+    galpha = jax.grad(lambda a: quant.pact_forward(x, a, 2).sum())(alpha)
+    n = 3
+    step = 2.0 / n
+    interior = [0.5, 1.9]
+    expected = 1.0 + sum((round(v / step) - v / step) / n for v in interior)
+    assert abs(float(galpha) - expected) < 1e-5
+    # STE: gradient w.r.t. x is 1 inside [0, alpha], 0 outside
+    gx = jax.grad(lambda x_: quant.pact_forward(x_, alpha, 2).sum())(x)
+    np.testing.assert_array_equal(np.asarray(gx), [0.0, 1.0, 1.0, 0.0])
+
+
+def test_signed_uniform_values():
+    y = np.asarray(quant.signed_uniform_forward(jnp.array([-10.0, -0.2, 0.2, 10.0]),
+                                                bits=2, scale=0.5))
+    # levels: -1.0, -0.5, 0.0, 0.5
+    np.testing.assert_array_equal(y, [-1.0, -0.0, 0.0, 0.5])
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    bits=st.integers(1, 4),
+    kind=st.sampled_from(["pact", "signed_uniform"]),
+    seed=st.integers(0, 10_000),
+)
+def test_forward_agrees_with_exported_tables(bits, kind, seed):
+    """The STE forward and the exported levels/thresholds must agree: for
+    any x, forward(x) == levels[searchsorted(thresholds, x)] — this IS the
+    Rust contract."""
+    rng = np.random.RandomState(seed)
+    x = rng.randn(200).astype(np.float32) * 3.0
+    if kind == "pact":
+        alpha = float(rng.rand() * 3.0 + 0.5)
+        y = np.asarray(quant.pact_forward(jnp.asarray(x), jnp.array(alpha), bits))
+        exp = quant.export_quantizer("pact", bits, alpha=alpha)
+    else:
+        scale = float(rng.rand() * 0.9 + 0.1)
+        y = np.asarray(quant.signed_uniform_forward(jnp.asarray(x), bits, scale))
+        exp = quant.export_quantizer("signed_uniform", bits, scale=scale)
+    levels = np.array(exp["levels"], dtype=np.float64)
+    thr = np.array(exp["thresholds"], dtype=np.float64)
+    codes = quant.quantize_codes_np(x.astype(np.float64), thr)
+    want = levels[codes]
+    np.testing.assert_allclose(y.astype(np.float64), want, atol=1e-5)
+
+
+def test_export_shapes():
+    e = quant.export_quantizer("pact", 3, alpha=1.5)
+    assert len(e["levels"]) == 8
+    assert len(e["thresholds"]) == 7
+    assert e["bits"] == 3
+    assert e["levels"] == sorted(e["levels"])
+    s = quant.export_quantizer("sign", 1)
+    assert s["levels"] == [-1.0, 1.0]
+    assert s["thresholds"] == [0.0]
+
+
+def test_codes_are_monotone():
+    thr = np.array([-0.5, 0.0, 0.5])
+    codes = quant.quantize_codes_np(np.array([-1.0, -0.5, -0.1, 0.0, 0.4, 0.5, 1.0]), thr)
+    np.testing.assert_array_equal(codes, [0, 1, 1, 2, 2, 3, 3])

@@ -1,0 +1,61 @@
+"""Training + AOT export smoke tests (short budgets; the full run happens in
+`make artifacts`)."""
+
+import os
+import tempfile
+
+import numpy as np
+
+from compile import model, train
+from compile.aot import export_hlo, to_hlo_text
+
+
+def test_short_training_learns():
+    spec, params, masks, (mean, std), stats = train.train(
+        "jsc-s", steps=300, batch=128, quiet=True, train_samples=4000,
+        test_samples=2000)
+    assert stats["final_test_acc"] > 0.40, "must beat 20% chance decisively"
+    # fanin constraint enforced
+    for li, l in enumerate(spec.layers):
+        assert (masks[li].sum(axis=1) <= l.fanin).all()
+    # loss decreased
+    assert stats["loss_curve"][-1] < stats["loss_curve"][0]
+
+
+def test_admm_training_prunes():
+    spec, params, masks, _, stats = train.train(
+        "jsc-s", steps=300, batch=128, quiet=True, fcp="admm",
+        train_samples=3000, test_samples=1000)
+    for li, l in enumerate(spec.layers):
+        assert (masks[li].sum(axis=1) <= l.fanin).all()
+    assert stats["final_test_acc"] > 0.35
+
+
+def test_hlo_export_is_loadable_text():
+    spec, params, masks, (mean, std), _ = train.train(
+        "jsc-s", steps=50, batch=64, quiet=True, train_samples=1000,
+        test_samples=500)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "m.hlo.txt")
+        export_hlo(spec, params, masks, mean, std, path)
+        text = open(path).read()
+        # HLO text, not proto: must carry the module header and an ENTRY.
+        assert text.lstrip().startswith("HloModule")
+        assert "ENTRY" in text
+        # the exported batch is baked in
+        assert "f32[64,16]" in text
+        assert len(text) > 1000
+
+
+def test_hlo_text_roundtrips_through_xla_parser():
+    """xla_extension must accept the text we emit (same parser family the
+    Rust crate uses)."""
+    import jax
+    import jax.numpy as jnp
+    lowered = jax.jit(lambda a, b: (a @ b + 1.0,)).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32),
+        jax.ShapeDtypeStruct((4, 4), jnp.float32),
+    )
+    text = to_hlo_text(lowered)
+    assert text.lstrip().startswith("HloModule")
+    assert "ENTRY" in text

@@ -1,0 +1,105 @@
+//! Bench H1/H2: the paper's headline latency claims.
+//!
+//! * H1 — "2.36× lower latency … 24.42× lower LUT utilization" vs LogicNets
+//!   (modeled hardware latency = pipeline edges × period from the VU9P
+//!   timing model, identical methodology for both designs).
+//! * H2 — "9.25× lower latency" vs Google's AQP-style arithmetic datapath
+//!   (analytical hls4ml-class cost model, DESIGN.md §4).
+//!
+//! Also measures the *software* engines on this host (bit-parallel logic
+//! simulator, PJRT numeric engine) — not hardware numbers, but the serving
+//! reality of this repo.
+
+use std::time::Instant;
+
+use nullanet_tiny::baseline::{build_logicnets, AqpModel};
+use nullanet_tiny::data::Dataset;
+use nullanet_tiny::flow::{run_flow, FlowConfig};
+use nullanet_tiny::fpga::timing::TimingModel;
+use nullanet_tiny::logic::sim::CompiledNetlist;
+use nullanet_tiny::nn::eval::{codes_to_bits, quantize_input};
+use nullanet_tiny::nn::model::{Arch, Model};
+use nullanet_tiny::runtime::PjrtEngine;
+use nullanet_tiny::util::bench::{format_ns, Bench};
+
+fn main() {
+    let dir = "artifacts";
+    if Dataset::load(&format!("{dir}/jsc_test.bin")).is_err() {
+        eprintln!("latency bench needs `make artifacts`");
+        return;
+    }
+    let test = Dataset::load(&format!("{dir}/jsc_test.bin")).unwrap();
+    let tm = TimingModel::vu9p();
+    let aqp = AqpModel::default();
+
+    println!("== modeled hardware latency (VU9P timing model) ==\n");
+    println!("| Arch | ours ns | LogicNets ns | dec. | AQP ns | dec. | paper H1/H2 |");
+    println!("|------|---------|--------------|------|--------|------|-------------|");
+    for arch in Arch::all() {
+        let name = arch.name();
+        let ours_model = Model::load(&format!("{dir}/{name}.model.json")).unwrap();
+        let base_model =
+            Model::load(&format!("{dir}/{name}.logicnets.model.json")).unwrap();
+        let r = run_flow(&ours_model, &FlowConfig::default(), None).unwrap();
+        let b = build_logicnets(&base_model, 6).unwrap();
+        let so = r.circuit.stats();
+        let sb = b.circuit.stats();
+        let ours_ns = tm.latency_ns(so.latency_cycles, so.max_stage_depth);
+        let base_ns = tm.latency_ns(sb.latency_cycles, sb.max_stage_depth);
+        let aqp_ns = aqp.latency_ns(&ours_model);
+        println!(
+            "| {} | {:7.2} | {:12.2} | {:.2}x | {:6.1} | {:.2}x | 2.36x / 9.25x |",
+            name.to_uppercase(),
+            ours_ns,
+            base_ns,
+            base_ns / ours_ns,
+            aqp_ns,
+            aqp_ns / ours_ns,
+        );
+    }
+
+    // ---- software engine latency on this host ----
+    println!("\n== software engines on this host (JSC-S) ==\n");
+    let model = Model::load(&format!("{dir}/jsc-s.model.json")).unwrap();
+    let r = run_flow(&model, &FlowConfig::default(), None).unwrap();
+    let mut sim = CompiledNetlist::compile(&r.circuit.netlist);
+    let in_b = model.input_quant.bits;
+
+    let mut bench = Bench::new();
+    // single-sample logic inference (bit encode + one 64-lane pass)
+    let x0 = &test.xs[0];
+    bench.run("logic-sim single inference", || {
+        let bits = codes_to_bits(&quantize_input(&model, x0), in_b);
+        sim.run_batch(&[bits]).pop().unwrap()
+    });
+    // batched logic inference (64 samples / word pass)
+    let batch: Vec<Vec<bool>> = test.xs[..64]
+        .iter()
+        .map(|x| codes_to_bits(&quantize_input(&model, x), in_b))
+        .collect();
+    let s = bench.run("logic-sim 64-batch", || sim.run_batch(&batch));
+    println!(
+        "  → logic-sim throughput: {:.0} inferences/s (batched)",
+        64.0 * 1e9 / s.median_ns
+    );
+
+    if let Ok(engine) =
+        PjrtEngine::load(&format!("{dir}/jsc-s.hlo.txt"), 64, model.input_features, 5)
+    {
+        let xs64: Vec<Vec<f64>> = test.xs[..64].to_vec();
+        let s = bench.run("pjrt 64-batch", || engine.infer(&xs64).unwrap());
+        println!(
+            "  → pjrt throughput: {:.0} inferences/s (batched)",
+            64.0 * 1e9 / s.median_ns
+        );
+        // end-to-end compare latency
+        let t = Instant::now();
+        let n = 4096.min(test.len());
+        let _ = engine.classify_all(&test.xs[..n], 5).unwrap();
+        println!(
+            "  → pjrt full test sweep: {} samples in {}",
+            n,
+            format_ns(t.elapsed().as_nanos() as f64)
+        );
+    }
+}

@@ -1,0 +1,91 @@
+//! Bench A3: ablations over the flow's design choices — ESPRESSO on/off,
+//! retiming on/off, depth- vs area-oriented mapping — plus microbenchmarks
+//! of the two-level minimizer and the LUT mapper themselves.
+
+use nullanet_tiny::flow::{run_flow, FlowConfig};
+use nullanet_tiny::fpga::timing::TimingModel;
+use nullanet_tiny::logic::espresso::minimize_tt;
+use nullanet_tiny::logic::mapper::{map_aig, MapConfig};
+use nullanet_tiny::logic::truthtable::TruthTable;
+use nullanet_tiny::nn::model::{random_model, Model};
+use nullanet_tiny::util::bench::Bench;
+use nullanet_tiny::util::prng::Xoshiro256;
+
+fn main() {
+    // ---- flow-level ablations (A3) ----
+    let model = Model::load("artifacts/jsc-s.model.json")
+        .unwrap_or_else(|_| random_model("abl", 16, &[64, 32, 5], 3, 2, 7));
+    println!("A3 ablations on {}:\n", model.summary());
+    println!("| espresso | retime | area-map | LUTs | FFs | depth | fmax MHz | cubes |");
+    println!("|----------|--------|----------|------|-----|-------|----------|-------|");
+    let tm = TimingModel::vu9p();
+    for esp in [true, false] {
+        for ret in [true, false] {
+            for area in [true, false] {
+                let cfg = FlowConfig {
+                    use_espresso: esp,
+                    retime: ret,
+                    map_for_area: area,
+                    verify: false,
+                    ..Default::default()
+                };
+                let r = run_flow(&model, &cfg, None).unwrap();
+                let s = r.circuit.stats();
+                println!(
+                    "| {:>8} | {:>6} | {:>8} | {:4} | {:3} | {:5} | {:8.0} | {:5} |",
+                    esp, ret, area, s.luts, s.ffs, s.max_stage_depth,
+                    tm.fmax_mhz(s.max_stage_depth),
+                    r.total_cubes_after,
+                );
+            }
+        }
+    }
+
+    // ---- microbenchmarks ----
+    println!("\nmicrobenchmarks:");
+    let mut bench = Bench::new();
+    let mut rng = Xoshiro256::new(0xBEEF);
+
+    // ESPRESSO on an 8-input threshold-like function (the JSC-M neuron size).
+    let weights: Vec<f64> = (0..8).map(|_| rng.next_gaussian()).collect();
+    let tt8 = TruthTable::from_fn(8, |m| {
+        let s: f64 = (0..8)
+            .map(|i| if (m >> i) & 1 == 1 { weights[i] } else { 0.0 })
+            .sum();
+        s > 0.0
+    });
+    let dc8 = TruthTable::zeros(8);
+    bench.run("espresso 8-in threshold fn", || minimize_tt(&tt8, &dc8));
+
+    // ESPRESSO on a random (hard) 8-input function.
+    let rtt = TruthTable::from_fn(8, |_| rng.bernoulli(0.5));
+    bench.run("espresso 8-in random fn", || minimize_tt(&rtt, &dc8));
+
+    // ISOP alone (the seed generator).
+    bench.run("isop 12-in threshold fn", || {
+        let tt = TruthTable::from_fn(12, |m| (m.count_ones() as i32 - 6) > 0);
+        TruthTable::isop(&tt, &TruthTable::zeros(12))
+    });
+
+    // Mapper on a mid-size AIG.
+    use nullanet_tiny::logic::aig::{Aig, Lit};
+    let mut g = Aig::new();
+    let ins: Vec<Lit> = (0..24).map(|_| g.add_input()).collect();
+    let mut pool = ins.clone();
+    let mut r2 = Xoshiro256::new(3);
+    for _ in 0..400 {
+        let a = pool[r2.below(pool.len() as u64) as usize];
+        let b = pool[r2.below(pool.len() as u64) as usize];
+        let l = match r2.below(3) {
+            0 => g.and(a, b),
+            1 => g.or(a, b),
+            _ => g.xor(a, b),
+        };
+        pool.push(l);
+    }
+    for &l in pool.iter().rev().take(8) {
+        g.add_output(l);
+    }
+    let g = g.sweep();
+    bench.run("map 400-op AIG to 6-LUTs", || map_aig(&g, &MapConfig::default()));
+}

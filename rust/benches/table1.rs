@@ -1,0 +1,65 @@
+//! Bench T1: regenerate the paper's Table I — accuracy, LUTs, FFs, fmax
+//! for JSC-S/M/L with comparison factors vs the LogicNets baseline — and
+//! time each flow.
+//!
+//! ```bash
+//! make artifacts && cargo bench --bench table1
+//! ```
+//!
+//! Paper values for reference (their testbed; shapes, not absolutes, are
+//! the reproduction target — see EXPERIMENTS.md).
+
+use std::time::Instant;
+
+use nullanet_tiny::baseline::build_logicnets;
+use nullanet_tiny::data::Dataset;
+use nullanet_tiny::flow::{circuit_accuracy, run_flow, FlowConfig};
+use nullanet_tiny::fpga::report::{format_table, Comparison, ResultRow};
+use nullanet_tiny::fpga::timing::TimingModel;
+use nullanet_tiny::nn::model::{Arch, Model};
+
+fn main() {
+    let dir = "artifacts";
+    let test = match Dataset::load(&format!("{dir}/jsc_test.bin")) {
+        Ok(t) => t,
+        Err(_) => {
+            eprintln!("table1 bench needs `make artifacts` (test set missing)");
+            return;
+        }
+    };
+    let tm = TimingModel::vu9p();
+    let mut rows = Vec::new();
+    println!("Table I regeneration — synthesizing all architectures…\n");
+    for arch in Arch::all() {
+        let name = arch.name();
+        let ours_model = Model::load(&format!("{dir}/{name}.model.json")).unwrap();
+        let base_model =
+            Model::load(&format!("{dir}/{name}.logicnets.model.json")).unwrap();
+        let t = Instant::now();
+        let r = run_flow(&ours_model, &FlowConfig::default(), None).unwrap();
+        let flow_s = t.elapsed().as_secs_f64();
+        let ours_acc = circuit_accuracy(&ours_model, &r.circuit, &test.xs, &test.ys);
+        let t = Instant::now();
+        let base = build_logicnets(&base_model, 6).unwrap();
+        let base_s = t.elapsed().as_secs_f64();
+        let base_acc = circuit_accuracy(&base_model, &base.circuit, &test.xs, &test.ys);
+        println!(
+            "{name}: flow {flow_s:.1}s (espresso {} → {} cubes), baseline {base_s:.1}s",
+            r.total_cubes_before, r.total_cubes_after
+        );
+        rows.push(Comparison {
+            ours: ResultRow::from_stats(&name.to_uppercase(), ours_acc, r.circuit.stats(), &tm),
+            baseline: ResultRow::from_stats(
+                &name.to_uppercase(),
+                base_acc,
+                base.circuit.stats(),
+                &tm,
+            ),
+        });
+    }
+    println!("\n{}", format_table(&rows));
+    println!("paper Table I (their Vivado/VU9P testbed):");
+    println!("  JSC-S 69.65% (+1.85) |    39 LUTs (5.50x) |  75 FFs (3.30x) | 2079 MHz (1.30x)");
+    println!("  JSC-M 72.22% (+1.73) |  1553 LUTs (9.30x) | 151 FFs (2.90x) |  841 MHz (1.40x)");
+    println!("  JSC-L 73.35% (+1.55) | 11752 LUTs (3.20x) | 565 FFs (1.40x) |  436 MHz (1.02x)");
+}

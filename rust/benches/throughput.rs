@@ -1,0 +1,114 @@
+//! Bench P1 (§Perf): end-to-end throughput of every moving part —
+//! per-neuron synthesis rate, bit-parallel simulation rate, coordinator
+//! round-trip under batching, and thread-pool scaling.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nullanet_tiny::coordinator::{BatchPolicy, Policy, Router};
+use nullanet_tiny::flow::{run_flow, FlowConfig};
+use nullanet_tiny::logic::sim::CompiledNetlist;
+use nullanet_tiny::nn::eval::{codes_to_bits, quantize_input};
+use nullanet_tiny::nn::model::{random_model, Model};
+use nullanet_tiny::util::bench::Bench;
+use nullanet_tiny::util::prng::Xoshiro256;
+use nullanet_tiny::util::threadpool::ThreadPool;
+
+fn main() {
+    let model = Model::load("artifacts/jsc-s.model.json")
+        .unwrap_or_else(|_| random_model("tp", 16, &[64, 32, 5], 3, 2, 7));
+    let mut bench = Bench::new();
+
+    // ---- flow throughput ----
+    let t = Instant::now();
+    let cfg = FlowConfig { verify: false, ..Default::default() };
+    let r = run_flow(&model, &cfg, None).unwrap();
+    let flow_s = t.elapsed().as_secs_f64();
+    println!(
+        "flow: {} neurons in {:.2}s = {:.0} neurons/s (enumerate+espresso+map+retime)\n",
+        r.neurons,
+        flow_s,
+        r.neurons as f64 / flow_s
+    );
+
+    // ---- simulator throughput ----
+    let mut sim = CompiledNetlist::compile(&r.circuit.netlist);
+    let mut rng = Xoshiro256::new(1);
+    let batch: Vec<Vec<bool>> = (0..4096)
+        .map(|_| {
+            let x: Vec<f64> = (0..model.input_features).map(|_| 2.0 * rng.next_gaussian()).collect();
+            codes_to_bits(&quantize_input(&model, &x), model.input_quant.bits)
+        })
+        .collect();
+    let s = bench.run("logic-sim 4096-batch", || sim.run_batch(&batch));
+    println!(
+        "  → {:.2} M inferences/s\n",
+        4096.0 * 1e3 / s.median_ns
+    );
+
+    // word-level lower bound: one 64-lane pass
+    let words: Vec<u64> = (0..r.circuit.netlist.num_inputs).map(|_| rng.next_u64()).collect();
+    let mut out = vec![0u64; r.circuit.netlist.outputs.len()];
+    let s = bench.run("logic-sim one 64-lane pass", || {
+        sim.run_words(&words, &mut out);
+        out[0]
+    });
+    println!(
+        "  → word-pass bound: {:.2} M inferences/s ({} LUTs/pass)\n",
+        64.0 * 1e3 / s.median_ns,
+        r.circuit.netlist.num_luts()
+    );
+
+    // ---- coordinator round trip ----
+    let router = Arc::new(Router::start(
+        model.clone(),
+        r.circuit.netlist.clone(),
+        None,
+        Policy::Logic,
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(50) },
+    ));
+    let n = 20_000usize;
+    let t = Instant::now();
+    let feats = model.input_features;
+    let mut joins = Vec::new();
+    for c in 0..4u64 {
+        let rr = Arc::clone(&router);
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Xoshiro256::new(c);
+            for _ in 0..n / 4 {
+                let x: Vec<f64> = (0..feats).map(|_| 2.0 * rng.next_gaussian()).collect();
+                let _ = rr.submit(x).recv_timeout(Duration::from_secs(30)).unwrap();
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall = t.elapsed().as_secs_f64();
+    println!(
+        "coordinator: {} requests in {:.2}s = {:.0} req/s (4 closed-loop clients)",
+        n,
+        wall,
+        n as f64 / wall
+    );
+    println!("  {}\n", router.metrics().report());
+
+    // ---- thread-pool scaling on synthesis jobs ----
+    for jobs in [1usize, 2, 4] {
+        let m2 = random_model("scale", 16, &[64, 32, 5], 3, 2, 11);
+        let pool = ThreadPool::new(jobs);
+        let work: Vec<(usize, usize)> = (0..m2.layers.len())
+            .flat_map(|l| (0..m2.layers[l].out_width).map(move |n| (l, n)))
+            .collect();
+        let m2 = Arc::new(m2);
+        let t = Instant::now();
+        let mm = Arc::clone(&m2);
+        let _ = pool.par_map(work, move |(l, n)| {
+            nullanet_tiny::flow::synth::synthesize_neuron(&mm, l, n, None, true)
+        });
+        println!(
+            "synthesis with {jobs} worker(s): {:.2}s",
+            t.elapsed().as_secs_f64()
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! Baseline systems the paper compares against: LogicNets [34] (rebuilt
+//! from first principles) and the Google AQP design [38] (analytical cost
+//! model; see DESIGN.md §4 for the substitution rationale).
+
+pub mod aqp;
+pub mod logicnets;
+
+pub use aqp::AqpModel;
+pub use logicnets::{build_logicnets, LogicNetsResult};

@@ -1,0 +1,201 @@
+//! Dynamic request batching.
+//!
+//! Classic serving-side batcher: requests accumulate in a queue; a flush is
+//! triggered by either reaching `max_batch` or a request aging past
+//! `max_wait`. The flushed batch goes to one of the inference engines (the
+//! bit-parallel logic simulator packs 64 samples per word pass; the PJRT
+//! executable has a fixed compiled batch). Built on std primitives — the
+//! offline environment has no tokio — with one dispatcher thread per
+//! [`crate::coordinator::router::Router`].
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One queued inference request.
+pub struct Request {
+    /// Feature vector.
+    pub features: Vec<f64>,
+    /// Enqueue timestamp (for latency accounting).
+    pub enqueued: Instant,
+    /// Completion channel: (predicted class, engine label).
+    pub reply: Sender<Reply>,
+}
+
+/// Completion message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Reply {
+    /// Predicted class.
+    pub class: usize,
+    /// Which engine served it ("logic" / "pjrt").
+    pub engine: &'static str,
+    /// End-to-end latency.
+    pub latency: Duration,
+}
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush when this many requests are queued.
+    pub max_batch: usize,
+    /// Flush when the oldest request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(200) }
+    }
+}
+
+/// Thread-safe request queue with batch-flush semantics.
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: Mutex<VecDeque<Request>>,
+    signal: Condvar,
+    closed: Mutex<bool>,
+}
+
+impl Batcher {
+    /// New empty batcher.
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            policy,
+            queue: Mutex::new(VecDeque::new()),
+            signal: Condvar::new(),
+            closed: Mutex::new(false),
+        }
+    }
+
+    /// Policy accessor.
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Enqueue a request.
+    pub fn submit(&self, req: Request) {
+        let mut q = self.queue.lock().unwrap();
+        q.push_back(req);
+        if q.len() >= self.policy.max_batch {
+            self.signal.notify_one();
+        } else {
+            // Wake the dispatcher so it can arm the age timer.
+            self.signal.notify_one();
+        }
+    }
+
+    /// Mark closed; wakes the dispatcher.
+    pub fn close(&self) {
+        *self.closed.lock().unwrap() = true;
+        self.signal.notify_all();
+    }
+
+    /// Dispatcher side: wait for the next batch (or `None` once closed and
+    /// drained). Blocks up to the age deadline of the oldest request.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if q.len() >= self.policy.max_batch {
+                return Some(q.drain(..self.policy.max_batch).collect());
+            }
+            if let Some(oldest) = q.front() {
+                let age = oldest.enqueued.elapsed();
+                if age >= self.policy.max_wait {
+                    let n = q.len().min(self.policy.max_batch);
+                    return Some(q.drain(..n).collect());
+                }
+                let remaining = self.policy.max_wait - age;
+                let (nq, _timeout) = self.signal.wait_timeout(q, remaining).unwrap();
+                q = nq;
+            } else {
+                if *self.closed.lock().unwrap() {
+                    return None;
+                }
+                q = self.signal.wait(q).unwrap();
+            }
+        }
+    }
+
+    /// Number of queued requests (diagnostics).
+    pub fn depth(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    fn req(v: f64) -> (Request, std::sync::mpsc::Receiver<Reply>) {
+        let (tx, rx) = channel();
+        (
+            Request { features: vec![v], enqueued: Instant::now(), reply: tx },
+            rx,
+        )
+    }
+
+    #[test]
+    fn flushes_on_max_batch() {
+        let b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10) });
+        for i in 0..3 {
+            let (r, _rx) = req(i as f64);
+            std::mem::forget(_rx);
+            b.submit(r);
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn flushes_on_age() {
+        let b = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(5),
+        }));
+        let (r, _rx) = req(1.0);
+        std::mem::forget(_rx);
+        b.submit(r);
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t.elapsed() >= Duration::from_millis(4), "must wait for age");
+    }
+
+    #[test]
+    fn close_drains_to_none() {
+        let b = Batcher::new(BatchPolicy::default());
+        b.close();
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_submit_and_drain() {
+        let b = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 10,
+            max_wait: Duration::from_millis(1),
+        }));
+        let b2 = Arc::clone(&b);
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                let (r, rx) = req(i as f64);
+                std::mem::forget(rx);
+                b2.submit(r);
+            }
+            b2.close();
+        });
+        let mut total = 0;
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() <= 10);
+            total += batch.len();
+            if total == 100 {
+                break;
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(total, 100);
+    }
+}

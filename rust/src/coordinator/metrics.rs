@@ -1,0 +1,190 @@
+//! Serving metrics: latency histogram + counters.
+//!
+//! Lock-free on the record path (atomic bucket counters); percentile reads
+//! are approximate to bucket resolution — the standard histogram trade-off
+//! every serving stack makes.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-spaced latency histogram from 100 ns to ~100 s.
+pub struct LatencyHistogram {
+    /// Bucket i covers [100ns · 1.5^i, 100ns · 1.5^(i+1)).
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+const BASE_NS: f64 = 100.0;
+const GROWTH: f64 = 1.5;
+const NBUCKETS: usize = 52;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        if ns as f64 <= BASE_NS {
+            return 0;
+        }
+        let b = ((ns as f64 / BASE_NS).ln() / GROWTH.ln()).floor() as usize;
+        b.min(NBUCKETS - 1)
+    }
+
+    /// Record one latency sample.
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency (ns).
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate percentile (ns), `q ∈ (0,1)`.
+    pub fn percentile_ns(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                // upper edge of bucket i
+                return BASE_NS * GROWTH.powi(i as i32 + 1);
+            }
+        }
+        BASE_NS * GROWTH.powi(NBUCKETS as i32)
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}µs p50={:.1}µs p95={:.1}µs p99={:.1}µs",
+            self.count(),
+            self.mean_ns() / 1e3,
+            self.percentile_ns(0.50) / 1e3,
+            self.percentile_ns(0.95) / 1e3,
+            self.percentile_ns(0.99) / 1e3,
+        )
+    }
+}
+
+/// Serving counters shared across coordinator threads.
+#[derive(Default)]
+pub struct Metrics {
+    /// End-to-end request latency.
+    pub request_latency: LatencyHistogram,
+    /// Batch-execution latency (per flushed batch).
+    pub batch_latency: LatencyHistogram,
+    /// Requests served by the logic engine.
+    pub logic_requests: AtomicU64,
+    /// Requests served by the PJRT engine.
+    pub numeric_requests: AtomicU64,
+    /// Batches flushed.
+    pub batches: AtomicU64,
+    /// Requests whose engines disagreed (compare mode).
+    pub disagreements: AtomicU64,
+}
+
+impl Metrics {
+    /// New zeroed metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Render a human-readable report.
+    pub fn report(&self) -> String {
+        format!(
+            "requests: logic={} numeric={} batches={} disagreements={}\n\
+             request latency: {}\n\
+             batch latency:   {}",
+            self.logic_requests.load(Ordering::Relaxed),
+            self.numeric_requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.disagreements.load(Ordering::Relaxed),
+            self.request_latency.summary(),
+            self.batch_latency.summary(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record_ns(i * 1_000); // 1µs .. 1ms uniform
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.percentile_ns(0.5);
+        let p95 = h.percentile_ns(0.95);
+        let p99 = h.percentile_ns(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        // p50 of uniform 1µs..1ms ≈ 500µs within bucket resolution (×1.5)
+        assert!((250_000.0..1_000_000.0).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn mean_exact() {
+        let h = LatencyHistogram::new();
+        h.record_ns(100);
+        h.record_ns(300);
+        assert_eq!(h.mean_ns(), 200.0);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.percentile_ns(0.99), 0.0);
+    }
+
+    #[test]
+    fn extreme_values_clamped() {
+        let h = LatencyHistogram::new();
+        h.record_ns(u64::MAX);
+        h.record_ns(0);
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile_ns(0.99).is_finite());
+    }
+
+    #[test]
+    fn metrics_report_format() {
+        let m = Metrics::new();
+        m.logic_requests.fetch_add(5, Ordering::Relaxed);
+        m.request_latency.record_ns(1000);
+        let r = m.report();
+        assert!(r.contains("logic=5"));
+        assert!(r.contains("p99"));
+    }
+}

@@ -1,0 +1,16 @@
+//! The serving coordinator (L3): dynamic batching, engine routing, TCP
+//! server, and metrics — the layer that turns the synthesized combinational
+//! logic into a deployable inference service.
+//!
+//! * [`batcher`] — queue + flush policy (max batch / max wait)
+//! * [`router`] — logic vs PJRT engine dispatch, compare mode
+//! * [`server`] — JSON-lines TCP front end
+//! * [`metrics`] — latency histograms, counters
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use router::{PjrtSpec, Policy, Router};

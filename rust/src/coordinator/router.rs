@@ -1,0 +1,237 @@
+//! Request router: dispatches batches to the combinational-logic engine
+//! and/or the PJRT numeric engine.
+//!
+//! The coordinator's demonstration goal (DESIGN.md §2): the synthesized
+//! fixed-function logic *is* the production inference path — bit-exact
+//! against the quantized NN — while the AOT-compiled XLA executable serves
+//! as the numeric reference. Routing policies:
+//!
+//! * `Logic` — everything on the netlist simulator (the paper's artifact)
+//! * `Numeric` — everything on PJRT
+//! * `Compare` — run both, count disagreements, reply from logic
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::batcher::{BatchPolicy, Batcher, Reply, Request};
+use crate::coordinator::metrics::Metrics;
+use crate::flow::build::classify_batch;
+use crate::logic::sim::CompiledNetlist;
+use crate::nn::model::Model;
+use crate::runtime::PjrtEngine;
+
+/// Routing policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    Logic,
+    Numeric,
+    Compare,
+}
+
+impl Policy {
+    /// Parse "logic" / "pjrt" / "compare".
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "logic" => Some(Policy::Logic),
+            "pjrt" | "numeric" => Some(Policy::Numeric),
+            "compare" | "both" => Some(Policy::Compare),
+            _ => None,
+        }
+    }
+}
+
+/// How to construct the PJRT engine. The engine itself is `!Send` (its C
+/// handles are reference-counted without atomics), so the router receives a
+/// *spec* and instantiates the engine on the dispatcher thread where it
+/// lives for the router's whole lifetime.
+#[derive(Clone, Debug)]
+pub struct PjrtSpec {
+    /// Path to `artifacts/<arch>.hlo.txt`.
+    pub hlo_path: String,
+    /// Compiled batch size of the artifact.
+    pub batch: usize,
+    /// Input features.
+    pub in_features: usize,
+    /// Output width.
+    pub out_width: usize,
+}
+
+impl PjrtSpec {
+    fn load(&self) -> PjrtEngine {
+        PjrtEngine::load(&self.hlo_path, self.batch, self.in_features, self.out_width)
+            .expect("load PJRT artifact")
+    }
+}
+
+/// The serving router: owns the batcher, engines, metrics, and dispatcher
+/// thread.
+pub struct Router {
+    batcher: Arc<Batcher>,
+    metrics: Arc<Metrics>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Router {
+    /// Start a router over the given engines. `pjrt` may be `None` when
+    /// only the logic path is wanted (e.g. artifacts not built).
+    pub fn start(
+        model: Model,
+        netlist: crate::logic::netlist::LutNetlist,
+        pjrt: Option<PjrtSpec>,
+        policy: Policy,
+        batch_policy: BatchPolicy,
+    ) -> Router {
+        let batcher = Arc::new(Batcher::new(batch_policy));
+        let metrics = Arc::new(Metrics::new());
+        let b = Arc::clone(&batcher);
+        let m = Arc::clone(&metrics);
+        let dispatcher = std::thread::Builder::new()
+            .name("nnt-dispatcher".into())
+            .spawn(move || {
+                let mut sim = CompiledNetlist::compile(&netlist);
+                let pjrt: Option<PjrtEngine> = pjrt.map(|s| s.load());
+                while let Some(batch) = b.next_batch() {
+                    let t = Instant::now();
+                    let xs: Vec<Vec<f64>> =
+                        batch.iter().map(|r| r.features.clone()).collect();
+                    let (preds, engine): (Vec<usize>, &'static str) = match policy {
+                        Policy::Logic => {
+                            m.logic_requests.fetch_add(xs.len() as u64, Ordering::Relaxed);
+                            (classify_batch(&model, &mut sim, &xs), "logic")
+                        }
+                        Policy::Numeric => {
+                            let e = pjrt.as_ref().expect("numeric policy needs PJRT");
+                            m.numeric_requests
+                                .fetch_add(xs.len() as u64, Ordering::Relaxed);
+                            (
+                                e.classify_all(&xs, model.num_classes)
+                                    .expect("pjrt inference"),
+                                "pjrt",
+                            )
+                        }
+                        Policy::Compare => {
+                            let logic = classify_batch(&model, &mut sim, &xs);
+                            m.logic_requests.fetch_add(xs.len() as u64, Ordering::Relaxed);
+                            if let Some(e) = pjrt.as_ref() {
+                                let num = e
+                                    .classify_all(&xs, model.num_classes)
+                                    .expect("pjrt inference");
+                                m.numeric_requests
+                                    .fetch_add(xs.len() as u64, Ordering::Relaxed);
+                                let dis = logic
+                                    .iter()
+                                    .zip(&num)
+                                    .filter(|(a, b)| a != b)
+                                    .count();
+                                m.disagreements.fetch_add(dis as u64, Ordering::Relaxed);
+                            }
+                            (logic, "logic")
+                        }
+                    };
+                    m.batches.fetch_add(1, Ordering::Relaxed);
+                    m.batch_latency.record_ns(t.elapsed().as_nanos() as u64);
+                    for (req, class) in batch.into_iter().zip(preds) {
+                        let latency = req.enqueued.elapsed();
+                        m.request_latency.record_ns(latency.as_nanos() as u64);
+                        let _ = req.reply.send(Reply { class, engine, latency });
+                    }
+                }
+            })
+            .expect("spawn dispatcher");
+        Router { batcher, metrics, dispatcher: Some(dispatcher) }
+    }
+
+    /// Submit one request; returns the receiver for its reply.
+    pub fn submit(&self, features: Vec<f64>) -> std::sync::mpsc::Receiver<Reply> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.batcher.submit(Request { features, enqueued: Instant::now(), reply: tx });
+        rx
+    }
+
+    /// Metrics handle.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Queue depth.
+    pub fn depth(&self) -> usize {
+        self.batcher.depth()
+    }
+
+    /// Stop the dispatcher (drains in-flight batches).
+    pub fn shutdown(mut self) {
+        self.batcher.close();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.batcher.close();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::{run_flow, FlowConfig};
+    use crate::nn::model::random_model;
+    use std::time::Duration;
+
+    fn make_router(policy: Policy) -> (Router, Model) {
+        let model = random_model("srv", 6, &[4, 3], 2, 1, 99);
+        let r = run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None)
+            .unwrap();
+        let router = Router::start(
+            model.clone(),
+            r.circuit.netlist,
+            None,
+            policy,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        );
+        (router, model)
+    }
+
+    #[test]
+    fn serves_logic_requests() {
+        let (router, model) = make_router(Policy::Logic);
+        let mut rxs = Vec::new();
+        let mut want = Vec::new();
+        for i in 0..50 {
+            let x: Vec<f64> = (0..6).map(|j| ((i * 5 + j) as f64 * 0.37).sin()).collect();
+            want.push(crate::nn::eval::classify(&model, &x));
+            rxs.push(router.submit(x));
+        }
+        for (rx, w) in rxs.into_iter().zip(want) {
+            let reply = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(reply.class, w, "logic path must match NN exactly");
+            assert_eq!(reply.engine, "logic");
+        }
+        let m = router.metrics();
+        assert_eq!(m.logic_requests.load(Ordering::Relaxed), 50);
+        assert!(m.batches.load(Ordering::Relaxed) >= 7); // 50 / 8
+        router.shutdown();
+    }
+
+    #[test]
+    fn parse_policies() {
+        assert_eq!(Policy::parse("logic"), Some(Policy::Logic));
+        assert_eq!(Policy::parse("pjrt"), Some(Policy::Numeric));
+        assert_eq!(Policy::parse("compare"), Some(Policy::Compare));
+        assert_eq!(Policy::parse("x"), None);
+    }
+
+    #[test]
+    fn shutdown_is_clean() {
+        let (router, _) = make_router(Policy::Logic);
+        let rx = router.submit(vec![0.0; 6]);
+        let _ = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        router.shutdown();
+    }
+}

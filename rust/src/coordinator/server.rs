@@ -1,0 +1,187 @@
+//! TCP line-protocol inference server.
+//!
+//! A deliberately simple wire format (one JSON object per line) so any
+//! client — `nc`, Python, curl-less scripts — can drive the coordinator:
+//!
+//! ```text
+//! → {"features": [0.1, -0.5, …]}
+//! ← {"class": 3, "engine": "logic", "latency_us": 42.0}
+//! → {"cmd": "metrics"}
+//! ← {"report": "…"}
+//! → {"cmd": "shutdown"}
+//! ```
+//!
+//! One thread per connection (std::net; no tokio offline). The server owns
+//! a [`Router`]; all inference goes through its dynamic batcher, so
+//! concurrent clients share batches.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::router::Router;
+use crate::util::json::Json;
+
+/// Serve until a client sends `{"cmd": "shutdown"}`. Binds to `addr`
+/// (e.g. "127.0.0.1:7878"); `ready` is signalled once listening (tests).
+pub fn serve(
+    router: Arc<Router>,
+    addr: &str,
+    ready: Option<std::sync::mpsc::Sender<u16>>,
+) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let port = listener.local_addr()?.port();
+    if let Some(tx) = ready {
+        let _ = tx.send(port);
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    // Accept loop with periodic stop checks.
+    listener.set_nonblocking(true)?;
+    let mut handles = Vec::new();
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let r = Arc::clone(&router);
+                let s = Arc::clone(&stop);
+                handles.push(std::thread::spawn(move || handle_client(stream, r, s)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+fn handle_client(stream: TcpStream, router: Arc<Router>, stop: Arc<AtomicBool>) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match handle_line(&line, &router, &stop) {
+            Ok(j) => j,
+            Err(msg) => Json::obj([("error", Json::str(msg))]),
+        };
+        if writer
+            .write_all(format!("{}\n", response.to_string()).as_bytes())
+            .is_err()
+        {
+            break;
+        }
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+    }
+    let _ = peer; // quiet unused warning in non-logging builds
+}
+
+fn handle_line(
+    line: &str,
+    router: &Router,
+    stop: &AtomicBool,
+) -> Result<Json, String> {
+    let req = Json::parse(line).map_err(|e| e.to_string())?;
+    if let Some(cmd) = req.get("cmd").and_then(|c| c.as_str()) {
+        return match cmd {
+            "metrics" => Ok(Json::obj([(
+                "report",
+                Json::str(router.metrics().report()),
+            )])),
+            "depth" => Ok(Json::obj([("depth", Json::int(router.depth() as i64))])),
+            "shutdown" => {
+                stop.store(true, Ordering::Release);
+                Ok(Json::obj([("ok", Json::Bool(true))]))
+            }
+            other => Err(format!("unknown cmd '{other}'")),
+        };
+    }
+    let features = req
+        .req("features")
+        .map_err(|e| e.to_string())?
+        .to_f64_vec()
+        .map_err(|e| format!("features: {e}"))?;
+    let rx = router.submit(features);
+    let reply = rx
+        .recv_timeout(std::time::Duration::from_secs(10))
+        .map_err(|_| "inference timeout".to_string())?;
+    Ok(Json::obj([
+        ("class", Json::int(reply.class as i64)),
+        ("engine", Json::str(reply.engine)),
+        ("latency_us", Json::float(reply.latency.as_secs_f64() * 1e6)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::router::Policy;
+    use crate::flow::{run_flow, FlowConfig};
+    use crate::nn::model::random_model;
+    use std::io::{BufRead, BufReader, Write};
+    use std::time::Duration;
+
+    #[test]
+    fn end_to_end_tcp_session() {
+        let model = random_model("tcp", 4, &[3, 3], 2, 1, 1);
+        let flow =
+            run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+        let router = Arc::new(Router::start(
+            model.clone(),
+            flow.circuit.netlist,
+            None,
+            Policy::Logic,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        ));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let r2 = Arc::clone(&router);
+        let server = std::thread::spawn(move || {
+            serve(r2, "127.0.0.1:0", Some(tx)).unwrap();
+        });
+        let port = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+
+        let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+        // inference
+        let x = vec![0.3, -0.2, 0.9, -1.0];
+        conn.write_all(b"{\"features\": [0.3, -0.2, 0.9, -1.0]}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = crate::util::json::Json::parse(&line).unwrap();
+        let class = resp.get("class").unwrap().as_usize().unwrap();
+        assert_eq!(class, crate::nn::eval::classify(&model, &x));
+        assert_eq!(resp.get("engine").unwrap().as_str(), Some("logic"));
+
+        // metrics
+        conn.write_all(b"{\"cmd\": \"metrics\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("logic=1"));
+
+        // malformed input → error, session continues
+        conn.write_all(b"not json\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("error"));
+
+        // shutdown
+        conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("ok"));
+        server.join().unwrap();
+    }
+}

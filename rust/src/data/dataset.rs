@@ -1,0 +1,258 @@
+//! Binary dataset interchange (`artifacts/jsc_{train,test}.bin`).
+//!
+//! Layout (little endian):
+//!
+//! ```text
+//! magic   4 bytes  "NNTD"
+//! version u32      1
+//! samples u32
+//! features u32
+//! classes u32
+//! data    samples × features × f32   (row major)
+//! labels  samples × u8
+//! ```
+//!
+//! Written by `python/compile/data.py`; read here. The format is
+//! deliberately trivial — no compression, no alignment games — so both
+//! sides stay ~50 lines and bugs have nowhere to hide.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Magic prefix of the file format.
+pub const MAGIC: &[u8; 4] = b"NNTD";
+/// Current version.
+pub const VERSION: u32 = 1;
+
+/// An in-memory labelled dataset.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dataset {
+    /// Feature vectors (`xs[i].len() == num_features` for all i).
+    pub xs: Vec<Vec<f64>>,
+    /// Class labels in `[0, num_classes)`.
+    pub ys: Vec<usize>,
+    /// Feature dimensionality.
+    pub num_features: usize,
+    /// Number of classes.
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// True if there are no samples.
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Validate shapes and label ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.xs.len() != self.ys.len() {
+            bail!("xs/ys length mismatch");
+        }
+        for (i, x) in self.xs.iter().enumerate() {
+            if x.len() != self.num_features {
+                bail!("sample {i} has {} features, expected {}", x.len(), self.num_features);
+            }
+        }
+        if let Some(&y) = self.ys.iter().find(|&&y| y >= self.num_classes) {
+            bail!("label {y} out of range (classes={})", self.num_classes);
+        }
+        Ok(())
+    }
+
+    /// Load from the binary format.
+    pub fn load(path: &str) -> Result<Dataset> {
+        let mut f = std::fs::File::open(path).with_context(|| format!("open {path}"))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::from_bytes(&buf).with_context(|| format!("parse {path}"))
+    }
+
+    /// Parse from bytes.
+    pub fn from_bytes(buf: &[u8]) -> Result<Dataset> {
+        if buf.len() < 20 {
+            bail!("truncated header");
+        }
+        if &buf[0..4] != MAGIC {
+            bail!("bad magic (not an NNTD file)");
+        }
+        let rd_u32 =
+            |o: usize| -> u32 { u32::from_le_bytes(buf[o..o + 4].try_into().unwrap()) };
+        let version = rd_u32(4);
+        if version != VERSION {
+            bail!("unsupported version {version}");
+        }
+        let samples = rd_u32(8) as usize;
+        let features = rd_u32(12) as usize;
+        let classes = rd_u32(16) as usize;
+        let data_bytes = samples
+            .checked_mul(features)
+            .and_then(|n| n.checked_mul(4))
+            .context("size overflow")?;
+        let need = 20 + data_bytes + samples;
+        if buf.len() != need {
+            bail!("file size {} != expected {need}", buf.len());
+        }
+        let mut xs = Vec::with_capacity(samples);
+        let mut off = 20;
+        for _ in 0..samples {
+            let mut row = Vec::with_capacity(features);
+            for _ in 0..features {
+                let v = f32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+                row.push(v as f64);
+                off += 4;
+            }
+            xs.push(row);
+        }
+        let ys: Vec<usize> = buf[off..off + samples].iter().map(|&b| b as usize).collect();
+        let d = Dataset { xs, ys, num_features: features, num_classes: classes };
+        d.validate()?;
+        Ok(d)
+    }
+
+    /// Serialize to the binary format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(20 + self.len() * (self.num_features * 4 + 1));
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.num_features as u32).to_le_bytes());
+        out.extend_from_slice(&(self.num_classes as u32).to_le_bytes());
+        for x in &self.xs {
+            for &v in x {
+                out.extend_from_slice(&(v as f32).to_le_bytes());
+            }
+        }
+        for &y in &self.ys {
+            out.push(y as u8);
+        }
+        out
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: &str) -> Result<()> {
+        let mut f = std::fs::File::create(path).with_context(|| format!("create {path}"))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Split off the first `n` samples (head, tail).
+    pub fn split(&self, n: usize) -> (Dataset, Dataset) {
+        let n = n.min(self.len());
+        let head = Dataset {
+            xs: self.xs[..n].to_vec(),
+            ys: self.ys[..n].to_vec(),
+            num_features: self.num_features,
+            num_classes: self.num_classes,
+        };
+        let tail = Dataset {
+            xs: self.xs[n..].to_vec(),
+            ys: self.ys[n..].to_vec(),
+            num_features: self.num_features,
+            num_classes: self.num_classes,
+        };
+        (head, tail)
+    }
+
+    /// Per-feature mean and std (std floored at 1e-9).
+    pub fn feature_stats(&self) -> (Vec<f64>, Vec<f64>) {
+        let n = self.len().max(1) as f64;
+        let mut mean = vec![0.0; self.num_features];
+        for x in &self.xs {
+            for (m, v) in mean.iter_mut().zip(x) {
+                *m += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n;
+        }
+        let mut var = vec![0.0; self.num_features];
+        for x in &self.xs {
+            for ((s, v), m) in var.iter_mut().zip(x).zip(&mean) {
+                *s += (v - m) * (v - m);
+            }
+        }
+        let std = var.iter().map(|&s| (s / n).sqrt().max(1e-9)).collect();
+        (mean, std)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            xs: vec![vec![1.0, -2.0], vec![0.5, 3.25], vec![-1.0, 0.0]],
+            ys: vec![0, 2, 1],
+            num_features: 2,
+            num_classes: 3,
+        }
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let d = tiny();
+        let b = d.to_bytes();
+        let back = Dataset::from_bytes(&b).unwrap();
+        assert_eq!(back, d);
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let d = tiny();
+        let path = "/tmp/nnt_dataset_test.bin";
+        d.save(path).unwrap();
+        let back = Dataset::load(path).unwrap();
+        assert_eq!(back, d);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let d = tiny();
+        let mut b = d.to_bytes();
+        b[0] = b'X';
+        assert!(Dataset::from_bytes(&b).is_err(), "bad magic");
+        let mut b2 = d.to_bytes();
+        b2.pop();
+        assert!(Dataset::from_bytes(&b2).is_err(), "truncated");
+        let mut b3 = d.to_bytes();
+        b3[4] = 9; // version
+        assert!(Dataset::from_bytes(&b3).is_err(), "bad version");
+        let mut b4 = d.to_bytes();
+        let lbl = b4.len() - 1;
+        b4[lbl] = 7; // label out of range
+        assert!(Dataset::from_bytes(&b4).is_err());
+    }
+
+    #[test]
+    fn split_and_stats() {
+        let d = tiny();
+        let (h, t) = d.split(2);
+        assert_eq!(h.len(), 2);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.ys, vec![1]);
+        let (mean, std) = d.feature_stats();
+        assert!((mean[0] - (1.0 + 0.5 - 1.0) / 3.0).abs() < 1e-12);
+        assert!(std.iter().all(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn f32_precision_is_the_contract() {
+        // Values are stored as f32: exact roundtrip for f32-representable,
+        // lossy otherwise (documented contract with the Python side).
+        let d = Dataset {
+            xs: vec![vec![0.1f32 as f64]],
+            ys: vec![0],
+            num_features: 1,
+            num_classes: 1,
+        };
+        let back = Dataset::from_bytes(&d.to_bytes()).unwrap();
+        assert_eq!(back.xs[0][0], 0.1f32 as f64);
+    }
+}

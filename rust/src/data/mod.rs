@@ -1,0 +1,7 @@
+//! Datasets: the binary interchange format shared with the Python trainer
+//! and an in-process synthetic JSC-like generator for self-contained tests.
+
+pub mod dataset;
+pub mod synth;
+
+pub use dataset::Dataset;

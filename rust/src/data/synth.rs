@@ -1,0 +1,150 @@
+//! Synthetic jet-substructure-like dataset generator (Rust mirror).
+//!
+//! The real JSC dataset [37] (16 high-level jet features, 5 classes) is not
+//! available offline; DESIGN.md §4 documents the substitution. This
+//! generator produces a 5-class Gaussian mixture over 16 correlated,
+//! nonlinearly-warped features with class overlap tuned so a small float MLP
+//! reaches ~75% accuracy — the same difficulty band as the real task, which
+//! is what the QAT/FCP/logic pipeline actually exercises. The Python trainer
+//! has its own generator (`python/compile/data.py`) used for the shipped
+//! artifacts; this Rust twin exists so tests, examples, and benches are
+//! self-contained. Both are deterministic in their seeds.
+
+use crate::data::dataset::Dataset;
+use crate::util::prng::Xoshiro256;
+
+/// JSC-like dimensions.
+pub const NUM_FEATURES: usize = 16;
+/// JSC has 5 jet classes (g, q, W, Z, t).
+pub const NUM_CLASSES: usize = 5;
+
+/// Generate `n` samples with the given seed.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Xoshiro256::new(seed);
+
+    // Class-conditional means: spread on a few latent directions, then mixed
+    // through a fixed random linear map to correlate features.
+    let mut class_means = Vec::with_capacity(NUM_CLASSES);
+    for _ in 0..NUM_CLASSES {
+        let m: Vec<f64> = (0..6).map(|_| 1.6 * rng.next_gaussian()).collect();
+        class_means.push(m);
+    }
+    // Mixing matrix 16×6 (fixed per seed).
+    let mix: Vec<Vec<f64>> = (0..NUM_FEATURES)
+        .map(|_| (0..6).map(|_| rng.next_gaussian() * 0.8).collect())
+        .collect();
+    // Per-class latent scales (anisotropy).
+    let scales: Vec<Vec<f64>> = (0..NUM_CLASSES)
+        .map(|_| (0..6).map(|_| 0.6 + 0.8 * rng.next_f64()).collect())
+        .collect();
+
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let y = rng.below(NUM_CLASSES as u64) as usize;
+        // latent draw
+        let z: Vec<f64> = (0..6)
+            .map(|k| class_means[y][k] + scales[y][k] * rng.next_gaussian())
+            .collect();
+        // observed features: linear mix + physics-flavoured warps + noise
+        let mut x = Vec::with_capacity(NUM_FEATURES);
+        for (i, row) in mix.iter().enumerate() {
+            let lin: f64 = row.iter().zip(&z).map(|(a, b)| a * b).sum();
+            let warped = match i % 4 {
+                0 => lin,                         // linear (multiplicities)
+                1 => lin.tanh() * 2.0,            // saturating (correlations)
+                2 => (lin.abs() + 0.1).ln(),      // heavy-tailed (masses)
+                _ => lin + 0.3 * lin * lin * lin.signum() * 0.1, // mild skew
+            };
+            x.push(warped + 0.35 * rng.next_gaussian());
+        }
+        xs.push(x);
+        ys.push(y);
+    }
+    Dataset { xs, ys, num_features: NUM_FEATURES, num_classes: NUM_CLASSES }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(100, 42);
+        let b = generate(100, 42);
+        assert_eq!(a, b);
+        let c = generate(100, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn shapes_and_labels() {
+        let d = generate(500, 1);
+        d.validate().unwrap();
+        assert_eq!(d.num_features, 16);
+        assert_eq!(d.num_classes, 5);
+        assert_eq!(d.len(), 500);
+        // all classes present
+        for c in 0..5 {
+            assert!(d.ys.iter().any(|&y| y == c), "class {c} missing");
+        }
+    }
+
+    #[test]
+    fn classes_are_separable_but_overlapping() {
+        // A nearest-class-mean classifier on standardized features should
+        // land in a "hard but learnable" band — far above chance (20%),
+        // below ~95% (task must not be trivial).
+        let d = generate(4000, 7);
+        let (mean, std) = d.feature_stats();
+        let norm = |x: &[f64]| -> Vec<f64> {
+            x.iter()
+                .enumerate()
+                .map(|(i, v)| (v - mean[i]) / std[i])
+                .collect()
+        };
+        // class means on first 3000, eval on rest
+        let (train, test) = d.split(3000);
+        let mut cmeans = vec![vec![0.0; 16]; 5];
+        let mut counts = vec![0usize; 5];
+        for (x, &y) in train.xs.iter().zip(&train.ys) {
+            let z = norm(x);
+            for (m, v) in cmeans[y].iter_mut().zip(&z) {
+                *m += v;
+            }
+            counts[y] += 1;
+        }
+        for (m, &c) in cmeans.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c.max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for (x, &y) in test.xs.iter().zip(&test.ys) {
+            let z = norm(x);
+            let pred = (0..5)
+                .min_by(|&a, &b| {
+                    let da: f64 =
+                        cmeans[a].iter().zip(&z).map(|(m, v)| (m - v) * (m - v)).sum();
+                    let db: f64 =
+                        cmeans[b].iter().zip(&z).map(|(m, v)| (m - v) * (m - v)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if pred == y {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.len() as f64;
+        assert!(acc > 0.45, "too hard: nearest-mean acc {acc}");
+        assert!(acc < 0.97, "too easy: nearest-mean acc {acc}");
+    }
+
+    #[test]
+    fn features_have_finite_moments() {
+        let d = generate(1000, 3);
+        let (mean, std) = d.feature_stats();
+        assert!(mean.iter().all(|m| m.is_finite()));
+        assert!(std.iter().all(|s| s.is_finite() && *s > 0.0));
+    }
+}

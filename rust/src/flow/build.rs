@@ -1,0 +1,457 @@
+//! Whole-model flow: per-neuron synthesis → per-layer AIG → LUT mapping →
+//! stitching → retiming → verification — Fig. 1's logic-minimization module
+//! end to end.
+//!
+//! Each layer becomes one AIG whose inputs are the layer's input bits and
+//! whose outputs are its neurons' activation-code bits; structural hashing
+//! inside the layer shares logic *across neurons*. Layers are mapped to
+//! 6-LUTs independently (register boundaries must not be crossed by LUT
+//! cones), stitched into one flat [`PipelinedCircuit`] with one stage per
+//! layer, and finally retimed to minimum period.
+
+use std::sync::Arc;
+
+use crate::flow::config::FlowConfig;
+use crate::flow::synth::{synthesize_neuron, verify_neuron, SynthesizedNeuron};
+use crate::logic::aig::Aig;
+use crate::logic::mapper::{map_aig, MapConfig};
+use crate::logic::netlist::{LutNetlist, PipelinedCircuit, Sig};
+use crate::logic::retime::retime_min_period;
+use crate::nn::enumerate::observed_patterns;
+use crate::nn::eval::{bits_to_codes, codes_to_bits, forward_codes, quantize_input, Trace};
+use crate::nn::model::Model;
+use crate::util::threadpool::ThreadPool;
+use crate::util::timer::StageTimer;
+
+/// Everything the flow produced for one model.
+pub struct FlowResult {
+    /// The final (retimed) pipelined circuit.
+    pub circuit: PipelinedCircuit,
+    /// Circuit before retiming (for the A3 ablation).
+    pub circuit_preretime: PipelinedCircuit,
+    /// Aggregate ESPRESSO statistics.
+    pub total_cubes_before: usize,
+    pub total_cubes_after: usize,
+    /// Per-stage wall-clock of the flow (Fig. 1 stage log).
+    pub timer: StageTimer,
+    /// Number of neurons synthesized.
+    pub neurons: usize,
+}
+
+/// Run the full flow on a model. `dc_traces` supplies training inputs when
+/// `config.dc_from_data` is set.
+pub fn run_flow(
+    model: &Model,
+    config: &FlowConfig,
+    dc_traces: Option<&[Vec<f64>]>,
+) -> Result<FlowResult, String> {
+    model.validate()?;
+    let mut timer = StageTimer::new();
+
+    // ---- optional data-derived don't-cares ----
+    let observed: Option<Vec<Vec<Vec<bool>>>> = if config.dc_from_data {
+        let xs = dc_traces.ok_or("dc_from_data requires training inputs")?;
+        Some(timer.time("observe", || {
+            let traces: Vec<Trace> = xs
+                .iter()
+                .map(|x| forward_codes(model, &quantize_input(model, x)))
+                .collect();
+            (0..model.layers.len())
+                .map(|l| observed_patterns(model, l, &traces))
+                .collect()
+        }))
+    } else {
+        None
+    };
+
+    // ---- per-neuron synthesis (parallel) ----
+    let jobs: Vec<(usize, usize)> = model
+        .layers
+        .iter()
+        .enumerate()
+        .flat_map(|(l, layer)| (0..layer.out_width).map(move |n| (l, n)))
+        .collect();
+    let neurons = jobs.len();
+    let model_arc = Arc::new(model.clone());
+    let observed_arc = Arc::new(observed);
+    let use_espresso = config.use_espresso;
+    let synthesized: Vec<SynthesizedNeuron> = timer.time("enumerate+espresso", || {
+        let pool = ThreadPool::new(config.jobs);
+        let model = Arc::clone(&model_arc);
+        let obs = Arc::clone(&observed_arc);
+        pool.par_map(jobs, move |(l, n)| {
+            let o = obs.as_ref().as_ref().map(|per_layer| per_layer[l][n].as_slice());
+            synthesize_neuron(&model, l, n, o, use_espresso)
+        })
+    });
+
+    if config.verify {
+        timer.time("verify-covers", || -> Result<(), String> {
+            for s in &synthesized {
+                verify_neuron(s)?;
+            }
+            Ok(())
+        })?;
+    }
+
+    // ---- per-layer AIG + mapping ----
+    let map_cfg = MapConfig {
+        k: config.lut_k,
+        sort_by_area: config.map_for_area,
+        ..Default::default()
+    };
+    let mut layer_netlists: Vec<LutNetlist> = Vec::with_capacity(model.layers.len());
+    timer.time("aig+map", || {
+        for (l, layer) in model.layers.iter().enumerate() {
+            let in_bits_per = model.in_quant_of_layer(l).bits;
+            let out_bits_per = layer.act.bits;
+            let num_in_bits = layer.in_width * in_bits_per;
+            let mut aig = Aig::new();
+            let input_lits: Vec<_> = (0..num_in_bits).map(|_| aig.add_input()).collect();
+            let mut out_lits = vec![0u32; layer.out_width * out_bits_per];
+            for s in synthesized.iter().filter(|s| s.layer == l) {
+                // Map cover variable i·in_bits_per + b → global input bit
+                // mask[i]·in_bits_per + b.
+                let mask = &layer.mask[s.neuron];
+                let var_lits: Vec<_> = mask
+                    .iter()
+                    .flat_map(|&src| {
+                        (0..in_bits_per).map(move |b| src * in_bits_per + b)
+                    })
+                    .map(|w| input_lits[w])
+                    .collect();
+                for (b, cover) in s.covers.iter().enumerate() {
+                    // Hybrid synthesis: a minimized SOP is the right
+                    // structure for the simple functions trained, pruned
+                    // neurons compute (few cubes after ESPRESSO), but dense
+                    // functions are cheaper as a Shannon mux tree over the
+                    // raw table (the LogicNets bound). Estimate mapped LUTs
+                    // for both and take the smaller: an SOP maps to roughly
+                    // one LUT per cube plus an OR tree (×6/5), a mux tree to
+                    // `lut_cost_per_bit` exactly.
+                    let sop_lut_est = cover.len() * 6 / 5;
+                    let mux_luts = crate::baseline::logicnets::lut_cost_per_bit(
+                        cover.nvars(),
+                        config.lut_k,
+                    );
+                    let lit = if cover.nvars() <= config.lut_k || sop_lut_est <= mux_luts
+                    {
+                        aig.from_cover(cover, &var_lits)
+                    } else {
+                        mux_tree(&mut aig, &s.on[b], &var_lits)
+                    };
+                    out_lits[s.neuron * out_bits_per + b] = lit;
+                }
+            }
+            for lit in out_lits {
+                aig.add_output(lit);
+            }
+            let mapped = map_aig(&aig.sweep(), &map_cfg);
+            layer_netlists.push(mapped.netlist);
+        }
+    });
+
+    // ---- stitch layers into one pipelined circuit ----
+    let (flat, stages) = timer.time("stitch", || stitch_layers(model, &layer_netlists));
+    let circuit_preretime = PipelinedCircuit {
+        netlist: flat,
+        stage_of_lut: stages,
+        num_stages: model.layers.len() as u32,
+    };
+    circuit_preretime.check_stages().map_err(|e| format!("stitch: {e}"))?;
+
+    // ---- retime ----
+    let circuit = if config.retime {
+        timer.time("retime", || retime_min_period(&circuit_preretime).0)
+    } else {
+        circuit_preretime.clone()
+    };
+
+    // ---- verification against the quantized NN ----
+    if config.verify {
+        timer.time("verify-circuit", || verify_circuit(model, &circuit, 512, 0xC0DE))?;
+    }
+
+    let total_cubes_before = synthesized.iter().map(|s| s.cubes_before).sum();
+    let total_cubes_after = synthesized.iter().map(|s| s.cubes_after).sum();
+    Ok(FlowResult {
+        circuit,
+        circuit_preretime,
+        total_cubes_before,
+        total_cubes_after,
+        timer,
+        neurons,
+    })
+}
+
+/// Shannon mux-tree construction of a dense table over `var_lits` (the
+/// fallback arm of hybrid synthesis). Memoized on sub-table equality so
+/// shared cofactors collapse; structural hashing inside the AIG dedupes the
+/// rest.
+fn mux_tree(
+    aig: &mut Aig,
+    table: &crate::logic::truthtable::TruthTable,
+    var_lits: &[u32],
+) -> u32 {
+    use crate::logic::truthtable::TruthTable;
+    use std::collections::HashMap;
+    fn rec(
+        aig: &mut Aig,
+        t: &TruthTable,
+        lits: &[u32],
+        memo: &mut HashMap<TruthTable, u32>,
+    ) -> u32 {
+        if t.is_zero() {
+            return crate::logic::aig::LIT_FALSE;
+        }
+        if t.is_ones() {
+            return crate::logic::aig::LIT_TRUE;
+        }
+        if let Some(&l) = memo.get(t) {
+            return l;
+        }
+        let top = t.nvars() - 1;
+        let (c0, c1) = t.cofactors(top);
+        // Restrict away the (now-irrelevant) top variable (word-level).
+        let c0r = c0.shrink_top();
+        let c1r = c1.shrink_top();
+        let lo = rec(aig, &c0r, &lits[..top], memo);
+        let hi = rec(aig, &c1r, &lits[..top], memo);
+        let out = aig.mux(lits[top], hi, lo);
+        memo.insert(t.clone(), out);
+        out
+    }
+    let mut memo = HashMap::new();
+    rec(aig, table, var_lits, &mut memo)
+}
+
+/// Combine per-layer netlists into one flat netlist with a stage per layer.
+/// Inverted inter-layer signals are absorbed into consumer LUT tables.
+fn stitch_layers(model: &Model, layers: &[LutNetlist]) -> (LutNetlist, Vec<u32>) {
+    let mut flat = LutNetlist::new(model.input_bits());
+    let mut stages: Vec<u32> = Vec::new();
+    // wire map: current layer's input wire -> (flat signal, inverted)
+    let mut wires: Vec<(Sig, bool)> = (0..model.input_bits())
+        .map(|i| (Sig::Input(i as u32), false))
+        .collect();
+
+    for (l, nl) in layers.iter().enumerate() {
+        assert_eq!(nl.num_inputs, wires.len(), "layer {l} input width mismatch");
+        // local LUT index -> flat signal (with inversion always false: we
+        // rewrite tables instead)
+        let mut local: Vec<Sig> = Vec::with_capacity(nl.luts.len());
+        for lut in &nl.luts {
+            let mut table = lut.table.clone();
+            let mut inputs: Vec<Sig> = Vec::with_capacity(lut.inputs.len());
+            for (v, s) in lut.inputs.iter().enumerate() {
+                let (sig, inv) = match s {
+                    Sig::Input(w) => wires[*w as usize],
+                    Sig::Lut(j) => (local[*j as usize], false),
+                    Sig::Const(b) => (Sig::Const(*b), false),
+                };
+                if inv {
+                    table = table.invert_var(v);
+                }
+                inputs.push(sig);
+            }
+            let sig = flat.add_lut(inputs, table);
+            local.push(sig);
+            stages.push(l as u32);
+        }
+        // next layer's wires = this layer's outputs
+        wires = nl
+            .outputs
+            .iter()
+            .map(|(s, inv)| match s {
+                Sig::Input(w) => {
+                    let (sig, winv) = wires[*w as usize];
+                    (sig, winv ^ inv)
+                }
+                Sig::Lut(j) => (local[*j as usize], *inv),
+                Sig::Const(b) => (Sig::Const(*b), *inv),
+            })
+            .collect();
+    }
+    for (sig, inv) in wires {
+        flat.add_output(sig, inv);
+    }
+    (flat, stages)
+}
+
+/// Sample `n` random feature vectors; check the circuit's output codes match
+/// the exact integer NN on every one.
+pub fn verify_circuit(
+    model: &Model,
+    circuit: &PipelinedCircuit,
+    n: usize,
+    seed: u64,
+) -> Result<(), String> {
+    use crate::util::prng::Xoshiro256;
+    let mut rng = Xoshiro256::new(seed);
+    let mut sim = crate::logic::sim::CompiledNetlist::compile(&circuit.netlist);
+    let out_bits_per = model.layers.last().unwrap().act.bits;
+    for i in 0..n {
+        let x: Vec<f64> = (0..model.input_features)
+            .map(|_| 3.0 * rng.next_gaussian())
+            .collect();
+        let in_codes = quantize_input(model, &x);
+        let tr = forward_codes(model, &in_codes);
+        let want = tr.codes.last().unwrap();
+        let in_bits = codes_to_bits(&in_codes, model.input_quant.bits);
+        let got_bits = sim.run_batch(&[in_bits]).pop().unwrap();
+        let got = bits_to_codes(&got_bits, out_bits_per);
+        if &got != want {
+            return Err(format!(
+                "circuit mismatch on sample {i}: got {got:?}, want {want:?}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Classify a batch of feature vectors with the logic circuit; returns
+/// predictions (used by accuracy evaluation and the serving engine).
+pub fn classify_batch(
+    model: &Model,
+    sim: &mut crate::logic::sim::CompiledNetlist,
+    xs: &[Vec<f64>],
+) -> Vec<usize> {
+    let in_b = model.input_quant.bits;
+    let out_b = model.layers.last().unwrap().act.bits;
+    let samples: Vec<Vec<bool>> = xs
+        .iter()
+        .map(|x| codes_to_bits(&quantize_input(model, x), in_b))
+        .collect();
+    let outs = sim.run_batch(&samples);
+    outs.iter()
+        .map(|bits| {
+            let codes = bits_to_codes(bits, out_b);
+            crate::nn::eval::classify_codes(model, &codes)
+        })
+        .collect()
+}
+
+/// Accuracy of the circuit on a labelled dataset.
+pub fn circuit_accuracy(
+    model: &Model,
+    circuit: &PipelinedCircuit,
+    xs: &[Vec<f64>],
+    ys: &[usize],
+) -> f64 {
+    let mut sim = crate::logic::sim::CompiledNetlist::compile(&circuit.netlist);
+    let preds = classify_batch(model, &mut sim, xs);
+    let correct = preds.iter().zip(ys).filter(|(p, y)| p == y).count();
+    correct as f64 / ys.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::random_model;
+
+    fn tiny_model(seed: u64) -> Model {
+        random_model("tiny", 5, &[4, 3], 2, 1, seed)
+    }
+
+    #[test]
+    fn flow_produces_verified_circuit() {
+        let m = tiny_model(42);
+        let cfg = FlowConfig { jobs: 2, ..Default::default() };
+        let r = run_flow(&m, &cfg, None).unwrap();
+        assert!(r.circuit.netlist.num_luts() > 0);
+        assert_eq!(r.circuit.num_stages, 2);
+        assert!(r.circuit.check_stages().is_ok());
+        assert_eq!(r.neurons, 7);
+        // Exhaustive over all 2^5 input-bit patterns (5 features × 1 bit).
+        let mut sim = crate::logic::sim::CompiledNetlist::compile(&r.circuit.netlist);
+        for m_bits in 0..1u64 << 5 {
+            let in_codes: Vec<usize> =
+                (0..5).map(|i| ((m_bits >> i) & 1) as usize).collect();
+            let tr = forward_codes(&m, &in_codes);
+            let want = tr.codes.last().unwrap();
+            let in_bools: Vec<bool> = (0..5).map(|i| (m_bits >> i) & 1 == 1).collect();
+            let got_bits = sim.run_batch(&[in_bools]).pop().unwrap();
+            let got = bits_to_codes(&got_bits, m.layers[1].act.bits);
+            assert_eq!(&got, want, "m_bits={m_bits}");
+        }
+    }
+
+    #[test]
+    fn retime_does_not_change_function() {
+        let m = tiny_model(7);
+        let base = FlowConfig { retime: false, jobs: 1, ..Default::default() };
+        let rt = FlowConfig { retime: true, jobs: 1, ..Default::default() };
+        let a = run_flow(&m, &base, None).unwrap();
+        let b = run_flow(&m, &rt, None).unwrap();
+        // same netlist function; retimed depth ≤ original
+        assert!(
+            b.circuit.stats().max_stage_depth <= a.circuit.stats().max_stage_depth
+        );
+        for bits in 0..32u64 {
+            assert_eq!(a.circuit.eval(bits), b.circuit.eval(bits));
+        }
+    }
+
+    #[test]
+    fn espresso_reduces_or_matches_luts() {
+        let m = random_model("cmp", 6, &[5, 3], 3, 2, 99);
+        let with = FlowConfig { use_espresso: true, jobs: 1, ..Default::default() };
+        let without = FlowConfig { use_espresso: false, jobs: 1, ..Default::default() };
+        let a = run_flow(&m, &with, None).unwrap();
+        let b = run_flow(&m, &without, None).unwrap();
+        assert!(a.total_cubes_after <= b.total_cubes_after);
+        // LUT count usually improves; must never be dramatically worse.
+        assert!(
+            a.circuit.netlist.num_luts() <= b.circuit.netlist.num_luts() + 2,
+            "espresso {} vs isop {}",
+            a.circuit.netlist.num_luts(),
+            b.circuit.netlist.num_luts()
+        );
+    }
+
+    #[test]
+    fn dc_from_data_flow_stays_consistent_on_observed_inputs() {
+        let m = tiny_model(3);
+        let xs: Vec<Vec<f64>> = (0..40)
+            .map(|i| (0..5).map(|j| ((i * 3 + j) as f64 * 0.7).sin()).collect())
+            .collect();
+        let cfg = FlowConfig { dc_from_data: true, verify: false, jobs: 1, ..Default::default() };
+        let r = run_flow(&m, &cfg, Some(&xs)).unwrap();
+        // On the observed inputs the circuit must match the NN exactly
+        // (DCs only free unobserved patterns).
+        let mut sim = crate::logic::sim::CompiledNetlist::compile(&r.circuit.netlist);
+        for x in &xs {
+            let in_codes = quantize_input(&m, x);
+            let tr = forward_codes(&m, &in_codes);
+            let want = tr.codes.last().unwrap();
+            let bits = codes_to_bits(&in_codes, m.input_quant.bits);
+            let got_bits = sim.run_batch(&[bits]).pop().unwrap();
+            let got = bits_to_codes(&got_bits, m.layers[1].act.bits);
+            assert_eq!(&got, want);
+        }
+    }
+
+    #[test]
+    fn circuit_accuracy_matches_nn_accuracy() {
+        let m = tiny_model(11);
+        let cfg = FlowConfig { jobs: 1, ..Default::default() };
+        let r = run_flow(&m, &cfg, None).unwrap();
+        let xs: Vec<Vec<f64>> = (0..60)
+            .map(|i| (0..5).map(|j| ((i + j) as f64 * 0.31).cos()).collect())
+            .collect();
+        let ys: Vec<usize> = xs.iter().map(|x| crate::nn::eval::classify(&m, x)).collect();
+        // Logic is bit-exact ⇒ same predictions ⇒ 100% agreement.
+        assert_eq!(circuit_accuracy(&m, &r.circuit, &xs, &ys), 1.0);
+    }
+
+    #[test]
+    fn stage_log_has_expected_stages() {
+        let m = tiny_model(5);
+        let r = run_flow(&m, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+        let stages = r.timer.stages().to_vec();
+        assert!(stages.iter().any(|s| s.contains("espresso")));
+        assert!(stages.iter().any(|s| s == "aig+map"));
+        assert!(stages.iter().any(|s| s == "stitch"));
+        assert!(stages.iter().any(|s| s == "retime"));
+    }
+}

@@ -1,0 +1,54 @@
+//! Flow configuration.
+
+/// Options controlling the NullaNet Tiny synthesis flow. Every switch maps
+/// to an ablation bench (DESIGN.md §6 A1/A3).
+#[derive(Clone, Copy, Debug)]
+pub struct FlowConfig {
+    /// LUT input count of the target fabric (VU9P: 6).
+    pub lut_k: usize,
+    /// Run ESPRESSO-II two-level minimization (off → raw ISOP covers, the
+    /// "no-espresso" ablation).
+    pub use_espresso: bool,
+    /// Run min-period retiming after mapping.
+    pub retime: bool,
+    /// Derive don't-cares from observed training activations (original
+    /// NullaNet mode; NullaNet Tiny enumerates fully).
+    pub dc_from_data: bool,
+    /// Worker threads for per-neuron synthesis.
+    pub jobs: usize,
+    /// Area-oriented (instead of depth-oriented) LUT mapping.
+    pub map_for_area: bool,
+    /// Verify every neuron cone exhaustively and the full circuit by
+    /// sampling after synthesis.
+    pub verify: bool,
+}
+
+impl Default for FlowConfig {
+    fn default() -> Self {
+        FlowConfig {
+            lut_k: 6,
+            use_espresso: true,
+            retime: true,
+            dc_from_data: false,
+            jobs: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            map_for_area: false,
+            verify: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_flow() {
+        let c = FlowConfig::default();
+        assert_eq!(c.lut_k, 6);
+        assert!(c.use_espresso);
+        assert!(c.retime);
+        assert!(!c.dc_from_data);
+        assert!(c.verify);
+        assert!(c.jobs >= 1);
+    }
+}

@@ -1,0 +1,13 @@
+//! The NullaNet Tiny flow: quantized model → fixed-function combinational
+//! logic (Fig. 1 of the paper).
+//!
+//! * [`config`] — flow switches (every one has an ablation bench)
+//! * [`synth`] — per-neuron enumeration + ESPRESSO
+//! * [`build`] — layer AIGs, LUT mapping, stitching, retiming, verification
+
+pub mod build;
+pub mod config;
+pub mod synth;
+
+pub use build::{circuit_accuracy, run_flow, FlowResult};
+pub use config::FlowConfig;

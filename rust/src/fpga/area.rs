@@ -1,0 +1,69 @@
+//! Device area / utilization model.
+//!
+//! Capacity numbers for the Xilinx VU9P (the paper's target part) and
+//! utilization computation for mapped circuits.
+
+use crate::logic::netlist::CircuitStats;
+
+/// FPGA device capacity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Device {
+    /// Human name.
+    pub name: &'static str,
+    /// 6-input LUTs.
+    pub luts: usize,
+    /// Flip-flops.
+    pub ffs: usize,
+}
+
+impl Device {
+    /// Xilinx Virtex UltraScale+ VU9P.
+    pub fn vu9p() -> Device {
+        Device { name: "xcvu9p", luts: 1_182_240, ffs: 2_364_480 }
+    }
+
+    /// Utilization fractions (LUT, FF) of a circuit on this device.
+    pub fn utilization(&self, stats: &CircuitStats) -> (f64, f64) {
+        (
+            stats.luts as f64 / self.luts as f64,
+            stats.ffs as f64 / self.ffs as f64,
+        )
+    }
+
+    /// Does the circuit fit?
+    pub fn fits(&self, stats: &CircuitStats) -> bool {
+        stats.luts <= self.luts && stats.ffs <= self.ffs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(luts: usize, ffs: usize) -> CircuitStats {
+        CircuitStats { luts, ffs, max_stage_depth: 1, latency_cycles: 1 }
+    }
+
+    #[test]
+    fn vu9p_capacity() {
+        let d = Device::vu9p();
+        assert!(d.luts > 1_000_000);
+        assert_eq!(d.ffs, 2 * d.luts);
+    }
+
+    #[test]
+    fn utilization_fractions() {
+        let d = Device::vu9p();
+        let (lu, fu) = d.utilization(&stats(d.luts / 2, d.ffs / 4));
+        assert!((lu - 0.5).abs() < 1e-9);
+        assert!((fu - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fits_boundary() {
+        let d = Device::vu9p();
+        assert!(d.fits(&stats(d.luts, d.ffs)));
+        assert!(!d.fits(&stats(d.luts + 1, 0)));
+        assert!(!d.fits(&stats(0, d.ffs + 1)));
+    }
+}

@@ -1,0 +1,9 @@
+//! FPGA cost model (the Vivado place-and-route substitute, DESIGN.md §4/§9).
+//!
+//! * [`timing`] — VU9P-calibrated clock model: fmax from pipeline stage depth
+//! * [`area`] — LUT/FF utilization against device capacity
+//! * [`report`] — Table-I row assembly and formatting
+
+pub mod area;
+pub mod report;
+pub mod timing;

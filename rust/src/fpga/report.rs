@@ -1,0 +1,132 @@
+//! Table-I style result rows: accuracy + hardware metrics + comparison
+//! factors against a baseline (the paper reports `(Inc.)`/`(Dec.)` factors
+//! relative to LogicNets).
+
+use crate::fpga::timing::TimingModel;
+use crate::logic::netlist::CircuitStats;
+
+/// One architecture's results (a Table I row).
+#[derive(Clone, Debug)]
+pub struct ResultRow {
+    /// Architecture name ("JSC-S", …).
+    pub arch: String,
+    /// Classification accuracy in [0,1] (logic netlist on the test set).
+    pub accuracy: f64,
+    /// Hardware statistics of the final retimed circuit.
+    pub stats: CircuitStats,
+    /// Modeled fmax (MHz).
+    pub fmax_mhz: f64,
+    /// Modeled end-to-end latency (ns).
+    pub latency_ns: f64,
+}
+
+impl ResultRow {
+    /// Assemble from circuit stats + timing model.
+    pub fn from_stats(arch: &str, accuracy: f64, stats: CircuitStats, tm: &TimingModel) -> Self {
+        ResultRow {
+            arch: arch.to_string(),
+            accuracy,
+            stats,
+            fmax_mhz: tm.fmax_mhz(stats.max_stage_depth),
+            latency_ns: tm.latency_ns(stats.latency_cycles, stats.max_stage_depth),
+        }
+    }
+}
+
+/// Comparison of our row vs a baseline row (factors as the paper prints
+/// them: LUT/FF decrease factors, fmax increase factor, accuracy delta).
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    pub ours: ResultRow,
+    pub baseline: ResultRow,
+}
+
+impl Comparison {
+    /// Accuracy increase in percentage points.
+    pub fn accuracy_delta_pp(&self) -> f64 {
+        (self.ours.accuracy - self.baseline.accuracy) * 100.0
+    }
+
+    /// Baseline LUTs / our LUTs (the "(Dec.)" factor — higher is better).
+    pub fn lut_decrease(&self) -> f64 {
+        self.baseline.stats.luts as f64 / self.ours.stats.luts.max(1) as f64
+    }
+
+    /// FF decrease factor.
+    pub fn ff_decrease(&self) -> f64 {
+        self.baseline.stats.ffs as f64 / self.ours.stats.ffs.max(1) as f64
+    }
+
+    /// fmax increase factor.
+    pub fn fmax_increase(&self) -> f64 {
+        self.ours.fmax_mhz / self.baseline.fmax_mhz
+    }
+
+    /// Latency decrease factor (headline metric).
+    pub fn latency_decrease(&self) -> f64 {
+        self.baseline.latency_ns / self.ours.latency_ns
+    }
+}
+
+/// Render rows in the paper's Table-I layout.
+pub fn format_table(rows: &[Comparison]) -> String {
+    let mut s = String::new();
+    s.push_str(
+        "| Arch  | Accuracy (Inc.)   | LUTs (Dec.)      | FFs (Dec.)     | fmax (Inc.)        | Latency (Dec.)   |\n",
+    );
+    s.push_str(
+        "|-------|-------------------|------------------|----------------|--------------------|------------------|\n",
+    );
+    for c in rows {
+        s.push_str(&format!(
+            "| {:<5} | {:>6.2}% ({:+.2}pp)  | {:>6} ({:.2}x)   | {:>5} ({:.2}x)  | {:>7.0} MHz ({:.2}x) | {:>7.2} ns ({:.2}x) |\n",
+            c.ours.arch,
+            c.ours.accuracy * 100.0,
+            c.accuracy_delta_pp(),
+            c.ours.stats.luts,
+            c.lut_decrease(),
+            c.ours.stats.ffs,
+            c.ff_decrease(),
+            c.ours.fmax_mhz,
+            c.fmax_increase(),
+            c.ours.latency_ns,
+            c.latency_decrease(),
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(arch: &str, acc: f64, luts: usize, ffs: usize, depth: u32, cycles: u32) -> ResultRow {
+        let stats = CircuitStats { luts, ffs, max_stage_depth: depth, latency_cycles: cycles };
+        ResultRow::from_stats(arch, acc, stats, &TimingModel::vu9p())
+    }
+
+    #[test]
+    fn factors() {
+        let c = Comparison {
+            ours: row("JSC-S", 0.6965, 39, 75, 1, 4),
+            baseline: row("JSC-S", 0.678, 214, 247, 3, 4),
+        };
+        assert!((c.accuracy_delta_pp() - 1.85).abs() < 0.01);
+        assert!((c.lut_decrease() - 214.0 / 39.0).abs() < 1e-9);
+        assert!(c.fmax_increase() > 1.0);
+        assert!(c.latency_decrease() > 1.0);
+    }
+
+    #[test]
+    fn table_formatting() {
+        let c = Comparison {
+            ours: row("JSC-M", 0.7222, 1553, 151, 3, 5),
+            baseline: row("JSC-M", 0.7049, 14428, 440, 4, 5),
+        };
+        let t = format_table(&[c]);
+        assert!(t.contains("JSC-M"));
+        assert!(t.contains("1553"));
+        assert!(t.contains("MHz"));
+        assert!(t.lines().count() >= 3);
+    }
+}

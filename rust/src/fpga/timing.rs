@@ -1,0 +1,110 @@
+//! VU9P-class timing model.
+//!
+//! The paper reports post-implementation fmax from Vivado on a Xilinx VU9P
+//! (and notes some frequencies exceed what the device can realize — they are
+//! synthesis-reported maxima). Without Vivado we model the clock period of a
+//! pipeline stage with `ℓ` LUT levels as
+//!
+//! ```text
+//! T(ℓ) = t_clk2q + ℓ·(t_lut + t_net) + t_setup
+//! ```
+//!
+//! with UltraScale+ -3 speed-grade constants (CLB LUT delay ≈ 0.10–0.15 ns,
+//! typical net ≈ 0.15–0.30 ns). The defaults below are calibrated so a
+//! 1-level pipeline lands at ≈ 2.1 GHz — the band Table I's JSC-S (2,079
+//! MHz) sits in — and deeper stages degrade the way the paper's M/L rows do.
+//! All constants are plain fields: benches sweep them, EXPERIMENTS.md
+//! records the values used.
+
+/// Per-element delays in nanoseconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TimingModel {
+    /// Register clock-to-Q.
+    pub t_clk2q_ns: f64,
+    /// One 6-LUT logic delay.
+    pub t_lut_ns: f64,
+    /// Average routing delay per LUT level.
+    pub t_net_ns: f64,
+    /// Register setup time.
+    pub t_setup_ns: f64,
+}
+
+impl Default for TimingModel {
+    fn default() -> Self {
+        Self::vu9p()
+    }
+}
+
+impl TimingModel {
+    /// VU9P -3 speed grade calibration (DESIGN.md §9).
+    pub fn vu9p() -> TimingModel {
+        TimingModel {
+            t_clk2q_ns: 0.10,
+            t_lut_ns: 0.12,
+            t_net_ns: 0.20,
+            t_setup_ns: 0.06,
+        }
+    }
+
+    /// Clock period for a stage with `levels` LUT levels.
+    pub fn period_ns(&self, levels: u32) -> f64 {
+        self.t_clk2q_ns + levels as f64 * (self.t_lut_ns + self.t_net_ns) + self.t_setup_ns
+    }
+
+    /// Maximum frequency in MHz for the given worst-stage depth.
+    pub fn fmax_mhz(&self, worst_stage_levels: u32) -> f64 {
+        1e3 / self.period_ns(worst_stage_levels.max(1))
+    }
+
+    /// End-to-end latency in nanoseconds for a pipeline of `stages` stages
+    /// whose worst stage has `worst_stage_levels` levels: the pipeline runs
+    /// at fmax, data needs `stages + 1` edges (input reg → … → output reg).
+    pub fn latency_ns(&self, stages: u32, worst_stage_levels: u32) -> f64 {
+        (stages as f64 + 1.0) * self.period_ns(worst_stage_levels.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmax_monotone_in_depth() {
+        let t = TimingModel::vu9p();
+        let f1 = t.fmax_mhz(1);
+        let f2 = t.fmax_mhz(2);
+        let f8 = t.fmax_mhz(8);
+        assert!(f1 > f2 && f2 > f8);
+    }
+
+    #[test]
+    fn one_level_lands_in_jsc_s_band() {
+        // Table I: JSC-S reaches 2,079 MHz; a 1-level stage must land
+        // within ±15% of that band.
+        let f = TimingModel::vu9p().fmax_mhz(1);
+        assert!((1700.0..2500.0).contains(&f), "fmax(1) = {f} MHz");
+    }
+
+    #[test]
+    fn deeper_stages_land_in_m_l_band() {
+        // JSC-M: 841 MHz ≈ 3 levels; JSC-L: 436 MHz ≈ 6–7 levels.
+        let t = TimingModel::vu9p();
+        let f3 = t.fmax_mhz(3);
+        assert!((600.0..1100.0).contains(&f3), "fmax(3) = {f3} MHz");
+        let f7 = t.fmax_mhz(7);
+        assert!((300.0..600.0).contains(&f7), "fmax(7) = {f7} MHz");
+    }
+
+    #[test]
+    fn latency_accounts_for_all_stages() {
+        let t = TimingModel::vu9p();
+        let l = t.latency_ns(3, 2);
+        assert!((l - 4.0 * t.period_ns(2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_level_clamped() {
+        let t = TimingModel::vu9p();
+        assert_eq!(t.fmax_mhz(0), t.fmax_mhz(1));
+    }
+}

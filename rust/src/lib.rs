@@ -1,0 +1,32 @@
+//! # NullaNet Tiny — ultra-low-latency DNN inference through fixed-function
+//! combinational logic
+//!
+//! A production-oriented reproduction of *NullaNet Tiny* (Nazemi et al.,
+//! 2021): quantized, fanin-constrained neural networks are converted —
+//! neuron by neuron — into optimized Boolean logic mapped onto FPGA-style
+//! 6-LUTs, eliminating multiply-accumulate arithmetic entirely.
+//!
+//! The crate is layer 3 of a three-layer stack:
+//!
+//! * **L1/L2 (build-time Python, `python/`)** — Pallas kernel + JAX model:
+//!   quantization-aware training with per-layer activation selection and
+//!   fanin-constrained pruning; AOT-lowered to HLO text artifacts.
+//! * **L3 (this crate)** — loads the trained model, runs the
+//!   enumerate → ESPRESSO-II → AIG → LUT-map → retime pipeline, verifies
+//!   bit-exactness against the quantized network, evaluates FPGA cost
+//!   (LUTs/FFs/fmax), and serves inference from either the combinational
+//!   netlist (bit-parallel simulator) or the PJRT numeric engine.
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod baseline;
+pub mod coordinator;
+pub mod data;
+pub mod flow;
+pub mod fpga;
+pub mod logic;
+
+pub mod nn;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,478 @@
+//! And-inverter graphs with structural hashing.
+//!
+//! The multi-level optimization substrate (the role Vivado's synthesis
+//! engine plays in the paper). Minimized SOPs from ESPRESSO are factored
+//! into balanced AND/OR trees over an AIG; structural hashing, constant
+//! propagation, and two-level local rules (`a∧a = a`, `a∧¬a = 0`) remove
+//! redundant structure across neuron boundaries *for free* — two neurons
+//! that compute the same subfunction share nodes, which is one source of the
+//! paper's LUT reductions vs LogicNets.
+//!
+//! Literals are `2·node + inverted` (`lit 0` = constant false, `lit 1` =
+//! constant true, node 0 is reserved for the constant).
+
+use std::collections::HashMap;
+
+use crate::logic::cube::{Cover, Pol};
+
+/// An AIG literal: node index shifted left once, LSB = inversion flag.
+pub type Lit = u32;
+
+/// Constant false literal.
+pub const LIT_FALSE: Lit = 0;
+/// Constant true literal.
+pub const LIT_TRUE: Lit = 1;
+
+/// Complement a literal.
+#[inline]
+pub fn lit_not(l: Lit) -> Lit {
+    l ^ 1
+}
+
+/// Node index of a literal.
+#[inline]
+pub fn lit_node(l: Lit) -> usize {
+    (l >> 1) as usize
+}
+
+/// Is the literal inverted?
+#[inline]
+pub fn lit_inv(l: Lit) -> bool {
+    l & 1 == 1
+}
+
+/// One AIG node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Node {
+    /// The constant-false node (index 0 only).
+    Const,
+    /// Primary input with an external index.
+    Input(u32),
+    /// Two-input AND of literals (canonical order: `a ≤ b`).
+    And(Lit, Lit),
+}
+
+/// And-inverter graph with structural hashing and multiple outputs.
+#[derive(Clone, Debug)]
+pub struct Aig {
+    nodes: Vec<Node>,
+    strash: HashMap<(Lit, Lit), Lit>,
+    outputs: Vec<Lit>,
+    num_inputs: u32,
+}
+
+impl Default for Aig {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Aig {
+    /// Empty graph (just the constant node).
+    pub fn new() -> Aig {
+        Aig {
+            nodes: vec![Node::Const],
+            strash: HashMap::new(),
+            outputs: Vec::new(),
+            num_inputs: 0,
+        }
+    }
+
+    /// Add a primary input; returns its literal.
+    pub fn add_input(&mut self) -> Lit {
+        let idx = self.num_inputs;
+        self.num_inputs += 1;
+        self.nodes.push(Node::Input(idx));
+        ((self.nodes.len() - 1) as u32) << 1
+    }
+
+    /// Number of primary inputs.
+    pub fn num_inputs(&self) -> u32 {
+        self.num_inputs
+    }
+
+    /// Number of nodes (including constant and inputs).
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Number of AND nodes (the size metric optimizers report).
+    pub fn num_ands(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, Node::And(..))).count()
+    }
+
+    /// Node accessor.
+    pub fn node(&self, i: usize) -> Node {
+        self.nodes[i]
+    }
+
+    /// Register an output literal; returns its output index.
+    pub fn add_output(&mut self, l: Lit) -> usize {
+        self.outputs.push(l);
+        self.outputs.len() - 1
+    }
+
+    /// Output literals.
+    pub fn outputs(&self) -> &[Lit] {
+        &self.outputs
+    }
+
+    /// AND with structural hashing and local simplification.
+    pub fn and(&mut self, a: Lit, b: Lit) -> Lit {
+        // Constant / trivial rules.
+        if a == LIT_FALSE || b == LIT_FALSE {
+            return LIT_FALSE;
+        }
+        if a == LIT_TRUE {
+            return b;
+        }
+        if b == LIT_TRUE {
+            return a;
+        }
+        if a == b {
+            return a;
+        }
+        if a == lit_not(b) {
+            return LIT_FALSE;
+        }
+        let (a, b) = if a <= b { (a, b) } else { (b, a) };
+        if let Some(&l) = self.strash.get(&(a, b)) {
+            return l;
+        }
+        self.nodes.push(Node::And(a, b));
+        let l = ((self.nodes.len() - 1) as u32) << 1;
+        self.strash.insert((a, b), l);
+        l
+    }
+
+    /// OR via De Morgan.
+    pub fn or(&mut self, a: Lit, b: Lit) -> Lit {
+        let n = self.and(lit_not(a), lit_not(b));
+        lit_not(n)
+    }
+
+    /// XOR (three ANDs after strashing).
+    pub fn xor(&mut self, a: Lit, b: Lit) -> Lit {
+        let n_ab = self.and(a, lit_not(b));
+        let n_ba = self.and(lit_not(a), b);
+        self.or(n_ab, n_ba)
+    }
+
+    /// 2:1 multiplexer `s ? t : e`.
+    pub fn mux(&mut self, s: Lit, t: Lit, e: Lit) -> Lit {
+        let a = self.and(s, t);
+        let b = self.and(lit_not(s), e);
+        self.or(a, b)
+    }
+
+    /// Balanced AND over many literals (logic depth ⌈log₂ n⌉).
+    pub fn and_many(&mut self, lits: &[Lit]) -> Lit {
+        self.tree(lits, true)
+    }
+
+    /// Balanced OR over many literals.
+    pub fn or_many(&mut self, lits: &[Lit]) -> Lit {
+        self.tree(lits, false)
+    }
+
+    fn tree(&mut self, lits: &[Lit], is_and: bool) -> Lit {
+        match lits.len() {
+            0 => {
+                if is_and {
+                    LIT_TRUE
+                } else {
+                    LIT_FALSE
+                }
+            }
+            1 => lits[0],
+            n => {
+                let (lo, hi) = lits.split_at(n / 2);
+                let a = self.tree(lo, is_and);
+                let b = self.tree(hi, is_and);
+                if is_and {
+                    self.and(a, b)
+                } else {
+                    self.or(a, b)
+                }
+            }
+        }
+    }
+
+    /// Build the literal computing SOP `cover` over `input_lits` (one literal
+    /// per cover variable). This is how ESPRESSO results enter the AIG.
+    pub fn from_cover(&mut self, cover: &Cover, input_lits: &[Lit]) -> Lit {
+        assert_eq!(cover.nvars(), input_lits.len());
+        let mut terms = Vec::with_capacity(cover.len());
+        for cube in &cover.cubes {
+            let mut lits = Vec::new();
+            for (v, &il) in input_lits.iter().enumerate() {
+                match cube.get(v) {
+                    Pol::One => lits.push(il),
+                    Pol::Zero => lits.push(lit_not(il)),
+                    Pol::DC => {}
+                    Pol::Empty => return LIT_FALSE,
+                }
+            }
+            terms.push(self.and_many(&lits));
+        }
+        self.or_many(&terms)
+    }
+
+    /// Logic level of every node (inputs/const at level 0).
+    pub fn levels(&self) -> Vec<u32> {
+        let mut lv = vec![0u32; self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            if let Node::And(a, b) = n {
+                lv[i] = 1 + lv[lit_node(*a)].max(lv[lit_node(*b)]);
+            }
+        }
+        lv
+    }
+
+    /// Depth of the graph at its outputs.
+    pub fn depth(&self) -> u32 {
+        let lv = self.levels();
+        self.outputs.iter().map(|&o| lv[lit_node(o)]).max().unwrap_or(0)
+    }
+
+    /// 64-way bit-parallel simulation: `input_words[i]` carries 64 samples
+    /// of input `i`; returns one word per output.
+    pub fn simulate_words(&self, input_words: &[u64]) -> Vec<u64> {
+        assert_eq!(input_words.len(), self.num_inputs as usize);
+        let mut val = vec![0u64; self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            val[i] = match n {
+                Node::Const => 0,
+                Node::Input(k) => input_words[*k as usize],
+                Node::And(a, b) => {
+                    let va = val[lit_node(*a)] ^ if lit_inv(*a) { !0 } else { 0 };
+                    let vb = val[lit_node(*b)] ^ if lit_inv(*b) { !0 } else { 0 };
+                    va & vb
+                }
+            };
+        }
+        self.outputs
+            .iter()
+            .map(|&o| val[lit_node(o)] ^ if lit_inv(o) { !0 } else { 0 })
+            .collect()
+    }
+
+    /// Evaluate one assignment (bit `i` of `input_bits` = input `i`).
+    pub fn eval(&self, input_bits: u64) -> Vec<bool> {
+        let words: Vec<u64> = (0..self.num_inputs as usize)
+            .map(|i| if (input_bits >> i) & 1 == 1 { !0u64 } else { 0 })
+            .collect();
+        self.simulate_words(&words).iter().map(|&w| w & 1 == 1).collect()
+    }
+
+    /// Garbage-collect nodes unreachable from the outputs; returns the
+    /// compacted AIG (node/literal identities change).
+    pub fn sweep(&self) -> Aig {
+        let mut mark = vec![false; self.nodes.len()];
+        mark[0] = true;
+        // Inputs always survive (their external indices must stay dense).
+        for (i, n) in self.nodes.iter().enumerate() {
+            if matches!(n, Node::Input(_)) {
+                mark[i] = true;
+            }
+        }
+        let mut stack: Vec<usize> = self.outputs.iter().map(|&o| lit_node(o)).collect();
+        while let Some(i) = stack.pop() {
+            if mark[i] {
+                continue;
+            }
+            mark[i] = true;
+            if let Node::And(a, b) = self.nodes[i] {
+                stack.push(lit_node(a));
+                stack.push(lit_node(b));
+            }
+        }
+        let mut remap = vec![u32::MAX; self.nodes.len()];
+        let mut out = Aig::new();
+        out.num_inputs = self.num_inputs;
+        remap[0] = 0;
+        for (i, n) in self.nodes.iter().enumerate().skip(1) {
+            if !mark[i] {
+                continue;
+            }
+            let new_idx = out.nodes.len() as u32;
+            match n {
+                Node::Const => unreachable!(),
+                Node::Input(k) => out.nodes.push(Node::Input(*k)),
+                Node::And(a, b) => {
+                    let ra = (remap[lit_node(*a)] << 1) | (*a & 1);
+                    let rb = (remap[lit_node(*b)] << 1) | (*b & 1);
+                    let (ra, rb) = if ra <= rb { (ra, rb) } else { (rb, ra) };
+                    out.nodes.push(Node::And(ra, rb));
+                    out.strash.insert((ra, rb), new_idx << 1);
+                }
+            }
+            remap[i] = new_idx;
+        }
+        out.outputs = self
+            .outputs
+            .iter()
+            .map(|&o| (remap[lit_node(o)] << 1) | (o & 1))
+            .collect();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::truthtable::TruthTable;
+
+    #[test]
+    fn constant_rules() {
+        let mut g = Aig::new();
+        let a = g.add_input();
+        assert_eq!(g.and(a, LIT_FALSE), LIT_FALSE);
+        assert_eq!(g.and(a, LIT_TRUE), a);
+        assert_eq!(g.and(a, a), a);
+        assert_eq!(g.and(a, lit_not(a)), LIT_FALSE);
+        assert_eq!(g.num_ands(), 0, "no nodes created by trivial rules");
+    }
+
+    #[test]
+    fn strashing_dedupes() {
+        let mut g = Aig::new();
+        let a = g.add_input();
+        let b = g.add_input();
+        let x = g.and(a, b);
+        let y = g.and(b, a);
+        assert_eq!(x, y);
+        assert_eq!(g.num_ands(), 1);
+    }
+
+    #[test]
+    fn xor_truth() {
+        let mut g = Aig::new();
+        let a = g.add_input();
+        let b = g.add_input();
+        let x = g.xor(a, b);
+        g.add_output(x);
+        for bits in 0..4u64 {
+            let want = ((bits & 1) ^ ((bits >> 1) & 1)) == 1;
+            assert_eq!(g.eval(bits)[0], want, "bits={bits:02b}");
+        }
+    }
+
+    #[test]
+    fn mux_truth() {
+        let mut g = Aig::new();
+        let s = g.add_input();
+        let t = g.add_input();
+        let e = g.add_input();
+        let m = g.mux(s, t, e);
+        g.add_output(m);
+        for bits in 0..8u64 {
+            let (sv, tv, ev) = (bits & 1 == 1, (bits >> 1) & 1 == 1, (bits >> 2) & 1 == 1);
+            let want = if sv { tv } else { ev };
+            assert_eq!(g.eval(bits)[0], want);
+        }
+    }
+
+    #[test]
+    fn and_many_is_balanced() {
+        let mut g = Aig::new();
+        let ins: Vec<Lit> = (0..8).map(|_| g.add_input()).collect();
+        let out = g.and_many(&ins);
+        g.add_output(out);
+        assert_eq!(g.depth(), 3, "8-input AND should have depth log2(8)=3");
+        assert!(g.eval(0xFF)[0]);
+        assert!(!g.eval(0x7F)[0]);
+    }
+
+    #[test]
+    fn from_cover_matches_sop_semantics() {
+        use crate::util::prng::Xoshiro256;
+        let mut rng = Xoshiro256::new(0xA16);
+        for trial in 0..40 {
+            let nvars = 2 + trial % 5;
+            let tt = TruthTable::from_fn(nvars, |_| rng.bernoulli(0.4));
+            let cover = TruthTable::isop(&tt, &TruthTable::zeros(nvars));
+            let mut g = Aig::new();
+            let ins: Vec<Lit> = (0..nvars).map(|_| g.add_input()).collect();
+            let o = g.from_cover(&cover, &ins);
+            g.add_output(o);
+            for m in 0..1u64 << nvars {
+                assert_eq!(g.eval(m)[0], tt.eval(m), "m={m} trial={trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn shared_structure_across_outputs() {
+        // Two identical functions must share all AND nodes.
+        let mut g = Aig::new();
+        let a = g.add_input();
+        let b = g.add_input();
+        let c = g.add_input();
+        let f1 = {
+            let t = g.and(a, b);
+            g.or(t, c)
+        };
+        let f2 = {
+            let t = g.and(b, a);
+            g.or(t, c)
+        };
+        assert_eq!(f1, f2);
+        g.add_output(f1);
+        g.add_output(f2);
+        assert_eq!(g.num_ands(), 2);
+    }
+
+    #[test]
+    fn simulate_words_matches_eval() {
+        use crate::util::prng::Xoshiro256;
+        let mut rng = Xoshiro256::new(0x51A);
+        let mut g = Aig::new();
+        let ins: Vec<Lit> = (0..5).map(|_| g.add_input()).collect();
+        let x = g.xor(ins[0], ins[1]);
+        let y = g.and(ins[2], x);
+        let z = g.mux(ins[3], y, ins[4]);
+        g.add_output(z);
+        g.add_output(y);
+        let words: Vec<u64> = (0..5).map(|_| rng.next_u64()).collect();
+        let out = g.simulate_words(&words);
+        for lane in 0..64 {
+            let bits: u64 = (0..5).map(|i| ((words[i] >> lane) & 1) << i).sum();
+            let e = g.eval(bits);
+            assert_eq!((out[0] >> lane) & 1 == 1, e[0]);
+            assert_eq!((out[1] >> lane) & 1 == 1, e[1]);
+        }
+    }
+
+    #[test]
+    fn sweep_removes_dead_nodes() {
+        let mut g = Aig::new();
+        let a = g.add_input();
+        let b = g.add_input();
+        let keep = g.and(a, b);
+        let _dead = g.or(a, b); // never used as output
+        g.add_output(keep);
+        let swept = g.sweep();
+        assert_eq!(swept.num_ands(), 1);
+        assert_eq!(swept.num_inputs(), 2);
+        for m in 0..4u64 {
+            assert_eq!(swept.eval(m)[0], g.eval(m)[0]);
+        }
+    }
+
+    #[test]
+    fn sweep_preserves_multi_output_semantics() {
+        let mut g = Aig::new();
+        let ins: Vec<Lit> = (0..4).map(|_| g.add_input()).collect();
+        let f1 = g.xor(ins[0], ins[2]);
+        let f2 = g.and_many(&ins);
+        let _dead = g.or(ins[1], ins[3]);
+        g.add_output(f1);
+        g.add_output(lit_not(f2));
+        let swept = g.sweep();
+        for m in 0..16u64 {
+            assert_eq!(swept.eval(m), g.eval(m));
+        }
+        assert!(swept.num_nodes() < g.num_nodes());
+    }
+}

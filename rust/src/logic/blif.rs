@@ -1,0 +1,241 @@
+//! BLIF (Berkeley Logic Interchange Format) emission.
+//!
+//! Lets the generated circuits flow into real FPGA/ASIC tools (ABC, Yosys,
+//! VTR) for independent verification of the LUT counts this repository
+//! reports. Pipelined circuits emit `.latch` lines for every register a
+//! stage boundary implies.
+
+use crate::logic::cube::Pol;
+use crate::logic::netlist::{LutNetlist, PipelinedCircuit, Sig};
+use crate::logic::truthtable::TruthTable;
+
+fn sig_name(s: &Sig) -> String {
+    match s {
+        Sig::Const(false) => "gnd".to_string(),
+        Sig::Const(true) => "vcc".to_string(),
+        Sig::Input(i) => format!("pi{i}"),
+        Sig::Lut(j) => format!("n{j}"),
+    }
+}
+
+/// Emit a combinational netlist as BLIF.
+pub fn netlist_to_blif(nl: &LutNetlist, model_name: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(".model {model_name}\n"));
+    out.push_str(".inputs");
+    for i in 0..nl.num_inputs {
+        out.push_str(&format!(" pi{i}"));
+    }
+    out.push('\n');
+    out.push_str(".outputs");
+    for (j, _) in nl.outputs.iter().enumerate() {
+        out.push_str(&format!(" po{j}"));
+    }
+    out.push('\n');
+    // constants (only if referenced)
+    let uses_const = nl
+        .luts
+        .iter()
+        .flat_map(|l| l.inputs.iter())
+        .chain(nl.outputs.iter().map(|(s, _)| s))
+        .any(|s| matches!(s, Sig::Const(_)));
+    if uses_const {
+        out.push_str(".names gnd\n");
+        out.push_str(".names vcc\n1\n");
+    }
+    for (j, lut) in nl.luts.iter().enumerate() {
+        out.push_str(".names");
+        for s in &lut.inputs {
+            out.push_str(&format!(" {}", sig_name(s)));
+        }
+        out.push_str(&format!(" n{j}\n"));
+        out.push_str(&table_to_pla(&lut.table));
+    }
+    for (j, (s, inv)) in nl.outputs.iter().enumerate() {
+        // buffer / inverter row
+        out.push_str(&format!(".names {} po{j}\n", sig_name(s)));
+        out.push_str(if *inv { "0 1\n" } else { "1 1\n" });
+    }
+    out.push_str(".end\n");
+    out
+}
+
+/// Emit a pipelined circuit: combinational body + `.latch` for each register
+/// stage crossing (named `name_sN`).
+pub fn pipelined_to_blif(c: &PipelinedCircuit, model_name: &str) -> String {
+    // For interchange purposes registers are emitted at stage boundaries on
+    // every crossing signal; downstream consumers reference the latched
+    // name of the producing signal at their own stage.
+    let nl = &c.netlist;
+    let mut out = String::new();
+    out.push_str(&format!(".model {model_name}\n"));
+    out.push_str(".inputs");
+    for i in 0..nl.num_inputs {
+        out.push_str(&format!(" pi{i}"));
+    }
+    out.push('\n');
+    out.push_str(".outputs");
+    for (j, _) in nl.outputs.iter().enumerate() {
+        out.push_str(&format!(" po{j}"));
+    }
+    out.push('\n');
+    out.push_str(".names gnd\n.names vcc\n1\n");
+
+    // Name of signal `s` as seen at stage `stage`.
+    let stage_of = |s: &Sig| -> i64 {
+        match s {
+            Sig::Lut(j) => c.stage_of_lut[*j as usize] as i64,
+            _ => -1,
+        }
+    };
+    let name_at = |s: &Sig, stage: i64| -> String {
+        let p = stage_of(s);
+        let base = sig_name(s);
+        if matches!(s, Sig::Const(_)) || stage <= p {
+            base
+        } else {
+            format!("{base}_s{stage}")
+        }
+    };
+
+    // Latches: for each signal and each boundary it crosses.
+    use std::collections::HashMap;
+    let mut last_use: HashMap<Sig, i64> = HashMap::new();
+    for (i, lut) in nl.luts.iter().enumerate() {
+        let si = c.stage_of_lut[i] as i64;
+        for s in &lut.inputs {
+            if !matches!(s, Sig::Const(_)) {
+                let e = last_use.entry(*s).or_insert(i64::MIN);
+                *e = (*e).max(si);
+            }
+        }
+    }
+    for (s, _) in &nl.outputs {
+        if !matches!(s, Sig::Const(_)) {
+            let e = last_use.entry(*s).or_insert(i64::MIN);
+            *e = (*e).max(c.num_stages as i64 - 1);
+        }
+    }
+    let mut latch_lines: Vec<String> = Vec::new();
+    for (s, last) in &last_use {
+        let p = stage_of(s);
+        let mut st = p.max(0) + 1;
+        while st <= *last {
+            latch_lines.push(format!(
+                ".latch {} {} re clk 0\n",
+                name_at(s, st - 1),
+                format!("{}_s{st}", sig_name(s))
+            ));
+            st += 1;
+        }
+    }
+    latch_lines.sort();
+    for l in &latch_lines {
+        out.push_str(l);
+    }
+
+    for (j, lut) in nl.luts.iter().enumerate() {
+        let si = c.stage_of_lut[j] as i64;
+        out.push_str(".names");
+        for s in &lut.inputs {
+            out.push_str(&format!(" {}", name_at(s, si)));
+        }
+        out.push_str(&format!(" n{j}\n"));
+        out.push_str(&table_to_pla(&lut.table));
+    }
+    for (j, (s, inv)) in nl.outputs.iter().enumerate() {
+        out.push_str(&format!(
+            ".names {} po{j}\n",
+            name_at(s, c.num_stages as i64 - 1)
+        ));
+        out.push_str(if *inv { "0 1\n" } else { "1 1\n" });
+    }
+    out.push_str(".end\n");
+    out
+}
+
+/// PLA rows for a LUT function (via ISOP so emitted BLIF stays compact).
+fn table_to_pla(t: &TruthTable) -> String {
+    if t.is_zero() {
+        return String::new(); // no rows = constant 0 in BLIF
+    }
+    if t.nvars() == 0 {
+        return "1\n".to_string();
+    }
+    let cover = TruthTable::isop(t, &TruthTable::zeros(t.nvars()));
+    let mut s = String::new();
+    for cube in &cover.cubes {
+        for v in 0..t.nvars() {
+            s.push(match cube.get(v) {
+                Pol::Zero => '0',
+                Pol::One => '1',
+                Pol::DC => '-',
+                Pol::Empty => unreachable!("empty cube in ISOP"),
+            });
+        }
+        s.push_str(" 1\n");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::netlist::Sig;
+
+    fn simple_netlist() -> LutNetlist {
+        let mut nl = LutNetlist::new(3);
+        let xor = TruthTable::from_fn(2, |m| (m.count_ones() & 1) == 1);
+        let a = nl.add_lut(vec![Sig::Input(0), Sig::Input(1)], xor.clone());
+        let b = nl.add_lut(vec![a, Sig::Input(2)], xor);
+        nl.add_output(b, false);
+        nl.add_output(a, true);
+        nl
+    }
+
+    #[test]
+    fn blif_structure() {
+        let blif = netlist_to_blif(&simple_netlist(), "parity3");
+        assert!(blif.starts_with(".model parity3\n"));
+        assert!(blif.contains(".inputs pi0 pi1 pi2"));
+        assert!(blif.contains(".outputs po0 po1"));
+        assert!(blif.contains(".names pi0 pi1 n0"));
+        assert!(blif.contains(".names n0 pi2 n1"));
+        // inverter row for po1
+        assert!(blif.contains(".names n0 po1\n0 1"));
+        assert!(blif.ends_with(".end\n"));
+    }
+
+    #[test]
+    fn xor_rows_cover_exactly_odd_minterms() {
+        let blif = netlist_to_blif(&simple_netlist(), "m");
+        // xor PLA: rows "01 1" and "10 1"
+        assert!(blif.contains("01 1\n") && blif.contains("10 1\n"));
+    }
+
+    #[test]
+    fn pipelined_emits_latches() {
+        let nl = simple_netlist();
+        let c = PipelinedCircuit {
+            netlist: nl,
+            stage_of_lut: vec![0, 1],
+            num_stages: 2,
+        };
+        let blif = pipelined_to_blif(&c, "piped");
+        assert!(blif.contains(".latch"), "stage crossing must produce a latch:\n{blif}");
+        // n0 crosses boundary 0→1
+        assert!(blif.contains(".latch n0 n0_s1"));
+        // consumer at stage 1 reads the latched name
+        assert!(blif.contains(".names n0_s1 pi2_s1 n1") || blif.contains("n0_s1"));
+    }
+
+    #[test]
+    fn constant_zero_lut_has_no_rows() {
+        let mut nl = LutNetlist::new(1);
+        let z = nl.add_lut(vec![Sig::Input(0)], TruthTable::zeros(1));
+        nl.add_output(z, false);
+        let blif = netlist_to_blif(&nl, "z");
+        // ".names pi0 n0" followed immediately by output buffer section
+        assert!(blif.contains(".names pi0 n0\n.names"));
+    }
+}

@@ -1,0 +1,782 @@
+//! Positional-cube algebra for two-level logic (the ESPRESSO-II substrate).
+//!
+//! A [`Cube`] is a product term over `n` binary variables encoded 2 bits per
+//! variable (the classic positional notation from Brayton et al. [36]):
+//!
+//! | bits | meaning                |
+//! |------|------------------------|
+//! | `01` | literal `x'` (allows 0)|
+//! | `10` | literal `x`  (allows 1)|
+//! | `11` | don't care (no literal)|
+//! | `00` | empty (contradiction)  |
+//!
+//! A [`Cover`] is a set of cubes (an SOP). This module provides the exact
+//! operations ESPRESSO is built from: intersection, containment, distance,
+//! consensus, cofactor, Shannon-recursive tautology and complementation, and
+//! dense-truth-table conversion used for verification.
+
+use crate::util::bitvec::BitVec;
+
+/// Maximum supported variable count. Neuron functions are ≤ γ·β ≤ 12 inputs
+/// in the paper's architectures, but the logic core is general; 512 keeps
+/// word indexing trivial while allowing layer-level covers.
+pub const MAX_VARS: usize = 512;
+
+const VARS_PER_WORD: usize = 32;
+
+/// A product term in positional cube notation.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Cube {
+    nvars: usize,
+    words: Vec<u64>,
+}
+
+/// Polarity of one variable within a cube.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pol {
+    /// `00` — contradictory.
+    Empty,
+    /// `01` — negative literal.
+    Zero,
+    /// `10` — positive literal.
+    One,
+    /// `11` — variable absent (don't care).
+    DC,
+}
+
+impl Pol {
+    #[inline]
+    fn bits(self) -> u64 {
+        match self {
+            Pol::Empty => 0b00,
+            Pol::Zero => 0b01,
+            Pol::One => 0b10,
+            Pol::DC => 0b11,
+        }
+    }
+
+    #[inline]
+    fn from_bits(b: u64) -> Pol {
+        match b & 0b11 {
+            0b00 => Pol::Empty,
+            0b01 => Pol::Zero,
+            0b10 => Pol::One,
+            _ => Pol::DC,
+        }
+    }
+}
+
+impl std::fmt::Debug for Cube {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for v in 0..self.nvars {
+            let c = match self.get(v) {
+                Pol::Empty => '∅',
+                Pol::Zero => '0',
+                Pol::One => '1',
+                Pol::DC => '-',
+            };
+            write!(f, "{c}")?;
+        }
+        Ok(())
+    }
+}
+
+impl Cube {
+    /// The universal cube (all don't-cares) over `nvars` variables.
+    pub fn full(nvars: usize) -> Cube {
+        assert!(nvars <= MAX_VARS);
+        let nwords = nvars.div_ceil(VARS_PER_WORD).max(1);
+        let mut words = vec![!0u64; nwords];
+        // Zero the tail so Eq/Hash are canonical.
+        let rem = nvars % VARS_PER_WORD;
+        if rem != 0 {
+            words[nwords - 1] = (1u64 << (2 * rem)) - 1;
+        }
+        if nvars == 0 {
+            words[0] = 0;
+        }
+        Cube { nvars, words }
+    }
+
+    /// The minterm cube for `assignment` (bit `v` of the slice = value of
+    /// variable `v`).
+    pub fn minterm(nvars: usize, assignment: u64) -> Cube {
+        let mut c = Cube::full(nvars);
+        for v in 0..nvars {
+            c.set(v, if (assignment >> v) & 1 == 1 { Pol::One } else { Pol::Zero });
+        }
+        c
+    }
+
+    /// Parse from the PLA-style string used in tests: `'0'`,`'1'`,`'-'`.
+    pub fn parse(s: &str) -> Cube {
+        let mut c = Cube::full(s.len());
+        for (v, ch) in s.chars().enumerate() {
+            c.set(
+                v,
+                match ch {
+                    '0' => Pol::Zero,
+                    '1' => Pol::One,
+                    '-' => Pol::DC,
+                    _ => panic!("bad cube char {ch}"),
+                },
+            );
+        }
+        c
+    }
+
+    /// Number of variables.
+    #[inline]
+    pub fn nvars(&self) -> usize {
+        self.nvars
+    }
+
+    /// Polarity of variable `v`.
+    #[inline]
+    pub fn get(&self, v: usize) -> Pol {
+        debug_assert!(v < self.nvars);
+        Pol::from_bits(self.words[v / VARS_PER_WORD] >> (2 * (v % VARS_PER_WORD)))
+    }
+
+    /// Set variable `v` to polarity `p`.
+    #[inline]
+    pub fn set(&mut self, v: usize, p: Pol) {
+        debug_assert!(v < self.nvars);
+        let w = &mut self.words[v / VARS_PER_WORD];
+        let sh = 2 * (v % VARS_PER_WORD);
+        *w = (*w & !(0b11 << sh)) | (p.bits() << sh);
+    }
+
+    /// True if some variable has the empty code (cube denotes ∅).
+    pub fn is_empty_cube(&self) -> bool {
+        for (wi, &w) in self.words.iter().enumerate() {
+            // A var is empty iff both of its bits are 0. Detect any 00 pair
+            // within the active region.
+            let active = self.active_mask(wi);
+            let lo = w & 0x5555_5555_5555_5555;
+            let hi = (w >> 1) & 0x5555_5555_5555_5555;
+            if (lo | hi) & active != active {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Mask of low bits of each active var pair in word `wi`.
+    #[inline]
+    fn active_mask(&self, wi: usize) -> u64 {
+        let full_words = self.nvars / VARS_PER_WORD;
+        let base = 0x5555_5555_5555_5555u64;
+        if wi < full_words {
+            base
+        } else {
+            let rem = self.nvars % VARS_PER_WORD;
+            if rem == 0 {
+                0
+            } else {
+                base & ((1u64 << (2 * rem)) - 1)
+            }
+        }
+    }
+
+    /// Intersection (product) of two cubes; `None` if empty.
+    pub fn intersect(&self, other: &Cube) -> Option<Cube> {
+        debug_assert_eq!(self.nvars, other.nvars);
+        let mut out = self.clone();
+        for (a, b) in out.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+        if out.is_empty_cube() {
+            None
+        } else {
+            Some(out)
+        }
+    }
+
+    /// True if `self ⊇ other` (i.e. `self` covers every minterm of `other`).
+    #[inline]
+    pub fn contains(&self, other: &Cube) -> bool {
+        self.words.iter().zip(&other.words).all(|(a, b)| b & !a == 0)
+    }
+
+    /// Hamming distance in the cube lattice: number of variables where the
+    /// intersection is empty. Distance 0 ⇔ the cubes intersect.
+    pub fn distance(&self, other: &Cube) -> usize {
+        let mut d = 0;
+        for (wi, (&a, &b)) in self.words.iter().zip(&other.words).enumerate() {
+            let w = a & b;
+            let active = self.active_mask(wi);
+            let lo = w & 0x5555_5555_5555_5555;
+            let hi = (w >> 1) & 0x5555_5555_5555_5555;
+            d += ((!(lo | hi)) & active).count_ones() as usize;
+        }
+        d
+    }
+
+    /// Consensus of two cubes: defined when distance == 1; merges across the
+    /// single conflicting variable.
+    pub fn consensus(&self, other: &Cube) -> Option<Cube> {
+        if self.distance(other) != 1 {
+            return None;
+        }
+        let mut out = self.clone();
+        for (wi, w) in out.words.iter_mut().enumerate() {
+            let a = *w;
+            let b = other.words[wi];
+            let and = a & b;
+            let active = self.active_mask(wi);
+            let lo = and & 0x5555_5555_5555_5555;
+            let hi = (and >> 1) & 0x5555_5555_5555_5555;
+            let empty_vars = (!(lo | hi)) & active; // low bit of each empty pair
+            let empty_mask = empty_vars | (empty_vars << 1);
+            // conflict var becomes union; others intersection
+            *w = (and & !empty_mask) | ((a | b) & empty_mask);
+        }
+        if out.is_empty_cube() {
+            None
+        } else {
+            Some(out)
+        }
+    }
+
+    /// Smallest cube containing both (bitwise union).
+    pub fn supercube(&self, other: &Cube) -> Cube {
+        let mut out = self.clone();
+        for (a, b) in out.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+        out
+    }
+
+    /// Cofactor `self / p` (Espresso definition). `None` when `self ∩ p = ∅`.
+    pub fn cofactor(&self, p: &Cube) -> Option<Cube> {
+        if self.distance(p) != 0 {
+            return None;
+        }
+        let mut out = self.clone();
+        for (wi, w) in out.words.iter_mut().enumerate() {
+            let mask = self.active_mask(wi);
+            let full = mask | (mask << 1);
+            *w |= !p.words[wi] & full;
+        }
+        Some(out)
+    }
+
+    /// Number of literals (variables not DC).
+    pub fn literal_count(&self) -> usize {
+        let mut n = 0;
+        for (wi, &w) in self.words.iter().enumerate() {
+            let active = self.active_mask(wi);
+            let lo = w & 0x5555_5555_5555_5555;
+            let hi = (w >> 1) & 0x5555_5555_5555_5555;
+            // literal iff exactly one of (lo,hi) set
+            n += ((lo ^ hi) & active).count_ones() as usize;
+        }
+        n
+    }
+
+    /// True if the cube is the universal cube.
+    pub fn is_full(&self) -> bool {
+        *self == Cube::full(self.nvars)
+    }
+
+    /// An explicitly-empty cube (variable 0 set to the `00` code). Used as
+    /// a removal marker by REDUCE.
+    pub fn empty_marker(nvars: usize) -> Cube {
+        let mut c = Cube::full(nvars);
+        if nvars > 0 {
+            c.words[0] &= !0b11u64;
+        } else {
+            c.words[0] = 0;
+        }
+        c
+    }
+
+    /// Evaluate: does this cube cover the minterm `assignment`?
+    #[inline]
+    pub fn covers_minterm(&self, assignment: u64) -> bool {
+        for v in 0..self.nvars {
+            let bit = (assignment >> v) & 1;
+            let p = self.get(v);
+            let ok = match p {
+                Pol::DC => true,
+                Pol::One => bit == 1,
+                Pol::Zero => bit == 0,
+                Pol::Empty => false,
+            };
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// A set of cubes interpreted as a sum of products.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Cover {
+    nvars: usize,
+    pub cubes: Vec<Cube>,
+}
+
+impl std::fmt::Debug for Cover {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Cover({} vars, {} cubes):", self.nvars, self.cubes.len())?;
+        for c in &self.cubes {
+            writeln!(f, "  {c:?}")?;
+        }
+        Ok(())
+    }
+}
+
+impl Cover {
+    /// Empty cover (constant 0).
+    pub fn empty(nvars: usize) -> Cover {
+        Cover { nvars, cubes: Vec::new() }
+    }
+
+    /// Cover with the universal cube (constant 1).
+    pub fn universe(nvars: usize) -> Cover {
+        Cover { nvars, cubes: vec![Cube::full(nvars)] }
+    }
+
+    /// Build from cubes (all must share `nvars`).
+    pub fn from_cubes(nvars: usize, cubes: Vec<Cube>) -> Cover {
+        debug_assert!(cubes.iter().all(|c| c.nvars() == nvars));
+        Cover { nvars, cubes }
+    }
+
+    /// Parse a newline/space separated list of PLA-style cubes.
+    pub fn parse(nvars: usize, spec: &str) -> Cover {
+        let cubes: Vec<Cube> = spec
+            .split_whitespace()
+            .map(|s| {
+                assert_eq!(s.len(), nvars);
+                Cube::parse(s)
+            })
+            .collect();
+        Cover { nvars, cubes }
+    }
+
+    /// Number of variables.
+    pub fn nvars(&self) -> usize {
+        self.nvars
+    }
+
+    /// Number of cubes.
+    pub fn len(&self) -> usize {
+        self.cubes.len()
+    }
+
+    /// True if the cover has no cubes.
+    pub fn is_empty(&self) -> bool {
+        self.cubes.is_empty()
+    }
+
+    /// Total literal count (the secondary ESPRESSO cost).
+    pub fn literal_count(&self) -> usize {
+        self.cubes.iter().map(|c| c.literal_count()).sum()
+    }
+
+    /// Does the SOP evaluate to 1 on `assignment`?
+    pub fn covers_minterm(&self, assignment: u64) -> bool {
+        self.cubes.iter().any(|c| c.covers_minterm(assignment))
+    }
+
+    /// Remove cubes contained in another single cube (single-cube
+    /// containment). O(n²) but n is small post-minimization.
+    pub fn sccc_prune(&mut self) {
+        let mut keep = vec![true; self.cubes.len()];
+        for i in 0..self.cubes.len() {
+            if !keep[i] {
+                continue;
+            }
+            for j in 0..self.cubes.len() {
+                if i != j && keep[j] && keep[i] {
+                    if self.cubes[j].contains(&self.cubes[i])
+                        && !(self.cubes[i] == self.cubes[j] && i < j)
+                    {
+                        keep[i] = false;
+                    }
+                }
+            }
+        }
+        let mut idx = 0;
+        self.cubes.retain(|_| {
+            let k = keep[idx];
+            idx += 1;
+            k
+        });
+    }
+
+    /// Cofactor the whole cover by cube `p` (drops cubes disjoint from `p`).
+    pub fn cofactor(&self, p: &Cube) -> Cover {
+        Cover {
+            nvars: self.nvars,
+            cubes: self.cubes.iter().filter_map(|c| c.cofactor(p)).collect(),
+        }
+    }
+
+    /// Union of two covers.
+    pub fn union(&self, other: &Cover) -> Cover {
+        debug_assert_eq!(self.nvars, other.nvars);
+        let mut cubes = self.cubes.clone();
+        cubes.extend(other.cubes.iter().cloned());
+        Cover { nvars: self.nvars, cubes }
+    }
+
+    /// Pick the most binate variable (appears in both polarities, max
+    /// occurrences) for Shannon branching; falls back to the most frequent
+    /// unate variable.
+    fn binate_select(&self) -> Option<usize> {
+        let n = self.nvars;
+        let mut pos = vec![0u32; n];
+        let mut neg = vec![0u32; n];
+        for c in &self.cubes {
+            for v in 0..n {
+                match c.get(v) {
+                    Pol::One => pos[v] += 1,
+                    Pol::Zero => neg[v] += 1,
+                    _ => {}
+                }
+            }
+        }
+        // Most binate: maximize min(pos,neg), tie-break max total.
+        let mut best: Option<(usize, u32, u32)> = None;
+        for v in 0..n {
+            let key = (pos[v].min(neg[v]), pos[v] + neg[v]);
+            if pos[v] + neg[v] == 0 {
+                continue;
+            }
+            match best {
+                None => best = Some((v, key.0, key.1)),
+                Some((_, bk0, bk1)) => {
+                    if key > (bk0, bk1) {
+                        best = Some((v, key.0, key.1));
+                    }
+                }
+            }
+        }
+        best.map(|(v, _, _)| v)
+    }
+
+    /// Positive/negative cofactor cubes for variable `v`.
+    fn shannon_cubes(nvars: usize, v: usize) -> (Cube, Cube) {
+        let mut p = Cube::full(nvars);
+        p.set(v, Pol::One);
+        let mut q = Cube::full(nvars);
+        q.set(v, Pol::Zero);
+        (p, q)
+    }
+
+    /// Tautology check (unate reduction + Shannon recursion).
+    pub fn is_tautology(&self) -> bool {
+        // Fast exits.
+        if self.cubes.iter().any(|c| c.is_full()) {
+            return true;
+        }
+        if self.cubes.is_empty() {
+            return false;
+        }
+        match self.binate_select() {
+            None => {
+                // All cubes are the full cube (handled) or no literals at
+                // all — with no literal occurrences and no full cube the
+                // cover is empty of constraints only if some cube is full.
+                false
+            }
+            Some(v) => {
+                let (p, q) = Cover::shannon_cubes(self.nvars, v);
+                self.cofactor(&p).is_tautology() && self.cofactor(&q).is_tautology()
+            }
+        }
+    }
+
+    /// Does this cover contain cube `c` (i.e. `c ⊆ self` as sets of
+    /// minterms)? Implemented as tautology of the cofactor — the standard
+    /// ESPRESSO containment test.
+    pub fn contains_cube(&self, c: &Cube) -> bool {
+        self.cofactor(c).is_tautology()
+    }
+
+    /// Complement via unate-recursive Shannon expansion:
+    /// `~F = x·~F_x + x'·~F_x'` with simple-cover base cases.
+    pub fn complement(&self) -> Cover {
+        // Base: constant 0 → universe.
+        if self.cubes.is_empty() {
+            return Cover::universe(self.nvars);
+        }
+        // Base: contains universal cube → constant 0.
+        if self.cubes.iter().any(|c| c.is_full()) {
+            return Cover::empty(self.nvars);
+        }
+        // Base: single cube → DeMorgan.
+        if self.cubes.len() == 1 {
+            return self.complement_single(&self.cubes[0]);
+        }
+        let v = match self.binate_select() {
+            Some(v) => v,
+            None => return Cover::empty(self.nvars), // unreachable in practice
+        };
+        let (p, q) = Cover::shannon_cubes(self.nvars, v);
+        let cp = self.cofactor(&p).complement();
+        let cq = self.cofactor(&q).complement();
+        let mut cubes = Vec::with_capacity(cp.len() + cq.len());
+        for mut c in cp.cubes {
+            // AND with literal x_v
+            if c.get(v) == Pol::DC {
+                c.set(v, Pol::One);
+                cubes.push(c);
+            } else if c.get(v) == Pol::One {
+                cubes.push(c);
+            }
+            // Pol::Zero would make it empty — cofactor output never has it.
+        }
+        for mut c in cq.cubes {
+            if c.get(v) == Pol::DC {
+                c.set(v, Pol::Zero);
+                cubes.push(c);
+            } else if c.get(v) == Pol::Zero {
+                cubes.push(c);
+            }
+        }
+        let mut out = Cover { nvars: self.nvars, cubes };
+        out.sccc_prune();
+        out
+    }
+
+    fn complement_single(&self, c: &Cube) -> Cover {
+        let mut cubes = Vec::new();
+        for v in 0..self.nvars {
+            match c.get(v) {
+                Pol::One => {
+                    let mut k = Cube::full(self.nvars);
+                    k.set(v, Pol::Zero);
+                    cubes.push(k);
+                }
+                Pol::Zero => {
+                    let mut k = Cube::full(self.nvars);
+                    k.set(v, Pol::One);
+                    cubes.push(k);
+                }
+                _ => {}
+            }
+        }
+        Cover { nvars: self.nvars, cubes }
+    }
+
+    /// Dense truth table of the SOP (for verification; `nvars ≤ 24`).
+    /// Word-parallel: each cube is the AND of per-variable projection masks,
+    /// OR-ed into the result — ~n word ops per cube instead of 2^n bit
+    /// probes (hot inside the dense IRREDUNDANT; see EXPERIMENTS.md §Perf).
+    pub fn to_truth_bits(&self) -> BitVec {
+        assert!(self.nvars <= 24, "dense expansion limited to 24 vars");
+        let size = 1usize << self.nvars;
+        // Projection masks for each variable (shared across cubes).
+        let vars: Vec<BitVec> = (0..self.nvars)
+            .map(|v| {
+                crate::logic::truthtable::TruthTable::var(self.nvars, v)
+                    .bits()
+                    .clone()
+            })
+            .collect();
+        let mut out = BitVec::zeros(size);
+        for cube in &self.cubes {
+            let mut acc = BitVec::ones(size);
+            for (v, mask) in vars.iter().enumerate() {
+                match cube.get(v) {
+                    Pol::One => acc.and_assign(mask),
+                    Pol::Zero => {
+                        let inv = mask.not();
+                        acc.and_assign(&inv);
+                    }
+                    Pol::DC => {}
+                    Pol::Empty => {
+                        acc = BitVec::zeros(size);
+                        break;
+                    }
+                }
+            }
+            out.or_assign(&acc);
+        }
+        out
+    }
+
+    /// Semantic equality of two covers (dense compare; test/verify helper).
+    pub fn equivalent(&self, other: &Cover) -> bool {
+        debug_assert_eq!(self.nvars, other.nvars);
+        self.to_truth_bits() == other.to_truth_bits()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_and_minterm() {
+        let f = Cube::full(5);
+        assert!(f.is_full());
+        assert_eq!(f.literal_count(), 0);
+        let m = Cube::minterm(5, 0b10110);
+        assert_eq!(m.literal_count(), 5);
+        assert!(m.covers_minterm(0b10110));
+        assert!(!m.covers_minterm(0b10111));
+        assert!(f.contains(&m));
+        assert!(!m.contains(&f));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let c = Cube::parse("01-1");
+        assert_eq!(c.get(0), Pol::Zero);
+        assert_eq!(c.get(1), Pol::One);
+        assert_eq!(c.get(2), Pol::DC);
+        assert_eq!(c.get(3), Pol::One);
+        assert_eq!(format!("{c:?}"), "01-1");
+    }
+
+    #[test]
+    fn intersect_and_distance() {
+        let a = Cube::parse("1--");
+        let b = Cube::parse("-0-");
+        let i = a.intersect(&b).unwrap();
+        assert_eq!(format!("{i:?}"), "10-");
+        let c = Cube::parse("0--");
+        assert!(a.intersect(&c).is_none());
+        assert_eq!(a.distance(&c), 1);
+        let d = Cube::parse("01-");
+        assert_eq!(a.distance(&d), 1);
+        assert_eq!(Cube::parse("10-").distance(&Cube::parse("011")), 2);
+    }
+
+    #[test]
+    fn consensus_merges_adjacent() {
+        let a = Cube::parse("1-0");
+        let b = Cube::parse("1-1");
+        let c = a.consensus(&b).unwrap();
+        assert_eq!(format!("{c:?}"), "1--");
+        // distance 2 → no consensus
+        assert!(Cube::parse("10-").consensus(&Cube::parse("011")).is_none());
+        // x·y' and x'·y → consensus over x is y'·y = empty? distance is 2
+        // over (x,y) so also None.
+        assert!(Cube::parse("10").consensus(&Cube::parse("01")).is_none());
+    }
+
+    #[test]
+    fn cofactor_removes_literal() {
+        let c = Cube::parse("10-");
+        let mut p = Cube::full(3);
+        p.set(0, Pol::One);
+        let cf = c.cofactor(&p).unwrap();
+        assert_eq!(format!("{cf:?}"), "-0-");
+        // disjoint → None
+        let mut q = Cube::full(3);
+        q.set(0, Pol::Zero);
+        assert!(c.cofactor(&q).is_none());
+    }
+
+    #[test]
+    fn supercube_is_union_bound() {
+        let a = Cube::parse("110");
+        let b = Cube::parse("100");
+        let s = a.supercube(&b);
+        assert_eq!(format!("{s:?}"), "1-0");
+        assert!(s.contains(&a) && s.contains(&b));
+    }
+
+    #[test]
+    fn tautology_basic() {
+        assert!(Cover::universe(3).is_tautology());
+        assert!(!Cover::empty(3).is_tautology());
+        // x + x' = 1
+        assert!(Cover::parse(1, "1 0").is_tautology());
+        // x + y is not a tautology
+        assert!(!Cover::parse(2, "1- -1").is_tautology());
+        // all four minterms of 2 vars
+        assert!(Cover::parse(2, "00 01 10 11").is_tautology());
+        // missing one minterm
+        assert!(!Cover::parse(2, "00 01 10").is_tautology());
+    }
+
+    #[test]
+    fn complement_of_simple_covers() {
+        // ~(x) = x'
+        let f = Cover::parse(1, "1");
+        let g = f.complement();
+        assert_eq!(g.len(), 1);
+        assert!(g.covers_minterm(0) && !g.covers_minterm(1));
+        // ~0 = 1, ~1 = 0
+        assert!(Cover::empty(2).complement().is_tautology());
+        assert!(Cover::universe(2).complement().is_empty());
+    }
+
+    #[test]
+    fn complement_is_exact_on_random_covers() {
+        use crate::util::prng::Xoshiro256;
+        let mut rng = Xoshiro256::new(0xC0FFEE);
+        for trial in 0..200 {
+            let nvars = 1 + (trial % 8);
+            let ncubes = 1 + (rng.below(6) as usize);
+            let mut cubes = Vec::new();
+            for _ in 0..ncubes {
+                let mut c = Cube::full(nvars);
+                for v in 0..nvars {
+                    match rng.below(3) {
+                        0 => c.set(v, Pol::Zero),
+                        1 => c.set(v, Pol::One),
+                        _ => {}
+                    }
+                }
+                cubes.push(c);
+            }
+            let f = Cover::from_cubes(nvars, cubes);
+            let g = f.complement();
+            let tf = f.to_truth_bits();
+            let tg = g.to_truth_bits();
+            assert_eq!(tg, tf.not(), "complement mismatch, trial {trial}\n{f:?}{g:?}");
+        }
+    }
+
+    #[test]
+    fn contains_cube_via_tautology() {
+        let f = Cover::parse(3, "1-- -1-");
+        assert!(f.contains_cube(&Cube::parse("11-")));
+        assert!(f.contains_cube(&Cube::parse("1-0")));
+        assert!(!f.contains_cube(&Cube::parse("--1")));
+        assert!(f.contains_cube(&Cube::parse("-11")));
+    }
+
+    #[test]
+    fn sccc_prune_removes_contained() {
+        let mut f = Cover::parse(3, "1-- 11- 111 0-0");
+        f.sccc_prune();
+        assert_eq!(f.len(), 2);
+        assert!(f.cubes.contains(&Cube::parse("1--")));
+        assert!(f.cubes.contains(&Cube::parse("0-0")));
+    }
+
+    #[test]
+    fn sccc_prune_keeps_one_of_duplicates() {
+        let mut f = Cover::parse(2, "1- 1-");
+        f.sccc_prune();
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn cover_semantics() {
+        let f = Cover::parse(2, "1- -1"); // x + y
+        assert!(!f.covers_minterm(0b00));
+        assert!(f.covers_minterm(0b01)); // x=1 (var0 is bit0)
+        assert!(f.covers_minterm(0b10));
+        assert!(f.covers_minterm(0b11));
+        let t = f.to_truth_bits();
+        assert_eq!(t.count_ones(), 3);
+    }
+
+    #[test]
+    fn literal_count_cover() {
+        let f = Cover::parse(3, "1-- 01-");
+        assert_eq!(f.literal_count(), 3);
+    }
+}

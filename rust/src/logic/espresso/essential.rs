@@ -1,0 +1,137 @@
+//! Essential-prime detection.
+//!
+//! A prime `p` is *essential* iff it covers a minterm no other prime of the
+//! function covers. ESPRESSO's test (Brayton et al., §4.4): form
+//! `H = CONS((F ∖ {p}) ∪ D, p)` — cubes of the rest that touch `p` plus all
+//! distance-1 consensus terms with `p` — then `p` is essential iff
+//! `p ⊄ H ∪ D`. Essentials are frozen into the don't-care set during the
+//! REDUCE/EXPAND/IRREDUNDANT loop and restored at the end, shrinking the
+//! iteration space.
+
+use crate::logic::cube::{Cover, Cube};
+
+/// Is prime `p` essential w.r.t. cover `rest` (= F without p) and `dc`?
+pub fn is_essential(p: &Cube, rest: &Cover, dc: &Cover) -> bool {
+    let nvars = rest.nvars();
+    let mut h: Vec<Cube> = Vec::new();
+    for q in rest.cubes.iter().chain(dc.cubes.iter()) {
+        match q.distance(p) {
+            0 => h.push(q.clone()),
+            1 => {
+                if let Some(c) = q.consensus(p) {
+                    h.push(c);
+                }
+            }
+            _ => {}
+        }
+    }
+    let h = Cover::from_cubes(nvars, h);
+    !h.contains_cube(p)
+}
+
+/// Split `f` into (essential, non-essential) cubes.
+pub fn partition_essential(f: &Cover, dc: &Cover) -> (Cover, Cover) {
+    let nvars = f.nvars();
+    let mut ess = Vec::new();
+    let mut rest = Vec::new();
+    for (i, c) in f.cubes.iter().enumerate() {
+        let others: Vec<Cube> = f
+            .cubes
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| *j != i)
+            .map(|(_, c)| c.clone())
+            .collect();
+        let others = Cover::from_cubes(nvars, others);
+        if is_essential(c, &others, dc) {
+            ess.push(c.clone());
+        } else {
+            rest.push(c.clone());
+        }
+    }
+    (Cover::from_cubes(nvars, ess), Cover::from_cubes(nvars, rest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::espresso::{expand::expand, irredundant::irredundant};
+    use crate::logic::truthtable::TruthTable;
+
+    #[test]
+    fn lone_cube_is_essential() {
+        let f = Cover::parse(2, "1-");
+        let (ess, rest) = partition_essential(&f, &Cover::empty(2));
+        assert_eq!(ess.len(), 1);
+        assert!(rest.is_empty());
+    }
+
+    #[test]
+    fn consensus_covered_prime_not_essential() {
+        // f = x·y + x'·z + y·z  (all primes). y·z is non-essential.
+        let f = Cover::parse(3, "11- 0-1 -11");
+        let (ess, rest) = partition_essential(&f, &Cover::empty(3));
+        assert_eq!(ess.len(), 2, "x·y and x'·z are essential");
+        assert_eq!(rest.len(), 1);
+        assert_eq!(format!("{:?}", rest.cubes[0]), "-11");
+    }
+
+    #[test]
+    fn essential_detection_matches_bruteforce() {
+        use crate::util::prng::Xoshiro256;
+        let mut rng = Xoshiro256::new(0xE55);
+        for trial in 0..40 {
+            let nvars = 2 + (trial % 4);
+            let tt = TruthTable::from_fn(nvars, |_| rng.bernoulli(0.45));
+            if tt.is_zero() {
+                continue;
+            }
+            // Build a prime & irredundant cover first.
+            let seed = TruthTable::isop(&tt, &TruthTable::zeros(nvars));
+            let offc = TruthTable::isop(&tt.not(), &TruthTable::zeros(nvars));
+            let f = irredundant(&expand(&seed, &offc), &Cover::empty(nvars));
+
+            let (ess, _) = partition_essential(&f, &Cover::empty(nvars));
+            // Brute force: p essential iff ∃ ON-minterm covered by p and by
+            // no OTHER PRIME of the function (enumerate all primes).
+            let mut primes: Vec<Cube> = Vec::new();
+            let ncubes = 3usize.pow(nvars as u32);
+            let mut all: Vec<Cube> = Vec::new();
+            for code in 0..ncubes {
+                use crate::logic::cube::Pol;
+                let mut c = Cube::full(nvars);
+                let mut rem = code;
+                for v in 0..nvars {
+                    match rem % 3 {
+                        0 => c.set(v, Pol::Zero),
+                        1 => c.set(v, Pol::One),
+                        _ => {}
+                    }
+                    rem /= 3;
+                }
+                if (0..1u64 << nvars).all(|m| !c.covers_minterm(m) || tt.eval(m)) {
+                    all.push(c);
+                }
+            }
+            for c in &all {
+                if !all.iter().any(|d| d != c && d.contains(c)) {
+                    primes.push(c.clone());
+                }
+            }
+            for c in &f.cubes {
+                let mut unique = false;
+                for m in 0..1u64 << nvars {
+                    if c.covers_minterm(m)
+                        && tt.eval(m)
+                        && !primes.iter().any(|o| o != c && o.covers_minterm(m))
+                    {
+                        unique = true;
+                        break;
+                    }
+                }
+                let flagged = ess.cubes.contains(c);
+                assert_eq!(flagged, unique, "cube {c:?} trial {trial}");
+            }
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! EXPAND — raise cubes to primes against the OFF-set.
+//!
+//! Each cube is greedily enlarged (literals raised to don't-care) while it
+//! stays disjoint from every OFF-set cube; the result is a prime implicant.
+//! Raising order follows the classic blocking-matrix heuristic: prefer the
+//! variable whose raise conflicts with the fewest OFF cubes, so the cube
+//! grows toward the direction with most freedom and tends to cover (and thus
+//! delete) the most sibling cubes.
+
+use crate::logic::cube::{Cover, Cube, Pol};
+
+/// Expand every cube of `f` into a prime against `off`; covered cubes are
+/// removed. `off` must be exactly the complement of ON ∪ DC.
+pub fn expand(f: &Cover, off: &Cover) -> Cover {
+    let nvars = f.nvars();
+    let mut cubes: Vec<Cube> = f.cubes.clone();
+    // Expand biggest cubes first (fewest literals) — they are most likely
+    // to swallow others, matching ESPRESSO's weight ordering.
+    cubes.sort_by_key(|c| c.literal_count());
+
+    let mut result: Vec<Cube> = Vec::with_capacity(cubes.len());
+    let mut covered = vec![false; cubes.len()];
+
+    for i in 0..cubes.len() {
+        if covered[i] {
+            continue;
+        }
+        let prime = expand_one(&cubes[i], off, nvars);
+        // Mark the remaining cubes this prime now covers.
+        for (j, c) in cubes.iter().enumerate().skip(i + 1) {
+            if !covered[j] && prime.contains(c) {
+                covered[j] = true;
+            }
+        }
+        // Also drop earlier results strictly contained in the new prime
+        // (possible when a later small cube expands past an earlier prime).
+        result.retain(|r| !prime.contains(r) || *r == prime);
+        if !result.iter().any(|r| r.contains(&prime)) {
+            result.push(prime);
+        }
+    }
+    Cover::from_cubes(nvars, result)
+}
+
+/// Expand a single cube into a prime implicant of ¬OFF.
+pub fn expand_one(cube: &Cube, off: &Cover, nvars: usize) -> Cube {
+    let mut c = cube.clone();
+    loop {
+        // Candidate raises: literals whose removal keeps c ∩ OFF = ∅.
+        // Score = number of OFF cubes that *block* the raise (distance
+        // becomes 0 after raising). Pick the raise with the fewest blockers
+        // = 0 required; among the feasible ones pick greedily by how many
+        // other raises stay feasible — approximated by choosing the
+        // feasible raise whose var appears least in OFF.
+        let mut best: Option<usize> = None;
+        let mut best_score = usize::MAX;
+        for v in 0..nvars {
+            let p = c.get(v);
+            if p == Pol::DC {
+                continue;
+            }
+            let mut raised = c.clone();
+            raised.set(v, Pol::DC);
+            // Feasible iff raised is still disjoint from all OFF cubes.
+            let mut feasible = true;
+            let mut tension = 0usize;
+            for o in &off.cubes {
+                let d = raised.distance(o);
+                if d == 0 {
+                    feasible = false;
+                    break;
+                }
+                if d == 1 {
+                    tension += 1; // near-blocking cubes: prefer fewer
+                }
+            }
+            if feasible && tension < best_score {
+                best_score = tension;
+                best = Some(v);
+            }
+        }
+        match best {
+            Some(v) => c.set(v, Pol::DC),
+            None => return c,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::truthtable::TruthTable;
+    use crate::util::prng::Xoshiro256;
+
+    fn is_prime(c: &Cube, off: &Cover, nvars: usize) -> bool {
+        // prime iff no single literal can be raised without hitting OFF
+        for v in 0..nvars {
+            if c.get(v) != Pol::DC {
+                let mut r = c.clone();
+                r.set(v, Pol::DC);
+                if off.cubes.iter().all(|o| r.distance(o) > 0) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    #[test]
+    fn expands_to_prime() {
+        // f = x0 (on), off = x0'. The minterm 11 should expand to "1-".
+        let on = Cover::parse(2, "11");
+        let off = Cover::parse(2, "0-");
+        let e = expand(&on, &off);
+        assert_eq!(e.len(), 1);
+        assert_eq!(format!("{:?}", e.cubes[0]), "1-");
+    }
+
+    #[test]
+    fn expansion_swallows_covered_cubes() {
+        // Both minterms of x0 expand to the same prime.
+        let on = Cover::parse(2, "10 11");
+        let off = Cover::parse(2, "0-");
+        let e = expand(&on, &off);
+        assert_eq!(e.len(), 1);
+    }
+
+    #[test]
+    fn expanded_cover_equivalent_within_dc() {
+        let mut rng = Xoshiro256::new(0xEAB);
+        for trial in 0..60 {
+            let nvars = 2 + (trial % 6);
+            let on_tt = TruthTable::from_fn(nvars, |_| rng.bernoulli(0.35));
+            let off_tt = on_tt.not();
+            let on = TruthTable::isop(&on_tt, &TruthTable::zeros(nvars));
+            let off = TruthTable::isop(&off_tt, &TruthTable::zeros(nvars));
+            let e = expand(&on, &off);
+            // Every original ON minterm still covered; nothing in OFF covered.
+            let ett = TruthTable::from_cover(&e);
+            assert_eq!(ett, on_tt, "expand must preserve the function exactly when DC=∅");
+            // All results prime.
+            for c in &e.cubes {
+                assert!(is_prime(c, &off, nvars), "non-prime cube {c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn expand_with_dc_can_grow_beyond_on() {
+        // ON = minterm 11, DC = minterm 01 ⇒ OFF = {00, 10} = x1'.
+        // The ON cube can expand to "-1" using the DC.
+        let on = Cover::parse(2, "11");
+        let off = Cover::parse(2, "-0");
+        let e = expand(&on, &off);
+        assert_eq!(e.len(), 1);
+        assert_eq!(format!("{:?}", e.cubes[0]), "-1");
+    }
+
+    #[test]
+    fn empty_cover_stays_empty() {
+        let e = expand(&Cover::empty(3), &Cover::universe(3));
+        assert!(e.is_empty());
+    }
+}

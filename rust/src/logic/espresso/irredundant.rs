@@ -1,0 +1,262 @@
+//! IRREDUNDANT — extract a minimal subcover.
+//!
+//! ESPRESSO partitions the cover into relatively-essential cubes `E_r`
+//! (must stay), totally-redundant cubes (covered by `E_r ∪ D`, dropped) and
+//! partially-redundant cubes `R_p`, then solves a covering problem to pick a
+//! minimum subset of `R_p`. The original solves MINCOV on a symbolic
+//! covering matrix; since every function this project minimizes has ≤ ~16
+//! inputs, we build the covering problem on the *dense* minterm sets —
+//! exact branch-and-bound for small instances, greedy otherwise — which is
+//! both simpler and strictly better at escaping cyclic covers than the
+//! textbook one-cube-at-a-time deletion. A symbolic fallback handles wide
+//! covers (> [`DENSE_VAR_LIMIT`] vars).
+
+use crate::logic::cube::Cover;
+use crate::util::bitvec::BitVec;
+
+/// Covers wider than this use the symbolic (cofactor-tautology) fallback.
+pub const DENSE_VAR_LIMIT: usize = 16;
+
+/// Exact set-cover search is attempted below this candidate count.
+const EXACT_LIMIT: usize = 24;
+
+/// Return an irredundant subset of `f` equivalent to `f` modulo `dc`.
+pub fn irredundant(f: &Cover, dc: &Cover) -> Cover {
+    if f.nvars() <= DENSE_VAR_LIMIT {
+        irredundant_dense(f, dc)
+    } else {
+        irredundant_symbolic(f, dc)
+    }
+}
+
+fn cube_bits(f: &Cover, idx: usize) -> BitVec {
+    Cover::from_cubes(f.nvars(), vec![f.cubes[idx].clone()]).to_truth_bits()
+}
+
+fn irredundant_dense(f: &Cover, dc: &Cover) -> Cover {
+    let nvars = f.nvars();
+    let n = f.cubes.len();
+    if n == 0 {
+        return f.clone();
+    }
+    let size = 1usize << nvars;
+    let cube_sets: Vec<BitVec> = (0..n).map(|i| cube_bits(f, i)).collect();
+    let dc_set = dc.to_truth_bits();
+    let mut f_set = BitVec::zeros(size);
+    for cb in &cube_sets {
+        f_set.or_assign(cb);
+    }
+
+    // Relatively essential: cube has a minterm covered by no other cube nor DC.
+    let mut essential = vec![false; n];
+    for i in 0..n {
+        let mut others = dc_set.clone();
+        for (j, cb) in cube_sets.iter().enumerate() {
+            if j != i {
+                others.or_assign(cb);
+            }
+        }
+        if !cube_sets[i].is_subset_of(&others) {
+            essential[i] = true;
+        }
+    }
+
+    // Base coverage from essentials + DC.
+    let mut covered = dc_set.clone();
+    for i in 0..n {
+        if essential[i] {
+            covered.or_assign(&cube_sets[i]);
+        }
+    }
+    // Target: minterms of F not yet covered.
+    let mut target = f_set.clone();
+    target.and_assign(&covered.not());
+
+    let mut chosen: Vec<usize> = (0..n).filter(|&i| essential[i]).collect();
+    if !target.is_zero() {
+        // Candidates: partially-redundant cubes that cover some target bit.
+        let cands: Vec<usize> = (0..n)
+            .filter(|&i| !essential[i] && cube_sets[i].intersects(&target))
+            .collect();
+        let picked = if cands.len() <= EXACT_LIMIT {
+            exact_cover(&cands, &cube_sets, &target, f)
+        } else {
+            greedy_cover(&cands, &cube_sets, &target, f)
+        };
+        chosen.extend(picked);
+    }
+    chosen.sort_unstable();
+    Cover::from_cubes(nvars, chosen.iter().map(|&i| f.cubes[i].clone()).collect())
+}
+
+/// Greedy weighted set cover: repeatedly take the candidate covering the
+/// most uncovered minterms (ties: fewer literals).
+fn greedy_cover(cands: &[usize], sets: &[BitVec], target: &BitVec, f: &Cover) -> Vec<usize> {
+    let mut remaining = target.clone();
+    let mut picked = Vec::new();
+    let mut avail: Vec<usize> = cands.to_vec();
+    while !remaining.is_zero() {
+        let mut best: Option<(usize, (usize, usize))> = None;
+        for &i in &avail {
+            let mut s = sets[i].clone();
+            s.and_assign(&remaining);
+            let key = (s.count_ones(), usize::MAX - f.cubes[i].literal_count());
+            if best.map(|(_, bk)| key > bk).unwrap_or(true) {
+                best = Some((i, key));
+            }
+        }
+        let (best, _) = best.expect("target coverable by candidates");
+        picked.push(best);
+        remaining.and_assign(&sets[best].not());
+        avail.retain(|&i| i != best);
+    }
+    picked
+}
+
+/// Exact minimum set cover by depth-bounded branch and bound.
+fn exact_cover(cands: &[usize], sets: &[BitVec], target: &BitVec, f: &Cover) -> Vec<usize> {
+    // Upper bound from greedy.
+    let greedy = greedy_cover(cands, sets, target, f);
+    let mut best = greedy.clone();
+    let mut stack_choice: Vec<usize> = Vec::new();
+    bb(cands, sets, target, &mut stack_choice, &mut best);
+    best
+}
+
+fn bb(
+    cands: &[usize],
+    sets: &[BitVec],
+    remaining: &BitVec,
+    chosen: &mut Vec<usize>,
+    best: &mut Vec<usize>,
+) {
+    if remaining.is_zero() {
+        if chosen.len() < best.len() {
+            *best = chosen.clone();
+        }
+        return;
+    }
+    if chosen.len() + 1 >= best.len() {
+        return; // bound
+    }
+    // Branch on the first uncovered minterm: one of its covering cubes must
+    // be chosen (standard covering branching — complete, and the mandatory
+    // minterm keeps the tree narrow at this scale).
+    let first = remaining.iter_ones().next().unwrap();
+    for &i in cands {
+        if sets[i].get(first) && !chosen.contains(&i) {
+            let mut rem = remaining.clone();
+            rem.and_assign(&sets[i].not());
+            chosen.push(i);
+            bb(cands, sets, &rem, chosen, best);
+            chosen.pop();
+        }
+    }
+}
+
+/// Symbolic fallback for wide covers: one-at-a-time removal, most
+/// specialized first.
+fn irredundant_symbolic(f: &Cover, dc: &Cover) -> Cover {
+    let nvars = f.nvars();
+    let mut order: Vec<usize> = (0..f.cubes.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(f.cubes[i].literal_count()));
+    let mut alive = vec![true; f.cubes.len()];
+    for &i in &order {
+        let mut rest = Vec::with_capacity(f.cubes.len() + dc.cubes.len());
+        for (j, c) in f.cubes.iter().enumerate() {
+            if j != i && alive[j] {
+                rest.push(c.clone());
+            }
+        }
+        rest.extend(dc.cubes.iter().cloned());
+        let rest = Cover::from_cubes(nvars, rest);
+        if rest.contains_cube(&f.cubes[i]) {
+            alive[i] = false;
+        }
+    }
+    let cubes = f
+        .cubes
+        .iter()
+        .zip(&alive)
+        .filter(|(_, &a)| a)
+        .map(|(c, _)| c.clone())
+        .collect();
+    Cover::from_cubes(nvars, cubes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::truthtable::TruthTable;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn removes_consensus_redundancy() {
+        // x·y + x'·z + y·z : the y·z term is redundant (consensus).
+        let f = Cover::parse(3, "11- 0-1 -11");
+        let g = irredundant(&f, &Cover::empty(3));
+        assert_eq!(g.len(), 2);
+        assert!(TruthTable::from_cover(&g) == TruthTable::from_cover(&f));
+    }
+
+    #[test]
+    fn keeps_needed_cubes() {
+        let f = Cover::parse(2, "1- -1");
+        let g = irredundant(&f, &Cover::empty(2));
+        assert_eq!(g.len(), 2);
+    }
+
+    #[test]
+    fn dc_makes_cube_redundant() {
+        let f = Cover::parse(1, "1");
+        let dc = Cover::parse(1, "1");
+        let g = irredundant(&f, &dc);
+        assert!(g.is_empty());
+    }
+
+    #[test]
+    fn solves_cyclic_cover_minimally() {
+        // All six 2-minterm primes of Σm(0,1,2,5,6,7): minimum subcover = 3.
+        let f = Cover::parse(3, "-00 0-0 10- 01- 1-1 -11");
+        let g = irredundant(&f, &Cover::empty(3));
+        assert_eq!(TruthTable::from_cover(&g), TruthTable::from_cover(&f));
+        assert_eq!(g.len(), 3, "{g:?}");
+    }
+
+    #[test]
+    fn no_cube_removable_afterwards() {
+        let mut rng = Xoshiro256::new(0x1DD);
+        for trial in 0..40 {
+            let nvars = 2 + (trial % 5);
+            let tt = TruthTable::from_fn(nvars, |_| rng.bernoulli(0.45));
+            let f = TruthTable::isop(&tt, &TruthTable::zeros(nvars));
+            let g = irredundant(&f, &Cover::empty(nvars));
+            assert_eq!(TruthTable::from_cover(&g), tt);
+            for i in 0..g.len() {
+                let mut cubes = g.cubes.clone();
+                cubes.remove(i);
+                let smaller = Cover::from_cubes(nvars, cubes);
+                assert_ne!(
+                    TruthTable::from_cover(&smaller),
+                    tt,
+                    "cube {i} still redundant"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn symbolic_fallback_agrees_semantically() {
+        let mut rng = Xoshiro256::new(0x51B);
+        for _ in 0..20 {
+            let nvars = 5;
+            let tt = TruthTable::from_fn(nvars, |_| rng.bernoulli(0.4));
+            let f = TruthTable::isop(&tt, &TruthTable::zeros(nvars));
+            let a = irredundant_dense(&f, &Cover::empty(nvars));
+            let b = irredundant_symbolic(&f, &Cover::empty(nvars));
+            assert_eq!(TruthTable::from_cover(&a), tt);
+            assert_eq!(TruthTable::from_cover(&b), tt);
+            assert!(a.len() <= b.len(), "dense must not be worse");
+        }
+    }
+}

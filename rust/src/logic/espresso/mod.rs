@@ -1,0 +1,389 @@
+//! ESPRESSO-II two-level logic minimization (Brayton et al. [36]).
+//!
+//! The paper feeds every neuron's enumerated truth table through ESPRESSO-II
+//! before multi-level synthesis; this module is a faithful in-tree
+//! implementation of the classic loop:
+//!
+//! ```text
+//! F ← ISOP(on, dc)            # compact seed (Minato–Morreale)
+//! R ← complement(on ∪ dc)     # OFF-set, unate-recursive complement
+//! F ← EXPAND(F, R); F ← IRREDUNDANT(F, D)
+//! (E, F) ← ESSENTIAL(F, D); D ← D ∪ E
+//! repeat
+//!     F ← REDUCE(F, D); F ← EXPAND(F, R); F ← IRREDUNDANT(F, D)
+//! until cost stops improving
+//! return F ∪ E
+//! ```
+//!
+//! Cost is (cube count, literal count), compared lexicographically. The
+//! LAST_GASP/SUPER_GASP escape phases of the original are omitted (they
+//! matter for large PLAs, not ≤16-input neuron functions); the property
+//! suite in `rust/tests/property_logic.rs` checks minimality against a
+//! brute-force exact minimizer on small functions.
+
+pub mod essential;
+pub mod expand;
+pub mod irredundant;
+pub mod reduce;
+
+use crate::logic::cube::Cover;
+use crate::logic::truthtable::TruthTable;
+
+/// Outcome statistics of a minimization run (recorded by the flow report).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EspressoStats {
+    pub initial_cubes: usize,
+    pub final_cubes: usize,
+    pub final_literals: usize,
+    pub iterations: usize,
+    pub essential_primes: usize,
+}
+
+/// Minimize the incompletely-specified function (`on`, `dc`) given as dense
+/// truth tables. Returns a prime, irredundant cover `C` with
+/// `on ⊆ C ⊆ on ∪ dc`, plus run statistics.
+pub fn minimize_tt(on: &TruthTable, dc: &TruthTable) -> (Cover, EspressoStats) {
+    let nvars = on.nvars();
+    debug_assert!(on.and(dc).is_zero(), "ON and DC must be disjoint");
+    let off_tt = on.or(dc).not();
+    let f0 = TruthTable::isop(on, dc);
+    let dc_cover = TruthTable::isop(dc, &TruthTable::zeros(nvars));
+    let off = TruthTable::isop(&off_tt, &TruthTable::zeros(nvars));
+    minimize_covers(&f0, &dc_cover, &off)
+}
+
+/// Minimize starting from explicit covers. `off` must be the exact
+/// complement of `on ∪ dc` (callers that only have covers can use
+/// [`Cover::complement`]).
+pub fn minimize_covers(
+    f0: &Cover,
+    dc: &Cover,
+    off: &Cover,
+) -> (Cover, EspressoStats) {
+    let nvars = f0.nvars();
+    let initial_cubes = f0.len();
+
+    // Trivial cases.
+    if f0.is_empty() {
+        return (
+            Cover::empty(nvars),
+            EspressoStats {
+                initial_cubes,
+                final_cubes: 0,
+                final_literals: 0,
+                iterations: 0,
+                essential_primes: 0,
+            },
+        );
+    }
+    if off.is_empty() {
+        let c = Cover::universe(nvars);
+        return (
+            c,
+            EspressoStats {
+                initial_cubes,
+                final_cubes: 1,
+                final_literals: 0,
+                iterations: 0,
+                essential_primes: 0,
+            },
+        );
+    }
+
+    let mut f = expand::expand(f0, off);
+    f = irredundant::irredundant(&f, dc);
+
+    // Extract essentials and fold them into the DC set for the loop.
+    let (ess, non_ess) = essential::partition_essential(&f, dc);
+    let dc_loop = dc.union(&ess);
+    f = non_ess;
+
+    let mut cost = (f.len(), f.literal_count());
+    let mut iterations = 0usize;
+    loop {
+        iterations += 1;
+        let r = reduce::reduce(&f, &dc_loop);
+        let e = expand::expand(&r, off);
+        let i = irredundant::irredundant(&e, &dc_loop);
+        let new_cost = (i.len(), i.literal_count());
+        if new_cost < cost {
+            f = i;
+            cost = new_cost;
+        } else {
+            // LAST_GASP: reduce each cube maximally *in isolation*, expand
+            // the reductions toward covering each other, and re-solve the
+            // covering problem over old ∪ new primes. Escapes cyclic traps
+            // the sequential REDUCE order cannot.
+            let g = last_gasp(&f, &dc_loop, off);
+            let g_cost = (g.len(), g.literal_count());
+            if g_cost < cost {
+                f = g;
+                cost = g_cost;
+                continue;
+            }
+            break;
+        }
+        if iterations > 20 {
+            break; // safety net; never hit in practice
+        }
+    }
+
+    let mut result = f.union(&ess);
+    result.sccc_prune();
+    let stats = EspressoStats {
+        initial_cubes,
+        final_cubes: result.len(),
+        final_literals: result.literal_count(),
+        iterations,
+        essential_primes: ess.len(),
+    };
+    (result, stats)
+}
+
+/// LAST_GASP (Brayton et al. §4.7): independent maximal reduction of every
+/// cube, pairwise supercube expansion between reduced cubes, then a global
+/// IRREDUNDANT over the union of old and new primes.
+fn last_gasp(f: &Cover, dc: &Cover, off: &Cover) -> Cover {
+    let nvars = f.nvars();
+    if f.len() < 2 {
+        return f.clone();
+    }
+    // Maximal reduction of each cube against the ORIGINAL cover.
+    let mut reduced: Vec<crate::logic::cube::Cube> = Vec::with_capacity(f.len());
+    for (i, c) in f.cubes.iter().enumerate() {
+        let mut rest: Vec<crate::logic::cube::Cube> = f
+            .cubes
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| *j != i)
+            .map(|(_, c)| c.clone())
+            .collect();
+        rest.extend(dc.cubes.iter().cloned());
+        let g = Cover::from_cubes(nvars, rest).cofactor(c);
+        if g.is_tautology() {
+            continue; // totally redundant; contributes nothing
+        }
+        let comp = g.complement();
+        if comp.is_empty() {
+            continue;
+        }
+        let mut sccc = comp.cubes[0].clone();
+        for k in &comp.cubes[1..] {
+            sccc = sccc.supercube(k);
+        }
+        if let Some(r) = c.intersect(&sccc) {
+            reduced.push(r);
+        }
+    }
+    // Pairwise supercube expansion: a new prime is interesting iff the
+    // supercube of two reduced cubes avoids OFF.
+    let mut new_primes: Vec<crate::logic::cube::Cube> = Vec::new();
+    for i in 0..reduced.len() {
+        for j in (i + 1)..reduced.len() {
+            let sc = reduced[i].supercube(&reduced[j]);
+            if off.cubes.iter().all(|o| sc.distance(o) > 0) {
+                let p = expand::expand_one(&sc, off, nvars);
+                if !new_primes.contains(&p) && !f.cubes.contains(&p) {
+                    new_primes.push(p);
+                }
+            }
+        }
+    }
+    if new_primes.is_empty() {
+        return f.clone();
+    }
+    let mut all = f.cubes.clone();
+    all.extend(new_primes);
+    irredundant::irredundant(&Cover::from_cubes(nvars, all), dc)
+}
+
+/// Exact minimum cube count via Quine–McCluskey + exhaustive set cover.
+/// Exponential; only used by tests (≤ ~5 vars) as a minimality oracle.
+pub fn exact_minimum_cubes(on: &TruthTable, dc: &TruthTable) -> usize {
+    let nvars = on.nvars();
+    assert!(nvars <= 5, "exact minimizer is a test oracle only");
+    // All primes: expand every ON∪DC minterm against OFF.
+    let care = on.or(dc);
+    let off_tt = care.not();
+    let off = TruthTable::isop(&off_tt, &TruthTable::zeros(nvars));
+    let mut primes = Vec::new();
+    for m in 0..1u64 << nvars {
+        if care.eval(m) {
+            let p = expand::expand_one(
+                &crate::logic::cube::Cube::minterm(nvars, m),
+                &off,
+                nvars,
+            );
+            if !primes.contains(&p) {
+                primes.push(p);
+            }
+        }
+    }
+    // NOTE: greedy expansion from minterms may miss some primes, so grow the
+    // set by raising every literal subset (feasible at ≤5 vars: enumerate all
+    // cubes and keep implicants that are prime).
+    primes.clear();
+    let ncubes = 3usize.pow(nvars as u32);
+    let mut all: Vec<crate::logic::cube::Cube> = Vec::new();
+    for code in 0..ncubes {
+        let mut c = crate::logic::cube::Cube::full(nvars);
+        let mut rem = code;
+        for v in 0..nvars {
+            match rem % 3 {
+                0 => c.set(v, crate::logic::cube::Pol::Zero),
+                1 => c.set(v, crate::logic::cube::Pol::One),
+                _ => {}
+            }
+            rem /= 3;
+        }
+        // implicant iff disjoint from OFF
+        if (0..1u64 << nvars).all(|m| !c.covers_minterm(m) || care.eval(m)) {
+            all.push(c);
+        }
+    }
+    for c in &all {
+        let prime = !all.iter().any(|d| d != c && d.contains(c));
+        if prime {
+            primes.push(c.clone());
+        }
+    }
+    // Exhaustive set cover over ON minterms (≤ 32 at 5 vars).
+    let on_minterms: Vec<u64> = (0..1u64 << nvars).filter(|&m| on.eval(m)).collect();
+    if on_minterms.is_empty() {
+        return 0;
+    }
+    for k in 1..=primes.len() {
+        if cover_exists(&primes, &on_minterms, k, 0, &mut Vec::new()) {
+            return k;
+        }
+    }
+    unreachable!("primes must cover ON")
+}
+
+fn cover_exists(
+    primes: &[crate::logic::cube::Cube],
+    minterms: &[u64],
+    k: usize,
+    start: usize,
+    chosen: &mut Vec<usize>,
+) -> bool {
+    if chosen.len() == k {
+        return minterms
+            .iter()
+            .all(|&m| chosen.iter().any(|&i| primes[i].covers_minterm(m)));
+    }
+    for i in start..primes.len() {
+        chosen.push(i);
+        if cover_exists(primes, minterms, k, i + 1, chosen) {
+            chosen.pop();
+            return true;
+        }
+        chosen.pop();
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn minimizes_classic_examples() {
+        // f = Σm(0,1,2,5,6,7) over 3 vars — minimum is 3 cubes? This is the
+        // classic cyclic cover example; minimum = 3.
+        let on = TruthTable::from_fn(3, |m| [0, 1, 2, 5, 6, 7].contains(&m));
+        let dc = TruthTable::zeros(3);
+        let (c, stats) = minimize_tt(&on, &dc);
+        assert_eq!(TruthTable::from_cover(&c), on);
+        assert_eq!(c.len(), 3, "cyclic example minimum is 3 cubes\n{c:?}");
+        assert_eq!(stats.final_cubes, 3);
+    }
+
+    #[test]
+    fn exploits_dont_cares() {
+        // 7-segment style: ON = {1,2}, DC = {10..15} at 4 vars lets cubes
+        // grow across unused codes.
+        let on = TruthTable::from_fn(4, |m| m == 1 || m == 2);
+        let dc = TruthTable::from_fn(4, |m| m >= 10);
+        let (c, _) = minimize_tt(&on, &dc);
+        let ctt = TruthTable::from_cover(&c);
+        assert!(on.implies(&ctt));
+        assert!(ctt.implies(&on.or(&dc)));
+        // Without DC this needs 2 cubes of 4 literals; with DC the literal
+        // count must not be worse.
+        let (c_nodc, _) = minimize_tt(&on, &TruthTable::zeros(4));
+        assert!(c.literal_count() <= c_nodc.literal_count());
+    }
+
+    #[test]
+    fn result_is_prime_and_irredundant() {
+        let mut rng = Xoshiro256::new(0x9999);
+        for trial in 0..40 {
+            let nvars = 2 + (trial % 5);
+            let on = TruthTable::from_fn(nvars, |_| rng.bernoulli(0.4));
+            let dc = TruthTable::zeros(nvars);
+            let (c, _) = minimize_tt(&on, &dc);
+            assert_eq!(TruthTable::from_cover(&c), on, "function changed");
+            // primality: raising any literal hits OFF
+            let off = TruthTable::isop(&on.not(), &TruthTable::zeros(nvars));
+            for cube in &c.cubes {
+                for v in 0..nvars {
+                    use crate::logic::cube::Pol;
+                    if cube.get(v) != Pol::DC {
+                        let mut r = cube.clone();
+                        r.set(v, Pol::DC);
+                        assert!(
+                            off.cubes.iter().any(|o| r.distance(o) == 0),
+                            "cube {cube:?} not prime at var {v}"
+                        );
+                    }
+                }
+            }
+            // irredundancy
+            for i in 0..c.len() {
+                let mut cubes = c.cubes.clone();
+                cubes.remove(i);
+                let smaller = Cover::from_cubes(nvars, cubes);
+                assert_ne!(TruthTable::from_cover(&smaller), on, "cube {i} redundant");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_exact_minimum_on_small_functions() {
+        let mut rng = Xoshiro256::new(0xE5A);
+        let mut total_gap = 0usize;
+        let mut checked = 0usize;
+        for _ in 0..60 {
+            let nvars = 3 + (rng.below(2) as usize); // 3..4 vars
+            let on = TruthTable::from_fn(nvars, |_| rng.bernoulli(0.45));
+            let dc = TruthTable::zeros(nvars);
+            let (c, _) = minimize_tt(&on, &dc);
+            let exact = exact_minimum_cubes(&on, &dc);
+            assert!(c.len() >= exact);
+            total_gap += c.len() - exact;
+            checked += 1;
+            // heuristic should be within 1 cube of optimal on tiny functions
+            assert!(
+                c.len() <= exact + 1,
+                "espresso {} vs exact {} on {on:?}",
+                c.len(),
+                exact
+            );
+        }
+        // and on average essentially optimal
+        assert!(checked > 0 && (total_gap as f64 / checked as f64) < 0.25);
+    }
+
+    #[test]
+    fn constants() {
+        let z = TruthTable::zeros(4);
+        let o = TruthTable::ones(4);
+        let (c0, _) = minimize_tt(&z, &z);
+        assert!(c0.is_empty());
+        let (c1, _) = minimize_tt(&o, &z);
+        assert_eq!(c1.len(), 1);
+        assert_eq!(c1.literal_count(), 0);
+    }
+}

@@ -1,0 +1,119 @@
+//! REDUCE — shrink each cube to the smallest cube that still covers the
+//! part of the function no other cube covers.
+//!
+//! `reduce(c) = c ∩ SCCC((F ∖ {c} ∪ D) cofactored by c)` where SCCC is the
+//! smallest cube containing the *complement* of the cofactor. Reduction
+//! deliberately un-primes cubes so the next EXPAND can escape local minima —
+//! the heart of the ESPRESSO iteration.
+
+use crate::logic::cube::{Cover, Cube};
+
+/// One REDUCE pass. Cubes are processed largest-first; each sees the
+/// already-reduced versions of its predecessors (in-place update), matching
+/// the sequential semantics of the original algorithm.
+pub fn reduce(f: &Cover, dc: &Cover) -> Cover {
+    let nvars = f.nvars();
+    let mut cubes: Vec<Cube> = f.cubes.clone();
+    let mut order: Vec<usize> = (0..cubes.len()).collect();
+    order.sort_by_key(|&i| cubes[i].literal_count());
+
+    for &i in &order {
+        let c = cubes[i].clone();
+        // G = (F \ {c}) ∪ D, cofactored by c.
+        let mut rest = Vec::with_capacity(cubes.len() + dc.cubes.len());
+        for (j, other) in cubes.iter().enumerate() {
+            if j != i {
+                rest.push(other.clone());
+            }
+        }
+        rest.extend(dc.cubes.iter().cloned());
+        let g = Cover::from_cubes(nvars, rest).cofactor(&c);
+
+        if g.is_tautology() {
+            // c entirely covered by the rest: shrink to empty (drop below).
+            cubes[i] = Cube::empty_marker(nvars);
+            continue;
+        }
+        // SCCC: supercube of the complement of g.
+        let comp = g.complement();
+        if comp.is_empty() {
+            cubes[i] = Cube::empty_marker(nvars);
+            continue;
+        }
+        let mut sccc = comp.cubes[0].clone();
+        for k in &comp.cubes[1..] {
+            sccc = sccc.supercube(k);
+        }
+        if let Some(reduced) = c.intersect(&sccc) {
+            cubes[i] = reduced;
+        } else {
+            cubes[i] = Cube::empty_marker(nvars);
+        }
+    }
+    let cubes: Vec<Cube> = cubes.into_iter().filter(|c| !c.is_empty_cube()).collect();
+    Cover::from_cubes(nvars, cubes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::espresso::expand::expand;
+    use crate::logic::truthtable::TruthTable;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn reduce_preserves_function() {
+        let mut rng = Xoshiro256::new(0x4ED);
+        for trial in 0..60 {
+            let nvars = 2 + (trial % 5);
+            let tt = TruthTable::from_fn(nvars, |_| rng.bernoulli(0.4));
+            let f = TruthTable::isop(&tt, &TruthTable::zeros(nvars));
+            let r = reduce(&f, &Cover::empty(nvars));
+            assert_eq!(TruthTable::from_cover(&r), tt, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn reduce_shrinks_overlapping_primes() {
+        // F = {x, y} over 2 vars: reduce(x) given y stays x (it uniquely
+        // covers x·y'), but reduce can never grow cubes.
+        let f = Cover::parse(2, "1- -1");
+        let r = reduce(&f, &Cover::empty(2));
+        assert!(r.literal_count() >= f.literal_count());
+        assert_eq!(
+            TruthTable::from_cover(&r),
+            TruthTable::from_cover(&f)
+        );
+    }
+
+    #[test]
+    fn reduce_drops_fully_covered_cube() {
+        // x·y is inside x; reduce should eliminate it entirely.
+        let f = Cover::parse(2, "1- 11");
+        let r = reduce(&f, &Cover::empty(2));
+        assert_eq!(TruthTable::from_cover(&r), TruthTable::from_cover(&f));
+        assert!(r.len() <= 2);
+        // After a reduce→expand roundtrip the cover stays equivalent.
+        let off = TruthTable::from_cover(&f).not();
+        let offc = TruthTable::isop(&off, &TruthTable::zeros(2));
+        let e = expand(&r, &offc);
+        assert_eq!(TruthTable::from_cover(&e), TruthTable::from_cover(&f));
+    }
+
+    #[test]
+    fn reduce_with_dc_keeps_on_covered() {
+        let mut rng = Xoshiro256::new(0xDC0);
+        for trial in 0..40 {
+            let nvars = 3 + (trial % 4);
+            let on = TruthTable::from_fn(nvars, |_| rng.bernoulli(0.3));
+            let dcm = TruthTable::from_fn(nvars, |_| rng.bernoulli(0.2));
+            let dc_tt = dcm.and(&on.not());
+            let f = TruthTable::isop(&on, &dc_tt);
+            let dc_cover = TruthTable::isop(&dc_tt, &TruthTable::zeros(nvars));
+            let r = reduce(&f, &dc_cover);
+            let rtt = TruthTable::from_cover(&r);
+            assert!(on.implies(&rtt), "ON lost in reduce, trial {trial}");
+            assert!(rtt.implies(&on.or(&dc_tt)), "reduce exceeded ON∪DC");
+        }
+    }
+}

@@ -1,0 +1,400 @@
+//! K-feasible-cut LUT technology mapping (the ABC-style "if" mapper).
+//!
+//! Maps an [`Aig`] onto k-input LUTs using priority cuts: every AND node
+//! keeps a small, dominance-pruned set of cuts ranked by (arrival depth,
+//! area flow); mapping extraction walks the best cuts from the outputs. The
+//! LUT function for each selected cut is derived by dense simulation of the
+//! cut's cone. Depth-optimal for the stored cut sets (the standard
+//! guarantee); area is first-order optimized via area flow and can be
+//! traded with [`MapConfig::sort_by_area`].
+
+use std::collections::HashMap;
+
+use crate::logic::aig::{lit_inv, lit_node, Aig, Node};
+use crate::logic::netlist::{LutNetlist, Sig};
+use crate::logic::truthtable::TruthTable;
+
+/// Mapper configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MapConfig {
+    /// LUT input count (VU9P native: 6).
+    pub k: usize,
+    /// Cuts retained per node.
+    pub cuts_per_node: usize,
+    /// Rank primarily by area flow instead of depth.
+    pub sort_by_area: bool,
+}
+
+impl Default for MapConfig {
+    fn default() -> Self {
+        MapConfig { k: 6, cuts_per_node: 8, sort_by_area: false }
+    }
+}
+
+/// One cut: sorted leaf node indices.
+#[derive(Clone, Debug, PartialEq)]
+struct Cut {
+    leaves: Vec<u32>,
+    depth: u32,
+    area_flow: f32,
+}
+
+impl Cut {
+    fn dominates(&self, other: &Cut) -> bool {
+        self.leaves.len() <= other.leaves.len()
+            && self.leaves.iter().all(|l| other.leaves.contains(l))
+    }
+}
+
+fn merge_leaves(a: &[u32], b: &[u32], k: usize) -> Option<Vec<u32>> {
+    let mut out = Vec::with_capacity(k + 1);
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() || j < b.len() {
+        let next = if i < a.len() && (j >= b.len() || a[i] <= b[j]) {
+            if j < b.len() && a[i] == b[j] {
+                j += 1;
+            }
+            let v = a[i];
+            i += 1;
+            v
+        } else {
+            let v = b[j];
+            j += 1;
+            v
+        };
+        out.push(next);
+        if out.len() > k {
+            return None;
+        }
+    }
+    Some(out)
+}
+
+/// Result of mapping: the netlist plus per-output provenance.
+pub struct MapResult {
+    pub netlist: LutNetlist,
+    /// Mapped depth (LUT levels on the critical path).
+    pub depth: u32,
+}
+
+/// Map `aig` to a K-LUT netlist.
+pub fn map_aig(aig: &Aig, cfg: &MapConfig) -> MapResult {
+    let n = aig.num_nodes();
+    let mut cuts: Vec<Vec<Cut>> = vec![Vec::new(); n];
+    let mut arrival: Vec<u32> = vec![0; n];
+    // Reference counts for area flow (fanout estimation).
+    let mut nref: Vec<u32> = vec![0; n];
+    for i in 0..n {
+        if let Node::And(a, b) = aig.node(i) {
+            nref[lit_node(a)] += 1;
+            nref[lit_node(b)] += 1;
+        }
+    }
+    for &o in aig.outputs() {
+        nref[lit_node(o)] += 1;
+    }
+
+    for i in 0..n {
+        match aig.node(i) {
+            Node::Const => {
+                cuts[i] = vec![Cut { leaves: vec![], depth: 0, area_flow: 0.0 }];
+            }
+            Node::Input(_) => {
+                cuts[i] =
+                    vec![Cut { leaves: vec![i as u32], depth: 0, area_flow: 0.0 }];
+                arrival[i] = 0;
+            }
+            Node::And(la, lb) => {
+                let (na, nb) = (lit_node(la), lit_node(lb));
+                let mut set: Vec<Cut> = Vec::new();
+                for ca in &cuts[na] {
+                    for cb in &cuts[nb] {
+                        if let Some(leaves) = merge_leaves(&ca.leaves, &cb.leaves, cfg.k)
+                        {
+                            let depth = 1 + leaves
+                                .iter()
+                                .map(|&l| arrival[l as usize])
+                                .max()
+                                .unwrap_or(0);
+                            let area_flow = 1.0
+                                + leaves
+                                    .iter()
+                                    .map(|&l| {
+                                        let refs = nref[l as usize].max(1) as f32;
+                                        flow_of(&cuts[l as usize]) / refs
+                                    })
+                                    .sum::<f32>();
+                            let cut = Cut { leaves, depth, area_flow };
+                            if !set.iter().any(|c| c.dominates(&cut) && c.depth <= cut.depth) {
+                                set.retain(|c| {
+                                    !(cut.dominates(c) && cut.depth <= c.depth)
+                                });
+                                set.push(cut);
+                            }
+                        }
+                    }
+                }
+                // Rank and truncate.
+                if cfg.sort_by_area {
+                    set.sort_by(|x, y| {
+                        (x.area_flow, x.depth, x.leaves.len())
+                            .partial_cmp(&(y.area_flow, y.depth, y.leaves.len()))
+                            .unwrap()
+                    });
+                } else {
+                    set.sort_by(|x, y| {
+                        (x.depth, x.area_flow, x.leaves.len())
+                            .partial_cmp(&(y.depth, y.area_flow, y.leaves.len()))
+                            .unwrap()
+                    });
+                }
+                set.truncate(cfg.cuts_per_node.max(1));
+                // Trivial cut last (keeps node itself representable as leaf
+                // of upstream cuts).
+                arrival[i] = set.first().map(|c| c.depth).unwrap_or(0);
+                set.push(Cut {
+                    leaves: vec![i as u32],
+                    depth: arrival[i],
+                    area_flow: flow_of(&set),
+                });
+                cuts[i] = set;
+            }
+        }
+    }
+
+    // --- extraction ---
+    let mut netlist = LutNetlist::new(aig.num_inputs() as usize);
+    // node -> already-emitted signal
+    let mut emitted: HashMap<u32, Sig> = HashMap::new();
+
+    // Map every output cone.
+    let mut out_specs = Vec::new();
+    for &o in aig.outputs() {
+        let node = lit_node(o) as u32;
+        let sig = emit_node(aig, node, &cuts, cfg, &mut emitted, &mut netlist);
+        out_specs.push((sig, lit_inv(o)));
+    }
+    for (sig, inv) in out_specs {
+        netlist.add_output(sig, inv);
+    }
+    let depth = netlist.depth();
+    MapResult { netlist, depth }
+}
+
+fn flow_of(set: &[Cut]) -> f32 {
+    set.first().map(|c| c.area_flow).unwrap_or(0.0)
+}
+
+/// Emit the LUT implementing `node` (choosing its best cut), recursively
+/// emitting leaf nodes first. Inputs/consts are returned directly.
+fn emit_node(
+    aig: &Aig,
+    node: u32,
+    cuts: &[Vec<Cut>],
+    cfg: &MapConfig,
+    emitted: &mut HashMap<u32, Sig>,
+    netlist: &mut LutNetlist,
+) -> Sig {
+    if let Some(s) = emitted.get(&node) {
+        return *s;
+    }
+    let sig = match aig.node(node as usize) {
+        Node::Const => Sig::Const(false),
+        Node::Input(k) => Sig::Input(k),
+        Node::And(..) => {
+            // Best non-trivial cut (first in ranked order that isn't the
+            // node itself).
+            let cut = cuts[node as usize]
+                .iter()
+                .find(|c| c.leaves != [node])
+                .expect("AND node must have a non-trivial cut")
+                .clone();
+            let leaf_sigs: Vec<Sig> = cut
+                .leaves
+                .iter()
+                .map(|&l| emit_node(aig, l, cuts, cfg, emitted, netlist))
+                .collect();
+            let table = cone_truth_table(aig, node, &cut.leaves);
+            netlist.add_lut(leaf_sigs, table)
+        }
+    };
+    emitted.insert(node, sig);
+    sig
+}
+
+/// Dense truth table of `node` as a function of `leaves` (≤ k inputs),
+/// computed by simulating the cone with projection tables at the leaves.
+pub fn cone_truth_table(aig: &Aig, node: u32, leaves: &[u32]) -> TruthTable {
+    let k = leaves.len();
+    let mut memo: HashMap<u32, TruthTable> = HashMap::new();
+    for (i, &l) in leaves.iter().enumerate() {
+        memo.insert(l, TruthTable::var(k, i));
+    }
+    fn rec(aig: &Aig, n: u32, memo: &mut HashMap<u32, TruthTable>, k: usize) -> TruthTable {
+        if let Some(t) = memo.get(&n) {
+            return t.clone();
+        }
+        let t = match aig.node(n as usize) {
+            Node::Const => TruthTable::zeros(k),
+            Node::Input(_) => {
+                panic!("input {n} reached without being a leaf — bad cut")
+            }
+            Node::And(la, lb) => {
+                let ta = rec(aig, lit_node(la) as u32, memo, k);
+                let ta = if lit_inv(la) { ta.not() } else { ta };
+                let tb = rec(aig, lit_node(lb) as u32, memo, k);
+                let tb = if lit_inv(lb) { tb.not() } else { tb };
+                ta.and(&tb)
+            }
+        };
+        memo.insert(n, t.clone());
+        t
+    }
+    rec(aig, node, &mut memo, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::aig::{lit_not, Lit};
+    use crate::util::prng::Xoshiro256;
+
+    /// Build a random AIG with `nin` inputs and `nops` random ops.
+    fn random_aig(nin: usize, nops: usize, seed: u64) -> Aig {
+        let mut rng = Xoshiro256::new(seed);
+        let mut g = Aig::new();
+        let mut pool: Vec<Lit> = (0..nin).map(|_| g.add_input()).collect();
+        for _ in 0..nops {
+            let a = pool[rng.below(pool.len() as u64) as usize];
+            let b = pool[rng.below(pool.len() as u64) as usize];
+            let l = match rng.below(3) {
+                0 => g.and(a, b),
+                1 => g.or(a, b),
+                _ => g.xor(a, b),
+            };
+            pool.push(if rng.bernoulli(0.3) { lit_not(l) } else { l });
+        }
+        // a few outputs from the end of the pool
+        for i in 0..3.min(pool.len()) {
+            let l = pool[pool.len() - 1 - i];
+            g.add_output(l);
+        }
+        g
+    }
+
+    #[test]
+    fn maps_xor_chain_functionally() {
+        let mut g = Aig::new();
+        let ins: Vec<Lit> = (0..8).map(|_| g.add_input()).collect();
+        let mut acc = ins[0];
+        for &l in &ins[1..] {
+            acc = g.xor(acc, l);
+        }
+        g.add_output(acc);
+        let res = map_aig(&g, &MapConfig::default());
+        for trial in 0..256u64 {
+            assert_eq!(res.netlist.eval(trial)[0], g.eval(trial)[0], "m={trial}");
+        }
+        // 8-input XOR in 6-LUTs: ≥ 2 LUTs, depth 2.
+        assert!(res.netlist.num_luts() <= 3);
+        assert_eq!(res.depth, 2);
+    }
+
+    #[test]
+    fn mapping_preserves_function_random() {
+        for seed in 0..15u64 {
+            let g = random_aig(6, 30, seed);
+            let res = map_aig(&g, &MapConfig::default());
+            assert!(res.netlist.max_arity() <= 6);
+            for m in 0..64u64 {
+                assert_eq!(res.netlist.eval(m), g.eval(m), "seed={seed} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn mapping_respects_k() {
+        for k in 2..=6usize {
+            let g = random_aig(8, 40, 99);
+            let cfg = MapConfig { k, ..Default::default() };
+            let res = map_aig(&g, &cfg);
+            assert!(res.netlist.max_arity() <= k, "k={k}");
+            for m in (0..256u64).step_by(7) {
+                assert_eq!(res.netlist.eval(m), g.eval(m));
+            }
+        }
+    }
+
+    #[test]
+    fn single_lut_when_function_fits() {
+        // Any function of ≤6 inputs must map to exactly 1 LUT.
+        let mut g = Aig::new();
+        let ins: Vec<Lit> = (0..6).map(|_| g.add_input()).collect();
+        let mut acc = ins[0];
+        for &l in &ins[1..] {
+            acc = g.xor(acc, l); // deep AIG, but 6 inputs total
+        }
+        g.add_output(acc);
+        let res = map_aig(&g, &MapConfig::default());
+        assert_eq!(res.netlist.num_luts(), 1);
+        assert_eq!(res.depth, 1);
+        for m in 0..64u64 {
+            assert_eq!(res.netlist.eval(m)[0], g.eval(m)[0]);
+        }
+    }
+
+    #[test]
+    fn inverted_and_constant_outputs() {
+        let mut g = Aig::new();
+        let a = g.add_input();
+        let b = g.add_input();
+        let x = g.and(a, b);
+        g.add_output(lit_not(x));
+        g.add_output(crate::logic::aig::LIT_TRUE);
+        g.add_output(a);
+        let res = map_aig(&g, &MapConfig::default());
+        for m in 0..4u64 {
+            let e = res.netlist.eval(m);
+            assert_eq!(e[0], !(m & 1 == 1 && m & 2 == 2));
+            assert!(e[1]);
+            assert_eq!(e[2], m & 1 == 1);
+        }
+    }
+
+    #[test]
+    fn area_mode_not_worse_than_depth_mode_area() {
+        let g = random_aig(10, 80, 1234);
+        let d = map_aig(&g, &MapConfig { sort_by_area: false, ..Default::default() });
+        let a = map_aig(&g, &MapConfig { sort_by_area: true, ..Default::default() });
+        // Area mode should not use more LUTs than depth mode on average;
+        // allow slack of 1 LUT for this single instance but verify both map
+        // correctly.
+        for m in (0..1024u64).step_by(13) {
+            assert_eq!(d.netlist.eval(m), g.eval(m));
+            assert_eq!(a.netlist.eval(m), g.eval(m));
+        }
+        assert!(a.netlist.num_luts() <= d.netlist.num_luts() + 1);
+    }
+
+    #[test]
+    fn shared_nodes_emitted_once() {
+        // Two outputs sharing a subcone must not duplicate LUTs when the
+        // shared node is a cut leaf of both.
+        let mut g = Aig::new();
+        let ins: Vec<Lit> = (0..7).map(|_| g.add_input()).collect();
+        let mut acc = ins[0];
+        for &l in &ins[1..] {
+            acc = g.xor(acc, l);
+        }
+        g.add_output(acc);
+        g.add_output(lit_not(acc));
+        let res = map_aig(&g, &MapConfig::default());
+        // second output reuses the first cone entirely
+        for m in 0..128u64 {
+            let e = res.netlist.eval(m);
+            assert_eq!(e[0], g.eval(m)[0]);
+            assert_eq!(e[1], !e[0]);
+        }
+        assert!(res.netlist.num_luts() <= 2);
+    }
+}

@@ -1,0 +1,28 @@
+//! Logic synthesis core: two-level minimization, multi-level optimization,
+//! technology mapping, retiming, simulation, and netlist emission.
+//!
+//! This is the substrate stack the paper delegates to ESPRESSO-II and Xilinx
+//! Vivado (DESIGN.md §4 documents the substitution):
+//!
+//! * [`cube`] — positional-cube algebra ([`cube::Cover`] = SOP)
+//! * [`truthtable`] — dense tables + Minato–Morreale ISOP
+//! * [`espresso`] — two-level minimization (EXPAND/IRREDUNDANT/REDUCE/ESSENTIAL)
+//! * [`aig`] — and-inverter graph with structural hashing
+//! * [`mapper`] — k-feasible-cut LUT technology mapping
+//! * [`netlist`] — mapped LUT network with pipeline registers
+//! * [`retime`] — min-period retiming (Leiserson–Saxe)
+//! * [`sim`] — 64-way bit-parallel netlist simulation
+//! * [`verify`] — exhaustive + sampled equivalence checking
+//! * [`blif`] / [`verilog`] — interchange emitters for real FPGA tools
+
+pub mod aig;
+pub mod blif;
+pub mod cube;
+pub mod espresso;
+pub mod mapper;
+pub mod netlist;
+pub mod retime;
+pub mod sim;
+pub mod truthtable;
+pub mod verify;
+pub mod verilog;

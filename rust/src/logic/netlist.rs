@@ -1,0 +1,467 @@
+//! Mapped LUT netlists and pipelined circuits.
+//!
+//! After technology mapping, a neuron/layer/network is a DAG of k-input
+//! LUTs ([`LutNetlist`]). The hardware realization the paper reports is a
+//! *pipelined* version: register boundaries between network layers (and
+//! after retiming, wherever the retimer moved them). [`PipelinedCircuit`]
+//! couples a flattened netlist with a stage assignment and provides the
+//! LUT/FF/depth statistics that Table I quotes.
+
+use crate::logic::truthtable::TruthTable;
+
+/// Reference to a signal in a [`LutNetlist`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Sig {
+    /// Constant 0 or 1.
+    Const(bool),
+    /// Primary input by index.
+    Input(u32),
+    /// Output of LUT `i`.
+    Lut(u32),
+}
+
+/// A k-input lookup table node.
+#[derive(Clone, Debug)]
+pub struct Lut {
+    /// Input signals (order matches truth-table variable order).
+    pub inputs: Vec<Sig>,
+    /// Function over `inputs.len()` variables.
+    pub table: TruthTable,
+}
+
+impl Lut {
+    /// Number of inputs.
+    pub fn arity(&self) -> usize {
+        self.inputs.len()
+    }
+}
+
+/// A combinational network of LUTs in topological order (a LUT's inputs may
+/// only reference primary inputs or earlier LUTs).
+#[derive(Clone, Debug, Default)]
+pub struct LutNetlist {
+    /// Number of primary inputs.
+    pub num_inputs: usize,
+    /// LUT nodes, topologically sorted.
+    pub luts: Vec<Lut>,
+    /// Primary outputs: signal plus inversion flag.
+    pub outputs: Vec<(Sig, bool)>,
+}
+
+impl LutNetlist {
+    /// Empty netlist with `num_inputs` primary inputs.
+    pub fn new(num_inputs: usize) -> Self {
+        LutNetlist { num_inputs, luts: Vec::new(), outputs: Vec::new() }
+    }
+
+    /// Append a LUT; returns its signal. Panics if inputs are not yet
+    /// defined (enforces topological order).
+    pub fn add_lut(&mut self, inputs: Vec<Sig>, table: TruthTable) -> Sig {
+        assert_eq!(table.nvars(), inputs.len());
+        let idx = self.luts.len() as u32;
+        for s in &inputs {
+            match s {
+                Sig::Lut(i) => assert!(*i < idx, "inputs must precede the LUT"),
+                Sig::Input(i) => assert!((*i as usize) < self.num_inputs),
+                Sig::Const(_) => {}
+            }
+        }
+        self.luts.push(Lut { inputs, table });
+        Sig::Lut(idx)
+    }
+
+    /// Register a primary output.
+    pub fn add_output(&mut self, sig: Sig, inverted: bool) {
+        self.outputs.push((sig, inverted));
+    }
+
+    /// Number of LUTs.
+    pub fn num_luts(&self) -> usize {
+        self.luts.len()
+    }
+
+    /// Maximum LUT arity.
+    pub fn max_arity(&self) -> usize {
+        self.luts.iter().map(|l| l.arity()).max().unwrap_or(0)
+    }
+
+    /// Logic level of each LUT (inputs at level 0; a LUT is 1 + max of its
+    /// input levels).
+    pub fn levels(&self) -> Vec<u32> {
+        let mut lv = vec![0u32; self.luts.len()];
+        for (i, lut) in self.luts.iter().enumerate() {
+            let m = lut
+                .inputs
+                .iter()
+                .map(|s| match s {
+                    Sig::Lut(j) => lv[*j as usize],
+                    _ => 0,
+                })
+                .max()
+                .unwrap_or(0);
+            lv[i] = m + 1;
+        }
+        lv
+    }
+
+    /// Depth (max level over outputs).
+    pub fn depth(&self) -> u32 {
+        let lv = self.levels();
+        self.outputs
+            .iter()
+            .map(|(s, _)| match s {
+                Sig::Lut(i) => lv[*i as usize],
+                _ => 0,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// 64-way bit-parallel evaluation: `inputs[i]` is a word of 64 samples
+    /// for primary input `i`; returns a word per output.
+    pub fn simulate_words(&self, inputs: &[u64]) -> Vec<u64> {
+        assert_eq!(inputs.len(), self.num_inputs);
+        let mut val = vec![0u64; self.luts.len()];
+        let read = |val: &[u64], s: &Sig| -> u64 {
+            match s {
+                Sig::Const(false) => 0,
+                Sig::Const(true) => !0u64,
+                Sig::Input(i) => inputs[*i as usize],
+                Sig::Lut(i) => val[*i as usize],
+            }
+        };
+        for (i, lut) in self.luts.iter().enumerate() {
+            let in_words: Vec<u64> = lut.inputs.iter().map(|s| read(&val, s)).collect();
+            val[i] = eval_lut_words(&lut.table, &in_words);
+        }
+        self.outputs
+            .iter()
+            .map(|(s, inv)| read(&val, s) ^ if *inv { !0u64 } else { 0 })
+            .collect()
+    }
+
+    /// Evaluate one assignment (bit `i` = primary input `i`).
+    pub fn eval(&self, input_bits: u64) -> Vec<bool> {
+        let words: Vec<u64> = (0..self.num_inputs)
+            .map(|i| if (input_bits >> i) & 1 == 1 { !0u64 } else { 0 })
+            .collect();
+        self.simulate_words(&words).iter().map(|&w| w & 1 == 1).collect()
+    }
+}
+
+/// Evaluate a LUT's table across 64 lanes: classic "truth-table gather" via
+/// binary Shannon expansion over the input words (k table lookups become k
+/// mux levels of word ops — branch-free and cache-friendly).
+#[inline]
+pub fn eval_lut_words(table: &TruthTable, in_words: &[u64]) -> u64 {
+    debug_assert_eq!(table.nvars(), in_words.len());
+    // Start from the table bits replicated per lane via recursion:
+    // out = mux(in[k-1], hi_half, lo_half) applied word-wise.
+    fn rec(table: &TruthTable, in_words: &[u64], lo: u64, span: usize, k: usize) -> u64 {
+        if k == 0 {
+            return if table.eval(lo) { !0u64 } else { 0 };
+        }
+        let half = span / 2;
+        let w0 = rec(table, in_words, lo, half, k - 1);
+        let w1 = rec(table, in_words, lo + half as u64, half, k - 1);
+        let sel = in_words[k - 1];
+        (sel & w1) | (!sel & w0)
+    }
+    let k = table.nvars();
+    rec(table, in_words, 0, 1usize << k, k)
+}
+
+/// A pipelined circuit: a flattened netlist plus a register-stage
+/// assignment. LUT `i` executes in stage `stage_of_lut[i] ∈ [0, num_stages)`;
+/// registers sit at every stage boundary, at the primary inputs, and at the
+/// primary outputs (the convention LogicNets and NullaNet Tiny both use for
+/// their fmax reports).
+#[derive(Clone, Debug)]
+pub struct PipelinedCircuit {
+    /// The combinational logic.
+    pub netlist: LutNetlist,
+    /// Stage index of every LUT (monotone non-decreasing along edges).
+    pub stage_of_lut: Vec<u32>,
+    /// Number of pipeline stages.
+    pub num_stages: u32,
+}
+
+/// Hardware statistics (the Table I columns).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CircuitStats {
+    /// Total LUT count.
+    pub luts: usize,
+    /// Total flip-flop count (input regs + inter-stage + output regs).
+    pub ffs: usize,
+    /// Critical combinational depth between any two register boundaries.
+    pub max_stage_depth: u32,
+    /// Pipeline latency in cycles (= num_stages; data is registered at
+    /// every boundary).
+    pub latency_cycles: u32,
+}
+
+impl PipelinedCircuit {
+    /// Single-stage (purely combinational between I/O registers) wrapper.
+    pub fn single_stage(netlist: LutNetlist) -> Self {
+        let n = netlist.luts.len();
+        PipelinedCircuit { netlist, stage_of_lut: vec![0; n], num_stages: 1 }
+    }
+
+    /// Validate the stage assignment: every edge must go from an earlier or
+    /// equal stage, and stages must be in range.
+    pub fn check_stages(&self) -> Result<(), String> {
+        if self.stage_of_lut.len() != self.netlist.luts.len() {
+            return Err("stage vector length mismatch".into());
+        }
+        for (i, lut) in self.netlist.luts.iter().enumerate() {
+            let si = self.stage_of_lut[i];
+            if si >= self.num_stages {
+                return Err(format!("LUT {i} stage {si} out of range"));
+            }
+            for s in &lut.inputs {
+                if let Sig::Lut(j) = s {
+                    let sj = self.stage_of_lut[*j as usize];
+                    if sj > si {
+                        return Err(format!("edge {j}->{i} goes backward ({sj}>{si})"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Combinational depth of every stage (unit delay per LUT).
+    pub fn stage_depths(&self) -> Vec<u32> {
+        let mut depth = vec![0u32; self.netlist.luts.len()];
+        let mut per_stage = vec![0u32; self.num_stages as usize];
+        for (i, lut) in self.netlist.luts.iter().enumerate() {
+            let si = self.stage_of_lut[i];
+            let m = lut
+                .inputs
+                .iter()
+                .map(|s| match s {
+                    Sig::Lut(j) if self.stage_of_lut[*j as usize] == si => {
+                        depth[*j as usize]
+                    }
+                    _ => 0, // registered at the stage boundary
+                })
+                .max()
+                .unwrap_or(0);
+            depth[i] = m + 1;
+            per_stage[si as usize] = per_stage[si as usize].max(depth[i]);
+        }
+        per_stage
+    }
+
+    /// Count flip-flops: input registers, plus every signal crossing each
+    /// stage boundary (shift-register semantics for multi-stage crossings),
+    /// plus output registers.
+    pub fn count_ffs(&self) -> usize {
+        let s = self.num_stages;
+        // last stage in which each signal is consumed
+        let mut ffs = 0usize;
+
+        // Input registers: every primary input is registered once at entry.
+        ffs += self.netlist.num_inputs;
+
+        // A signal produced at stage p (LUT) or -1 (input) consumed at
+        // stage c needs one FF at every boundary strictly between p and c.
+        // Boundaries: after stage k for k in 0..s-1 (the output boundary is
+        // counted via output registers below).
+        let prod_stage = |sig: &Sig| -> i64 {
+            match sig {
+                Sig::Lut(j) => self.stage_of_lut[*j as usize] as i64,
+                _ => -1, // inputs are available (registered) at stage 0
+            }
+        };
+        // For each signal, find the max stage where it is consumed; FFs
+        // needed = boundaries crossed = max(0, last_use - prod).
+        use std::collections::HashMap;
+        let mut last_use: HashMap<Sig, i64> = HashMap::new();
+        for (i, lut) in self.netlist.luts.iter().enumerate() {
+            let si = self.stage_of_lut[i] as i64;
+            for sig in &lut.inputs {
+                if matches!(sig, Sig::Const(_)) {
+                    continue;
+                }
+                let e = last_use.entry(*sig).or_insert(i64::MIN);
+                *e = (*e).max(si);
+            }
+        }
+        for (sig, _) in &self.netlist.outputs {
+            if matches!(sig, Sig::Const(_)) {
+                continue;
+            }
+            let e = last_use.entry(*sig).or_insert(i64::MIN);
+            *e = (*e).max(s as i64 - 1);
+        }
+        for (sig, last) in &last_use {
+            let p = prod_stage(sig);
+            if *last > p {
+                ffs += (*last - p.max(0)) as usize;
+                // inputs: produced "at boundary 0" — crossing from stage 0
+                // onward; p = -1 treated as 0 since the input reg at entry
+                // is already counted.
+            }
+        }
+        // Output registers.
+        ffs += self.netlist.outputs.len();
+        ffs
+    }
+
+    /// Full statistics.
+    pub fn stats(&self) -> CircuitStats {
+        CircuitStats {
+            luts: self.netlist.num_luts(),
+            ffs: self.count_ffs(),
+            max_stage_depth: self.stage_depths().iter().copied().max().unwrap_or(0),
+            latency_cycles: self.num_stages,
+        }
+    }
+
+    /// Functional evaluation ignores pipelining (registers only delay).
+    pub fn eval(&self, input_bits: u64) -> Vec<bool> {
+        self.netlist.eval(input_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    fn xor_tt() -> TruthTable {
+        TruthTable::from_fn(2, |m| (m.count_ones() & 1) == 1)
+    }
+
+    #[test]
+    fn build_and_eval_xor_chain() {
+        // out = in0 ^ in1 ^ in2 via two 2-input LUTs.
+        let mut n = LutNetlist::new(3);
+        let a = n.add_lut(vec![Sig::Input(0), Sig::Input(1)], xor_tt());
+        let b = n.add_lut(vec![a, Sig::Input(2)], xor_tt());
+        n.add_output(b, false);
+        for m in 0..8u64 {
+            let want = (m.count_ones() & 1) == 1;
+            assert_eq!(n.eval(m)[0], want, "m={m}");
+        }
+        assert_eq!(n.depth(), 2);
+    }
+
+    #[test]
+    fn inverted_output() {
+        let mut n = LutNetlist::new(2);
+        let a = n.add_lut(vec![Sig::Input(0), Sig::Input(1)], xor_tt());
+        n.add_output(a, true); // XNOR
+        for m in 0..4u64 {
+            assert_eq!(n.eval(m)[0], (m.count_ones() & 1) == 0);
+        }
+    }
+
+    #[test]
+    fn const_and_input_outputs() {
+        let mut n = LutNetlist::new(2);
+        n.add_output(Sig::Const(true), false);
+        n.add_output(Sig::Input(1), true);
+        assert_eq!(n.eval(0b10), vec![true, false]);
+        assert_eq!(n.eval(0b00), vec![true, true]);
+    }
+
+    #[test]
+    fn eval_lut_words_matches_scalar() {
+        let mut rng = Xoshiro256::new(0x1111);
+        for k in 0..=6usize {
+            let tt = TruthTable::from_fn(k, |_| rng.bernoulli(0.5));
+            let words: Vec<u64> = (0..k).map(|_| rng.next_u64()).collect();
+            let out = eval_lut_words(&tt, &words);
+            for lane in 0..64 {
+                let addr: u64 = (0..k).map(|i| ((words[i] >> lane) & 1) << i).sum();
+                assert_eq!((out >> lane) & 1 == 1, tt.eval(addr), "k={k} lane={lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn simulate_words_matches_eval() {
+        let mut rng = Xoshiro256::new(0x2222);
+        let mut n = LutNetlist::new(4);
+        let t1 = TruthTable::from_fn(3, |m| m == 3 || m == 5);
+        let a = n.add_lut(vec![Sig::Input(0), Sig::Input(1), Sig::Input(2)], t1);
+        let t2 = TruthTable::from_fn(2, |m| m != 0);
+        let b = n.add_lut(vec![a, Sig::Input(3)], t2);
+        n.add_output(b, false);
+        n.add_output(a, true);
+        let words: Vec<u64> = (0..4).map(|_| rng.next_u64()).collect();
+        let outs = n.simulate_words(&words);
+        for lane in 0..64 {
+            let bits: u64 = (0..4).map(|i| ((words[i] >> lane) & 1) << i).sum();
+            let e = n.eval(bits);
+            assert_eq!((outs[0] >> lane) & 1 == 1, e[0]);
+            assert_eq!((outs[1] >> lane) & 1 == 1, e[1]);
+        }
+    }
+
+    #[test]
+    fn stage_check_catches_backward_edges() {
+        let mut n = LutNetlist::new(1);
+        let a = n.add_lut(vec![Sig::Input(0)], TruthTable::from_fn(1, |m| m == 0));
+        let b = n.add_lut(vec![a], TruthTable::from_fn(1, |m| m == 1));
+        n.add_output(b, false);
+        let good = PipelinedCircuit {
+            netlist: n.clone(),
+            stage_of_lut: vec![0, 1],
+            num_stages: 2,
+        };
+        assert!(good.check_stages().is_ok());
+        let bad = PipelinedCircuit {
+            netlist: n,
+            stage_of_lut: vec![1, 0],
+            num_stages: 2,
+        };
+        assert!(bad.check_stages().is_err());
+    }
+
+    #[test]
+    fn stage_depths_and_ffs() {
+        // 3 LUTs in a chain over 2 stages: [L0, L1 | L2]
+        let mut n = LutNetlist::new(2);
+        let inv = TruthTable::from_fn(1, |m| m == 0);
+        let a = n.add_lut(vec![Sig::Input(0)], inv.clone());
+        let b = n.add_lut(vec![a], inv.clone());
+        let c = n.add_lut(vec![b], inv.clone());
+        n.add_output(c, false);
+        let p = PipelinedCircuit {
+            netlist: n,
+            stage_of_lut: vec![0, 0, 1],
+            num_stages: 2,
+        };
+        p.check_stages().unwrap();
+        assert_eq!(p.stage_depths(), vec![2, 1]);
+        // FFs: 2 input regs + 1 crossing (b from stage0→1) + 1 output reg.
+        assert_eq!(p.count_ffs(), 2 + 1 + 1);
+        let st = p.stats();
+        assert_eq!(st.luts, 3);
+        assert_eq!(st.max_stage_depth, 2);
+        assert_eq!(st.latency_cycles, 2);
+    }
+
+    #[test]
+    fn multi_stage_crossing_counts_shift_register() {
+        // Signal produced in stage 0, consumed in stage 2 → 2 FFs.
+        let mut n = LutNetlist::new(1);
+        let inv = TruthTable::from_fn(1, |m| m == 0);
+        let a = n.add_lut(vec![Sig::Input(0)], inv.clone());
+        let b = n.add_lut(vec![Sig::Input(0)], inv.clone());
+        let c = n.add_lut(vec![a, b], xor_tt());
+        n.add_output(c, false);
+        let p = PipelinedCircuit {
+            netlist: n,
+            stage_of_lut: vec![0, 2, 2],
+            num_stages: 3,
+        };
+        p.check_stages().unwrap();
+        // input reg (1) + a crosses 0→2 (2 FFs) + input0 consumed at stage 2
+        // crossing from 0→2 (2 FFs) + output reg (1)
+        assert_eq!(p.count_ffs(), 1 + 2 + 2 + 1);
+    }
+}

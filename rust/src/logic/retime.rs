@@ -1,0 +1,350 @@
+//! Min-period retiming of pipelined LUT circuits.
+//!
+//! The paper's logic-minimization module performs retiming (via Vivado) to
+//! raise fmax: pipeline registers move across LUT boundaries so the worst
+//! combinational depth between any two register stages is minimized, without
+//! changing latency (stage count) or function. For a layered feed-forward
+//! circuit with unit LUT delay this is solvable exactly: binary-search the
+//! target depth `d`, checking feasibility with an ASAP packing (each LUT
+//! takes the earliest stage where its fanins' depths allow ≤ d); among
+//! feasible assignments an ALAP variant is also computed and the one with
+//! fewer flip-flops wins.
+
+use crate::logic::netlist::{PipelinedCircuit, Sig};
+
+/// Result summary of a retiming run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetimeStats {
+    pub depth_before: u32,
+    pub depth_after: u32,
+    pub ffs_before: usize,
+    pub ffs_after: usize,
+}
+
+/// Retime `circuit` to the minimum achievable stage depth at the same
+/// latency. Returns the improved circuit and statistics.
+pub fn retime_min_period(circuit: &PipelinedCircuit) -> (PipelinedCircuit, RetimeStats) {
+    let before = circuit.stats();
+    let s = circuit.num_stages;
+    let n = circuit.netlist.luts.len();
+    if n == 0 {
+        return (
+            circuit.clone(),
+            RetimeStats {
+                depth_before: before.max_stage_depth,
+                depth_after: before.max_stage_depth,
+                ffs_before: before.ffs,
+                ffs_after: before.ffs,
+            },
+        );
+    }
+
+    // Binary search the smallest feasible depth.
+    let mut lo = 1u32;
+    let mut hi = before.max_stage_depth.max(1);
+    let mut best = None;
+    while lo <= hi {
+        let mid = (lo + hi) / 2;
+        if let Some(stages) = asap_stages(circuit, mid) {
+            best = Some((mid, stages));
+            if mid == 1 {
+                break;
+            }
+            hi = mid - 1;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    let (d, asap) = best.expect("original depth is always feasible");
+
+    // ALAP at the same depth; choose the assignment with fewer FFs.
+    let candidates: Vec<Vec<u32>> = match alap_stages(circuit, d) {
+        Some(alap) => vec![asap.clone(), alap],
+        None => vec![asap.clone()],
+    };
+    let mut best_circuit: Option<PipelinedCircuit> = None;
+    let mut best_ffs = usize::MAX;
+    for st in candidates {
+        let c = PipelinedCircuit {
+            netlist: circuit.netlist.clone(),
+            stage_of_lut: st,
+            num_stages: s,
+        };
+        debug_assert!(c.check_stages().is_ok());
+        let ffs = c.count_ffs();
+        if ffs < best_ffs {
+            best_ffs = ffs;
+            best_circuit = Some(c);
+        }
+    }
+    let mut out = best_circuit.unwrap();
+    reduce_ffs(&mut out, d);
+    let after = out.stats();
+    (
+        out,
+        RetimeStats {
+            depth_before: before.max_stage_depth,
+            depth_after: after.max_stage_depth,
+            ffs_before: before.ffs,
+            ffs_after: after.ffs,
+        },
+    )
+}
+
+/// Register-minimization phase (the second Leiserson–Saxe objective): at the
+/// fixed period `d`, greedily move individual LUTs between stages whenever
+/// that reduces the number of boundary crossings, until a fixed point.
+/// Legality (edge monotonicity + intra-stage depth ≤ d) is re-checked for
+/// every candidate move.
+fn reduce_ffs(c: &mut PipelinedCircuit, d: u32) {
+    let n = c.netlist.luts.len();
+    // The greedy pass re-evaluates global cost per candidate move (O(n) per
+    // probe); past ~4k LUTs that becomes the flow's bottleneck for a
+    // second-order metric, so large circuits keep the ASAP/ALAP choice.
+    if n == 0 || n > 4_000 {
+        return;
+    }
+    // fanout lists
+    let mut fanouts: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, lut) in c.netlist.luts.iter().enumerate() {
+        for s in &lut.inputs {
+            if let Sig::Lut(j) = s {
+                fanouts[*j as usize].push(i);
+            }
+        }
+    }
+    let mut best_ffs = c.count_ffs();
+    for _round in 0..8 {
+        let mut improved = false;
+        for i in 0..n {
+            let cur = c.stage_of_lut[i];
+            for cand in [cur.wrapping_sub(1), cur + 1] {
+                if cand >= c.num_stages || (cand == u32::MAX) {
+                    continue;
+                }
+                // Edge legality.
+                let lut = &c.netlist.luts[i];
+                let fanin_ok = lut.inputs.iter().all(|s| match s {
+                    Sig::Lut(j) => c.stage_of_lut[*j as usize] <= cand,
+                    _ => true,
+                });
+                let fanout_ok = fanouts[i]
+                    .iter()
+                    .all(|&w| c.stage_of_lut[w] >= cand);
+                if !fanin_ok || !fanout_ok {
+                    continue;
+                }
+                let old = c.stage_of_lut[i];
+                c.stage_of_lut[i] = cand;
+                // Depth legality (cheap full recompute: stage_depths is
+                // O(n); rounds are few).
+                let depth_ok = c.stage_depths().iter().all(|&x| x <= d);
+                if depth_ok {
+                    let ffs = c.count_ffs();
+                    if ffs < best_ffs {
+                        best_ffs = ffs;
+                        improved = true;
+                        continue;
+                    }
+                }
+                c.stage_of_lut[i] = old;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+}
+
+/// ASAP packing: earliest stage per LUT such that intra-stage depth ≤ d.
+/// Returns `None` if more than `num_stages` stages would be needed.
+fn asap_stages(circuit: &PipelinedCircuit, d: u32) -> Option<Vec<u32>> {
+    let nl = &circuit.netlist;
+    let s_max = circuit.num_stages;
+    let mut stage = vec![0u32; nl.luts.len()];
+    let mut depth = vec![0u32; nl.luts.len()];
+    for (i, lut) in nl.luts.iter().enumerate() {
+        let mut st = 0u32;
+        for sig in &lut.inputs {
+            if let Sig::Lut(j) = sig {
+                st = st.max(stage[*j as usize]);
+            }
+        }
+        // Depth if placed at `st`.
+        let mut dep = 1u32;
+        for sig in &lut.inputs {
+            if let Sig::Lut(j) = sig {
+                let j = *j as usize;
+                if stage[j] == st {
+                    dep = dep.max(depth[j] + 1);
+                }
+            }
+        }
+        if dep > d {
+            st += 1;
+            dep = 1;
+        }
+        if st >= s_max {
+            return None;
+        }
+        stage[i] = st;
+        depth[i] = dep;
+    }
+    Some(stage)
+}
+
+/// ALAP packing: latest stage per LUT (reverse pass), same feasibility rule.
+fn alap_stages(circuit: &PipelinedCircuit, d: u32) -> Option<Vec<u32>> {
+    let nl = &circuit.netlist;
+    let s_max = circuit.num_stages;
+    let n = nl.luts.len();
+    // fanouts
+    let mut fanouts: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, lut) in nl.luts.iter().enumerate() {
+        for sig in &lut.inputs {
+            if let Sig::Lut(j) = sig {
+                fanouts[*j as usize].push(i);
+            }
+        }
+    }
+    let is_output: Vec<bool> = {
+        let mut v = vec![false; n];
+        for (sig, _) in &nl.outputs {
+            if let Sig::Lut(j) = sig {
+                v[*j as usize] = true;
+            }
+        }
+        v
+    };
+    let mut stage = vec![0i64; n];
+    let mut codep = vec![0u32; n]; // depth measured from the consumer side
+    for i in (0..n).rev() {
+        let mut st = (s_max - 1) as i64;
+        for &w in &fanouts[i] {
+            st = st.min(stage[w]);
+        }
+        if is_output[i] {
+            st = st.min((s_max - 1) as i64);
+        }
+        let mut dep = 1u32;
+        for &w in &fanouts[i] {
+            if stage[w] == st {
+                dep = dep.max(codep[w] + 1);
+            }
+        }
+        if dep > d {
+            st -= 1;
+            dep = 1;
+        }
+        if st < 0 {
+            return None;
+        }
+        stage[i] = st;
+        codep[i] = dep;
+    }
+    Some(stage.into_iter().map(|s| s as u32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::netlist::LutNetlist;
+    use crate::logic::truthtable::TruthTable;
+
+    fn inv() -> TruthTable {
+        TruthTable::from_fn(1, |m| m == 0)
+    }
+
+    /// Chain of `n` inverters over `stages` stages, all initially in stage 0
+    /// except forced legality.
+    fn chain(n: usize, stages: u32, initial: impl Fn(usize) -> u32) -> PipelinedCircuit {
+        let mut nl = LutNetlist::new(1);
+        let mut prev = Sig::Input(0);
+        for _ in 0..n {
+            prev = nl.add_lut(vec![prev], inv());
+        }
+        nl.add_output(prev, false);
+        PipelinedCircuit {
+            netlist: nl,
+            stage_of_lut: (0..n).map(initial).collect(),
+            num_stages: stages,
+        }
+    }
+
+    #[test]
+    fn balances_unbalanced_chain() {
+        // 8 inverters, 2 stages, all in stage 0 → depth 8. Retiming must
+        // reach depth 4.
+        let c = chain(8, 2, |_| 0);
+        assert_eq!(c.stats().max_stage_depth, 8);
+        let (r, st) = retime_min_period(&c);
+        r.check_stages().unwrap();
+        assert_eq!(st.depth_after, 4);
+        assert_eq!(r.stats().max_stage_depth, 4);
+        // Function unchanged.
+        for m in 0..2u64 {
+            assert_eq!(r.eval(m), c.eval(m));
+        }
+    }
+
+    #[test]
+    fn perfect_split_across_many_stages() {
+        let c = chain(12, 4, |_| 0);
+        let (r, st) = retime_min_period(&c);
+        assert_eq!(st.depth_after, 3);
+        r.check_stages().unwrap();
+    }
+
+    #[test]
+    fn already_balanced_unchanged_depth() {
+        let c = chain(4, 2, |i| if i < 2 { 0 } else { 1 });
+        assert_eq!(c.stats().max_stage_depth, 2);
+        let (_, st) = retime_min_period(&c);
+        assert_eq!(st.depth_after, 2);
+    }
+
+    #[test]
+    fn single_stage_is_noop() {
+        let c = chain(5, 1, |_| 0);
+        let (r, st) = retime_min_period(&c);
+        assert_eq!(st.depth_after, 5);
+        assert_eq!(r.num_stages, 1);
+    }
+
+    #[test]
+    fn diamond_structure() {
+        // in → a; a feeds b and c (parallel chains of different length);
+        // d = xor(b, c). 2 stages.
+        let xor2 = TruthTable::from_fn(2, |m| (m.count_ones() & 1) == 1);
+        let mut nl = LutNetlist::new(1);
+        let a = nl.add_lut(vec![Sig::Input(0)], inv());
+        let b1 = nl.add_lut(vec![a], inv());
+        let b2 = nl.add_lut(vec![b1], inv());
+        let b3 = nl.add_lut(vec![b2], inv());
+        let c1 = nl.add_lut(vec![a], inv());
+        let d = nl.add_lut(vec![b3, c1], xor2);
+        nl.add_output(d, false);
+        let c = PipelinedCircuit {
+            netlist: nl,
+            stage_of_lut: vec![0; 6],
+            num_stages: 2,
+        };
+        assert_eq!(c.stats().max_stage_depth, 5);
+        let (r, st) = retime_min_period(&c);
+        r.check_stages().unwrap();
+        assert!(st.depth_after <= 3, "got {}", st.depth_after);
+        for m in 0..2u64 {
+            assert_eq!(r.eval(m), c.eval(m));
+        }
+    }
+
+    #[test]
+    fn ff_count_does_not_explode() {
+        let c = chain(8, 4, |_| 0);
+        let (r, st) = retime_min_period(&c);
+        assert_eq!(st.depth_after, 2);
+        // FFs: input reg + 3 crossings + output reg = manageable; the exact
+        // value depends on ASAP/ALAP choice but must stay ≤ chain length + 2.
+        assert!(r.count_ffs() <= 10, "ffs={}", r.count_ffs());
+    }
+}

@@ -1,0 +1,277 @@
+//! Compiled bit-parallel netlist simulation — the inference engine.
+//!
+//! This is the software stand-in for the FPGA fabric: the combinational-
+//! logic inference path the coordinator serves requests from. The netlist is
+//! "compiled" once into flat arrays (signal codes, packed ≤6-input tables as
+//! single `u64`s) and then evaluated 64 samples per pass with pure word
+//! operations — no allocation, no hash lookups, no `TruthTable` indirection
+//! on the hot path. See EXPERIMENTS.md §Perf for the measured speedup over
+//! the naive [`LutNetlist::simulate_words`] path.
+
+use crate::logic::netlist::{LutNetlist, Sig};
+
+/// Signal encoding: 0 = const0, 1 = const1, `2+i` = primary input `i`,
+/// `2 + num_inputs + j` = LUT `j`.
+type Code = u32;
+
+/// A netlist compiled for fast repeated evaluation.
+pub struct CompiledNetlist {
+    num_inputs: usize,
+    /// Flattened LUT input codes.
+    lut_inputs: Vec<Code>,
+    /// Offset of each LUT's inputs in `lut_inputs` (len = luts + 1).
+    offsets: Vec<u32>,
+    /// ≤ 64-bit truth table per LUT (k ≤ 6).
+    tables: Vec<u64>,
+    /// Output codes + inversion flags.
+    outputs: Vec<(Code, bool)>,
+    /// Scratch buffer: values for [const0, const1, inputs…, luts…].
+    scratch: Vec<u64>,
+}
+
+impl CompiledNetlist {
+    /// Compile a netlist (all LUTs must have ≤ 6 inputs).
+    pub fn compile(nl: &LutNetlist) -> CompiledNetlist {
+        assert!(nl.max_arity() <= 6, "compiled simulator supports k ≤ 6");
+        let code_of = |s: &Sig| -> Code {
+            match s {
+                Sig::Const(false) => 0,
+                Sig::Const(true) => 1,
+                Sig::Input(i) => 2 + *i,
+                Sig::Lut(j) => 2 + nl.num_inputs as u32 + *j,
+            }
+        };
+        let mut lut_inputs = Vec::new();
+        let mut offsets = vec![0u32];
+        let mut tables = Vec::with_capacity(nl.luts.len());
+        for lut in &nl.luts {
+            for s in &lut.inputs {
+                lut_inputs.push(code_of(s));
+            }
+            offsets.push(lut_inputs.len() as u32);
+            // Pack table into u64 (2^k bits, k ≤ 6).
+            let mut t = 0u64;
+            for m in 0..1u64 << lut.table.nvars() {
+                if lut.table.eval(m) {
+                    t |= 1 << m;
+                }
+            }
+            tables.push(t);
+        }
+        let outputs = nl.outputs.iter().map(|(s, inv)| (code_of(s), *inv)).collect();
+        let scratch = vec![0u64; 2 + nl.num_inputs + nl.luts.len()];
+        CompiledNetlist {
+            num_inputs: nl.num_inputs,
+            lut_inputs,
+            offsets,
+            tables,
+            outputs,
+            scratch,
+        }
+    }
+
+    /// Number of primary inputs.
+    pub fn num_inputs(&self) -> usize {
+        self.num_inputs
+    }
+
+    /// Number of outputs.
+    pub fn num_outputs(&self) -> usize {
+        self.outputs.len()
+    }
+
+    /// Evaluate 64 samples at once. `inputs[i]` = word of input `i`;
+    /// `out[j]` receives the word of output `j`.
+    pub fn run_words(&mut self, inputs: &[u64], out: &mut [u64]) {
+        debug_assert_eq!(inputs.len(), self.num_inputs);
+        debug_assert_eq!(out.len(), self.outputs.len());
+        let ni = self.num_inputs;
+        self.scratch[0] = 0;
+        self.scratch[1] = !0u64;
+        self.scratch[2..2 + ni].copy_from_slice(inputs);
+        let nluts = self.tables.len();
+        for j in 0..nluts {
+            let lo = self.offsets[j] as usize;
+            let hi = self.offsets[j + 1] as usize;
+            let k = hi - lo;
+            let table = self.tables[j];
+            // Shannon mux ladder over input words: expand table bits by
+            // halves. Unrolled per arity for the common cases.
+            let v = match k {
+                0 => {
+                    if table & 1 == 1 {
+                        !0u64
+                    } else {
+                        0
+                    }
+                }
+                _ => {
+                    // Iterative halving: tbl(2^k entries) folded by inputs
+                    // from the top variable down.
+                    let mut vals = [0u64; 64];
+                    let span = 1usize << k;
+                    for (m, v) in vals.iter_mut().enumerate().take(span) {
+                        *v = if (table >> m) & 1 == 1 { !0u64 } else { 0 };
+                    }
+                    let mut width = span;
+                    for bit in (0..k).rev() {
+                        let sel = self.scratch[self.lut_inputs[lo + bit] as usize];
+                        width /= 2;
+                        for m in 0..width {
+                            let w0 = vals[m];
+                            let w1 = vals[m + width];
+                            vals[m] = (!sel & w0) | (sel & w1);
+                        }
+                    }
+                    vals[0]
+                }
+            };
+            self.scratch[2 + ni + j] = v;
+        }
+        for (o, (code, inv)) in out.iter_mut().zip(&self.outputs) {
+            *o = self.scratch[*code as usize] ^ if *inv { !0u64 } else { 0 };
+        }
+    }
+
+    /// Evaluate a batch of arbitrary size: `samples[s][i]` = input `i` of
+    /// sample `s`; returns `result[s][j]` = output `j` of sample `s`.
+    pub fn run_batch(&mut self, samples: &[Vec<bool>]) -> Vec<Vec<bool>> {
+        let n = samples.len();
+        let mut results = vec![vec![false; self.outputs.len()]; n];
+        let mut in_words = vec![0u64; self.num_inputs];
+        let mut out_words = vec![0u64; self.outputs.len()];
+        let mut base = 0;
+        while base < n {
+            let lanes = (n - base).min(64);
+            for w in in_words.iter_mut() {
+                *w = 0;
+            }
+            for lane in 0..lanes {
+                let s = &samples[base + lane];
+                debug_assert_eq!(s.len(), self.num_inputs);
+                for (i, &b) in s.iter().enumerate() {
+                    if b {
+                        in_words[i] |= 1 << lane;
+                    }
+                }
+            }
+            self.run_words(&in_words, &mut out_words);
+            for lane in 0..lanes {
+                for (j, w) in out_words.iter().enumerate() {
+                    results[base + lane][j] = (w >> lane) & 1 == 1;
+                }
+            }
+            base += lanes;
+        }
+        results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::truthtable::TruthTable;
+    use crate::util::prng::Xoshiro256;
+
+    fn random_netlist(seed: u64, num_inputs: usize, num_luts: usize) -> LutNetlist {
+        let mut rng = Xoshiro256::new(seed);
+        let mut nl = LutNetlist::new(num_inputs);
+        for j in 0..num_luts {
+            let max_sig = num_inputs + j;
+            let k = 1 + rng.below(5.min(max_sig as u64)) as usize;
+            let mut inputs = Vec::with_capacity(k);
+            for _ in 0..k {
+                let pick = rng.below(max_sig as u64) as usize;
+                inputs.push(if pick < num_inputs {
+                    Sig::Input(pick as u32)
+                } else {
+                    Sig::Lut((pick - num_inputs) as u32)
+                });
+            }
+            let tt = TruthTable::from_fn(k, |_| rng.bernoulli(0.5));
+            nl.add_lut(inputs, tt);
+        }
+        // outputs: last few luts with random inversion
+        for j in num_luts.saturating_sub(4)..num_luts {
+            nl.add_output(Sig::Lut(j as u32), rng.bernoulli(0.5));
+        }
+        nl.add_output(Sig::Const(true), false);
+        nl.add_output(Sig::Input(0), true);
+        nl
+    }
+
+    #[test]
+    fn compiled_matches_reference_simulation() {
+        for seed in 0..10u64 {
+            let nl = random_netlist(seed, 8, 20);
+            let mut c = CompiledNetlist::compile(&nl);
+            let mut rng = Xoshiro256::new(seed ^ 0xF00);
+            let inputs: Vec<u64> = (0..8).map(|_| rng.next_u64()).collect();
+            let want = nl.simulate_words(&inputs);
+            let mut got = vec![0u64; want.len()];
+            c.run_words(&inputs, &mut got);
+            assert_eq!(got, want, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn run_batch_roundtrip() {
+        let nl = random_netlist(77, 6, 15);
+        let mut c = CompiledNetlist::compile(&nl);
+        let mut rng = Xoshiro256::new(123);
+        // deliberately non-multiple-of-64 batch
+        let samples: Vec<Vec<bool>> = (0..150)
+            .map(|_| (0..6).map(|_| rng.bernoulli(0.5)).collect())
+            .collect();
+        let results = c.run_batch(&samples);
+        for (s, r) in samples.iter().zip(&results) {
+            let bits: u64 = s
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| if b { 1u64 << i } else { 0 })
+                .sum();
+            assert_eq!(*r, nl.eval(bits));
+        }
+    }
+
+    #[test]
+    fn zero_input_luts() {
+        let mut nl = LutNetlist::new(1);
+        let t = TruthTable::from_fn(0, |_| true); // constant-1 LUT
+        let a = nl.add_lut(vec![], t);
+        nl.add_output(a, false);
+        nl.add_output(a, true);
+        let mut c = CompiledNetlist::compile(&nl);
+        let mut out = vec![0u64; 2];
+        c.run_words(&[0u64], &mut out);
+        assert_eq!(out[0], !0u64);
+        assert_eq!(out[1], 0u64);
+    }
+
+    #[test]
+    fn six_input_lut_exact() {
+        let mut rng = Xoshiro256::new(0x6);
+        let tt = TruthTable::from_fn(6, |_| rng.bernoulli(0.5));
+        let mut nl = LutNetlist::new(6);
+        let sig = nl.add_lut((0..6).map(Sig::Input).collect(), tt.clone());
+        nl.add_output(sig, false);
+        let mut c = CompiledNetlist::compile(&nl);
+        // exhaustive over all 64 assignments, packed in one word per input
+        let inputs: Vec<u64> = (0..6)
+            .map(|i| {
+                let mut w = 0u64;
+                for m in 0..64u64 {
+                    if (m >> i) & 1 == 1 {
+                        w |= 1 << m;
+                    }
+                }
+                w
+            })
+            .collect();
+        let mut out = vec![0u64];
+        c.run_words(&inputs, &mut out);
+        for m in 0..64u64 {
+            assert_eq!((out[0] >> m) & 1 == 1, tt.eval(m), "m={m}");
+        }
+    }
+}

@@ -1,0 +1,467 @@
+//! Dense truth tables and the Minato–Morreale irredundant SOP generator.
+//!
+//! NullaNet's input enumeration produces, for every neuron output bit, a
+//! *dense* truth table over γ·β ≤ ~16 inputs. This module stores those
+//! tables as packed bit vectors, provides cofactoring/composition, and
+//! converts ON/DC sets into a compact [`Cover`] via the Minato–Morreale
+//! ISOP recursion — the seed cover handed to ESPRESSO-II (starting ESPRESSO
+//! from raw minterms would be quadratically slower; starting from an ISOP is
+//! the standard production trick).
+
+use crate::logic::cube::{Cover, Cube, Pol};
+use crate::util::bitvec::BitVec;
+
+/// A completely-specified Boolean function over `nvars` inputs, stored as a
+/// packed table of 2^nvars bits (bit `i` = f(i), input bit `v` of `i` =
+/// variable `v`).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct TruthTable {
+    nvars: usize,
+    bits: BitVec,
+}
+
+impl std::fmt::Debug for TruthTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TT({}v, 0x{})", self.nvars, self.bits.to_hex())
+    }
+}
+
+impl TruthTable {
+    /// Maximum variables for dense representation (2^20 bits = 128 KiB).
+    pub const MAX_VARS: usize = 20;
+
+    /// Constant-0 table.
+    pub fn zeros(nvars: usize) -> TruthTable {
+        assert!(nvars <= Self::MAX_VARS);
+        TruthTable { nvars, bits: BitVec::zeros(1 << nvars) }
+    }
+
+    /// Constant-1 table.
+    pub fn ones(nvars: usize) -> TruthTable {
+        assert!(nvars <= Self::MAX_VARS);
+        TruthTable { nvars, bits: BitVec::ones(1 << nvars) }
+    }
+
+    /// Table of the projection `f(x) = x_v` (word-parallel fill).
+    pub fn var(nvars: usize, v: usize) -> TruthTable {
+        assert!(v < nvars);
+        let mut t = TruthTable::zeros(nvars);
+        if v < 6 {
+            // Within-word repetition pattern.
+            const PATTERNS: [u64; 6] = [
+                0xAAAA_AAAA_AAAA_AAAA,
+                0xCCCC_CCCC_CCCC_CCCC,
+                0xF0F0_F0F0_F0F0_F0F0,
+                0xFF00_FF00_FF00_FF00,
+                0xFFFF_0000_FFFF_0000,
+                0xFFFF_FFFF_0000_0000,
+            ];
+            for w in t.bits.words_mut() {
+                *w = PATTERNS[v];
+            }
+        } else {
+            let stride = 1usize << (v - 6);
+            for (i, w) in t.bits.words_mut().iter_mut().enumerate() {
+                if (i / stride) % 2 == 1 {
+                    *w = !0u64;
+                }
+            }
+        }
+        t.bits.mask_tail();
+        t
+    }
+
+    /// Build by evaluating `f` on every assignment.
+    pub fn from_fn(nvars: usize, mut f: impl FnMut(u64) -> bool) -> TruthTable {
+        let mut t = TruthTable::zeros(nvars);
+        for i in 0..1u64 << nvars {
+            if f(i) {
+                t.bits.set(i as usize, true);
+            }
+        }
+        t
+    }
+
+    /// Build from raw bits (length must be 2^nvars).
+    pub fn from_bits(nvars: usize, bits: BitVec) -> TruthTable {
+        assert_eq!(bits.len(), 1 << nvars);
+        TruthTable { nvars, bits }
+    }
+
+    /// Number of input variables.
+    pub fn nvars(&self) -> usize {
+        self.nvars
+    }
+
+    /// Access the underlying bits.
+    pub fn bits(&self) -> &BitVec {
+        &self.bits
+    }
+
+    /// Evaluate on one assignment.
+    #[inline]
+    pub fn eval(&self, assignment: u64) -> bool {
+        self.bits.get(assignment as usize)
+    }
+
+    /// Set the function value on one assignment.
+    #[inline]
+    pub fn set_bit(&mut self, assignment: usize, v: bool) {
+        self.bits.set(assignment, v);
+    }
+
+    /// The table of `f` with input variable `v` complemented:
+    /// `g(x) = f(x ⊕ e_v)`. Used to absorb inverted signals into consumer
+    /// LUTs when stitching netlists.
+    pub fn invert_var(&self, v: usize) -> TruthTable {
+        assert!(v < self.nvars);
+        let mut out = TruthTable::zeros(self.nvars);
+        for m in 0..1usize << self.nvars {
+            if self.bits.get(m) {
+                out.bits.set(m ^ (1 << v), true);
+            }
+        }
+        out
+    }
+
+    /// Number of ON-set minterms.
+    pub fn count_ones(&self) -> usize {
+        self.bits.count_ones()
+    }
+
+    /// True if constant 0.
+    pub fn is_zero(&self) -> bool {
+        self.bits.is_zero()
+    }
+
+    /// True if constant 1.
+    pub fn is_ones(&self) -> bool {
+        self.bits.is_all_ones()
+    }
+
+    /// Complement.
+    pub fn not(&self) -> TruthTable {
+        TruthTable { nvars: self.nvars, bits: self.bits.not() }
+    }
+
+    /// Conjunction.
+    pub fn and(&self, other: &TruthTable) -> TruthTable {
+        assert_eq!(self.nvars, other.nvars);
+        let mut b = self.bits.clone();
+        b.and_assign(&other.bits);
+        TruthTable { nvars: self.nvars, bits: b }
+    }
+
+    /// Disjunction.
+    pub fn or(&self, other: &TruthTable) -> TruthTable {
+        assert_eq!(self.nvars, other.nvars);
+        let mut b = self.bits.clone();
+        b.or_assign(&other.bits);
+        TruthTable { nvars: self.nvars, bits: b }
+    }
+
+    /// Exclusive or.
+    pub fn xor(&self, other: &TruthTable) -> TruthTable {
+        assert_eq!(self.nvars, other.nvars);
+        let mut b = self.bits.clone();
+        b.xor_assign(&other.bits);
+        TruthTable { nvars: self.nvars, bits: b }
+    }
+
+    /// Is `self ⊆ other` as ON-sets?
+    pub fn implies(&self, other: &TruthTable) -> bool {
+        self.bits.is_subset_of(&other.bits)
+    }
+
+    /// Does the function depend on variable `v`?
+    pub fn depends_on(&self, v: usize) -> bool {
+        let (c0, c1) = self.cofactors(v);
+        c0 != c1
+    }
+
+    /// Positive/negative cofactors w.r.t. variable `v`, returned as tables
+    /// over the same `nvars` (the cofactored variable becomes irrelevant).
+    ///
+    /// Word-parallel: for `v < 6` the lo/hi halves interleave within words
+    /// (classic mask-and-shift with per-variable constants); for `v ≥ 6`
+    /// they are whole-word strides. This is the hottest primitive of the
+    /// ISOP recursion and the enumeration path — see EXPERIMENTS.md §Perf.
+    pub fn cofactors(&self, v: usize) -> (TruthTable, TruthTable) {
+        const MASKS: [u64; 6] = [
+            0x5555_5555_5555_5555, // bit 0 clear
+            0x3333_3333_3333_3333,
+            0x0F0F_0F0F_0F0F_0F0F,
+            0x00FF_00FF_00FF_00FF,
+            0x0000_FFFF_0000_FFFF,
+            0x0000_0000_FFFF_FFFF,
+        ];
+        let mut t0 = TruthTable::zeros(self.nvars);
+        let mut t1 = TruthTable::zeros(self.nvars);
+        let src = self.bits.words();
+        if v < 6 {
+            let m = MASKS[v];
+            let sh = 1usize << v;
+            let w0 = t0.bits.words_mut();
+            for (d, &s) in w0.iter_mut().zip(src) {
+                let lo = s & m;
+                *d = lo | (lo << sh);
+            }
+            let w1 = t1.bits.words_mut();
+            for (d, &s) in w1.iter_mut().zip(src) {
+                let hi = s & !m;
+                *d = hi | (hi >> sh);
+            }
+        } else {
+            // Words alternate in runs of `stride` words: lo run, hi run.
+            let stride = 1usize << (v - 6);
+            let w0 = t0.bits.words_mut();
+            let w1 = t1.bits.words_mut();
+            let mut base = 0;
+            while base < src.len() {
+                for k in 0..stride.min(src.len() - base) {
+                    let lo = src[base + k];
+                    let hi = if base + stride + k < src.len() {
+                        src[base + stride + k]
+                    } else {
+                        0
+                    };
+                    w0[base + k] = lo;
+                    w0[base + stride + k] = lo;
+                    w1[base + k] = hi;
+                    w1[base + stride + k] = hi;
+                }
+                base += 2 * stride;
+            }
+        }
+        t0.bits.mask_tail();
+        t1.bits.mask_tail();
+        (t0, t1)
+    }
+
+    /// Drop the top variable, keeping the `x_top = 0` half — the inverse of
+    /// adding an irrelevant variable. Callers must ensure the function does
+    /// not depend on the top variable (true for Shannon cofactors).
+    /// Word-parallel (hot in the mux-tree synthesis fallback).
+    pub fn shrink_top(&self) -> TruthTable {
+        assert!(self.nvars > 0);
+        let n = self.nvars - 1;
+        let mut out = TruthTable::zeros(n);
+        let half_bits = 1usize << n;
+        if half_bits >= 64 {
+            let words = half_bits / 64;
+            out.bits
+                .words_mut()
+                .copy_from_slice(&self.bits.words()[..words]);
+        } else {
+            let w = self.bits.words()[0] & ((1u64 << half_bits) - 1);
+            out.bits.words_mut()[0] = w;
+        }
+        out
+    }
+
+    /// The truth table of an SOP cover (must have the same nvars).
+    pub fn from_cover(cover: &Cover) -> TruthTable {
+        assert!(cover.nvars() <= Self::MAX_VARS);
+        TruthTable { nvars: cover.nvars(), bits: cover.to_truth_bits() }
+    }
+
+    /// Minato–Morreale ISOP: returns a cover `C` with `on ⊆ C ⊆ on ∪ dc`,
+    /// where each cube is an implicant of `on ∪ dc` and the cover is
+    /// irredundant by construction. `on` and `dc` must be disjoint.
+    pub fn isop(on: &TruthTable, dc: &TruthTable) -> Cover {
+        assert_eq!(on.nvars, dc.nvars);
+        debug_assert!(on.and(dc).is_zero(), "ON and DC must be disjoint");
+        let upper = on.or(dc);
+        let (cover, _tt) = isop_rec(on, &upper, on.nvars, on.nvars);
+        cover
+    }
+}
+
+/// Recursive ISOP on the first `k` variables; `lower`/`upper` are tables in
+/// the full space that do not depend on variables ≥ k. Returns the cover and
+/// its truth table (used by the caller to compute the residual lower bound).
+fn isop_rec(
+    lower: &TruthTable,
+    upper: &TruthTable,
+    k: usize,
+    nvars: usize,
+) -> (Cover, TruthTable) {
+    debug_assert!(lower.implies(upper));
+    if lower.is_zero() {
+        return (Cover::empty(nvars), TruthTable::zeros(nvars));
+    }
+    if upper.is_ones() {
+        return (Cover::universe(nvars), TruthTable::ones(nvars));
+    }
+    debug_assert!(k > 0, "k=0 implies constant function, handled above");
+    let v = k - 1;
+
+    let (l0, l1) = lower.cofactors(v);
+    let (u0, u1) = upper.cofactors(v);
+
+    // Minterms that can only be covered with literal x_v' / x_v.
+    let l0_only = l0.and(&u1.not());
+    let l1_only = l1.and(&u0.not());
+
+    let (c0, t0) = isop_rec(&l0_only, &u0, v, nvars);
+    let (c1, t1) = isop_rec(&l1_only, &u1, v, nvars);
+
+    // Residual: minterms of lower not yet covered, must be covered without
+    // the x_v literal.
+    let lnew = l0.and(&t0.not()).or(&l1.and(&t1.not()));
+    let udc = u0.and(&u1);
+    let (cd, td) = isop_rec(&lnew, &udc, v, nvars);
+
+    // Assemble: x'·C0 + x·C1 + Cd
+    let mut cubes = Vec::with_capacity(c0.len() + c1.len() + cd.len());
+    for mut c in c0.cubes {
+        c.set(v, Pol::Zero);
+        cubes.push(c);
+    }
+    for mut c in c1.cubes {
+        c.set(v, Pol::One);
+        cubes.push(c);
+    }
+    cubes.extend(cd.cubes);
+    let cover = Cover::from_cubes(nvars, cubes);
+
+    // TT of assembled cover = x'·t0 + x·t1 + td.
+    let xv = TruthTable::var(nvars, v);
+    let tt = xv.not().and(&t0).or(&xv.and(&t1)).or(&td);
+    (cover, tt)
+}
+
+/// Convenience: exact minterm cover of a table (used by the LogicNets
+/// baseline, which does *not* minimize).
+pub fn minterm_cover(tt: &TruthTable) -> Cover {
+    let cubes = (0..1u64 << tt.nvars())
+        .filter(|&m| tt.eval(m))
+        .map(|m| Cube::minterm(tt.nvars(), m))
+        .collect();
+    Cover::from_cubes(tt.nvars(), cubes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    fn random_tt(nvars: usize, rng: &mut Xoshiro256, density: f64) -> TruthTable {
+        TruthTable::from_fn(nvars, |_| rng.bernoulli(density))
+    }
+
+    #[test]
+    fn var_projection() {
+        let t = TruthTable::var(3, 1);
+        for i in 0..8u64 {
+            assert_eq!(t.eval(i), (i >> 1) & 1 == 1);
+        }
+    }
+
+    #[test]
+    fn cofactors_partition() {
+        let mut rng = Xoshiro256::new(1);
+        let t = random_tt(5, &mut rng, 0.5);
+        for v in 0..5 {
+            let (c0, c1) = t.cofactors(v);
+            assert!(!c0.depends_on(v));
+            assert!(!c1.depends_on(v));
+            // Shannon: f = x'·c0 + x·c1
+            let xv = TruthTable::var(5, v);
+            let recon = xv.not().and(&c0).or(&xv.and(&c1));
+            assert_eq!(recon, t);
+        }
+    }
+
+    #[test]
+    fn depends_on_detects_support() {
+        // f = x0 XOR x2 over 4 vars
+        let t = TruthTable::from_fn(4, |i| ((i & 1) ^ ((i >> 2) & 1)) == 1);
+        assert!(t.depends_on(0));
+        assert!(!t.depends_on(1));
+        assert!(t.depends_on(2));
+        assert!(!t.depends_on(3));
+    }
+
+    #[test]
+    fn isop_exact_when_no_dc() {
+        let mut rng = Xoshiro256::new(42);
+        for nvars in 0..=8 {
+            for _ in 0..20 {
+                let on = random_tt(nvars, &mut rng, 0.4);
+                let dc = TruthTable::zeros(nvars);
+                let c = TruthTable::isop(&on, &dc);
+                let back = TruthTable::from_cover(&c);
+                assert_eq!(back, on, "nvars={nvars}");
+            }
+        }
+    }
+
+    #[test]
+    fn isop_respects_dc_bounds() {
+        let mut rng = Xoshiro256::new(7);
+        for _ in 0..50 {
+            let nvars = 6;
+            let on = random_tt(nvars, &mut rng, 0.3);
+            let dc_raw = random_tt(nvars, &mut rng, 0.3);
+            let dc = dc_raw.and(&on.not()); // disjoint
+            let c = TruthTable::isop(&on, &dc);
+            let back = TruthTable::from_cover(&c);
+            assert!(on.implies(&back), "ON must be covered");
+            assert!(back.implies(&on.or(&dc)), "must stay within ON ∪ DC");
+        }
+    }
+
+    #[test]
+    fn isop_xor_cube_count() {
+        // ISOP of an n-var XOR needs exactly 2^(n-1) cubes (no compaction
+        // possible) — a sanity anchor that the recursion doesn't blow up.
+        for n in 1..=6usize {
+            let on = TruthTable::from_fn(n, |i| (i.count_ones() & 1) == 1);
+            let c = TruthTable::isop(&on, &TruthTable::zeros(n));
+            assert_eq!(c.len(), 1 << (n - 1), "xor{n}");
+        }
+    }
+
+    #[test]
+    fn isop_compacts_unate_function() {
+        // f = x0 + x1 + x2: ISOP should give 3 single-literal cubes, not 7
+        // minterms.
+        let on = TruthTable::from_fn(3, |i| i != 0);
+        let c = TruthTable::isop(&on, &TruthTable::zeros(3));
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.literal_count(), 3);
+    }
+
+    #[test]
+    fn isop_constants() {
+        let z = TruthTable::zeros(4);
+        let o = TruthTable::ones(4);
+        assert!(TruthTable::isop(&z, &z).is_empty());
+        let c = TruthTable::isop(&o, &z);
+        assert_eq!(c.len(), 1);
+        assert!(TruthTable::from_cover(&c).is_ones());
+        // Everything DC → empty cover is allowed (ON is empty).
+        assert!(TruthTable::isop(&z, &o).is_empty());
+    }
+
+    #[test]
+    fn minterm_cover_is_exact() {
+        let mut rng = Xoshiro256::new(3);
+        let t = random_tt(5, &mut rng, 0.5);
+        let c = minterm_cover(&t);
+        assert_eq!(c.len(), t.count_ones());
+        assert_eq!(TruthTable::from_cover(&c), t);
+    }
+
+    #[test]
+    fn boolean_ops() {
+        let mut rng = Xoshiro256::new(9);
+        let a = random_tt(6, &mut rng, 0.5);
+        let b = random_tt(6, &mut rng, 0.5);
+        assert_eq!(a.and(&b).not(), a.not().or(&b.not())); // De Morgan
+        assert_eq!(a.xor(&b), a.and(&b.not()).or(&a.not().and(&b)));
+        assert!(a.and(&b).implies(&a));
+        assert!(a.implies(&a.or(&b)));
+    }
+}

@@ -1,0 +1,243 @@
+//! Synthesizable Verilog emission.
+//!
+//! Produces the RTL a user would hand to Vivado to reproduce the paper's
+//! hardware numbers on a real VU9P: one `assign`/`LUT` expression per mapped
+//! LUT and a register stage per pipeline boundary. LUT functions are emitted
+//! as sums of products from their ISOP covers.
+
+use crate::logic::cube::Pol;
+use crate::logic::netlist::{LutNetlist, PipelinedCircuit, Sig};
+use crate::logic::truthtable::TruthTable;
+
+fn sig_expr(s: &Sig) -> String {
+    match s {
+        Sig::Const(false) => "1'b0".to_string(),
+        Sig::Const(true) => "1'b1".to_string(),
+        Sig::Input(i) => format!("pi[{i}]"),
+        Sig::Lut(j) => format!("n{j}"),
+    }
+}
+
+/// SOP expression for a LUT over named input expressions.
+fn lut_expr(table: &TruthTable, inputs: &[String]) -> String {
+    if table.is_zero() {
+        return "1'b0".to_string();
+    }
+    if table.is_ones() {
+        return "1'b1".to_string();
+    }
+    let cover = TruthTable::isop(table, &TruthTable::zeros(table.nvars()));
+    let mut terms = Vec::new();
+    for cube in &cover.cubes {
+        let mut lits = Vec::new();
+        for (v, name) in inputs.iter().enumerate() {
+            match cube.get(v) {
+                Pol::One => lits.push(name.clone()),
+                Pol::Zero => lits.push(format!("~{name}")),
+                Pol::DC => {}
+                Pol::Empty => unreachable!(),
+            }
+        }
+        terms.push(if lits.is_empty() {
+            "1'b1".to_string()
+        } else {
+            lits.join(" & ")
+        });
+    }
+    terms
+        .iter()
+        .map(|t| format!("({t})"))
+        .collect::<Vec<_>>()
+        .join(" | ")
+}
+
+/// Emit a combinational netlist as a Verilog module.
+pub fn netlist_to_verilog(nl: &LutNetlist, module_name: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "module {module_name} (\n    input  wire [{}:0] pi,\n    output wire [{}:0] po\n);\n",
+        nl.num_inputs.max(1) - 1,
+        nl.outputs.len().max(1) - 1
+    ));
+    for (j, lut) in nl.luts.iter().enumerate() {
+        let ins: Vec<String> = lut.inputs.iter().map(sig_expr).collect();
+        out.push_str(&format!(
+            "    wire n{j};\n    assign n{j} = {};\n",
+            lut_expr(&lut.table, &ins)
+        ));
+    }
+    for (j, (s, inv)) in nl.outputs.iter().enumerate() {
+        let e = sig_expr(s);
+        out.push_str(&format!(
+            "    assign po[{j}] = {}{e};\n",
+            if *inv { "~" } else { "" }
+        ));
+    }
+    out.push_str("endmodule\n");
+    out
+}
+
+/// Emit a pipelined circuit: registered inputs, a register stage after every
+/// pipeline boundary, registered outputs (the fmax-measurement convention).
+pub fn pipelined_to_verilog(c: &PipelinedCircuit, module_name: &str) -> String {
+    let nl = &c.netlist;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "module {module_name} (\n    input  wire clk,\n    input  wire [{}:0] pi,\n    output reg  [{}:0] po\n);\n",
+        nl.num_inputs.max(1) - 1,
+        nl.outputs.len().max(1) - 1
+    ));
+    // Input registers.
+    out.push_str(&format!(
+        "    reg [{}:0] pi_q;\n    always @(posedge clk) pi_q <= pi;\n",
+        nl.num_inputs.max(1) - 1
+    ));
+    let stage_of = |s: &Sig| -> i64 {
+        match s {
+            Sig::Lut(j) => c.stage_of_lut[*j as usize] as i64,
+            _ => -1,
+        }
+    };
+    // Registered aliases for crossing signals.
+    use std::collections::HashMap;
+    let mut last_use: HashMap<Sig, i64> = HashMap::new();
+    for (i, lut) in nl.luts.iter().enumerate() {
+        let si = c.stage_of_lut[i] as i64;
+        for s in &lut.inputs {
+            if !matches!(s, Sig::Const(_)) {
+                let e = last_use.entry(*s).or_insert(i64::MIN);
+                *e = (*e).max(si);
+            }
+        }
+    }
+    for (s, _) in &nl.outputs {
+        if !matches!(s, Sig::Const(_)) {
+            let e = last_use.entry(*s).or_insert(i64::MIN);
+            *e = (*e).max(c.num_stages as i64 - 1);
+        }
+    }
+    let base_name = |s: &Sig| -> String {
+        match s {
+            Sig::Input(i) => format!("pi_q[{i}]"),
+            Sig::Lut(j) => format!("n{j}"),
+            Sig::Const(b) => format!("1'b{}", *b as u8),
+        }
+    };
+    let flat = |s: &Sig| -> String {
+        match s {
+            Sig::Input(i) => format!("pi{i}"),
+            Sig::Lut(j) => format!("n{j}"),
+            Sig::Const(_) => unreachable!(),
+        }
+    };
+    let name_at = |s: &Sig, stage: i64| -> String {
+        let p = stage_of(s);
+        if matches!(s, Sig::Const(_)) || stage <= p.max(0) {
+            base_name(s)
+        } else {
+            format!("{}_s{stage}", flat(s))
+        }
+    };
+    // Emit pipeline registers, ordered for readability.
+    let mut regs: Vec<String> = Vec::new();
+    for (s, last) in &last_use {
+        let p = stage_of(s);
+        let mut st = p.max(0) + 1;
+        while st <= *last {
+            regs.push(format!(
+                "    reg {n}; always @(posedge clk) {n} <= {prev};\n",
+                n = format!("{}_s{st}", flat(s)),
+                prev = name_at(s, st - 1),
+            ));
+            st += 1;
+        }
+    }
+    regs.sort();
+    for r in &regs {
+        out.push_str(r);
+    }
+    // Combinational LUTs reading stage-local names.
+    for (j, lut) in nl.luts.iter().enumerate() {
+        let si = c.stage_of_lut[j] as i64;
+        let ins: Vec<String> = lut.inputs.iter().map(|s| name_at(s, si)).collect();
+        out.push_str(&format!(
+            "    wire n{j};\n    assign n{j} = {};\n",
+            lut_expr(&lut.table, &ins)
+        ));
+    }
+    // Output registers.
+    out.push_str("    always @(posedge clk) begin\n");
+    for (j, (s, inv)) in nl.outputs.iter().enumerate() {
+        let e = name_at(s, c.num_stages as i64 - 1);
+        out.push_str(&format!(
+            "        po[{j}] <= {}{e};\n",
+            if *inv { "~" } else { "" }
+        ));
+    }
+    out.push_str("    end\nendmodule\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::netlist::Sig;
+
+    fn simple_netlist() -> LutNetlist {
+        let mut nl = LutNetlist::new(3);
+        let xor = TruthTable::from_fn(2, |m| (m.count_ones() & 1) == 1);
+        let a = nl.add_lut(vec![Sig::Input(0), Sig::Input(1)], xor.clone());
+        let b = nl.add_lut(vec![a, Sig::Input(2)], xor);
+        nl.add_output(b, false);
+        nl.add_output(a, true);
+        nl
+    }
+
+    #[test]
+    fn verilog_module_shape() {
+        let v = netlist_to_verilog(&simple_netlist(), "parity3");
+        assert!(v.starts_with("module parity3"));
+        assert!(v.contains("input  wire [2:0] pi"));
+        assert!(v.contains("output wire [1:0] po"));
+        assert!(v.contains("assign n0 ="));
+        assert!(v.contains("assign po[1] = ~n0;"));
+        assert!(v.ends_with("endmodule\n"));
+    }
+
+    #[test]
+    fn xor_expression() {
+        let v = netlist_to_verilog(&simple_netlist(), "m");
+        // xor of pi[0], pi[1]: two product terms
+        assert!(
+            v.contains("(~pi[0] & pi[1]) | (pi[0] & ~pi[1])")
+                || v.contains("(pi[0] & ~pi[1]) | (~pi[0] & pi[1])"),
+            "{v}"
+        );
+    }
+
+    #[test]
+    fn pipelined_has_clk_and_regs() {
+        let c = PipelinedCircuit {
+            netlist: simple_netlist(),
+            stage_of_lut: vec![0, 1],
+            num_stages: 2,
+        };
+        let v = pipelined_to_verilog(&c, "piped");
+        assert!(v.contains("input  wire clk"));
+        assert!(v.contains("pi_q <= pi"));
+        assert!(v.contains("n0_s1"), "crossing signal must be registered:\n{v}");
+        assert!(v.contains("po[0] <="));
+    }
+
+    #[test]
+    fn constant_luts() {
+        let mut nl = LutNetlist::new(1);
+        let z = nl.add_lut(vec![Sig::Input(0)], TruthTable::zeros(1));
+        let o = nl.add_lut(vec![Sig::Input(0)], TruthTable::ones(1));
+        nl.add_output(z, false);
+        nl.add_output(o, false);
+        let v = netlist_to_verilog(&nl, "consts");
+        assert!(v.contains("assign n0 = 1'b0;"));
+        assert!(v.contains("assign n1 = 1'b1;"));
+    }
+}

@@ -1,0 +1,277 @@
+//! `nullanet` — the NullaNet Tiny command-line interface.
+//!
+//! ```text
+//! nullanet flow    --arch jsc-s [--no-espresso] [--no-retime] [--jobs N]
+//! nullanet table1  [--test-set artifacts/jsc_test.bin] [--quick]
+//! nullanet verify  --arch jsc-s [--samples 2000]
+//! nullanet serve   --arch jsc-s --addr 127.0.0.1:7878 --engine logic|pjrt|compare
+//! nullanet emit    --arch jsc-s --format blif|verilog --out file
+//! nullanet info    --arch jsc-s
+//! ```
+//!
+//! Models and datasets come from `artifacts/` (built by `make artifacts`).
+
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use nullanet_tiny::baseline::{build_logicnets, AqpModel};
+use nullanet_tiny::coordinator::{BatchPolicy, PjrtSpec, Policy, Router};
+use nullanet_tiny::data::Dataset;
+use nullanet_tiny::flow::{circuit_accuracy, run_flow, FlowConfig};
+use nullanet_tiny::fpga::report::{format_table, Comparison, ResultRow};
+use nullanet_tiny::fpga::timing::TimingModel;
+use nullanet_tiny::nn::model::{Arch, Model};
+use nullanet_tiny::util::cli::Args;
+
+fn main() -> ExitCode {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("flow") => cmd_flow(&args),
+        Some("table1") => cmd_table1(&args),
+        Some("verify") => cmd_verify(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("emit") => cmd_emit(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => Err(format!("unknown command '{other}'; see README")),
+        None => {
+            println!("usage: nullanet <flow|table1|verify|serve|emit|info> [options]");
+            Ok(())
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Resolve `--arch`/`--model` into a loaded model.
+fn load_model(args: &Args) -> Result<Model, String> {
+    if let Some(path) = args.get_opt("model") {
+        return Model::load(path);
+    }
+    let arch = args.get_str("arch", "jsc-s");
+    Arch::parse(&arch).ok_or_else(|| format!("unknown arch '{arch}'"))?;
+    let dir = args.get_str("artifacts", "artifacts");
+    Model::load(&format!("{dir}/{arch}.model.json"))
+}
+
+fn flow_config(args: &Args) -> Result<FlowConfig, String> {
+    Ok(FlowConfig {
+        use_espresso: !args.get_bool("no-espresso"),
+        retime: !args.get_bool("no-retime"),
+        dc_from_data: args.get_bool("dc-from-data"),
+        jobs: args.get_usize("jobs", FlowConfig::default().jobs)?,
+        map_for_area: args.get_bool("map-for-area"),
+        verify: !args.get_bool("no-verify"),
+        ..Default::default()
+    })
+}
+
+fn cmd_flow(args: &Args) -> Result<(), String> {
+    args.check_known(&[
+        "arch", "model", "artifacts", "no-espresso", "no-retime", "dc-from-data",
+        "jobs", "map-for-area", "no-verify", "test-set",
+    ])?;
+    let model = load_model(args)?;
+    println!("model: {}", model.summary());
+    let cfg = flow_config(args)?;
+    let dir = args.get_str("artifacts", "artifacts");
+    let train = if cfg.dc_from_data {
+        Some(Dataset::load(&format!("{dir}/jsc_train.bin")).map_err(|e| e.to_string())?)
+    } else {
+        None
+    };
+    let xs_ref = train.as_ref().map(|d| d.xs.as_slice());
+    let r = run_flow(&model, &cfg, xs_ref).map_err(|e| e.to_string())?;
+    println!("{}", r.timer.report("flow stages"));
+    let stats = r.circuit.stats();
+    let tm = TimingModel::vu9p();
+    println!(
+        "LUTs {}  FFs {}  stage-depth {}  fmax {:.0} MHz  latency {:.2} ns  \
+         (cubes {} → {})",
+        stats.luts,
+        stats.ffs,
+        stats.max_stage_depth,
+        tm.fmax_mhz(stats.max_stage_depth),
+        tm.latency_ns(stats.latency_cycles, stats.max_stage_depth),
+        r.total_cubes_before,
+        r.total_cubes_after,
+    );
+    let test_path = args.get_str("test-set", &format!("{dir}/jsc_test.bin"));
+    if std::path::Path::new(&test_path).exists() {
+        let test = Dataset::load(&test_path).map_err(|e| e.to_string())?;
+        let acc = circuit_accuracy(&model, &r.circuit, &test.xs, &test.ys);
+        println!("logic-circuit test accuracy: {:.2}%", acc * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<(), String> {
+    args.check_known(&["artifacts", "jobs", "test-set", "quick"])?;
+    let dir = args.get_str("artifacts", "artifacts");
+    let test = Dataset::load(&args.get_str("test-set", &format!("{dir}/jsc_test.bin")))
+        .map_err(|e| e.to_string())?;
+    let jobs = args.get_usize("jobs", FlowConfig::default().jobs)?;
+    let tm = TimingModel::vu9p();
+    let mut rows = Vec::new();
+    let archs: &[Arch] = if args.get_bool("quick") {
+        &[Arch::JscS]
+    } else {
+        &[Arch::JscS, Arch::JscM, Arch::JscL]
+    };
+    for arch in archs {
+        let name = arch.name();
+        let ours_model = Model::load(&format!("{dir}/{name}.model.json"))?;
+        let base_model = Model::load(&format!("{dir}/{name}.logicnets.model.json"))?;
+        let cfg = FlowConfig { jobs, ..Default::default() };
+        let r = run_flow(&ours_model, &cfg, None).map_err(|e| e.to_string())?;
+        let ours_acc = circuit_accuracy(&ours_model, &r.circuit, &test.xs, &test.ys);
+        let base = build_logicnets(&base_model, 6)?;
+        let base_acc = circuit_accuracy(&base_model, &base.circuit, &test.xs, &test.ys);
+        rows.push(Comparison {
+            ours: ResultRow::from_stats(
+                &name.to_uppercase(),
+                ours_acc,
+                r.circuit.stats(),
+                &tm,
+            ),
+            baseline: ResultRow::from_stats(
+                &name.to_uppercase(),
+                base_acc,
+                base.circuit.stats(),
+                &tm,
+            ),
+        });
+    }
+    println!("\nTable I — NullaNet Tiny vs LogicNets (measured on this build)\n");
+    print!("{}", format_table(&rows));
+    // Headline claims (H1/H2).
+    if let Some(m) = rows.iter().find(|c| c.ours.arch == "JSC-M") {
+        let aqp = AqpModel::default();
+        let ours_model = Model::load(&format!("{dir}/jsc-m.model.json"))?;
+        let aqp_ns = aqp.latency_ns(&ours_model);
+        println!(
+            "\nheadlines: latency vs LogicNets {:.2}x lower; LUTs {:.2}x lower; \
+             vs Google AQP {:.2}x lower ({:.1} ns vs {:.1} ns)",
+            m.latency_decrease(),
+            m.lut_decrease(),
+            aqp_ns / m.ours.latency_ns,
+            m.ours.latency_ns,
+            aqp_ns,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<(), String> {
+    args.check_known(&["arch", "model", "artifacts", "samples", "jobs"])?;
+    let model = load_model(args)?;
+    let cfg = FlowConfig {
+        jobs: args.get_usize("jobs", FlowConfig::default().jobs)?,
+        ..Default::default()
+    };
+    let r = run_flow(&model, &cfg, None).map_err(|e| e.to_string())?;
+    let n = args.get_usize("samples", 2000)?;
+    nullanet_tiny::flow::build::verify_circuit(&model, &r.circuit, n, 0xBEEF)
+        .map_err(|e| e.to_string())?;
+    println!(
+        "OK: circuit ≡ quantized NN on {n} random samples \
+         (plus per-cover exhaustive checks during the flow)"
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    args.check_known(&[
+        "arch", "model", "artifacts", "addr", "engine", "max-batch", "max-wait-us",
+        "jobs",
+    ])?;
+    let model = load_model(args)?;
+    let cfg = FlowConfig {
+        jobs: args.get_usize("jobs", FlowConfig::default().jobs)?,
+        ..Default::default()
+    };
+    println!("synthesizing logic for {} …", model.summary());
+    let r = run_flow(&model, &cfg, None).map_err(|e| e.to_string())?;
+    let policy = Policy::parse(&args.get_str("engine", "logic"))
+        .ok_or("bad --engine (logic|pjrt|compare)")?;
+    let pjrt = if policy != Policy::Logic {
+        let dir = args.get_str("artifacts", "artifacts");
+        let arch = args.get_str("arch", "jsc-s");
+        let out_w = model.layers.last().unwrap().out_width;
+        Some(PjrtSpec {
+            hlo_path: format!("{dir}/{arch}.hlo.txt"),
+            batch: 64,
+            in_features: model.input_features,
+            out_width: out_w,
+        })
+    } else {
+        None
+    };
+    let bp = BatchPolicy {
+        max_batch: args.get_usize("max-batch", 64)?,
+        max_wait: std::time::Duration::from_micros(
+            args.get_usize("max-wait-us", 200)? as u64
+        ),
+    };
+    let router = Arc::new(Router::start(model, r.circuit.netlist, pjrt, policy, bp));
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+    println!("serving on {addr} (policy {policy:?}; send {{\"cmd\":\"shutdown\"}} to stop)");
+    nullanet_tiny::coordinator::server::serve(Arc::clone(&router), &addr, None)
+        .map_err(|e| e.to_string())?;
+    println!("{}", router.metrics().report());
+    Ok(())
+}
+
+fn cmd_emit(args: &Args) -> Result<(), String> {
+    args.check_known(&["arch", "model", "artifacts", "format", "out", "jobs"])?;
+    let model = load_model(args)?;
+    let cfg = FlowConfig {
+        jobs: args.get_usize("jobs", FlowConfig::default().jobs)?,
+        ..Default::default()
+    };
+    let r = run_flow(&model, &cfg, None).map_err(|e| e.to_string())?;
+    let name = model.name.replace('-', "_");
+    let text = match args.get_str("format", "blif").as_str() {
+        "blif" => nullanet_tiny::logic::blif::pipelined_to_blif(&r.circuit, &name),
+        "verilog" => nullanet_tiny::logic::verilog::pipelined_to_verilog(&r.circuit, &name),
+        f => return Err(format!("unknown format '{f}'")),
+    };
+    match args.get_opt("out") {
+        Some(path) => {
+            std::fs::write(path, text).map_err(|e| e.to_string())?;
+            println!("wrote {path}");
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<(), String> {
+    args.check_known(&["arch", "model", "artifacts"])?;
+    let model = load_model(args)?;
+    println!("{}", model.summary());
+    for (l, layer) in model.layers.iter().enumerate() {
+        let in_bits = model.in_quant_of_layer(l).bits;
+        println!(
+            "  layer {l}: {}→{}  fanin ≤{}  neuron fn {} in / {} out bits  \
+             (enumeration 2^{})",
+            layer.in_width,
+            layer.out_width,
+            layer.max_fanin(),
+            layer.max_fanin() * in_bits,
+            layer.act.bits,
+            layer.max_fanin() * in_bits,
+        );
+    }
+    Ok(())
+}

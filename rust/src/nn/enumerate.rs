@@ -1,0 +1,196 @@
+//! Neuron input enumeration → truth tables (NullaNet [32], step 3).
+//!
+//! A neuron with fanin γ whose inputs are β-bit codes is a completely
+//! specified Boolean function `{0,1}^(γ·β) → {0,1}^(β_out)`: enumerate all
+//! `2^(γ·β)` input-code combinations, run the exact integer neuron
+//! evaluation, and record each output bit in its own [`TruthTable`].
+//! Optionally, combinations never observed on training data become
+//! don't-cares (the original NullaNet trick; NullaNet Tiny enumerates fully
+//! but the flow exposes it as an ablation).
+
+use crate::logic::truthtable::TruthTable;
+use crate::nn::model::Model;
+
+/// Enumerated function of one neuron: one table per output bit (LSB first),
+/// plus the shared don't-care set.
+#[derive(Clone, Debug)]
+pub struct NeuronFunction {
+    /// Layer index.
+    pub layer: usize,
+    /// Neuron index within the layer.
+    pub neuron: usize,
+    /// Input variables = mask.len() · in_bits.
+    pub input_bits: usize,
+    /// Per-output-bit ON-set tables (over `input_bits` variables).
+    pub on: Vec<TruthTable>,
+    /// Shared DC set (constant 0 unless data-derived DCs are enabled).
+    pub dc: TruthTable,
+}
+
+/// Enumerate the function of `(layer, neuron)`. `observed` — if given —
+/// restricts the care set: entry `i` of the slice corresponds to the packed
+/// input assignment `i`; `false` marks never-observed patterns as DC.
+pub fn enumerate_neuron(
+    model: &Model,
+    layer: usize,
+    neuron: usize,
+    observed: Option<&[bool]>,
+) -> NeuronFunction {
+    let l = &model.layers[layer];
+    let in_q = model.in_quant_of_layer(layer);
+    let in_bits_per = in_q.bits;
+    let fanin = l.mask[neuron].len();
+    let input_bits = fanin * in_bits_per;
+    assert!(input_bits <= 20, "enumeration limited to 20 input bits");
+    let out_bits = l.act.bits;
+    let size = 1usize << input_bits;
+    if let Some(obs) = observed {
+        assert_eq!(obs.len(), size);
+    }
+
+    let mut on: Vec<TruthTable> = (0..out_bits).map(|_| TruthTable::zeros(input_bits)).collect();
+    let mut dc = TruthTable::zeros(input_bits);
+
+    // Pre-decode weights for speed: acc = bias + Σ w_i · level(code_i).
+    let weights = &l.weights[neuron];
+    let bias = l.bias[neuron];
+    let nlevels = 1usize << in_bits_per;
+    let code_mask = (nlevels - 1) as u64;
+
+    // Per-input lookup: w_i · level(c) for every code c.
+    let wl: Vec<Vec<f64>> = weights
+        .iter()
+        .map(|&w| (0..nlevels).map(|c| w * in_q.value_of(c)).collect())
+        .collect();
+
+    for m in 0..size as u64 {
+        if let Some(obs) = observed {
+            if !obs[m as usize] {
+                dc.set_bit(m as usize, true);
+                continue;
+            }
+        }
+        let mut acc = bias;
+        for (i, tbl) in wl.iter().enumerate() {
+            let code = ((m >> (i * in_bits_per)) & code_mask) as usize;
+            acc += tbl[code];
+        }
+        let out_code = l.act.code_of(acc);
+        for (b, table) in on.iter_mut().enumerate() {
+            if (out_code >> b) & 1 == 1 {
+                table.set_bit(m as usize, true);
+            }
+        }
+    }
+    NeuronFunction { layer, neuron, input_bits, on, dc }
+}
+
+/// Collect, per neuron of `layer`, the set of observed packed input
+/// assignments over a dataset of input-code traces (for DC-from-data mode).
+pub fn observed_patterns(
+    model: &Model,
+    layer: usize,
+    traces: &[crate::nn::eval::Trace],
+) -> Vec<Vec<bool>> {
+    let l = &model.layers[layer];
+    let in_bits_per = model.in_quant_of_layer(layer).bits;
+    let mut out: Vec<Vec<bool>> = l
+        .mask
+        .iter()
+        .map(|m| vec![false; 1usize << (m.len() * in_bits_per)])
+        .collect();
+    for tr in traces {
+        let codes: &[usize] =
+            if layer == 0 { &tr.input_codes } else { &tr.codes[layer - 1] };
+        for (n, mask) in l.mask.iter().enumerate() {
+            let mut packed = 0usize;
+            for (i, &src) in mask.iter().enumerate() {
+                packed |= codes[src] << (i * in_bits_per);
+            }
+            out[n][packed] = true;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::eval::{forward_codes, neuron_code};
+    use crate::nn::model::random_model;
+
+    #[test]
+    fn enumeration_matches_eval_exhaustively() {
+        let m = random_model("t", 6, &[4, 3], 3, 2, 11);
+        for layer in 0..m.layers.len() {
+            let in_bits_per = m.in_quant_of_layer(layer).bits;
+            for neuron in 0..m.layers[layer].out_width {
+                let f = enumerate_neuron(&m, layer, neuron, None);
+                let fanin = m.layers[layer].mask[neuron].len();
+                assert_eq!(f.input_bits, fanin * in_bits_per);
+                assert!(f.dc.is_zero());
+                // Cross-check every assignment against neuron_code.
+                for a in 0..1u64 << f.input_bits {
+                    // unpack codes for the masked inputs; other inputs = 0
+                    let mut in_codes = vec![0usize; m.layers[layer].in_width];
+                    for (i, &src) in m.layers[layer].mask[neuron].iter().enumerate() {
+                        in_codes[src] = ((a >> (i * in_bits_per))
+                            & ((1 << in_bits_per) - 1))
+                            as usize;
+                    }
+                    let want = neuron_code(&m, layer, neuron, &in_codes);
+                    let got: usize = f
+                        .on
+                        .iter()
+                        .enumerate()
+                        .map(|(b, t)| if t.eval(a) { 1usize << b } else { 0 })
+                        .sum();
+                    assert_eq!(got, want, "layer {layer} neuron {neuron} a={a}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn out_bits_match_act_bits() {
+        let m = random_model("t", 5, &[3], 2, 2, 3);
+        let f = enumerate_neuron(&m, 0, 0, None);
+        assert_eq!(f.on.len(), m.layers[0].act.bits);
+    }
+
+    #[test]
+    fn observed_patterns_mark_dc() {
+        let m = random_model("t", 4, &[3, 2], 2, 1, 23);
+        // Traces from a few inputs.
+        let traces: Vec<_> = (0..10u64)
+            .map(|s| {
+                let codes: Vec<usize> = (0..4).map(|i| ((s >> i) & 1) as usize).collect();
+                forward_codes(&m, &codes)
+            })
+            .collect();
+        let obs = observed_patterns(&m, 0, &traces);
+        assert_eq!(obs.len(), 3);
+        // With 1-bit inputs and fanin 2 → 4 patterns; some must be observed.
+        for o in &obs {
+            assert_eq!(o.len(), 4);
+            assert!(o.iter().any(|&b| b), "at least one observed pattern");
+        }
+        // Enumerate with DC: dc set = complement of observed.
+        let f = enumerate_neuron(&m, 0, 0, Some(&obs[0]));
+        let dc_count = f.dc.count_ones();
+        let unobserved = obs[0].iter().filter(|&&b| !b).count();
+        assert_eq!(dc_count, unobserved);
+        // ON sets never intersect DC.
+        for t in &f.on {
+            assert!(t.and(&f.dc).is_zero());
+        }
+    }
+
+    #[test]
+    fn layer1_uses_previous_act_quantizer() {
+        let m = random_model("t", 4, &[3, 2], 2, 2, 31);
+        let f = enumerate_neuron(&m, 1, 0, None);
+        // layer 1 inputs are layer 0 activations: 2 bits each, fanin 2
+        assert_eq!(f.input_bits, 4);
+    }
+}

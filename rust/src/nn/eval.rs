@@ -1,0 +1,212 @@
+//! Exact integer/code-level evaluation of quantized models.
+//!
+//! This is the *gold reference* for the logic flow: every neuron's output
+//! code is computed with the same level tables the truth-table enumerator
+//! uses, so "netlist ≡ NN" can be checked bit-for-bit. Also provides
+//! float-free classification (argmax over last-layer codes' values) and
+//! test-set accuracy — the numbers Table I's accuracy column reports.
+
+use crate::nn::model::Model;
+
+/// Per-layer neuron output codes for one sample (useful for debugging and
+/// for data-derived don't-care collection).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Trace {
+    /// `codes[l][n]` = code of neuron `n` of layer `l`.
+    pub codes: Vec<Vec<usize>>,
+    /// Quantized input codes (per feature).
+    pub input_codes: Vec<usize>,
+}
+
+/// Standardize + quantize raw features into input codes.
+pub fn quantize_input(model: &Model, features: &[f64]) -> Vec<usize> {
+    assert_eq!(features.len(), model.input_features);
+    features
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| {
+            let z = (x - model.feature_mean[i]) / model.feature_std[i];
+            model.input_quant.code_of(z)
+        })
+        .collect()
+}
+
+/// Evaluate one neuron from its input codes: decode levels, weighted sum,
+/// re-quantize. `in_quant` is the quantizer of the layer's inputs.
+#[inline]
+pub fn neuron_code(
+    model: &Model,
+    layer: usize,
+    neuron: usize,
+    in_codes: &[usize],
+) -> usize {
+    let l = &model.layers[layer];
+    let q_in = model.in_quant_of_layer(layer);
+    let mut acc = l.bias[neuron];
+    for (w, &src) in l.weights[neuron].iter().zip(&l.mask[neuron]) {
+        acc += w * q_in.value_of(in_codes[src]);
+    }
+    l.act.code_of(acc)
+}
+
+/// Full forward pass on code level; returns the trace.
+pub fn forward_codes(model: &Model, input_codes: &[usize]) -> Trace {
+    let mut codes: Vec<Vec<usize>> = Vec::with_capacity(model.layers.len());
+    let mut current: Vec<usize> = input_codes.to_vec();
+    for (li, l) in model.layers.iter().enumerate() {
+        let next: Vec<usize> =
+            (0..l.out_width).map(|n| neuron_code(model, li, n, &current)).collect();
+        codes.push(next.clone());
+        current = next;
+    }
+    Trace { codes, input_codes: input_codes.to_vec() }
+}
+
+/// Predicted class: argmax of last-layer reconstruction values over the
+/// first `num_classes` neurons (ties: lowest index, matching the Python
+/// exporter and the logic decoder).
+pub fn classify_codes(model: &Model, last_codes: &[usize]) -> usize {
+    let q = &model.layers.last().unwrap().act;
+    let mut best = 0usize;
+    let mut best_v = f64::NEG_INFINITY;
+    for (n, &c) in last_codes.iter().take(model.num_classes).enumerate() {
+        let v = q.value_of(c);
+        if v > best_v {
+            best_v = v;
+            best = n;
+        }
+    }
+    best
+}
+
+/// End-to-end: raw features → class.
+pub fn classify(model: &Model, features: &[f64]) -> usize {
+    let codes = quantize_input(model, features);
+    let tr = forward_codes(model, &codes);
+    classify_codes(model, tr.codes.last().unwrap())
+}
+
+/// Accuracy on a labelled set.
+pub fn accuracy(model: &Model, xs: &[Vec<f64>], ys: &[usize]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let correct = xs
+        .iter()
+        .zip(ys)
+        .filter(|(x, &y)| classify(model, x) == y)
+        .count();
+    correct as f64 / xs.len() as f64
+}
+
+/// Encode input codes into the circuit's primary-input bit vector (LSB-first
+/// per feature, feature 0 in the lowest bits) — the wire ordering contract
+/// shared with [`crate::flow`].
+pub fn codes_to_bits(codes: &[usize], bits_per_code: usize) -> Vec<bool> {
+    let mut out = Vec::with_capacity(codes.len() * bits_per_code);
+    for &c in codes {
+        for b in 0..bits_per_code {
+            out.push((c >> b) & 1 == 1);
+        }
+    }
+    out
+}
+
+/// Decode a bit slice back into codes (inverse of [`codes_to_bits`]).
+pub fn bits_to_codes(bits: &[bool], bits_per_code: usize) -> Vec<usize> {
+    assert_eq!(bits.len() % bits_per_code, 0);
+    bits.chunks(bits_per_code)
+        .map(|ch| {
+            ch.iter()
+                .enumerate()
+                .map(|(b, &v)| if v { 1usize << b } else { 0 })
+                .sum()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::{random_model, Quantizer};
+
+    #[test]
+    fn neuron_code_matches_manual_computation() {
+        let mut m = random_model("t", 3, &[2], 2, 1, 5);
+        // Make layer deterministic: neuron 0 reads inputs {0,2} with w=1.0.
+        m.layers[0].mask[0] = vec![0, 2];
+        m.layers[0].weights[0] = vec![1.0, 1.0];
+        m.layers[0].bias[0] = 0.0;
+        m.layers[0].act = Quantizer::pact(1, 1.0); // levels {0,1}, threshold 0.5
+        // input quant: 1-bit signed uniform → levels {-1, 0}
+        m.input_quant = Quantizer::sign(); // {-1,+1}
+        m.validate().unwrap();
+        // codes (1,_,1) → values (+1,+1) → sum 2.0 → code 1
+        assert_eq!(neuron_code(&m, 0, 0, &[1, 0, 1]), 1);
+        // codes (0,_,1) → -1+1 = 0 → below 0.5 → code 0
+        assert_eq!(neuron_code(&m, 0, 0, &[0, 1, 1]), 0);
+    }
+
+    #[test]
+    fn forward_trace_shapes() {
+        let m = random_model("t", 8, &[6, 4, 3], 3, 2, 42);
+        let codes = vec![1usize; 8];
+        let tr = forward_codes(&m, &codes);
+        assert_eq!(tr.codes.len(), 3);
+        assert_eq!(tr.codes[0].len(), 6);
+        assert_eq!(tr.codes[2].len(), 3);
+        // all codes within range
+        for (l, cs) in tr.codes.iter().enumerate() {
+            let n = 1usize << m.layers[l].act.bits;
+            assert!(cs.iter().all(|&c| c < n));
+        }
+    }
+
+    #[test]
+    fn classify_is_deterministic_and_in_range() {
+        let m = random_model("t", 8, &[6, 5], 3, 2, 9);
+        for s in 0..50u64 {
+            let x: Vec<f64> = (0..8).map(|i| ((s as f64) * 0.1 + i as f64 * 0.3).sin()).collect();
+            let c = classify(&m, &x);
+            assert!(c < 5);
+            assert_eq!(c, classify(&m, &x));
+        }
+    }
+
+    #[test]
+    fn accuracy_bounds() {
+        let m = random_model("t", 4, &[4, 3], 2, 1, 17);
+        let xs: Vec<Vec<f64>> = (0..30)
+            .map(|i| (0..4).map(|j| ((i * 7 + j) as f64 * 0.37).cos()).collect())
+            .collect();
+        let ys: Vec<usize> = xs.iter().map(|x| classify(&m, x)).collect();
+        assert_eq!(accuracy(&m, &xs, &ys), 1.0, "self-labels give 100%");
+        let wrong: Vec<usize> = ys.iter().map(|&y| (y + 1) % 3).collect();
+        assert_eq!(accuracy(&m, &xs, &wrong), 0.0);
+    }
+
+    #[test]
+    fn bits_roundtrip() {
+        let codes = vec![0usize, 1, 2, 3, 1];
+        let bits = codes_to_bits(&codes, 2);
+        assert_eq!(bits.len(), 10);
+        assert_eq!(bits_to_codes(&bits, 2), codes);
+        // LSB-first contract: code 2 = bits [0,1]
+        assert_eq!(&bits[4..6], &[false, true]);
+    }
+
+    #[test]
+    fn quantize_input_standardizes() {
+        let mut m = random_model("t", 2, &[2], 2, 2, 1);
+        m.feature_mean = vec![10.0, -5.0];
+        m.feature_std = vec![2.0, 0.5];
+        m.input_quant = Quantizer::signed_uniform(2, 1.0); // levels -2,-1,0,1
+        let codes = quantize_input(&m, &[10.0, -5.0]); // z = 0,0
+        // z=0 → between levels -1 and 0 → code_of(0.0): thresholds at
+        // -1.5,-0.5,0.5 → 0.0 maps to code 2
+        assert_eq!(codes, vec![2, 2]);
+        let codes2 = quantize_input(&m, &[4.0, -4.0]); // z = -3, +2
+        assert_eq!(codes2, vec![0, 3]);
+    }
+}

@@ -1,0 +1,6 @@
+//! Quantized-model substrate: interchange format, exact code-level
+//! evaluation, and neuron truth-table enumeration (NullaNet's core step).
+
+pub mod enumerate;
+pub mod eval;
+pub mod model;

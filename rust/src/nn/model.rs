@@ -1,0 +1,558 @@
+//! Quantized, fanin-constrained model representation.
+//!
+//! The interchange format between the Python training stack (L2) and the
+//! Rust flow engine (L3): `artifacts/<arch>.model.json`. Quantizers are
+//! exported as explicit *level tables* (`code → value`) plus *threshold
+//! arrays* (`value → code` via binary search over bucket boundaries), so the
+//! Rust side never re-implements PACT/sign math — it replays exactly what
+//! training quantized, making the integer evaluation in
+//! [`crate::nn::eval`] the gold reference the logic must match bit-for-bit.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// A scalar quantizer given by its reconstruction levels and the decision
+/// thresholds between adjacent codes. `levels.len() == 2^bits`,
+/// `thresholds.len() == levels.len() - 1`, and `value v` maps to the number
+/// of thresholds strictly below `v` (i.e. code `c` ⇔
+/// `thresholds[c-1] ≤ v < thresholds[c]`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Quantizer {
+    /// Bits per code.
+    pub bits: usize,
+    /// Reconstruction value of each code (ascending).
+    pub levels: Vec<f64>,
+    /// Decision boundaries (ascending, one fewer than levels).
+    pub thresholds: Vec<f64>,
+}
+
+impl Quantizer {
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.levels.len() != 1usize << self.bits {
+            return Err(format!(
+                "levels.len()={} but bits={} (expected {})",
+                self.levels.len(),
+                self.bits,
+                1usize << self.bits
+            ));
+        }
+        if self.thresholds.len() + 1 != self.levels.len() {
+            return Err("thresholds must have levels.len()-1 entries".into());
+        }
+        if self.levels.windows(2).any(|w| w[0] > w[1]) {
+            return Err("levels must be ascending".into());
+        }
+        if self.thresholds.windows(2).any(|w| w[0] > w[1]) {
+            return Err("thresholds must be ascending".into());
+        }
+        Ok(())
+    }
+
+    /// Quantize a value to its code.
+    #[inline]
+    pub fn code_of(&self, v: f64) -> usize {
+        // number of thresholds ≤ v  (partition_point is a binary search)
+        self.thresholds.partition_point(|&t| t <= v)
+    }
+
+    /// Reconstruction value of a code.
+    #[inline]
+    pub fn value_of(&self, code: usize) -> f64 {
+        self.levels[code]
+    }
+
+    /// Quantize-dequantize.
+    #[inline]
+    pub fn quantize(&self, v: f64) -> f64 {
+        self.value_of(self.code_of(v))
+    }
+
+    /// A symmetric signed uniform quantizer (test/quickstart helper): levels
+    /// `{-m, …, m}·scale` spread over `2^bits` codes.
+    pub fn signed_uniform(bits: usize, scale: f64) -> Quantizer {
+        let n = 1usize << bits;
+        let half = (n / 2) as f64;
+        let levels: Vec<f64> = (0..n).map(|c| (c as f64 - half) * scale).collect();
+        let thresholds = mid_thresholds(&levels);
+        Quantizer { bits, levels, thresholds }
+    }
+
+    /// A PACT-style unsigned quantizer: levels `{0 … α}` over `2^bits` codes.
+    pub fn pact(bits: usize, alpha: f64) -> Quantizer {
+        let n = 1usize << bits;
+        let levels: Vec<f64> = (0..n).map(|c| alpha * c as f64 / (n - 1) as f64).collect();
+        let thresholds = mid_thresholds(&levels);
+        Quantizer { bits, levels, thresholds }
+    }
+
+    /// Bipolar sign quantizer: 1 bit, {-1, +1}.
+    pub fn sign() -> Quantizer {
+        Quantizer { bits: 1, levels: vec![-1.0, 1.0], thresholds: vec![0.0] }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj([
+            ("bits", Json::int(self.bits as i64)),
+            ("levels", Json::Arr(self.levels.iter().map(|&v| Json::float(v)).collect())),
+            (
+                "thresholds",
+                Json::Arr(self.thresholds.iter().map(|&v| Json::float(v)).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Quantizer, String> {
+        let q = Quantizer {
+            bits: j.req("bits")?.as_usize().ok_or("bits must be usize")?,
+            levels: j.req("levels")?.to_f64_vec()?,
+            thresholds: j.req("thresholds")?.to_f64_vec()?,
+        };
+        q.validate()?;
+        Ok(q)
+    }
+}
+
+/// Midpoint thresholds between consecutive levels.
+pub fn mid_thresholds(levels: &[f64]) -> Vec<f64> {
+    levels.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect()
+}
+
+/// One fanin-constrained dense layer.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    /// Input width (neurons/features of the previous layer).
+    pub in_width: usize,
+    /// Output width (neurons).
+    pub out_width: usize,
+    /// Per-neuron surviving input indices (`mask[n]` has ≤ fanin entries).
+    pub mask: Vec<Vec<usize>>,
+    /// Per-neuron weights aligned with `mask[n]`.
+    pub weights: Vec<Vec<f64>>,
+    /// Per-neuron bias (batch-norm folded in by the exporter).
+    pub bias: Vec<f64>,
+    /// Activation quantizer applied to every neuron of this layer.
+    pub act: Quantizer,
+}
+
+impl Layer {
+    /// Maximum fanin across neurons.
+    pub fn max_fanin(&self) -> usize {
+        self.mask.iter().map(|m| m.len()).max().unwrap_or(0)
+    }
+
+    /// Validate shape invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.mask.len() != self.out_width
+            || self.weights.len() != self.out_width
+            || self.bias.len() != self.out_width
+        {
+            return Err("per-neuron arrays must match out_width".into());
+        }
+        for (n, (m, w)) in self.mask.iter().zip(&self.weights).enumerate() {
+            if m.len() != w.len() {
+                return Err(format!("neuron {n}: mask/weight length mismatch"));
+            }
+            if m.iter().any(|&i| i >= self.in_width) {
+                return Err(format!("neuron {n}: mask index out of range"));
+            }
+            let mut sorted = m.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != m.len() {
+                return Err(format!("neuron {n}: duplicate mask indices"));
+            }
+        }
+        self.act.validate()
+    }
+}
+
+/// A complete quantized model.
+#[derive(Clone, Debug)]
+pub struct Model {
+    /// Architecture name (e.g. "jsc-s").
+    pub name: String,
+    /// Raw feature count.
+    pub input_features: usize,
+    /// Classes (argmax over the last layer's first `num_classes` neurons).
+    pub num_classes: usize,
+    /// Per-feature standardization (applied before input quantization).
+    pub feature_mean: Vec<f64>,
+    /// Per-feature std (divide).
+    pub feature_std: Vec<f64>,
+    /// Input quantizer (applied per standardized feature).
+    pub input_quant: Quantizer,
+    /// Layers, in order.
+    pub layers: Vec<Layer>,
+}
+
+impl Model {
+    /// Validate the whole model.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.feature_mean.len() != self.input_features
+            || self.feature_std.len() != self.input_features
+        {
+            return Err("feature stats must match input_features".into());
+        }
+        self.input_quant.validate()?;
+        let mut width = self.input_features;
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.in_width != width {
+                return Err(format!(
+                    "layer {i}: in_width {} != previous width {width}",
+                    l.in_width
+                ));
+            }
+            l.validate().map_err(|e| format!("layer {i}: {e}"))?;
+            width = l.out_width;
+        }
+        let last = self.layers.last().ok_or("model needs ≥1 layer")?;
+        if last.out_width < self.num_classes {
+            return Err("last layer narrower than num_classes".into());
+        }
+        Ok(())
+    }
+
+    /// Total bits of the quantized input vector (the circuit's PI count).
+    pub fn input_bits(&self) -> usize {
+        self.input_features * self.input_quant.bits
+    }
+
+    /// Bits of the activation quantizer of layer `l`'s *inputs*
+    /// (input_quant for layer 0).
+    pub fn in_quant_of_layer(&self, l: usize) -> &Quantizer {
+        if l == 0 {
+            &self.input_quant
+        } else {
+            &self.layers[l - 1].act
+        }
+    }
+
+    // ---- JSON (de)serialization ----
+
+    /// Serialize to the interchange JSON.
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| {
+                Json::obj([
+                    ("in", Json::int(l.in_width as i64)),
+                    ("out", Json::int(l.out_width as i64)),
+                    (
+                        "mask",
+                        Json::Arr(
+                            l.mask
+                                .iter()
+                                .map(|m| {
+                                    Json::Arr(m.iter().map(|&i| Json::int(i as i64)).collect())
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "weights",
+                        Json::Arr(
+                            l.weights
+                                .iter()
+                                .map(|w| Json::Arr(w.iter().map(|&v| Json::float(v)).collect()))
+                                .collect(),
+                        ),
+                    ),
+                    ("bias", Json::Arr(l.bias.iter().map(|&v| Json::float(v)).collect())),
+                    ("act", l.act.to_json()),
+                ])
+            })
+            .collect();
+        Json::obj([
+            ("name", Json::str(self.name.clone())),
+            ("input_features", Json::int(self.input_features as i64)),
+            ("num_classes", Json::int(self.num_classes as i64)),
+            (
+                "feature_mean",
+                Json::Arr(self.feature_mean.iter().map(|&v| Json::float(v)).collect()),
+            ),
+            (
+                "feature_std",
+                Json::Arr(self.feature_std.iter().map(|&v| Json::float(v)).collect()),
+            ),
+            ("input_quant", self.input_quant.to_json()),
+            ("layers", Json::Arr(layers)),
+        ])
+    }
+
+    /// Parse from interchange JSON.
+    pub fn from_json(j: &Json) -> Result<Model, String> {
+        let layers_json = j.req("layers")?.as_arr().ok_or("layers must be array")?;
+        let mut layers = Vec::with_capacity(layers_json.len());
+        for (i, lj) in layers_json.iter().enumerate() {
+            let mask_json = lj.req("mask")?.as_arr().ok_or("mask must be array")?;
+            let mask: Result<Vec<Vec<usize>>, String> =
+                mask_json.iter().map(|m| m.to_usize_vec()).collect();
+            let weights_json = lj.req("weights")?.as_arr().ok_or("weights must be array")?;
+            let weights: Result<Vec<Vec<f64>>, String> =
+                weights_json.iter().map(|w| w.to_f64_vec()).collect();
+            layers.push(Layer {
+                in_width: lj.req("in")?.as_usize().ok_or("in must be usize")?,
+                out_width: lj.req("out")?.as_usize().ok_or("out must be usize")?,
+                mask: mask.map_err(|e| format!("layer {i} mask: {e}"))?,
+                weights: weights.map_err(|e| format!("layer {i} weights: {e}"))?,
+                bias: lj.req("bias")?.to_f64_vec()?,
+                act: Quantizer::from_json(lj.req("act")?)?,
+            });
+        }
+        let m = Model {
+            name: j.req("name")?.as_str().ok_or("name must be string")?.to_string(),
+            input_features: j.req("input_features")?.as_usize().ok_or("bad input_features")?,
+            num_classes: j.req("num_classes")?.as_usize().ok_or("bad num_classes")?,
+            feature_mean: j.req("feature_mean")?.to_f64_vec()?,
+            feature_std: j.req("feature_std")?.to_f64_vec()?,
+            input_quant: Quantizer::from_json(j.req("input_quant")?)?,
+            layers,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &str) -> Result<Model, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let j = crate::util::json::Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+        Model::from_json(&j)
+    }
+
+    /// Save to a JSON file.
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        std::fs::write(path, self.to_json().to_string()).map_err(|e| format!("{path}: {e}"))
+    }
+
+    /// Summary for logs.
+    pub fn summary(&self) -> String {
+        let widths: Vec<String> = std::iter::once(self.input_features.to_string())
+            .chain(self.layers.iter().map(|l| l.out_width.to_string()))
+            .collect();
+        let fanins: Vec<String> =
+            self.layers.iter().map(|l| l.max_fanin().to_string()).collect();
+        format!(
+            "{}: {} (fanin {}, input {}b, acts {})",
+            self.name,
+            widths.join("→"),
+            fanins.join("/"),
+            self.input_quant.bits,
+            self.layers
+                .iter()
+                .map(|l| l.act.bits.to_string())
+                .collect::<Vec<_>>()
+                .join("/")
+        )
+    }
+}
+
+/// Build a deterministic random model for tests, examples, and benches —
+/// the shape of a NullaNet Tiny network without any training.
+pub fn random_model(
+    name: &str,
+    input_features: usize,
+    widths: &[usize],
+    fanin: usize,
+    act_bits: usize,
+    seed: u64,
+) -> Model {
+    use crate::util::prng::Xoshiro256;
+    let mut rng = Xoshiro256::new(seed);
+    let mut layers = Vec::new();
+    let mut in_w = input_features;
+    for (li, &out_w) in widths.iter().enumerate() {
+        let is_last = li == widths.len() - 1;
+        let f = fanin.min(in_w);
+        let mut mask = Vec::with_capacity(out_w);
+        let mut weights = Vec::with_capacity(out_w);
+        let mut bias = Vec::with_capacity(out_w);
+        for _ in 0..out_w {
+            let mut m = rng.sample_indices(in_w, f);
+            m.sort_unstable();
+            mask.push(m);
+            weights.push((0..f).map(|_| rng.next_gaussian()).collect());
+            bias.push(0.2 * rng.next_gaussian());
+        }
+        // Hidden layers: PACT-like unsigned; last layer: signed for argmax.
+        let act = if is_last {
+            Quantizer::signed_uniform(act_bits + 2, 0.5)
+        } else {
+            Quantizer::pact(act_bits, 2.0)
+        };
+        layers.push(Layer { in_width: in_w, out_width: out_w, mask, weights, bias, act });
+        in_w = out_w;
+    }
+    Model {
+        name: name.to_string(),
+        input_features,
+        num_classes: widths.last().copied().unwrap_or(1),
+        feature_mean: vec![0.0; input_features],
+        feature_std: vec![1.0; input_features],
+        input_quant: Quantizer::signed_uniform(act_bits, 1.0),
+        layers,
+    }
+}
+
+/// Named architecture presets mirroring DESIGN.md §5 (LogicNets-derived).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    JscS,
+    JscM,
+    JscL,
+}
+
+impl Arch {
+    /// Parse "jsc-s"/"jsc-m"/"jsc-l".
+    pub fn parse(s: &str) -> Option<Arch> {
+        match s.to_ascii_lowercase().as_str() {
+            "jsc-s" | "jscs" | "s" => Some(Arch::JscS),
+            "jsc-m" | "jscm" | "m" => Some(Arch::JscM),
+            "jsc-l" | "jscl" | "l" => Some(Arch::JscL),
+            _ => None,
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::JscS => "jsc-s",
+            Arch::JscM => "jsc-m",
+            Arch::JscL => "jsc-l",
+        }
+    }
+
+    /// (hidden+output widths, activation bits, fanin) per DESIGN.md §5.
+    pub fn spec(&self) -> (Vec<usize>, usize, usize) {
+        match self {
+            Arch::JscS => (vec![64, 32, 5], 2, 3),
+            Arch::JscM => (vec![64, 32, 32, 5], 2, 4),
+            Arch::JscL => (vec![32, 64, 192, 192, 16, 5], 3, 4),
+        }
+    }
+
+    /// All presets.
+    pub fn all() -> [Arch; 3] {
+        [Arch::JscS, Arch::JscM, Arch::JscL]
+    }
+}
+
+/// Quantizer registry for documentation/UI purposes.
+pub fn describe_quantizers() -> BTreeMap<&'static str, &'static str> {
+    let mut m = BTreeMap::new();
+    m.insert("sign", "bipolar {-1,+1}, used when inputs span negative values");
+    m.insert("pact", "PACT [9]: learned clip α, unsigned uniform levels");
+    m.insert("signed_uniform", "symmetric signed uniform (input/output layers)");
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantizer_code_roundtrip() {
+        let q = Quantizer::signed_uniform(2, 0.5); // levels -1.0,-0.5,0,0.5
+        assert_eq!(q.levels, vec![-1.0, -0.5, 0.0, 0.5]);
+        assert_eq!(q.code_of(-2.0), 0);
+        assert_eq!(q.code_of(-0.74), 1);
+        assert_eq!(q.code_of(0.0), 2);
+        assert_eq!(q.code_of(10.0), 3);
+        for c in 0..4 {
+            assert_eq!(q.code_of(q.value_of(c)), c, "levels quantize to themselves");
+        }
+    }
+
+    #[test]
+    fn pact_quantizer() {
+        let q = Quantizer::pact(2, 3.0); // levels 0,1,2,3
+        assert_eq!(q.levels, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(q.quantize(-5.0), 0.0);
+        assert_eq!(q.quantize(1.4), 1.0);
+        assert_eq!(q.quantize(99.0), 3.0);
+    }
+
+    #[test]
+    fn sign_quantizer() {
+        let q = Quantizer::sign();
+        assert_eq!(q.quantize(-0.3), -1.0);
+        assert_eq!(q.quantize(0.3), 1.0);
+        assert_eq!(q.bits, 1);
+    }
+
+    #[test]
+    fn quantizer_validation() {
+        let mut q = Quantizer::pact(2, 1.0);
+        assert!(q.validate().is_ok());
+        q.levels.pop();
+        assert!(q.validate().is_err());
+        let bad = Quantizer { bits: 1, levels: vec![1.0, -1.0], thresholds: vec![0.0] };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn random_model_validates() {
+        let m = random_model("t", 8, &[6, 4, 3], 3, 2, 42);
+        m.validate().unwrap();
+        assert_eq!(m.input_bits(), 16);
+        assert_eq!(m.layers.len(), 3);
+        assert!(m.layers.iter().all(|l| l.max_fanin() <= 3));
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let m = random_model("rt", 6, &[5, 3], 3, 2, 7);
+        let j = m.to_json().to_string();
+        let back = Model::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.name, m.name);
+        assert_eq!(back.layers.len(), m.layers.len());
+        for (a, b) in m.layers.iter().zip(&back.layers) {
+            assert_eq!(a.mask, b.mask);
+            assert_eq!(a.weights, b.weights, "weights must round-trip bit-exact");
+            assert_eq!(a.bias, b.bias);
+            assert_eq!(a.act, b.act);
+        }
+        assert_eq!(back.input_quant, m.input_quant);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let m = random_model("file", 4, &[3, 2], 2, 1, 3);
+        let path = "/tmp/nnt_model_test.json";
+        m.save(path).unwrap();
+        let back = Model::load(path).unwrap();
+        assert_eq!(back.summary(), m.summary());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn validation_catches_bad_models() {
+        let mut m = random_model("bad", 4, &[3, 2], 2, 1, 3);
+        m.layers[1].in_width = 7;
+        assert!(m.validate().is_err());
+        let mut m2 = random_model("bad2", 4, &[3], 2, 1, 3);
+        m2.layers[0].mask[0] = vec![0, 0]; // duplicate indices
+        assert!(m2.validate().is_err());
+        let mut m3 = random_model("bad3", 4, &[3], 2, 1, 3);
+        m3.num_classes = 10; // wider than last layer
+        assert!(m3.validate().is_err());
+    }
+
+    #[test]
+    fn arch_presets() {
+        assert_eq!(Arch::parse("JSC-S"), Some(Arch::JscS));
+        assert_eq!(Arch::parse("jsc-l").unwrap().name(), "jsc-l");
+        assert!(Arch::parse("nope").is_none());
+        let (w, b, f) = Arch::JscL.spec();
+        assert_eq!(w.last(), Some(&5));
+        assert_eq!(b, 3);
+        assert_eq!(f, 4);
+        // enumeration cost stays feasible: γ·β ≤ 12
+        for a in Arch::all() {
+            let (_, bits, fanin) = a.spec();
+            assert!(bits * fanin <= 12);
+        }
+    }
+}

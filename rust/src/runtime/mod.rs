@@ -1,0 +1,9 @@
+//! Runtime: loads and executes the AOT-compiled XLA artifacts via PJRT.
+//!
+//! Python never runs on the request path — `make artifacts` lowers the JAX
+//! model (with its Pallas kernel) to HLO text once; [`pjrt::PjrtEngine`]
+//! compiles and serves it from Rust.
+
+pub mod pjrt;
+
+pub use pjrt::PjrtEngine;

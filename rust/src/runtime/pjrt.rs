@@ -1,0 +1,123 @@
+//! PJRT numeric inference engine (loads the AOT HLO artifacts).
+//!
+//! The Rust side of the L2→L3 bridge: `artifacts/<arch>.hlo.txt` (HLO text —
+//! see `python/compile/aot.py` for why text, not serialized protos) is
+//! parsed, compiled once by the XLA CPU backend, and executed from the
+//! request path with zero Python anywhere. The exported computation is the
+//! full quantized inference function — standardize → input quant → masked
+//! dense layers (the Pallas kernel's HLO) → activation quantizers — over a
+//! fixed batch of [`Self::batch`] samples; smaller batches are padded.
+
+use anyhow::{bail, Context, Result};
+
+/// A compiled XLA executable plus its I/O signature.
+pub struct PjrtEngine {
+    exe: xla::PjRtLoadedExecutable,
+    /// Batch size baked into the artifact (64 in the default export).
+    batch: usize,
+    /// Input feature count.
+    in_features: usize,
+    /// Output width (last-layer neurons).
+    out_width: usize,
+    /// Human-readable platform string.
+    platform: String,
+}
+
+impl PjrtEngine {
+    /// Load and compile an HLO-text artifact.
+    pub fn load(path: &str, batch: usize, in_features: usize, out_width: usize) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let platform = format!(
+            "{} ({} devices)",
+            client.platform_name(),
+            client.device_count()
+        );
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("XLA compile")?;
+        Ok(PjrtEngine { exe, batch, in_features, out_width, platform })
+    }
+
+    /// Platform description.
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Batch size of the compiled executable.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Run one padded batch: `xs` holds ≤ batch feature vectors; returns one
+    /// output vector per input sample.
+    pub fn infer(&self, xs: &[Vec<f64>]) -> Result<Vec<Vec<f32>>> {
+        if xs.is_empty() {
+            return Ok(Vec::new());
+        }
+        if xs.len() > self.batch {
+            bail!("batch {} exceeds compiled size {}", xs.len(), self.batch);
+        }
+        let mut flat = vec![0f32; self.batch * self.in_features];
+        for (i, x) in xs.iter().enumerate() {
+            if x.len() != self.in_features {
+                bail!("sample {i} has {} features, expected {}", x.len(), self.in_features);
+            }
+            for (j, &v) in x.iter().enumerate() {
+                flat[i * self.in_features + j] = v as f32;
+            }
+        }
+        let lit = xla::Literal::vec1(&flat)
+            .reshape(&[self.batch as i64, self.in_features as i64])
+            .context("reshape input literal")?;
+        let result = self.exe.execute::<xla::Literal>(&[lit]).context("execute")?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrap tuple")?;
+        let values = out.to_vec::<f32>().context("read f32s")?;
+        if values.len() != self.batch * self.out_width {
+            bail!(
+                "output size {} != batch {} × width {}",
+                values.len(),
+                self.batch,
+                self.out_width
+            );
+        }
+        Ok(xs
+            .iter()
+            .enumerate()
+            .map(|(i, _)| values[i * self.out_width..(i + 1) * self.out_width].to_vec())
+            .collect())
+    }
+
+    /// Classify: argmax over the first `num_classes` outputs.
+    pub fn classify(&self, xs: &[Vec<f64>], num_classes: usize) -> Result<Vec<usize>> {
+        let outs = self.infer(xs)?;
+        // First-max tie-breaking, matching `nn::eval::classify_codes` (the
+        // quantized outputs live on a coarse grid, so ties are common).
+        Ok(outs
+            .iter()
+            .map(|o| {
+                let mut best = 0usize;
+                let mut best_v = f32::NEG_INFINITY;
+                for (i, &v) in o.iter().take(num_classes).enumerate() {
+                    if v > best_v {
+                        best_v = v;
+                        best = i;
+                    }
+                }
+                best
+            })
+            .collect())
+    }
+
+    /// Classify an arbitrary-size set by chunking into compiled batches.
+    pub fn classify_all(&self, xs: &[Vec<f64>], num_classes: usize) -> Result<Vec<usize>> {
+        let mut out = Vec::with_capacity(xs.len());
+        for chunk in xs.chunks(self.batch) {
+            out.extend(self.classify(chunk, num_classes)?);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,172 @@
+//! In-tree micro/macro benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets in `rust/benches/` use `harness = false` and drive
+//! this module directly. The harness does warmup, adaptive iteration-count
+//! selection targeting a minimum measurement window, and reports
+//! median/mean/p95 over sample batches — the statistics EXPERIMENTS.md
+//! quotes. Results can also be dumped as JSON for the §Perf log.
+
+use std::time::{Duration, Instant};
+
+/// Statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    /// Nanoseconds per iteration.
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl BenchStats {
+    /// Iterations per second implied by the median.
+    pub fn throughput(&self) -> f64 {
+        1e9 / self.median_ns
+    }
+
+    /// Human-readable time per iteration.
+    pub fn human_time(&self) -> String {
+        format_ns(self.median_ns)
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn format_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with fixed sample/warmup policy.
+pub struct Bench {
+    /// Number of measured sample batches.
+    pub samples: usize,
+    /// Target wall-clock duration per sample batch.
+    pub sample_target: Duration,
+    /// Warmup duration before calibration.
+    pub warmup: Duration,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    /// Default policy: 20 samples of ≥5 ms each after 50 ms warmup. Honors
+    /// `NNT_BENCH_FAST=1` (used by CI/tests) by shrinking the windows.
+    pub fn new() -> Self {
+        let fast = std::env::var("NNT_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        if fast {
+            Self {
+                samples: 5,
+                sample_target: Duration::from_millis(1),
+                warmup: Duration::from_millis(2),
+                results: Vec::new(),
+            }
+        } else {
+            Self {
+                samples: 20,
+                sample_target: Duration::from_millis(5),
+                warmup: Duration::from_millis(50),
+                results: Vec::new(),
+            }
+        }
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    pub fn run<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> BenchStats {
+        // Warmup.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters < 3 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        // Calibrate iterations per sample from warmup rate.
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+        let iters = ((self.sample_target.as_secs_f64() / per_iter).ceil() as u64).max(1);
+
+        let mut sample_ns: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            sample_ns.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        sample_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sample_ns[sample_ns.len() / 2];
+        let mean = sample_ns.iter().sum::<f64>() / sample_ns.len() as f64;
+        let p95 = sample_ns[((sample_ns.len() as f64 * 0.95) as usize).min(sample_ns.len() - 1)];
+        let stats = BenchStats {
+            name: name.to_string(),
+            median_ns: median,
+            mean_ns: mean,
+            p95_ns: p95,
+            min_ns: sample_ns[0],
+            iters_per_sample: iters,
+            samples: self.samples,
+        };
+        println!(
+            "bench {:<44} {:>12}/iter  (mean {:>12}, p95 {:>12}, {} iters x {} samples)",
+            stats.name,
+            format_ns(stats.median_ns),
+            format_ns(stats.mean_ns),
+            format_ns(stats.p95_ns),
+            stats.iters_per_sample,
+            stats.samples,
+        );
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// All results measured so far.
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        std::env::set_var("NNT_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let s = b.run("noop-ish", || std::hint::black_box(3u64).wrapping_mul(5));
+        assert!(s.median_ns > 0.0);
+        assert!(s.median_ns < 1e6, "trivial op should be well under 1ms");
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.p95_ns);
+    }
+
+    #[test]
+    fn format_units() {
+        assert!(format_ns(12.0).ends_with("ns"));
+        assert!(format_ns(12_000.0).ends_with("µs"));
+        assert!(format_ns(12_000_000.0).ends_with("ms"));
+        assert!(format_ns(2e9).ends_with("s"));
+    }
+
+    #[test]
+    fn records_results() {
+        std::env::set_var("NNT_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.run("a", || 1 + 1);
+        b.run("b", || 2 + 2);
+        assert_eq!(b.results().len(), 2);
+        assert_eq!(b.results()[0].name, "a");
+    }
+}

@@ -1,0 +1,294 @@
+//! Packed bit vectors.
+//!
+//! Truth tables, simulation values, and don't-care sets are all dense bit
+//! sets; this module provides a compact `u64`-word representation with the
+//! bulk Boolean operations the logic-synthesis core needs. Word-level ops are
+//! the backbone of the 64-way bit-parallel netlist simulator
+//! ([`crate::logic::sim`]), so the hot methods are `#[inline]`.
+
+/// A fixed-length vector of bits packed into `u64` words (LSB-first within a
+/// word; bit `i` lives in word `i / 64` at position `i % 64`).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct BitVec {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl std::fmt::Debug for BitVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BitVec[{}; ", self.len)?;
+        for i in 0..self.len.min(64) {
+            write!(f, "{}", if self.get(i) { '1' } else { '0' })?;
+        }
+        if self.len > 64 {
+            write!(f, "…")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl BitVec {
+    /// All-zero bit vector of length `len`.
+    pub fn zeros(len: usize) -> Self {
+        Self { len, words: vec![0; len.div_ceil(64)] }
+    }
+
+    /// All-one bit vector of length `len` (trailing bits in the last word are
+    /// kept zero so equality and popcount stay canonical).
+    pub fn ones(len: usize) -> Self {
+        let mut v = Self { len, words: vec![!0u64; len.div_ceil(64)] };
+        v.mask_tail();
+        v
+    }
+
+    /// Build from an iterator of bools.
+    pub fn from_bools(bits: impl IntoIterator<Item = bool>) -> Self {
+        let bits: Vec<bool> = bits.into_iter().collect();
+        let mut v = Self::zeros(bits.len());
+        for (i, b) in bits.iter().enumerate() {
+            if *b {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    /// Number of bits.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if the vector has zero length.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Read bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Write bit `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let w = &mut self.words[i >> 6];
+        let m = 1u64 << (i & 63);
+        if v {
+            *w |= m;
+        } else {
+            *w &= !m;
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// True if no bit is set.
+    pub fn is_zero(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// True if every bit is set.
+    pub fn is_all_ones(&self) -> bool {
+        self.count_ones() == self.len
+    }
+
+    /// Raw word slice (read-only).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Raw word slice (mutable). Callers must preserve the tail invariant via
+    /// [`BitVec::mask_tail`] if they may set bits past `len`.
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    /// Zero any bits at positions ≥ `len` in the final word.
+    #[inline]
+    pub fn mask_tail(&mut self) {
+        let rem = self.len & 63;
+        if rem != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+    }
+
+    /// `self |= other` (lengths must match).
+    pub fn or_assign(&mut self, other: &BitVec) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// `self &= other` (lengths must match).
+    pub fn and_assign(&mut self, other: &BitVec) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    /// `self ^= other` (lengths must match).
+    pub fn xor_assign(&mut self, other: &BitVec) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a ^= b;
+        }
+    }
+
+    /// Bitwise complement (respects the tail invariant).
+    pub fn not(&self) -> BitVec {
+        let mut out = self.clone();
+        for w in &mut out.words {
+            *w = !*w;
+        }
+        out.mask_tail();
+        out
+    }
+
+    /// True if `self ∧ other = self` (subset as bit sets).
+    pub fn is_subset_of(&self, other: &BitVec) -> bool {
+        assert_eq!(self.len, other.len);
+        self.words.iter().zip(&other.words).all(|(a, b)| a & !b == 0)
+    }
+
+    /// True if the two vectors share any set bit.
+    pub fn intersects(&self, other: &BitVec) -> bool {
+        assert_eq!(self.len, other.len);
+        self.words.iter().zip(&other.words).any(|(a, b)| a & b != 0)
+    }
+
+    /// Indices of set bits, ascending.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            let mut out = Vec::with_capacity(w.count_ones() as usize);
+            while w != 0 {
+                let b = w.trailing_zeros() as usize;
+                out.push((wi << 6) + b);
+                w &= w - 1;
+            }
+            out
+        })
+    }
+
+    /// Compact hex string (for hashing/debug of truth tables).
+    pub fn to_hex(&self) -> String {
+        let nibbles = self.len.div_ceil(4);
+        let mut s = String::with_capacity(nibbles);
+        for n in (0..nibbles).rev() {
+            let mut v = 0u8;
+            for b in 0..4 {
+                let i = n * 4 + b;
+                if i < self.len && self.get(i) {
+                    v |= 1 << b;
+                }
+            }
+            s.push(char::from_digit(v as u32, 16).unwrap());
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut v = BitVec::zeros(130);
+        for i in (0..130).step_by(3) {
+            v.set(i, true);
+        }
+        for i in 0..130 {
+            assert_eq!(v.get(i), i % 3 == 0, "bit {i}");
+        }
+        assert_eq!(v.count_ones(), (0..130).step_by(3).count());
+    }
+
+    #[test]
+    fn ones_respects_tail() {
+        let v = BitVec::ones(70);
+        assert_eq!(v.count_ones(), 70);
+        assert!(v.is_all_ones());
+        assert_eq!(v.words()[1] >> 6, 0, "tail bits must stay zero");
+    }
+
+    #[test]
+    fn not_is_involution_and_respects_len() {
+        let mut v = BitVec::zeros(100);
+        v.set(3, true);
+        v.set(99, true);
+        let n = v.not();
+        assert_eq!(n.count_ones(), 98);
+        assert_eq!(n.not(), v);
+    }
+
+    #[test]
+    fn boolean_ops() {
+        let a = BitVec::from_bools([true, true, false, false]);
+        let b = BitVec::from_bools([true, false, true, false]);
+        let mut o = a.clone();
+        o.or_assign(&b);
+        assert_eq!(o, BitVec::from_bools([true, true, true, false]));
+        let mut x = a.clone();
+        x.and_assign(&b);
+        assert_eq!(x, BitVec::from_bools([true, false, false, false]));
+        let mut e = a.clone();
+        e.xor_assign(&b);
+        assert_eq!(e, BitVec::from_bools([false, true, true, false]));
+    }
+
+    #[test]
+    fn subset_and_intersect() {
+        let a = BitVec::from_bools([true, false, true, false]);
+        let b = BitVec::from_bools([true, true, true, false]);
+        assert!(a.is_subset_of(&b));
+        assert!(!b.is_subset_of(&a));
+        assert!(a.intersects(&b));
+        let z = BitVec::zeros(4);
+        assert!(z.is_subset_of(&a));
+        assert!(!z.intersects(&a));
+    }
+
+    #[test]
+    fn iter_ones_ascending() {
+        let mut v = BitVec::zeros(200);
+        let idx = [0usize, 63, 64, 65, 127, 128, 199];
+        for &i in &idx {
+            v.set(i, true);
+        }
+        let got: Vec<usize> = v.iter_ones().collect();
+        assert_eq!(got, idx);
+    }
+
+    #[test]
+    fn hex_digest_distinguishes() {
+        let mut a = BitVec::zeros(16);
+        a.set(0, true);
+        let mut b = BitVec::zeros(16);
+        b.set(1, true);
+        assert_ne!(a.to_hex(), b.to_hex());
+        assert_eq!(a.to_hex().len(), 4);
+    }
+
+    #[test]
+    fn from_bools_empty() {
+        let v = BitVec::from_bools([]);
+        assert!(v.is_empty());
+        assert!(v.is_zero());
+        assert_eq!(v.count_ones(), 0);
+    }
+}

@@ -1,0 +1,146 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! `--switch` style used by the `nullanet` binary and the examples. Unknown
+//! flags are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, named options, and positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// First bare word, if any (e.g. `flow` in `nullanet flow --arch jsc-s`).
+    pub command: Option<String>,
+    /// `--key value` and `--key=value` pairs; bare `--switch` maps to "true".
+    pub options: BTreeMap<String, String>,
+    /// Remaining bare words after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — pass
+    /// `std::env::args().skip(1)` in `main`.
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err("bare '--' is not supported".into());
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.options.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn get_opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Integer option with default; errors on malformed input.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    /// Float option with default; errors on malformed input.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected number, got '{v}'")),
+        }
+    }
+
+    /// Boolean switch (`--foo` or `--foo=true/false`).
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.options.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// Error if any option key is not in `allowed` — catches typos.
+    pub fn check_known(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in self.options.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown option --{k}; known: {}",
+                    allowed.iter().map(|a| format!("--{a}")).collect::<Vec<_>>().join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("flow --arch jsc-s --jobs 4 --verbose");
+        assert_eq!(a.command.as_deref(), Some("flow"));
+        assert_eq!(a.get_str("arch", "x"), "jsc-s");
+        assert_eq!(a.get_usize("jobs", 1).unwrap(), 4);
+        assert!(a.get_bool("verbose"));
+        assert!(!a.get_bool("quiet"));
+    }
+
+    #[test]
+    fn equals_style() {
+        let a = parse("bench --n=100 --ratio=0.5");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 100);
+        assert_eq!(a.get_f64("ratio", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("run one two");
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["one", "two"]);
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let a = parse("x");
+        assert_eq!(a.get_str("missing", "dflt"), "dflt");
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_opt("missing").is_none());
+    }
+
+    #[test]
+    fn malformed_numbers_error() {
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n", 0).is_err());
+        assert!(a.get_f64("n", 0.0).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("x --good 1 --typo 2");
+        assert!(a.check_known(&["good"]).is_err());
+        assert!(a.check_known(&["good", "typo"]).is_ok());
+    }
+}

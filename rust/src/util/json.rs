@@ -1,0 +1,536 @@
+//! Minimal, dependency-free JSON parser and writer.
+//!
+//! The offline build environment has no `serde`, so model files
+//! (`artifacts/*.model.json`), flow configuration, and coordinator wire
+//! messages use this in-tree implementation. It supports the full JSON
+//! grammar (RFC 8259) minus exotic corner cases we never emit: numbers are
+//! parsed as `f64` (with exact `i64` retained when representable), and
+//! strings support the standard escapes including `\uXXXX` (with surrogate
+//! pairs).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed JSON value. Objects use `BTreeMap` so emission is deterministic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Numbers keep both representations: `i` is `Some` when the literal was
+    /// integral and fits an `i64` (weights and truth-table entries must
+    /// round-trip exactly).
+    Num { f: f64, i: Option<i64> },
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+/// Error produced by [`Json::parse`], with byte offset for diagnostics.
+#[derive(Debug, thiserror::Error)]
+#[error("json parse error at byte {at}: {msg}")]
+pub struct JsonError {
+    pub at: usize,
+    pub msg: String,
+}
+
+impl Json {
+    /// Construct an integer number.
+    pub fn int(v: i64) -> Json {
+        Json::Num { f: v as f64, i: Some(v) }
+    }
+
+    /// Construct a float number.
+    pub fn float(v: f64) -> Json {
+        let i = if v.fract() == 0.0 && v.abs() < 9.0e15 { Some(v as i64) } else { None };
+        Json::Num { f: v, i }
+    }
+
+    /// Construct a string.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Construct an object from pairs.
+    pub fn obj(pairs: impl IntoIterator<Item = (&'static str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    // ---- accessors ----
+
+    /// As bool, if this is a Bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        if let Json::Bool(b) = self { Some(*b) } else { None }
+    }
+
+    /// As f64, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        if let Json::Num { f, .. } = self { Some(*f) } else { None }
+    }
+
+    /// As i64, if this is an integral number.
+    pub fn as_i64(&self) -> Option<i64> {
+        if let Json::Num { i, .. } = self { *i } else { None }
+    }
+
+    /// As usize, if this is a non-negative integral number.
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    /// As str, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        if let Json::Str(s) = self { Some(s) } else { None }
+    }
+
+    /// As array slice, if this is an array.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        if let Json::Arr(a) = self { Some(a) } else { None }
+    }
+
+    /// As object map, if this is an object.
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        if let Json::Obj(o) = self { Some(o) } else { None }
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.as_obj().and_then(|o| o.get(key))
+    }
+
+    /// Required-field helpers used by the model loader: error messages name
+    /// the missing key instead of panicking deep in a decoder.
+    pub fn req(&self, key: &str) -> Result<&Json, String> {
+        self.get(key).ok_or_else(|| format!("missing field '{key}'"))
+    }
+
+    /// Decode a `Vec<f64>` from a JSON array of numbers.
+    pub fn to_f64_vec(&self) -> Result<Vec<f64>, String> {
+        let arr = self.as_arr().ok_or("expected array")?;
+        arr.iter()
+            .map(|v| v.as_f64().ok_or_else(|| "expected number".to_string()))
+            .collect()
+    }
+
+    /// Decode a `Vec<i64>` from a JSON array of integers.
+    pub fn to_i64_vec(&self) -> Result<Vec<i64>, String> {
+        let arr = self.as_arr().ok_or("expected array")?;
+        arr.iter()
+            .map(|v| v.as_i64().ok_or_else(|| "expected integer".to_string()))
+            .collect()
+    }
+
+    /// Decode a `Vec<usize>` from a JSON array of non-negative integers.
+    pub fn to_usize_vec(&self) -> Result<Vec<usize>, String> {
+        let arr = self.as_arr().ok_or("expected array")?;
+        arr.iter()
+            .map(|v| v.as_usize().ok_or_else(|| "expected non-negative integer".to_string()))
+            .collect()
+    }
+
+    // ---- parsing ----
+
+    /// Parse a JSON document (must consume all non-whitespace input).
+    pub fn parse(input: &str) -> Result<Json, JsonError> {
+        let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(p.err("trailing data"));
+        }
+        Ok(v)
+    }
+
+    // ---- emission ----
+
+    /// Serialize compactly.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num { f, i } => {
+                if let Some(i) = i {
+                    out.push_str(&i.to_string());
+                } else if f.is_finite() {
+                    // Shortest float repr Rust gives round-trips through f64.
+                    let _ = fmt::Write::write_fmt(out, format_args!("{f}"));
+                    if !out.ends_with(|c: char| c.is_ascii_digit()) || !out.contains(['.', 'e']) {
+                        // ensure it re-parses as a number either way; `{f}`
+                        // already emits a valid JSON number for finite f64s
+                        // except integral values, which took the branch above.
+                    }
+                } else {
+                    // JSON has no NaN/Inf; emit null (we never produce these
+                    // in model files — guarded by tests).
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(o) => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = fmt::Write::write_fmt(out, format_args!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: impl Into<String>) -> JsonError {
+        JsonError { at: self.pos, msg: msg.into() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json, JsonError> {
+        if self.bytes[self.pos..].starts_with(s.as_bytes()) {
+            self.pos += s.len();
+            Ok(v)
+        } else {
+            Err(self.err(format!("expected '{s}'")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, JsonError> {
+        match self.peek() {
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("expected value")),
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            self.skip_ws();
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'{')?;
+        let mut out = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            out.insert(key, val);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(out));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(c) = self.peek() else {
+                return Err(self.err("unterminated string"));
+            };
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(e) = self.peek() else {
+                        return Err(self.err("unterminated escape"));
+                    };
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                // surrogate pair
+                                if self.peek() == Some(b'\\') {
+                                    self.pos += 1;
+                                    self.expect(b'u')?;
+                                    let lo = self.hex4()?;
+                                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                                } else {
+                                    return Err(self.err("lone surrogate"));
+                                }
+                            } else {
+                                hi
+                            };
+                            out.push(
+                                char::from_u32(cp).ok_or_else(|| self.err("bad codepoint"))?,
+                            );
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                }
+                c if c < 0x20 => return Err(self.err("control char in string")),
+                c => {
+                    // Re-decode UTF-8: collect continuation bytes.
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let start = self.pos - 1;
+                        let width = match c {
+                            0xC0..=0xDF => 2,
+                            0xE0..=0xEF => 3,
+                            0xF0..=0xF7 => 4,
+                            _ => return Err(self.err("invalid utf-8")),
+                        };
+                        self.pos = start + width;
+                        if self.pos > self.bytes.len() {
+                            return Err(self.err("truncated utf-8"));
+                        }
+                        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+                            .map_err(|_| self.err("invalid utf-8"))?;
+                        out.push_str(s);
+                    }
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let Some(c) = self.peek() else {
+                return Err(self.err("truncated \\u escape"));
+            };
+            self.pos += 1;
+            v = v * 16
+                + (c as char)
+                    .to_digit(16)
+                    .ok_or_else(|| self.err("bad hex digit"))?;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        let mut integral = true;
+        if self.peek() == Some(b'.') {
+            integral = false;
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            integral = false;
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let f: f64 = text.parse().map_err(|_| self.err("bad number"))?;
+        let i = if integral { text.parse::<i64>().ok() } else { None };
+        Ok(Json::Num { f, i })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(Json::parse("42").unwrap().as_i64(), Some(42));
+        assert_eq!(Json::parse("-7").unwrap().as_i64(), Some(-7));
+        assert_eq!(Json::parse("2.5").unwrap().as_f64(), Some(2.5));
+        assert_eq!(Json::parse("1e3").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(Json::parse("\"hi\"").unwrap().as_str(), Some("hi"));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = Json::parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+        assert_eq!(v.get("c").unwrap().as_str(), Some("x"));
+        let a = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[2].get("b"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn escapes_roundtrip() {
+        let s = "line\nquote\"back\\slash\ttab\u{1F600}";
+        let j = Json::str(s);
+        let emitted = j.to_string();
+        let parsed = Json::parse(&emitted).unwrap();
+        assert_eq!(parsed.as_str(), Some(s));
+    }
+
+    #[test]
+    fn unicode_escape_and_surrogates() {
+        assert_eq!(Json::parse(r#""A""#).unwrap().as_str(), Some("A"));
+        assert_eq!(
+            Json::parse(r#""😀""#).unwrap().as_str(),
+            Some("\u{1F600}")
+        );
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("nul").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn big_int_roundtrip_exact() {
+        let v = 9_007_199_254_740_993i64; // 2^53 + 1: not representable in f64
+        let j = Json::int(v);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.as_i64(), Some(v));
+    }
+
+    #[test]
+    fn float_roundtrip() {
+        for &f in &[0.1, -3.25e-9, 1.0 / 3.0, 6.02e23] {
+            let j = Json::float(f);
+            let back = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(back.as_f64(), Some(f));
+        }
+    }
+
+    #[test]
+    fn object_emission_is_deterministic() {
+        let j = Json::obj([("b", Json::int(1)), ("a", Json::int(2))]);
+        assert_eq!(j.to_string(), r#"{"a":2,"b":1}"#);
+    }
+
+    #[test]
+    fn vec_decoders() {
+        let v = Json::parse("[1, 2, 3]").unwrap();
+        assert_eq!(v.to_i64_vec().unwrap(), vec![1, 2, 3]);
+        assert_eq!(v.to_usize_vec().unwrap(), vec![1, 2, 3]);
+        let f = Json::parse("[1.5, -2.0]").unwrap();
+        assert_eq!(f.to_f64_vec().unwrap(), vec![1.5, -2.0]);
+        assert!(f.to_i64_vec().is_err());
+        assert!(Json::parse("[-1]").unwrap().to_usize_vec().is_err());
+    }
+
+    #[test]
+    fn req_reports_missing_key() {
+        let v = Json::parse(r#"{"x": 1}"#).unwrap();
+        assert!(v.req("x").is_ok());
+        let e = v.req("y").unwrap_err();
+        assert!(e.contains("'y'"), "{e}");
+    }
+}

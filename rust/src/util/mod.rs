@@ -1,0 +1,23 @@
+//! Dependency-free utility substrates.
+//!
+//! The offline build environment only provides `xla`, `anyhow`, and
+//! `thiserror`; everything else a production coordinator normally pulls from
+//! crates.io is implemented here (see DESIGN.md §3, S1–S7):
+//!
+//! * [`json`] — RFC 8259 parser/writer (replaces serde_json)
+//! * [`cli`] — argument parsing (replaces clap)
+//! * [`threadpool`] — fixed pool + `par_map` (replaces rayon)
+//! * [`prng`] — SplitMix64/xoshiro256** (replaces rand)
+//! * [`bitvec`] — packed bit vectors for truth tables & simulation
+//! * [`proptest`] — property testing with shrinking (replaces proptest)
+//! * [`bench`] — benchmark statistics harness (replaces criterion)
+//! * [`timer`] — stage profiling for the flow report and §Perf
+
+pub mod bench;
+pub mod bitvec;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,176 @@
+//! Minimal property-based testing harness (proptest is unavailable offline).
+//!
+//! Provides seeded random case generation with automatic shrinking for the
+//! coordinator/logic invariants the test suites check (e.g. "ESPRESSO output
+//! is equivalent to its input cover", "retiming preserves I/O behaviour").
+//! Failures print the seed and the shrunken case so they can be replayed
+//! deterministically (`NNT_PROPTEST_SEED` overrides the default seed;
+//! `NNT_PROPTEST_CASES` the case count).
+
+use crate::util::prng::Xoshiro256;
+
+/// Per-case source of randomness handed to generators.
+pub struct Gen {
+    pub rng: Xoshiro256,
+    /// Size hint in [0, 1]; early cases are small, later cases large — this
+    /// gives coverage of both trivial and stressful inputs.
+    pub size: f64,
+}
+
+impl Gen {
+    /// Integer in `[lo, hi]` scaled so small `size` biases toward `lo`.
+    pub fn sized_range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = hi - lo;
+        let scaled = ((span as f64) * self.size).ceil() as usize;
+        lo + self.rng.below(scaled as u64 + 1) as usize
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let cases = std::env::var("NNT_PROPTEST_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("NNT_PROPTEST_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(DEFAULT_SEED);
+        Self { cases, seed, max_shrink_steps: 200 }
+    }
+}
+
+/// Default property-test seed (overridable via `NNT_PROPTEST_SEED`).
+const DEFAULT_SEED: u64 = 0x5EED_CAFE_F00D_0001;
+
+/// Run property `prop` over `cases` generated inputs. `gen` produces a case
+/// from a [`Gen`]; `shrink` proposes smaller variants of a failing case;
+/// `prop` returns `Err(reason)` on violation.
+pub fn check<T: Clone + std::fmt::Debug>(
+    name: &str,
+    config: &Config,
+    mut generate: impl FnMut(&mut Gen) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for case_idx in 0..config.cases {
+        let case_seed = config.seed ^ (case_idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen {
+            rng: Xoshiro256::new(case_seed),
+            size: (case_idx as f64 + 1.0) / config.cases as f64,
+        };
+        let case = generate(&mut g);
+        if let Err(reason) = prop(&case) {
+            // Shrink: greedily accept any smaller failing variant.
+            let mut best = case.clone();
+            let mut best_reason = reason;
+            let mut steps = 0;
+            'outer: loop {
+                for candidate in shrink(&best) {
+                    steps += 1;
+                    if steps > config.max_shrink_steps {
+                        break 'outer;
+                    }
+                    if let Err(r) = prop(&candidate) {
+                        best = candidate;
+                        best_reason = r;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case {case_idx}, seed {case_seed:#x}):\n  \
+                 reason: {best_reason}\n  shrunk case: {best:?}\n  \
+                 replay with NNT_PROPTEST_SEED={}",
+                config.seed
+            );
+        }
+    }
+}
+
+/// Convenience wrapper with default config and no shrinking.
+pub fn check_simple<T: Clone + std::fmt::Debug>(
+    name: &str,
+    generate: impl FnMut(&mut Gen) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    check(name, &Config::default(), generate, |_| Vec::new(), prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_simple(
+            "reverse-reverse-id",
+            |g| {
+                let n = g.sized_range(0, 50);
+                (0..n).map(|_| g.rng.next_u32()).collect::<Vec<u32>>()
+            },
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v { Ok(()) } else { Err("not identity".into()) }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check_simple("always-fails", |g| g.rng.next_u32() % 100, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinking_reduces_case() {
+        // Property: all vectors have length < 5. Shrinker halves the vector.
+        // The reported failure should be length exactly 5 after shrinking.
+        let res = std::panic::catch_unwind(|| {
+            check(
+                "len<5",
+                &Config { cases: 50, seed: 1, max_shrink_steps: 500 },
+                |g| {
+                    let n = g.sized_range(0, 40);
+                    vec![0u8; n]
+                },
+                |v| {
+                    let mut outs = Vec::new();
+                    if !v.is_empty() {
+                        outs.push(v[..v.len() - 1].to_vec());
+                        outs.push(v[..v.len() / 2].to_vec());
+                    }
+                    outs
+                },
+                |v| if v.len() < 5 { Ok(()) } else { Err(format!("len={}", v.len())) },
+            );
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("len=5"), "should shrink to minimal failing len: {msg}");
+    }
+
+    #[test]
+    fn sized_range_respects_bounds() {
+        let mut g = Gen { rng: Xoshiro256::new(1), size: 0.5 };
+        for _ in 0..100 {
+            let v = g.sized_range(3, 10);
+            assert!((3..=10).contains(&v));
+        }
+        // size=0 pins to lo
+        let mut g0 = Gen { rng: Xoshiro256::new(2), size: 0.0 };
+        for _ in 0..10 {
+            assert_eq!(g0.sized_range(4, 9), 4);
+        }
+    }
+}

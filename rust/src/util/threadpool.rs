@@ -1,0 +1,210 @@
+//! A small fixed-size thread pool with a `scope`-style parallel map.
+//!
+//! rayon/tokio are unavailable offline; the flow engine only needs two
+//! primitives: fire-and-forget task execution and `par_map` over a slice of
+//! independent work items (one logic-synthesis job per neuron). Work is
+//! distributed through a shared injector queue guarded by a mutex+condvar —
+//! at the job granularity of this project (an ESPRESSO run per pop) queue
+//! contention is unmeasurable, which keeps the implementation auditable.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("nnt-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { shared, workers, size }
+    }
+
+    /// Pool sized to the machine (`available_parallelism`, capped at 16).
+    pub fn with_default_size() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::new(n.min(16))
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Enqueue a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Box::new(job));
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Apply `f` to every item of `items` in parallel and return results in
+    /// input order. `f` runs on pool workers; the calling thread also helps
+    /// drain the queue, so `par_map` can be called from a single-threaded
+    /// program without deadlock.
+    pub fn par_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let remaining = Arc::new(AtomicUsize::new(n));
+
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            let remaining = Arc::clone(&remaining);
+            self.execute(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+                remaining.fetch_sub(1, Ordering::Release);
+            });
+        }
+
+        // Help drain the queue while waiting; this both avoids idle spinning
+        // on the caller and makes a 1-worker pool behave like 2-way.
+        while remaining.load(Ordering::Acquire) != 0 {
+            let job = { self.shared.queue.lock().unwrap().pop_front() };
+            match job {
+                Some(job) => job(),
+                None => std::thread::yield_now(),
+            }
+        }
+
+        Arc::try_unwrap(results)
+            .ok()
+            .expect("no outstanding refs")
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("all jobs completed"))
+            .collect()
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break Some(job);
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(job) => job(),
+            None => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool); // join workers
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.par_map((0..200).collect::<Vec<i32>>(), |x| x * x);
+        assert_eq!(out, (0..200).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<i32> = pool.par_map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn par_map_single_worker_no_deadlock() {
+        let pool = ThreadPool::new(1);
+        let out = pool.par_map(vec![1, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn par_map_uneven_durations() {
+        let pool = ThreadPool::new(4);
+        let out = pool.par_map((0..20).collect::<Vec<u64>>(), |x| {
+            std::thread::sleep(std::time::Duration::from_millis(x % 3));
+            x * 2
+        });
+        assert_eq!(out, (0..20).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn reusable_across_batches() {
+        let pool = ThreadPool::new(2);
+        for round in 0..5 {
+            let out = pool.par_map(vec![round; 10], |x| x);
+            assert_eq!(out, vec![round; 10]);
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Lightweight scoped timing + stage profiling used by the flow engine and
+//! the §Perf pass. A [`StageTimer`] accumulates named wall-clock spans and
+//! prints a flow report (the "Fig. 1 stage log" in DESIGN.md §6/F1).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Accumulates named durations across repeated spans.
+#[derive(Default, Debug)]
+pub struct StageTimer {
+    totals: BTreeMap<String, (Duration, u64)>,
+    order: Vec<String>,
+}
+
+impl StageTimer {
+    /// New empty timer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `stage`.
+    pub fn time<R>(&mut self, stage: &str, f: impl FnOnce() -> R) -> R {
+        let t = Instant::now();
+        let r = f();
+        self.add(stage, t.elapsed());
+        r
+    }
+
+    /// Record an externally measured duration.
+    pub fn add(&mut self, stage: &str, d: Duration) {
+        if !self.totals.contains_key(stage) {
+            self.order.push(stage.to_string());
+        }
+        let e = self.totals.entry(stage.to_string()).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    /// Merge another timer's totals into this one (used to fold per-worker
+    /// timers from the thread pool into the flow report).
+    pub fn merge(&mut self, other: &StageTimer) {
+        for name in &other.order {
+            let (d, n) = other.totals[name];
+            if !self.totals.contains_key(name) {
+                self.order.push(name.clone());
+            }
+            let e = self.totals.entry(name.clone()).or_insert((Duration::ZERO, 0));
+            e.0 += d;
+            e.1 += n;
+        }
+    }
+
+    /// Total time across stages.
+    pub fn total(&self) -> Duration {
+        self.totals.values().map(|(d, _)| *d).sum()
+    }
+
+    /// Duration of one stage, if recorded.
+    pub fn stage_total(&self, stage: &str) -> Option<Duration> {
+        self.totals.get(stage).map(|(d, _)| *d)
+    }
+
+    /// Stage names in first-recorded order.
+    pub fn stages(&self) -> &[String] {
+        &self.order
+    }
+
+    /// Render the stage table.
+    pub fn report(&self, title: &str) -> String {
+        let mut s = format!("── {title} ──\n");
+        let total = self.total().as_secs_f64().max(1e-12);
+        for name in &self.order {
+            let (d, n) = self.totals[name];
+            s.push_str(&format!(
+                "  {:<28} {:>10.3} ms  ({:>5.1}%)  x{}\n",
+                name,
+                d.as_secs_f64() * 1e3,
+                100.0 * d.as_secs_f64() / total,
+                n
+            ));
+        }
+        s.push_str(&format!("  {:<28} {:>10.3} ms\n", "TOTAL", total * 1e3));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_spans() {
+        let mut t = StageTimer::new();
+        t.add("a", Duration::from_millis(5));
+        t.add("a", Duration::from_millis(5));
+        t.add("b", Duration::from_millis(10));
+        assert_eq!(t.stage_total("a"), Some(Duration::from_millis(10)));
+        assert_eq!(t.total(), Duration::from_millis(20));
+        assert_eq!(t.stages(), &["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = StageTimer::new();
+        let v = t.time("work", || 42);
+        assert_eq!(v, 42);
+        assert!(t.stage_total("work").is_some());
+    }
+
+    #[test]
+    fn merge_folds_counts() {
+        let mut a = StageTimer::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = StageTimer::new();
+        b.add("x", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(3));
+        a.merge(&b);
+        assert_eq!(a.stage_total("x"), Some(Duration::from_millis(3)));
+        assert_eq!(a.stage_total("y"), Some(Duration::from_millis(3)));
+    }
+
+    #[test]
+    fn report_contains_stages() {
+        let mut t = StageTimer::new();
+        t.add("enumerate", Duration::from_millis(1));
+        t.add("espresso", Duration::from_millis(2));
+        let r = t.report("flow");
+        assert!(r.contains("enumerate"));
+        assert!(r.contains("espresso"));
+        assert!(r.contains("TOTAL"));
+    }
+}

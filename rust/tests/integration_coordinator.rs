@@ -1,0 +1,154 @@
+//! Integration: the serving coordinator — batching under concurrency,
+//! engine routing, TCP protocol, metrics accounting.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use nullanet_tiny::coordinator::{BatchPolicy, PjrtSpec, Policy, Router};
+use nullanet_tiny::flow::{run_flow, FlowConfig};
+use nullanet_tiny::nn::model::{random_model, Model};
+
+fn build_router(policy: Policy, max_batch: usize) -> (Router, Model) {
+    let model = random_model("coord", 6, &[5, 4], 3, 1, 13);
+    let r = run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+    let router = Router::start(
+        model.clone(),
+        r.circuit.netlist,
+        None,
+        policy,
+        BatchPolicy { max_batch, max_wait: Duration::from_micros(500) },
+    );
+    (router, model)
+}
+
+#[test]
+fn concurrent_clients_share_batches() {
+    let (router, model) = build_router(Policy::Logic, 16);
+    let router = Arc::new(router);
+    let mut joins = Vec::new();
+    for t in 0..4 {
+        let r = Arc::clone(&router);
+        let m = model.clone();
+        joins.push(std::thread::spawn(move || {
+            for i in 0..50 {
+                let x: Vec<f64> =
+                    (0..6).map(|j| ((t * 100 + i * 3 + j) as f64 * 0.17).sin()).collect();
+                let want = nullanet_tiny::nn::eval::classify(&m, &x);
+                let rx = r.submit(x);
+                let reply = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+                assert_eq!(reply.class, want);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let m = router.metrics();
+    use std::sync::atomic::Ordering;
+    assert_eq!(m.logic_requests.load(Ordering::Relaxed), 200);
+    let batches = m.batches.load(Ordering::Relaxed);
+    assert!(batches < 200, "batching must coalesce ({batches} batches for 200 reqs)");
+    assert!(m.request_latency.count() == 200);
+}
+
+#[test]
+fn compare_policy_counts_disagreements() {
+    // Without PJRT attached, compare-mode serves logic and records zero
+    // disagreements (the numeric side is absent).
+    let (router, model) = build_router(Policy::Compare, 8);
+    for i in 0..20 {
+        let x: Vec<f64> = (0..6).map(|j| ((i + j) as f64 * 0.31).cos()).collect();
+        let want = nullanet_tiny::nn::eval::classify(&model, &x);
+        let reply = router
+            .submit(x)
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(reply.class, want);
+    }
+    use std::sync::atomic::Ordering;
+    assert_eq!(router.metrics().disagreements.load(Ordering::Relaxed), 0);
+    router.shutdown();
+}
+
+#[test]
+fn pjrt_routing_with_real_artifacts() {
+    if !std::path::Path::new("artifacts/jsc-s.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let model = Model::load("artifacts/jsc-s.model.json").unwrap();
+    let flow =
+        run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+    let out_w = model.layers.last().unwrap().out_width;
+    let spec = PjrtSpec {
+        hlo_path: "artifacts/jsc-s.hlo.txt".into(),
+        batch: 64,
+        in_features: model.input_features,
+        out_width: out_w,
+    };
+    // Compare mode with the real numeric engine: logic and PJRT should
+    // agree on almost every request.
+    let router = Router::start(
+        model.clone(),
+        flow.circuit.netlist,
+        Some(spec),
+        Policy::Compare,
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(300) },
+    );
+    let test = nullanet_tiny::data::Dataset::load("artifacts/jsc_test.bin").unwrap();
+    let n = 256;
+    let rxs: Vec<_> = test.xs[..n].iter().map(|x| router.submit(x.clone())).collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    use std::sync::atomic::Ordering;
+    let m = router.metrics();
+    assert_eq!(m.logic_requests.load(Ordering::Relaxed) as usize, n);
+    assert_eq!(m.numeric_requests.load(Ordering::Relaxed) as usize, n);
+    let dis = m.disagreements.load(Ordering::Relaxed) as f64 / n as f64;
+    assert!(dis < 0.01, "logic vs pjrt disagreement rate {dis}");
+    router.shutdown();
+}
+
+#[test]
+fn tcp_server_multiple_clients() {
+    use std::io::{BufRead, BufReader, Write};
+    let (router, model) = build_router(Policy::Logic, 8);
+    let router = Arc::new(router);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let r2 = Arc::clone(&router);
+    let server = std::thread::spawn(move || {
+        nullanet_tiny::coordinator::server::serve(r2, "127.0.0.1:0", Some(tx)).unwrap();
+    });
+    let port = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+
+    let mut clients = Vec::new();
+    for c in 0..3 {
+        let m = model.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            for i in 0..10 {
+                let x: Vec<f64> =
+                    (0..6).map(|j| ((c * 31 + i * 7 + j) as f64 * 0.13).sin()).collect();
+                let req = format!(
+                    "{{\"features\": [{}]}}\n",
+                    x.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+                );
+                conn.write_all(req.as_bytes()).unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let resp = nullanet_tiny::util::json::Json::parse(&line).unwrap();
+                let class = resp.get("class").unwrap().as_usize().unwrap();
+                assert_eq!(class, nullanet_tiny::nn::eval::classify(&m, &x));
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    // shutdown
+    let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+    conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+    server.join().unwrap();
+}

@@ -1,0 +1,116 @@
+//! Integration: cross-system equivalence — NullaNet flow vs LogicNets
+//! baseline vs exact NN; emitters produce parseable, consistent output.
+
+use nullanet_tiny::baseline::build_logicnets;
+use nullanet_tiny::flow::{run_flow, FlowConfig};
+use nullanet_tiny::logic::blif::{netlist_to_blif, pipelined_to_blif};
+use nullanet_tiny::logic::sim::CompiledNetlist;
+use nullanet_tiny::logic::verilog::pipelined_to_verilog;
+use nullanet_tiny::nn::model::random_model;
+use nullanet_tiny::util::prng::Xoshiro256;
+
+#[test]
+fn flow_and_baseline_compute_identical_functions() {
+    for seed in [3u64, 17, 99] {
+        let m = random_model("eq", 7, &[6, 4, 3], 3, 2, seed);
+        let ours = run_flow(&m, &FlowConfig { jobs: 2, ..Default::default() }, None)
+            .unwrap();
+        let theirs = build_logicnets(&m, 6).unwrap();
+        let mut sa = CompiledNetlist::compile(&ours.circuit.netlist);
+        let mut sb = CompiledNetlist::compile(&theirs.circuit.netlist);
+        let mut rng = Xoshiro256::new(seed ^ 0xF0);
+        let n_in = m.input_bits();
+        let samples: Vec<Vec<bool>> = (0..300)
+            .map(|_| (0..n_in).map(|_| rng.bernoulli(0.5)).collect())
+            .collect();
+        assert_eq!(sa.run_batch(&samples), sb.run_batch(&samples), "seed {seed}");
+    }
+}
+
+#[test]
+fn our_flow_beats_baseline_on_area_for_wide_neurons() {
+    // γ·β = 8 > 6: the regime Table I compares (baseline must mux-decompose).
+    let m = random_model("area", 10, &[10, 6, 5], 4, 2, 41);
+    let ours = run_flow(&m, &FlowConfig { jobs: 2, ..Default::default() }, None).unwrap();
+    let theirs = build_logicnets(&m, 6).unwrap();
+    assert!(
+        ours.circuit.netlist.num_luts() < theirs.circuit.netlist.num_luts(),
+        "ours {} vs baseline {}",
+        ours.circuit.netlist.num_luts(),
+        theirs.circuit.netlist.num_luts()
+    );
+}
+
+#[test]
+fn emitted_blif_is_structurally_sound() {
+    let m = random_model("blif", 5, &[4, 3], 2, 1, 7);
+    let r = run_flow(&m, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+    let blif = pipelined_to_blif(&r.circuit, "jsc_test");
+    assert!(blif.starts_with(".model jsc_test"));
+    assert!(blif.ends_with(".end\n"));
+    // one .names per LUT + one per output buffer + constants
+    let names = blif.matches(".names").count();
+    assert!(names >= r.circuit.netlist.num_luts() + r.circuit.netlist.outputs.len());
+    // latch count matches the FF counter minus I/O registers
+    let latches = blif.matches(".latch").count();
+    let ffs = r.circuit.count_ffs();
+    let io_regs = m.input_bits() + r.circuit.netlist.outputs.len();
+    assert_eq!(latches, ffs - io_regs, "inter-stage latches");
+
+    let comb = netlist_to_blif(&r.circuit.netlist, "comb");
+    assert!(comb.contains(".inputs"));
+    assert!(!comb.contains(".latch"));
+}
+
+#[test]
+fn emitted_verilog_is_structurally_sound() {
+    let m = random_model("vlog", 5, &[4, 3], 2, 1, 7);
+    let r = run_flow(&m, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+    let v = pipelined_to_verilog(&r.circuit, "jsc_test");
+    assert!(v.starts_with("module jsc_test"));
+    assert!(v.ends_with("endmodule\n"));
+    assert!(v.contains("input  wire clk"));
+    // every LUT has an assign
+    for j in 0..r.circuit.netlist.num_luts() {
+        assert!(v.contains(&format!("assign n{j} =")), "missing n{j}");
+    }
+    // balanced parens (cheap syntax sanity)
+    assert_eq!(v.matches('(').count(), v.matches(')').count());
+}
+
+#[test]
+fn baseline_cost_scales_with_fanin_bits() {
+    use nullanet_tiny::baseline::logicnets::lut_cost_per_bit;
+    // LogicNets eq. 1 shape: exponential in γ·β − k.
+    assert!(lut_cost_per_bit(8, 6) < lut_cost_per_bit(10, 6));
+    assert!(lut_cost_per_bit(10, 6) < lut_cost_per_bit(12, 6));
+    let m6 = random_model("c6", 8, &[4], 3, 2, 1); // 6-bit neurons
+    let m8 = random_model("c8", 8, &[4], 4, 2, 1); // 8-bit neurons
+    let b6 = build_logicnets(&m6, 6).unwrap();
+    let b8 = build_logicnets(&m8, 6).unwrap();
+    assert!(b6.circuit.netlist.num_luts() < b8.circuit.netlist.num_luts());
+}
+
+#[test]
+fn espresso_ablation_shapes() {
+    // A3: espresso on/off and retime on/off — cost relationships that the
+    // logic_opt bench reports, asserted here as invariants.
+    let m = random_model("abl", 8, &[8, 5], 3, 2, 23);
+    let full = run_flow(&m, &FlowConfig { jobs: 2, ..Default::default() }, None).unwrap();
+    let no_esp = run_flow(
+        &m,
+        &FlowConfig { use_espresso: false, jobs: 2, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    let no_ret = run_flow(
+        &m,
+        &FlowConfig { retime: false, jobs: 2, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    assert!(full.total_cubes_after <= no_esp.total_cubes_after);
+    assert!(
+        full.circuit.stats().max_stage_depth <= no_ret.circuit.stats().max_stage_depth
+    );
+}

@@ -1,0 +1,143 @@
+//! Integration: the full NullaNet Tiny flow across model shapes and
+//! configuration axes, checked end-to-end against the exact NN evaluation.
+
+use nullanet_tiny::flow::{circuit_accuracy, run_flow, FlowConfig};
+use nullanet_tiny::fpga::timing::TimingModel;
+use nullanet_tiny::logic::sim::CompiledNetlist;
+use nullanet_tiny::nn::eval::{bits_to_codes, codes_to_bits, forward_codes, quantize_input};
+use nullanet_tiny::nn::model::{random_model, Model};
+
+fn exhaustive_check(model: &Model, circuit: &nullanet_tiny::logic::netlist::PipelinedCircuit) {
+    let in_bits = model.input_bits();
+    assert!(in_bits <= 14, "exhaustive check limited");
+    let mut sim = CompiledNetlist::compile(&circuit.netlist);
+    let out_b = model.layers.last().unwrap().act.bits;
+    let in_b = model.input_quant.bits;
+    for m in 0..1u64 << in_bits {
+        let codes: Vec<usize> = (0..model.input_features)
+            .map(|i| ((m >> (i * in_b)) & ((1 << in_b) - 1)) as usize)
+            .collect();
+        let want = forward_codes(model, &codes).codes.last().unwrap().clone();
+        let bools: Vec<bool> = (0..in_bits).map(|i| (m >> i) & 1 == 1).collect();
+        let got = bits_to_codes(&sim.run_batch(&[bools]).pop().unwrap(), out_b);
+        assert_eq!(got, want, "m={m}");
+    }
+}
+
+#[test]
+fn flow_exhaustive_on_various_shapes() {
+    for (feats, widths, fanin, bits, seed) in [
+        (5usize, vec![4usize, 3], 2usize, 1usize, 1u64),
+        (6, vec![8, 4, 3], 3, 2, 2),
+        (4, vec![10, 5], 4, 2, 3),
+        (7, vec![3], 2, 2, 4),
+    ] {
+        let m = random_model("shape", feats, &widths, fanin, bits, seed);
+        if m.input_bits() > 14 {
+            continue;
+        }
+        let r = run_flow(&m, &FlowConfig { jobs: 2, ..Default::default() }, None).unwrap();
+        exhaustive_check(&m, &r.circuit);
+    }
+}
+
+#[test]
+fn config_matrix_all_equivalent() {
+    let m = random_model("cfg", 6, &[5, 4, 3], 3, 2, 77);
+    let mut baseline_preds: Option<Vec<usize>> = None;
+    let xs: Vec<Vec<f64>> = (0..100)
+        .map(|i| (0..6).map(|j| ((i * 3 + j) as f64 * 0.29).sin() * 2.0).collect())
+        .collect();
+    for espresso in [true, false] {
+        for retime in [true, false] {
+            for area in [true, false] {
+                let cfg = FlowConfig {
+                    use_espresso: espresso,
+                    retime,
+                    map_for_area: area,
+                    jobs: 1,
+                    ..Default::default()
+                };
+                let r = run_flow(&m, &cfg, None).unwrap();
+                let mut sim = CompiledNetlist::compile(&r.circuit.netlist);
+                let preds =
+                    nullanet_tiny::flow::build::classify_batch(&m, &mut sim, &xs);
+                match &baseline_preds {
+                    None => baseline_preds = Some(preds),
+                    Some(b) => assert_eq!(&preds, b, "espresso={espresso} retime={retime} area={area}"),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn trained_artifacts_end_to_end_if_present() {
+    // Uses the real trained model when `make artifacts` has run; skips
+    // silently otherwise so `cargo test` works on a fresh checkout.
+    let path = "artifacts/jsc-s.model.json";
+    if !std::path::Path::new(path).exists() {
+        eprintln!("skipping: {path} not built");
+        return;
+    }
+    let model = Model::load(path).unwrap();
+    let r = run_flow(&model, &FlowConfig::default(), None).unwrap();
+    let stats = r.circuit.stats();
+    assert!(stats.luts > 0 && stats.luts < 5000, "JSC-S LUTs: {}", stats.luts);
+    assert_eq!(stats.latency_cycles, 3, "three layers → three stages");
+    // fmax must land in the paper's JSC-S band with default calibration
+    let fmax = TimingModel::vu9p().fmax_mhz(stats.max_stage_depth);
+    assert!(fmax > 500.0, "fmax {fmax}");
+    if std::path::Path::new("artifacts/jsc_test.bin").exists() {
+        let test = nullanet_tiny::data::Dataset::load("artifacts/jsc_test.bin").unwrap();
+        let acc = circuit_accuracy(&model, &r.circuit, &test.xs, &test.ys);
+        assert!(acc > 0.60, "trained JSC-S logic accuracy {acc}");
+    }
+}
+
+#[test]
+fn dc_from_data_preserves_observed_behaviour_and_saves_area() {
+    let m = random_model("dc", 6, &[6, 4], 3, 2, 5);
+    let xs: Vec<Vec<f64>> = (0..150)
+        .map(|i| (0..6).map(|j| ((i * 7 + j) as f64 * 0.23).cos() * 1.5).collect())
+        .collect();
+    let full = run_flow(
+        &m,
+        &FlowConfig { jobs: 1, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    let dc = run_flow(
+        &m,
+        &FlowConfig { dc_from_data: true, verify: false, jobs: 1, ..Default::default() },
+        Some(&xs),
+    )
+    .unwrap();
+    // Observed inputs classify identically.
+    let mut sa = CompiledNetlist::compile(&full.circuit.netlist);
+    let mut sb = CompiledNetlist::compile(&dc.circuit.netlist);
+    let pa = nullanet_tiny::flow::build::classify_batch(&m, &mut sa, &xs);
+    let pb = nullanet_tiny::flow::build::classify_batch(&m, &mut sb, &xs);
+    assert_eq!(pa, pb);
+    // DC flow should not use more cubes.
+    assert!(dc.total_cubes_after <= full.total_cubes_after);
+}
+
+#[test]
+fn input_codes_roundtrip_through_circuit_wiring() {
+    // The wire-order contract: codes_to_bits ∘ bits_to_codes = id and the
+    // circuit's input ordering matches quantize_input.
+    let m = random_model("wire", 5, &[4, 3], 2, 2, 9);
+    let r = run_flow(&m, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+    let mut sim = CompiledNetlist::compile(&r.circuit.netlist);
+    for s in 0..40u64 {
+        let x: Vec<f64> = (0..5).map(|i| ((s + i as u64) as f64 * 0.41).sin() * 2.0).collect();
+        let codes = quantize_input(&m, &x);
+        let bits = codes_to_bits(&codes, m.input_quant.bits);
+        assert_eq!(bits_to_codes(&bits, m.input_quant.bits), codes);
+        let out = sim.run_batch(&[bits]).pop().unwrap();
+        let got = bits_to_codes(&out, m.layers.last().unwrap().act.bits);
+        let want = forward_codes(&m, &codes).codes.last().unwrap().clone();
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,94 @@
+//! Failure-injection and robustness tests for the flow + model loader.
+
+use nullanet_tiny::flow::{run_flow, FlowConfig};
+use nullanet_tiny::nn::model::{random_model, Model, Quantizer};
+use nullanet_tiny::util::json::Json;
+
+#[test]
+fn loader_rejects_tampered_models() {
+    let m = random_model("tamper", 5, &[4, 3], 2, 1, 3);
+    let good = m.to_json().to_string();
+
+    // Valid round trip first.
+    assert!(Model::from_json(&Json::parse(&good).unwrap()).is_ok());
+
+    // Remove a required field.
+    let j = Json::parse(&good).unwrap();
+    if let Json::Obj(mut o) = j {
+        o.remove("input_quant");
+        let bad = Json::Obj(o).to_string();
+        assert!(Model::from_json(&Json::parse(&bad).unwrap()).is_err());
+    } else {
+        panic!("model json must be an object");
+    }
+
+    // Corrupt quantizer (unsorted levels).
+    let mut m2 = m.clone();
+    m2.input_quant = Quantizer { bits: 1, levels: vec![1.0, -1.0], thresholds: vec![0.0] };
+    let bad = m2.to_json().to_string();
+    assert!(Model::from_json(&Json::parse(&bad).unwrap()).is_err());
+
+    // Mask index out of range.
+    let mut m3 = m.clone();
+    m3.layers[0].mask[0] = vec![999];
+    assert!(Model::from_json(&Json::parse(&m3.to_json().to_string()).unwrap()).is_err());
+}
+
+#[test]
+fn flow_fails_cleanly_on_invalid_model() {
+    let mut m = random_model("inv", 5, &[4, 3], 2, 1, 3);
+    m.layers[1].in_width = 99;
+    let err = match run_flow(&m, &FlowConfig::default(), None) {
+        Err(e) => e,
+        Ok(_) => panic!("invalid model must not synthesize"),
+    };
+    assert!(err.contains("in_width"), "{err}");
+}
+
+#[test]
+fn dc_mode_without_traces_errors() {
+    let m = random_model("nodc", 5, &[4, 3], 2, 1, 3);
+    let cfg = FlowConfig { dc_from_data: true, ..Default::default() };
+    let err = match run_flow(&m, &cfg, None) {
+        Err(e) => e,
+        Ok(_) => panic!("dc mode without traces must fail"),
+    };
+    assert!(err.contains("training inputs"), "{err}");
+}
+
+#[test]
+fn single_layer_and_single_neuron_models() {
+    // Degenerate shapes must work: 1 layer, 1 neuron, fanin 1.
+    for (widths, fanin, bits) in [(vec![1usize], 1usize, 1usize), (vec![2], 2, 2), (vec![5], 1, 2)]
+    {
+        let m = random_model("deg", 4, &widths, fanin, bits, 5);
+        let r = run_flow(&m, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+        assert_eq!(r.circuit.num_stages, 1);
+        assert!(r.circuit.check_stages().is_ok());
+    }
+}
+
+#[test]
+fn constant_neuron_collapses_to_no_logic() {
+    // A neuron whose output never changes must synthesize to constant(s),
+    // not LUTs. Build a model with huge positive bias → PACT saturates high.
+    let mut m = random_model("const", 4, &[2], 2, 1, 7);
+    m.layers[0].bias = vec![1e9, -1e9];
+    let r = run_flow(&m, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+    // Both neurons constant → the whole netlist should carry ≈ 0 LUTs.
+    assert!(
+        r.circuit.netlist.num_luts() == 0,
+        "constant neurons must cost nothing, got {} LUTs",
+        r.circuit.netlist.num_luts()
+    );
+}
+
+#[test]
+fn dataset_loader_rejects_garbage_files() {
+    use nullanet_tiny::data::Dataset;
+    let path = "/tmp/nnt_garbage.bin";
+    std::fs::write(path, b"this is not a dataset").unwrap();
+    assert!(Dataset::load(path).is_err());
+    std::fs::remove_file(path).ok();
+    assert!(Dataset::load("/tmp/does_not_exist_nnt.bin").is_err());
+}

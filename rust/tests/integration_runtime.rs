@@ -1,0 +1,121 @@
+//! Integration: the PJRT runtime path — AOT HLO artifacts load, execute,
+//! and agree with the Rust-side quantized evaluation.
+//!
+//! These tests need `make artifacts` to have run; on a fresh checkout they
+//! skip with a message (keeps `cargo test` green pre-build).
+
+use nullanet_tiny::data::Dataset;
+use nullanet_tiny::nn::eval;
+use nullanet_tiny::nn::model::Model;
+use nullanet_tiny::runtime::PjrtEngine;
+
+fn artifacts_ready(arch: &str) -> bool {
+    std::path::Path::new(&format!("artifacts/{arch}.hlo.txt")).exists()
+        && std::path::Path::new(&format!("artifacts/{arch}.model.json")).exists()
+}
+
+#[test]
+fn pjrt_loads_and_classifies_jsc_s() {
+    if !artifacts_ready("jsc-s") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let model = Model::load("artifacts/jsc-s.model.json").unwrap();
+    let out_w = model.layers.last().unwrap().out_width;
+    let engine =
+        PjrtEngine::load("artifacts/jsc-s.hlo.txt", 64, model.input_features, out_w)
+            .unwrap();
+    assert!(engine.platform().contains("cpu") || engine.platform().contains("Host"));
+
+    // Agreement with the exact integer evaluation on real test data. The
+    // PJRT path computes in f32, the Rust gold path in f64 over exported
+    // tables: classifications must agree on ≳99% of samples (ties at
+    // quantizer thresholds account for the rest).
+    let test = Dataset::load("artifacts/jsc_test.bin").unwrap();
+    let n = 1024.min(test.len());
+    let xs = &test.xs[..n];
+    let pjrt_pred = engine.classify_all(xs, model.num_classes).unwrap();
+    let rust_pred: Vec<usize> = xs.iter().map(|x| eval::classify(&model, x)).collect();
+    let agree = pjrt_pred
+        .iter()
+        .zip(&rust_pred)
+        .filter(|(a, b)| a == b)
+        .count() as f64
+        / n as f64;
+    assert!(agree > 0.99, "PJRT vs Rust agreement {agree}");
+}
+
+#[test]
+fn pjrt_batch_padding() {
+    if !artifacts_ready("jsc-s") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let model = Model::load("artifacts/jsc-s.model.json").unwrap();
+    let out_w = model.layers.last().unwrap().out_width;
+    let engine =
+        PjrtEngine::load("artifacts/jsc-s.hlo.txt", 64, model.input_features, out_w)
+            .unwrap();
+    // batches of 1, 63, 64 and 65 (the last via classify_all chunking)
+    let test = Dataset::load("artifacts/jsc_test.bin").unwrap();
+    for n in [1usize, 63, 64] {
+        let preds = engine.classify(&test.xs[..n], model.num_classes).unwrap();
+        assert_eq!(preds.len(), n);
+    }
+    let preds = engine.classify_all(&test.xs[..65], model.num_classes).unwrap();
+    assert_eq!(preds.len(), 65);
+    // padding must not change results: sample 0 alone == sample 0 in batch
+    let solo = engine.classify(&test.xs[..1], model.num_classes).unwrap();
+    let batch = engine.classify(&test.xs[..64], model.num_classes).unwrap();
+    assert_eq!(solo[0], batch[0]);
+}
+
+#[test]
+fn pjrt_rejects_bad_input() {
+    if !artifacts_ready("jsc-s") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let model = Model::load("artifacts/jsc-s.model.json").unwrap();
+    let out_w = model.layers.last().unwrap().out_width;
+    let engine =
+        PjrtEngine::load("artifacts/jsc-s.hlo.txt", 64, model.input_features, out_w)
+            .unwrap();
+    // wrong feature count
+    assert!(engine.infer(&[vec![0.0; 3]]).is_err());
+    // oversize batch
+    let too_many = vec![vec![0.0; model.input_features]; 65];
+    assert!(engine.infer(&too_many).is_err());
+    // empty is fine
+    assert!(engine.infer(&[]).unwrap().is_empty());
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let r = PjrtEngine::load("artifacts/does-not-exist.hlo.txt", 64, 16, 5);
+    assert!(r.is_err());
+}
+
+#[test]
+fn all_three_arch_artifacts_load() {
+    for arch in ["jsc-s", "jsc-m", "jsc-l"] {
+        if !artifacts_ready(arch) {
+            eprintln!("skipping {arch}: artifacts not built");
+            continue;
+        }
+        let model = Model::load(&format!("artifacts/{arch}.model.json")).unwrap();
+        let out_w = model.layers.last().unwrap().out_width;
+        let engine = PjrtEngine::load(
+            &format!("artifacts/{arch}.hlo.txt"),
+            64,
+            model.input_features,
+            out_w,
+        )
+        .unwrap();
+        let xs = vec![vec![0.1; model.input_features]; 4];
+        let out = engine.infer(&xs).unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].len(), out_w);
+        assert!(out[0].iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,281 @@
+//! Property-based tests over the logic-synthesis core invariants
+//! (in-tree shrinking harness: `util::proptest`).
+
+use nullanet_tiny::logic::cube::Cover;
+use nullanet_tiny::logic::espresso::minimize_tt;
+use nullanet_tiny::logic::mapper::{map_aig, MapConfig};
+use nullanet_tiny::logic::retime::retime_min_period;
+use nullanet_tiny::logic::truthtable::TruthTable;
+use nullanet_tiny::util::proptest::{check, check_simple, Config, Gen};
+
+/// Random incompletely-specified function: (nvars, on, dc) disjoint.
+fn gen_ics(g: &mut Gen) -> (usize, TruthTable, TruthTable) {
+    let nvars = g.sized_range(1, 9);
+    let on = TruthTable::from_fn(nvars, |_| g.rng.bernoulli(0.4));
+    let dc_raw = TruthTable::from_fn(nvars, |_| g.rng.bernoulli(0.25));
+    let dc = dc_raw.and(&on.not());
+    (nvars, on, dc)
+}
+
+#[test]
+fn espresso_respects_bounds_and_is_irredundant() {
+    check_simple(
+        "espresso-bounds",
+        gen_ics,
+        |(nvars, on, dc)| {
+            let (cover, _) = minimize_tt(on, dc);
+            let ctt = TruthTable::from_cover(&cover);
+            if !on.implies(&ctt) {
+                return Err("ON not covered".into());
+            }
+            if !ctt.implies(&on.or(dc)) {
+                return Err("exceeds ON ∪ DC".into());
+            }
+            // irredundant: dropping any cube must lose ON coverage
+            for i in 0..cover.len() {
+                let mut cubes = cover.cubes.clone();
+                cubes.remove(i);
+                let smaller = TruthTable::from_cover(&Cover::from_cubes(*nvars, cubes));
+                if on.implies(&smaller) {
+                    return Err(format!("cube {i} redundant"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn espresso_never_worse_than_isop() {
+    check_simple(
+        "espresso-vs-isop",
+        gen_ics,
+        |(_nvars, on, dc)| {
+            let (cover, _) = minimize_tt(on, dc);
+            let isop = TruthTable::isop(on, dc);
+            if cover.len() > isop.len() {
+                return Err(format!(
+                    "espresso {} cubes > isop {}",
+                    cover.len(),
+                    isop.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn complement_is_exact_involution() {
+    check_simple(
+        "complement",
+        |g| {
+            let nvars = g.sized_range(1, 8);
+            TruthTable::from_fn(nvars, |_| g.rng.bernoulli(0.5))
+        },
+        |tt| {
+            let cover = TruthTable::isop(tt, &TruthTable::zeros(tt.nvars()));
+            let comp = cover.complement();
+            let back = comp.complement();
+            if TruthTable::from_cover(&comp) != tt.not() {
+                return Err("complement wrong".into());
+            }
+            if TruthTable::from_cover(&back) != *tt {
+                return Err("double complement not identity".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mapping_preserves_function_and_respects_k() {
+    // Random AIGs built from a random op tape; shrink by truncating the tape.
+    type Tape = Vec<(u8, usize, usize, bool)>;
+    fn build(nin: usize, tape: &Tape) -> nullanet_tiny::logic::aig::Aig {
+        use nullanet_tiny::logic::aig::{lit_not, Aig, Lit};
+        let mut g = Aig::new();
+        let mut pool: Vec<Lit> = (0..nin).map(|_| g.add_input()).collect();
+        for &(op, a, b, inv) in tape {
+            let la = pool[a % pool.len()];
+            let lb = pool[b % pool.len()];
+            let l = match op % 3 {
+                0 => g.and(la, lb),
+                1 => g.or(la, lb),
+                _ => g.xor(la, lb),
+            };
+            pool.push(if inv { lit_not(l) } else { l });
+        }
+        let out = *pool.last().unwrap();
+        g.add_output(out);
+        g
+    }
+    check(
+        "mapper",
+        &Config::default(),
+        |g| {
+            let n = g.sized_range(1, 40);
+            let tape: Tape = (0..n)
+                .map(|_| {
+                    (
+                        g.rng.next_u32() as u8,
+                        g.rng.next_u32() as usize,
+                        g.rng.next_u32() as usize,
+                        g.rng.bernoulli(0.3),
+                    )
+                })
+                .collect();
+            tape
+        },
+        |tape| {
+            let mut out = Vec::new();
+            if tape.len() > 1 {
+                out.push(tape[..tape.len() / 2].to_vec());
+                out.push(tape[..tape.len() - 1].to_vec());
+            }
+            out
+        },
+        |tape| {
+            if tape.is_empty() {
+                return Ok(());
+            }
+            let g = build(7, tape);
+            for k in [4usize, 6] {
+                let res = map_aig(&g, &MapConfig { k, ..Default::default() });
+                if res.netlist.max_arity() > k {
+                    return Err(format!("arity {} > k {k}", res.netlist.max_arity()));
+                }
+                for m in 0..128u64 {
+                    if res.netlist.eval(m) != g.eval(m) {
+                        return Err(format!("function mismatch at m={m} k={k}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn retiming_never_increases_depth_and_preserves_function() {
+    use nullanet_tiny::logic::netlist::{LutNetlist, PipelinedCircuit, Sig};
+    check_simple(
+        "retime",
+        |g| {
+            // random DAG of 1–2 input LUTs over a random stage budget
+            let nin = g.sized_range(1, 4);
+            let nluts = g.sized_range(1, 30);
+            let stages = g.sized_range(1, 4) as u32;
+            let mut nl = LutNetlist::new(nin);
+            for j in 0..nluts {
+                let navail = nin + j;
+                let k = 1 + g.rng.below(2) as usize;
+                let inputs: Vec<Sig> = (0..k)
+                    .map(|_| {
+                        let pick = g.rng.below(navail as u64) as usize;
+                        if pick < nin {
+                            Sig::Input(pick as u32)
+                        } else {
+                            Sig::Lut((pick - nin) as u32)
+                        }
+                    })
+                    .collect();
+                let tt = TruthTable::from_fn(k, |_| g.rng.bernoulli(0.5));
+                nl.add_lut(inputs, tt);
+            }
+            nl.add_output(Sig::Lut((nluts - 1) as u32), false);
+            PipelinedCircuit {
+                stage_of_lut: vec![0; nl.luts.len()],
+                netlist: nl,
+                num_stages: stages,
+            }
+        },
+        |c| {
+            let (r, st) = retime_min_period(c);
+            r.check_stages().map_err(|e| e.to_string())?;
+            if st.depth_after > st.depth_before {
+                return Err(format!(
+                    "depth increased {} → {}",
+                    st.depth_before, st.depth_after
+                ));
+            }
+            for m in 0..1u64 << c.netlist.num_inputs.min(6) {
+                if r.eval(m) != c.eval(m) {
+                    return Err(format!("function changed at m={m}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn compiled_sim_agrees_with_interpreter() {
+    use nullanet_tiny::logic::netlist::{LutNetlist, Sig};
+    use nullanet_tiny::logic::sim::CompiledNetlist;
+    check_simple(
+        "compiled-sim",
+        |g| {
+            let nin = g.sized_range(1, 8);
+            let nluts = g.sized_range(1, 25);
+            let mut nl = LutNetlist::new(nin);
+            for j in 0..nluts {
+                let navail = nin + j;
+                let k = 1 + g.rng.below(5.min(navail as u64)) as usize;
+                let inputs: Vec<Sig> = (0..k)
+                    .map(|_| {
+                        let pick = g.rng.below(navail as u64) as usize;
+                        if pick < nin {
+                            Sig::Input(pick as u32)
+                        } else {
+                            Sig::Lut((pick - nin) as u32)
+                        }
+                    })
+                    .collect();
+                let tt = TruthTable::from_fn(k, |_| g.rng.bernoulli(0.5));
+                nl.add_lut(inputs, tt);
+            }
+            for j in 0..nluts.min(3) {
+                nl.add_output(Sig::Lut(j as u32), j % 2 == 0);
+            }
+            let words: Vec<u64> = (0..nin).map(|_| g.rng.next_u64()).collect();
+            (nl, words)
+        },
+        |(nl, words)| {
+            let want = nl.simulate_words(words);
+            let mut sim = CompiledNetlist::compile(nl);
+            let mut got = vec![0u64; want.len()];
+            sim.run_words(words, &mut got);
+            if got != want {
+                return Err("compiled sim disagrees with interpreter".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn neuron_synthesis_equivalence_property() {
+    use nullanet_tiny::flow::synth::{synthesize_neuron, verify_neuron};
+    use nullanet_tiny::nn::model::random_model;
+    check_simple(
+        "neuron-synth",
+        |g| {
+            let feats = g.sized_range(3, 8);
+            let fanin = g.sized_range(2, 4);
+            let bits = g.sized_range(1, 2);
+            let seed = g.rng.next_u64();
+            (feats, fanin, bits, seed)
+        },
+        |&(feats, fanin, bits, seed)| {
+            let m = random_model("p", feats, &[3, 2], fanin, bits, seed);
+            for layer in 0..2 {
+                for neuron in 0..m.layers[layer].out_width {
+                    let s = synthesize_neuron(&m, layer, neuron, None, true);
+                    verify_neuron(&s)?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
