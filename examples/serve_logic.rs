@@ -43,12 +43,19 @@ fn main() {
     println!("synthesizing logic…");
     let flow = run_flow(&model, &FlowConfig::default(), None).expect("flow");
     let policy = if pjrt.is_some() { Policy::Compare } else { Policy::Logic };
+    // Shard multi-lane-group batches across up to 4 engine workers sharing
+    // one compiled netlist.
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(4);
     let router = Arc::new(Router::start(
         model.clone(),
         flow.circuit.netlist.clone(),
         pjrt,
         policy,
         BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(100) },
+        workers,
     ));
 
     // Drive the server from 4 closed-loop clients.

@@ -62,7 +62,7 @@ fn main() {
     println!("\n== software engines on this host (JSC-S) ==\n");
     let model = Model::load(&format!("{dir}/jsc-s.model.json")).unwrap();
     let r = run_flow(&model, &FlowConfig::default(), None).unwrap();
-    let mut sim = CompiledNetlist::compile(&r.circuit.netlist);
+    let sim = CompiledNetlist::compile(&r.circuit.netlist);
     let in_b = model.input_quant.bits;
 
     let mut bench = Bench::new();

@@ -1,5 +1,6 @@
 //! Bench P1 (§Perf): end-to-end throughput of every moving part —
-//! per-neuron synthesis rate, bit-parallel simulation rate, coordinator
+//! per-neuron synthesis rate, bit-parallel simulation rate (seed per-sample
+//! path vs the packed single- and multi-worker engine), coordinator
 //! round-trip under batching, and thread-pool scaling.
 
 use std::sync::Arc;
@@ -11,6 +12,7 @@ use nullanet_tiny::logic::sim::CompiledNetlist;
 use nullanet_tiny::nn::eval::{codes_to_bits, quantize_input};
 use nullanet_tiny::nn::model::{random_model, Model};
 use nullanet_tiny::util::bench::Bench;
+use nullanet_tiny::util::bitvec::PackedBatch;
 use nullanet_tiny::util::prng::Xoshiro256;
 use nullanet_tiny::util::threadpool::ThreadPool;
 
@@ -31,8 +33,8 @@ fn main() {
         r.neurons as f64 / flow_s
     );
 
-    // ---- simulator throughput ----
-    let mut sim = CompiledNetlist::compile(&r.circuit.netlist);
+    // ---- simulator throughput: seed path vs packed engine ----
+    let sim = Arc::new(CompiledNetlist::compile(&r.circuit.netlist));
     let mut rng = Xoshiro256::new(1);
     let batch: Vec<Vec<bool>> = (0..4096)
         .map(|_| {
@@ -40,17 +42,37 @@ fn main() {
             codes_to_bits(&quantize_input(&model, &x), model.input_quant.bits)
         })
         .collect();
-    let s = bench.run("logic-sim 4096-batch", || sim.run_batch(&batch));
+    let mut packed = PackedBatch::with_capacity(r.circuit.netlist.num_inputs, batch.len());
+    for s in &batch {
+        packed.push_sample_bools(s);
+    }
+    let packed = Arc::new(packed);
+
+    let s_seed = bench.run("logic-sim 4096-batch (seed run_batch)", || sim.run_batch(&batch));
+    println!("  → {:.2} M inferences/s\n", 4096.0 * 1e3 / s_seed.median_ns);
+
+    let mut scratch = sim.make_scratch();
+    let s_one = bench.run("packed engine 4096-batch, 1 worker", || {
+        sim.run_packed(&packed, &mut scratch)
+    });
+    let pool4 = ThreadPool::new(4);
+    let s_four = bench.run("packed engine 4096-batch, 4 workers", || {
+        CompiledNetlist::run_packed_sharded(&sim, &pool4, &packed)
+    });
     println!(
-        "  → {:.2} M inferences/s\n",
-        4096.0 * 1e3 / s.median_ns
+        "  → packed: {:.2} M inf/s (1 worker, {:.2}× seed), {:.2} M inf/s \
+         (4 workers, {:.2}× seed)\n",
+        4096.0 * 1e3 / s_one.median_ns,
+        s_seed.median_ns / s_one.median_ns,
+        4096.0 * 1e3 / s_four.median_ns,
+        s_seed.median_ns / s_four.median_ns,
     );
 
     // word-level lower bound: one 64-lane pass
     let words: Vec<u64> = (0..r.circuit.netlist.num_inputs).map(|_| rng.next_u64()).collect();
     let mut out = vec![0u64; r.circuit.netlist.outputs.len()];
     let s = bench.run("logic-sim one 64-lane pass", || {
-        sim.run_words(&words, &mut out);
+        sim.run_words(&mut scratch, &words, &mut out);
         out[0]
     });
     println!(
@@ -66,6 +88,7 @@ fn main() {
         None,
         Policy::Logic,
         BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(50) },
+        4,
     ));
     let n = 20_000usize;
     let t = Instant::now();

@@ -120,7 +120,7 @@ mod tests {
     fn baseline_is_functionally_exact() {
         let m = random_model("b", 5, &[4, 3], 2, 1, 31);
         let r = build_logicnets(&m, 6).unwrap();
-        let mut sim = crate::logic::sim::CompiledNetlist::compile(&r.circuit.netlist);
+        let sim = crate::logic::sim::CompiledNetlist::compile(&r.circuit.netlist);
         for bits in 0..1u64 << 5 {
             let in_codes: Vec<usize> = (0..5).map(|i| ((bits >> i) & 1) as usize).collect();
             let want = forward_codes(&m, &in_codes).codes.last().unwrap().clone();
@@ -137,8 +137,8 @@ mod tests {
         let ours = run_flow(&m, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
         let theirs = build_logicnets(&m, 6).unwrap();
         // Same model ⇒ identical I/O behaviour.
-        let mut sa = crate::logic::sim::CompiledNetlist::compile(&ours.circuit.netlist);
-        let mut sb = crate::logic::sim::CompiledNetlist::compile(&theirs.circuit.netlist);
+        let sa = crate::logic::sim::CompiledNetlist::compile(&ours.circuit.netlist);
+        let sb = crate::logic::sim::CompiledNetlist::compile(&theirs.circuit.netlist);
         use crate::util::prng::Xoshiro256;
         let mut rng = Xoshiro256::new(9);
         let samples: Vec<Vec<bool>> = (0..200)

@@ -2,21 +2,29 @@
 //!
 //! Classic serving-side batcher: requests accumulate in a queue; a flush is
 //! triggered by either reaching `max_batch` or a request aging past
-//! `max_wait`. The flushed batch goes to one of the inference engines (the
-//! bit-parallel logic simulator packs 64 samples per word pass; the PJRT
-//! executable has a fixed compiled batch). Built on std primitives — the
-//! offline environment has no tokio — with one dispatcher thread per
-//! [`crate::coordinator::router::Router`].
+//! `max_wait`. Requests arrive **pre-binarized** (the router quantizes the
+//! feature vector into circuit-input bits at submit time), and a flush hands
+//! the dispatcher a [`Batch`] whose inputs are already a [`PackedBatch`] —
+//! one `u64` word per input signal per 64-sample lane group — so the logic
+//! engine consumes the batch with zero per-sample `Vec` traffic between
+//! [`Batcher::next_batch`] and the simulator. Built on std primitives — the
+//! offline environment has no tokio — with one or more dispatcher threads
+//! per [`crate::coordinator::router::Router`].
 
 use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::util::bitvec::{BitVec, PackedBatch};
+
 /// One queued inference request.
 pub struct Request {
-    /// Feature vector.
-    pub features: Vec<f64>,
+    /// Pre-binarized circuit-input bits (the logic engine's native format).
+    pub bits: BitVec,
+    /// Raw features, kept only when a numeric engine may need them
+    /// (compare / numeric routing policies). `None` on the logic-only path.
+    pub features: Option<Vec<f64>>,
     /// Enqueue timestamp (for latency accounting).
     pub enqueued: Instant,
     /// Completion channel: (predicted class, engine label).
@@ -34,6 +42,15 @@ pub struct Reply {
     pub latency: Duration,
 }
 
+/// A flushed batch: packed engine inputs plus per-sample reply metadata.
+/// `requests[s]` is the request packed at lane `s` of `inputs`.
+pub struct Batch {
+    /// Bit-packed circuit inputs, ready for the simulator.
+    pub inputs: PackedBatch,
+    /// Reply metadata in lane order.
+    pub requests: Vec<Request>,
+}
+
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
@@ -49,22 +66,32 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Queue plus shutdown flag, guarded by ONE mutex: the condvar waits on the
+/// same lock `close()` writes under, so a close can never slip into the
+/// window between a dispatcher's empty-queue check and its `wait` (the
+/// classic lost-wakeup race a separate `Mutex<bool>` would allow).
+struct QueueState {
+    queue: VecDeque<Request>,
+    closed: bool,
+}
+
 /// Thread-safe request queue with batch-flush semantics.
 pub struct Batcher {
     policy: BatchPolicy,
-    queue: Mutex<VecDeque<Request>>,
+    /// Circuit-input bit width every request must match.
+    input_bits: usize,
+    state: Mutex<QueueState>,
     signal: Condvar,
-    closed: Mutex<bool>,
 }
 
 impl Batcher {
-    /// New empty batcher.
-    pub fn new(policy: BatchPolicy) -> Self {
+    /// New empty batcher over requests of `input_bits` circuit-input bits.
+    pub fn new(policy: BatchPolicy, input_bits: usize) -> Self {
         Batcher {
             policy,
-            queue: Mutex::new(VecDeque::new()),
+            input_bits,
+            state: Mutex::new(QueueState { queue: VecDeque::new(), closed: false }),
             signal: Condvar::new(),
-            closed: Mutex::new(false),
         }
     }
 
@@ -73,53 +100,80 @@ impl Batcher {
         self.policy
     }
 
+    /// Circuit-input bit width of every request.
+    pub fn input_bits(&self) -> usize {
+        self.input_bits
+    }
+
     /// Enqueue a request.
     pub fn submit(&self, req: Request) {
-        let mut q = self.queue.lock().unwrap();
-        q.push_back(req);
-        if q.len() >= self.policy.max_batch {
-            self.signal.notify_one();
+        assert_eq!(
+            req.bits.len(),
+            self.input_bits,
+            "submit: request packs {} bits, batcher expects {}",
+            req.bits.len(),
+            self.input_bits
+        );
+        let mut s = self.state.lock().unwrap();
+        s.queue.push_back(req);
+        let full = s.queue.len() >= self.policy.max_batch;
+        drop(s);
+        if full {
+            // A full queue can satisfy the flush condition of every parked
+            // dispatcher at once; wake them all so none strands a flush.
+            self.signal.notify_all();
         } else {
-            // Wake the dispatcher so it can arm the age timer.
+            // Wake one dispatcher so it can arm the age timer.
             self.signal.notify_one();
         }
     }
 
-    /// Mark closed; wakes the dispatcher.
+    /// Mark closed; wakes all dispatchers. Written under the queue lock so
+    /// no dispatcher can park between observing "open + empty" and waiting.
     pub fn close(&self) {
-        *self.closed.lock().unwrap() = true;
+        self.state.lock().unwrap().closed = true;
         self.signal.notify_all();
     }
 
     /// Dispatcher side: wait for the next batch (or `None` once closed and
-    /// drained). Blocks up to the age deadline of the oldest request.
-    pub fn next_batch(&self) -> Option<Vec<Request>> {
-        let mut q = self.queue.lock().unwrap();
+    /// drained). Blocks up to the age deadline of the oldest request. The
+    /// drained requests are bit-packed into the returned [`Batch`] outside
+    /// the queue lock.
+    pub fn next_batch(&self) -> Option<Batch> {
+        let requests = self.drain_requests()?;
+        let mut inputs = PackedBatch::with_capacity(self.input_bits, requests.len());
+        for r in &requests {
+            inputs.push_sample(&r.bits);
+        }
+        Some(Batch { inputs, requests })
+    }
+
+    fn drain_requests(&self) -> Option<Vec<Request>> {
+        let mut s = self.state.lock().unwrap();
         loop {
-            if q.len() >= self.policy.max_batch {
-                return Some(q.drain(..self.policy.max_batch).collect());
+            if s.queue.len() >= self.policy.max_batch {
+                return Some(s.queue.drain(..self.policy.max_batch).collect());
             }
-            if let Some(oldest) = q.front() {
+            if let Some(oldest) = s.queue.front() {
                 let age = oldest.enqueued.elapsed();
                 if age >= self.policy.max_wait {
-                    let n = q.len().min(self.policy.max_batch);
-                    return Some(q.drain(..n).collect());
+                    let n = s.queue.len().min(self.policy.max_batch);
+                    return Some(s.queue.drain(..n).collect());
                 }
                 let remaining = self.policy.max_wait - age;
-                let (nq, _timeout) = self.signal.wait_timeout(q, remaining).unwrap();
-                q = nq;
+                let (ns, _timeout) = self.signal.wait_timeout(s, remaining).unwrap();
+                s = ns;
+            } else if s.closed {
+                return None;
             } else {
-                if *self.closed.lock().unwrap() {
-                    return None;
-                }
-                q = self.signal.wait(q).unwrap();
+                s = self.signal.wait(s).unwrap();
             }
         }
     }
 
     /// Number of queued requests (diagnostics).
     pub fn depth(&self) -> usize {
-        self.queue.lock().unwrap().len()
+        self.state.lock().unwrap().queue.len()
     }
 }
 
@@ -129,59 +183,99 @@ mod tests {
     use std::sync::mpsc::channel;
     use std::sync::Arc;
 
-    fn req(v: f64) -> (Request, std::sync::mpsc::Receiver<Reply>) {
+    const BITS: usize = 3;
+
+    fn req(pattern: usize) -> (Request, std::sync::mpsc::Receiver<Reply>) {
         let (tx, rx) = channel();
+        let bits = BitVec::from_bools((0..BITS).map(|i| (pattern >> i) & 1 == 1));
         (
-            Request { features: vec![v], enqueued: Instant::now(), reply: tx },
+            Request { bits, features: None, enqueued: Instant::now(), reply: tx },
             rx,
         )
     }
 
     #[test]
     fn flushes_on_max_batch() {
-        let b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10) });
+        let b = Batcher::new(
+            BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10) },
+            BITS,
+        );
         for i in 0..3 {
-            let (r, _rx) = req(i as f64);
+            let (r, _rx) = req(i);
             std::mem::forget(_rx);
             b.submit(r);
         }
         let batch = b.next_batch().unwrap();
-        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.inputs.num_samples(), 3);
         assert_eq!(b.depth(), 0);
     }
 
     #[test]
+    fn packs_request_bits_in_lane_order() {
+        let b = Batcher::new(
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(10) },
+            BITS,
+        );
+        for pattern in 0..8usize {
+            let (r, _rx) = req(pattern);
+            std::mem::forget(_rx);
+            b.submit(r);
+        }
+        let batch = b.next_batch().unwrap();
+        for lane in 0..8usize {
+            // request with pattern `lane` was packed at lane `lane`
+            for i in 0..BITS {
+                assert_eq!(batch.inputs.get(lane, i), (lane >> i) & 1 == 1, "lane {lane} bit {i}");
+            }
+        }
+    }
+
+    #[test]
     fn flushes_on_age() {
-        let b = Arc::new(Batcher::new(BatchPolicy {
-            max_batch: 100,
-            max_wait: Duration::from_millis(5),
-        }));
-        let (r, _rx) = req(1.0);
+        let b = Arc::new(Batcher::new(
+            BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) },
+            BITS,
+        ));
+        let (r, _rx) = req(1);
         std::mem::forget(_rx);
         b.submit(r);
         let t = Instant::now();
         let batch = b.next_batch().unwrap();
-        assert_eq!(batch.len(), 1);
+        assert_eq!(batch.requests.len(), 1);
         assert!(t.elapsed() >= Duration::from_millis(4), "must wait for age");
     }
 
     #[test]
     fn close_drains_to_none() {
-        let b = Batcher::new(BatchPolicy::default());
+        let b = Batcher::new(BatchPolicy::default(), BITS);
         b.close();
         assert!(b.next_batch().is_none());
     }
 
     #[test]
+    #[should_panic(expected = "batcher expects")]
+    fn wrong_width_request_is_rejected() {
+        let b = Batcher::new(BatchPolicy::default(), BITS);
+        let (tx, _rx) = channel();
+        b.submit(Request {
+            bits: BitVec::zeros(BITS + 1),
+            features: None,
+            enqueued: Instant::now(),
+            reply: tx,
+        });
+    }
+
+    #[test]
     fn concurrent_submit_and_drain() {
-        let b = Arc::new(Batcher::new(BatchPolicy {
-            max_batch: 10,
-            max_wait: Duration::from_millis(1),
-        }));
+        let b = Arc::new(Batcher::new(
+            BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(1) },
+            BITS,
+        ));
         let b2 = Arc::clone(&b);
         let producer = std::thread::spawn(move || {
             for i in 0..100 {
-                let (r, rx) = req(i as f64);
+                let (r, rx) = req(i % 8);
                 std::mem::forget(rx);
                 b2.submit(r);
             }
@@ -189,8 +283,9 @@ mod tests {
         });
         let mut total = 0;
         while let Some(batch) = b.next_batch() {
-            assert!(batch.len() <= 10);
-            total += batch.len();
+            assert!(batch.requests.len() <= 10);
+            assert_eq!(batch.inputs.num_samples(), batch.requests.len());
+            total += batch.requests.len();
             if total == 100 {
                 break;
             }

@@ -75,8 +75,10 @@ impl LatencyHistogram {
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                // upper edge of bucket i
-                return BASE_NS * GROWTH.powi(i as i32 + 1);
+                // Geometric midpoint of bucket i, √(lo·hi) = BASE·G^(i+½):
+                // the unbiased representative of a log-spaced bucket. The
+                // upper edge would bias every percentile high by up to ×G.
+                return BASE_NS * GROWTH.powf(i as f64 + 0.5);
             }
         }
         BASE_NS * GROWTH.powi(NBUCKETS as i32)
@@ -149,8 +151,24 @@ mod tests {
         let p95 = h.percentile_ns(0.95);
         let p99 = h.percentile_ns(0.99);
         assert!(p50 <= p95 && p95 <= p99);
-        // p50 of uniform 1µs..1ms ≈ 500µs within bucket resolution (×1.5)
-        assert!((250_000.0..1_000_000.0).contains(&p50), "p50={p50}");
+        // p50 of uniform 1µs..1ms ≈ 500µs; the bucket midpoint lands within
+        // a ×√1.5 factor of the true value (tighter than the old upper-edge
+        // estimate, which could overshoot by ×1.5).
+        assert!((300_000.0..900_000.0).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn percentile_returns_bucket_midpoint_not_upper_edge() {
+        let h = LatencyHistogram::new();
+        for _ in 0..1000 {
+            h.record_ns(1_000); // all samples in one bucket
+        }
+        let p50 = h.percentile_ns(0.5);
+        // bucket_of(1000) = 5: [759.4 ns, 1139.1 ns); geometric midpoint
+        // ≈ 930 ns. The seed returned the upper edge (≈1139 ns), biasing
+        // every percentile high.
+        assert!(p50 > 759.0 && p50 < 1139.0, "p50={p50} must sit inside the bucket");
+        assert!((p50 - 930.0).abs() < 5.0, "p50={p50} should be the geometric midpoint");
     }
 
     #[test]

@@ -2,8 +2,10 @@
 //! server, and metrics — the layer that turns the synthesized combinational
 //! logic into a deployable inference service.
 //!
-//! * [`batcher`] — queue + flush policy (max batch / max wait)
-//! * [`router`] — logic vs PJRT engine dispatch, compare mode
+//! * [`batcher`] — queue + flush policy (max batch / max wait); flushes
+//!   bit-packed [`batcher::Batch`]es the logic engine consumes directly
+//! * [`router`] — logic vs PJRT engine dispatch, compare mode, multi-worker
+//!   packed evaluation on one shared compiled netlist
 //! * [`server`] — JSON-lines TCP front end
 //! * [`metrics`] — latency histograms, counters
 
@@ -12,5 +14,5 @@ pub mod metrics;
 pub mod router;
 pub mod server;
 
-pub use batcher::{BatchPolicy, Batcher};
+pub use batcher::{Batch, BatchPolicy, Batcher};
 pub use router::{PjrtSpec, Policy, Router};

@@ -1,25 +1,35 @@
 //! Request router: dispatches batches to the combinational-logic engine
 //! and/or the PJRT numeric engine.
 //!
-//! The coordinator's demonstration goal (DESIGN.md §2): the synthesized
-//! fixed-function logic *is* the production inference path — bit-exact
-//! against the quantized NN — while the AOT-compiled XLA executable serves
-//! as the numeric reference. Routing policies:
+//! The coordinator's demonstration goal (`rust/DESIGN.md` §Serving): the
+//! synthesized fixed-function logic *is* the production inference path —
+//! bit-exact against the quantized NN — while the AOT-compiled XLA
+//! executable serves as the numeric reference. Routing policies:
 //!
 //! * `Logic` — everything on the netlist simulator (the paper's artifact)
 //! * `Numeric` — everything on PJRT
 //! * `Compare` — run both, count disagreements, reply from logic
+//!
+//! The logic path is packed end to end: `submit` binarizes the features
+//! into a [`BitVec`](crate::util::bitvec::BitVec), the batcher flushes a
+//! [`PackedBatch`], and the dispatcher hands that straight to one shared
+//! `Arc<CompiledNetlist>` — inline for single-lane-group batches, sharded
+//! across an engine [`ThreadPool`] for larger ones. No per-sample `Vec`
+//! exists between [`Batcher::next_batch`] and the simulator.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::batcher::{BatchPolicy, Batcher, Reply, Request};
+use crate::coordinator::batcher::{Batch, BatchPolicy, Batcher, Reply, Request};
 use crate::coordinator::metrics::Metrics;
-use crate::flow::build::classify_batch;
-use crate::logic::sim::CompiledNetlist;
+use crate::flow::build::classify_packed;
+use crate::logic::sim::{CompiledNetlist, SimScratch};
+use crate::nn::eval::{codes_to_bitvec, quantize_input};
 use crate::nn::model::Model;
 use crate::runtime::PjrtEngine;
+use crate::util::bitvec::PackedBatch;
+use crate::util::threadpool::ThreadPool;
 
 /// Routing policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -69,41 +79,82 @@ impl PjrtSpec {
 pub struct Router {
     batcher: Arc<Batcher>,
     metrics: Arc<Metrics>,
+    model: Arc<Model>,
+    policy: Policy,
     dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Evaluate a packed batch on the logic engine and classify straight from
+/// the packed output words. Batches spanning ≥ 2 lane groups are sharded
+/// across `pool` workers sharing the `Arc<CompiledNetlist>`; smaller ones
+/// run inline on the dispatcher's own scratch.
+fn eval_logic(
+    sim: &Arc<CompiledNetlist>,
+    pool: &Option<ThreadPool>,
+    scratch: &mut SimScratch,
+    inputs: PackedBatch,
+    model: &Model,
+) -> Vec<usize> {
+    let outputs = match pool {
+        Some(p) if inputs.num_groups() >= 2 => {
+            let shared = Arc::new(inputs);
+            CompiledNetlist::run_packed_sharded(sim, p, &shared)
+        }
+        _ => sim.run_packed(&inputs, scratch),
+    };
+    classify_packed(model, &outputs)
+}
+
+/// Clone the retained feature vectors for the numeric engine (only the
+/// numeric/compare policies keep them on the request).
+fn features_of(requests: &[Request]) -> Vec<Vec<f64>> {
+    requests
+        .iter()
+        .map(|r| r.features.clone().expect("numeric path retains features"))
+        .collect()
 }
 
 impl Router {
     /// Start a router over the given engines. `pjrt` may be `None` when
-    /// only the logic path is wanted (e.g. artifacts not built).
+    /// only the logic path is wanted (e.g. artifacts not built). `workers`
+    /// sizes the logic engine's shard pool: with ≥ 2 workers, batches
+    /// spanning multiple 64-sample lane groups are evaluated in parallel on
+    /// one shared compiled netlist.
     pub fn start(
         model: Model,
         netlist: crate::logic::netlist::LutNetlist,
         pjrt: Option<PjrtSpec>,
         policy: Policy,
         batch_policy: BatchPolicy,
+        workers: usize,
     ) -> Router {
-        let batcher = Arc::new(Batcher::new(batch_policy));
+        let model = Arc::new(model);
+        let batcher = Arc::new(Batcher::new(batch_policy, model.input_bits()));
         let metrics = Arc::new(Metrics::new());
         let b = Arc::clone(&batcher);
         let m = Arc::clone(&metrics);
+        let model_for_dispatch = Arc::clone(&model);
         let dispatcher = std::thread::Builder::new()
             .name("nnt-dispatcher".into())
             .spawn(move || {
-                let mut sim = CompiledNetlist::compile(&netlist);
+                let model = model_for_dispatch;
+                let sim = Arc::new(CompiledNetlist::compile(&netlist));
+                let pool = (workers > 1).then(|| ThreadPool::new(workers));
+                let mut scratch = sim.make_scratch();
                 let pjrt: Option<PjrtEngine> = pjrt.map(|s| s.load());
                 while let Some(batch) = b.next_batch() {
                     let t = Instant::now();
-                    let xs: Vec<Vec<f64>> =
-                        batch.iter().map(|r| r.features.clone()).collect();
+                    let Batch { inputs, requests } = batch;
+                    let n = requests.len() as u64;
                     let (preds, engine): (Vec<usize>, &'static str) = match policy {
                         Policy::Logic => {
-                            m.logic_requests.fetch_add(xs.len() as u64, Ordering::Relaxed);
-                            (classify_batch(&model, &mut sim, &xs), "logic")
+                            m.logic_requests.fetch_add(n, Ordering::Relaxed);
+                            (eval_logic(&sim, &pool, &mut scratch, inputs, &model), "logic")
                         }
                         Policy::Numeric => {
                             let e = pjrt.as_ref().expect("numeric policy needs PJRT");
-                            m.numeric_requests
-                                .fetch_add(xs.len() as u64, Ordering::Relaxed);
+                            m.numeric_requests.fetch_add(n, Ordering::Relaxed);
+                            let xs = features_of(&requests);
                             (
                                 e.classify_all(&xs, model.num_classes)
                                     .expect("pjrt inference"),
@@ -111,14 +162,15 @@ impl Router {
                             )
                         }
                         Policy::Compare => {
-                            let logic = classify_batch(&model, &mut sim, &xs);
-                            m.logic_requests.fetch_add(xs.len() as u64, Ordering::Relaxed);
+                            let logic =
+                                eval_logic(&sim, &pool, &mut scratch, inputs, &model);
+                            m.logic_requests.fetch_add(n, Ordering::Relaxed);
                             if let Some(e) = pjrt.as_ref() {
+                                let xs = features_of(&requests);
                                 let num = e
                                     .classify_all(&xs, model.num_classes)
                                     .expect("pjrt inference");
-                                m.numeric_requests
-                                    .fetch_add(xs.len() as u64, Ordering::Relaxed);
+                                m.numeric_requests.fetch_add(n, Ordering::Relaxed);
                                 let dis = logic
                                     .iter()
                                     .zip(&num)
@@ -131,7 +183,7 @@ impl Router {
                     };
                     m.batches.fetch_add(1, Ordering::Relaxed);
                     m.batch_latency.record_ns(t.elapsed().as_nanos() as u64);
-                    for (req, class) in batch.into_iter().zip(preds) {
+                    for (req, class) in requests.into_iter().zip(preds) {
                         let latency = req.enqueued.elapsed();
                         m.request_latency.record_ns(latency.as_nanos() as u64);
                         let _ = req.reply.send(Reply { class, engine, latency });
@@ -139,14 +191,38 @@ impl Router {
                 }
             })
             .expect("spawn dispatcher");
-        Router { batcher, metrics, dispatcher: Some(dispatcher) }
+        Router { batcher, metrics, model, policy, dispatcher: Some(dispatcher) }
     }
 
-    /// Submit one request; returns the receiver for its reply.
+    /// Submit one request; returns the receiver for its reply. Features are
+    /// binarized here — the batcher and engine only ever see packed bits.
+    /// Panics if the feature width does not match the model (callers with
+    /// untrusted input should check [`Router::input_features`] first).
     pub fn submit(&self, features: Vec<f64>) -> std::sync::mpsc::Receiver<Reply> {
         let (tx, rx) = std::sync::mpsc::channel();
-        self.batcher.submit(Request { features, enqueued: Instant::now(), reply: tx });
+        assert_eq!(
+            features.len(),
+            self.model.input_features,
+            "submit: {} features for a {}-feature model",
+            features.len(),
+            self.model.input_features
+        );
+        let bits = if self.policy == Policy::Numeric {
+            // The logic engine never sees a numeric-only batch: skip the
+            // dead quantize + pack work and carry a zeroed placeholder.
+            crate::util::bitvec::BitVec::zeros(self.model.input_bits())
+        } else {
+            let codes = quantize_input(&self.model, &features);
+            codes_to_bitvec(&codes, self.model.input_quant.bits)
+        };
+        let features = (self.policy != Policy::Logic).then_some(features);
+        self.batcher.submit(Request { bits, features, enqueued: Instant::now(), reply: tx });
         rx
+    }
+
+    /// Feature width the model expects (for request validation).
+    pub fn input_features(&self) -> usize {
+        self.model.input_features
     }
 
     /// Metrics handle.
@@ -194,6 +270,7 @@ mod tests {
             None,
             policy,
             BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            2,
         );
         (router, model)
     }
@@ -216,6 +293,36 @@ mod tests {
         let m = router.metrics();
         assert_eq!(m.logic_requests.load(Ordering::Relaxed), 50);
         assert!(m.batches.load(Ordering::Relaxed) >= 7); // 50 / 8
+        router.shutdown();
+    }
+
+    #[test]
+    fn multi_group_batches_use_the_sharded_path() {
+        // max_batch 256 → batches spanning up to 4 lane groups, evaluated on
+        // 4 workers sharing one Arc<CompiledNetlist>.
+        let model = random_model("srv4", 6, &[4, 3], 2, 1, 7);
+        let r = run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None)
+            .unwrap();
+        let router = Router::start(
+            model.clone(),
+            r.circuit.netlist,
+            None,
+            Policy::Logic,
+            BatchPolicy { max_batch: 256, max_wait: Duration::from_millis(2) },
+            4,
+        );
+        let mut rxs = Vec::new();
+        let mut want = Vec::new();
+        for i in 0..300 {
+            let x: Vec<f64> = (0..6).map(|j| ((i * 3 + j) as f64 * 0.21).cos()).collect();
+            want.push(crate::nn::eval::classify(&model, &x));
+            rxs.push(router.submit(x));
+        }
+        for (rx, w) in rxs.into_iter().zip(want) {
+            let reply = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(reply.class, w, "sharded path must match NN exactly");
+        }
+        assert_eq!(router.metrics().logic_requests.load(Ordering::Relaxed), 300);
         router.shutdown();
     }
 

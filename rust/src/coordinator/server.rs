@@ -112,6 +112,15 @@ fn handle_line(
         .map_err(|e| e.to_string())?
         .to_f64_vec()
         .map_err(|e| format!("features: {e}"))?;
+    // Validate the width up front: a wrong-width request must come back as
+    // a protocol error, not a panic inside the serving path.
+    if features.len() != router.input_features() {
+        return Err(format!(
+            "features: expected {} values, got {}",
+            router.input_features(),
+            features.len()
+        ));
+    }
     let rx = router.submit(features);
     let reply = rx
         .recv_timeout(std::time::Duration::from_secs(10))
@@ -144,6 +153,7 @@ mod tests {
             None,
             Policy::Logic,
             BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            2,
         ));
         let (tx, rx) = std::sync::mpsc::channel();
         let r2 = Arc::clone(&router);
@@ -176,6 +186,12 @@ mod tests {
         line.clear();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("error"));
+
+        // wrong feature width → protocol error, session continues
+        conn.write_all(b"{\"features\": [0.1]}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("error") && line.contains("expected 4"), "{line}");
 
         // shutdown
         conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();

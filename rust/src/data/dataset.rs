@@ -16,8 +16,32 @@
 //! deliberately trivial — no compression, no alignment games — so both
 //! sides stay ~50 lines and bugs have nowhere to hide.
 
-use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
+
+/// Dataset I/O error (dependency-free; carries the full message).
+#[derive(Debug, Clone)]
+pub struct DataError(pub String);
+
+impl std::fmt::Display for DataError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for DataError {}
+
+impl From<std::io::Error> for DataError {
+    fn from(e: std::io::Error) -> Self {
+        DataError(e.to_string())
+    }
+}
+
+/// Result alias for dataset I/O.
+pub type Result<T> = std::result::Result<T, DataError>;
+
+fn fail<T>(msg: impl Into<String>) -> Result<T> {
+    Err(DataError(msg.into()))
+}
 
 /// Magic prefix of the file format.
 pub const MAGIC: &[u8; 4] = b"NNTD";
@@ -51,40 +75,45 @@ impl Dataset {
     /// Validate shapes and label ranges.
     pub fn validate(&self) -> Result<()> {
         if self.xs.len() != self.ys.len() {
-            bail!("xs/ys length mismatch");
+            return fail("xs/ys length mismatch");
         }
         for (i, x) in self.xs.iter().enumerate() {
             if x.len() != self.num_features {
-                bail!("sample {i} has {} features, expected {}", x.len(), self.num_features);
+                return fail(format!(
+                    "sample {i} has {} features, expected {}",
+                    x.len(),
+                    self.num_features
+                ));
             }
         }
         if let Some(&y) = self.ys.iter().find(|&&y| y >= self.num_classes) {
-            bail!("label {y} out of range (classes={})", self.num_classes);
+            return fail(format!("label {y} out of range (classes={})", self.num_classes));
         }
         Ok(())
     }
 
     /// Load from the binary format.
     pub fn load(path: &str) -> Result<Dataset> {
-        let mut f = std::fs::File::open(path).with_context(|| format!("open {path}"))?;
+        let mut f =
+            std::fs::File::open(path).map_err(|e| DataError(format!("open {path}: {e}")))?;
         let mut buf = Vec::new();
         f.read_to_end(&mut buf)?;
-        Self::from_bytes(&buf).with_context(|| format!("parse {path}"))
+        Self::from_bytes(&buf).map_err(|e| DataError(format!("parse {path}: {e}")))
     }
 
     /// Parse from bytes.
     pub fn from_bytes(buf: &[u8]) -> Result<Dataset> {
         if buf.len() < 20 {
-            bail!("truncated header");
+            return fail("truncated header");
         }
         if &buf[0..4] != MAGIC {
-            bail!("bad magic (not an NNTD file)");
+            return fail("bad magic (not an NNTD file)");
         }
         let rd_u32 =
             |o: usize| -> u32 { u32::from_le_bytes(buf[o..o + 4].try_into().unwrap()) };
         let version = rd_u32(4);
         if version != VERSION {
-            bail!("unsupported version {version}");
+            return fail(format!("unsupported version {version}"));
         }
         let samples = rd_u32(8) as usize;
         let features = rd_u32(12) as usize;
@@ -92,10 +121,10 @@ impl Dataset {
         let data_bytes = samples
             .checked_mul(features)
             .and_then(|n| n.checked_mul(4))
-            .context("size overflow")?;
+            .ok_or_else(|| DataError("size overflow".into()))?;
         let need = 20 + data_bytes + samples;
         if buf.len() != need {
-            bail!("file size {} != expected {need}", buf.len());
+            return fail(format!("file size {} != expected {need}", buf.len()));
         }
         let mut xs = Vec::with_capacity(samples);
         let mut off = 20;
@@ -135,7 +164,8 @@ impl Dataset {
 
     /// Write to a file.
     pub fn save(&self, path: &str) -> Result<()> {
-        let mut f = std::fs::File::create(path).with_context(|| format!("create {path}"))?;
+        let mut f = std::fs::File::create(path)
+            .map_err(|e| DataError(format!("create {path}: {e}")))?;
         f.write_all(&self.to_bytes())?;
         Ok(())
     }

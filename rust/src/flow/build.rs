@@ -288,7 +288,7 @@ pub fn verify_circuit(
 ) -> Result<(), String> {
     use crate::util::prng::Xoshiro256;
     let mut rng = Xoshiro256::new(seed);
-    let mut sim = crate::logic::sim::CompiledNetlist::compile(&circuit.netlist);
+    let sim = crate::logic::sim::CompiledNetlist::compile(&circuit.netlist);
     let out_bits_per = model.layers.last().unwrap().act.bits;
     for i in 0..n {
         let x: Vec<f64> = (0..model.input_features)
@@ -310,10 +310,11 @@ pub fn verify_circuit(
 }
 
 /// Classify a batch of feature vectors with the logic circuit; returns
-/// predictions (used by accuracy evaluation and the serving engine).
+/// predictions. Offline evaluation path (accuracy sweeps, ablations); the
+/// serving path uses [`classify_packed`] on packed simulator output.
 pub fn classify_batch(
     model: &Model,
-    sim: &mut crate::logic::sim::CompiledNetlist,
+    sim: &crate::logic::sim::CompiledNetlist,
     xs: &[Vec<f64>],
 ) -> Vec<usize> {
     let in_b = model.input_quant.bits;
@@ -331,6 +332,39 @@ pub fn classify_batch(
         .collect()
 }
 
+/// Classify every sample of a packed simulator output batch, decoding the
+/// last layer's activation codes straight from the packed words — no
+/// per-sample buffers anywhere (the serving hot path's reply side).
+/// Tie-breaking matches [`crate::nn::eval::classify_codes`] (first max).
+pub fn classify_packed(
+    model: &Model,
+    outputs: &crate::util::bitvec::PackedBatch,
+) -> Vec<usize> {
+    let q = &model.layers.last().unwrap().act;
+    let out_b = q.bits;
+    debug_assert_eq!(outputs.num_signals(), model.layers.last().unwrap().out_width * out_b);
+    (0..outputs.num_samples())
+        .map(|s| {
+            let mut best = 0usize;
+            let mut best_v = f64::NEG_INFINITY;
+            for n in 0..model.num_classes {
+                let mut code = 0usize;
+                for b in 0..out_b {
+                    if outputs.get(s, n * out_b + b) {
+                        code |= 1 << b;
+                    }
+                }
+                let v = q.value_of(code);
+                if v > best_v {
+                    best_v = v;
+                    best = n;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
 /// Accuracy of the circuit on a labelled dataset.
 pub fn circuit_accuracy(
     model: &Model,
@@ -338,8 +372,8 @@ pub fn circuit_accuracy(
     xs: &[Vec<f64>],
     ys: &[usize],
 ) -> f64 {
-    let mut sim = crate::logic::sim::CompiledNetlist::compile(&circuit.netlist);
-    let preds = classify_batch(model, &mut sim, xs);
+    let sim = crate::logic::sim::CompiledNetlist::compile(&circuit.netlist);
+    let preds = classify_batch(model, &sim, xs);
     let correct = preds.iter().zip(ys).filter(|(p, y)| p == y).count();
     correct as f64 / ys.len().max(1) as f64
 }
@@ -363,7 +397,7 @@ mod tests {
         assert!(r.circuit.check_stages().is_ok());
         assert_eq!(r.neurons, 7);
         // Exhaustive over all 2^5 input-bit patterns (5 features × 1 bit).
-        let mut sim = crate::logic::sim::CompiledNetlist::compile(&r.circuit.netlist);
+        let sim = crate::logic::sim::CompiledNetlist::compile(&r.circuit.netlist);
         for m_bits in 0..1u64 << 5 {
             let in_codes: Vec<usize> =
                 (0..5).map(|i| ((m_bits >> i) & 1) as usize).collect();
@@ -419,7 +453,7 @@ mod tests {
         let r = run_flow(&m, &cfg, Some(&xs)).unwrap();
         // On the observed inputs the circuit must match the NN exactly
         // (DCs only free unobserved patterns).
-        let mut sim = crate::logic::sim::CompiledNetlist::compile(&r.circuit.netlist);
+        let sim = crate::logic::sim::CompiledNetlist::compile(&r.circuit.netlist);
         for x in &xs {
             let in_codes = quantize_input(&m, x);
             let tr = forward_codes(&m, &in_codes);

@@ -15,10 +15,11 @@
 //!   enumerate → ESPRESSO-II → AIG → LUT-map → retime pipeline, verifies
 //!   bit-exactness against the quantized network, evaluates FPGA cost
 //!   (LUTs/FFs/fmax), and serves inference from either the combinational
-//!   netlist (bit-parallel simulator) or the PJRT numeric engine.
+//!   netlist (packed, multi-worker bit-parallel simulator) or the PJRT
+//!   numeric engine.
 //!
-//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See [`rust/DESIGN.md`](../DESIGN.md) for the full system inventory, the
+//! packed serving path, and the dependency/substitution policy.
 
 pub mod baseline;
 pub mod coordinator;

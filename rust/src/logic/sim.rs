@@ -3,18 +3,32 @@
 //! This is the software stand-in for the FPGA fabric: the combinational-
 //! logic inference path the coordinator serves requests from. The netlist is
 //! "compiled" once into flat arrays (signal codes, packed ≤6-input tables as
-//! single `u64`s) and then evaluated 64 samples per pass with pure word
-//! operations — no allocation, no hash lookups, no `TruthTable` indirection
-//! on the hot path. See EXPERIMENTS.md §Perf for the measured speedup over
-//! the naive [`LutNetlist::simulate_words`] path.
+//! single `u64`s, and a levelized evaluation schedule) and then evaluated 64
+//! samples per pass with pure word operations — no allocation, no hash
+//! lookups, no `TruthTable` indirection on the hot path.
+//!
+//! The compiled program is **immutable and shareable**: all evaluation state
+//! lives in an external [`SimScratch`], so a single `Arc<CompiledNetlist>`
+//! can be hit by many worker threads concurrently. Whole batches travel as
+//! [`PackedBatch`]es (one `u64` word per input signal per 64-sample lane
+//! group, lane-group-major), so handing a lane group to the engine is a
+//! slice borrow, not a transpose; [`CompiledNetlist::run_packed_sharded`]
+//! shards the lane groups of a large batch across a
+//! [`ThreadPool`](crate::util::threadpool::ThreadPool). See `rust/DESIGN.md`
+//! §Serving for the measured speedup over the per-sample `Vec<bool>` path.
+
+use std::sync::Arc;
 
 use crate::logic::netlist::{LutNetlist, Sig};
+use crate::util::bitvec::PackedBatch;
+use crate::util::threadpool::ThreadPool;
 
 /// Signal encoding: 0 = const0, 1 = const1, `2+i` = primary input `i`,
 /// `2 + num_inputs + j` = LUT `j`.
 type Code = u32;
 
-/// A netlist compiled for fast repeated evaluation.
+/// A netlist compiled for fast repeated evaluation. Immutable after
+/// [`CompiledNetlist::compile`]; evaluation state lives in [`SimScratch`].
 pub struct CompiledNetlist {
     num_inputs: usize,
     /// Flattened LUT input codes.
@@ -25,8 +39,57 @@ pub struct CompiledNetlist {
     tables: Vec<u64>,
     /// Output codes + inversion flags.
     outputs: Vec<(Code, bool)>,
-    /// Scratch buffer: values for [const0, const1, inputs…, luts…].
-    scratch: Vec<u64>,
+    /// Levelized evaluation schedule: LUT indices grouped by logic level
+    /// (stable within a level, so it is also a valid topological order).
+    schedule: Vec<u32>,
+}
+
+/// Per-worker evaluation state: values for [const0, const1, inputs…, luts…].
+/// Create one per thread via [`CompiledNetlist::make_scratch`] and reuse it
+/// across calls; it is sized for exactly one compiled netlist.
+pub struct SimScratch {
+    vals: Vec<u64>,
+}
+
+/// Broadcast table bit `m` across all 64 lanes.
+#[inline(always)]
+fn lane_mask(table: u64, m: u32) -> u64 {
+    0u64.wrapping_sub((table >> m) & 1)
+}
+
+/// Specialized k = 1 Shannon fold over the packed table.
+#[inline(always)]
+fn fold1(t: u64, s0: u64) -> u64 {
+    (!s0 & lane_mask(t, 0)) | (s0 & lane_mask(t, 1))
+}
+
+/// Specialized k = 2 Shannon fold over the packed table.
+#[inline(always)]
+fn fold2(t: u64, s0: u64, s1: u64) -> u64 {
+    let v0 = (!s0 & lane_mask(t, 0)) | (s0 & lane_mask(t, 1));
+    let v1 = (!s0 & lane_mask(t, 2)) | (s0 & lane_mask(t, 3));
+    (!s1 & v0) | (s1 & v1)
+}
+
+/// Shannon fold for k = 3..6 over a fixed-width table expansion (`W = 2^k`).
+/// The constant bounds let the compiler fully unroll each arity, replacing
+/// the old 64-entry mux ladder whose width was only known at run time.
+#[inline(always)]
+fn fold_table<const W: usize>(t: u64, sel: &[u64]) -> u64 {
+    debug_assert_eq!(W, 1usize << sel.len());
+    let mut v = [0u64; W];
+    for (m, vm) in v.iter_mut().enumerate() {
+        *vm = lane_mask(t, m as u32);
+    }
+    let mut width = W;
+    for &s in sel.iter().rev() {
+        width >>= 1;
+        let (lo, hi) = v.split_at_mut(width);
+        for (a, &b) in lo.iter_mut().zip(hi.iter()) {
+            *a = (!s & *a) | (s & b);
+        }
+    }
+    v[0]
 }
 
 impl CompiledNetlist {
@@ -59,14 +122,18 @@ impl CompiledNetlist {
             tables.push(t);
         }
         let outputs = nl.outputs.iter().map(|(s, inv)| (code_of(s), *inv)).collect();
-        let scratch = vec![0u64; 2 + nl.num_inputs + nl.luts.len()];
+        // Levelized schedule: evaluate level by level. The stable sort keeps
+        // the (already topological) index order inside each level.
+        let levels = nl.levels();
+        let mut schedule: Vec<u32> = (0..nl.luts.len() as u32).collect();
+        schedule.sort_by_key(|&j| levels[j as usize]);
         CompiledNetlist {
             num_inputs: nl.num_inputs,
             lut_inputs,
             offsets,
             tables,
             outputs,
-            scratch,
+            schedule,
         }
     }
 
@@ -80,63 +147,150 @@ impl CompiledNetlist {
         self.outputs.len()
     }
 
+    /// Allocate evaluation state for this netlist (one per worker thread).
+    pub fn make_scratch(&self) -> SimScratch {
+        SimScratch { vals: vec![0u64; 2 + self.num_inputs + self.tables.len()] }
+    }
+
     /// Evaluate 64 samples at once. `inputs[i]` = word of input `i`;
     /// `out[j]` receives the word of output `j`.
-    pub fn run_words(&mut self, inputs: &[u64], out: &mut [u64]) {
-        debug_assert_eq!(inputs.len(), self.num_inputs);
-        debug_assert_eq!(out.len(), self.outputs.len());
+    ///
+    /// Widths are checked with real assertions (not `debug_assert!`): a
+    /// wrong-width request must fail loudly in release builds too, never
+    /// silently read garbage.
+    pub fn run_words(&self, scratch: &mut SimScratch, inputs: &[u64], out: &mut [u64]) {
+        assert_eq!(
+            inputs.len(),
+            self.num_inputs,
+            "run_words: {} input words for a {}-input netlist",
+            inputs.len(),
+            self.num_inputs
+        );
+        assert_eq!(
+            out.len(),
+            self.outputs.len(),
+            "run_words: {} output words for a {}-output netlist",
+            out.len(),
+            self.outputs.len()
+        );
         let ni = self.num_inputs;
-        self.scratch[0] = 0;
-        self.scratch[1] = !0u64;
-        self.scratch[2..2 + ni].copy_from_slice(inputs);
-        let nluts = self.tables.len();
-        for j in 0..nluts {
+        let vals = &mut scratch.vals;
+        assert_eq!(
+            vals.len(),
+            2 + ni + self.tables.len(),
+            "run_words: scratch was built for a different netlist"
+        );
+        vals[0] = 0;
+        vals[1] = !0u64;
+        vals[2..2 + ni].copy_from_slice(inputs);
+        for &j in &self.schedule {
+            let j = j as usize;
             let lo = self.offsets[j] as usize;
             let hi = self.offsets[j + 1] as usize;
-            let k = hi - lo;
             let table = self.tables[j];
-            // Shannon mux ladder over input words: expand table bits by
-            // halves. Unrolled per arity for the common cases.
-            let v = match k {
-                0 => {
-                    if table & 1 == 1 {
-                        !0u64
-                    } else {
-                        0
-                    }
-                }
-                _ => {
-                    // Iterative halving: tbl(2^k entries) folded by inputs
-                    // from the top variable down.
-                    let mut vals = [0u64; 64];
-                    let span = 1usize << k;
-                    for (m, v) in vals.iter_mut().enumerate().take(span) {
-                        *v = if (table >> m) & 1 == 1 { !0u64 } else { 0 };
-                    }
-                    let mut width = span;
-                    for bit in (0..k).rev() {
-                        let sel = self.scratch[self.lut_inputs[lo + bit] as usize];
-                        width /= 2;
-                        for m in 0..width {
-                            let w0 = vals[m];
-                            let w1 = vals[m + width];
-                            vals[m] = (!sel & w0) | (sel & w1);
-                        }
-                    }
-                    vals[0]
-                }
+            let mut sel = [0u64; 6];
+            for (s, &code) in sel.iter_mut().zip(&self.lut_inputs[lo..hi]) {
+                *s = vals[code as usize];
+            }
+            vals[2 + ni + j] = match hi - lo {
+                0 => lane_mask(table, 0),
+                1 => fold1(table, sel[0]),
+                2 => fold2(table, sel[0], sel[1]),
+                3 => fold_table::<8>(table, &sel[..3]),
+                4 => fold_table::<16>(table, &sel[..4]),
+                5 => fold_table::<32>(table, &sel[..5]),
+                _ => fold_table::<64>(table, &sel[..6]),
             };
-            self.scratch[2 + ni + j] = v;
         }
         for (o, (code, inv)) in out.iter_mut().zip(&self.outputs) {
-            *o = self.scratch[*code as usize] ^ if *inv { !0u64 } else { 0 };
+            *o = vals[*code as usize] ^ if *inv { !0u64 } else { 0 };
         }
+    }
+
+    /// Evaluate lane groups `g0..g1` of a packed batch, writing output words
+    /// group-major into `out` (`(g1 - g0) * num_outputs()` words). This is
+    /// the shard body of [`CompiledNetlist::run_packed_sharded`].
+    pub fn run_groups(
+        &self,
+        batch: &PackedBatch,
+        g0: usize,
+        g1: usize,
+        scratch: &mut SimScratch,
+        out: &mut [u64],
+    ) {
+        assert_eq!(
+            batch.num_signals(),
+            self.num_inputs,
+            "run_groups: batch packs {} signals for a {}-input netlist",
+            batch.num_signals(),
+            self.num_inputs
+        );
+        assert!(g0 <= g1 && g1 <= batch.num_groups(), "run_groups: bad group range");
+        let no = self.outputs.len();
+        assert_eq!(out.len(), (g1 - g0) * no, "run_groups: output slice width");
+        for g in g0..g1 {
+            let dst = &mut out[(g - g0) * no..(g - g0 + 1) * no];
+            self.run_words(scratch, batch.group_words(g), dst);
+        }
+    }
+
+    /// Evaluate a whole packed batch on the calling thread; returns the
+    /// packed output batch (tail lanes masked).
+    pub fn run_packed(&self, batch: &PackedBatch, scratch: &mut SimScratch) -> PackedBatch {
+        let groups = batch.num_groups();
+        let no = self.outputs.len();
+        let mut words = vec![0u64; groups * no];
+        self.run_groups(batch, 0, groups, scratch, &mut words);
+        PackedBatch::from_group_major_words(no, batch.num_samples(), words)
+    }
+
+    /// Evaluate a packed batch with its lane groups sharded across a worker
+    /// pool, every worker sharing one `Arc<CompiledNetlist>` with its own
+    /// [`SimScratch`]. Falls back to the inline path when the batch has a
+    /// single lane group (or the pool a single worker). Associated function
+    /// (`&Arc<Self>` is not a valid method receiver on stable Rust):
+    /// `CompiledNetlist::run_packed_sharded(&sim, &pool, &batch)`.
+    pub fn run_packed_sharded(
+        this: &Arc<Self>,
+        pool: &ThreadPool,
+        batch: &Arc<PackedBatch>,
+    ) -> PackedBatch {
+        let groups = batch.num_groups();
+        let shards = pool.size().min(groups);
+        if shards <= 1 {
+            let mut scratch = this.make_scratch();
+            return this.run_packed(batch, &mut scratch);
+        }
+        let per = groups.div_ceil(shards);
+        let ranges: Vec<(usize, usize)> = (0..shards)
+            .map(|i| (i * per, ((i + 1) * per).min(groups)))
+            .filter(|&(a, b)| a < b)
+            .collect();
+        let sim = Arc::clone(this);
+        let shared = Arc::clone(batch);
+        let no = this.outputs.len();
+        let chunks = pool.par_map(ranges, move |(g0, g1)| {
+            let mut scratch = sim.make_scratch();
+            let mut out = vec![0u64; (g1 - g0) * sim.num_outputs()];
+            sim.run_groups(&shared, g0, g1, &mut scratch, &mut out);
+            out
+        });
+        let mut words = Vec::with_capacity(groups * no);
+        for c in &chunks {
+            words.extend_from_slice(c);
+        }
+        PackedBatch::from_group_major_words(no, batch.num_samples(), words)
     }
 
     /// Evaluate a batch of arbitrary size: `samples[s][i]` = input `i` of
     /// sample `s`; returns `result[s][j]` = output `j` of sample `s`.
-    pub fn run_batch(&mut self, samples: &[Vec<bool>]) -> Vec<Vec<bool>> {
+    ///
+    /// Legacy per-sample path, kept for offline evaluation and as the
+    /// baseline the packed path is benchmarked against; the serving hot path
+    /// uses [`CompiledNetlist::run_packed`] / `run_packed_sharded`.
+    pub fn run_batch(&self, samples: &[Vec<bool>]) -> Vec<Vec<bool>> {
         let n = samples.len();
+        let mut scratch = self.make_scratch();
         let mut results = vec![vec![false; self.outputs.len()]; n];
         let mut in_words = vec![0u64; self.num_inputs];
         let mut out_words = vec![0u64; self.outputs.len()];
@@ -148,14 +302,21 @@ impl CompiledNetlist {
             }
             for lane in 0..lanes {
                 let s = &samples[base + lane];
-                debug_assert_eq!(s.len(), self.num_inputs);
+                assert_eq!(
+                    s.len(),
+                    self.num_inputs,
+                    "run_batch: sample {} has {} bits for a {}-input netlist",
+                    base + lane,
+                    s.len(),
+                    self.num_inputs
+                );
                 for (i, &b) in s.iter().enumerate() {
                     if b {
                         in_words[i] |= 1 << lane;
                     }
                 }
             }
-            self.run_words(&in_words, &mut out_words);
+            self.run_words(&mut scratch, &in_words, &mut out_words);
             for lane in 0..lanes {
                 for (j, w) in out_words.iter().enumerate() {
                     results[base + lane][j] = (w >> lane) & 1 == 1;
@@ -204,12 +365,13 @@ mod tests {
     fn compiled_matches_reference_simulation() {
         for seed in 0..10u64 {
             let nl = random_netlist(seed, 8, 20);
-            let mut c = CompiledNetlist::compile(&nl);
+            let c = CompiledNetlist::compile(&nl);
+            let mut scratch = c.make_scratch();
             let mut rng = Xoshiro256::new(seed ^ 0xF00);
             let inputs: Vec<u64> = (0..8).map(|_| rng.next_u64()).collect();
             let want = nl.simulate_words(&inputs);
             let mut got = vec![0u64; want.len()];
-            c.run_words(&inputs, &mut got);
+            c.run_words(&mut scratch, &inputs, &mut got);
             assert_eq!(got, want, "seed={seed}");
         }
     }
@@ -217,7 +379,7 @@ mod tests {
     #[test]
     fn run_batch_roundtrip() {
         let nl = random_netlist(77, 6, 15);
-        let mut c = CompiledNetlist::compile(&nl);
+        let c = CompiledNetlist::compile(&nl);
         let mut rng = Xoshiro256::new(123);
         // deliberately non-multiple-of-64 batch
         let samples: Vec<Vec<bool>> = (0..150)
@@ -241,9 +403,10 @@ mod tests {
         let a = nl.add_lut(vec![], t);
         nl.add_output(a, false);
         nl.add_output(a, true);
-        let mut c = CompiledNetlist::compile(&nl);
+        let c = CompiledNetlist::compile(&nl);
+        let mut scratch = c.make_scratch();
         let mut out = vec![0u64; 2];
-        c.run_words(&[0u64], &mut out);
+        c.run_words(&mut scratch, &[0u64], &mut out);
         assert_eq!(out[0], !0u64);
         assert_eq!(out[1], 0u64);
     }
@@ -255,7 +418,8 @@ mod tests {
         let mut nl = LutNetlist::new(6);
         let sig = nl.add_lut((0..6).map(Sig::Input).collect(), tt.clone());
         nl.add_output(sig, false);
-        let mut c = CompiledNetlist::compile(&nl);
+        let c = CompiledNetlist::compile(&nl);
+        let mut scratch = c.make_scratch();
         // exhaustive over all 64 assignments, packed in one word per input
         let inputs: Vec<u64> = (0..6)
             .map(|i| {
@@ -269,9 +433,73 @@ mod tests {
             })
             .collect();
         let mut out = vec![0u64];
-        c.run_words(&inputs, &mut out);
+        c.run_words(&mut scratch, &inputs, &mut out);
         for m in 0..64u64 {
             assert_eq!((out[0] >> m) & 1 == 1, tt.eval(m), "m={m}");
         }
+    }
+
+    #[test]
+    fn run_packed_matches_run_batch() {
+        let nl = random_netlist(5, 7, 18);
+        let c = CompiledNetlist::compile(&nl);
+        let mut rng = Xoshiro256::new(9);
+        // non-multiple-of-64 so the tail group is partial
+        let samples: Vec<Vec<bool>> = (0..201)
+            .map(|_| (0..7).map(|_| rng.bernoulli(0.5)).collect())
+            .collect();
+        let mut packed = PackedBatch::with_capacity(7, samples.len());
+        for s in &samples {
+            packed.push_sample_bools(s);
+        }
+        let mut scratch = c.make_scratch();
+        let out = c.run_packed(&packed, &mut scratch);
+        let want = c.run_batch(&samples);
+        assert_eq!(out.num_samples(), samples.len());
+        for (s, w) in want.iter().enumerate() {
+            for (j, &b) in w.iter().enumerate() {
+                assert_eq!(out.get(s, j), b, "sample {s} output {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_matches_inline_across_worker_counts() {
+        let nl = random_netlist(11, 6, 22);
+        let c = Arc::new(CompiledNetlist::compile(&nl));
+        let mut rng = Xoshiro256::new(21);
+        let samples: Vec<Vec<bool>> = (0..300)
+            .map(|_| (0..6).map(|_| rng.bernoulli(0.5)).collect())
+            .collect();
+        let mut packed = PackedBatch::with_capacity(6, samples.len());
+        for s in &samples {
+            packed.push_sample_bools(s);
+        }
+        let batch = Arc::new(packed);
+        let mut scratch = c.make_scratch();
+        let inline = c.run_packed(&batch, &mut scratch);
+        for workers in [1usize, 2, 4] {
+            let pool = ThreadPool::new(workers);
+            let sharded = CompiledNetlist::run_packed_sharded(&c, &pool, &batch);
+            assert_eq!(sharded, inline, "workers={workers}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "run_batch: sample 0 has 3 bits")]
+    fn wrong_width_sample_is_a_real_error() {
+        let nl = random_netlist(3, 6, 10);
+        let c = CompiledNetlist::compile(&nl);
+        let _ = c.run_batch(&[vec![false; 3]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "scratch was built for a different netlist")]
+    fn mismatched_scratch_is_a_real_error() {
+        let a = CompiledNetlist::compile(&random_netlist(1, 6, 10));
+        let b = CompiledNetlist::compile(&random_netlist(2, 6, 12));
+        let mut scratch = b.make_scratch();
+        let mut out = vec![0u64; a.num_outputs()];
+        a.run_words(&mut scratch, &[0u64; 6], &mut out);
     }
 }

@@ -34,7 +34,8 @@ pub fn exhaustive_netlist_vs_tables(nl: &LutNetlist, tables: &[TruthTable]) -> E
     for t in tables {
         assert_eq!(t.nvars(), nl.num_inputs);
     }
-    let mut sim = crate::logic::sim::CompiledNetlist::compile(nl);
+    let sim = crate::logic::sim::CompiledNetlist::compile(nl);
+    let mut scratch = sim.make_scratch();
     let mut in_words = vec![0u64; nl.num_inputs];
     let mut out_words = vec![0u64; nl.outputs.len()];
     let total = 1u64 << nl.num_inputs;
@@ -49,7 +50,7 @@ pub fn exhaustive_netlist_vs_tables(nl: &LutNetlist, tables: &[TruthTable]) -> E
                 }
             }
         }
-        sim.run_words(&in_words, &mut out_words);
+        sim.run_words(&mut scratch, &in_words, &mut out_words);
         for lane in 0..lanes {
             let m = base + lane as u64;
             for (j, t) in tables.iter().enumerate() {
@@ -94,7 +95,7 @@ pub fn sampled_netlist_vs_fn(
     seed: u64,
 ) -> EquivResult {
     let mut rng = Xoshiro256::new(seed);
-    let mut sim = crate::logic::sim::CompiledNetlist::compile(nl);
+    let sim = crate::logic::sim::CompiledNetlist::compile(nl);
     let batch: Vec<Vec<bool>> = (0..samples)
         .map(|_| (0..nl.num_inputs).map(|_| rng.bernoulli(0.5)).collect())
         .collect();

@@ -4,7 +4,7 @@
 //! nullanet flow    --arch jsc-s [--no-espresso] [--no-retime] [--jobs N]
 //! nullanet table1  [--test-set artifacts/jsc_test.bin] [--quick]
 //! nullanet verify  --arch jsc-s [--samples 2000]
-//! nullanet serve   --arch jsc-s --addr 127.0.0.1:7878 --engine logic|pjrt|compare
+//! nullanet serve   --arch jsc-s --addr 127.0.0.1:7878 --engine logic|pjrt|compare [--workers N]
 //! nullanet emit    --arch jsc-s --format blif|verilog --out file
 //! nullanet info    --arch jsc-s
 //! ```
@@ -193,7 +193,7 @@ fn cmd_verify(args: &Args) -> Result<(), String> {
 fn cmd_serve(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "arch", "model", "artifacts", "addr", "engine", "max-batch", "max-wait-us",
-        "jobs",
+        "jobs", "workers",
     ])?;
     let model = load_model(args)?;
     let cfg = FlowConfig {
@@ -223,7 +223,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             args.get_usize("max-wait-us", 200)? as u64
         ),
     };
-    let router = Arc::new(Router::start(model, r.circuit.netlist, pjrt, policy, bp));
+    // Logic-engine shard workers: batches spanning several 64-sample lane
+    // groups are evaluated in parallel on one shared compiled netlist.
+    let default_workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(4);
+    let workers = args.get_usize("workers", default_workers)?;
+    let router =
+        Arc::new(Router::start(model, r.circuit.netlist, pjrt, policy, bp, workers));
     let addr = args.get_str("addr", "127.0.0.1:7878");
     println!("serving on {addr} (policy {policy:?}; send {{\"cmd\":\"shutdown\"}} to stop)");
     nullanet_tiny::coordinator::server::serve(Arc::clone(&router), &addr, None)

@@ -113,6 +113,26 @@ pub fn codes_to_bits(codes: &[usize], bits_per_code: usize) -> Vec<bool> {
     out
 }
 
+/// Encode input codes straight into a packed [`BitVec`] (same wire-order
+/// contract as [`codes_to_bits`], without the intermediate `Vec<bool>`) —
+/// the serving path's binarization step.
+pub fn codes_to_bitvec(
+    codes: &[usize],
+    bits_per_code: usize,
+) -> crate::util::bitvec::BitVec {
+    let mut v = crate::util::bitvec::BitVec::zeros(codes.len() * bits_per_code);
+    let mut i = 0;
+    for &c in codes {
+        for b in 0..bits_per_code {
+            if (c >> b) & 1 == 1 {
+                v.set(i, true);
+            }
+            i += 1;
+        }
+    }
+    v
+}
+
 /// Decode a bit slice back into codes (inverse of [`codes_to_bits`]).
 pub fn bits_to_codes(bits: &[bool], bits_per_code: usize) -> Vec<usize> {
     assert_eq!(bits.len() % bits_per_code, 0);
@@ -194,6 +214,17 @@ mod tests {
         assert_eq!(bits_to_codes(&bits, 2), codes);
         // LSB-first contract: code 2 = bits [0,1]
         assert_eq!(&bits[4..6], &[false, true]);
+    }
+
+    #[test]
+    fn bitvec_encoding_matches_bool_encoding() {
+        let codes = vec![5usize, 0, 3, 7, 2, 6];
+        let bools = codes_to_bits(&codes, 3);
+        let packed = codes_to_bitvec(&codes, 3);
+        assert_eq!(packed.len(), bools.len());
+        for (i, &b) in bools.iter().enumerate() {
+            assert_eq!(packed.get(i), b, "bit {i}");
+        }
     }
 
     #[test]

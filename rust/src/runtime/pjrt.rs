@@ -3,40 +3,57 @@
 //! The Rust side of the L2→L3 bridge: `artifacts/<arch>.hlo.txt` (HLO text —
 //! see `python/compile/aot.py` for why text, not serialized protos) is
 //! parsed, compiled once by the XLA CPU backend, and executed from the
-//! request path with zero Python anywhere. The exported computation is the
-//! full quantized inference function — standardize → input quant → masked
-//! dense layers (the Pallas kernel's HLO) → activation quantizers — over a
-//! fixed batch of [`Self::batch`] samples; smaller batches are padded.
+//! request path with zero Python anywhere.
+//!
+//! The XLA/PJRT bindings (`xla` crate) are not available in the offline
+//! build environment, so the **default build compiles a stub** whose
+//! [`PjrtEngine::load`] fails with a clean error; every test and serving
+//! path that needs the numeric engine is gated on the artifact files and
+//! skips gracefully. The real backend lives behind the `xla` cargo feature
+//! (declare the `xla` dependency when enabling it) and is source-identical
+//! to the stub's API, so nothing upstream changes.
 
-use anyhow::{bail, Context, Result};
+use std::fmt;
 
-/// A compiled XLA executable plus its I/O signature.
+/// Runtime-layer error (keeps the crate dependency-free by default).
+#[derive(Debug, Clone)]
+pub struct RuntimeError(pub String);
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Result alias for the runtime layer.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(RuntimeError(msg.into()))
+}
+
+/// A compiled XLA executable plus its I/O signature (stub flavour: carries
+/// the signature but can never be constructed without the `xla` feature).
+#[cfg(not(feature = "xla"))]
 pub struct PjrtEngine {
-    exe: xla::PjRtLoadedExecutable,
-    /// Batch size baked into the artifact (64 in the default export).
     batch: usize,
-    /// Input feature count.
     in_features: usize,
-    /// Output width (last-layer neurons).
     out_width: usize,
-    /// Human-readable platform string.
     platform: String,
 }
 
+#[cfg(not(feature = "xla"))]
 impl PjrtEngine {
-    /// Load and compile an HLO-text artifact.
+    /// Load and compile an HLO-text artifact. Always fails in the default
+    /// build: the XLA backend is not compiled in.
     pub fn load(path: &str, batch: usize, in_features: usize, out_width: usize) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let platform = format!(
-            "{} ({} devices)",
-            client.platform_name(),
-            client.device_count()
-        );
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parse HLO text {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).context("XLA compile")?;
-        Ok(PjrtEngine { exe, batch, in_features, out_width, platform })
+        let _ = (batch, in_features, out_width);
+        err(format!(
+            "PJRT backend unavailable: built without the `xla` feature \
+             (cannot load {path})"
+        ))
     }
 
     /// Platform description.
@@ -49,6 +66,11 @@ impl PjrtEngine {
         self.batch
     }
 
+    /// Output width (last-layer neurons).
+    pub fn out_width(&self) -> usize {
+        self.out_width
+    }
+
     /// Run one padded batch: `xs` holds ≤ batch feature vectors; returns one
     /// output vector per input sample.
     pub fn infer(&self, xs: &[Vec<f64>]) -> Result<Vec<Vec<f32>>> {
@@ -56,41 +78,131 @@ impl PjrtEngine {
             return Ok(Vec::new());
         }
         if xs.len() > self.batch {
-            bail!("batch {} exceeds compiled size {}", xs.len(), self.batch);
+            return err(format!("batch {} exceeds compiled size {}", xs.len(), self.batch));
         }
-        let mut flat = vec![0f32; self.batch * self.in_features];
         for (i, x) in xs.iter().enumerate() {
             if x.len() != self.in_features {
-                bail!("sample {i} has {} features, expected {}", x.len(), self.in_features);
-            }
-            for (j, &v) in x.iter().enumerate() {
-                flat[i * self.in_features + j] = v as f32;
+                return err(format!(
+                    "sample {i} has {} features, expected {}",
+                    x.len(),
+                    self.in_features
+                ));
             }
         }
-        let lit = xla::Literal::vec1(&flat)
-            .reshape(&[self.batch as i64, self.in_features as i64])
-            .context("reshape input literal")?;
-        let result = self.exe.execute::<xla::Literal>(&[lit]).context("execute")?[0][0]
-            .to_literal_sync()
-            .context("fetch result")?;
-        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
-        let out = result.to_tuple1().context("unwrap tuple")?;
-        let values = out.to_vec::<f32>().context("read f32s")?;
-        if values.len() != self.batch * self.out_width {
-            bail!(
-                "output size {} != batch {} × width {}",
-                values.len(),
-                self.batch,
-                self.out_width
-            );
-        }
-        Ok(xs
-            .iter()
-            .enumerate()
-            .map(|(i, _)| values[i * self.out_width..(i + 1) * self.out_width].to_vec())
-            .collect())
+        err("PJRT backend unavailable: built without the `xla` feature")
+    }
+}
+
+#[cfg(feature = "xla")]
+pub use xla_backend::PjrtEngine;
+
+/// The real XLA-backed engine. Only compiled with `--features xla`, which
+/// additionally requires the `xla` crate as a dependency.
+#[cfg(feature = "xla")]
+mod xla_backend {
+    use super::{err, Result, RuntimeError};
+
+    pub struct PjrtEngine {
+        exe: xla::PjRtLoadedExecutable,
+        batch: usize,
+        in_features: usize,
+        out_width: usize,
+        platform: String,
     }
 
+    impl PjrtEngine {
+        pub fn load(
+            path: &str,
+            batch: usize,
+            in_features: usize,
+            out_width: usize,
+        ) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| RuntimeError(format!("create PJRT CPU client: {e:?}")))?;
+            let platform = format!(
+                "{} ({} devices)",
+                client.platform_name(),
+                client.device_count()
+            );
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| RuntimeError(format!("parse HLO text {path}: {e:?}")))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| RuntimeError(format!("XLA compile: {e:?}")))?;
+            Ok(PjrtEngine { exe, batch, in_features, out_width, platform })
+        }
+
+        pub fn platform(&self) -> &str {
+            &self.platform
+        }
+
+        pub fn batch(&self) -> usize {
+            self.batch
+        }
+
+        pub fn out_width(&self) -> usize {
+            self.out_width
+        }
+
+        pub fn infer(&self, xs: &[Vec<f64>]) -> Result<Vec<Vec<f32>>> {
+            if xs.is_empty() {
+                return Ok(Vec::new());
+            }
+            if xs.len() > self.batch {
+                return err(format!(
+                    "batch {} exceeds compiled size {}",
+                    xs.len(),
+                    self.batch
+                ));
+            }
+            let mut flat = vec![0f32; self.batch * self.in_features];
+            for (i, x) in xs.iter().enumerate() {
+                if x.len() != self.in_features {
+                    return err(format!(
+                        "sample {i} has {} features, expected {}",
+                        x.len(),
+                        self.in_features
+                    ));
+                }
+                for (j, &v) in x.iter().enumerate() {
+                    flat[i * self.in_features + j] = v as f32;
+                }
+            }
+            let lit = xla::Literal::vec1(&flat)
+                .reshape(&[self.batch as i64, self.in_features as i64])
+                .map_err(|e| RuntimeError(format!("reshape input literal: {e:?}")))?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[lit])
+                .map_err(|e| RuntimeError(format!("execute: {e:?}")))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| RuntimeError(format!("fetch result: {e:?}")))?;
+            // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+            let out = result
+                .to_tuple1()
+                .map_err(|e| RuntimeError(format!("unwrap tuple: {e:?}")))?;
+            let values = out
+                .to_vec::<f32>()
+                .map_err(|e| RuntimeError(format!("read f32s: {e:?}")))?;
+            if values.len() != self.batch * self.out_width {
+                return err(format!(
+                    "output size {} != batch {} × width {}",
+                    values.len(),
+                    self.batch,
+                    self.out_width
+                ));
+            }
+            Ok(xs
+                .iter()
+                .enumerate()
+                .map(|(i, _)| values[i * self.out_width..(i + 1) * self.out_width].to_vec())
+                .collect())
+        }
+    }
+}
+
+impl PjrtEngine {
     /// Classify: argmax over the first `num_classes` outputs.
     pub fn classify(&self, xs: &[Vec<f64>], num_classes: usize) -> Result<Vec<usize>> {
         let outs = self.infer(xs)?;
@@ -115,9 +227,26 @@ impl PjrtEngine {
     /// Classify an arbitrary-size set by chunking into compiled batches.
     pub fn classify_all(&self, xs: &[Vec<f64>], num_classes: usize) -> Result<Vec<usize>> {
         let mut out = Vec::with_capacity(xs.len());
-        for chunk in xs.chunks(self.batch) {
+        for chunk in xs.chunks(self.batch()) {
             out.extend(self.classify(chunk, num_classes)?);
         }
         Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg(not(feature = "xla"))]
+    fn stub_load_is_a_clean_error() {
+        let e = match PjrtEngine::load("artifacts/anything.hlo.txt", 64, 16, 5) {
+            Err(e) => e,
+            Ok(_) => panic!("stub build must not load artifacts"),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("PJRT backend unavailable"), "{msg}");
+        assert!(msg.contains("artifacts/anything.hlo.txt"), "{msg}");
     }
 }

@@ -3,7 +3,7 @@
 //! `cargo bench` targets in `rust/benches/` use `harness = false` and drive
 //! this module directly. The harness does warmup, adaptive iteration-count
 //! selection targeting a minimum measurement window, and reports
-//! median/mean/p95 over sample batches — the statistics EXPERIMENTS.md
+//! median/mean/p95 over sample batches — the statistics `rust/DESIGN.md` §6
 //! quotes. Results can also be dumped as JSON for the §Perf log.
 
 use std::time::{Duration, Instant};

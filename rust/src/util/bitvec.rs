@@ -202,6 +202,146 @@ impl BitVec {
     }
 }
 
+/// A batch of samples packed for the word-parallel simulator: one `u64`
+/// word per signal per 64-sample *lane group*, stored lane-group-major so
+/// the words of group `g` form exactly the `inputs` slice
+/// [`crate::logic::sim::CompiledNetlist::run_words`] consumes — handing a
+/// group to the engine is a slice borrow, not a transpose, and a contiguous
+/// range of groups is a shard for a worker thread.
+///
+/// Sample `s` lives in group `s / 64` at lane `s % 64`; bit `(s, signal)`
+/// is `words[(s / 64) * signals + signal] >> (s % 64) & 1`. Lanes at or
+/// beyond `num_samples` in the last group are kept zero (canonical for
+/// equality).
+#[derive(Clone, PartialEq, Eq)]
+pub struct PackedBatch {
+    signals: usize,
+    samples: usize,
+    /// `words[g * signals + i]` = 64 lanes of signal `i` in group `g`.
+    words: Vec<u64>,
+}
+
+impl std::fmt::Debug for PackedBatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PackedBatch[{} samples × {} signals, {} groups]",
+            self.samples,
+            self.signals,
+            self.num_groups()
+        )
+    }
+}
+
+impl PackedBatch {
+    /// Empty batch over `signals` input signals, with room reserved for
+    /// `max_samples` samples.
+    pub fn with_capacity(signals: usize, max_samples: usize) -> Self {
+        PackedBatch {
+            signals,
+            samples: 0,
+            words: Vec::with_capacity(max_samples.div_ceil(64) * signals),
+        }
+    }
+
+    /// Rebuild from raw group-major output words (as produced by the
+    /// simulator). Tail lanes of the last group are masked to keep equality
+    /// canonical.
+    pub fn from_group_major_words(signals: usize, samples: usize, mut words: Vec<u64>) -> Self {
+        let groups = samples.div_ceil(64);
+        assert_eq!(words.len(), groups * signals, "word count must be groups × signals");
+        let rem = samples & 63;
+        if rem != 0 {
+            let mask = (1u64 << rem) - 1;
+            for w in &mut words[(groups - 1) * signals..] {
+                *w &= mask;
+            }
+        }
+        PackedBatch { signals, samples, words }
+    }
+
+    /// Signals per sample.
+    #[inline]
+    pub fn num_signals(&self) -> usize {
+        self.signals
+    }
+
+    /// Samples currently packed.
+    #[inline]
+    pub fn num_samples(&self) -> usize {
+        self.samples
+    }
+
+    /// True when no samples are packed.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.samples == 0
+    }
+
+    /// Number of 64-sample lane groups (the shardable unit).
+    #[inline]
+    pub fn num_groups(&self) -> usize {
+        self.samples.div_ceil(64)
+    }
+
+    /// The `signals` input words of lane group `g` — exactly the slice the
+    /// simulator's word pass consumes.
+    #[inline]
+    pub fn group_words(&self, g: usize) -> &[u64] {
+        &self.words[g * self.signals..(g + 1) * self.signals]
+    }
+
+    /// Raw word storage (group-major).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Read bit (`sample`, `signal`).
+    #[inline]
+    pub fn get(&self, sample: usize, signal: usize) -> bool {
+        assert!(sample < self.samples && signal < self.signals);
+        (self.words[(sample >> 6) * self.signals + signal] >> (sample & 63)) & 1 == 1
+    }
+
+    /// Append one sample from a packed [`BitVec`] (`bits.len()` must equal
+    /// the signal count). Allocation-free apart from the amortized per-group
+    /// extension of the word storage.
+    pub fn push_sample(&mut self, bits: &BitVec) {
+        assert_eq!(bits.len(), self.signals, "sample width must match signal count");
+        let (g, lane) = (self.samples >> 6, self.samples & 63);
+        if lane == 0 {
+            self.words.resize((g + 1) * self.signals, 0);
+        }
+        self.samples += 1;
+        let base = g * self.signals;
+        for (wi, &w) in bits.words().iter().enumerate() {
+            let mut w = w;
+            while w != 0 {
+                let b = w.trailing_zeros() as usize;
+                self.words[base + (wi << 6) + b] |= 1 << lane;
+                w &= w - 1;
+            }
+        }
+    }
+
+    /// Append one sample given as a bool slice (tests/offline tools).
+    pub fn push_sample_bools(&mut self, bits: &[bool]) {
+        assert_eq!(bits.len(), self.signals, "sample width must match signal count");
+        let (g, lane) = (self.samples >> 6, self.samples & 63);
+        if lane == 0 {
+            self.words.resize((g + 1) * self.signals, 0);
+        }
+        self.samples += 1;
+        let base = g * self.signals;
+        for (i, &v) in bits.iter().enumerate() {
+            if v {
+                self.words[base + i] |= 1 << lane;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,5 +430,55 @@ mod tests {
         assert!(v.is_empty());
         assert!(v.is_zero());
         assert_eq!(v.count_ones(), 0);
+    }
+
+    #[test]
+    fn packed_batch_push_and_get() {
+        // 5 signals, 130 samples (2 full groups + partial tail).
+        let mut p = PackedBatch::with_capacity(5, 130);
+        assert!(p.is_empty());
+        for s in 0..130usize {
+            let bits: Vec<bool> = (0..5).map(|i| (s * 7 + i) % 3 == 0).collect();
+            if s % 2 == 0 {
+                p.push_sample_bools(&bits);
+            } else {
+                p.push_sample(&BitVec::from_bools(bits.iter().copied()));
+            }
+        }
+        assert_eq!(p.num_samples(), 130);
+        assert_eq!(p.num_groups(), 3);
+        assert_eq!(p.words().len(), 3 * 5);
+        for s in 0..130usize {
+            for i in 0..5usize {
+                assert_eq!(p.get(s, i), (s * 7 + i) % 3 == 0, "sample {s} signal {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_batch_group_words_are_lane_slices() {
+        let mut p = PackedBatch::with_capacity(2, 70);
+        for s in 0..70usize {
+            p.push_sample_bools(&[s % 2 == 0, s >= 64]);
+        }
+        // group 0, signal 0: even lanes set
+        assert_eq!(p.group_words(0)[0], 0x5555_5555_5555_5555);
+        // group 0, signal 1: none set
+        assert_eq!(p.group_words(0)[1], 0);
+        // group 1, signal 1: lanes 0..6 set (samples 64..70)
+        assert_eq!(p.group_words(1)[1], 0b11_1111);
+    }
+
+    #[test]
+    fn packed_batch_from_words_masks_tail() {
+        // 1 signal, 66 samples, but hand it words with garbage tail lanes.
+        let words = vec![!0u64, !0u64];
+        let p = PackedBatch::from_group_major_words(1, 66, words);
+        assert_eq!(p.group_words(1)[0], 0b11, "lanes ≥ 66 must be masked");
+        let mut q = PackedBatch::with_capacity(1, 66);
+        for _ in 0..66 {
+            q.push_sample_bools(&[true]);
+        }
+        assert_eq!(p, q, "masking keeps equality canonical");
     }
 }

@@ -1,14 +1,16 @@
 //! Dependency-free utility substrates.
 //!
-//! The offline build environment only provides `xla`, `anyhow`, and
-//! `thiserror`; everything else a production coordinator normally pulls from
-//! crates.io is implemented here (see DESIGN.md §3, S1–S7):
+//! The offline build environment provides no third-party crates; everything
+//! a production coordinator normally pulls from crates.io is implemented
+//! here (see `rust/DESIGN.md` §3, S1–S7):
 //!
 //! * [`json`] — RFC 8259 parser/writer (replaces serde_json)
 //! * [`cli`] — argument parsing (replaces clap)
-//! * [`threadpool`] — fixed pool + `par_map` (replaces rayon)
+//! * [`threadpool`] — fixed pool + `par_map` (replaces rayon); also shards
+//!   packed inference batches across engine workers
 //! * [`prng`] — SplitMix64/xoshiro256** (replaces rand)
-//! * [`bitvec`] — packed bit vectors for truth tables & simulation
+//! * [`bitvec`] — packed bit vectors for truth tables & simulation, plus
+//!   [`bitvec::PackedBatch`], the serving path's batch representation
 //! * [`proptest`] — property testing with shrinking (replaces proptest)
 //! * [`bench`] — benchmark statistics harness (replaces criterion)
 //! * [`timer`] — stage profiling for the flow report and §Perf

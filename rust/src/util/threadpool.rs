@@ -1,11 +1,17 @@
 //! A small fixed-size thread pool with a `scope`-style parallel map.
 //!
-//! rayon/tokio are unavailable offline; the flow engine only needs two
-//! primitives: fire-and-forget task execution and `par_map` over a slice of
-//! independent work items (one logic-synthesis job per neuron). Work is
+//! rayon/tokio are unavailable offline; the flow and serving engines only
+//! need two primitives: fire-and-forget task execution and `par_map` over a
+//! slice of independent work items (one logic-synthesis job per neuron at
+//! build time; one lane-group shard of a [`PackedBatch`] per pop on the
+//! inference path — see [`CompiledNetlist::run_packed_sharded`]). Work is
 //! distributed through a shared injector queue guarded by a mutex+condvar —
-//! at the job granularity of this project (an ESPRESSO run per pop) queue
-//! contention is unmeasurable, which keeps the implementation auditable.
+//! at those job granularities (an ESPRESSO run, or ≥ 64 samples × many LUTs
+//! per pop) queue contention is unmeasurable, which keeps the
+//! implementation auditable.
+//!
+//! [`PackedBatch`]: crate::util::bitvec::PackedBatch
+//! [`CompiledNetlist::run_packed_sharded`]: crate::logic::sim::CompiledNetlist::run_packed_sharded
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};

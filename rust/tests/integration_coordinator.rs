@@ -17,6 +17,7 @@ fn build_router(policy: Policy, max_batch: usize) -> (Router, Model) {
         None,
         policy,
         BatchPolicy { max_batch, max_wait: Duration::from_micros(500) },
+        2,
     );
     (router, model)
 }
@@ -94,6 +95,7 @@ fn pjrt_routing_with_real_artifacts() {
         Some(spec),
         Policy::Compare,
         BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(300) },
+        2,
     );
     let test = nullanet_tiny::data::Dataset::load("artifacts/jsc_test.bin").unwrap();
     let n = 256;

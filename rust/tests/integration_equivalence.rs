@@ -16,8 +16,8 @@ fn flow_and_baseline_compute_identical_functions() {
         let ours = run_flow(&m, &FlowConfig { jobs: 2, ..Default::default() }, None)
             .unwrap();
         let theirs = build_logicnets(&m, 6).unwrap();
-        let mut sa = CompiledNetlist::compile(&ours.circuit.netlist);
-        let mut sb = CompiledNetlist::compile(&theirs.circuit.netlist);
+        let sa = CompiledNetlist::compile(&ours.circuit.netlist);
+        let sb = CompiledNetlist::compile(&theirs.circuit.netlist);
         let mut rng = Xoshiro256::new(seed ^ 0xF0);
         let n_in = m.input_bits();
         let samples: Vec<Vec<bool>> = (0..300)

@@ -10,7 +10,7 @@ use nullanet_tiny::nn::model::{random_model, Model};
 fn exhaustive_check(model: &Model, circuit: &nullanet_tiny::logic::netlist::PipelinedCircuit) {
     let in_bits = model.input_bits();
     assert!(in_bits <= 14, "exhaustive check limited");
-    let mut sim = CompiledNetlist::compile(&circuit.netlist);
+    let sim = CompiledNetlist::compile(&circuit.netlist);
     let out_b = model.layers.last().unwrap().act.bits;
     let in_b = model.input_quant.bits;
     for m in 0..1u64 << in_bits {
@@ -59,9 +59,9 @@ fn config_matrix_all_equivalent() {
                     ..Default::default()
                 };
                 let r = run_flow(&m, &cfg, None).unwrap();
-                let mut sim = CompiledNetlist::compile(&r.circuit.netlist);
+                let sim = CompiledNetlist::compile(&r.circuit.netlist);
                 let preds =
-                    nullanet_tiny::flow::build::classify_batch(&m, &mut sim, &xs);
+                    nullanet_tiny::flow::build::classify_batch(&m, &sim, &xs);
                 match &baseline_preds {
                     None => baseline_preds = Some(preds),
                     Some(b) => assert_eq!(&preds, b, "espresso={espresso} retime={retime} area={area}"),
@@ -114,10 +114,10 @@ fn dc_from_data_preserves_observed_behaviour_and_saves_area() {
     )
     .unwrap();
     // Observed inputs classify identically.
-    let mut sa = CompiledNetlist::compile(&full.circuit.netlist);
-    let mut sb = CompiledNetlist::compile(&dc.circuit.netlist);
-    let pa = nullanet_tiny::flow::build::classify_batch(&m, &mut sa, &xs);
-    let pb = nullanet_tiny::flow::build::classify_batch(&m, &mut sb, &xs);
+    let sa = CompiledNetlist::compile(&full.circuit.netlist);
+    let sb = CompiledNetlist::compile(&dc.circuit.netlist);
+    let pa = nullanet_tiny::flow::build::classify_batch(&m, &sa, &xs);
+    let pb = nullanet_tiny::flow::build::classify_batch(&m, &sb, &xs);
     assert_eq!(pa, pb);
     // DC flow should not use more cubes.
     assert!(dc.total_cubes_after <= full.total_cubes_after);
@@ -129,7 +129,7 @@ fn input_codes_roundtrip_through_circuit_wiring() {
     // circuit's input ordering matches quantize_input.
     let m = random_model("wire", 5, &[4, 3], 2, 2, 9);
     let r = run_flow(&m, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
-    let mut sim = CompiledNetlist::compile(&r.circuit.netlist);
+    let sim = CompiledNetlist::compile(&r.circuit.netlist);
     for s in 0..40u64 {
         let x: Vec<f64> = (0..5).map(|i| ((s + i as u64) as f64 * 0.41).sin() * 2.0).collect();
         let codes = quantize_input(&m, &x);

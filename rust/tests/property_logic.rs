@@ -243,11 +243,91 @@ fn compiled_sim_agrees_with_interpreter() {
         },
         |(nl, words)| {
             let want = nl.simulate_words(words);
-            let mut sim = CompiledNetlist::compile(nl);
+            let sim = CompiledNetlist::compile(nl);
+            let mut scratch = sim.make_scratch();
             let mut got = vec![0u64; want.len()];
-            sim.run_words(words, &mut got);
+            sim.run_words(&mut scratch, words, &mut got);
             if got != want {
                 return Err("compiled sim disagrees with interpreter".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn packed_multiworker_matches_reference_eval() {
+    // Differential property for the packed serving path: random netlists
+    // with arities 0–6 (inputs drawn with replacement, so duplicate input
+    // signals occur regularly), non-multiple-of-64 batch sizes, evaluated
+    // with 1/2/4 workers sharing one Arc<CompiledNetlist> — every sample's
+    // packed output bits must equal the LutNetlist::eval reference.
+    use nullanet_tiny::logic::netlist::{LutNetlist, Sig};
+    use nullanet_tiny::logic::sim::CompiledNetlist;
+    use nullanet_tiny::util::bitvec::PackedBatch;
+    use nullanet_tiny::util::threadpool::ThreadPool;
+    use std::sync::Arc;
+    check_simple(
+        "packed-multiworker",
+        |g| {
+            let nin = g.sized_range(1, 10);
+            let nluts = g.sized_range(1, 24);
+            let mut nl = LutNetlist::new(nin);
+            for j in 0..nluts {
+                let navail = nin + j;
+                let k = g.rng.below(7) as usize; // arity 0..=6
+                let inputs: Vec<Sig> = (0..k)
+                    .map(|_| {
+                        let pick = g.rng.below(navail as u64) as usize;
+                        if pick < nin {
+                            Sig::Input(pick as u32)
+                        } else {
+                            Sig::Lut((pick - nin) as u32)
+                        }
+                    })
+                    .collect();
+                let tt = TruthTable::from_fn(k, |_| g.rng.bernoulli(0.5));
+                nl.add_lut(inputs, tt);
+            }
+            for j in 0..nluts.min(4) {
+                nl.add_output(Sig::Lut(j as u32), j % 2 == 1);
+            }
+            nl.add_output(Sig::Input(0), true);
+            nl.add_output(Sig::Const(true), false);
+            let nsamples = g.sized_range(1, 300);
+            let mask = if nin == 64 { !0u64 } else { (1u64 << nin) - 1 };
+            let samples: Vec<u64> =
+                (0..nsamples).map(|_| g.rng.next_u64() & mask).collect();
+            (nl, samples)
+        },
+        |(nl, samples)| {
+            let nin = nl.num_inputs;
+            let mut packed = PackedBatch::with_capacity(nin, samples.len());
+            let mut bools = vec![false; nin];
+            for &bits in samples {
+                for (i, b) in bools.iter_mut().enumerate() {
+                    *b = (bits >> i) & 1 == 1;
+                }
+                packed.push_sample_bools(&bools);
+            }
+            let sim = Arc::new(CompiledNetlist::compile(nl));
+            let batch = Arc::new(packed);
+            for workers in [1usize, 2, 4] {
+                let pool = ThreadPool::new(workers);
+                let out = CompiledNetlist::run_packed_sharded(&sim, &pool, &batch);
+                if out.num_samples() != samples.len() {
+                    return Err("sample count changed".into());
+                }
+                for (s, &bits) in samples.iter().enumerate() {
+                    let want = nl.eval(bits);
+                    for (j, &w) in want.iter().enumerate() {
+                        if out.get(s, j) != w {
+                            return Err(format!(
+                                "mismatch at sample {s} output {j} with {workers} workers"
+                            ));
+                        }
+                    }
+                }
             }
             Ok(())
         },
