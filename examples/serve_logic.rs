@@ -10,7 +10,7 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use nullanet_tiny::coordinator::{BatchPolicy, PjrtSpec, Policy, Router};
+use nullanet_tiny::coordinator::{BatchPolicy, PjrtSpec, Policy, RouterBuilder};
 use nullanet_tiny::flow::{run_flow, FlowConfig};
 use nullanet_tiny::nn::model::{random_model, Model};
 use nullanet_tiny::util::cli::Args;
@@ -33,6 +33,9 @@ fn main() {
             in_features: m.input_features,
             out_width: out_w,
         });
+        // Only mirror onto PJRT when the backend can actually be built
+        // (stub builds preflight-fail); otherwise serve logic alone.
+        let spec = spec.filter(|s| s.preflight().is_ok());
         (m, spec)
     } else {
         println!("(artifacts missing; serving a random model, logic only)");
@@ -43,20 +46,18 @@ fn main() {
     println!("synthesizing logic…");
     let flow = run_flow(&model, &FlowConfig::default(), None).expect("flow");
     let policy = if pjrt.is_some() { Policy::Compare } else { Policy::Logic };
-    // Shard multi-lane-group batches across up to 4 engine workers sharing
-    // one compiled netlist.
-    let workers = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(4);
-    let router = Arc::new(Router::start(
-        model.clone(),
-        flow.circuit.netlist.clone(),
-        pjrt,
-        policy,
-        BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(100) },
-        workers,
-    ));
+    // Shard multi-lane-group batches across the default worker count
+    // sharing one compiled netlist.
+    let workers = RouterBuilder::default_workers();
+    let mut builder = RouterBuilder::new(model.clone())
+        .circuit(flow.circuit.netlist.clone())
+        .engine(policy)
+        .batch_policy(BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(100) })
+        .workers(workers);
+    if let Some(spec) = pjrt {
+        builder = builder.pjrt(spec);
+    }
+    let router = Arc::new(builder.build().expect("router"));
 
     // Drive the server from 4 closed-loop clients.
     println!("serving {n_requests} requests (policy {policy:?})…");

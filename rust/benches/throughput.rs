@@ -6,7 +6,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use nullanet_tiny::coordinator::{BatchPolicy, Policy, Router};
+use nullanet_tiny::coordinator::{BatchPolicy, Policy, RouterBuilder};
 use nullanet_tiny::flow::{run_flow, FlowConfig};
 use nullanet_tiny::logic::sim::CompiledNetlist;
 use nullanet_tiny::nn::eval::{codes_to_bits, quantize_input};
@@ -82,14 +82,15 @@ fn main() {
     );
 
     // ---- coordinator round trip ----
-    let router = Arc::new(Router::start(
-        model.clone(),
-        r.circuit.netlist.clone(),
-        None,
-        Policy::Logic,
-        BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(50) },
-        4,
-    ));
+    let router = Arc::new(
+        RouterBuilder::new(model.clone())
+            .circuit(r.circuit.netlist.clone())
+            .engine(Policy::Logic)
+            .batch_policy(BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(50) })
+            .workers(4)
+            .build()
+            .expect("router"),
+    );
     let n = 20_000usize;
     let t = Instant::now();
     let feats = model.input_features;

@@ -1,0 +1,593 @@
+//! Pluggable inference engines behind one trait.
+//!
+//! The router used to hard-code its two backends behind a `Policy` match;
+//! [`InferenceEngine`] is the seam that replaces it. An engine consumes a
+//! flushed batch — bit-packed circuit inputs ([`PackedBatch`]) and, when it
+//! asks for them, the raw feature vectors — and returns one predicted class
+//! per sample. The dispatcher in [`crate::coordinator::router`] is
+//! backend-agnostic: it calls [`dispatch`] and never inspects which engine
+//! it is driving.
+//!
+//! Engines shipped here:
+//!
+//! * [`PackedLogicEngine`] — the paper's artifact: one shared
+//!   `Arc<CompiledNetlist>` evaluated bit-parallel, multi-lane-group
+//!   batches sharded across an owned [`ThreadPool`].
+//! * [`PjrtNumericEngine`] — the AOT-compiled XLA executable (numeric
+//!   reference; stub build fails construction cleanly).
+//! * [`MirrorEngine`] — a combinator replacing the old ad-hoc
+//!   `Policy::Compare` arm: replies from the primary engine, shadows every
+//!   batch onto a second engine, and records disagreements/failures on an
+//!   injected [`Metrics`] handle.
+//!
+//! Construction is fallible ([`EngineError`]) and happens *before* the
+//! router accepts traffic, so a missing HLO artifact is a typed build
+//! error, not a dispatcher panic that strands every submitter.
+
+use std::fmt;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use crate::coordinator::metrics::Metrics;
+use crate::flow::build::classify_packed;
+use crate::logic::netlist::LutNetlist;
+use crate::logic::sim::{CompiledNetlist, SimScratch};
+use crate::nn::model::Model;
+use crate::runtime::PjrtEngine;
+use crate::util::bitvec::PackedBatch;
+use crate::util::threadpool::ThreadPool;
+
+/// Typed failure of an inference engine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// The engine could not be built (missing artifact, absent backend,
+    /// incompatible circuit, …). Returned from `RouterBuilder::build`.
+    Construction(String),
+    /// The engine cannot serve this request shape (e.g. a packed batch
+    /// handed to a numeric-only engine).
+    Unsupported(String),
+    /// Inference itself failed at run time.
+    Inference(String),
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::Construction(m) => write!(f, "engine construction: {m}"),
+            EngineError::Unsupported(m) => write!(f, "unsupported request: {m}"),
+            EngineError::Inference(m) => write!(f, "inference failed: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// A serving backend: classifies whole batches.
+///
+/// Engines live on the dispatcher thread for the router's whole lifetime
+/// (so they may own non-`Send` native handles) and take `&mut self` (so
+/// they may own per-engine scratch state without interior mutability).
+pub trait InferenceEngine {
+    /// Short engine label carried on every [`crate::coordinator::batcher::Reply`].
+    fn name(&self) -> &'static str;
+
+    /// True when the router must retain each request's raw feature vector
+    /// so [`InferenceEngine::classify_features`] can see it.
+    fn wants_features(&self) -> bool {
+        false
+    }
+
+    /// True when the router must quantize/binarize features into packed
+    /// circuit-input bits at submit time. Numeric-only engines return
+    /// `false` to skip that dead work.
+    fn wants_packed(&self) -> bool {
+        true
+    }
+
+    /// Classify every sample of a bit-packed batch.
+    fn classify_packed_batch(&mut self, batch: &PackedBatch)
+        -> Result<Vec<usize>, EngineError>;
+
+    /// Shared-batch variant: engines that shard the batch across worker
+    /// threads override this to share it zero-copy (the router's dispatch
+    /// path always calls it). The default delegates to the borrowed entry
+    /// point.
+    fn classify_packed_shared(
+        &mut self,
+        batch: &Arc<PackedBatch>,
+    ) -> Result<Vec<usize>, EngineError> {
+        self.classify_packed_batch(batch.as_ref())
+    }
+
+    /// Numeric-features entry point: classify from the raw feature vectors
+    /// (`xs[s]` belongs to lane `s` of `batch`). The default delegates to
+    /// the packed path; numeric engines override it.
+    fn classify_features(
+        &mut self,
+        batch: &PackedBatch,
+        xs: &[Vec<f64>],
+    ) -> Result<Vec<usize>, EngineError> {
+        let _ = xs;
+        self.classify_packed_batch(batch)
+    }
+
+    /// Shared-batch variant of [`InferenceEngine::classify_features`]:
+    /// combinators override it so a packed sub-engine can still share the
+    /// batch zero-copy. Default delegates to the borrowed entry point.
+    fn classify_features_shared(
+        &mut self,
+        batch: &Arc<PackedBatch>,
+        xs: &[Vec<f64>],
+    ) -> Result<Vec<usize>, EngineError> {
+        self.classify_features(batch.as_ref(), xs)
+    }
+}
+
+/// Drive one batch through an engine: the features entry point when the
+/// engine wants raw features and the batch carries them, the shared packed
+/// entry point otherwise. This is the router's whole dispatch logic.
+pub fn dispatch(
+    engine: &mut dyn InferenceEngine,
+    batch: &Arc<PackedBatch>,
+    features: Option<&[Vec<f64>]>,
+) -> Result<Vec<usize>, EngineError> {
+    match features {
+        Some(xs) if engine.wants_features() => engine.classify_features_shared(batch, xs),
+        _ => engine.classify_packed_shared(batch),
+    }
+}
+
+/// The combinational-logic engine: an immutable compiled netlist shared
+/// across shard workers, classifying straight from packed output words.
+pub struct PackedLogicEngine {
+    sim: Arc<CompiledNetlist>,
+    pool: Option<ThreadPool>,
+    scratch: SimScratch,
+    model: Arc<Model>,
+    metrics: Arc<Metrics>,
+}
+
+impl PackedLogicEngine {
+    /// Compile `netlist` and size the shard pool. With `workers ≥ 2`,
+    /// batches spanning multiple 64-sample lane groups are evaluated in
+    /// parallel on the one shared compiled netlist.
+    pub fn new(
+        model: Arc<Model>,
+        netlist: &LutNetlist,
+        workers: usize,
+        metrics: Arc<Metrics>,
+    ) -> Result<PackedLogicEngine, EngineError> {
+        if netlist.num_inputs != model.input_bits() {
+            return Err(EngineError::Construction(format!(
+                "circuit has {} inputs but model '{}' packs {} input bits",
+                netlist.num_inputs,
+                model.name,
+                model.input_bits()
+            )));
+        }
+        if netlist.max_arity() > 6 {
+            return Err(EngineError::Construction(format!(
+                "circuit contains a {}-input LUT; the compiled simulator supports k ≤ 6",
+                netlist.max_arity()
+            )));
+        }
+        let last = model
+            .layers
+            .last()
+            .ok_or_else(|| EngineError::Construction("model has no layers".into()))?;
+        let want_outputs = last.out_width * last.act.bits;
+        if netlist.outputs.len() != want_outputs {
+            return Err(EngineError::Construction(format!(
+                "circuit has {} outputs but model '{}' decodes {want_outputs} \
+                 ({} neurons × {} bits)",
+                netlist.outputs.len(),
+                model.name,
+                last.out_width,
+                last.act.bits
+            )));
+        }
+        let sim = Arc::new(CompiledNetlist::compile(netlist));
+        let scratch = sim.make_scratch();
+        let pool = (workers > 1).then(|| ThreadPool::new(workers));
+        Ok(PackedLogicEngine { sim, pool, scratch, model, metrics })
+    }
+
+    fn check_width(&self, batch: &PackedBatch) -> Result<(), EngineError> {
+        if batch.num_signals() != self.sim.num_inputs() {
+            return Err(EngineError::Inference(format!(
+                "batch packs {} signals for a {}-input circuit",
+                batch.num_signals(),
+                self.sim.num_inputs()
+            )));
+        }
+        Ok(())
+    }
+
+    fn finish(&self, outputs: &PackedBatch) -> Vec<usize> {
+        self.metrics
+            .logic_requests
+            .fetch_add(outputs.num_samples() as u64, Ordering::Relaxed);
+        classify_packed(&self.model, outputs)
+    }
+}
+
+impl InferenceEngine for PackedLogicEngine {
+    fn name(&self) -> &'static str {
+        "logic"
+    }
+
+    fn classify_packed_batch(
+        &mut self,
+        batch: &PackedBatch,
+    ) -> Result<Vec<usize>, EngineError> {
+        self.check_width(batch)?;
+        if self.pool.is_some() && batch.num_groups() >= 2 {
+            // Sharding needs a shareable handle; only direct callers of the
+            // borrowed entry point pay this copy — the router's dispatch
+            // path goes through `classify_packed_shared` and never does.
+            let shared = Arc::new(batch.clone());
+            return self.classify_packed_shared(&shared);
+        }
+        let outputs = self.sim.run_packed(batch, &mut self.scratch);
+        Ok(self.finish(&outputs))
+    }
+
+    fn classify_packed_shared(
+        &mut self,
+        batch: &Arc<PackedBatch>,
+    ) -> Result<Vec<usize>, EngineError> {
+        self.check_width(batch)?;
+        let outputs = match &self.pool {
+            Some(pool) if batch.num_groups() >= 2 => {
+                CompiledNetlist::run_packed_sharded(&self.sim, pool, batch)
+            }
+            _ => self.sim.run_packed(batch, &mut self.scratch),
+        };
+        Ok(self.finish(&outputs))
+    }
+}
+
+/// The PJRT numeric engine: classifies from raw feature vectors via the
+/// AOT-compiled XLA executable.
+pub struct PjrtNumericEngine {
+    engine: PjrtEngine,
+    num_classes: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl PjrtNumericEngine {
+    /// Load and compile the HLO artifact described by `spec`. In the
+    /// default (stub) build this always returns a construction error.
+    pub fn new(
+        spec: &crate::coordinator::router::PjrtSpec,
+        num_classes: usize,
+        metrics: Arc<Metrics>,
+    ) -> Result<PjrtNumericEngine, EngineError> {
+        let engine =
+            PjrtEngine::load(&spec.hlo_path, spec.batch, spec.in_features, spec.out_width)
+                .map_err(|e| EngineError::Construction(e.to_string()))?;
+        Ok(PjrtNumericEngine { engine, num_classes, metrics })
+    }
+}
+
+impl InferenceEngine for PjrtNumericEngine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn wants_features(&self) -> bool {
+        true
+    }
+
+    fn wants_packed(&self) -> bool {
+        false
+    }
+
+    fn classify_packed_batch(
+        &mut self,
+        _batch: &PackedBatch,
+    ) -> Result<Vec<usize>, EngineError> {
+        Err(EngineError::Unsupported(
+            "the PJRT engine needs raw feature vectors, not packed circuit bits".into(),
+        ))
+    }
+
+    fn classify_features(
+        &mut self,
+        _batch: &PackedBatch,
+        xs: &[Vec<f64>],
+    ) -> Result<Vec<usize>, EngineError> {
+        let preds = self
+            .engine
+            .classify_all(xs, self.num_classes)
+            .map_err(|e| EngineError::Inference(e.to_string()))?;
+        self.metrics
+            .numeric_requests
+            .fetch_add(xs.len() as u64, Ordering::Relaxed);
+        Ok(preds)
+    }
+}
+
+/// Mirror combinator: reply from `primary`, shadow every batch onto
+/// `shadow`, and record per-sample disagreements (and shadow failures) on
+/// the injected [`Metrics`] handle. Replaces the old ad-hoc
+/// `Policy::Compare` arm — and composes: any two engines can be mirrored.
+pub struct MirrorEngine {
+    primary: Box<dyn InferenceEngine>,
+    shadow: Box<dyn InferenceEngine>,
+    metrics: Arc<Metrics>,
+}
+
+impl MirrorEngine {
+    /// Mirror `shadow` behind `primary`.
+    pub fn new(
+        primary: Box<dyn InferenceEngine>,
+        shadow: Box<dyn InferenceEngine>,
+        metrics: Arc<Metrics>,
+    ) -> MirrorEngine {
+        MirrorEngine { primary, shadow, metrics }
+    }
+
+    fn record_shadow(
+        &self,
+        primary: &[usize],
+        shadow: Result<Vec<usize>, EngineError>,
+    ) {
+        match shadow {
+            Ok(s) => {
+                let dis =
+                    primary.iter().zip(&s).filter(|(a, b)| a != b).count() as u64;
+                self.metrics.disagreements.fetch_add(dis, Ordering::Relaxed);
+            }
+            Err(e) => {
+                // The primary already served these requests: count on the
+                // shadow-only counter, not `engine_failures` (dropped
+                // requests).
+                self.metrics
+                    .shadow_failures
+                    .fetch_add(primary.len() as u64, Ordering::Relaxed);
+                eprintln!("mirror: shadow engine '{}' failed: {e}", self.shadow.name());
+            }
+        }
+    }
+}
+
+impl InferenceEngine for MirrorEngine {
+    /// Replies carry the primary engine's label.
+    fn name(&self) -> &'static str {
+        self.primary.name()
+    }
+
+    fn wants_features(&self) -> bool {
+        self.primary.wants_features() || self.shadow.wants_features()
+    }
+
+    fn wants_packed(&self) -> bool {
+        self.primary.wants_packed() || self.shadow.wants_packed()
+    }
+
+    fn classify_packed_batch(
+        &mut self,
+        batch: &PackedBatch,
+    ) -> Result<Vec<usize>, EngineError> {
+        let preds = self.primary.classify_packed_batch(batch)?;
+        // Without retained features only a packed-capable shadow can run.
+        if !self.shadow.wants_features() {
+            let shadow = self.shadow.classify_packed_batch(batch);
+            self.record_shadow(&preds, shadow);
+        }
+        Ok(preds)
+    }
+
+    fn classify_packed_shared(
+        &mut self,
+        batch: &Arc<PackedBatch>,
+    ) -> Result<Vec<usize>, EngineError> {
+        let preds = self.primary.classify_packed_shared(batch)?;
+        if !self.shadow.wants_features() {
+            let shadow = self.shadow.classify_packed_shared(batch);
+            self.record_shadow(&preds, shadow);
+        }
+        Ok(preds)
+    }
+
+    fn classify_features(
+        &mut self,
+        batch: &PackedBatch,
+        xs: &[Vec<f64>],
+    ) -> Result<Vec<usize>, EngineError> {
+        let primary = if self.primary.wants_features() {
+            self.primary.classify_features(batch, xs)
+        } else {
+            self.primary.classify_packed_batch(batch)
+        };
+        let preds = primary?;
+        let shadow = if self.shadow.wants_features() {
+            self.shadow.classify_features(batch, xs)
+        } else {
+            self.shadow.classify_packed_batch(batch)
+        };
+        self.record_shadow(&preds, shadow);
+        Ok(preds)
+    }
+
+    /// The router's Compare path: a packed primary (logic) must not pay a
+    /// batch copy just because the shadow wanted features.
+    fn classify_features_shared(
+        &mut self,
+        batch: &Arc<PackedBatch>,
+        xs: &[Vec<f64>],
+    ) -> Result<Vec<usize>, EngineError> {
+        let primary = if self.primary.wants_features() {
+            self.primary.classify_features_shared(batch, xs)
+        } else {
+            self.primary.classify_packed_shared(batch)
+        };
+        let preds = primary?;
+        let shadow = if self.shadow.wants_features() {
+            self.shadow.classify_features_shared(batch, xs)
+        } else {
+            self.shadow.classify_packed_shared(batch)
+        };
+        self.record_shadow(&preds, shadow);
+        Ok(preds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::{run_flow, FlowConfig};
+    use crate::nn::model::random_model;
+
+    #[test]
+    fn packed_logic_engine_matches_the_quantized_nn() {
+        let model = random_model("eng", 6, &[4, 3], 2, 1, 17);
+        let r = run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None)
+            .unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let model = Arc::new(model);
+        let mut engine = PackedLogicEngine::new(
+            Arc::clone(&model),
+            &r.circuit.netlist,
+            2,
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+        assert_eq!(engine.name(), "logic");
+        assert!(!engine.wants_features());
+        assert!(engine.wants_packed());
+
+        let xs: Vec<Vec<f64>> = (0..130)
+            .map(|i| (0..6).map(|j| ((i * 3 + j) as f64 * 0.29).sin()).collect())
+            .collect();
+        let mut batch = PackedBatch::with_capacity(model.input_bits(), xs.len());
+        for x in &xs {
+            let codes = crate::nn::eval::quantize_input(&model, x);
+            let bits = crate::nn::eval::codes_to_bitvec(&codes, model.input_quant.bits);
+            batch.push_sample(&bits);
+        }
+        let preds = engine.classify_packed_batch(&batch).unwrap();
+        for (x, p) in xs.iter().zip(&preds) {
+            assert_eq!(*p, crate::nn::eval::classify(&model, x));
+        }
+        assert_eq!(metrics.logic_requests.load(Ordering::Relaxed), 130);
+    }
+
+    #[test]
+    fn logic_engine_rejects_mismatched_circuit() {
+        let model = random_model("mis", 6, &[4, 3], 2, 1, 1);
+        let other = random_model("oth", 8, &[4, 3], 2, 1, 2);
+        let r = run_flow(&other, &FlowConfig { jobs: 1, ..Default::default() }, None)
+            .unwrap();
+        let err = PackedLogicEngine::new(
+            Arc::new(model),
+            &r.circuit.netlist,
+            1,
+            Arc::new(Metrics::new()),
+        )
+        .err()
+        .expect("input-width mismatch must fail construction");
+        assert!(matches!(err, EngineError::Construction(_)), "{err}");
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn pjrt_engine_construction_fails_cleanly_in_stub_build() {
+        let spec = crate::coordinator::router::PjrtSpec {
+            hlo_path: "artifacts/none.hlo.txt".into(),
+            batch: 64,
+            in_features: 6,
+            out_width: 3,
+        };
+        let err = PjrtNumericEngine::new(&spec, 3, Arc::new(Metrics::new()))
+            .err()
+            .expect("stub build must not construct a PJRT engine");
+        assert!(matches!(err, EngineError::Construction(_)), "{err}");
+        assert!(err.to_string().contains("PJRT backend unavailable"), "{err}");
+    }
+
+    /// Fixed-output fake engine for mirror tests.
+    struct Fixed {
+        label: &'static str,
+        pred: usize,
+        fail: bool,
+    }
+
+    impl InferenceEngine for Fixed {
+        fn name(&self) -> &'static str {
+            self.label
+        }
+        fn classify_packed_batch(
+            &mut self,
+            batch: &PackedBatch,
+        ) -> Result<Vec<usize>, EngineError> {
+            if self.fail {
+                return Err(EngineError::Inference("boom".into()));
+            }
+            Ok(vec![self.pred; batch.num_samples()])
+        }
+    }
+
+    fn three_sample_batch() -> PackedBatch {
+        let mut b = PackedBatch::with_capacity(2, 3);
+        for s in 0..3 {
+            b.push_sample_bools(&[s % 2 == 0, s == 1]);
+        }
+        b
+    }
+
+    #[test]
+    fn mirror_counts_disagreements_and_replies_from_primary() {
+        let metrics = Arc::new(Metrics::new());
+        let mut mirror = MirrorEngine::new(
+            Box::new(Fixed { label: "a", pred: 1, fail: false }),
+            Box::new(Fixed { label: "b", pred: 2, fail: false }),
+            Arc::clone(&metrics),
+        );
+        assert_eq!(mirror.name(), "a");
+        let preds = mirror.classify_packed_batch(&three_sample_batch()).unwrap();
+        assert_eq!(preds, vec![1, 1, 1], "mirror must reply from the primary");
+        assert_eq!(metrics.disagreements.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn mirror_survives_shadow_failure() {
+        let metrics = Arc::new(Metrics::new());
+        let mut mirror = MirrorEngine::new(
+            Box::new(Fixed { label: "a", pred: 0, fail: false }),
+            Box::new(Fixed { label: "b", pred: 0, fail: true }),
+            Arc::clone(&metrics),
+        );
+        let preds = mirror.classify_packed_batch(&three_sample_batch()).unwrap();
+        assert_eq!(preds, vec![0, 0, 0]);
+        assert_eq!(metrics.disagreements.load(Ordering::Relaxed), 0);
+        // Shadow-only failures must not count as dropped requests.
+        assert_eq!(metrics.shadow_failures.load(Ordering::Relaxed), 3);
+        assert_eq!(metrics.engine_failures.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn dispatch_routes_on_wants_features() {
+        // A packed-only engine ignores offered features.
+        let mut fixed = Fixed { label: "a", pred: 4, fail: false };
+        let batch = Arc::new(three_sample_batch());
+        let xs = vec![vec![0.0]; 3];
+        let preds = dispatch(&mut fixed, &batch, Some(&xs)).unwrap();
+        assert_eq!(preds, vec![4, 4, 4]);
+    }
+
+    #[test]
+    fn mirror_shares_packed_batches_with_both_engines() {
+        let metrics = Arc::new(Metrics::new());
+        let mut mirror = MirrorEngine::new(
+            Box::new(Fixed { label: "a", pred: 1, fail: false }),
+            Box::new(Fixed { label: "b", pred: 1, fail: false }),
+            Arc::clone(&metrics),
+        );
+        let batch = Arc::new(three_sample_batch());
+        let preds = dispatch(&mut mirror, &batch, None).unwrap();
+        assert_eq!(preds, vec![1, 1, 1]);
+        assert_eq!(metrics.disagreements.load(Ordering::Relaxed), 0);
+    }
+}

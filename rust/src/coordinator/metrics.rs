@@ -110,8 +110,12 @@ pub struct Metrics {
     pub numeric_requests: AtomicU64,
     /// Batches flushed.
     pub batches: AtomicU64,
-    /// Requests whose engines disagreed (compare mode).
+    /// Requests whose engines disagreed (mirror/compare mode).
     pub disagreements: AtomicU64,
+    /// Requests dropped because an engine failed on their batch.
+    pub engine_failures: AtomicU64,
+    /// Requests whose mirror *shadow* failed (the primary still replied).
+    pub shadow_failures: AtomicU64,
 }
 
 impl Metrics {
@@ -123,13 +127,16 @@ impl Metrics {
     /// Render a human-readable report.
     pub fn report(&self) -> String {
         format!(
-            "requests: logic={} numeric={} batches={} disagreements={}\n\
+            "requests: logic={} numeric={} batches={} disagreements={} failures={} \
+             shadow-failures={}\n\
              request latency: {}\n\
              batch latency:   {}",
             self.logic_requests.load(Ordering::Relaxed),
             self.numeric_requests.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.disagreements.load(Ordering::Relaxed),
+            self.engine_failures.load(Ordering::Relaxed),
+            self.shadow_failures.load(Ordering::Relaxed),
             self.request_latency.summary(),
             self.batch_latency.summary(),
         )

@@ -1,18 +1,24 @@
-//! The serving coordinator (L3): dynamic batching, engine routing, TCP
-//! server, and metrics — the layer that turns the synthesized combinational
-//! logic into a deployable inference service.
+//! The serving coordinator (L3): dynamic batching, pluggable inference
+//! engines, TCP server, and metrics — the layer that turns the synthesized
+//! combinational logic into a deployable inference service.
 //!
 //! * [`batcher`] — queue + flush policy (max batch / max wait); flushes
-//!   bit-packed [`batcher::Batch`]es the logic engine consumes directly
-//! * [`router`] — logic vs PJRT engine dispatch, compare mode, multi-worker
-//!   packed evaluation on one shared compiled netlist
+//!   bit-packed [`batcher::Batch`]es the engines consume directly
+//! * [`engine`] — the [`engine::InferenceEngine`] trait and its
+//!   implementations: packed logic, PJRT numeric, and the mirror combinator
+//! * [`router`] — [`router::RouterBuilder`] assembles an engine stack and
+//!   runs the backend-agnostic dispatch loop
 //! * [`server`] — JSON-lines TCP front end
 //! * [`metrics`] — latency histograms, counters
 
 pub mod batcher;
+pub mod engine;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
 pub use batcher::{Batch, BatchPolicy, Batcher};
-pub use router::{PjrtSpec, Policy, Router};
+pub use engine::{
+    EngineError, InferenceEngine, MirrorEngine, PackedLogicEngine, PjrtNumericEngine,
+};
+pub use router::{PjrtSpec, Policy, Router, RouterBuilder};

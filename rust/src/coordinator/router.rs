@@ -1,37 +1,49 @@
-//! Request router: dispatches batches to the combinational-logic engine
-//! and/or the PJRT numeric engine.
+//! Request router: a dynamic batcher in front of one pluggable
+//! [`InferenceEngine`].
 //!
 //! The coordinator's demonstration goal (`rust/DESIGN.md` §Serving): the
 //! synthesized fixed-function logic *is* the production inference path —
 //! bit-exact against the quantized NN — while the AOT-compiled XLA
-//! executable serves as the numeric reference. Routing policies:
+//! executable serves as the numeric reference. The [`Policy`] names which
+//! engine stack [`RouterBuilder::build`] assembles:
 //!
 //! * `Logic` — everything on the netlist simulator (the paper's artifact)
 //! * `Numeric` — everything on PJRT
-//! * `Compare` — run both, count disagreements, reply from logic
+//! * `Compare` — a [`MirrorEngine`]: reply from logic, shadow onto PJRT,
+//!   count disagreements
+//!
+//! The dispatcher itself is backend-agnostic: it drains batches and hands
+//! them to the engine via [`crate::coordinator::engine::dispatch`]. Engine
+//! construction happens before the router accepts traffic, and failures
+//! (missing HLO artifact, incompatible circuit) come back as typed errors
+//! from [`RouterBuilder::build`] instead of panicking the dispatcher thread
+//! and hanging every submitter.
 //!
 //! The logic path is packed end to end: `submit` binarizes the features
-//! into a [`BitVec`](crate::util::bitvec::BitVec), the batcher flushes a
-//! [`PackedBatch`], and the dispatcher hands that straight to one shared
-//! `Arc<CompiledNetlist>` — inline for single-lane-group batches, sharded
-//! across an engine [`ThreadPool`] for larger ones. No per-sample `Vec`
-//! exists between [`Batcher::next_batch`] and the simulator.
+//! into a [`BitVec`], the batcher flushes a
+//! [`PackedBatch`](crate::util::bitvec::PackedBatch), and the engine hands
+//! that straight to one shared compiled netlist — inline for
+//! single-lane-group batches, sharded across the engine's worker pool for
+//! larger ones. No per-sample `Vec` exists between
+//! [`Batcher::next_batch`] and the simulator.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::batcher::{Batch, BatchPolicy, Batcher, Reply, Request};
+use crate::coordinator::engine::{
+    self, EngineError, InferenceEngine, MirrorEngine, PackedLogicEngine,
+    PjrtNumericEngine,
+};
 use crate::coordinator::metrics::Metrics;
-use crate::flow::build::classify_packed;
-use crate::logic::sim::{CompiledNetlist, SimScratch};
+use crate::error::NnError;
+use crate::logic::netlist::LutNetlist;
 use crate::nn::eval::{codes_to_bitvec, quantize_input};
 use crate::nn::model::Model;
-use crate::runtime::PjrtEngine;
-use crate::util::bitvec::PackedBatch;
-use crate::util::threadpool::ThreadPool;
+use crate::util::bitvec::BitVec;
 
-/// Routing policy.
+/// Routing policy: which engine stack the builder assembles.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
     Logic,
@@ -52,8 +64,8 @@ impl Policy {
 }
 
 /// How to construct the PJRT engine. The engine itself is `!Send` (its C
-/// handles are reference-counted without atomics), so the router receives a
-/// *spec* and instantiates the engine on the dispatcher thread where it
+/// handles are reference-counted without atomics), so the builder carries a
+/// *spec* and the engine is instantiated on the dispatcher thread where it
 /// lives for the router's whole lifetime.
 #[derive(Clone, Debug)]
 pub struct PjrtSpec {
@@ -68,136 +80,301 @@ pub struct PjrtSpec {
 }
 
 impl PjrtSpec {
-    fn load(&self) -> PjrtEngine {
-        PjrtEngine::load(&self.hlo_path, self.batch, self.in_features, self.out_width)
-            .expect("load PJRT artifact")
+    /// Cheap pre-spawn validation: the backend must be compiled in and the
+    /// HLO artifact readable. Full load/compile happens on the dispatcher
+    /// thread (the loaded engine is not `Send`).
+    pub fn preflight(&self) -> Result<(), EngineError> {
+        if !crate::runtime::pjrt::backend_available() {
+            return Err(EngineError::Construction(format!(
+                "PJRT backend unavailable: built without the `xla` feature \
+                 (cannot load {})",
+                self.hlo_path
+            )));
+        }
+        if let Err(e) = std::fs::metadata(&self.hlo_path) {
+            return Err(EngineError::Construction(format!(
+                "HLO artifact {}: {e}",
+                self.hlo_path
+            )));
+        }
+        Ok(())
     }
 }
 
-/// The serving router: owns the batcher, engines, metrics, and dispatcher
-/// thread.
+/// What the dispatcher reports back once its engine is constructed.
+struct EngineMeta {
+    name: &'static str,
+    wants_features: bool,
+    wants_packed: bool,
+}
+
+/// Builder for a [`Router`]. Replaces the old 6-positional-argument
+/// `Router::start`:
+///
+/// ```ignore
+/// let router = RouterBuilder::new(model)
+///     .circuit(flow.circuit.netlist)
+///     .engine(Policy::Logic)
+///     .batch_policy(BatchPolicy::default())
+///     .workers(4)
+///     .build()?;
+/// ```
+pub struct RouterBuilder {
+    model: Model,
+    netlist: Option<LutNetlist>,
+    pjrt: Option<PjrtSpec>,
+    policy: Policy,
+    batch_policy: BatchPolicy,
+    workers: usize,
+}
+
+impl RouterBuilder {
+    /// Start a builder for `model` (logic policy, default batch policy,
+    /// one worker).
+    pub fn new(model: Model) -> RouterBuilder {
+        RouterBuilder {
+            model,
+            netlist: None,
+            pjrt: None,
+            policy: Policy::Logic,
+            batch_policy: BatchPolicy::default(),
+            workers: 1,
+        }
+    }
+
+    /// Attach the synthesized (or artifact-loaded) logic circuit. Required
+    /// for the `Logic` and `Compare` policies.
+    pub fn circuit(mut self, netlist: LutNetlist) -> Self {
+        self.netlist = Some(netlist);
+        self
+    }
+
+    /// Attach a PJRT engine spec. Required for `Numeric`; optional shadow
+    /// for `Compare`.
+    pub fn pjrt(mut self, spec: PjrtSpec) -> Self {
+        self.pjrt = Some(spec);
+        self
+    }
+
+    /// Select the engine stack (default: `Policy::Logic`).
+    pub fn engine(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Set the batch flush policy.
+    pub fn batch_policy(mut self, bp: BatchPolicy) -> Self {
+        self.batch_policy = bp;
+        self
+    }
+
+    /// Size the logic engine's shard pool: with ≥ 2 workers, batches
+    /// spanning multiple 64-sample lane groups are evaluated in parallel on
+    /// one shared compiled netlist.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Sensible shard-worker default for interactive servers: available
+    /// parallelism, capped at 4 (one place for the policy — the CLI and
+    /// the serving example both quote it).
+    pub fn default_workers() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(4)
+    }
+
+    /// Validate the configuration, construct the engine stack, and start
+    /// the dispatcher. Engine-construction failures (missing circuit or
+    /// HLO artifact, absent backend, incompatible widths) return here as
+    /// typed errors — the router never starts half-alive.
+    pub fn build(self) -> Result<Router, NnError> {
+        let RouterBuilder { model, netlist, pjrt, policy, batch_policy, workers } = self;
+        let needs_logic = matches!(policy, Policy::Logic | Policy::Compare);
+        if needs_logic && netlist.is_none() {
+            return Err(NnError::Engine(EngineError::Construction(format!(
+                "{policy:?} routing needs a logic circuit (RouterBuilder::circuit)"
+            ))));
+        }
+        if policy == Policy::Numeric && pjrt.is_none() {
+            return Err(NnError::Engine(EngineError::Construction(
+                "Numeric routing needs a PJRT spec (RouterBuilder::pjrt)".into(),
+            )));
+        }
+        if policy != Policy::Logic {
+            if let Some(spec) = &pjrt {
+                spec.preflight().map_err(NnError::Engine)?;
+            }
+        }
+
+        let model = Arc::new(model);
+        let batcher = Arc::new(Batcher::new(batch_policy, model.input_bits()));
+        let metrics = Arc::new(Metrics::new());
+
+        // The engine is constructed on the dispatcher thread (it may own
+        // non-`Send` handles); readiness — or the construction error — is
+        // reported back over this channel before `build` returns.
+        let (ready_tx, ready_rx) =
+            std::sync::mpsc::channel::<Result<EngineMeta, EngineError>>();
+        let b = Arc::clone(&batcher);
+        let m = Arc::clone(&metrics);
+        let model_for_engine = Arc::clone(&model);
+        let metrics_for_engine = Arc::clone(&metrics);
+        let make_engine = move || -> Result<Box<dyn InferenceEngine>, EngineError> {
+            let logic = |metrics: Arc<Metrics>| -> Result<Box<PackedLogicEngine>, EngineError> {
+                let nl = netlist.as_ref().ok_or_else(|| {
+                    EngineError::Construction("logic engine needs a circuit".into())
+                })?;
+                Ok(Box::new(PackedLogicEngine::new(
+                    Arc::clone(&model_for_engine),
+                    nl,
+                    workers,
+                    metrics,
+                )?))
+            };
+            match policy {
+                Policy::Logic => Ok(logic(metrics_for_engine)?),
+                Policy::Numeric => {
+                    let spec = pjrt.as_ref().ok_or_else(|| {
+                        EngineError::Construction("numeric engine needs a PJRT spec".into())
+                    })?;
+                    Ok(Box::new(PjrtNumericEngine::new(
+                        spec,
+                        model_for_engine.num_classes,
+                        metrics_for_engine,
+                    )?))
+                }
+                Policy::Compare => {
+                    let primary = logic(Arc::clone(&metrics_for_engine))?;
+                    match pjrt.as_ref() {
+                        Some(spec) => {
+                            let shadow = Box::new(PjrtNumericEngine::new(
+                                spec,
+                                model_for_engine.num_classes,
+                                Arc::clone(&metrics_for_engine),
+                            )?);
+                            Ok(Box::new(MirrorEngine::new(
+                                primary,
+                                shadow,
+                                metrics_for_engine,
+                            )))
+                        }
+                        // No numeric reference available: serve logic alone.
+                        None => Ok(primary),
+                    }
+                }
+            }
+        };
+
+        let dispatcher = std::thread::Builder::new()
+            .name("nnt-dispatcher".into())
+            .spawn(move || {
+                let mut engine: Box<dyn InferenceEngine> = match make_engine() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let wants_features = engine.wants_features();
+                let meta = EngineMeta {
+                    name: engine.name(),
+                    wants_features,
+                    wants_packed: engine.wants_packed(),
+                };
+                if ready_tx.send(Ok(meta)).is_err() {
+                    return;
+                }
+                while let Some(batch) = b.next_batch() {
+                    let t = Instant::now();
+                    let Batch { inputs, mut requests } = batch;
+                    let n = requests.len() as u64;
+                    // `take`, not clone: the features are dead after
+                    // dispatch (replies only need `enqueued` + `reply`).
+                    let xs: Option<Vec<Vec<f64>>> = if wants_features {
+                        requests.iter_mut().map(|r| r.features.take()).collect()
+                    } else {
+                        None
+                    };
+                    // Arc'd once so a sharding engine can hand the batch to
+                    // its workers zero-copy.
+                    let inputs = Arc::new(inputs);
+                    let result = engine::dispatch(engine.as_mut(), &inputs, xs.as_deref());
+                    m.batches.fetch_add(1, Ordering::Relaxed);
+                    m.batch_latency.record_ns(t.elapsed().as_nanos() as u64);
+                    match result {
+                        Ok(preds) => {
+                            let name = engine.name();
+                            for (req, class) in requests.into_iter().zip(preds) {
+                                let latency = req.enqueued.elapsed();
+                                m.request_latency.record_ns(latency.as_nanos() as u64);
+                                let _ = req.reply.send(Reply { class, engine: name, latency });
+                            }
+                        }
+                        Err(e) => {
+                            // Dropping `requests` drops the reply senders:
+                            // submitters observe a disconnect, never a hang.
+                            m.engine_failures.fetch_add(n, Ordering::Relaxed);
+                            eprintln!(
+                                "engine '{}': batch of {n} failed: {e}",
+                                engine.name()
+                            );
+                        }
+                    }
+                }
+            })
+            .map_err(|e| {
+                NnError::Engine(EngineError::Construction(format!(
+                    "spawn dispatcher: {e}"
+                )))
+            })?;
+
+        match ready_rx.recv() {
+            Ok(Ok(meta)) => Ok(Router {
+                batcher,
+                metrics,
+                model,
+                wants_features: meta.wants_features,
+                wants_packed: meta.wants_packed,
+                engine_name: meta.name,
+                dispatcher: Some(dispatcher),
+            }),
+            Ok(Err(e)) => {
+                let _ = dispatcher.join();
+                Err(NnError::Engine(e))
+            }
+            Err(_) => {
+                let _ = dispatcher.join();
+                Err(NnError::Engine(EngineError::Construction(
+                    "dispatcher exited before signalling readiness".into(),
+                )))
+            }
+        }
+    }
+}
+
+/// The serving router: owns the batcher, metrics, and the dispatcher
+/// thread that drives one [`InferenceEngine`]. Construct via
+/// [`RouterBuilder`].
 pub struct Router {
     batcher: Arc<Batcher>,
     metrics: Arc<Metrics>,
     model: Arc<Model>,
-    policy: Policy,
+    wants_features: bool,
+    wants_packed: bool,
+    engine_name: &'static str,
     dispatcher: Option<std::thread::JoinHandle<()>>,
 }
 
-/// Evaluate a packed batch on the logic engine and classify straight from
-/// the packed output words. Batches spanning ≥ 2 lane groups are sharded
-/// across `pool` workers sharing the `Arc<CompiledNetlist>`; smaller ones
-/// run inline on the dispatcher's own scratch.
-fn eval_logic(
-    sim: &Arc<CompiledNetlist>,
-    pool: &Option<ThreadPool>,
-    scratch: &mut SimScratch,
-    inputs: PackedBatch,
-    model: &Model,
-) -> Vec<usize> {
-    let outputs = match pool {
-        Some(p) if inputs.num_groups() >= 2 => {
-            let shared = Arc::new(inputs);
-            CompiledNetlist::run_packed_sharded(sim, p, &shared)
-        }
-        _ => sim.run_packed(&inputs, scratch),
-    };
-    classify_packed(model, &outputs)
-}
-
-/// Clone the retained feature vectors for the numeric engine (only the
-/// numeric/compare policies keep them on the request).
-fn features_of(requests: &[Request]) -> Vec<Vec<f64>> {
-    requests
-        .iter()
-        .map(|r| r.features.clone().expect("numeric path retains features"))
-        .collect()
-}
-
 impl Router {
-    /// Start a router over the given engines. `pjrt` may be `None` when
-    /// only the logic path is wanted (e.g. artifacts not built). `workers`
-    /// sizes the logic engine's shard pool: with ≥ 2 workers, batches
-    /// spanning multiple 64-sample lane groups are evaluated in parallel on
-    /// one shared compiled netlist.
-    pub fn start(
-        model: Model,
-        netlist: crate::logic::netlist::LutNetlist,
-        pjrt: Option<PjrtSpec>,
-        policy: Policy,
-        batch_policy: BatchPolicy,
-        workers: usize,
-    ) -> Router {
-        let model = Arc::new(model);
-        let batcher = Arc::new(Batcher::new(batch_policy, model.input_bits()));
-        let metrics = Arc::new(Metrics::new());
-        let b = Arc::clone(&batcher);
-        let m = Arc::clone(&metrics);
-        let model_for_dispatch = Arc::clone(&model);
-        let dispatcher = std::thread::Builder::new()
-            .name("nnt-dispatcher".into())
-            .spawn(move || {
-                let model = model_for_dispatch;
-                let sim = Arc::new(CompiledNetlist::compile(&netlist));
-                let pool = (workers > 1).then(|| ThreadPool::new(workers));
-                let mut scratch = sim.make_scratch();
-                let pjrt: Option<PjrtEngine> = pjrt.map(|s| s.load());
-                while let Some(batch) = b.next_batch() {
-                    let t = Instant::now();
-                    let Batch { inputs, requests } = batch;
-                    let n = requests.len() as u64;
-                    let (preds, engine): (Vec<usize>, &'static str) = match policy {
-                        Policy::Logic => {
-                            m.logic_requests.fetch_add(n, Ordering::Relaxed);
-                            (eval_logic(&sim, &pool, &mut scratch, inputs, &model), "logic")
-                        }
-                        Policy::Numeric => {
-                            let e = pjrt.as_ref().expect("numeric policy needs PJRT");
-                            m.numeric_requests.fetch_add(n, Ordering::Relaxed);
-                            let xs = features_of(&requests);
-                            (
-                                e.classify_all(&xs, model.num_classes)
-                                    .expect("pjrt inference"),
-                                "pjrt",
-                            )
-                        }
-                        Policy::Compare => {
-                            let logic =
-                                eval_logic(&sim, &pool, &mut scratch, inputs, &model);
-                            m.logic_requests.fetch_add(n, Ordering::Relaxed);
-                            if let Some(e) = pjrt.as_ref() {
-                                let xs = features_of(&requests);
-                                let num = e
-                                    .classify_all(&xs, model.num_classes)
-                                    .expect("pjrt inference");
-                                m.numeric_requests.fetch_add(n, Ordering::Relaxed);
-                                let dis = logic
-                                    .iter()
-                                    .zip(&num)
-                                    .filter(|(a, b)| a != b)
-                                    .count();
-                                m.disagreements.fetch_add(dis as u64, Ordering::Relaxed);
-                            }
-                            (logic, "logic")
-                        }
-                    };
-                    m.batches.fetch_add(1, Ordering::Relaxed);
-                    m.batch_latency.record_ns(t.elapsed().as_nanos() as u64);
-                    for (req, class) in requests.into_iter().zip(preds) {
-                        let latency = req.enqueued.elapsed();
-                        m.request_latency.record_ns(latency.as_nanos() as u64);
-                        let _ = req.reply.send(Reply { class, engine, latency });
-                    }
-                }
-            })
-            .expect("spawn dispatcher");
-        Router { batcher, metrics, model, policy, dispatcher: Some(dispatcher) }
-    }
-
     /// Submit one request; returns the receiver for its reply. Features are
     /// binarized here — the batcher and engine only ever see packed bits.
     /// Panics if the feature width does not match the model (callers with
-    /// untrusted input should check [`Router::input_features`] first).
+    /// untrusted input should check [`Router::input_features`] first). If
+    /// the engine fails on the batch, the receiver observes a disconnect
+    /// instead of a reply.
     pub fn submit(&self, features: Vec<f64>) -> std::sync::mpsc::Receiver<Reply> {
         let (tx, rx) = std::sync::mpsc::channel();
         assert_eq!(
@@ -207,15 +384,15 @@ impl Router {
             features.len(),
             self.model.input_features
         );
-        let bits = if self.policy == Policy::Numeric {
-            // The logic engine never sees a numeric-only batch: skip the
-            // dead quantize + pack work and carry a zeroed placeholder.
-            crate::util::bitvec::BitVec::zeros(self.model.input_bits())
-        } else {
+        let bits = if self.wants_packed {
             let codes = quantize_input(&self.model, &features);
             codes_to_bitvec(&codes, self.model.input_quant.bits)
+        } else {
+            // A numeric-only engine never reads the packed bits: skip the
+            // dead quantize + pack work and carry a zeroed placeholder.
+            BitVec::zeros(self.model.input_bits())
         };
-        let features = (self.policy != Policy::Logic).then_some(features);
+        let features = self.wants_features.then_some(features);
         self.batcher.submit(Request { bits, features, enqueued: Instant::now(), reply: tx });
         rx
     }
@@ -223,6 +400,11 @@ impl Router {
     /// Feature width the model expects (for request validation).
     pub fn input_features(&self) -> usize {
         self.model.input_features
+    }
+
+    /// Label of the engine replies come from ("logic" / "pjrt").
+    pub fn engine_name(&self) -> &'static str {
+        self.engine_name
     }
 
     /// Metrics handle.
@@ -264,20 +446,20 @@ mod tests {
         let model = random_model("srv", 6, &[4, 3], 2, 1, 99);
         let r = run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None)
             .unwrap();
-        let router = Router::start(
-            model.clone(),
-            r.circuit.netlist,
-            None,
-            policy,
-            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
-            2,
-        );
+        let router = RouterBuilder::new(model.clone())
+            .circuit(r.circuit.netlist)
+            .engine(policy)
+            .batch_policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) })
+            .workers(2)
+            .build()
+            .unwrap();
         (router, model)
     }
 
     #[test]
     fn serves_logic_requests() {
         let (router, model) = make_router(Policy::Logic);
+        assert_eq!(router.engine_name(), "logic");
         let mut rxs = Vec::new();
         let mut want = Vec::new();
         for i in 0..50 {
@@ -303,14 +485,16 @@ mod tests {
         let model = random_model("srv4", 6, &[4, 3], 2, 1, 7);
         let r = run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None)
             .unwrap();
-        let router = Router::start(
-            model.clone(),
-            r.circuit.netlist,
-            None,
-            Policy::Logic,
-            BatchPolicy { max_batch: 256, max_wait: Duration::from_millis(2) },
-            4,
-        );
+        let router = RouterBuilder::new(model.clone())
+            .circuit(r.circuit.netlist)
+            .engine(Policy::Logic)
+            .batch_policy(BatchPolicy {
+                max_batch: 256,
+                max_wait: Duration::from_millis(2),
+            })
+            .workers(4)
+            .build()
+            .unwrap();
         let mut rxs = Vec::new();
         let mut want = Vec::new();
         for i in 0..300 {
@@ -340,5 +524,42 @@ mod tests {
         let rx = router.submit(vec![0.0; 6]);
         let _ = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         router.shutdown();
+    }
+
+    #[test]
+    fn build_without_circuit_is_a_typed_error() {
+        let model = random_model("noc", 4, &[3], 2, 1, 5);
+        let err = RouterBuilder::new(model).engine(Policy::Logic).build().unwrap_err();
+        assert!(
+            matches!(err, NnError::Engine(EngineError::Construction(_))),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn numeric_build_without_spec_is_a_typed_error() {
+        let model = random_model("nos", 4, &[3], 2, 1, 5);
+        let err = RouterBuilder::new(model).engine(Policy::Numeric).build().unwrap_err();
+        assert!(matches!(err, NnError::Engine(_)), "{err}");
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn numeric_build_without_backend_errors_before_serving() {
+        // The old router panicked the dispatcher on this path and hung
+        // every submitter; now it is a typed build error.
+        let model = random_model("nob", 4, &[3], 2, 1, 5);
+        let err = RouterBuilder::new(model)
+            .engine(Policy::Numeric)
+            .pjrt(PjrtSpec {
+                hlo_path: "artifacts/missing.hlo.txt".into(),
+                batch: 64,
+                in_features: 4,
+                out_width: 3,
+            })
+            .build()
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("xla") || msg.contains("HLO"), "{msg}");
     }
 }

@@ -8,20 +8,38 @@
 //! ← {"class": 3, "engine": "logic", "latency_us": 42.0}
 //! → {"cmd": "metrics"}
 //! ← {"report": "…"}
+//! → {"cmd": "depth"}
+//! ← {"depth": 0}
 //! → {"cmd": "shutdown"}
 //! ```
 //!
 //! One thread per connection (std::net; no tokio offline). The server owns
 //! a [`Router`]; all inference goes through its dynamic batcher, so
 //! concurrent clients share batches.
+//!
+//! Client sockets carry a read timeout so every connection thread polls the
+//! shared stop flag even while its client is silent — a shutdown therefore
+//! terminates `serve` promptly instead of joining threads parked forever in
+//! a blocking read. Finished connection threads are reaped from the accept
+//! loop, so a long-lived server does not accumulate one `JoinHandle` per
+//! connection ever served.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::coordinator::router::Router;
 use crate::util::json::Json;
+
+/// How often an idle connection thread wakes to poll the stop flag.
+const READ_POLL: Duration = Duration::from_millis(50);
+
+/// Hard cap on one request line; a client streaming bytes without a
+/// newline gets a protocol error and is disconnected instead of growing
+/// the per-connection buffer without bound.
+const MAX_LINE_BYTES: usize = 1 << 20;
 
 /// Serve until a client sends `{"cmd": "shutdown"}`. Binds to `addr`
 /// (e.g. "127.0.0.1:7878"); `ready` is signalled once listening (tests).
@@ -38,7 +56,7 @@ pub fn serve(
     let stop = Arc::new(AtomicBool::new(false));
     // Accept loop with periodic stop checks.
     listener.set_nonblocking(true)?;
-    let mut handles = Vec::new();
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
     while !stop.load(Ordering::Acquire) {
         match listener.accept() {
             Ok((stream, _)) => {
@@ -46,45 +64,104 @@ pub fn serve(
                 let s = Arc::clone(&stop);
                 handles.push(std::thread::spawn(move || handle_client(stream, r, s)));
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(5));
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
             }
             Err(e) => return Err(e),
         }
+        handles = reap_finished(handles);
     }
+    // Every thread polls the stop flag at READ_POLL cadence, so this join
+    // completes promptly even for connections that never sent a byte.
     for h in handles {
         let _ = h.join();
     }
     Ok(())
 }
 
+/// Join and drop handles whose threads have already exited.
+fn reap_finished(handles: Vec<std::thread::JoinHandle<()>>) -> Vec<std::thread::JoinHandle<()>> {
+    handles
+        .into_iter()
+        .filter_map(|h| {
+            if h.is_finished() {
+                let _ = h.join();
+                None
+            } else {
+                Some(h)
+            }
+        })
+        .collect()
+}
+
 fn handle_client(stream: TcpStream, router: Arc<Router>, stop: Arc<AtomicBool>) {
-    let peer = stream.peer_addr().ok();
+    // A blocking read would pin this thread (and the final join in `serve`)
+    // on a silent client forever; time out reads and treat the timeout as a
+    // stop-flag poll. Writes get a generous timeout too: a client that
+    // pipelines requests but never reads replies would otherwise park this
+    // thread in `write_all` with the stop flag unpolled — the same hang,
+    // one direction over.
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let response = match handle_line(&line, &router, &stop) {
-            Ok(j) => j,
-            Err(msg) => Json::obj([("error", Json::str(msg))]),
-        };
-        if writer
-            .write_all(format!("{}\n", response.to_string()).as_bytes())
-            .is_err()
-        {
-            break;
-        }
+    let mut reader = BufReader::new(stream);
+    // Accumulate raw bytes, not a String: `read_line`'s UTF-8 guard
+    // truncates everything appended by a call that errors, so a timeout
+    // landing mid-multibyte-sequence would silently drop consumed bytes.
+    // `read_until` documents that partially read bytes stay in the buffer.
+    let mut raw: Vec<u8> = Vec::new();
+    loop {
         if stop.load(Ordering::Acquire) {
-            break;
+            return;
         }
+        // `take` bounds a single call: a client firehosing bytes with no
+        // newline (and no ≥ READ_POLL gap) must not grow `raw` past the cap
+        // inside one unbounded `read_until`. The loop keeps
+        // `raw.len() ≤ MAX_LINE_BYTES` here, so the budget is ≥ 1 and
+        // `Ok(0)` unambiguously means EOF.
+        let budget = (MAX_LINE_BYTES + 1 - raw.len()) as u64;
+        let eof = match (&mut reader).take(budget).read_until(b'\n', &mut raw) {
+            Ok(0) => true,
+            Ok(_) => false,
+            // Timed out while idle or mid-line; bytes read so far stay in
+            // `raw` — keep accumulating after the stop-flag poll.
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                false
+            }
+            Err(_) => return,
+        };
+        if raw.len() > MAX_LINE_BYTES {
+            let e = Json::obj([(
+                "error",
+                Json::str(format!("request line exceeds {MAX_LINE_BYTES} bytes")),
+            )]);
+            let _ = writer.write_all(format!("{}\n", e.to_string()).as_bytes());
+            return;
+        }
+        if !raw.ends_with(b"\n") && !eof {
+            continue; // mid-line: wait for the rest
+        }
+        let line = String::from_utf8_lossy(&raw);
+        if !line.trim().is_empty() {
+            let response = match handle_line(&line, &router, &stop) {
+                Ok(j) => j,
+                Err(msg) => Json::obj([("error", Json::str(msg))]),
+            };
+            if writer
+                .write_all(format!("{}\n", response.to_string()).as_bytes())
+                .is_err()
+            {
+                return;
+            }
+        }
+        if eof {
+            return;
+        }
+        raw.clear();
     }
-    let _ = peer; // quiet unused warning in non-logging builds
 }
 
 fn handle_line(
@@ -123,8 +200,8 @@ fn handle_line(
     }
     let rx = router.submit(features);
     let reply = rx
-        .recv_timeout(std::time::Duration::from_secs(10))
-        .map_err(|_| "inference timeout".to_string())?;
+        .recv_timeout(Duration::from_secs(10))
+        .map_err(|_| "inference failed or timed out".to_string())?;
     Ok(Json::obj([
         ("class", Json::int(reply.class as i64)),
         ("engine", Json::str(reply.engine)),
@@ -136,31 +213,40 @@ fn handle_line(
 mod tests {
     use super::*;
     use crate::coordinator::batcher::BatchPolicy;
-    use crate::coordinator::router::Policy;
+    use crate::coordinator::router::{Policy, RouterBuilder};
     use crate::flow::{run_flow, FlowConfig};
-    use crate::nn::model::random_model;
+    use crate::nn::model::{random_model, Model};
     use std::io::{BufRead, BufReader, Write};
-    use std::time::Duration;
+
+    fn tiny_router(seed: u64) -> (Arc<Router>, Model) {
+        let model = random_model("tcp", 4, &[3, 3], 2, 1, seed);
+        let flow =
+            run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+        let router = RouterBuilder::new(model.clone())
+            .circuit(flow.circuit.netlist)
+            .engine(Policy::Logic)
+            .batch_policy(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) })
+            .workers(2)
+            .build()
+            .unwrap();
+        (Arc::new(router), model)
+    }
+
+    fn spawn_server(
+        router: Arc<Router>,
+    ) -> (std::thread::JoinHandle<()>, u16) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let server = std::thread::spawn(move || {
+            serve(router, "127.0.0.1:0", Some(tx)).unwrap();
+        });
+        let port = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        (server, port)
+    }
 
     #[test]
     fn end_to_end_tcp_session() {
-        let model = random_model("tcp", 4, &[3, 3], 2, 1, 1);
-        let flow =
-            run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
-        let router = Arc::new(Router::start(
-            model.clone(),
-            flow.circuit.netlist,
-            None,
-            Policy::Logic,
-            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
-            2,
-        ));
-        let (tx, rx) = std::sync::mpsc::channel();
-        let r2 = Arc::clone(&router);
-        let server = std::thread::spawn(move || {
-            serve(r2, "127.0.0.1:0", Some(tx)).unwrap();
-        });
-        let port = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let (router, model) = tiny_router(1);
+        let (server, port) = spawn_server(Arc::clone(&router));
 
         let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
@@ -199,5 +285,77 @@ mod tests {
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("ok"));
         server.join().unwrap();
+    }
+
+    #[test]
+    fn depth_command_reports_queue_depth() {
+        let (router, _model) = tiny_router(2);
+        let (server, port) = spawn_server(Arc::clone(&router));
+
+        let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        conn.write_all(b"{\"cmd\": \"depth\"}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = crate::util::json::Json::parse(&line).unwrap();
+        let depth = resp
+            .get("depth")
+            .and_then(|d| d.as_usize())
+            .expect("depth must be a non-negative integer");
+        // An idle router has an empty queue.
+        assert_eq!(depth, 0, "{line}");
+
+        conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_line_disconnects_instead_of_growing_forever() {
+        let (router, _model) = tiny_router(4);
+        let (server, port) = spawn_server(Arc::clone(&router));
+
+        let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        // > MAX_LINE_BYTES with no newline: the server must cap the buffer
+        // and drop the connection (an error reply may or may not survive
+        // the reset race — termination is the contract).
+        let chunk = vec![b'x'; (1 << 20) + (1 << 16)];
+        let _ = conn.write_all(&chunk);
+        let mut line = String::new();
+        let _ = reader.read_line(&mut line); // error reply or EOF/reset
+        drop(conn);
+
+        // The server itself stays healthy and shuts down cleanly.
+        let mut c2 = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let mut r2 = BufReader::new(c2.try_clone().unwrap());
+        c2.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+        let mut l2 = String::new();
+        r2.read_line(&mut l2).unwrap();
+        assert!(l2.contains("ok"), "{l2}");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_completes_with_an_idle_client_attached() {
+        // Regression: `serve` used to join per-client threads that could
+        // block forever in a read; an idle (never-writing) client therefore
+        // hung the shutdown. The read timeout turns that into a poll.
+        let (router, _model) = tiny_router(3);
+        let (server, port) = spawn_server(Arc::clone(&router));
+
+        // Idle client: connects, never sends a byte.
+        let idle = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+
+        let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("ok"));
+        // Must return despite the idle client still being connected.
+        server.join().unwrap();
+        drop(idle);
     }
 }

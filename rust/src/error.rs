@@ -1,0 +1,107 @@
+//! Crate-wide typed error.
+//!
+//! The public API used to hand back `Result<_, String>`; [`NnError`] wraps
+//! each layer's own error type (flow, data, runtime, engine, artifact)
+//! behind one `Display + Error` enum, dependency-free, so callers can match
+//! on the failing layer instead of grepping message strings.
+
+use std::fmt;
+
+use crate::coordinator::engine::EngineError;
+use crate::flow::artifact::ArtifactError;
+use crate::runtime::pjrt::RuntimeError;
+
+/// Top-level error of the NullaNet Tiny crate.
+#[derive(Debug)]
+pub enum NnError {
+    /// Synthesis-flow failure (enumerate / ESPRESSO / map / retime /
+    /// verification mismatch).
+    Flow(String),
+    /// Model or dataset loading/validation failure.
+    Data(String),
+    /// Numeric runtime (PJRT) failure.
+    Runtime(RuntimeError),
+    /// Serving-engine construction or inference failure.
+    Engine(EngineError),
+    /// Compiled-circuit artifact I/O, format, or fingerprint failure.
+    Artifact(ArtifactError),
+    /// Command-line / configuration error.
+    Config(String),
+}
+
+impl fmt::Display for NnError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NnError::Flow(m) => write!(f, "flow: {m}"),
+            NnError::Data(m) => write!(f, "data: {m}"),
+            NnError::Runtime(e) => write!(f, "runtime: {e}"),
+            NnError::Engine(e) => write!(f, "engine: {e}"),
+            NnError::Artifact(e) => write!(f, "artifact: {e}"),
+            NnError::Config(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for NnError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            NnError::Runtime(e) => Some(e),
+            NnError::Engine(e) => Some(e),
+            NnError::Artifact(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::data::dataset::DataError> for NnError {
+    fn from(e: crate::data::dataset::DataError) -> NnError {
+        NnError::Data(e.0)
+    }
+}
+
+impl From<RuntimeError> for NnError {
+    fn from(e: RuntimeError) -> NnError {
+        NnError::Runtime(e)
+    }
+}
+
+impl From<EngineError> for NnError {
+    fn from(e: EngineError) -> NnError {
+        NnError::Engine(e)
+    }
+}
+
+impl From<ArtifactError> for NnError {
+    fn from(e: ArtifactError) -> NnError {
+        NnError::Artifact(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_failing_layer() {
+        assert_eq!(NnError::Flow("x".into()).to_string(), "flow: x");
+        assert_eq!(NnError::Config("bad flag".into()).to_string(), "bad flag");
+        let e = NnError::Engine(EngineError::Construction("no artifact".into()));
+        assert!(e.to_string().contains("no artifact"));
+    }
+
+    #[test]
+    fn wrapped_errors_expose_a_source() {
+        use std::error::Error;
+        let e = NnError::Engine(EngineError::Inference("boom".into()));
+        assert!(e.source().is_some());
+        assert!(NnError::Flow("x".into()).source().is_none());
+    }
+
+    #[test]
+    fn from_impls_pick_the_right_variant() {
+        let e: NnError = crate::data::dataset::DataError("bad file".into()).into();
+        assert!(matches!(e, NnError::Data(_)));
+        let e: NnError = EngineError::Unsupported("shape".into()).into();
+        assert!(matches!(e, NnError::Engine(_)));
+    }
+}

@@ -1,0 +1,402 @@
+//! Persistent compiled-circuit artifacts.
+//!
+//! The synthesized fixed-function logic *is* the deployable inference
+//! artifact, so it must be savable: this module serializes a
+//! [`PipelinedCircuit`] to a versioned JSON file bound to the model it was
+//! compiled from by a fingerprint. `nullanet compile` writes one;
+//! `serve`/`emit`/`verify --circuit` load it back — turning server
+//! cold-start from a full enumerate→ESPRESSO→map→retime run into a file
+//! load.
+//!
+//! Format (version 1, built on [`crate::util::json`]):
+//!
+//! ```text
+//! {
+//!   "format": "nullanet-circuit", "version": 1,
+//!   "model": "jsc-s", "fingerprint": "<fnv1a64 of the model JSON>",
+//!   "num_inputs": N, "num_stages": S,
+//!   "luts":    [{"k": 2, "in": [sig codes], "tt": "<hex>", "stage": 0}, …],
+//!   "outputs": [[sig code, inverted], …]
+//! }
+//! ```
+//!
+//! Signal codes are [`Sig::to_code`]'s dense encoding (also used by the
+//! compiled simulator). Loading validates format, version, fingerprint,
+//! topological order, LUT arity, and the stage assignment — every failure
+//! is a typed [`ArtifactError`], never a panic.
+
+use std::fmt;
+
+use crate::logic::netlist::{LutNetlist, PipelinedCircuit, Sig};
+use crate::logic::truthtable::TruthTable;
+use crate::nn::model::Model;
+use crate::util::bitvec::BitVec;
+use crate::util::json::Json;
+
+/// Format tag every artifact carries.
+pub const FORMAT: &str = "nullanet-circuit";
+/// Artifact version this build reads and writes.
+pub const VERSION: i64 = 1;
+
+/// Typed failure of artifact save/load.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArtifactError {
+    /// Filesystem failure reading or writing the artifact.
+    Io { path: String, msg: String },
+    /// The file is not valid JSON.
+    Parse(String),
+    /// The file is not a circuit artifact (format tag mismatch).
+    Format(String),
+    /// The artifact version is not supported by this build.
+    Version { found: i64, supported: i64 },
+    /// The artifact was compiled from a different model.
+    FingerprintMismatch { expected: String, found: String },
+    /// Structurally invalid circuit (fields, topology, stages, widths).
+    Invalid(String),
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::Io { path, msg } => write!(f, "{path}: {msg}"),
+            ArtifactError::Parse(m) => write!(f, "{m}"),
+            ArtifactError::Format(m) => write!(f, "{m}"),
+            ArtifactError::Version { found, supported } => write!(
+                f,
+                "unsupported artifact version {found} (this build reads {supported})"
+            ),
+            ArtifactError::FingerprintMismatch { expected, found } => write!(
+                f,
+                "artifact was compiled from a different model \
+                 (fingerprint {found}, model is {expected})"
+            ),
+            ArtifactError::Invalid(m) => write!(f, "invalid circuit: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+fn invalid(msg: impl Into<String>) -> ArtifactError {
+    ArtifactError::Invalid(msg.into())
+}
+
+/// FNV-1a 64-bit fingerprint of a model's canonical JSON form. Binds an
+/// artifact to exactly the weights/quantizers it was synthesized from (the
+/// emitter's object keys are ordered, so the form is deterministic).
+pub fn model_fingerprint(model: &Model) -> String {
+    let text = model.to_json().to_string();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+/// Serialize a circuit (with the fingerprint of the model it realizes).
+pub fn circuit_to_json(circuit: &PipelinedCircuit, model: &Model) -> Json {
+    let nl = &circuit.netlist;
+    let luts: Vec<Json> = nl
+        .luts
+        .iter()
+        .zip(&circuit.stage_of_lut)
+        .map(|(lut, &stage)| {
+            Json::obj([
+                ("k", Json::int(lut.arity() as i64)),
+                (
+                    "in",
+                    Json::Arr(
+                        lut.inputs
+                            .iter()
+                            .map(|s| Json::int(s.to_code(nl.num_inputs) as i64))
+                            .collect(),
+                    ),
+                ),
+                ("tt", Json::str(lut.table.bits().to_hex())),
+                ("stage", Json::int(stage as i64)),
+            ])
+        })
+        .collect();
+    let outputs: Vec<Json> = nl
+        .outputs
+        .iter()
+        .map(|(s, inv)| {
+            Json::Arr(vec![
+                Json::int(s.to_code(nl.num_inputs) as i64),
+                Json::Bool(*inv),
+            ])
+        })
+        .collect();
+    Json::obj([
+        ("format", Json::str(FORMAT)),
+        ("version", Json::int(VERSION)),
+        ("model", Json::str(model.name.clone())),
+        ("fingerprint", Json::str(model_fingerprint(model))),
+        ("num_inputs", Json::int(nl.num_inputs as i64)),
+        ("num_stages", Json::int(circuit.num_stages as i64)),
+        ("luts", Json::Arr(luts)),
+        ("outputs", Json::Arr(outputs)),
+    ])
+}
+
+/// Parse and validate a circuit artifact against `model` (the fingerprint
+/// must match and the circuit must be structurally sound).
+pub fn circuit_from_json(j: &Json, model: &Model) -> Result<PipelinedCircuit, ArtifactError> {
+    let tag = j.get("format").and_then(|v| v.as_str()).unwrap_or("");
+    if tag != FORMAT {
+        return Err(ArtifactError::Format(format!(
+            "not a {FORMAT} artifact (format tag '{tag}')"
+        )));
+    }
+    let version = j.get("version").and_then(|v| v.as_i64()).unwrap_or(-1);
+    if version != VERSION {
+        return Err(ArtifactError::Version { found: version, supported: VERSION });
+    }
+    let found = j
+        .get("fingerprint")
+        .and_then(|v| v.as_str())
+        .unwrap_or("")
+        .to_string();
+    let expected = model_fingerprint(model);
+    if found != expected {
+        return Err(ArtifactError::FingerprintMismatch { expected, found });
+    }
+
+    let req = |key: &str| j.req(key).map_err(invalid);
+    let num_inputs = req("num_inputs")?
+        .as_usize()
+        .ok_or_else(|| invalid("num_inputs must be a non-negative integer"))?;
+    if num_inputs != model.input_bits() {
+        return Err(invalid(format!(
+            "circuit has {num_inputs} inputs, model packs {} input bits",
+            model.input_bits()
+        )));
+    }
+    let num_stages = req("num_stages")?
+        .as_usize()
+        .ok_or_else(|| invalid("num_stages must be a non-negative integer"))?
+        as u32;
+
+    let luts_json = req("luts")?
+        .as_arr()
+        .ok_or_else(|| invalid("luts must be an array"))?;
+    let mut nl = LutNetlist::new(num_inputs);
+    let mut stages: Vec<u32> = Vec::with_capacity(luts_json.len());
+    for (idx, lj) in luts_json.iter().enumerate() {
+        let err = |m: String| invalid(format!("LUT {idx}: {m}"));
+        let k = lj
+            .req("k")
+            .map_err(&err)?
+            .as_usize()
+            .ok_or_else(|| err("k must be a non-negative integer".into()))?;
+        if k > 6 {
+            return Err(err(format!("arity {k} exceeds the k ≤ 6 fabric")));
+        }
+        let codes = lj.req("in").map_err(&err)?.to_usize_vec().map_err(&err)?;
+        if codes.len() != k {
+            return Err(err(format!("{} input codes for arity {k}", codes.len())));
+        }
+        // Topological order: a LUT may only reference constants, inputs,
+        // and strictly earlier LUTs.
+        let limit = 2 + num_inputs + idx;
+        let mut inputs = Vec::with_capacity(k);
+        for &c in &codes {
+            if c >= limit {
+                return Err(err(format!("input code {c} breaks topological order")));
+            }
+            inputs.push(Sig::from_code(c as u32, num_inputs));
+        }
+        let hex = lj
+            .req("tt")
+            .map_err(&err)?
+            .as_str()
+            .ok_or_else(|| err("tt must be a hex string".into()))?;
+        let bits = BitVec::from_hex(1usize << k, hex)
+            .ok_or_else(|| err(format!("bad truth table '{hex}' for arity {k}")))?;
+        nl.add_lut(inputs, TruthTable::from_bits(k, bits));
+        let stage = lj
+            .req("stage")
+            .map_err(&err)?
+            .as_usize()
+            .ok_or_else(|| err("stage must be a non-negative integer".into()))?;
+        stages.push(stage as u32);
+    }
+
+    let outs = req("outputs")?
+        .as_arr()
+        .ok_or_else(|| invalid("outputs must be an array"))?;
+    // The circuit's outputs are the last layer's activation bits; the
+    // fingerprint only covers the model, so the output count must be
+    // validated here or a tampered artifact would panic the serving path.
+    let last = model.layers.last().ok_or_else(|| invalid("model has no layers"))?;
+    let want_outputs = last.out_width * last.act.bits;
+    if outs.len() != want_outputs {
+        return Err(invalid(format!(
+            "circuit has {} outputs, model decodes {want_outputs} \
+             ({} neurons × {} bits)",
+            outs.len(),
+            last.out_width,
+            last.act.bits
+        )));
+    }
+    let sig_limit = 2 + num_inputs + nl.num_luts();
+    for (i, oj) in outs.iter().enumerate() {
+        let pair = oj
+            .as_arr()
+            .ok_or_else(|| invalid(format!("output {i} must be [code, inverted]")))?;
+        let (code, inv) = match pair {
+            [c, v] => (
+                c.as_usize()
+                    .ok_or_else(|| invalid(format!("output {i}: bad signal code")))?,
+                v.as_bool()
+                    .ok_or_else(|| invalid(format!("output {i}: bad inversion flag")))?,
+            ),
+            _ => return Err(invalid(format!("output {i} must be [code, inverted]"))),
+        };
+        if code >= sig_limit {
+            return Err(invalid(format!("output {i}: signal code {code} out of range")));
+        }
+        nl.add_output(Sig::from_code(code as u32, num_inputs), inv);
+    }
+
+    let circuit = PipelinedCircuit { netlist: nl, stage_of_lut: stages, num_stages };
+    circuit.check_stages().map_err(ArtifactError::Invalid)?;
+    Ok(circuit)
+}
+
+/// Write a circuit artifact (pretty-printed for inspectability).
+pub fn save_circuit(
+    path: &str,
+    circuit: &PipelinedCircuit,
+    model: &Model,
+) -> Result<(), ArtifactError> {
+    let text = circuit_to_json(circuit, model).to_pretty_string();
+    std::fs::write(path, text)
+        .map_err(|e| ArtifactError::Io { path: path.to_string(), msg: e.to_string() })
+}
+
+/// Load a circuit artifact and check it against `model`.
+pub fn load_circuit(path: &str, model: &Model) -> Result<PipelinedCircuit, ArtifactError> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| ArtifactError::Io { path: path.to_string(), msg: e.to_string() })?;
+    let j = Json::parse(&text).map_err(|e| ArtifactError::Parse(format!("{path}: {e}")))?;
+    circuit_from_json(&j, model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::{run_flow, FlowConfig};
+    use crate::nn::model::random_model;
+
+    fn flow_circuit(seed: u64) -> (Model, PipelinedCircuit) {
+        let m = random_model("art", 5, &[4, 3], 2, 1, seed);
+        let r =
+            run_flow(&m, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+        (m, r.circuit)
+    }
+
+    #[test]
+    fn roundtrip_preserves_structure_and_function() {
+        let (m, circuit) = flow_circuit(11);
+        let text = circuit_to_json(&circuit, &m).to_pretty_string();
+        let back = circuit_from_json(&Json::parse(&text).unwrap(), &m).unwrap();
+        assert_eq!(back.num_stages, circuit.num_stages);
+        assert_eq!(back.stage_of_lut, circuit.stage_of_lut);
+        assert_eq!(back.netlist.num_luts(), circuit.netlist.num_luts());
+        assert_eq!(back.stats(), circuit.stats());
+        for bits in 0..(1u64 << 5) {
+            assert_eq!(back.eval(bits), circuit.eval(bits), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let (m, circuit) = flow_circuit(3);
+        let path = "/tmp/nnt_artifact_test.circuit.json";
+        save_circuit(path, &circuit, &m).unwrap();
+        let back = load_circuit(path, &m).unwrap();
+        assert_eq!(back.stats(), circuit.stats());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_weight_sensitive() {
+        let m = random_model("fp", 4, &[3], 2, 1, 9);
+        assert_eq!(model_fingerprint(&m), model_fingerprint(&m.clone()));
+        let mut m2 = m.clone();
+        m2.layers[0].weights[0][0] += 0.25;
+        assert_ne!(model_fingerprint(&m), model_fingerprint(&m2));
+    }
+
+    #[test]
+    fn mismatched_model_is_rejected() {
+        let (m, circuit) = flow_circuit(5);
+        let other = random_model("art", 5, &[4, 3], 2, 1, 6); // same shape, other weights
+        let j = circuit_to_json(&circuit, &m);
+        let err = circuit_from_json(&j, &other).unwrap_err();
+        assert!(matches!(err, ArtifactError::FingerprintMismatch { .. }), "{err}");
+    }
+
+    #[test]
+    fn version_and_format_are_gated() {
+        let (m, circuit) = flow_circuit(7);
+        let j = circuit_to_json(&circuit, &m);
+        let Json::Obj(o) = j else { panic!("artifact must be an object") };
+
+        let mut wrong_version = o.clone();
+        wrong_version.insert("version".into(), Json::int(99));
+        let err = circuit_from_json(&Json::Obj(wrong_version), &m).unwrap_err();
+        assert_eq!(err, ArtifactError::Version { found: 99, supported: VERSION });
+
+        let mut wrong_format = o.clone();
+        wrong_format.insert("format".into(), Json::str("something-else"));
+        let err = circuit_from_json(&Json::Obj(wrong_format), &m).unwrap_err();
+        assert!(matches!(err, ArtifactError::Format(_)), "{err}");
+    }
+
+    #[test]
+    fn corrupt_topology_is_a_typed_error_not_a_panic() {
+        let (m, circuit) = flow_circuit(13);
+        let j = circuit_to_json(&circuit, &m);
+        let Json::Obj(mut o) = j else { panic!() };
+        // Point the first LUT's first input at itself (forward reference).
+        let Some(Json::Arr(luts)) = o.get_mut("luts") else { panic!() };
+        if luts.is_empty() {
+            return; // degenerate constant-only netlist; nothing to corrupt
+        }
+        let self_code = 2 + m.input_bits(); // code of LUT 0
+        if let Json::Obj(lut0) = &mut luts[0] {
+            if let Some(Json::Arr(ins)) = lut0.get_mut("in") {
+                if ins.is_empty() {
+                    return; // degenerate constant-only netlist; nothing to corrupt
+                }
+                ins[0] = Json::int(self_code as i64);
+            }
+        }
+        let err = circuit_from_json(&Json::Obj(o), &m).unwrap_err();
+        assert!(matches!(err, ArtifactError::Invalid(_)), "{err}");
+    }
+
+    #[test]
+    fn truncated_outputs_are_rejected_not_panicked() {
+        // The fingerprint covers only the model, so a tampered "outputs"
+        // array stays fingerprint-valid — the loader must catch it.
+        let (m, circuit) = flow_circuit(21);
+        let j = circuit_to_json(&circuit, &m);
+        let Json::Obj(mut o) = j else { panic!() };
+        let Some(Json::Arr(outs)) = o.get_mut("outputs") else { panic!() };
+        outs.pop();
+        let err = circuit_from_json(&Json::Obj(o), &m).unwrap_err();
+        assert!(matches!(err, ArtifactError::Invalid(_)), "{err}");
+        assert!(err.to_string().contains("outputs"), "{err}");
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        let m = random_model("io", 4, &[3], 2, 1, 1);
+        let err = load_circuit("/tmp/does_not_exist_nnt.circuit.json", &m).unwrap_err();
+        assert!(matches!(err, ArtifactError::Io { .. }), "{err}");
+    }
+}

@@ -11,6 +11,7 @@
 
 use std::sync::Arc;
 
+use crate::error::NnError;
 use crate::flow::config::FlowConfig;
 use crate::flow::synth::{synthesize_neuron, verify_neuron, SynthesizedNeuron};
 use crate::logic::aig::Aig;
@@ -44,13 +45,14 @@ pub fn run_flow(
     model: &Model,
     config: &FlowConfig,
     dc_traces: Option<&[Vec<f64>]>,
-) -> Result<FlowResult, String> {
-    model.validate()?;
+) -> Result<FlowResult, NnError> {
+    model.validate().map_err(NnError::Flow)?;
     let mut timer = StageTimer::new();
 
     // ---- optional data-derived don't-cares ----
     let observed: Option<Vec<Vec<Vec<bool>>>> = if config.dc_from_data {
-        let xs = dc_traces.ok_or("dc_from_data requires training inputs")?;
+        let xs = dc_traces
+            .ok_or_else(|| NnError::Flow("dc_from_data requires training inputs".into()))?;
         Some(timer.time("observe", || {
             let traces: Vec<Trace> = xs
                 .iter()
@@ -86,12 +88,14 @@ pub fn run_flow(
     });
 
     if config.verify {
-        timer.time("verify-covers", || -> Result<(), String> {
-            for s in &synthesized {
-                verify_neuron(s)?;
-            }
-            Ok(())
-        })?;
+        timer
+            .time("verify-covers", || -> Result<(), String> {
+                for s in &synthesized {
+                    verify_neuron(s)?;
+                }
+                Ok(())
+            })
+            .map_err(NnError::Flow)?;
     }
 
     // ---- per-layer AIG + mapping ----
@@ -158,7 +162,9 @@ pub fn run_flow(
         stage_of_lut: stages,
         num_stages: model.layers.len() as u32,
     };
-    circuit_preretime.check_stages().map_err(|e| format!("stitch: {e}"))?;
+    circuit_preretime
+        .check_stages()
+        .map_err(|e| NnError::Flow(format!("stitch: {e}")))?;
 
     // ---- retime ----
     let circuit = if config.retime {
@@ -285,7 +291,7 @@ pub fn verify_circuit(
     circuit: &PipelinedCircuit,
     n: usize,
     seed: u64,
-) -> Result<(), String> {
+) -> Result<(), NnError> {
     use crate::util::prng::Xoshiro256;
     let mut rng = Xoshiro256::new(seed);
     let sim = crate::logic::sim::CompiledNetlist::compile(&circuit.netlist);
@@ -301,9 +307,9 @@ pub fn verify_circuit(
         let got_bits = sim.run_batch(&[in_bits]).pop().unwrap();
         let got = bits_to_codes(&got_bits, out_bits_per);
         if &got != want {
-            return Err(format!(
+            return Err(NnError::Flow(format!(
                 "circuit mismatch on sample {i}: got {got:?}, want {want:?}"
-            ));
+            )));
         }
     }
     Ok(())
@@ -340,9 +346,25 @@ pub fn classify_packed(
     model: &Model,
     outputs: &crate::util::bitvec::PackedBatch,
 ) -> Vec<usize> {
-    let q = &model.layers.last().unwrap().act;
+    let last = model.layers.last().unwrap();
+    let q = &last.act;
     let out_b = q.bits;
-    debug_assert_eq!(outputs.num_signals(), model.layers.last().unwrap().out_width * out_b);
+    // Real check, not debug_assert: this is a public entry point on the
+    // serving path, and a width mismatch must fail loudly in release builds
+    // too (PR 1 policy), never decode garbage lanes.
+    assert_eq!(
+        outputs.num_signals(),
+        last.out_width * out_b,
+        "classify_packed: batch carries {} output signals, model expects {} ({} neurons × {} bits)",
+        outputs.num_signals(),
+        last.out_width * out_b,
+        last.out_width,
+        out_b
+    );
+    // The code → value table (2^bits entries) is exactly the quantizer's
+    // level array; bind it once instead of calling `q.value_of(code)` per
+    // class per sample.
+    let values: &[f64] = &q.levels;
     (0..outputs.num_samples())
         .map(|s| {
             let mut best = 0usize;
@@ -354,7 +376,7 @@ pub fn classify_packed(
                         code |= 1 << b;
                     }
                 }
-                let v = q.value_of(code);
+                let v = values[code];
                 if v > best_v {
                     best_v = v;
                     best = n;
@@ -476,6 +498,15 @@ mod tests {
         let ys: Vec<usize> = xs.iter().map(|x| crate::nn::eval::classify(&m, x)).collect();
         // Logic is bit-exact ⇒ same predictions ⇒ 100% agreement.
         assert_eq!(circuit_accuracy(&m, &r.circuit, &xs, &ys), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "classify_packed")]
+    fn classify_packed_rejects_wrong_width() {
+        let m = tiny_model(1);
+        // 1 packed signal; the model's last layer decodes 3 neurons × 3 bits.
+        let outputs = crate::util::bitvec::PackedBatch::with_capacity(1, 0);
+        let _ = classify_packed(&m, &outputs);
     }
 
     #[test]

@@ -4,10 +4,14 @@
 //! * [`config`] — flow switches (every one has an ablation bench)
 //! * [`synth`] — per-neuron enumeration + ESPRESSO
 //! * [`build`] — layer AIGs, LUT mapping, stitching, retiming, verification
+//! * [`artifact`] — persistent compiled-circuit files (`nullanet compile` /
+//!   `--circuit`), fingerprint-bound to the model
 
+pub mod artifact;
 pub mod build;
 pub mod config;
 pub mod synth;
 
+pub use artifact::ArtifactError;
 pub use build::{circuit_accuracy, run_flow, FlowResult};
 pub use config::FlowConfig;

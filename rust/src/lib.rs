@@ -14,9 +14,12 @@
 //! * **L3 (this crate)** — loads the trained model, runs the
 //!   enumerate → ESPRESSO-II → AIG → LUT-map → retime pipeline, verifies
 //!   bit-exactness against the quantized network, evaluates FPGA cost
-//!   (LUTs/FFs/fmax), and serves inference from either the combinational
-//!   netlist (packed, multi-worker bit-parallel simulator) or the PJRT
-//!   numeric engine.
+//!   (LUTs/FFs/fmax), persists the synthesized circuit as a reloadable,
+//!   fingerprint-checked artifact ([`flow::artifact`]), and serves
+//!   inference behind the pluggable [`coordinator::engine::InferenceEngine`]
+//!   trait: the packed multi-worker bit-parallel simulator, the PJRT
+//!   numeric engine, or a disagreement-counting mirror of both. Public
+//!   entry points report typed [`NnError`]s.
 //!
 //! See [`rust/DESIGN.md`](../DESIGN.md) for the full system inventory, the
 //! packed serving path, and the dependency/substitution policy.
@@ -24,6 +27,7 @@
 pub mod baseline;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod flow;
 pub mod fpga;
 pub mod logic;
@@ -31,3 +35,5 @@ pub mod logic;
 pub mod nn;
 pub mod runtime;
 pub mod util;
+
+pub use error::NnError;

@@ -20,6 +20,34 @@ pub enum Sig {
     Lut(u32),
 }
 
+impl Sig {
+    /// Dense integer encoding of a signal, shared by the compiled simulator
+    /// ([`crate::logic::sim`]) and the circuit artifact format
+    /// ([`crate::flow::artifact`]): `0` = const 0, `1` = const 1, `2 + i` =
+    /// input `i`, `2 + num_inputs + j` = LUT `j`.
+    #[inline]
+    pub fn to_code(self, num_inputs: usize) -> u32 {
+        match self {
+            Sig::Const(false) => 0,
+            Sig::Const(true) => 1,
+            Sig::Input(i) => 2 + i,
+            Sig::Lut(j) => 2 + num_inputs as u32 + j,
+        }
+    }
+
+    /// Inverse of [`Sig::to_code`]. Any `code ≥ 2 + num_inputs` decodes to a
+    /// LUT reference; range-check against the netlist before use.
+    #[inline]
+    pub fn from_code(code: u32, num_inputs: usize) -> Sig {
+        match code {
+            0 => Sig::Const(false),
+            1 => Sig::Const(true),
+            c if (c as usize) < 2 + num_inputs => Sig::Input(c - 2),
+            c => Sig::Lut(c - 2 - num_inputs as u32),
+        }
+    }
+}
+
 /// A k-input lookup table node.
 #[derive(Clone, Debug)]
 pub struct Lut {
@@ -399,6 +427,24 @@ mod tests {
             assert_eq!((outs[0] >> lane) & 1 == 1, e[0]);
             assert_eq!((outs[1] >> lane) & 1 == 1, e[1]);
         }
+    }
+
+    #[test]
+    fn sig_code_roundtrip() {
+        let num_inputs = 5usize;
+        let sigs = [
+            Sig::Const(false),
+            Sig::Const(true),
+            Sig::Input(0),
+            Sig::Input(4),
+            Sig::Lut(0),
+            Sig::Lut(17),
+        ];
+        for s in sigs {
+            assert_eq!(Sig::from_code(s.to_code(num_inputs), num_inputs), s);
+        }
+        assert_eq!(Sig::Input(0).to_code(num_inputs), 2);
+        assert_eq!(Sig::Lut(0).to_code(num_inputs), 2 + num_inputs as u32);
     }
 
     #[test]

@@ -96,14 +96,7 @@ impl CompiledNetlist {
     /// Compile a netlist (all LUTs must have ≤ 6 inputs).
     pub fn compile(nl: &LutNetlist) -> CompiledNetlist {
         assert!(nl.max_arity() <= 6, "compiled simulator supports k ≤ 6");
-        let code_of = |s: &Sig| -> Code {
-            match s {
-                Sig::Const(false) => 0,
-                Sig::Const(true) => 1,
-                Sig::Input(i) => 2 + *i,
-                Sig::Lut(j) => 2 + nl.num_inputs as u32 + *j,
-            }
-        };
+        let code_of = |s: &Sig| -> Code { s.to_code(nl.num_inputs) };
         let mut lut_inputs = Vec::new();
         let mut offsets = vec![0u32];
         let mut tables = Vec::with_capacity(nl.luts.len());

@@ -1,26 +1,35 @@
 //! `nullanet` — the NullaNet Tiny command-line interface.
 //!
 //! ```text
-//! nullanet flow    --arch jsc-s [--no-espresso] [--no-retime] [--jobs N]
-//! nullanet table1  [--test-set artifacts/jsc_test.bin] [--quick]
-//! nullanet verify  --arch jsc-s [--samples 2000]
-//! nullanet serve   --arch jsc-s --addr 127.0.0.1:7878 --engine logic|pjrt|compare [--workers N]
-//! nullanet emit    --arch jsc-s --format blif|verilog --out file
-//! nullanet info    --arch jsc-s
+//! nullanet flow      --arch jsc-s [--no-espresso] [--no-retime] [--jobs N]
+//! nullanet compile   --arch jsc-s [--out artifacts/jsc-s.circuit.json]
+//! nullanet table1    [--test-set artifacts/jsc_test.bin] [--quick]
+//! nullanet verify    --arch jsc-s [--samples 2000] [--circuit file.circuit.json]
+//! nullanet serve     --arch jsc-s --addr 127.0.0.1:7878 --engine logic|pjrt|compare
+//!                    [--circuit file.circuit.json] [--workers N]
+//! nullanet emit      --arch jsc-s --format blif|verilog --out file
+//! nullanet info      --arch jsc-s
+//! nullanet gen-model --features 6 --widths 5,4 --fanin 2 --act-bits 1 --out m.json
 //! ```
 //!
 //! Models and datasets come from `artifacts/` (built by `make artifacts`).
+//! `compile` persists the synthesized circuit as a fingerprint-bound
+//! artifact; `--circuit` on `serve`/`emit`/`verify` loads it back instead
+//! of re-running synthesis. See the root `README.md` for the full workflow
+//! and the JSON wire protocol.
 
 use std::process::ExitCode;
 use std::sync::Arc;
 
 use nullanet_tiny::baseline::{build_logicnets, AqpModel};
-use nullanet_tiny::coordinator::{BatchPolicy, PjrtSpec, Policy, Router};
+use nullanet_tiny::coordinator::{BatchPolicy, PjrtSpec, Policy, RouterBuilder};
 use nullanet_tiny::data::Dataset;
-use nullanet_tiny::flow::{circuit_accuracy, run_flow, FlowConfig};
+use nullanet_tiny::error::NnError;
+use nullanet_tiny::flow::{artifact, circuit_accuracy, run_flow, FlowConfig};
 use nullanet_tiny::fpga::report::{format_table, Comparison, ResultRow};
 use nullanet_tiny::fpga::timing::TimingModel;
-use nullanet_tiny::nn::model::{Arch, Model};
+use nullanet_tiny::logic::netlist::PipelinedCircuit;
+use nullanet_tiny::nn::model::{random_model, Arch, Model};
 use nullanet_tiny::util::cli::Args;
 
 fn main() -> ExitCode {
@@ -33,14 +42,21 @@ fn main() -> ExitCode {
     };
     let result = match args.command.as_deref() {
         Some("flow") => cmd_flow(&args),
+        Some("compile") => cmd_compile(&args),
         Some("table1") => cmd_table1(&args),
         Some("verify") => cmd_verify(&args),
         Some("serve") => cmd_serve(&args),
         Some("emit") => cmd_emit(&args),
         Some("info") => cmd_info(&args),
-        Some(other) => Err(format!("unknown command '{other}'; see README")),
+        Some("gen-model") => cmd_gen_model(&args),
+        Some(other) => {
+            Err(NnError::Config(format!("unknown command '{other}'; see README.md")))
+        }
         None => {
-            println!("usage: nullanet <flow|table1|verify|serve|emit|info> [options]");
+            println!(
+                "usage: nullanet <flow|compile|table1|verify|serve|emit|info|gen-model> \
+                 [options]"
+            );
             Ok(())
         }
     };
@@ -53,45 +69,74 @@ fn main() -> ExitCode {
     }
 }
 
-/// Resolve `--arch`/`--model` into a loaded model.
-fn load_model(args: &Args) -> Result<Model, String> {
-    if let Some(path) = args.get_opt("model") {
-        return Model::load(path);
-    }
-    let arch = args.get_str("arch", "jsc-s");
-    Arch::parse(&arch).ok_or_else(|| format!("unknown arch '{arch}'"))?;
-    let dir = args.get_str("artifacts", "artifacts");
-    Model::load(&format!("{dir}/{arch}.model.json"))
+/// Lift a CLI-layer `String` error into the typed crate error.
+fn conf<T>(r: Result<T, String>) -> Result<T, NnError> {
+    r.map_err(NnError::Config)
 }
 
-fn flow_config(args: &Args) -> Result<FlowConfig, String> {
+/// Resolve `--arch`/`--model` into a loaded model.
+fn load_model(args: &Args) -> Result<Model, NnError> {
+    if let Some(path) = args.get_opt("model") {
+        return Model::load(path).map_err(NnError::Data);
+    }
+    let arch = args.get_str("arch", "jsc-s");
+    Arch::parse(&arch).ok_or_else(|| NnError::Config(format!("unknown arch '{arch}'")))?;
+    let dir = args.get_str("artifacts", "artifacts");
+    Model::load(&format!("{dir}/{arch}.model.json")).map_err(NnError::Data)
+}
+
+fn flow_config(args: &Args) -> Result<FlowConfig, NnError> {
     Ok(FlowConfig {
         use_espresso: !args.get_bool("no-espresso"),
         retime: !args.get_bool("no-retime"),
         dc_from_data: args.get_bool("dc-from-data"),
-        jobs: args.get_usize("jobs", FlowConfig::default().jobs)?,
+        jobs: conf(args.get_usize("jobs", FlowConfig::default().jobs))?,
         map_for_area: args.get_bool("map-for-area"),
         verify: !args.get_bool("no-verify"),
         ..Default::default()
     })
 }
 
-fn cmd_flow(args: &Args) -> Result<(), String> {
-    args.check_known(&[
+/// Load the training set when `--dc-from-data` is active (the flow derives
+/// don't-cares from observed activations).
+fn load_dc_traces(args: &Args, cfg: &FlowConfig) -> Result<Option<Dataset>, NnError> {
+    if !cfg.dc_from_data {
+        return Ok(None);
+    }
+    let dir = args.get_str("artifacts", "artifacts");
+    Ok(Some(Dataset::load(&format!("{dir}/jsc_train.bin"))?))
+}
+
+/// Resolve the circuit for `serve`/`emit`/`verify`: load a compiled,
+/// fingerprint-checked artifact when `--circuit` is given (no synthesis),
+/// otherwise run the full flow.
+fn load_or_synthesize(args: &Args, model: &Model) -> Result<PipelinedCircuit, NnError> {
+    if let Some(path) = args.get_opt("circuit") {
+        let circuit = artifact::load_circuit(path, model)?;
+        println!(
+            "loaded compiled circuit {path} ({} LUTs, {} stages)",
+            circuit.netlist.num_luts(),
+            circuit.num_stages
+        );
+        return Ok(circuit);
+    }
+    println!("synthesizing logic for {} …", model.summary());
+    let cfg = flow_config(args)?;
+    Ok(run_flow(model, &cfg, None)?.circuit)
+}
+
+fn cmd_flow(args: &Args) -> Result<(), NnError> {
+    conf(args.check_known(&[
         "arch", "model", "artifacts", "no-espresso", "no-retime", "dc-from-data",
         "jobs", "map-for-area", "no-verify", "test-set",
-    ])?;
+    ]))?;
     let model = load_model(args)?;
     println!("model: {}", model.summary());
     let cfg = flow_config(args)?;
     let dir = args.get_str("artifacts", "artifacts");
-    let train = if cfg.dc_from_data {
-        Some(Dataset::load(&format!("{dir}/jsc_train.bin")).map_err(|e| e.to_string())?)
-    } else {
-        None
-    };
+    let train = load_dc_traces(args, &cfg)?;
     let xs_ref = train.as_ref().map(|d| d.xs.as_slice());
-    let r = run_flow(&model, &cfg, xs_ref).map_err(|e| e.to_string())?;
+    let r = run_flow(&model, &cfg, xs_ref)?;
     println!("{}", r.timer.report("flow stages"));
     let stats = r.circuit.stats();
     let tm = TimingModel::vu9p();
@@ -108,19 +153,44 @@ fn cmd_flow(args: &Args) -> Result<(), String> {
     );
     let test_path = args.get_str("test-set", &format!("{dir}/jsc_test.bin"));
     if std::path::Path::new(&test_path).exists() {
-        let test = Dataset::load(&test_path).map_err(|e| e.to_string())?;
+        let test = Dataset::load(&test_path)?;
         let acc = circuit_accuracy(&model, &r.circuit, &test.xs, &test.ys);
         println!("logic-circuit test accuracy: {:.2}%", acc * 100.0);
     }
     Ok(())
 }
 
-fn cmd_table1(args: &Args) -> Result<(), String> {
-    args.check_known(&["artifacts", "jobs", "test-set", "quick"])?;
+/// Synthesize once, persist the circuit as a reloadable artifact.
+fn cmd_compile(args: &Args) -> Result<(), NnError> {
+    conf(args.check_known(&[
+        "arch", "model", "artifacts", "out", "no-espresso", "no-retime",
+        "dc-from-data", "jobs", "map-for-area", "no-verify",
+    ]))?;
+    let model = load_model(args)?;
+    println!("model: {}", model.summary());
+    let cfg = flow_config(args)?;
     let dir = args.get_str("artifacts", "artifacts");
-    let test = Dataset::load(&args.get_str("test-set", &format!("{dir}/jsc_test.bin")))
-        .map_err(|e| e.to_string())?;
-    let jobs = args.get_usize("jobs", FlowConfig::default().jobs)?;
+    let train = load_dc_traces(args, &cfg)?;
+    let xs_ref = train.as_ref().map(|d| d.xs.as_slice());
+    let r = run_flow(&model, &cfg, xs_ref)?;
+    let out = args.get_str("out", &format!("{dir}/{}.circuit.json", model.name));
+    artifact::save_circuit(&out, &r.circuit, &model)?;
+    let stats = r.circuit.stats();
+    println!(
+        "wrote {out}: {} LUTs, {} FFs, {} stages (fingerprint {})",
+        stats.luts,
+        stats.ffs,
+        r.circuit.num_stages,
+        artifact::model_fingerprint(&model),
+    );
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<(), NnError> {
+    conf(args.check_known(&["artifacts", "jobs", "test-set", "quick"]))?;
+    let dir = args.get_str("artifacts", "artifacts");
+    let test = Dataset::load(&args.get_str("test-set", &format!("{dir}/jsc_test.bin")))?;
+    let jobs = conf(args.get_usize("jobs", FlowConfig::default().jobs))?;
     let tm = TimingModel::vu9p();
     let mut rows = Vec::new();
     let archs: &[Arch] = if args.get_bool("quick") {
@@ -130,12 +200,14 @@ fn cmd_table1(args: &Args) -> Result<(), String> {
     };
     for arch in archs {
         let name = arch.name();
-        let ours_model = Model::load(&format!("{dir}/{name}.model.json"))?;
-        let base_model = Model::load(&format!("{dir}/{name}.logicnets.model.json"))?;
+        let ours_model =
+            Model::load(&format!("{dir}/{name}.model.json")).map_err(NnError::Data)?;
+        let base_model = Model::load(&format!("{dir}/{name}.logicnets.model.json"))
+            .map_err(NnError::Data)?;
         let cfg = FlowConfig { jobs, ..Default::default() };
-        let r = run_flow(&ours_model, &cfg, None).map_err(|e| e.to_string())?;
+        let r = run_flow(&ours_model, &cfg, None)?;
         let ours_acc = circuit_accuracy(&ours_model, &r.circuit, &test.xs, &test.ys);
-        let base = build_logicnets(&base_model, 6)?;
+        let base = build_logicnets(&base_model, 6).map_err(NnError::Flow)?;
         let base_acc = circuit_accuracy(&base_model, &base.circuit, &test.xs, &test.ys);
         rows.push(Comparison {
             ours: ResultRow::from_stats(
@@ -157,7 +229,8 @@ fn cmd_table1(args: &Args) -> Result<(), String> {
     // Headline claims (H1/H2).
     if let Some(m) = rows.iter().find(|c| c.ours.arch == "JSC-M") {
         let aqp = AqpModel::default();
-        let ours_model = Model::load(&format!("{dir}/jsc-m.model.json"))?;
+        let ours_model =
+            Model::load(&format!("{dir}/jsc-m.model.json")).map_err(NnError::Data)?;
         let aqp_ns = aqp.latency_ns(&ours_model);
         println!(
             "\nheadlines: latency vs LogicNets {:.2}x lower; LUTs {:.2}x lower; \
@@ -172,91 +245,102 @@ fn cmd_table1(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_verify(args: &Args) -> Result<(), String> {
-    args.check_known(&["arch", "model", "artifacts", "samples", "jobs"])?;
+fn cmd_verify(args: &Args) -> Result<(), NnError> {
+    conf(args.check_known(&["arch", "model", "artifacts", "samples", "jobs", "circuit"]))?;
     let model = load_model(args)?;
-    let cfg = FlowConfig {
-        jobs: args.get_usize("jobs", FlowConfig::default().jobs)?,
-        ..Default::default()
-    };
-    let r = run_flow(&model, &cfg, None).map_err(|e| e.to_string())?;
-    let n = args.get_usize("samples", 2000)?;
-    nullanet_tiny::flow::build::verify_circuit(&model, &r.circuit, n, 0xBEEF)
-        .map_err(|e| e.to_string())?;
-    println!(
-        "OK: circuit ≡ quantized NN on {n} random samples \
-         (plus per-cover exhaustive checks during the flow)"
-    );
+    let circuit = load_or_synthesize(args, &model)?;
+    let n = conf(args.get_usize("samples", 2000))?;
+    nullanet_tiny::flow::build::verify_circuit(&model, &circuit, n, 0xBEEF)?;
+    println!("OK: circuit ≡ quantized NN on {n} random samples");
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<(), String> {
-    args.check_known(&[
+fn cmd_serve(args: &Args) -> Result<(), NnError> {
+    conf(args.check_known(&[
         "arch", "model", "artifacts", "addr", "engine", "max-batch", "max-wait-us",
-        "jobs", "workers",
-    ])?;
+        "jobs", "workers", "circuit",
+    ]))?;
     let model = load_model(args)?;
-    let cfg = FlowConfig {
-        jobs: args.get_usize("jobs", FlowConfig::default().jobs)?,
-        ..Default::default()
-    };
-    println!("synthesizing logic for {} …", model.summary());
-    let r = run_flow(&model, &cfg, None).map_err(|e| e.to_string())?;
     let policy = Policy::parse(&args.get_str("engine", "logic"))
-        .ok_or("bad --engine (logic|pjrt|compare)")?;
-    let pjrt = if policy != Policy::Logic {
-        let dir = args.get_str("artifacts", "artifacts");
-        let arch = args.get_str("arch", "jsc-s");
-        let out_w = model.layers.last().unwrap().out_width;
-        Some(PjrtSpec {
-            hlo_path: format!("{dir}/{arch}.hlo.txt"),
-            batch: 64,
-            in_features: model.input_features,
-            out_width: out_w,
-        })
-    } else {
-        None
-    };
+        .ok_or_else(|| NnError::Config("bad --engine (logic|pjrt|compare)".into()))?;
+    if policy == Policy::Numeric && args.get_opt("circuit").is_some() {
+        return Err(NnError::Config(
+            "--circuit is unused with --engine pjrt (the numeric engine loads the \
+             HLO artifact, not a logic circuit); drop it or pick logic/compare"
+                .into(),
+        ));
+    }
     let bp = BatchPolicy {
-        max_batch: args.get_usize("max-batch", 64)?,
+        max_batch: conf(args.get_usize("max-batch", 64))?,
         max_wait: std::time::Duration::from_micros(
-            args.get_usize("max-wait-us", 200)? as u64
+            conf(args.get_usize("max-wait-us", 200))? as u64,
         ),
     };
     // Logic-engine shard workers: batches spanning several 64-sample lane
     // groups are evaluated in parallel on one shared compiled netlist.
-    let default_workers = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(4);
-    let workers = args.get_usize("workers", default_workers)?;
-    let router =
-        Arc::new(Router::start(model, r.circuit.netlist, pjrt, policy, bp, workers));
+    let workers = conf(args.get_usize("workers", RouterBuilder::default_workers()))?;
+
+    let mut builder = RouterBuilder::new(model.clone())
+        .engine(policy)
+        .batch_policy(bp)
+        .workers(workers);
+    if policy != Policy::Numeric {
+        // Artifact cold-start path: `--circuit` loads the compiled netlist
+        // (fingerprint-checked) instead of re-running the synthesis flow.
+        let circuit = load_or_synthesize(args, &model)?;
+        builder = builder.circuit(circuit.netlist);
+    }
+    if policy != Policy::Logic {
+        let dir = args.get_str("artifacts", "artifacts");
+        let arch = args.get_str("arch", "jsc-s");
+        let out_w = model.layers.last().map(|l| l.out_width).unwrap_or(model.num_classes);
+        let spec = PjrtSpec {
+            hlo_path: format!("{dir}/{arch}.hlo.txt"),
+            batch: 64,
+            in_features: model.input_features,
+            out_width: out_w,
+        };
+        // Compare degrades gracefully: without a loadable numeric reference
+        // the router serves logic alone. Numeric has no fallback — the spec
+        // is attached unconditionally so build() reports the typed error.
+        if policy == Policy::Numeric {
+            builder = builder.pjrt(spec);
+        } else {
+            match spec.preflight() {
+                Ok(()) => builder = builder.pjrt(spec),
+                Err(e) => println!(
+                    "(compare: numeric shadow unavailable, serving logic alone — {e})"
+                ),
+            }
+        }
+    }
+    let router = Arc::new(builder.build()?);
     let addr = args.get_str("addr", "127.0.0.1:7878");
-    println!("serving on {addr} (policy {policy:?}; send {{\"cmd\":\"shutdown\"}} to stop)");
+    println!(
+        "serving on {addr} (policy {policy:?}, engine '{}'; send \
+         {{\"cmd\":\"shutdown\"}} to stop)",
+        router.engine_name()
+    );
     nullanet_tiny::coordinator::server::serve(Arc::clone(&router), &addr, None)
-        .map_err(|e| e.to_string())?;
+        .map_err(|e| NnError::Config(format!("serve on {addr}: {e}")))?;
     println!("{}", router.metrics().report());
     Ok(())
 }
 
-fn cmd_emit(args: &Args) -> Result<(), String> {
-    args.check_known(&["arch", "model", "artifacts", "format", "out", "jobs"])?;
+fn cmd_emit(args: &Args) -> Result<(), NnError> {
+    conf(args.check_known(&["arch", "model", "artifacts", "format", "out", "jobs", "circuit"]))?;
     let model = load_model(args)?;
-    let cfg = FlowConfig {
-        jobs: args.get_usize("jobs", FlowConfig::default().jobs)?,
-        ..Default::default()
-    };
-    let r = run_flow(&model, &cfg, None).map_err(|e| e.to_string())?;
+    let circuit = load_or_synthesize(args, &model)?;
     let name = model.name.replace('-', "_");
     let text = match args.get_str("format", "blif").as_str() {
-        "blif" => nullanet_tiny::logic::blif::pipelined_to_blif(&r.circuit, &name),
-        "verilog" => nullanet_tiny::logic::verilog::pipelined_to_verilog(&r.circuit, &name),
-        f => return Err(format!("unknown format '{f}'")),
+        "blif" => nullanet_tiny::logic::blif::pipelined_to_blif(&circuit, &name),
+        "verilog" => nullanet_tiny::logic::verilog::pipelined_to_verilog(&circuit, &name),
+        f => return Err(NnError::Config(format!("unknown format '{f}'"))),
     };
     match args.get_opt("out") {
         Some(path) => {
-            std::fs::write(path, text).map_err(|e| e.to_string())?;
+            std::fs::write(path, text)
+                .map_err(|e| NnError::Config(format!("write {path}: {e}")))?;
             println!("wrote {path}");
         }
         None => print!("{text}"),
@@ -264,8 +348,8 @@ fn cmd_emit(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_info(args: &Args) -> Result<(), String> {
-    args.check_known(&["arch", "model", "artifacts"])?;
+fn cmd_info(args: &Args) -> Result<(), NnError> {
+    conf(args.check_known(&["arch", "model", "artifacts"]))?;
     let model = load_model(args)?;
     println!("{}", model.summary());
     for (l, layer) in model.layers.iter().enumerate() {
@@ -281,5 +365,34 @@ fn cmd_info(args: &Args) -> Result<(), String> {
             layer.max_fanin() * in_bits,
         );
     }
+    Ok(())
+}
+
+/// Write a deterministic random model (CI smoke tests, local experiments
+/// without the trained artifacts).
+fn cmd_gen_model(args: &Args) -> Result<(), NnError> {
+    conf(args.check_known(&["name", "features", "widths", "fanin", "act-bits", "seed", "out"]))?;
+    let name = args.get_str("name", "tiny");
+    let features = conf(args.get_usize("features", 6))?;
+    let widths_s = args.get_str("widths", "5,4");
+    let mut widths: Vec<usize> = Vec::new();
+    for part in widths_s.split(',') {
+        widths.push(part.trim().parse().map_err(|_| {
+            NnError::Config(format!("--widths: expected comma-separated integers, got '{part}'"))
+        })?);
+    }
+    let fanin = conf(args.get_usize("fanin", 2))?;
+    let act_bits = conf(args.get_usize("act-bits", 1))?;
+    if fanin * act_bits > 12 {
+        return Err(NnError::Config(format!(
+            "fanin ({fanin}) × act-bits ({act_bits}) > 12: per-neuron enumeration \
+             would be infeasible"
+        )));
+    }
+    let seed = conf(args.get_usize("seed", 7))? as u64;
+    let model = random_model(&name, features, &widths, fanin, act_bits, seed);
+    let out = args.get_str("out", &format!("{name}.model.json"));
+    model.save(&out).map_err(NnError::Data)?;
+    println!("wrote {out}: {}", model.summary());
     Ok(())
 }

@@ -6,4 +6,4 @@
 
 pub mod pjrt;
 
-pub use pjrt::PjrtEngine;
+pub use pjrt::{backend_available, PjrtEngine, RuntimeError};

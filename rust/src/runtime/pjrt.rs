@@ -30,6 +30,14 @@ impl std::error::Error for RuntimeError {}
 /// Result alias for the runtime layer.
 pub type Result<T> = std::result::Result<T, RuntimeError>;
 
+/// True when this build carries a usable PJRT backend (the `xla` feature);
+/// false in the default stub build. `RouterBuilder` preflights on this so a
+/// numeric routing policy fails at `build()` with a typed error rather than
+/// on the dispatcher thread.
+pub const fn backend_available() -> bool {
+    cfg!(feature = "xla")
+}
+
 fn err<T>(msg: impl Into<String>) -> Result<T> {
     Err(RuntimeError(msg.into()))
 }

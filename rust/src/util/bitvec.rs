@@ -184,6 +184,32 @@ impl BitVec {
         })
     }
 
+    /// Parse a [`BitVec::to_hex`] string back into a bit vector of length
+    /// `len` (MSB-first nibbles, exactly `len.div_ceil(4)` of them).
+    /// Returns `None` on a wrong-length string, a non-hex digit, or a set
+    /// bit at or beyond `len`.
+    pub fn from_hex(len: usize, hex: &str) -> Option<BitVec> {
+        let nibbles = len.div_ceil(4);
+        if hex.len() != nibbles {
+            return None;
+        }
+        let mut v = BitVec::zeros(len);
+        // `to_hex` emits the highest nibble first; reverse to nibble order.
+        for (n, c) in hex.chars().rev().enumerate() {
+            let d = c.to_digit(16)?;
+            for b in 0..4 {
+                if (d >> b) & 1 == 1 {
+                    let i = n * 4 + b;
+                    if i >= len {
+                        return None; // set bit past the declared length
+                    }
+                    v.set(i, true);
+                }
+            }
+        }
+        Some(v)
+    }
+
     /// Compact hex string (for hashing/debug of truth tables).
     pub fn to_hex(&self) -> String {
         let nibbles = self.len.div_ceil(4);
@@ -422,6 +448,28 @@ mod tests {
         b.set(1, true);
         assert_ne!(a.to_hex(), b.to_hex());
         assert_eq!(a.to_hex().len(), 4);
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        for len in [0usize, 1, 3, 4, 5, 16, 64, 70, 130] {
+            let mut v = BitVec::zeros(len);
+            for i in (0..len).step_by(3) {
+                v.set(i, true);
+            }
+            let hex = v.to_hex();
+            let back = BitVec::from_hex(len, &hex).expect("round-trip");
+            assert_eq!(back, v, "len={len} hex={hex}");
+        }
+    }
+
+    #[test]
+    fn from_hex_rejects_garbage() {
+        assert!(BitVec::from_hex(8, "g0").is_none(), "non-hex digit");
+        assert!(BitVec::from_hex(8, "000").is_none(), "wrong length");
+        // 2-bit vector is one nibble; a set bit at position 2 is out of range.
+        assert!(BitVec::from_hex(2, "4").is_none(), "bit past len");
+        assert!(BitVec::from_hex(2, "3").is_some());
     }
 
     #[test]

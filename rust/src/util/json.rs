@@ -157,6 +157,60 @@ impl Json {
         s
     }
 
+    /// Serialize human-readably: objects and mixed arrays get one entry per
+    /// line (two-space indent), while arrays of scalars stay inline. Used
+    /// for inspectable on-disk artifacts; parses back identically.
+    pub fn to_pretty_string(&self) -> String {
+        let mut s = String::new();
+        self.write_pretty(&mut s, 0);
+        s.push('\n');
+        s
+    }
+
+    fn write_pretty(&self, out: &mut String, indent: usize) {
+        fn pad(out: &mut String, n: usize) {
+            for _ in 0..n {
+                out.push(' ');
+            }
+        }
+        match self {
+            Json::Arr(a)
+                if !a.is_empty()
+                    && a.iter().any(|v| matches!(v, Json::Arr(_) | Json::Obj(_))) =>
+            {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    pad(out, indent + 2);
+                    v.write_pretty(out, indent + 2);
+                }
+                out.push('\n');
+                pad(out, indent);
+                out.push(']');
+            }
+            Json::Obj(o) if !o.is_empty() => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    pad(out, indent + 2);
+                    write_escaped(k, out);
+                    out.push_str(": ");
+                    v.write_pretty(out, indent + 2);
+                }
+                out.push('\n');
+                pad(out, indent);
+                out.push('}');
+            }
+            _ => self.write(out),
+        }
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -531,6 +585,24 @@ mod tests {
         assert_eq!(f.to_f64_vec().unwrap(), vec![1.5, -2.0]);
         assert!(f.to_i64_vec().is_err());
         assert!(Json::parse("[-1]").unwrap().to_usize_vec().is_err());
+    }
+
+    #[test]
+    fn pretty_roundtrips_and_indents() {
+        let j = Json::obj([
+            ("a", Json::Arr(vec![Json::int(1), Json::int(2)])),
+            (
+                "b",
+                Json::Arr(vec![Json::obj([("x", Json::Bool(true))])]),
+            ),
+            ("c", Json::str("s")),
+        ]);
+        let pretty = j.to_pretty_string();
+        assert!(pretty.contains("\n  \"a\": [1,2]"), "{pretty}");
+        assert!(pretty.contains("\n  \"b\": [\n"), "{pretty}");
+        assert_eq!(Json::parse(&pretty).unwrap(), j);
+        // Scalars stay compact.
+        assert_eq!(Json::int(7).to_pretty_string(), "7\n");
     }
 
     #[test]

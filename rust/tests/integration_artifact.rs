@@ -1,0 +1,136 @@
+//! Integration: persistent compiled-circuit artifacts — serialize → parse →
+//! `CompiledNetlist` bit-exactness across random models, fingerprint
+//! rejection, and the cold-start contract (compile once, serve from the
+//! loaded artifact with no re-synthesis).
+
+use std::time::Duration;
+
+use nullanet_tiny::coordinator::{BatchPolicy, Policy, RouterBuilder};
+use nullanet_tiny::flow::artifact::{
+    circuit_from_json, circuit_to_json, load_circuit, model_fingerprint, save_circuit,
+    ArtifactError,
+};
+use nullanet_tiny::flow::{run_flow, FlowConfig};
+use nullanet_tiny::logic::sim::CompiledNetlist;
+use nullanet_tiny::nn::model::random_model;
+use nullanet_tiny::util::json::Json;
+use nullanet_tiny::util::prng::Xoshiro256;
+use nullanet_tiny::util::proptest::{check, Config, Gen};
+
+/// Random model shape for the round-trip property.
+#[derive(Clone, Debug)]
+struct Shape {
+    features: usize,
+    widths: Vec<usize>,
+    fanin: usize,
+    bits: usize,
+    seed: u64,
+}
+
+fn gen_shape(g: &mut Gen) -> Shape {
+    let layers = g.sized_range(1, 3);
+    Shape {
+        features: g.sized_range(3, 8),
+        widths: (0..layers).map(|_| g.sized_range(2, 5)).collect(),
+        fanin: g.sized_range(1, 3),
+        bits: g.sized_range(1, 2),
+        seed: g.rng.next_u64(),
+    }
+}
+
+#[test]
+fn artifact_roundtrip_is_bit_exact_across_random_models() {
+    // Each case runs a full synthesis flow, so keep the case count modest.
+    check(
+        "artifact-roundtrip",
+        &Config { cases: 6, seed: 0xA57_1FAC7, max_shrink_steps: 0 },
+        gen_shape,
+        |_| Vec::new(),
+        |s| {
+            let m = random_model("prop", s.features, &s.widths, s.fanin, s.bits, s.seed);
+            let cfg = FlowConfig { jobs: 1, verify: false, ..Default::default() };
+            let r = run_flow(&m, &cfg, None).map_err(|e| e.to_string())?;
+            let text = circuit_to_json(&r.circuit, &m).to_pretty_string();
+            let parsed = Json::parse(&text).map_err(|e| e.to_string())?;
+            let back = circuit_from_json(&parsed, &m).map_err(|e| e.to_string())?;
+            if back.stage_of_lut != r.circuit.stage_of_lut {
+                return Err("stage assignment changed in round-trip".into());
+            }
+            if back.num_stages != r.circuit.num_stages {
+                return Err("stage count changed in round-trip".into());
+            }
+            // The reloaded circuit must compile to a bit-identical simulator:
+            // compare packed 64-lane evaluations on random words.
+            let a = CompiledNetlist::compile(&r.circuit.netlist);
+            let b = CompiledNetlist::compile(&back.netlist);
+            let mut sa = a.make_scratch();
+            let mut sb = b.make_scratch();
+            let mut rng = Xoshiro256::new(s.seed ^ 0xBEEF);
+            for round in 0..32 {
+                let inputs: Vec<u64> =
+                    (0..a.num_inputs()).map(|_| rng.next_u64()).collect();
+                let mut oa = vec![0u64; a.num_outputs()];
+                let mut ob = vec![0u64; b.num_outputs()];
+                a.run_words(&mut sa, &inputs, &mut oa);
+                b.run_words(&mut sb, &inputs, &mut ob);
+                if oa != ob {
+                    return Err(format!("outputs diverge on round {round}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fingerprint_mismatch_is_rejected_across_files() {
+    let a = random_model("fpa", 5, &[4, 3], 2, 1, 1);
+    let b = random_model("fpb", 5, &[4, 3], 2, 1, 2);
+    assert_ne!(model_fingerprint(&a), model_fingerprint(&b));
+
+    let path = "/tmp/nnt_fp_mismatch.circuit.json";
+    let r = run_flow(&a, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+    save_circuit(path, &r.circuit, &a).unwrap();
+    let err = load_circuit(path, &b).unwrap_err();
+    assert!(
+        matches!(err, ArtifactError::FingerprintMismatch { .. }),
+        "want typed fingerprint rejection, got {err}"
+    );
+    // The matching model still loads.
+    assert!(load_circuit(path, &a).is_ok());
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn compile_then_load_serves_bit_exact_without_resynthesis() {
+    let m = random_model("cold", 6, &[5, 3], 2, 1, 77);
+    let path = "/tmp/nnt_cold_start.circuit.json";
+    {
+        let r = run_flow(&m, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+        save_circuit(path, &r.circuit, &m).unwrap();
+    }
+    // Cold start: everything below runs from the artifact file — no
+    // `run_flow` call on this path.
+    let circuit = load_circuit(path, &m).unwrap();
+    let router = RouterBuilder::new(m.clone())
+        .circuit(circuit.netlist)
+        .engine(Policy::Logic)
+        .batch_policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) })
+        .workers(2)
+        .build()
+        .unwrap();
+    let mut rxs = Vec::new();
+    let mut want = Vec::new();
+    for i in 0..40 {
+        let x: Vec<f64> = (0..6).map(|j| ((i * 7 + j) as f64 * 0.23).sin()).collect();
+        want.push(nullanet_tiny::nn::eval::classify(&m, &x));
+        rxs.push(router.submit(x));
+    }
+    for (rx, w) in rxs.into_iter().zip(want) {
+        let reply = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(reply.class, w, "artifact-served reply must match the NN");
+        assert_eq!(reply.engine, "logic");
+    }
+    router.shutdown();
+    std::fs::remove_file(path).ok();
+}

@@ -42,7 +42,11 @@ fn flow_fails_cleanly_on_invalid_model() {
         Err(e) => e,
         Ok(_) => panic!("invalid model must not synthesize"),
     };
-    assert!(err.contains("in_width"), "{err}");
+    assert!(
+        matches!(err, nullanet_tiny::error::NnError::Flow(_)),
+        "must be a typed flow error: {err}"
+    );
+    assert!(err.to_string().contains("in_width"), "{err}");
 }
 
 #[test]
@@ -53,7 +57,7 @@ fn dc_mode_without_traces_errors() {
         Err(e) => e,
         Ok(_) => panic!("dc mode without traces must fail"),
     };
-    assert!(err.contains("training inputs"), "{err}");
+    assert!(err.to_string().contains("training inputs"), "{err}");
 }
 
 #[test]
