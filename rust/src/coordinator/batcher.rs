@@ -105,8 +105,12 @@ impl Batcher {
         self.input_bits
     }
 
-    /// Enqueue a request.
-    pub fn submit(&self, req: Request) {
+    /// Enqueue a request. Returns the request back (`Err`) when the batcher
+    /// has been closed: a closed batcher's dispatcher may already have
+    /// drained its final batch and exited, so accepting the request would
+    /// strand its reply sender in the queue forever. Callers racing a
+    /// shutdown or hot-swap re-fetch a live router and resubmit.
+    pub fn submit(&self, req: Request) -> Result<(), Request> {
         assert_eq!(
             req.bits.len(),
             self.input_bits,
@@ -115,6 +119,9 @@ impl Batcher {
             self.input_bits
         );
         let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err(req);
+        }
         s.queue.push_back(req);
         let full = s.queue.len() >= self.policy.max_batch;
         drop(s);
@@ -126,6 +133,7 @@ impl Batcher {
             // Wake one dispatcher so it can arm the age timer.
             self.signal.notify_one();
         }
+        Ok(())
     }
 
     /// Mark closed; wakes all dispatchers. Written under the queue lock so
@@ -154,6 +162,19 @@ impl Batcher {
             if s.queue.len() >= self.policy.max_batch {
                 return Some(s.queue.drain(..self.policy.max_batch).collect());
             }
+            // Closed beats the age timer: a `close()` wakeup used to fall
+            // back into the age branch with a partial queue and sleep out
+            // the full `max_wait` — stalling shutdown (and hot-swap drain)
+            // by up to the flush window. Flush whatever is queued NOW; the
+            // next iteration (or call) observes the emptied queue and
+            // returns `None`.
+            if s.closed {
+                if s.queue.is_empty() {
+                    return None;
+                }
+                let n = s.queue.len().min(self.policy.max_batch);
+                return Some(s.queue.drain(..n).collect());
+            }
             if let Some(oldest) = s.queue.front() {
                 let age = oldest.enqueued.elapsed();
                 if age >= self.policy.max_wait {
@@ -163,8 +184,6 @@ impl Batcher {
                 let remaining = self.policy.max_wait - age;
                 let (ns, _timeout) = self.signal.wait_timeout(s, remaining).unwrap();
                 s = ns;
-            } else if s.closed {
-                return None;
             } else {
                 s = self.signal.wait(s).unwrap();
             }
@@ -203,7 +222,7 @@ mod tests {
         for i in 0..3 {
             let (r, _rx) = req(i);
             std::mem::forget(_rx);
-            b.submit(r);
+            b.submit(r).unwrap();
         }
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.requests.len(), 3);
@@ -220,7 +239,7 @@ mod tests {
         for pattern in 0..8usize {
             let (r, _rx) = req(pattern);
             std::mem::forget(_rx);
-            b.submit(r);
+            b.submit(r).unwrap();
         }
         let batch = b.next_batch().unwrap();
         for lane in 0..8usize {
@@ -239,7 +258,7 @@ mod tests {
         ));
         let (r, _rx) = req(1);
         std::mem::forget(_rx);
-        b.submit(r);
+        b.submit(r).unwrap();
         let t = Instant::now();
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.requests.len(), 1);
@@ -254,11 +273,75 @@ mod tests {
     }
 
     #[test]
+    fn close_flushes_partial_queue_immediately() {
+        // Regression: with a partial queue and a long max_wait, a close()
+        // wakeup re-entered the age branch and slept out the full window —
+        // here, 10 s. The flush must happen in milliseconds.
+        let b = Batcher::new(
+            BatchPolicy { max_batch: 64, max_wait: Duration::from_secs(10) },
+            BITS,
+        );
+        let (r, _rx) = req(5);
+        std::mem::forget(_rx);
+        b.submit(r).unwrap();
+        b.close();
+        let t = Instant::now();
+        let batch = b.next_batch().expect("queued request must flush on close");
+        assert_eq!(batch.requests.len(), 1);
+        assert!(
+            t.elapsed() < Duration::from_secs(1),
+            "close-flush took {:?}; must not wait out max_wait",
+            t.elapsed()
+        );
+        assert!(b.next_batch().is_none(), "drained + closed ⇒ None");
+    }
+
+    #[test]
+    fn close_wakes_a_parked_dispatcher_promptly() {
+        // Same stall, other interleaving: the dispatcher is already parked
+        // in the age branch's wait_timeout when close() arrives.
+        let b = Arc::new(Batcher::new(
+            BatchPolicy { max_batch: 64, max_wait: Duration::from_secs(10) },
+            BITS,
+        ));
+        let b2 = Arc::clone(&b);
+        let dispatcher = std::thread::spawn(move || {
+            let batch = b2.next_batch().expect("flush on close");
+            batch.requests.len()
+        });
+        let (r, _rx) = req(2);
+        std::mem::forget(_rx);
+        b.submit(r).unwrap();
+        // Give the dispatcher time to park on the age deadline.
+        std::thread::sleep(Duration::from_millis(50));
+        let t = Instant::now();
+        b.close();
+        assert_eq!(dispatcher.join().unwrap(), 1);
+        assert!(
+            t.elapsed() < Duration::from_secs(1),
+            "close must wake the parked dispatcher, took {:?}",
+            t.elapsed()
+        );
+    }
+
+    #[test]
+    fn submit_after_close_returns_the_request() {
+        let b = Batcher::new(BatchPolicy::default(), BITS);
+        b.close();
+        let (r, _rx) = req(3);
+        let rejected = b.submit(r).expect_err("closed batcher must reject");
+        // The caller gets the request back intact (reply sender included),
+        // so it can resubmit to a replacement router.
+        assert_eq!(rejected.bits.len(), BITS);
+        assert_eq!(b.depth(), 0, "rejected request must not sit in the queue");
+    }
+
+    #[test]
     #[should_panic(expected = "batcher expects")]
     fn wrong_width_request_is_rejected() {
         let b = Batcher::new(BatchPolicy::default(), BITS);
         let (tx, _rx) = channel();
-        b.submit(Request {
+        let _ = b.submit(Request {
             bits: BitVec::zeros(BITS + 1),
             features: None,
             enqueued: Instant::now(),
@@ -277,7 +360,7 @@ mod tests {
             for i in 0..100 {
                 let (r, rx) = req(i % 8);
                 std::mem::forget(rx);
-                b2.submit(r);
+                b2.submit(r).unwrap();
             }
             b2.close();
         });

@@ -75,6 +75,13 @@ impl LatencyHistogram {
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
+                // Bucket 0 actually spans [0, BASE·G): every sub-BASE_NS
+                // sample lands there, so the log-midpoint formula (≈122 ns)
+                // would *overstate* sub-100ns packed-logic latencies. Clamp
+                // its representative to BASE_NS.
+                if i == 0 {
+                    return BASE_NS;
+                }
                 // Geometric midpoint of bucket i, √(lo·hi) = BASE·G^(i+½):
                 // the unbiased representative of a log-spaced bucket. The
                 // upper edge would bias every percentile high by up to ×G.
@@ -176,6 +183,23 @@ mod tests {
         // every percentile high.
         assert!(p50 > 759.0 && p50 < 1139.0, "p50={p50} must sit inside the bucket");
         assert!((p50 - 930.0).abs() < 5.0, "p50={p50} should be the geometric midpoint");
+    }
+
+    #[test]
+    fn bucket_zero_representative_is_base_ns() {
+        // Bucket 0 spans [0, 150 ns); its geometric "midpoint" (~122 ns)
+        // overstated sub-100ns latencies. The representative is pinned to
+        // BASE_NS for every percentile.
+        let h = LatencyHistogram::new();
+        for ns in [0u64, 10, 50, 99, 100] {
+            h.record_ns(ns);
+        }
+        assert_eq!(h.percentile_ns(0.5), 100.0);
+        assert_eq!(h.percentile_ns(0.99), 100.0);
+        // Ordering still holds once later buckets appear.
+        h.record_ns(10_000);
+        assert!(h.percentile_ns(0.5) <= h.percentile_ns(0.99));
+        assert_eq!(h.percentile_ns(0.5), 100.0);
     }
 
     #[test]

@@ -8,12 +8,16 @@
 //!   implementations: packed logic, PJRT numeric, and the mirror combinator
 //! * [`router`] — [`router::RouterBuilder`] assembles an engine stack and
 //!   runs the backend-agnostic dispatch loop
-//! * [`server`] — JSON-lines TCP front end
-//! * [`metrics`] — latency histograms, counters
+//! * [`registry`] — [`registry::ModelRegistry`]: N named engine stacks in
+//!   one process, loaded from circuit bundles, with live hot-swap
+//! * [`server`] — JSON-lines TCP front end (model routing + admin
+//!   commands)
+//! * [`metrics`] — latency histograms, counters (reported per model)
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod registry;
 pub mod router;
 pub mod server;
 
@@ -21,4 +25,5 @@ pub use batcher::{Batch, BatchPolicy, Batcher};
 pub use engine::{
     EngineError, InferenceEngine, MirrorEngine, PackedLogicEngine, PjrtNumericEngine,
 };
+pub use registry::{ModelInfo, ModelRegistry, RegistryConfig};
 pub use router::{PjrtSpec, Policy, Router, RouterBuilder};

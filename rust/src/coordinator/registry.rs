@@ -1,0 +1,572 @@
+//! Multi-model serving registry with live hot-swap.
+//!
+//! NullaNet Tiny compiles each DNN into *one* fixed-function circuit, so a
+//! multi-workload deployment is inherently multi-circuit: one compiled
+//! artifact per model, hosted side by side. [`ModelRegistry`] owns N
+//! independent engine stacks — each a [`RouterBuilder`]-constructed
+//! [`Router`] keyed by model name — and routes every classify request to
+//! one of them (an explicit name, or the registry's default when the
+//! request names none, which is what keeps every single-model client
+//! working unchanged).
+//!
+//! Models come from self-contained circuit bundles
+//! ([`crate::flow::artifact::load_bundle`]): [`ModelRegistry::load_dir`]
+//! scans a directory of `*.json` artifacts at startup, and
+//! [`ModelRegistry::load_path`] loads one more at run time — the TCP
+//! server's `{"cmd":"load"}` admin command.
+//!
+//! ## Hot-swap drain protocol
+//!
+//! [`ModelRegistry::install`] replaces a model's router behind an `Arc`
+//! swap without dropping in-flight requests:
+//!
+//! 1. The replacement router goes into the map under a write lock; from
+//!    this instant every *new* lookup gets the new engine.
+//! 2. The lock is released, then the old router is drained:
+//!    `Router::shutdown` closes its batcher — which flushes any queued
+//!    requests immediately (no max-wait stall; see
+//!    [`crate::coordinator::batcher::Batcher::close`]) — and joins the
+//!    dispatcher, so every reply already submitted is delivered before the
+//!    old engine (and the artifact it serves) is released.
+//! 3. A submitter that raced the swap — it looked up the old `Arc` before
+//!    step 1 but submitted after the close — is rejected by the closed
+//!    batcher with its request intact; [`ModelRegistry::classify`]
+//!    re-fetches from the map and resubmits on the replacement. No reply
+//!    is dropped, none is misrouted.
+//!
+//! Unload follows the same drain, minus the replacement.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use crate::coordinator::batcher::{BatchPolicy, Reply};
+use crate::coordinator::router::{Policy, Router, RouterBuilder};
+use crate::error::NnError;
+use crate::flow::artifact;
+
+/// How the registry builds an engine stack for each loaded bundle.
+#[derive(Clone, Copy, Debug)]
+pub struct RegistryConfig {
+    /// Batch flush policy applied to every loaded model's router.
+    pub batch_policy: BatchPolicy,
+    /// Shard workers per logic engine.
+    pub workers: usize,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        RegistryConfig { batch_policy: BatchPolicy::default(), workers: 1 }
+    }
+}
+
+/// Diagnostic snapshot of one registered model (the `models` admin
+/// command).
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    /// Registry key (usually the model's own name).
+    pub name: String,
+    /// Engine label replies carry ("logic" / "pjrt").
+    pub engine: &'static str,
+    /// Feature width the model expects.
+    pub features: usize,
+    /// Current batcher queue depth.
+    pub depth: usize,
+    /// Whether unnamed classify requests route here.
+    pub default: bool,
+    /// Artifact path the model was loaded from, when it came from one.
+    pub source: Option<String>,
+}
+
+struct Entry {
+    router: Arc<Router>,
+    source: Option<String>,
+}
+
+struct RegState {
+    models: BTreeMap<String, Entry>,
+    /// Target of classify requests that name no model.
+    default: Option<String>,
+}
+
+/// N independent engine stacks behind one name→router map. See the module
+/// docs for the hot-swap drain protocol.
+pub struct ModelRegistry {
+    config: RegistryConfig,
+    state: RwLock<RegState>,
+}
+
+impl ModelRegistry {
+    /// Empty registry; loaded models get engine stacks per `config`.
+    pub fn new(config: RegistryConfig) -> ModelRegistry {
+        ModelRegistry {
+            config,
+            state: RwLock::new(RegState { models: BTreeMap::new(), default: None }),
+        }
+    }
+
+    /// Single-model registry around an externally built router (any engine
+    /// policy), with default [`RegistryConfig`] for later live loads — a
+    /// convenience for tests and embedders; the CLI threads its own tuning
+    /// through [`ModelRegistry::new`] + [`ModelRegistry::install`] instead.
+    /// The model is the default, so existing clients that never send a
+    /// `"model"` field keep working unchanged.
+    pub fn with_default(name: &str, router: Router) -> ModelRegistry {
+        let reg = ModelRegistry::new(RegistryConfig::default());
+        reg.install(name, router, None);
+        reg
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.state.read().unwrap().models.len()
+    }
+
+    /// True when no model is registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Registered names (sorted — the map is a `BTreeMap`).
+    pub fn names(&self) -> Vec<String> {
+        self.state.read().unwrap().models.keys().cloned().collect()
+    }
+
+    /// Name unnamed classify requests route to, if any.
+    pub fn default_name(&self) -> Option<String> {
+        self.state.read().unwrap().default.clone()
+    }
+
+    /// Point unnamed classify requests at `name`.
+    pub fn set_default(&self, name: &str) -> Result<(), NnError> {
+        let mut s = self.state.write().unwrap();
+        if !s.models.contains_key(name) {
+            return Err(no_such_model(name, &s.models));
+        }
+        s.default = Some(name.to_string());
+        Ok(())
+    }
+
+    /// Resolve a model name (or the default) to its router.
+    pub fn get(&self, name: Option<&str>) -> Result<Arc<Router>, NnError> {
+        let s = self.state.read().unwrap();
+        let key = match name {
+            Some(n) => n,
+            None => s.default.as_deref().ok_or_else(|| {
+                NnError::Config(
+                    "no default model loaded; name one with {\"model\": …}".into(),
+                )
+            })?,
+        };
+        match s.models.get(key) {
+            Some(e) => Ok(Arc::clone(&e.router)),
+            None => Err(no_such_model(key, &s.models)),
+        }
+    }
+
+    /// Install (or hot-swap) `router` under `name`. New lookups see the
+    /// replacement the moment the map lock is released; the displaced
+    /// router — if any — is then drained (close + join) so every reply
+    /// already in flight on it is delivered before this call returns.
+    ///
+    /// Only the first model installed into an *empty* registry becomes the
+    /// default. In particular, after the default model is unloaded, a later
+    /// install does NOT grab the default — unnamed traffic keeps failing
+    /// until [`ModelRegistry::set_default`] re-points it deliberately
+    /// (silently re-routing legacy clients to a different model would
+    /// return wrong predictions with no indication anything changed).
+    pub fn install(&self, name: &str, router: Router, source: Option<String>) {
+        let entry = Entry { router: Arc::new(router), source };
+        let displaced = {
+            let mut s = self.state.write().unwrap();
+            let was_empty = s.models.is_empty();
+            let old = s.models.insert(name.to_string(), entry);
+            if was_empty {
+                s.default = Some(name.to_string());
+            }
+            old
+        };
+        if let Some(old) = displaced {
+            // Outside the lock: the drain can serve final batches while new
+            // traffic already flows to the replacement.
+            old.router.shutdown();
+        }
+    }
+
+    /// Build the registry-standard engine stack for a loaded bundle and
+    /// install it — the one place the startup scan and the live `load`
+    /// admin command both go through, so their routers can never diverge.
+    fn build_and_install(
+        &self,
+        key: &str,
+        model: crate::nn::model::Model,
+        circuit: crate::logic::netlist::PipelinedCircuit,
+        source: String,
+    ) -> Result<(), NnError> {
+        let router = RouterBuilder::new(model)
+            .circuit(circuit.netlist)
+            .engine(Policy::Logic)
+            .batch_policy(self.config.batch_policy)
+            .workers(self.config.workers)
+            .build()?;
+        self.install(key, router, Some(source));
+        Ok(())
+    }
+
+    /// Load one circuit bundle and register it. `name` overrides the
+    /// bundle's model name as the registry key; loading onto an existing
+    /// key hot-swaps it. Returns the resolved key.
+    pub fn load_path(&self, path: &str, name: Option<&str>) -> Result<String, NnError> {
+        let (model, circuit) = artifact::load_bundle(path)?;
+        let key = name.unwrap_or(&model.name).to_string();
+        self.build_and_install(&key, model, circuit, path.to_string())?;
+        Ok(key)
+    }
+
+    /// Scan `dir` for `*.json` circuit bundles and register every one
+    /// (sorted by file name, so the startup default — the first loaded —
+    /// is deterministic). Files that are JSON but not circuit artifacts
+    /// (e.g. `.model.json` files sharing the directory) are skipped with a
+    /// notice; a genuinely broken artifact, a bundle without an embedded
+    /// model, and two bundles claiming the same model name are startup
+    /// errors. Returns the registered names in load order.
+    pub fn load_dir(&self, dir: &str) -> Result<Vec<String>, NnError> {
+        let mut paths: Vec<String> = std::fs::read_dir(dir)
+            .map_err(|e| NnError::Config(format!("--models {dir}: {e}")))?
+            .filter_map(|entry| {
+                let p = entry.ok()?.path();
+                let file = p.file_name()?.to_str()?;
+                if p.is_file() && file.ends_with(".json") {
+                    Some(p.to_str()?.to_string())
+                } else {
+                    None
+                }
+            })
+            .collect();
+        paths.sort();
+        let mut loaded = Vec::new();
+        for path in &paths {
+            match artifact::load_bundle(path) {
+                Ok((model, circuit)) => {
+                    if self.state.read().unwrap().models.contains_key(&model.name) {
+                        return Err(NnError::Config(format!(
+                            "--models {dir}: two artifacts provide model \
+                             '{}' (second: {path})",
+                            model.name
+                        )));
+                    }
+                    let key = model.name.clone();
+                    self.build_and_install(&key, model, circuit, path.clone())?;
+                    loaded.push(key);
+                }
+                // Not a circuit artifact at all (wrong format tag): other
+                // JSON routinely shares artifact directories. Everything
+                // else — bad version, corrupt circuit, missing embedded
+                // model — is a real broken artifact and fails the scan.
+                Err(artifact::ArtifactError::Format(_)) => {
+                    eprintln!("--models {dir}: skipping {path} (not a circuit artifact)");
+                }
+                Err(e) => {
+                    return Err(NnError::Artifact(e));
+                }
+            }
+        }
+        Ok(loaded)
+    }
+
+    /// Remove `name` and drain its router (close + join: queued requests
+    /// are flushed and replied to before the engine is released). If it
+    /// was the default, unnamed requests now fail until another default is
+    /// set — deliberate, rather than silently re-pointing clients at a
+    /// different model.
+    pub fn unload(&self, name: &str) -> Result<(), NnError> {
+        let removed = {
+            let mut s = self.state.write().unwrap();
+            let removed = s
+                .models
+                .remove(name)
+                .ok_or_else(|| no_such_model(name, &s.models))?;
+            if s.default.as_deref() == Some(name) {
+                s.default = None;
+            }
+            removed
+        };
+        removed.router.shutdown();
+        Ok(())
+    }
+
+    /// Submit one classify request to the named (or default) model. Checks
+    /// the feature width (a protocol error, not a panic) and retries
+    /// through hot-swaps: a submit rejected by a draining router re-fetches
+    /// the live replacement from the map.
+    pub fn classify(
+        &self,
+        name: Option<&str>,
+        features: &[f64],
+    ) -> Result<std::sync::mpsc::Receiver<Reply>, NnError> {
+        // Bounded, not `loop`: every retry means the mapped router was
+        // found closed, which a swap/unload always follows by replacing or
+        // removing the map entry — so a second closed hit is already
+        // pathological (an external caller shut a router down without
+        // going through the registry). Never spin forever on that.
+        for _ in 0..64 {
+            let router = self.get(name)?;
+            if features.len() != router.input_features() {
+                return Err(NnError::Config(format!(
+                    "features: expected {} values, got {}",
+                    router.input_features(),
+                    features.len()
+                )));
+            }
+            if let Some(rx) = router.try_submit(features) {
+                return Ok(rx);
+            }
+            // Raced a hot-swap: this router closed between the map read and
+            // the submit. The swap already installed (or removed) its
+            // replacement — re-resolve; `get` errors out if the model is
+            // gone.
+        }
+        Err(NnError::Config(format!(
+            "model '{}' is shutting down",
+            name.unwrap_or("<default>")
+        )))
+    }
+
+    /// Snapshot the map under the read lock and drop it before touching
+    /// any router: rendering depths/metrics takes per-batcher mutexes and
+    /// formats histograms, and a writer-waiting `RwLock` would block every
+    /// `classify`'s `get()` behind an admin poll for that whole duration.
+    fn snapshot(&self) -> Vec<(String, Arc<Router>, bool, Option<String>)> {
+        let s = self.state.read().unwrap();
+        s.models
+            .iter()
+            .map(|(name, e)| {
+                (
+                    name.clone(),
+                    Arc::clone(&e.router),
+                    s.default.as_deref() == Some(name.as_str()),
+                    e.source.clone(),
+                )
+            })
+            .collect()
+    }
+
+    /// Snapshot of every registered model (sorted by name).
+    pub fn infos(&self) -> Vec<ModelInfo> {
+        self.snapshot()
+            .into_iter()
+            .map(|(name, router, default, source)| ModelInfo {
+                name,
+                engine: router.engine_name(),
+                features: router.input_features(),
+                depth: router.depth(),
+                default,
+                source,
+            })
+            .collect()
+    }
+
+    /// Total queued requests across all models.
+    pub fn depth_total(&self) -> usize {
+        self.snapshot().iter().map(|(_, router, _, _)| router.depth()).sum()
+    }
+
+    /// Per-model metrics report (one section per model, sorted by name).
+    pub fn metrics_report(&self) -> String {
+        let snap = self.snapshot();
+        if snap.is_empty() {
+            return "no models loaded".to_string();
+        }
+        let sections: Vec<String> = snap
+            .into_iter()
+            .map(|(name, router, default, _)| {
+                let tag = if default { " (default)" } else { "" };
+                format!(
+                    "model '{name}'{tag} [engine {}]\n{}",
+                    router.engine_name(),
+                    router.metrics().report()
+                )
+            })
+            .collect();
+        sections.join("\n")
+    }
+
+    /// Drain every router (server shutdown). The registry stays usable —
+    /// models can be reloaded — but all current engines stop.
+    pub fn shutdown_all(&self) {
+        let drained: Vec<Entry> = {
+            let mut s = self.state.write().unwrap();
+            s.default = None;
+            std::mem::take(&mut s.models).into_values().collect()
+        };
+        for e in drained {
+            e.router.shutdown();
+        }
+    }
+}
+
+fn no_such_model(name: &str, models: &BTreeMap<String, Entry>) -> NnError {
+    let known: Vec<&str> = models.keys().map(String::as_str).collect();
+    NnError::Config(if known.is_empty() {
+        format!("no model named '{name}' (none loaded)")
+    } else {
+        format!("no model named '{name}' (loaded: {})", known.join(", "))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::{run_flow, FlowConfig};
+    use crate::nn::model::{random_model, Model};
+    use std::time::Duration;
+
+    fn make_router(model: &Model) -> Router {
+        let r = run_flow(model, &FlowConfig { jobs: 1, ..Default::default() }, None)
+            .unwrap();
+        RouterBuilder::new(model.clone())
+            .circuit(r.circuit.netlist)
+            .engine(Policy::Logic)
+            .batch_policy(BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            })
+            .workers(1)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn default_routing_and_named_routing() {
+        let a = random_model("a", 5, &[4, 3], 2, 1, 1);
+        let b = random_model("b", 5, &[4, 3], 2, 1, 2);
+        let reg = ModelRegistry::new(RegistryConfig::default());
+        reg.install("a", make_router(&a), None);
+        reg.install("b", make_router(&b), None);
+        assert_eq!(reg.names(), vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(reg.default_name().as_deref(), Some("a"));
+
+        let x: Vec<f64> = (0..5).map(|j| (j as f64 * 0.4).sin()).collect();
+        // Unnamed → default (a); named → the named model.
+        let ra = reg
+            .classify(None, &x)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(ra.class, crate::nn::eval::classify(&a, &x));
+        let rb = reg
+            .classify(Some("b"), &x)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(rb.class, crate::nn::eval::classify(&b, &x));
+        reg.shutdown_all();
+    }
+
+    #[test]
+    fn unknown_model_and_wrong_width_are_typed_errors() {
+        let a = random_model("a", 5, &[4, 3], 2, 1, 3);
+        let reg = ModelRegistry::new(RegistryConfig::default());
+        reg.install("a", make_router(&a), None);
+        let err = reg.classify(Some("nope"), &[0.0; 5]).unwrap_err();
+        assert!(err.to_string().contains("no model named 'nope'"), "{err}");
+        let err = reg.classify(Some("a"), &[0.0; 4]).unwrap_err();
+        assert!(err.to_string().contains("expected 5"), "{err}");
+        reg.shutdown_all();
+    }
+
+    #[test]
+    fn empty_registry_has_no_default() {
+        let reg = ModelRegistry::new(RegistryConfig::default());
+        assert!(reg.is_empty());
+        let err = reg.classify(None, &[0.0]).unwrap_err();
+        assert!(err.to_string().contains("no default model"), "{err}");
+    }
+
+    #[test]
+    fn unload_clears_default_and_drains() {
+        let a = random_model("a", 5, &[4, 3], 2, 1, 7);
+        let reg = ModelRegistry::new(RegistryConfig::default());
+        reg.install("a", make_router(&a), None);
+        // A reply in flight when unload starts must still be delivered:
+        // unload drains (close-flush + join) before returning.
+        let rx = reg.classify(Some("a"), &[0.1; 5]).unwrap();
+        reg.unload("a").unwrap();
+        rx.recv_timeout(Duration::from_secs(5))
+            .expect("in-flight reply must survive unload");
+        assert!(reg.is_empty());
+        assert_eq!(reg.default_name(), None);
+        assert!(reg.unload("a").is_err(), "double unload is an error");
+    }
+
+    #[test]
+    fn install_hot_swaps_and_drains_the_old_router() {
+        let a = random_model("a", 5, &[4, 3], 2, 1, 9);
+        let reg = ModelRegistry::new(RegistryConfig::default());
+        reg.install("a", make_router(&a), None);
+        let old = reg.get(Some("a")).unwrap();
+        // Submit on the old router, then swap: the reply must arrive.
+        let rx = reg.classify(Some("a"), &[0.2; 5]).unwrap();
+        reg.install("a", make_router(&a), None);
+        let reply = rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("in-flight reply must survive the swap");
+        assert_eq!(reply.class, crate::nn::eval::classify(&a, &[0.2; 5]));
+        // The displaced router is drained: direct submits are rejected.
+        assert!(old.try_submit(&[0.2; 5]).is_none(), "old router must be closed");
+        // The replacement serves.
+        let reply = reg
+            .classify(Some("a"), &[0.3; 5])
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(reply.class, crate::nn::eval::classify(&a, &[0.3; 5]));
+        reg.shutdown_all();
+    }
+
+    #[test]
+    fn install_after_default_unload_does_not_steal_default() {
+        // Unloading the default leaves unnamed traffic failing; a later
+        // install (e.g. a routine recompile reload of another model) must
+        // NOT silently become the default and serve legacy clients wrong
+        // predictions — only an explicit set_default re-points them.
+        let a = random_model("a", 5, &[4, 3], 2, 1, 13);
+        let b = random_model("b", 5, &[4, 3], 2, 1, 14);
+        let reg = ModelRegistry::new(RegistryConfig::default());
+        reg.install("a", make_router(&a), None);
+        reg.install("b", make_router(&b), None);
+        reg.unload("a").unwrap();
+        assert_eq!(reg.default_name(), None);
+        reg.install("b", make_router(&b), None); // hot-swap reload of 'b'
+        assert_eq!(reg.default_name(), None, "install must not grab the default");
+        let err = reg.classify(None, &[0.0; 5]).unwrap_err();
+        assert!(err.to_string().contains("no default model"), "{err}");
+        // Empty registry resets: the next install is a fresh start and may
+        // become the default again.
+        reg.unload("b").unwrap();
+        reg.install("a", make_router(&a), None);
+        assert_eq!(reg.default_name().as_deref(), Some("a"));
+        reg.shutdown_all();
+    }
+
+    #[test]
+    fn set_default_switches_unnamed_traffic() {
+        let a = random_model("a", 5, &[4, 3], 2, 1, 11);
+        let b = random_model("b", 5, &[4, 3], 2, 1, 12);
+        let reg = ModelRegistry::new(RegistryConfig::default());
+        reg.install("a", make_router(&a), None);
+        reg.install("b", make_router(&b), None);
+        assert!(reg.set_default("nope").is_err());
+        reg.set_default("b").unwrap();
+        let x = [0.5; 5];
+        let reply = reg
+            .classify(None, &x)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(reply.class, crate::nn::eval::classify(&b, &x));
+        let infos = reg.infos();
+        assert_eq!(infos.len(), 2);
+        assert!(!infos[0].default && infos[1].default);
+        reg.shutdown_all();
+    }
+}

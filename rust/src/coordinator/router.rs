@@ -28,7 +28,7 @@
 //! [`Batcher::next_batch`] and the simulator.
 
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::coordinator::batcher::{Batch, BatchPolicy, Batcher, Reply, Request};
@@ -339,7 +339,7 @@ impl RouterBuilder {
                 wants_features: meta.wants_features,
                 wants_packed: meta.wants_packed,
                 engine_name: meta.name,
-                dispatcher: Some(dispatcher),
+                dispatcher: Mutex::new(Some(dispatcher)),
             }),
             Ok(Err(e)) => {
                 let _ = dispatcher.join();
@@ -365,18 +365,45 @@ pub struct Router {
     wants_features: bool,
     wants_packed: bool,
     engine_name: &'static str,
-    dispatcher: Option<std::thread::JoinHandle<()>>,
+    /// Behind a mutex so [`Router::shutdown`] works through a shared
+    /// reference — a hot-swapping registry drains the old router via its
+    /// `Arc` while in-flight submitters still hold clones.
+    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl Router {
     /// Submit one request; returns the receiver for its reply. Features are
     /// binarized here — the batcher and engine only ever see packed bits.
     /// Panics if the feature width does not match the model (callers with
-    /// untrusted input should check [`Router::input_features`] first). If
-    /// the engine fails on the batch, the receiver observes a disconnect
-    /// instead of a reply.
+    /// untrusted input should check [`Router::input_features`] first) or if
+    /// the router has been shut down (callers racing a hot-swap drain use
+    /// [`Router::try_submit`] and retry on a live router). If the engine
+    /// fails on the batch, the receiver observes a disconnect instead of a
+    /// reply.
     pub fn submit(&self, features: Vec<f64>) -> std::sync::mpsc::Receiver<Reply> {
-        let (tx, rx) = std::sync::mpsc::channel();
+        let bits = self.binarize(&features);
+        // Move, don't copy: an engine that wants the raw features takes the
+        // caller's own Vec (the pre-registry zero-copy behavior).
+        let features = self.wants_features.then_some(features);
+        self.enqueue(bits, features)
+            .expect("submit on a shut-down router (use try_submit to handle hot-swap)")
+    }
+
+    /// Submit one request from a borrowed feature slice. Returns `None`
+    /// when the router has been shut down — its dispatcher may already
+    /// have drained the final batch, so accepting the request would hang
+    /// its receiver. A hot-swapping caller re-fetches the replacement
+    /// router and retries; the slice is untouched, so the retry is free.
+    /// The slice is copied only when the engine retains raw features.
+    pub fn try_submit(&self, features: &[f64]) -> Option<std::sync::mpsc::Receiver<Reply>> {
+        let bits = self.binarize(features);
+        let features = self.wants_features.then(|| features.to_vec());
+        self.enqueue(bits, features)
+    }
+
+    /// Quantize + pack features for the engine (width-checked), or a
+    /// zeroed placeholder when the engine never reads packed bits.
+    fn binarize(&self, features: &[f64]) -> BitVec {
         assert_eq!(
             features.len(),
             self.model.input_features,
@@ -384,22 +411,37 @@ impl Router {
             features.len(),
             self.model.input_features
         );
-        let bits = if self.wants_packed {
-            let codes = quantize_input(&self.model, &features);
+        if self.wants_packed {
+            let codes = quantize_input(&self.model, features);
             codes_to_bitvec(&codes, self.model.input_quant.bits)
         } else {
             // A numeric-only engine never reads the packed bits: skip the
             // dead quantize + pack work and carry a zeroed placeholder.
             BitVec::zeros(self.model.input_bits())
-        };
-        let features = self.wants_features.then_some(features);
-        self.batcher.submit(Request { bits, features, enqueued: Instant::now(), reply: tx });
-        rx
+        }
+    }
+
+    fn enqueue(
+        &self,
+        bits: BitVec,
+        features: Option<Vec<f64>>,
+    ) -> Option<std::sync::mpsc::Receiver<Reply>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let req = Request { bits, features, enqueued: Instant::now(), reply: tx };
+        match self.batcher.submit(req) {
+            Ok(()) => Some(rx),
+            Err(_rejected) => None,
+        }
     }
 
     /// Feature width the model expects (for request validation).
     pub fn input_features(&self) -> usize {
         self.model.input_features
+    }
+
+    /// The model this router serves.
+    pub fn model(&self) -> &Model {
+        &self.model
     }
 
     /// Label of the engine replies come from ("logic" / "pjrt").
@@ -417,10 +459,16 @@ impl Router {
         self.batcher.depth()
     }
 
-    /// Stop the dispatcher (drains in-flight batches).
-    pub fn shutdown(mut self) {
+    /// Stop the dispatcher and drain: closing the batcher flushes every
+    /// queued request immediately (no max-wait stall), the dispatcher
+    /// serves those final batches, and the join returns once every
+    /// in-flight reply has been sent. Works through a shared reference so
+    /// a registry can drain an `Arc<Router>` while submitters still hold
+    /// clones; concurrent calls are safe (the second finds no handle).
+    pub fn shutdown(&self) {
         self.batcher.close();
-        if let Some(h) = self.dispatcher.take() {
+        let handle = self.dispatcher.lock().unwrap().take();
+        if let Some(h) = handle {
             let _ = h.join();
         }
     }
@@ -428,10 +476,7 @@ impl Router {
 
 impl Drop for Router {
     fn drop(&mut self) {
-        self.batcher.close();
-        if let Some(h) = self.dispatcher.take() {
-            let _ = h.join();
-        }
+        self.shutdown();
     }
 }
 

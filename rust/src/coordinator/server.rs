@@ -4,18 +4,29 @@
 //! client — `nc`, Python, curl-less scripts — can drive the coordinator:
 //!
 //! ```text
-//! → {"features": [0.1, -0.5, …]}
+//! → {"features": [0.1, -0.5, …]}                 # default model
 //! ← {"class": 3, "engine": "logic", "latency_us": 42.0}
+//! → {"model": "jsc-m", "features": [0.1, …]}     # named model
+//! ← {"class": 1, "engine": "logic", "latency_us": 38.0}
+//! → {"cmd": "models"}
+//! ← {"models": [{"name": …, "engine": …, "features": N, "depth": D,
+//!               "default": true}, …], "default": "jsc-s"}
+//! → {"cmd": "load", "path": "m.circuit.json"[, "name": "alias"]}
+//! ← {"ok": true, "name": "…"}                    # loads or hot-swaps
+//! → {"cmd": "unload", "name": "jsc-m"}
+//! ← {"ok": true}
 //! → {"cmd": "metrics"}
-//! ← {"report": "…"}
+//! ← {"report": "…"}                              # one section per model
 //! → {"cmd": "depth"}
-//! ← {"depth": 0}
+//! ← {"depth": 0, "models": {"jsc-s": 0, …}}
 //! → {"cmd": "shutdown"}
 //! ```
 //!
 //! One thread per connection (std::net; no tokio offline). The server owns
-//! a [`Router`]; all inference goes through its dynamic batcher, so
-//! concurrent clients share batches.
+//! a [`ModelRegistry`]; classify requests name a model (or fall through to
+//! the registry default, which keeps every pre-registry client working
+//! unchanged), and all inference for one model goes through that model's
+//! dynamic batcher, so concurrent clients share batches.
 //!
 //! Client sockets carry a read timeout so every connection thread polls the
 //! shared stop flag even while its client is silent — a shutdown therefore
@@ -30,7 +41,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::coordinator::router::Router;
+use crate::coordinator::registry::ModelRegistry;
 use crate::util::json::Json;
 
 /// How often an idle connection thread wakes to poll the stop flag.
@@ -43,8 +54,10 @@ const MAX_LINE_BYTES: usize = 1 << 20;
 
 /// Serve until a client sends `{"cmd": "shutdown"}`. Binds to `addr`
 /// (e.g. "127.0.0.1:7878"); `ready` is signalled once listening (tests).
+/// The registry is left intact on return (the caller may still read
+/// per-model metrics); its routers drain when the registry drops.
 pub fn serve(
-    router: Arc<Router>,
+    registry: Arc<ModelRegistry>,
     addr: &str,
     ready: Option<std::sync::mpsc::Sender<u16>>,
 ) -> std::io::Result<()> {
@@ -60,7 +73,7 @@ pub fn serve(
     while !stop.load(Ordering::Acquire) {
         match listener.accept() {
             Ok((stream, _)) => {
-                let r = Arc::clone(&router);
+                let r = Arc::clone(&registry);
                 let s = Arc::clone(&stop);
                 handles.push(std::thread::spawn(move || handle_client(stream, r, s)));
             }
@@ -94,7 +107,7 @@ fn reap_finished(handles: Vec<std::thread::JoinHandle<()>>) -> Vec<std::thread::
         .collect()
 }
 
-fn handle_client(stream: TcpStream, router: Arc<Router>, stop: Arc<AtomicBool>) {
+fn handle_client(stream: TcpStream, registry: Arc<ModelRegistry>, stop: Arc<AtomicBool>) {
     // A blocking read would pin this thread (and the final join in `serve`)
     // on a silent client forever; time out reads and treat the timeout as a
     // stop-flag poll. Writes get a generous timeout too: a client that
@@ -146,7 +159,7 @@ fn handle_client(stream: TcpStream, router: Arc<Router>, stop: Arc<AtomicBool>) 
         }
         let line = String::from_utf8_lossy(&raw);
         if !line.trim().is_empty() {
-            let response = match handle_line(&line, &router, &stop) {
+            let response = match handle_line(&line, &registry, &stop) {
                 Ok(j) => j,
                 Err(msg) => Json::obj([("error", Json::str(msg))]),
             };
@@ -166,39 +179,32 @@ fn handle_client(stream: TcpStream, router: Arc<Router>, stop: Arc<AtomicBool>) 
 
 fn handle_line(
     line: &str,
-    router: &Router,
+    registry: &ModelRegistry,
     stop: &AtomicBool,
 ) -> Result<Json, String> {
     let req = Json::parse(line).map_err(|e| e.to_string())?;
     if let Some(cmd) = req.get("cmd").and_then(|c| c.as_str()) {
-        return match cmd {
-            "metrics" => Ok(Json::obj([(
-                "report",
-                Json::str(router.metrics().report()),
-            )])),
-            "depth" => Ok(Json::obj([("depth", Json::int(router.depth() as i64))])),
-            "shutdown" => {
-                stop.store(true, Ordering::Release);
-                Ok(Json::obj([("ok", Json::Bool(true))]))
-            }
-            other => Err(format!("unknown cmd '{other}'")),
-        };
+        return handle_cmd(cmd, &req, registry, stop);
     }
+    // `model` must be a string when present (`null` counts as absent); a
+    // numeric id from a buggy client must not be silently routed to the
+    // default model.
+    let model = match req.get("model") {
+        None | Some(Json::Null) => None,
+        Some(m) => Some(
+            m.as_str()
+                .ok_or_else(|| "model must be a string".to_string())?,
+        ),
+    };
     let features = req
         .req("features")
         .map_err(|e| e.to_string())?
         .to_f64_vec()
         .map_err(|e| format!("features: {e}"))?;
-    // Validate the width up front: a wrong-width request must come back as
-    // a protocol error, not a panic inside the serving path.
-    if features.len() != router.input_features() {
-        return Err(format!(
-            "features: expected {} values, got {}",
-            router.input_features(),
-            features.len()
-        ));
-    }
-    let rx = router.submit(features);
+    // The registry validates the model name and feature width, so an
+    // unknown model or wrong-width request comes back as a protocol error,
+    // not a panic inside the serving path.
+    let rx = registry.classify(model, &features).map_err(|e| e.to_string())?;
     let reply = rx
         .recv_timeout(Duration::from_secs(10))
         .map_err(|_| "inference failed or timed out".to_string())?;
@@ -209,35 +215,121 @@ fn handle_line(
     ]))
 }
 
+/// Admin commands: registry introspection, live load/unload, shutdown.
+fn handle_cmd(
+    cmd: &str,
+    req: &Json,
+    registry: &ModelRegistry,
+    stop: &AtomicBool,
+) -> Result<Json, String> {
+    match cmd {
+        // One section per model; single-model deployments read the same
+        // counters they always did.
+        "metrics" => Ok(Json::obj([(
+            "report",
+            Json::str(registry.metrics_report()),
+        )])),
+        // `depth` stays a single integer (total across models) for
+        // existing clients, with the per-model split alongside.
+        "depth" => {
+            let per: std::collections::BTreeMap<String, Json> = registry
+                .infos()
+                .into_iter()
+                .map(|i| (i.name, Json::int(i.depth as i64)))
+                .collect();
+            Ok(Json::obj([
+                ("depth", Json::int(registry.depth_total() as i64)),
+                ("models", Json::Obj(per)),
+            ]))
+        }
+        "models" => {
+            let models: Vec<Json> = registry
+                .infos()
+                .into_iter()
+                .map(|i| {
+                    Json::obj([
+                        ("name", Json::str(i.name)),
+                        ("engine", Json::str(i.engine)),
+                        ("features", Json::int(i.features as i64)),
+                        ("depth", Json::int(i.depth as i64)),
+                        ("default", Json::Bool(i.default)),
+                        ("source", i.source.map(Json::str).unwrap_or(Json::Null)),
+                    ])
+                })
+                .collect();
+            let default =
+                registry.default_name().map(Json::str).unwrap_or(Json::Null);
+            Ok(Json::obj([("models", Json::Arr(models)), ("default", default)]))
+        }
+        "load" => {
+            let path = req
+                .req("path")
+                .map_err(|e| e.to_string())?
+                .as_str()
+                .ok_or_else(|| "path must be a string".to_string())?;
+            // Strict like classify's "model": a non-string alias must not
+            // silently fall back to the bundle's own name — that could
+            // hot-swap a live model the caller never meant to touch.
+            let name = match req.get("name") {
+                None | Some(Json::Null) => None,
+                Some(n) => Some(
+                    n.as_str()
+                        .ok_or_else(|| "name must be a string".to_string())?,
+                ),
+            };
+            let key = registry.load_path(path, name).map_err(|e| e.to_string())?;
+            Ok(Json::obj([("ok", Json::Bool(true)), ("name", Json::str(key))]))
+        }
+        "unload" => {
+            let name = req
+                .req("name")
+                .map_err(|e| e.to_string())?
+                .as_str()
+                .ok_or_else(|| "name must be a string".to_string())?;
+            registry.unload(name).map_err(|e| e.to_string())?;
+            Ok(Json::obj([("ok", Json::Bool(true))]))
+        }
+        "shutdown" => {
+            stop.store(true, Ordering::Release);
+            Ok(Json::obj([("ok", Json::Bool(true))]))
+        }
+        other => Err(format!("unknown cmd '{other}'")),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::batcher::BatchPolicy;
-    use crate::coordinator::router::{Policy, RouterBuilder};
+    use crate::coordinator::router::{Policy, Router, RouterBuilder};
     use crate::flow::{run_flow, FlowConfig};
     use crate::nn::model::{random_model, Model};
     use std::io::{BufRead, BufReader, Write};
 
-    fn tiny_router(seed: u64) -> (Arc<Router>, Model) {
-        let model = random_model("tcp", 4, &[3, 3], 2, 1, seed);
+    fn tiny_router_for(model: &Model) -> Router {
         let flow =
-            run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
-        let router = RouterBuilder::new(model.clone())
+            run_flow(model, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+        RouterBuilder::new(model.clone())
             .circuit(flow.circuit.netlist)
             .engine(Policy::Logic)
             .batch_policy(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) })
             .workers(2)
             .build()
-            .unwrap();
-        (Arc::new(router), model)
+            .unwrap()
+    }
+
+    fn tiny_registry(seed: u64) -> (Arc<ModelRegistry>, Model) {
+        let model = random_model("tcp", 4, &[3, 3], 2, 1, seed);
+        let router = tiny_router_for(&model);
+        (Arc::new(ModelRegistry::with_default("tcp", router)), model)
     }
 
     fn spawn_server(
-        router: Arc<Router>,
+        registry: Arc<ModelRegistry>,
     ) -> (std::thread::JoinHandle<()>, u16) {
         let (tx, rx) = std::sync::mpsc::channel();
         let server = std::thread::spawn(move || {
-            serve(router, "127.0.0.1:0", Some(tx)).unwrap();
+            serve(registry, "127.0.0.1:0", Some(tx)).unwrap();
         });
         let port = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         (server, port)
@@ -245,8 +337,8 @@ mod tests {
 
     #[test]
     fn end_to_end_tcp_session() {
-        let (router, model) = tiny_router(1);
-        let (server, port) = spawn_server(Arc::clone(&router));
+        let (registry, model) = tiny_registry(1);
+        let (server, port) = spawn_server(Arc::clone(&registry));
 
         let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
@@ -289,8 +381,8 @@ mod tests {
 
     #[test]
     fn depth_command_reports_queue_depth() {
-        let (router, _model) = tiny_router(2);
-        let (server, port) = spawn_server(Arc::clone(&router));
+        let (registry, _model) = tiny_registry(2);
+        let (server, port) = spawn_server(Arc::clone(&registry));
 
         let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
@@ -313,8 +405,8 @@ mod tests {
 
     #[test]
     fn oversized_line_disconnects_instead_of_growing_forever() {
-        let (router, _model) = tiny_router(4);
-        let (server, port) = spawn_server(Arc::clone(&router));
+        let (registry, _model) = tiny_registry(4);
+        let (server, port) = spawn_server(Arc::clone(&registry));
 
         let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
@@ -338,12 +430,144 @@ mod tests {
     }
 
     #[test]
+    fn model_field_routes_between_models() {
+        // Two models with different feature widths: a misroute would either
+        // hit the wrong-width protocol error or decode the wrong circuit.
+        let m4 = random_model("four", 4, &[3, 3], 2, 1, 21);
+        let m6 = random_model("six", 6, &[4, 3], 2, 1, 22);
+        let registry = Arc::new(ModelRegistry::with_default("four", tiny_router_for(&m4)));
+        registry.install("six", tiny_router_for(&m6), None);
+        let (server, port) = spawn_server(Arc::clone(&registry));
+
+        let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+
+        // Unnamed → default (the 4-feature model): unchanged legacy shape.
+        let x4 = vec![0.3, -0.2, 0.9, -1.0];
+        conn.write_all(b"{\"features\": [0.3, -0.2, 0.9, -1.0]}\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        let resp = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(
+            resp.get("class").unwrap().as_usize().unwrap(),
+            crate::nn::eval::classify(&m4, &x4)
+        );
+
+        // Named → the 6-feature model.
+        let x6 = vec![0.1, 0.2, -0.4, 0.5, -0.6, 0.7];
+        conn.write_all(
+            b"{\"model\": \"six\", \"features\": [0.1, 0.2, -0.4, 0.5, -0.6, 0.7]}\n",
+        )
+        .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(
+            resp.get("class").unwrap().as_usize().unwrap(),
+            crate::nn::eval::classify(&m6, &x6),
+            "{line}"
+        );
+
+        // Unknown model → protocol error, session continues.
+        conn.write_all(b"{\"model\": \"nope\", \"features\": [0.0]}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("error") && line.contains("no model named"), "{line}");
+
+        // Non-string model → protocol error, not silent default routing.
+        conn.write_all(b"{\"model\": 3, \"features\": [0.3, -0.2, 0.9, -1.0]}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("model must be a string"), "{line}");
+
+        // models command lists both with the default flagged.
+        conn.write_all(b"{\"cmd\": \"models\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = crate::util::json::Json::parse(&line).unwrap();
+        let models = resp.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(models.len(), 2);
+        assert_eq!(resp.get("default").unwrap().as_str(), Some("four"));
+
+        // depth: total plus the per-model split.
+        conn.write_all(b"{\"cmd\": \"depth\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(resp.get("depth").unwrap().as_usize(), Some(0));
+        let per = resp.get("models").unwrap().as_obj().unwrap();
+        assert!(per.contains_key("four") && per.contains_key("six"), "{line}");
+
+        conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn load_and_unload_over_tcp() {
+        let (registry, _model) = tiny_registry(5);
+        let (server, port) = spawn_server(Arc::clone(&registry));
+
+        // Persist a bundle for a fresh model to load live.
+        let extra = random_model("extra", 5, &[4, 3], 2, 1, 31);
+        let flow = run_flow(&extra, &FlowConfig { jobs: 1, ..Default::default() }, None)
+            .unwrap();
+        let path = "/tmp/nnt_server_live_load.circuit.json";
+        crate::flow::artifact::save_circuit(path, &flow.circuit, &extra).unwrap();
+
+        let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+
+        conn.write_all(
+            format!("{{\"cmd\": \"load\", \"path\": \"{path}\"}}\n").as_bytes(),
+        )
+        .unwrap();
+        reader.read_line(&mut line).unwrap();
+        let resp = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(resp.get("ok").and_then(|o| o.as_bool()), Some(true), "{line}");
+        assert_eq!(resp.get("name").unwrap().as_str(), Some("extra"));
+
+        // The freshly loaded model serves, bit-exact.
+        let x = vec![0.2, -0.3, 0.4, -0.5, 0.6];
+        conn.write_all(
+            b"{\"model\": \"extra\", \"features\": [0.2, -0.3, 0.4, -0.5, 0.6]}\n",
+        )
+        .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(
+            resp.get("class").unwrap().as_usize().unwrap(),
+            crate::nn::eval::classify(&extra, &x),
+            "{line}"
+        );
+
+        // Unload it; classifying it again is a protocol error.
+        conn.write_all(b"{\"cmd\": \"unload\", \"name\": \"extra\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("ok"), "{line}");
+        conn.write_all(b"{\"model\": \"extra\", \"features\": [0.0]}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("no model named 'extra'"), "{line}");
+
+        conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        server.join().unwrap();
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
     fn shutdown_completes_with_an_idle_client_attached() {
         // Regression: `serve` used to join per-client threads that could
         // block forever in a read; an idle (never-writing) client therefore
         // hung the shutdown. The read timeout turns that into a poll.
-        let (router, _model) = tiny_router(3);
-        let (server, port) = spawn_server(Arc::clone(&router));
+        let (registry, _model) = tiny_registry(3);
+        let (server, port) = spawn_server(Arc::clone(&registry));
 
         // Idle client: connects, never sends a byte.
         let idle = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();

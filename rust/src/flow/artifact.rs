@@ -14,6 +14,7 @@
 //! {
 //!   "format": "nullanet-circuit", "version": 1,
 //!   "model": "jsc-s", "fingerprint": "<fnv1a64 of the model JSON>",
+//!   "model_spec": { …the model's own JSON… },
 //!   "num_inputs": N, "num_stages": S,
 //!   "luts":    [{"k": 2, "in": [sig codes], "tt": "<hex>", "stage": 0}, …],
 //!   "outputs": [[sig code, inverted], …]
@@ -24,6 +25,17 @@
 //! compiled simulator). Loading validates format, version, fingerprint,
 //! topological order, LUT arity, and the stage assignment — every failure
 //! is a typed [`ArtifactError`], never a panic.
+//!
+//! `model_spec` embeds the full model JSON, making the artifact a
+//! **self-contained named-model bundle**: [`load_bundle`] returns both the
+//! model and its circuit from one file, which is what lets a
+//! [`crate::coordinator::registry::ModelRegistry`] scan a directory of
+//! artifacts and serve each under its model name without any side-channel
+//! `.model.json` lookup. The fingerprint field is recomputed from the
+//! embedded spec on load, so a bundle whose model and circuit were spliced
+//! from different files is rejected. (Pre-bundle artifacts without
+//! `model_spec` still load via [`load_circuit`] + an externally supplied
+//! model.)
 
 use std::fmt;
 
@@ -133,6 +145,7 @@ pub fn circuit_to_json(circuit: &PipelinedCircuit, model: &Model) -> Json {
         ("version", Json::int(VERSION)),
         ("model", Json::str(model.name.clone())),
         ("fingerprint", Json::str(model_fingerprint(model))),
+        ("model_spec", model.to_json()),
         ("num_inputs", Json::int(nl.num_inputs as i64)),
         ("num_stages", Json::int(circuit.num_stages as i64)),
         ("luts", Json::Arr(luts)),
@@ -140,9 +153,8 @@ pub fn circuit_to_json(circuit: &PipelinedCircuit, model: &Model) -> Json {
     ])
 }
 
-/// Parse and validate a circuit artifact against `model` (the fingerprint
-/// must match and the circuit must be structurally sound).
-pub fn circuit_from_json(j: &Json, model: &Model) -> Result<PipelinedCircuit, ArtifactError> {
+/// Validate the format tag and version of an artifact JSON.
+fn check_header(j: &Json) -> Result<(), ArtifactError> {
     let tag = j.get("format").and_then(|v| v.as_str()).unwrap_or("");
     if tag != FORMAT {
         return Err(ArtifactError::Format(format!(
@@ -153,6 +165,33 @@ pub fn circuit_from_json(j: &Json, model: &Model) -> Result<PipelinedCircuit, Ar
     if version != VERSION {
         return Err(ArtifactError::Version { found: version, supported: VERSION });
     }
+    Ok(())
+}
+
+/// Parse a self-contained bundle: the embedded `model_spec` plus the
+/// circuit compiled from it. The artifact's `fingerprint` field is checked
+/// against a fingerprint *recomputed from the embedded model*, so a file
+/// whose model and circuit halves were spliced together from different
+/// artifacts is rejected, never served.
+pub fn bundle_from_json(j: &Json) -> Result<(Model, PipelinedCircuit), ArtifactError> {
+    check_header(j)?;
+    let spec = j.get("model_spec").ok_or_else(|| {
+        invalid(
+            "artifact has no embedded model (model_spec); recompile it with a \
+             current `nullanet compile`, or serve it with an explicit --model \
+             + --circuit pair",
+        )
+    })?;
+    let model = Model::from_json(spec)
+        .map_err(|e| invalid(format!("embedded model_spec: {e}")))?;
+    let circuit = circuit_from_json(j, &model)?;
+    Ok((model, circuit))
+}
+
+/// Parse and validate a circuit artifact against `model` (the fingerprint
+/// must match and the circuit must be structurally sound).
+pub fn circuit_from_json(j: &Json, model: &Model) -> Result<PipelinedCircuit, ArtifactError> {
+    check_header(j)?;
     let found = j
         .get("fingerprint")
         .and_then(|v| v.as_str())
@@ -278,10 +317,22 @@ pub fn save_circuit(
 
 /// Load a circuit artifact and check it against `model`.
 pub fn load_circuit(path: &str, model: &Model) -> Result<PipelinedCircuit, ArtifactError> {
+    let j = parse_file(path)?;
+    circuit_from_json(&j, model)
+}
+
+/// Load a self-contained bundle: the embedded model and its circuit.
+/// This is the registry's named-model handle — one file, one servable
+/// model, no external `.model.json` needed.
+pub fn load_bundle(path: &str) -> Result<(Model, PipelinedCircuit), ArtifactError> {
+    let j = parse_file(path)?;
+    bundle_from_json(&j)
+}
+
+fn parse_file(path: &str) -> Result<Json, ArtifactError> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| ArtifactError::Io { path: path.to_string(), msg: e.to_string() })?;
-    let j = Json::parse(&text).map_err(|e| ArtifactError::Parse(format!("{path}: {e}")))?;
-    circuit_from_json(&j, model)
+    Json::parse(&text).map_err(|e| ArtifactError::Parse(format!("{path}: {e}")))
 }
 
 #[cfg(test)]
@@ -391,6 +442,46 @@ mod tests {
         let err = circuit_from_json(&Json::Obj(o), &m).unwrap_err();
         assert!(matches!(err, ArtifactError::Invalid(_)), "{err}");
         assert!(err.to_string().contains("outputs"), "{err}");
+    }
+
+    #[test]
+    fn bundle_roundtrip_recovers_model_and_circuit() {
+        let (m, circuit) = flow_circuit(17);
+        let path = "/tmp/nnt_bundle_test.circuit.json";
+        save_circuit(path, &circuit, &m).unwrap();
+        let (back_model, back_circuit) = load_bundle(path).unwrap();
+        assert_eq!(back_model.name, m.name);
+        assert_eq!(model_fingerprint(&back_model), model_fingerprint(&m));
+        assert_eq!(back_circuit.stats(), circuit.stats());
+        for bits in 0..(1u64 << 5) {
+            assert_eq!(back_circuit.eval(bits), circuit.eval(bits), "bits={bits}");
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bundle_without_embedded_model_is_rejected() {
+        let (m, circuit) = flow_circuit(19);
+        let j = circuit_to_json(&circuit, &m);
+        let Json::Obj(mut o) = j else { panic!() };
+        o.remove("model_spec");
+        let err = bundle_from_json(&Json::Obj(o)).unwrap_err();
+        assert!(matches!(err, ArtifactError::Invalid(_)), "{err}");
+        assert!(err.to_string().contains("model_spec"), "{err}");
+    }
+
+    #[test]
+    fn spliced_bundle_fails_the_fingerprint_check() {
+        // Splice: circuit from one model, model_spec from another. The
+        // recomputed fingerprint of the embedded spec no longer matches the
+        // artifact's fingerprint field.
+        let (m, circuit) = flow_circuit(23);
+        let other = random_model("art", 5, &[4, 3], 2, 1, 24);
+        let j = circuit_to_json(&circuit, &m);
+        let Json::Obj(mut o) = j else { panic!() };
+        o.insert("model_spec".into(), other.to_json());
+        let err = bundle_from_json(&Json::Obj(o)).unwrap_err();
+        assert!(matches!(err, ArtifactError::FingerprintMismatch { .. }), "{err}");
     }
 
     #[test]

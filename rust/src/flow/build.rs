@@ -18,7 +18,7 @@ use crate::logic::aig::Aig;
 use crate::logic::mapper::{map_aig, MapConfig};
 use crate::logic::netlist::{LutNetlist, PipelinedCircuit, Sig};
 use crate::logic::retime::retime_min_period;
-use crate::nn::enumerate::observed_patterns;
+use crate::nn::enumerate::{check_layer_enum_bounds, observed_patterns};
 use crate::nn::eval::{bits_to_codes, codes_to_bits, forward_codes, quantize_input, Trace};
 use crate::nn::model::Model;
 use crate::util::threadpool::ThreadPool;
@@ -47,21 +47,34 @@ pub fn run_flow(
     dc_traces: Option<&[Vec<f64>]>,
 ) -> Result<FlowResult, NnError> {
     model.validate().map_err(NnError::Flow)?;
+
+    // Enumeration feasibility, checked up front: every neuron's
+    // fanin · in_bits must fit the 2^MAX_ENUM_BITS tables that both the
+    // DC observation pass and the exhaustive enumeration allocate. A
+    // wide-fanin model must come back as a typed flow error here, not as
+    // an OOM in `observed_patterns` or an assert deep in a worker thread.
+    for l in 0..model.layers.len() {
+        check_layer_enum_bounds(model, l).map_err(NnError::Flow)?;
+    }
     let mut timer = StageTimer::new();
 
     // ---- optional data-derived don't-cares ----
     let observed: Option<Vec<Vec<Vec<bool>>>> = if config.dc_from_data {
         let xs = dc_traces
             .ok_or_else(|| NnError::Flow("dc_from_data requires training inputs".into()))?;
-        Some(timer.time("observe", || {
-            let traces: Vec<Trace> = xs
-                .iter()
-                .map(|x| forward_codes(model, &quantize_input(model, x)))
-                .collect();
-            (0..model.layers.len())
-                .map(|l| observed_patterns(model, l, &traces))
-                .collect()
-        }))
+        Some(
+            timer
+                .time("observe", || -> Result<Vec<Vec<Vec<bool>>>, String> {
+                    let traces: Vec<Trace> = xs
+                        .iter()
+                        .map(|x| forward_codes(model, &quantize_input(model, x)))
+                        .collect();
+                    (0..model.layers.len())
+                        .map(|l| observed_patterns(model, l, &traces))
+                        .collect()
+                })
+                .map_err(NnError::Flow)?,
+        )
     } else {
         None
     };
@@ -498,6 +511,25 @@ mod tests {
         let ys: Vec<usize> = xs.iter().map(|x| crate::nn::eval::classify(&m, x)).collect();
         // Logic is bit-exact ⇒ same predictions ⇒ 100% agreement.
         assert_eq!(circuit_accuracy(&m, &r.circuit, &xs, &ys), 1.0);
+    }
+
+    #[test]
+    fn wide_fanin_model_is_a_typed_flow_error_not_a_panic() {
+        // fanin 21 × 1 input bit = 21 enumeration variables > MAX_ENUM_BITS.
+        // Both flow entry paths must reject it before any 2^21 allocation:
+        // the plain flow (the old path panicked in enumerate_neuron's
+        // assert on a worker thread) and the DC-from-data flow (the old
+        // path allocated the observation tables unchecked).
+        let m = random_model("wide", 21, &[2], 21, 1, 5);
+        let err = run_flow(&m, &FlowConfig { jobs: 1, ..Default::default() }, None)
+            .unwrap_err();
+        assert!(matches!(err, NnError::Flow(_)), "{err}");
+        assert!(err.to_string().contains("fanin 21"), "{err}");
+
+        let xs: Vec<Vec<f64>> = vec![vec![0.0; 21]; 4];
+        let cfg = FlowConfig { dc_from_data: true, jobs: 1, ..Default::default() };
+        let err = run_flow(&m, &cfg, Some(&xs)).unwrap_err();
+        assert!(matches!(err, NnError::Flow(_)), "{err}");
     }
 
     #[test]

@@ -18,7 +18,11 @@
 //!   fingerprint-checked artifact ([`flow::artifact`]), and serves
 //!   inference behind the pluggable [`coordinator::engine::InferenceEngine`]
 //!   trait: the packed multi-worker bit-parallel simulator, the PJRT
-//!   numeric engine, or a disagreement-counting mirror of both. Public
+//!   numeric engine, or a disagreement-counting mirror of both. Any number
+//!   of compiled models share one process behind the
+//!   [`coordinator::registry::ModelRegistry`] — per-model batchers and
+//!   metrics, artifact-directory cold start, and live hot-swap that drains
+//!   the displaced engine without dropping in-flight replies. Public
 //!   entry points report typed [`NnError`]s.
 //!
 //! See [`rust/DESIGN.md`](../DESIGN.md) for the full system inventory, the

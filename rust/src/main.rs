@@ -7,6 +7,8 @@
 //! nullanet verify    --arch jsc-s [--samples 2000] [--circuit file.circuit.json]
 //! nullanet serve     --arch jsc-s --addr 127.0.0.1:7878 --engine logic|pjrt|compare
 //!                    [--circuit file.circuit.json] [--workers N]
+//! nullanet serve     --models artifacts/circuits [--default-model name]
+//!                    [--addr …] [--max-batch N] [--max-wait-us N] [--workers N]
 //! nullanet emit      --arch jsc-s --format blif|verilog --out file
 //! nullanet info      --arch jsc-s
 //! nullanet gen-model --features 6 --widths 5,4 --fanin 2 --act-bits 1 --out m.json
@@ -22,7 +24,9 @@ use std::process::ExitCode;
 use std::sync::Arc;
 
 use nullanet_tiny::baseline::{build_logicnets, AqpModel};
-use nullanet_tiny::coordinator::{BatchPolicy, PjrtSpec, Policy, RouterBuilder};
+use nullanet_tiny::coordinator::{
+    BatchPolicy, ModelRegistry, PjrtSpec, Policy, RegistryConfig, RouterBuilder,
+};
 use nullanet_tiny::data::Dataset;
 use nullanet_tiny::error::NnError;
 use nullanet_tiny::flow::{artifact, circuit_accuracy, run_flow, FlowConfig};
@@ -258,18 +262,8 @@ fn cmd_verify(args: &Args) -> Result<(), NnError> {
 fn cmd_serve(args: &Args) -> Result<(), NnError> {
     conf(args.check_known(&[
         "arch", "model", "artifacts", "addr", "engine", "max-batch", "max-wait-us",
-        "jobs", "workers", "circuit",
+        "jobs", "workers", "circuit", "models", "default-model",
     ]))?;
-    let model = load_model(args)?;
-    let policy = Policy::parse(&args.get_str("engine", "logic"))
-        .ok_or_else(|| NnError::Config("bad --engine (logic|pjrt|compare)".into()))?;
-    if policy == Policy::Numeric && args.get_opt("circuit").is_some() {
-        return Err(NnError::Config(
-            "--circuit is unused with --engine pjrt (the numeric engine loads the \
-             HLO artifact, not a logic circuit); drop it or pick logic/compare"
-                .into(),
-        ));
-    }
     let bp = BatchPolicy {
         max_batch: conf(args.get_usize("max-batch", 64))?,
         max_wait: std::time::Duration::from_micros(
@@ -280,6 +274,73 @@ fn cmd_serve(args: &Args) -> Result<(), NnError> {
     // groups are evaluated in parallel on one shared compiled netlist.
     let workers = conf(args.get_usize("workers", RouterBuilder::default_workers()))?;
 
+    // Multi-model mode: scan a directory of self-contained circuit bundles
+    // and serve every one from the registry (each under its model name,
+    // each with its own batcher + engine stack). Hot-swap/load/unload then
+    // happen live over the wire protocol.
+    if let Some(dir) = args.get_opt("models") {
+        if args.get_str("engine", "logic") != "logic" {
+            return Err(NnError::Config(
+                "--models serves compiled logic circuits; --engine pjrt/compare \
+                 needs the single-model path (--arch/--model)"
+                    .into(),
+            ));
+        }
+        if args.get_opt("arch").is_some()
+            || args.get_opt("model").is_some()
+            || args.get_opt("circuit").is_some()
+        {
+            return Err(NnError::Config(
+                "--models replaces --arch/--model/--circuit (the bundles carry \
+                 their own models)"
+                    .into(),
+            ));
+        }
+        let registry = Arc::new(ModelRegistry::new(RegistryConfig {
+            batch_policy: bp,
+            workers,
+        }));
+        let loaded = registry.load_dir(dir)?;
+        if loaded.is_empty() {
+            return Err(NnError::Config(format!(
+                "--models {dir}: no circuit bundles found (compile some with \
+                 `nullanet compile`)"
+            )));
+        }
+        if let Some(name) = args.get_opt("default-model") {
+            registry.set_default(name)?;
+        }
+        for info in registry.infos() {
+            let tag = if info.default { " (default)" } else { "" };
+            println!(
+                "model '{}'{tag}: {} features, engine '{}'{}",
+                info.name,
+                info.features,
+                info.engine,
+                info.source.map(|s| format!(", from {s}")).unwrap_or_default(),
+            );
+        }
+        let addr = args.get_str("addr", "127.0.0.1:7878");
+        println!(
+            "serving {} models on {addr} (send {{\"cmd\":\"shutdown\"}} to stop)",
+            registry.len()
+        );
+        nullanet_tiny::coordinator::server::serve(Arc::clone(&registry), &addr, None)
+            .map_err(|e| NnError::Config(format!("serve on {addr}: {e}")))?;
+        println!("{}", registry.metrics_report());
+        return Ok(());
+    }
+
+    let model = load_model(args)?;
+    let policy = Policy::parse(&args.get_str("engine", "logic"))
+        .ok_or_else(|| NnError::Config("bad --engine (logic|pjrt|compare)".into()))?;
+    if policy == Policy::Numeric && args.get_opt("circuit").is_some() {
+        return Err(NnError::Config(
+            "--circuit is unused with --engine pjrt (the numeric engine loads the \
+             HLO artifact, not a logic circuit); drop it or pick logic/compare"
+                .into(),
+        ));
+    }
     let mut builder = RouterBuilder::new(model.clone())
         .engine(policy)
         .batch_policy(bp)
@@ -314,16 +375,27 @@ fn cmd_serve(args: &Args) -> Result<(), NnError> {
             }
         }
     }
-    let router = Arc::new(builder.build()?);
+    let router = builder.build()?;
+    let engine_name = router.engine_name();
+    // Single model behind the same registry front end: it becomes the
+    // default, so clients that never send a "model" field are unaffected,
+    // and live {"cmd":"load"} can still add more models beside it. The
+    // registry carries the CLI batch/worker tuning so those live loads
+    // build their engines with it, not with hardcoded defaults.
+    let registry = Arc::new(ModelRegistry::new(RegistryConfig {
+        batch_policy: bp,
+        workers,
+    }));
+    registry.install(&model.name, router, None);
     let addr = args.get_str("addr", "127.0.0.1:7878");
     println!(
-        "serving on {addr} (policy {policy:?}, engine '{}'; send \
-         {{\"cmd\":\"shutdown\"}} to stop)",
-        router.engine_name()
+        "serving model '{}' on {addr} (policy {policy:?}, engine '{engine_name}'; \
+         send {{\"cmd\":\"shutdown\"}} to stop)",
+        model.name
     );
-    nullanet_tiny::coordinator::server::serve(Arc::clone(&router), &addr, None)
+    nullanet_tiny::coordinator::server::serve(Arc::clone(&registry), &addr, None)
         .map_err(|e| NnError::Config(format!("serve on {addr}: {e}")))?;
-    println!("{}", router.metrics().report());
+    println!("{}", registry.metrics_report());
     Ok(())
 }
 

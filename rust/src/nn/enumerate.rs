@@ -11,6 +11,35 @@
 use crate::logic::truthtable::TruthTable;
 use crate::nn::model::Model;
 
+/// Hard bound on per-neuron enumeration width (bits = fanin · in_bits).
+/// Both the exhaustive enumeration and the DC-pass observation tables
+/// allocate `2^bits` entries, so every path that sizes such a table — not
+/// just [`enumerate_neuron`] — must enforce the same limit *before*
+/// allocating (a wide-fanin model would otherwise OOM or overflow the
+/// shift in the DC pass before the enumeration guard could fire).
+pub const MAX_ENUM_BITS: usize = 20;
+
+/// The one shared bound check: every neuron of `layer` must fit
+/// `2^MAX_ENUM_BITS`. Called by `run_flow` up front (all layers) and by
+/// [`observed_patterns`] before it allocates; [`enumerate_neuron`] keeps
+/// an assert as the last-resort invariant.
+pub fn check_layer_enum_bounds(model: &Model, layer: usize) -> Result<(), String> {
+    let l = &model.layers[layer];
+    let in_bits = model.in_quant_of_layer(layer).bits;
+    for (n, m) in l.mask.iter().enumerate() {
+        let bits = m.len() * in_bits;
+        if bits > MAX_ENUM_BITS {
+            return Err(format!(
+                "layer {layer} neuron {n}: fanin {} × {in_bits} input bits = \
+                 2^{bits} enumeration/observation entries; the per-neuron \
+                 bound is 2^{MAX_ENUM_BITS}",
+                m.len()
+            ));
+        }
+    }
+    Ok(())
+}
+
 /// Enumerated function of one neuron: one table per output bit (LSB first),
 /// plus the shared don't-care set.
 #[derive(Clone, Debug)]
@@ -41,7 +70,10 @@ pub fn enumerate_neuron(
     let in_bits_per = in_q.bits;
     let fanin = l.mask[neuron].len();
     let input_bits = fanin * in_bits_per;
-    assert!(input_bits <= 20, "enumeration limited to 20 input bits");
+    assert!(
+        input_bits <= MAX_ENUM_BITS,
+        "enumeration limited to {MAX_ENUM_BITS} input bits (got {input_bits})"
+    );
     let out_bits = l.act.bits;
     let size = 1usize << input_bits;
     if let Some(obs) = observed {
@@ -87,11 +119,16 @@ pub fn enumerate_neuron(
 
 /// Collect, per neuron of `layer`, the set of observed packed input
 /// assignments over a dataset of input-code traces (for DC-from-data mode).
+///
+/// Errors (instead of allocating) when any neuron's `fanin · in_bits`
+/// exceeds [`MAX_ENUM_BITS`]: the observation table is the same `2^bits`
+/// shape the enumeration builds, and the DC pass runs *first* in the flow.
 pub fn observed_patterns(
     model: &Model,
     layer: usize,
     traces: &[crate::nn::eval::Trace],
-) -> Vec<Vec<bool>> {
+) -> Result<Vec<Vec<bool>>, String> {
+    check_layer_enum_bounds(model, layer)?;
     let l = &model.layers[layer];
     let in_bits_per = model.in_quant_of_layer(layer).bits;
     let mut out: Vec<Vec<bool>> = l
@@ -110,7 +147,7 @@ pub fn observed_patterns(
             out[n][packed] = true;
         }
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -168,7 +205,7 @@ mod tests {
                 forward_codes(&m, &codes)
             })
             .collect();
-        let obs = observed_patterns(&m, 0, &traces);
+        let obs = observed_patterns(&m, 0, &traces).unwrap();
         assert_eq!(obs.len(), 3);
         // With 1-bit inputs and fanin 2 → 4 patterns; some must be observed.
         for o in &obs {
@@ -184,6 +221,17 @@ mod tests {
         for t in &f.on {
             assert!(t.and(&f.dc).is_zero());
         }
+    }
+
+    #[test]
+    fn observed_patterns_reject_wide_fanin_before_allocating() {
+        // fanin 21 × 1 input bit = 21 bits > MAX_ENUM_BITS: the old code
+        // allocated vec![false; 1 << 21] per neuron unchecked (and would
+        // overflow the shift entirely past 63 bits).
+        let m = random_model("wide", 21, &[2], 21, 1, 5);
+        let err = observed_patterns(&m, 0, &[]).unwrap_err();
+        assert!(err.contains("2^21"), "{err}");
+        assert!(err.contains("fanin 21"), "{err}");
     }
 
     #[test]

@@ -125,9 +125,10 @@ fn pjrt_routing_with_real_artifacts() {
 fn tcp_server_multiple_clients() {
     use std::io::{BufRead, BufReader, Write};
     let (router, model) = build_router(Policy::Logic, 8);
-    let router = Arc::new(router);
+    let registry =
+        Arc::new(nullanet_tiny::coordinator::ModelRegistry::with_default("coord", router));
     let (tx, rx) = std::sync::mpsc::channel();
-    let r2 = Arc::clone(&router);
+    let r2 = Arc::clone(&registry);
     let server = std::thread::spawn(move || {
         nullanet_tiny::coordinator::server::serve(r2, "127.0.0.1:0", Some(tx)).unwrap();
     });

@@ -1,0 +1,243 @@
+//! Integration: the multi-model serving registry — concurrent per-model
+//! bit-exactness, live hot-swap under load, and the TCP wire protocol's
+//! model routing + admin commands (ISSUE 3 acceptance criteria).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use nullanet_tiny::coordinator::{
+    BatchPolicy, ModelRegistry, Policy, RegistryConfig, Router, RouterBuilder,
+};
+use nullanet_tiny::flow::{artifact, run_flow, FlowConfig};
+use nullanet_tiny::logic::netlist::LutNetlist;
+use nullanet_tiny::nn::model::{random_model, Model};
+
+fn synth(model: &Model) -> LutNetlist {
+    run_flow(model, &FlowConfig { jobs: 1, ..Default::default() }, None)
+        .unwrap()
+        .circuit
+        .netlist
+}
+
+fn router_for(model: &Model, netlist: LutNetlist) -> Router {
+    RouterBuilder::new(model.clone())
+        .circuit(netlist)
+        .engine(Policy::Logic)
+        .batch_policy(BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(500) })
+        .workers(2)
+        .build()
+        .unwrap()
+}
+
+/// Two models served from one registry, hammered concurrently: every reply
+/// must be bit-exact against *its own* model's exact integer NN — a
+/// misroute would answer with the other model's (different) predictions.
+#[test]
+fn concurrent_classify_against_two_models_is_bit_exact_per_model() {
+    let ma = random_model("rega", 6, &[5, 4], 3, 1, 41);
+    let mb = random_model("regb", 6, &[5, 4], 3, 1, 42);
+    let reg = Arc::new(ModelRegistry::new(RegistryConfig {
+        batch_policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(500) },
+        workers: 2,
+    }));
+    reg.install("rega", router_for(&ma, synth(&ma)), None);
+    reg.install("regb", router_for(&mb, synth(&mb)), None);
+
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let reg = Arc::clone(&reg);
+        let (name, model) =
+            if t % 2 == 0 { ("rega", ma.clone()) } else { ("regb", mb.clone()) };
+        joins.push(std::thread::spawn(move || {
+            for i in 0..60u64 {
+                let x: Vec<f64> = (0..6)
+                    .map(|j| ((t * 97 + i * 13 + j) as f64 * 0.19).sin())
+                    .collect();
+                let want = nullanet_tiny::nn::eval::classify(&model, &x);
+                let reply = reg
+                    .classify(Some(name), &x)
+                    .unwrap()
+                    .recv_timeout(Duration::from_secs(10))
+                    .unwrap();
+                assert_eq!(reply.class, want, "model {name} req {i}");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    // 2 threads × 60 requests per model, all counted on the right metrics.
+    for info in reg.infos() {
+        assert_eq!(info.depth, 0);
+    }
+    use std::sync::atomic::Ordering;
+    let a = reg.get(Some("rega")).unwrap();
+    let b = reg.get(Some("regb")).unwrap();
+    assert_eq!(a.metrics().logic_requests.load(Ordering::Relaxed), 120);
+    assert_eq!(b.metrics().logic_requests.load(Ordering::Relaxed), 120);
+    reg.shutdown_all();
+}
+
+/// Hot-swap under sustained load: clients keep classifying while the
+/// model's router is repeatedly replaced. Every submit that succeeded must
+/// receive its reply (the displaced router drains before release), every
+/// reply must be bit-exact (same weights across swaps ⇒ any misroute or
+/// torn state would show up as a wrong class), and submits that race the
+/// swap window retry transparently inside `classify`.
+#[test]
+fn hot_swap_under_load_drops_and_misroutes_nothing() {
+    let model = random_model("swap", 6, &[5, 4], 3, 1, 43);
+    let netlist = synth(&model);
+    let reg = Arc::new(ModelRegistry::new(RegistryConfig::default()));
+    reg.install("swap", router_for(&model, netlist.clone()), None);
+
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let reg = Arc::clone(&reg);
+        let m = model.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut served = 0u64;
+            for i in 0..200u64 {
+                let x: Vec<f64> = (0..6)
+                    .map(|j| ((t * 131 + i * 7 + j) as f64 * 0.23).cos())
+                    .collect();
+                let want = nullanet_tiny::nn::eval::classify(&m, &x);
+                let rx = reg.classify(Some("swap"), &x).expect("model must stay routable");
+                let reply = rx
+                    .recv_timeout(Duration::from_secs(10))
+                    .expect("no reply may be dropped across a hot-swap drain");
+                assert_eq!(reply.class, want, "client {t} req {i}");
+                served += 1;
+            }
+            served
+        }));
+    }
+    // Swap the engine out from under the clients, repeatedly.
+    let swapper = {
+        let reg = Arc::clone(&reg);
+        let model = model.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut swaps = 0u64;
+            while !stop.load(std::sync::atomic::Ordering::Acquire) {
+                reg.install("swap", router_for(&model, netlist.clone()), None);
+                swaps += 1;
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            swaps
+        })
+    };
+    let mut total = 0;
+    for j in joins {
+        total += j.join().unwrap();
+    }
+    stop.store(true, std::sync::atomic::Ordering::Release);
+    let swaps = swapper.join().unwrap();
+    assert_eq!(total, 800, "every submitted request must be answered");
+    assert!(swaps >= 2, "the test must actually have swapped under load ({swaps})");
+    reg.shutdown_all();
+}
+
+/// The full artifact → registry path over TCP: a directory of compiled
+/// bundles is scanned at startup, both models classify bit-exact by name,
+/// and a third bundle is loaded live through the admin command.
+#[test]
+fn models_dir_scan_and_live_load_over_tcp() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let dir = "/tmp/nnt_registry_models_dir";
+    std::fs::remove_dir_all(dir).ok();
+    std::fs::create_dir_all(dir).unwrap();
+    let ma = random_model("dira", 5, &[4, 3], 2, 1, 51);
+    let mb = random_model("dirb", 5, &[4, 3], 2, 1, 52);
+    let fa = run_flow(&ma, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+    let fb = run_flow(&mb, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+    artifact::save_circuit(&format!("{dir}/dira.circuit.json"), &fa.circuit, &ma).unwrap();
+    artifact::save_circuit(&format!("{dir}/dirb.circuit.json"), &fb.circuit, &mb).unwrap();
+    // A model JSON sharing the directory must be skipped, not fatal.
+    ma.save(&format!("{dir}/dira.model.json")).unwrap();
+
+    let reg = Arc::new(ModelRegistry::new(RegistryConfig::default()));
+    let loaded = reg.load_dir(dir).unwrap();
+    assert_eq!(loaded, vec!["dira".to_string(), "dirb".to_string()]);
+    // Sorted scan ⇒ deterministic default.
+    assert_eq!(reg.default_name().as_deref(), Some("dira"));
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let r2 = Arc::clone(&reg);
+    let server = std::thread::spawn(move || {
+        nullanet_tiny::coordinator::server::serve(r2, "127.0.0.1:0", Some(tx)).unwrap();
+    });
+    let port = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+
+    let x = vec![0.4, -0.1, 0.7, -0.8, 0.2];
+    for (name, model) in [("dira", &ma), ("dirb", &mb)] {
+        conn.write_all(
+            format!(
+                "{{\"model\": \"{name}\", \"features\": [0.4, -0.1, 0.7, -0.8, 0.2]}}\n"
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = nullanet_tiny::util::json::Json::parse(&line).unwrap();
+        assert_eq!(
+            resp.get("class").unwrap().as_usize().unwrap(),
+            nullanet_tiny::nn::eval::classify(model, &x),
+            "model {name}: {line}"
+        );
+    }
+
+    // Live-load a third bundle from outside the scanned directory.
+    let mc = random_model("dirc", 5, &[4, 3], 2, 1, 53);
+    let fc = run_flow(&mc, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+    let extra = "/tmp/nnt_registry_extra.circuit.json";
+    artifact::save_circuit(extra, &fc.circuit, &mc).unwrap();
+    conn.write_all(format!("{{\"cmd\": \"load\", \"path\": \"{extra}\"}}\n").as_bytes())
+        .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\"") && line.contains("dirc"), "{line}");
+    conn.write_all(
+        b"{\"model\": \"dirc\", \"features\": [0.4, -0.1, 0.7, -0.8, 0.2]}\n",
+    )
+    .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let resp = nullanet_tiny::util::json::Json::parse(&line).unwrap();
+    assert_eq!(
+        resp.get("class").unwrap().as_usize().unwrap(),
+        nullanet_tiny::nn::eval::classify(&mc, &x),
+        "{line}"
+    );
+
+    conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    server.join().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+    std::fs::remove_file(extra).ok();
+}
+
+/// A bundle-less artifact directory fails loudly, and duplicate model
+/// names across bundles are a startup error, not a silent hot-swap.
+#[test]
+fn load_dir_rejects_duplicates() {
+    let dir = "/tmp/nnt_registry_dup_dir";
+    std::fs::remove_dir_all(dir).ok();
+    std::fs::create_dir_all(dir).unwrap();
+    let m = random_model("dup", 5, &[4, 3], 2, 1, 61);
+    let f = run_flow(&m, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+    artifact::save_circuit(&format!("{dir}/one.circuit.json"), &f.circuit, &m).unwrap();
+    artifact::save_circuit(&format!("{dir}/two.circuit.json"), &f.circuit, &m).unwrap();
+    let reg = ModelRegistry::new(RegistryConfig::default());
+    let err = reg.load_dir(dir).unwrap_err();
+    assert!(err.to_string().contains("two artifacts provide model 'dup'"), "{err}");
+    reg.shutdown_all();
+    std::fs::remove_dir_all(dir).ok();
+}
