@@ -1,14 +1,16 @@
 //! Bench P1 (§Perf): end-to-end throughput of every moving part —
 //! per-neuron synthesis rate, bit-parallel simulation rate (seed per-sample
-//! path vs the packed single- and multi-worker engine), coordinator
-//! round-trip under batching, and thread-pool scaling.
+//! path vs the packed engine at every block width W ∈ {1, 2, 4, 8}, with
+//! and without the compile-time netlist optimizer), coordinator round-trip
+//! under batching, and thread-pool scaling. `nullanet bench` runs the
+//! fixed-seed subset of these and writes machine-readable `BENCH_5.json`.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use nullanet_tiny::coordinator::{BatchPolicy, Policy, RouterBuilder};
 use nullanet_tiny::flow::{run_flow, FlowConfig};
-use nullanet_tiny::logic::sim::CompiledNetlist;
+use nullanet_tiny::logic::sim::{CompiledNetlist, ShardRunner};
 use nullanet_tiny::nn::eval::{codes_to_bits, quantize_input};
 use nullanet_tiny::nn::model::{random_model, Model};
 use nullanet_tiny::util::bench::Bench;
@@ -51,13 +53,37 @@ fn main() {
     let s_seed = bench.run("logic-sim 4096-batch (seed run_batch)", || sim.run_batch(&batch));
     println!("  → {:.2} M inferences/s\n", 4096.0 * 1e3 / s_seed.median_ns);
 
+    // Block-width sweep: the W=1 unoptimized kernel is the pre-PR baseline;
+    // the optimizer + wider blocks are this PR's tentpole.
+    let sim_raw = Arc::new(CompiledNetlist::compile_unoptimized(&r.circuit.netlist));
+    let groups = packed.num_groups();
+    let no = sim.num_outputs();
+    let mut out = vec![0u64; groups * no];
+    let mut scratch_raw = sim_raw.make_scratch();
+    let s_base = bench.run("packed kernel W=1, unoptimized (baseline)", || {
+        sim_raw.run_groups_capped(&packed, 0, groups, &mut scratch_raw, &mut out, 1)
+    });
     let mut scratch = sim.make_scratch();
+    for width in [1usize, 2, 4, 8] {
+        let s = bench.run(&format!("packed kernel W={width}, optimized"), || {
+            sim.run_groups_capped(&packed, 0, groups, &mut scratch, &mut out, width)
+        });
+        println!(
+            "  → W={width}: {:.2} M inf/s ({:.2}× W=1-unoptimized, {:.2}× seed)\n",
+            4096.0 * 1e3 / s.median_ns,
+            s_base.median_ns / s.median_ns,
+            s_seed.median_ns / s.median_ns,
+        );
+    }
+
     let s_one = bench.run("packed engine 4096-batch, 1 worker", || {
         sim.run_packed(&packed, &mut scratch)
     });
+    // Persistent ShardRunner (the serving engine's zero-allocation path).
     let pool4 = ThreadPool::new(4);
+    let mut runner = ShardRunner::new(&sim);
     let s_four = bench.run("packed engine 4096-batch, 4 workers", || {
-        CompiledNetlist::run_packed_sharded(&sim, &pool4, &packed)
+        runner.run(&sim, &pool4, &packed);
     });
     println!(
         "  → packed: {:.2} M inf/s (1 worker, {:.2}× seed), {:.2} M inf/s \

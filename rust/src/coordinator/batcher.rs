@@ -150,8 +150,17 @@ impl Batcher {
     pub fn next_batch(&self) -> Option<Batch> {
         let requests = self.drain_requests()?;
         let mut inputs = PackedBatch::with_capacity(self.input_bits, requests.len());
-        for r in &requests {
-            inputs.push_sample(&r.bits);
+        if self.input_bits <= 64 {
+            // Word-level fast path: a request's pre-binarized bits are one
+            // packed word (circuit inputs rarely exceed 64 bits), so the
+            // flush transpose scatters only the set bits.
+            for r in &requests {
+                inputs.push_sample_word(r.bits.words().first().copied().unwrap_or(0));
+            }
+        } else {
+            for r in &requests {
+                inputs.push_sample(&r.bits);
+            }
         }
         Some(Batch { inputs, requests })
     }

@@ -29,9 +29,9 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use crate::coordinator::metrics::Metrics;
-use crate::flow::build::classify_packed;
+use crate::flow::build::classify_packed_words;
 use crate::logic::netlist::LutNetlist;
-use crate::logic::sim::{CompiledNetlist, SimScratch};
+use crate::logic::sim::{CompiledNetlist, ShardRunner, SimScratch};
 use crate::nn::model::Model;
 use crate::runtime::PjrtEngine;
 use crate::util::bitvec::PackedBatch;
@@ -121,6 +121,13 @@ pub trait InferenceEngine {
     ) -> Result<Vec<usize>, EngineError> {
         self.classify_features(batch.as_ref(), xs)
     }
+
+    /// `(LUTs before, LUTs after)` the compile-time netlist optimizer, for
+    /// engines that evaluate a compiled circuit. Surfaced per model by the
+    /// serving `depth` admin command; `None` for numeric engines.
+    fn lut_counts(&self) -> Option<(usize, usize)> {
+        None
+    }
 }
 
 /// Drive one batch through an engine: the features entry point when the
@@ -139,10 +146,24 @@ pub fn dispatch(
 
 /// The combinational-logic engine: an immutable compiled netlist shared
 /// across shard workers, classifying straight from packed output words.
+///
+/// The steady-state serving path is **allocation-free for scratch and
+/// output buffers**: the inline (single-group) path reuses one
+/// [`SimScratch`] and one group-major word `Vec`, and the sharded path's
+/// [`ShardRunner`] keeps a per-worker scratch pool plus one persistent
+/// output buffer that shards write disjoint ranges of directly.
+/// [`PackedLogicEngine::alloc_stats`] is the test hook that pins this.
 pub struct PackedLogicEngine {
     sim: Arc<CompiledNetlist>,
     pool: Option<ThreadPool>,
+    /// Inline-path scratch (single-group batches / no pool).
     scratch: SimScratch,
+    /// Inline-path output words, reused across batches.
+    out_words: Vec<u64>,
+    /// Inline-path output-buffer capacity growths (test hook).
+    inline_grows: usize,
+    /// Sharded-path persistent state (scratch pool + output buffer).
+    runner: ShardRunner,
     model: Arc<Model>,
     metrics: Arc<Metrics>,
 }
@@ -188,8 +209,18 @@ impl PackedLogicEngine {
         }
         let sim = Arc::new(CompiledNetlist::compile(netlist));
         let scratch = sim.make_scratch();
+        let runner = ShardRunner::new(&sim);
         let pool = (workers > 1).then(|| ThreadPool::new(workers));
-        Ok(PackedLogicEngine { sim, pool, scratch, model, metrics })
+        Ok(PackedLogicEngine {
+            sim,
+            pool,
+            scratch,
+            out_words: Vec::new(),
+            inline_grows: 0,
+            runner,
+            model,
+            metrics,
+        })
     }
 
     fn check_width(&self, batch: &PackedBatch) -> Result<(), EngineError> {
@@ -203,11 +234,34 @@ impl PackedLogicEngine {
         Ok(())
     }
 
-    fn finish(&self, outputs: &PackedBatch) -> Vec<usize> {
-        self.metrics
-            .logic_requests
-            .fetch_add(outputs.num_samples() as u64, Ordering::Relaxed);
-        classify_packed(&self.model, outputs)
+    /// Evaluate on the inline (single-scratch) path into the persistent
+    /// output buffer; returns the group-major output words. Associated
+    /// function over the individual fields so the returned borrow is tied
+    /// to `out_words` alone (the caller still needs `self.model` and
+    /// `self.metrics` while holding it).
+    fn run_inline<'a>(
+        sim: &CompiledNetlist,
+        scratch: &mut SimScratch,
+        out_words: &'a mut Vec<u64>,
+        inline_grows: &mut usize,
+        batch: &PackedBatch,
+    ) -> &'a [u64] {
+        let need = batch.num_groups() * sim.num_outputs();
+        if out_words.capacity() < need {
+            *inline_grows += 1;
+        }
+        sim.run_packed_into(batch, scratch, out_words);
+        out_words
+    }
+
+    /// Zero-allocation test hook: `(shard scratches ever created,
+    /// output-buffer capacity growths across both paths)`. Both counters
+    /// stabilize after the first batches of the steady-state size — pinned
+    /// by `packed_engine_reuses_buffers_across_batches` and documented in
+    /// `rust/DESIGN.md` §Serving.
+    pub fn alloc_stats(&self) -> (usize, usize) {
+        let (created, grows) = self.runner.alloc_stats();
+        (created, grows + self.inline_grows)
     }
 }
 
@@ -228,8 +282,17 @@ impl InferenceEngine for PackedLogicEngine {
             let shared = Arc::new(batch.clone());
             return self.classify_packed_shared(&shared);
         }
-        let outputs = self.sim.run_packed(batch, &mut self.scratch);
-        Ok(self.finish(&outputs))
+        let n = batch.num_samples();
+        let words = Self::run_inline(
+            &self.sim,
+            &mut self.scratch,
+            &mut self.out_words,
+            &mut self.inline_grows,
+            batch,
+        );
+        let preds = classify_packed_words(&self.model, words, n);
+        self.metrics.logic_requests.fetch_add(n as u64, Ordering::Relaxed);
+        Ok(preds)
     }
 
     fn classify_packed_shared(
@@ -237,13 +300,27 @@ impl InferenceEngine for PackedLogicEngine {
         batch: &Arc<PackedBatch>,
     ) -> Result<Vec<usize>, EngineError> {
         self.check_width(batch)?;
-        let outputs = match &self.pool {
+        let n = batch.num_samples();
+        let words: &[u64] = match &self.pool {
             Some(pool) if batch.num_groups() >= 2 => {
-                CompiledNetlist::run_packed_sharded(&self.sim, pool, batch)
+                self.runner.run(&self.sim, pool, batch)
             }
-            _ => self.sim.run_packed(batch, &mut self.scratch),
+            _ => Self::run_inline(
+                &self.sim,
+                &mut self.scratch,
+                &mut self.out_words,
+                &mut self.inline_grows,
+                batch,
+            ),
         };
-        Ok(self.finish(&outputs))
+        let preds = classify_packed_words(&self.model, words, n);
+        self.metrics.logic_requests.fetch_add(n as u64, Ordering::Relaxed);
+        Ok(preds)
+    }
+
+    fn lut_counts(&self) -> Option<(usize, usize)> {
+        let s = self.sim.opt_stats();
+        Some((s.luts_before, s.luts_after))
     }
 }
 
@@ -356,6 +433,11 @@ impl InferenceEngine for MirrorEngine {
     /// Replies carry the primary engine's label.
     fn name(&self) -> &'static str {
         self.primary.name()
+    }
+
+    /// LUT counts come from the primary (the engine that serves replies).
+    fn lut_counts(&self) -> Option<(usize, usize)> {
+        self.primary.lut_counts()
     }
 
     fn wants_features(&self) -> bool {
@@ -472,6 +554,77 @@ mod tests {
             assert_eq!(*p, crate::nn::eval::classify(&model, x));
         }
         assert_eq!(metrics.logic_requests.load(Ordering::Relaxed), 130);
+    }
+
+    #[test]
+    fn packed_engine_reuses_buffers_across_batches() {
+        // The zero-allocation claim (ISSUE 5): scratch and output buffers
+        // must be reused across steady-state batches on both the inline
+        // and the sharded path.
+        let model = random_model("all", 6, &[4, 3], 2, 1, 23);
+        let r = run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None)
+            .unwrap();
+        let model = Arc::new(model);
+        let mut engine = PackedLogicEngine::new(
+            Arc::clone(&model),
+            &r.circuit.netlist,
+            2,
+            Arc::new(Metrics::new()),
+        )
+        .unwrap();
+
+        let make_batch = |n: usize, seed: usize| {
+            let mut b = PackedBatch::with_capacity(model.input_bits(), n);
+            for i in 0..n {
+                let x: Vec<f64> =
+                    (0..6).map(|j| ((i * 3 + j + seed) as f64 * 0.37).sin()).collect();
+                let codes = crate::nn::eval::quantize_input(&model, &x);
+                b.push_sample(&crate::nn::eval::codes_to_bitvec(
+                    &codes,
+                    model.input_quant.bits,
+                ));
+            }
+            Arc::new(b)
+        };
+
+        // Warm up both paths: a multi-group batch (sharded) and a
+        // single-group batch (inline).
+        let big = make_batch(300, 0);
+        let small = make_batch(40, 1);
+        engine.classify_packed_shared(&big).unwrap();
+        engine.classify_packed_shared(&small).unwrap();
+        let warm = engine.alloc_stats();
+        for round in 0..6 {
+            let preds = engine.classify_packed_shared(&big).unwrap();
+            assert_eq!(preds.len(), 300, "round {round}");
+            engine.classify_packed_shared(&small).unwrap();
+        }
+        let steady = engine.alloc_stats();
+        assert_eq!(
+            steady.1, warm.1,
+            "steady-state batches must not grow the output buffers"
+        );
+        // Scratches are bounded by peak shard concurrency (2 here: the big
+        // batch splits into 2 ranges), never by the batch count — 12 more
+        // batches must not have added a scratch per batch.
+        assert!(steady.0 <= 2, "scratch count {} exceeds shard concurrency", steady.0);
+    }
+
+    #[test]
+    fn logic_engine_reports_optimizer_lut_counts() {
+        let model = random_model("lc", 6, &[4, 3], 2, 1, 31);
+        let r = run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None)
+            .unwrap();
+        let engine = PackedLogicEngine::new(
+            Arc::new(model),
+            &r.circuit.netlist,
+            1,
+            Arc::new(Metrics::new()),
+        )
+        .unwrap();
+        let (pre, post) = engine.lut_counts().expect("logic engine has LUT counts");
+        assert_eq!(pre, r.circuit.netlist.num_luts());
+        assert!(post <= pre, "optimizer must not add LUTs");
     }
 
     #[test]

@@ -43,6 +43,7 @@ use crate::coordinator::batcher::{BatchPolicy, Reply};
 use crate::coordinator::router::{Policy, Router, RouterBuilder};
 use crate::error::NnError;
 use crate::flow::artifact;
+use crate::util::bitvec::BitVec;
 
 /// How the registry builds an engine stack for each loaded bundle.
 #[derive(Clone, Copy, Debug)]
@@ -71,6 +72,9 @@ pub struct ModelInfo {
     pub features: usize,
     /// Current batcher queue depth.
     pub depth: usize,
+    /// `(LUTs before, after)` the compile-time netlist optimizer, when the
+    /// model's engine evaluates a compiled circuit.
+    pub lut_counts: Option<(usize, usize)>,
     /// Whether unnamed classify requests route here.
     pub default: bool,
     /// Artifact path the model was loaded from, when it came from one.
@@ -297,7 +301,10 @@ impl ModelRegistry {
     /// Submit one classify request to the named (or default) model. Checks
     /// the feature width (a protocol error, not a panic) and retries
     /// through hot-swaps: a submit rejected by a draining router re-fetches
-    /// the live replacement from the map.
+    /// the live replacement from the map and **reuses the already-binarized
+    /// bits** ([`Router::try_submit_bits`]) whenever the replacement serves
+    /// the same input quantization — the common hot-swap case (same model,
+    /// recompiled circuit) — so racing a drain costs no double quantize.
     pub fn classify(
         &self,
         name: Option<&str>,
@@ -308,6 +315,7 @@ impl ModelRegistry {
         // removing the map entry — so a second closed hit is already
         // pathological (an external caller shut a router down without
         // going through the registry). Never spin forever on that.
+        let mut prepared: Option<(BitVec, Arc<Router>)> = None;
         for _ in 0..64 {
             let router = self.get(name)?;
             if features.len() != router.input_features() {
@@ -317,13 +325,28 @@ impl ModelRegistry {
                     features.len()
                 )));
             }
-            if let Some(rx) = router.try_submit(features) {
-                return Ok(rx);
+            let bits = match prepared.take() {
+                // Bits binarized for the displaced router stay valid when
+                // the replacement packs the same way: same packed/numeric
+                // mode, same input quantizer, same circuit-input width. A
+                // swap that changed any of those re-binarizes.
+                Some((bits, old))
+                    if old.wants_packed() == router.wants_packed()
+                        && old.model().input_quant == router.model().input_quant
+                        && bits.len() == router.model().input_bits() =>
+                {
+                    bits
+                }
+                _ => router.binarize(features),
+            };
+            match router.try_submit_bits(bits, features) {
+                Ok(rx) => return Ok(rx),
+                // Raced a hot-swap: this router closed between the map read
+                // and the submit. The swap already installed (or removed)
+                // its replacement — re-resolve (`get` errors out if the
+                // model is gone) and carry the bits to the retry.
+                Err(bits) => prepared = Some((bits, router)),
             }
-            // Raced a hot-swap: this router closed between the map read and
-            // the submit. The swap already installed (or removed) its
-            // replacement — re-resolve; `get` errors out if the model is
-            // gone.
         }
         Err(NnError::Config(format!(
             "model '{}' is shutting down",
@@ -359,6 +382,7 @@ impl ModelRegistry {
                 engine: router.engine_name(),
                 features: router.input_features(),
                 depth: router.depth(),
+                lut_counts: router.lut_counts(),
                 default,
                 source,
             })
@@ -496,6 +520,31 @@ mod tests {
         assert!(reg.is_empty());
         assert_eq!(reg.default_name(), None);
         assert!(reg.unload("a").is_err(), "double unload is an error");
+    }
+
+    #[test]
+    fn infos_surface_optimizer_lut_counts() {
+        let a = random_model("a", 5, &[4, 3], 2, 1, 21);
+        let reg = ModelRegistry::new(RegistryConfig::default());
+        reg.install("a", make_router(&a), None);
+        let infos = reg.infos();
+        let (pre, post) = infos[0].lut_counts.expect("logic engine reports LUT counts");
+        assert!(post <= pre, "optimizer must not add LUTs ({pre} → {post})");
+        reg.shutdown_all();
+    }
+
+    #[test]
+    fn classify_retry_is_bounded_on_an_externally_closed_router() {
+        // An external shutdown (not via the registry) leaves a closed
+        // router in the map: classify must exercise the bits-reuse retry
+        // loop and give up with a typed error, not spin forever.
+        let a = random_model("a", 5, &[4, 3], 2, 1, 33);
+        let reg = ModelRegistry::new(RegistryConfig::default());
+        reg.install("a", make_router(&a), None);
+        reg.get(Some("a")).unwrap().shutdown();
+        let err = reg.classify(Some("a"), &[0.0; 5]).unwrap_err();
+        assert!(err.to_string().contains("shutting down"), "{err}");
+        reg.shutdown_all();
     }
 
     #[test]

@@ -106,6 +106,9 @@ struct EngineMeta {
     name: &'static str,
     wants_features: bool,
     wants_packed: bool,
+    /// `(LUTs before, after)` the compile-time netlist optimizer, when the
+    /// engine evaluates a compiled circuit.
+    lut_counts: Option<(usize, usize)>,
 }
 
 /// Builder for a [`Router`]. Replaces the old 6-positional-argument
@@ -283,6 +286,7 @@ impl RouterBuilder {
                     name: engine.name(),
                     wants_features,
                     wants_packed: engine.wants_packed(),
+                    lut_counts: engine.lut_counts(),
                 };
                 if ready_tx.send(Ok(meta)).is_err() {
                     return;
@@ -339,6 +343,7 @@ impl RouterBuilder {
                 wants_features: meta.wants_features,
                 wants_packed: meta.wants_packed,
                 engine_name: meta.name,
+                lut_counts: meta.lut_counts,
                 dispatcher: Mutex::new(Some(dispatcher)),
             }),
             Ok(Err(e)) => {
@@ -365,6 +370,7 @@ pub struct Router {
     wants_features: bool,
     wants_packed: bool,
     engine_name: &'static str,
+    lut_counts: Option<(usize, usize)>,
     /// Behind a mutex so [`Router::shutdown`] works through a shared
     /// reference — a hot-swapping registry drains the old router via its
     /// `Arc` while in-flight submitters still hold clones.
@@ -385,8 +391,9 @@ impl Router {
         // Move, don't copy: an engine that wants the raw features takes the
         // caller's own Vec (the pre-registry zero-copy behavior).
         let features = self.wants_features.then_some(features);
-        self.enqueue(bits, features)
-            .expect("submit on a shut-down router (use try_submit to handle hot-swap)")
+        self.enqueue(bits, features).unwrap_or_else(|_| {
+            panic!("submit on a shut-down router (use try_submit to handle hot-swap)")
+        })
     }
 
     /// Submit one request from a borrowed feature slice. Returns `None`
@@ -397,13 +404,31 @@ impl Router {
     /// The slice is copied only when the engine retains raw features.
     pub fn try_submit(&self, features: &[f64]) -> Option<std::sync::mpsc::Receiver<Reply>> {
         let bits = self.binarize(features);
+        self.try_submit_bits(bits, features).ok()
+    }
+
+    /// Submit one request whose circuit-input bits are **already
+    /// binarized** (via [`Router::binarize`] — possibly on a displaced
+    /// router serving the same quantization). On a closed router the bits
+    /// come back in `Err` untouched, so a hot-swap retry resubmits them to
+    /// the replacement without re-quantizing the features — the resubmit
+    /// double-work fix of ISSUE 5. `features` is copied only when the
+    /// engine retains raw feature vectors. The bit width must match this
+    /// router's circuit (the registry checks compatibility before reuse).
+    pub fn try_submit_bits(
+        &self,
+        bits: BitVec,
+        features: &[f64],
+    ) -> Result<std::sync::mpsc::Receiver<Reply>, BitVec> {
         let features = self.wants_features.then(|| features.to_vec());
-        self.enqueue(bits, features)
+        self.enqueue(bits, features).map_err(|rejected| rejected.bits)
     }
 
     /// Quantize + pack features for the engine (width-checked), or a
     /// zeroed placeholder when the engine never reads packed bits.
-    fn binarize(&self, features: &[f64]) -> BitVec {
+    /// Crate-visible so the registry can binarize once and retry the same
+    /// bits through a hot-swap ([`Router::try_submit_bits`]).
+    pub(crate) fn binarize(&self, features: &[f64]) -> BitVec {
         assert_eq!(
             features.len(),
             self.model.input_features,
@@ -421,17 +446,17 @@ impl Router {
         }
     }
 
+    /// The one place a [`Request`] is built and offered to the batcher;
+    /// every submit variant funnels through it. A closed batcher hands the
+    /// request back so retry paths can salvage its bits.
     fn enqueue(
         &self,
         bits: BitVec,
         features: Option<Vec<f64>>,
-    ) -> Option<std::sync::mpsc::Receiver<Reply>> {
+    ) -> Result<std::sync::mpsc::Receiver<Reply>, Request> {
         let (tx, rx) = std::sync::mpsc::channel();
         let req = Request { bits, features, enqueued: Instant::now(), reply: tx };
-        match self.batcher.submit(req) {
-            Ok(()) => Some(rx),
-            Err(_rejected) => None,
-        }
+        self.batcher.submit(req).map(|_| rx)
     }
 
     /// Feature width the model expects (for request validation).
@@ -447,6 +472,19 @@ impl Router {
     /// Label of the engine replies come from ("logic" / "pjrt").
     pub fn engine_name(&self) -> &'static str {
         self.engine_name
+    }
+
+    /// `(LUTs before, after)` the compile-time netlist optimizer, when the
+    /// engine evaluates a compiled circuit (surfaced per model by the
+    /// `depth` admin command).
+    pub fn lut_counts(&self) -> Option<(usize, usize)> {
+        self.lut_counts
+    }
+
+    /// Whether the engine reads packed circuit-input bits (false for
+    /// numeric-only engines, whose requests carry a zeroed placeholder).
+    pub fn wants_packed(&self) -> bool {
+        self.wants_packed
     }
 
     /// Metrics handle.
@@ -569,6 +607,32 @@ mod tests {
         let rx = router.submit(vec![0.0; 6]);
         let _ = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         router.shutdown();
+    }
+
+    #[test]
+    fn try_submit_bits_round_trips_through_a_closed_router() {
+        let (router, model) = make_router(Policy::Logic);
+        let x: Vec<f64> = (0..6).map(|j| (j as f64 * 0.4).sin()).collect();
+        let bits = router.binarize(&x);
+        // Live router: pre-binarized bits serve normally, bit-exact.
+        let rx = router.try_submit_bits(bits.clone(), &x).expect("live router accepts");
+        let reply = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(reply.class, crate::nn::eval::classify(&model, &x));
+        // Closed router: the same bits come back untouched, so a hot-swap
+        // retry can resubmit without re-binarizing the features.
+        router.shutdown();
+        let back = router
+            .try_submit_bits(bits.clone(), &x)
+            .expect_err("closed router rejects");
+        assert_eq!(back, bits, "bits must come back for a free resubmit");
+    }
+
+    #[test]
+    fn router_surfaces_optimizer_lut_counts() {
+        let (router, _) = make_router(Policy::Logic);
+        let (pre, post) = router.lut_counts().expect("logic router has LUT counts");
+        assert!(post <= pre, "optimizer must not add LUTs ({pre} → {post})");
+        assert!(router.wants_packed());
     }
 
     #[test]

@@ -18,7 +18,8 @@
 //! → {"cmd": "metrics"}
 //! ← {"report": "…"}                              # one section per model
 //! → {"cmd": "depth"}
-//! ← {"depth": 0, "models": {"jsc-s": 0, …}}
+//! ← {"depth": 0, "models": {"jsc-s": 0, …},
+//!    "luts": {"jsc-s": {"pre": 214, "post": 180}, …}}
 //! → {"cmd": "shutdown"}
 //! ```
 //!
@@ -230,16 +231,32 @@ fn handle_cmd(
             Json::str(registry.metrics_report()),
         )])),
         // `depth` stays a single integer (total across models) for
-        // existing clients, with the per-model split alongside.
+        // existing clients, with the per-model split — and the compile-time
+        // optimizer's LUT counts (pre/post) per model — alongside.
         "depth" => {
-            let per: std::collections::BTreeMap<String, Json> = registry
-                .infos()
-                .into_iter()
-                .map(|i| (i.name, Json::int(i.depth as i64)))
+            let infos = registry.infos();
+            let per: std::collections::BTreeMap<String, Json> = infos
+                .iter()
+                .map(|i| (i.name.clone(), Json::int(i.depth as i64)))
+                .collect();
+            let luts: std::collections::BTreeMap<String, Json> = infos
+                .iter()
+                .filter_map(|i| {
+                    i.lut_counts.map(|(pre, post)| {
+                        (
+                            i.name.clone(),
+                            Json::obj([
+                                ("pre", Json::int(pre as i64)),
+                                ("post", Json::int(post as i64)),
+                            ]),
+                        )
+                    })
+                })
                 .collect();
             Ok(Json::obj([
                 ("depth", Json::int(registry.depth_total() as i64)),
                 ("models", Json::Obj(per)),
+                ("luts", Json::Obj(luts)),
             ]))
         }
         "models" => {
@@ -396,6 +413,12 @@ mod tests {
             .expect("depth must be a non-negative integer");
         // An idle router has an empty queue.
         assert_eq!(depth, 0, "{line}");
+        // The optimizer's LUT counts ride along per model.
+        let luts = resp.get("luts").unwrap().as_obj().unwrap();
+        let entry = luts.values().next().expect("one logic model");
+        let pre = entry.get("pre").and_then(|v| v.as_usize()).unwrap();
+        let post = entry.get("post").and_then(|v| v.as_usize()).unwrap();
+        assert!(post <= pre, "{line}");
 
         conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
         line.clear();

@@ -17,6 +17,7 @@ use crate::flow::synth::{synthesize_neuron, verify_neuron, SynthesizedNeuron};
 use crate::logic::aig::Aig;
 use crate::logic::mapper::{map_aig, MapConfig};
 use crate::logic::netlist::{LutNetlist, PipelinedCircuit, Sig};
+use crate::logic::opt::{self, OptStats};
 use crate::logic::retime::retime_min_period;
 use crate::nn::enumerate::{check_layer_enum_bounds, observed_patterns};
 use crate::nn::eval::{bits_to_codes, codes_to_bits, forward_codes, quantize_input, Trace};
@@ -33,6 +34,9 @@ pub struct FlowResult {
     /// Aggregate ESPRESSO statistics.
     pub total_cubes_before: usize,
     pub total_cubes_after: usize,
+    /// Aggregate compile-time netlist-optimizer statistics (summed over the
+    /// per-layer [`crate::logic::opt::optimize`] passes).
+    pub opt: OptStats,
     /// Per-stage wall-clock of the flow (Fig. 1 stage log).
     pub timer: StageTimer,
     /// Number of neurons synthesized.
@@ -118,6 +122,7 @@ pub fn run_flow(
         ..Default::default()
     };
     let mut layer_netlists: Vec<LutNetlist> = Vec::with_capacity(model.layers.len());
+    let mut opt_total = OptStats::default();
     timer.time("aig+map", || {
         for (l, layer) in model.layers.iter().enumerate() {
             let in_bits_per = model.in_quant_of_layer(l).bits;
@@ -164,7 +169,14 @@ pub fn run_flow(
                 aig.add_output(lit);
             }
             let mapped = map_aig(&aig.sweep(), &map_cfg);
-            layer_netlists.push(mapped.netlist);
+            // Compile-time netlist optimizer, per layer (stage boundaries
+            // must survive, so cross-layer sharing is left to the purely
+            // combinational simulator compile): constant folding,
+            // structural dedup, dead-LUT sweep. Every persisted artifact
+            // and emitted netlist shrinks, not just the serving engine.
+            let (optimized, ostats) = opt::optimize(&mapped.netlist);
+            opt_total.absorb(&ostats);
+            layer_netlists.push(optimized);
         }
     });
 
@@ -198,6 +210,7 @@ pub fn run_flow(
         circuit_preretime,
         total_cubes_before,
         total_cubes_after,
+        opt: opt_total,
         timer,
         neurons,
     })
@@ -360,8 +373,7 @@ pub fn classify_packed(
     outputs: &crate::util::bitvec::PackedBatch,
 ) -> Vec<usize> {
     let last = model.layers.last().unwrap();
-    let q = &last.act;
-    let out_b = q.bits;
+    let out_b = last.act.bits;
     // Real check, not debug_assert: this is a public entry point on the
     // serving path, and a width mismatch must fail loudly in release builds
     // too (PR 1 policy), never decode garbage lanes.
@@ -374,18 +386,42 @@ pub fn classify_packed(
         last.out_width,
         out_b
     );
+    classify_packed_words(model, outputs.words(), outputs.num_samples())
+}
+
+/// [`classify_packed`] over raw group-major output words (as produced by
+/// [`crate::logic::sim::CompiledNetlist::run_packed_into`] and
+/// [`crate::logic::sim::ShardRunner::run`]) — the zero-allocation serving
+/// path decodes the engine's reusable buffer without ever materializing a
+/// `PackedBatch`. Lanes at or beyond `samples` in the last group are
+/// ignored, so tail-lane garbage cannot leak into predictions.
+pub fn classify_packed_words(model: &Model, words: &[u64], samples: usize) -> Vec<usize> {
+    let last = model.layers.last().unwrap();
+    let q = &last.act;
+    let out_b = q.bits;
+    let signals = last.out_width * out_b;
+    assert_eq!(
+        words.len(),
+        samples.div_ceil(64) * signals,
+        "classify_packed_words: {} words for {} samples × {} output signals",
+        words.len(),
+        samples,
+        signals
+    );
     // The code → value table (2^bits entries) is exactly the quantizer's
     // level array; bind it once instead of calling `q.value_of(code)` per
     // class per sample.
     let values: &[f64] = &q.levels;
-    (0..outputs.num_samples())
+    (0..samples)
         .map(|s| {
+            let base = (s >> 6) * signals;
+            let lane = s & 63;
             let mut best = 0usize;
             let mut best_v = f64::NEG_INFINITY;
             for n in 0..model.num_classes {
                 let mut code = 0usize;
                 for b in 0..out_b {
-                    if outputs.get(s, n * out_b + b) {
+                    if (words[base + n * out_b + b] >> lane) & 1 == 1 {
                         code |= 1 << b;
                     }
                 }
@@ -470,8 +506,11 @@ mod tests {
         let b = run_flow(&m, &without, None).unwrap();
         assert!(a.total_cubes_after <= b.total_cubes_after);
         // LUT count usually improves; must never be dramatically worse.
+        // (Slack covers mapping noise plus the compile-time netlist
+        // optimizer, which now runs on both sides and can shift the
+        // comparison by a couple of LUTs either way.)
         assert!(
-            a.circuit.netlist.num_luts() <= b.circuit.netlist.num_luts() + 2,
+            a.circuit.netlist.num_luts() <= b.circuit.netlist.num_luts() + 4,
             "espresso {} vs isop {}",
             a.circuit.netlist.num_luts(),
             b.circuit.netlist.num_luts()

@@ -4,6 +4,7 @@
 
 use crate::fpga::timing::TimingModel;
 use crate::logic::netlist::CircuitStats;
+use crate::logic::opt::OptStats;
 
 /// One architecture's results (a Table I row).
 #[derive(Clone, Debug)]
@@ -68,6 +69,16 @@ impl Comparison {
     }
 }
 
+/// One-line compile-time netlist-optimizer summary. Quoted by the flow
+/// report (`nullanet flow`), the benchmark (`nullanet bench`), and — per
+/// model, as raw counts — the serving `depth` admin command.
+pub fn format_opt_stats(s: &OptStats) -> String {
+    format!(
+        "optimizer: {} → {} LUTs ({} const-folded, {} deduped, {} dead removed)",
+        s.luts_before, s.luts_after, s.const_folded, s.deduped, s.dead_removed
+    )
+}
+
 /// Render rows in the paper's Table-I layout.
 pub fn format_table(rows: &[Comparison]) -> String {
     let mut s = String::new();
@@ -115,6 +126,22 @@ mod tests {
         assert!((c.lut_decrease() - 214.0 / 39.0).abs() < 1e-9);
         assert!(c.fmax_increase() > 1.0);
         assert!(c.latency_decrease() > 1.0);
+    }
+
+    #[test]
+    fn opt_stats_formatting() {
+        let s = OptStats {
+            luts_before: 120,
+            luts_after: 95,
+            const_folded: 10,
+            deduped: 9,
+            dead_removed: 6,
+        };
+        let line = format_opt_stats(&s);
+        assert!(line.contains("120 → 95"), "{line}");
+        assert!(line.contains("10 const-folded"), "{line}");
+        assert!(line.contains("9 deduped"), "{line}");
+        assert!(line.contains("6 dead removed"), "{line}");
     }
 
     #[test]

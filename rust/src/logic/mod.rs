@@ -10,8 +10,9 @@
 //! * [`aig`] — and-inverter graph with structural hashing
 //! * [`mapper`] — k-feasible-cut LUT technology mapping
 //! * [`netlist`] — mapped LUT network with pipeline registers
+//! * [`opt`] — compile-time netlist optimizer (fold / dedup / dead sweep)
 //! * [`retime`] — min-period retiming (Leiserson–Saxe)
-//! * [`sim`] — 64-way bit-parallel netlist simulation
+//! * [`sim`] — wide-lane bit-parallel netlist simulation
 //! * [`verify`] — exhaustive + sampled equivalence checking
 //! * [`blif`] / [`verilog`] — interchange emitters for real FPGA tools
 
@@ -21,6 +22,7 @@ pub mod cube;
 pub mod espresso;
 pub mod mapper;
 pub mod netlist;
+pub mod opt;
 pub mod retime;
 pub mod sim;
 pub mod truthtable;

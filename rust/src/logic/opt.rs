@@ -1,0 +1,429 @@
+//! Compile-time netlist optimization: constant folding, structural
+//! deduplication, and dead-logic removal over a [`LutNetlist`].
+//!
+//! The word-parallel simulator ([`crate::logic::sim`]) evaluates every
+//! scheduled LUT on every single word pass, so a LUT removed here is work
+//! saved on *each* 64×W-lane batch for the lifetime of the serving process.
+//! NeuraLUT and FPGN make the same observation for hardware LUT fabrics:
+//! sharing, folding, and dead-logic removal at the LUT level is where the
+//! latency/area wins live. [`optimize`] runs three passes:
+//!
+//! 1. **Constant/wire folding** — every LUT's table is rebuilt over its
+//!    *distinct, constant-free* inputs (constant inputs are cofactored
+//!    away, duplicate inputs merged, vacuous variables dropped, and
+//!    inversions absorbed into consumer tables). A table that collapses to
+//!    a constant or a single wire replaces the LUT outright.
+//! 2. **Structural dedup** — two LUTs with identical `(inputs, table)`
+//!    pairs compute the same signal; the later one is rewired to the
+//!    earlier. Folding feeds this: dedup works on *resolved* inputs, so a
+//!    chain of folds can expose equalities the raw netlist hides.
+//! 3. **Dead sweep** — LUTs unreachable from any primary output are
+//!    dropped (a mark from the outputs over the folded netlist).
+//!
+//! The result is functionally identical to the input netlist — same
+//! primary inputs, same outputs in the same order — which the differential
+//! property suite pins against [`LutNetlist::eval`]
+//! (`rust/tests/property_logic.rs`). [`OptStats`] reports what each pass
+//! removed; [`crate::fpga::report::format_opt_stats`] renders it, and the
+//! serving registry surfaces the counts per model through the `depth`
+//! admin command.
+//!
+//! Runs inside [`crate::logic::sim::CompiledNetlist::compile`] (so every
+//! serving engine gets it) and per layer inside
+//! [`crate::flow::run_flow`] (so emitted/persisted circuits shrink too).
+
+use std::collections::HashMap;
+
+use crate::logic::netlist::{LutNetlist, Sig};
+use crate::logic::truthtable::TruthTable;
+
+/// What [`optimize`] did to a netlist. The passes partition the removed
+/// LUTs: `luts_before − luts_after = const_folded + deduped + dead_removed`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OptStats {
+    /// LUT count of the input netlist.
+    pub luts_before: usize,
+    /// LUT count of the optimized netlist.
+    pub luts_after: usize,
+    /// LUTs that collapsed to a constant or a plain wire (constant inputs
+    /// cofactored away, duplicate/vacuous variables merged or dropped).
+    pub const_folded: usize,
+    /// LUTs structurally identical to an earlier LUT after folding.
+    pub deduped: usize,
+    /// LUTs unreachable from any primary output.
+    pub dead_removed: usize,
+}
+
+impl OptStats {
+    /// Stats for a netlist the optimizer did not touch (the
+    /// `compile_unoptimized` baseline).
+    pub fn unchanged(luts: usize) -> OptStats {
+        OptStats { luts_before: luts, luts_after: luts, ..Default::default() }
+    }
+
+    /// Total LUTs removed.
+    pub fn removed(&self) -> usize {
+        self.luts_before - self.luts_after
+    }
+
+    /// Accumulate another stats record (per-layer totals in the flow).
+    pub fn absorb(&mut self, other: &OptStats) {
+        self.luts_before += other.luts_before;
+        self.luts_after += other.luts_after;
+        self.const_folded += other.const_folded;
+        self.deduped += other.deduped;
+        self.dead_removed += other.dead_removed;
+    }
+}
+
+/// How one original table variable resolves after substitution.
+enum Occ {
+    /// The input is a known constant; the table is cofactored on it.
+    Fixed(bool),
+    /// The input is the `idx`-th distinct live signal, possibly inverted.
+    Var { idx: usize, inv: bool },
+}
+
+/// Optimize a netlist. Returns a functionally identical netlist (same
+/// inputs, same outputs in the same order) with constant-derivable LUTs
+/// folded, structural duplicates merged, and dead logic removed.
+pub fn optimize(nl: &LutNetlist) -> (LutNetlist, OptStats) {
+    let mut stats = OptStats::unchanged(nl.num_luts());
+
+    // ---- pass 1+2: fold + dedup, in one topological sweep ----
+    // subst[j] = what original LUT j's output became: a signal in `mid`
+    // (or a constant / primary input), plus an inversion flag that
+    // consumers absorb into their tables and outputs absorb into their
+    // inversion bits.
+    let mut subst: Vec<(Sig, bool)> = Vec::with_capacity(nl.luts.len());
+    let mut mid = LutNetlist::new(nl.num_inputs);
+    let mut seen: HashMap<(Vec<Sig>, TruthTable), Sig> = HashMap::new();
+
+    for lut in &nl.luts {
+        // Resolve every input through the substitution map and classify it
+        // as a fixed bit or an occurrence of a distinct live signal.
+        let mut occ: Vec<Occ> = Vec::with_capacity(lut.inputs.len());
+        let mut vars: Vec<Sig> = Vec::new();
+        for s in &lut.inputs {
+            let (sig, inv) = match s {
+                Sig::Lut(j) => subst[*j as usize],
+                other => (*other, false),
+            };
+            match sig {
+                Sig::Const(b) => occ.push(Occ::Fixed(b ^ inv)),
+                _ => {
+                    let idx = match vars.iter().position(|&u| u == sig) {
+                        Some(i) => i,
+                        None => {
+                            vars.push(sig);
+                            vars.len() - 1
+                        }
+                    };
+                    occ.push(Occ::Var { idx, inv });
+                }
+            }
+        }
+
+        // Rebuild the table over the distinct, constant-free variables
+        // (constants cofactored, duplicates merged, inversions absorbed).
+        let mut table = TruthTable::from_fn(vars.len(), |m| {
+            let mut a = 0u64;
+            for (v, o) in occ.iter().enumerate() {
+                let bit = match o {
+                    Occ::Fixed(b) => *b,
+                    Occ::Var { idx, inv } => (((m >> *idx) & 1) == 1) ^ *inv,
+                };
+                if bit {
+                    a |= 1 << v;
+                }
+            }
+            lut.table.eval(a)
+        });
+
+        // Drop variables the rebuilt function does not depend on.
+        let mut v = vars.len();
+        while v > 0 {
+            v -= 1;
+            if !table.depends_on(v) {
+                table = remove_var(&table, v);
+                vars.remove(v);
+            }
+        }
+
+        if table.is_zero() {
+            subst.push((Sig::Const(false), false));
+            stats.const_folded += 1;
+            continue;
+        }
+        if table.is_ones() {
+            subst.push((Sig::Const(true), false));
+            stats.const_folded += 1;
+            continue;
+        }
+        if vars.len() == 1 {
+            // Depends on exactly one variable and is not constant: it is a
+            // buffer or an inverter — a wire either way (the inversion is
+            // absorbed downstream).
+            let inverted = table.eval(0);
+            subst.push((vars[0], inverted));
+            stats.const_folded += 1;
+            continue;
+        }
+
+        let key = (vars, table);
+        if let Some(&existing) = seen.get(&key) {
+            subst.push((existing, false));
+            stats.deduped += 1;
+            continue;
+        }
+        let sig = mid.add_lut(key.0.clone(), key.1.clone());
+        seen.insert(key, sig);
+        subst.push((sig, false));
+    }
+
+    for (s, inv) in &nl.outputs {
+        let (sig, sinv) = match s {
+            Sig::Lut(j) => subst[*j as usize],
+            other => (*other, false),
+        };
+        mid.add_output(sig, sinv ^ inv);
+    }
+
+    // ---- pass 3: dead sweep from the outputs ----
+    let mut live = vec![false; mid.luts.len()];
+    let mut stack: Vec<usize> = Vec::new();
+    for (s, _) in &mid.outputs {
+        if let Sig::Lut(j) = s {
+            stack.push(*j as usize);
+        }
+    }
+    while let Some(j) = stack.pop() {
+        if live[j] {
+            continue;
+        }
+        live[j] = true;
+        for s in &mid.luts[j].inputs {
+            if let Sig::Lut(i) = s {
+                if !live[*i as usize] {
+                    stack.push(*i as usize);
+                }
+            }
+        }
+    }
+
+    let mut out = LutNetlist::new(mid.num_inputs);
+    let mut remap: Vec<Sig> = Vec::with_capacity(mid.luts.len());
+    for (j, lut) in mid.luts.iter().enumerate() {
+        if !live[j] {
+            stats.dead_removed += 1;
+            // Placeholder: a dead LUT is, by construction, never referenced
+            // by a live LUT or an output.
+            remap.push(Sig::Const(false));
+            continue;
+        }
+        let inputs: Vec<Sig> = lut
+            .inputs
+            .iter()
+            .map(|s| match s {
+                Sig::Lut(i) => remap[*i as usize],
+                other => *other,
+            })
+            .collect();
+        remap.push(out.add_lut(inputs, lut.table.clone()));
+    }
+    for (s, inv) in &mid.outputs {
+        let sig = match s {
+            Sig::Lut(j) => remap[*j as usize],
+            other => *other,
+        };
+        out.add_output(sig, *inv);
+    }
+
+    stats.luts_after = out.num_luts();
+    (out, stats)
+}
+
+/// Remove variable `v` from a table that does not depend on it
+/// (compacting the remaining variables down by one position).
+fn remove_var(t: &TruthTable, v: usize) -> TruthTable {
+    debug_assert!(!t.depends_on(v));
+    TruthTable::from_fn(t.nvars() - 1, |m| {
+        let low = m & ((1u64 << v) - 1);
+        let high = (m >> v) << (v + 1);
+        t.eval(high | low)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::verify::{exhaustive_netlists, EquivResult};
+    use crate::util::prng::Xoshiro256;
+
+    fn and_tt() -> TruthTable {
+        TruthTable::from_fn(2, |m| m == 3)
+    }
+
+    fn xor_tt() -> TruthTable {
+        TruthTable::from_fn(2, |m| (m.count_ones() & 1) == 1)
+    }
+
+    fn assert_equivalent(a: &LutNetlist, b: &LutNetlist) {
+        match exhaustive_netlists(a, b) {
+            EquivResult::Equivalent => {}
+            EquivResult::Mismatch { input_bits, got, want } => {
+                panic!("optimizer changed the function at {input_bits:#b}: {got:?} vs {want:?}")
+            }
+        }
+    }
+
+    #[test]
+    fn constant_input_folds_the_lut() {
+        // AND(in0, const0) = const0; AND(in0, const1) = in0 (a wire).
+        let mut nl = LutNetlist::new(1);
+        let a = nl.add_lut(vec![Sig::Input(0), Sig::Const(false)], and_tt());
+        let b = nl.add_lut(vec![Sig::Input(0), Sig::Const(true)], and_tt());
+        nl.add_output(a, false);
+        nl.add_output(b, false);
+        let (o, s) = optimize(&nl);
+        assert_equivalent(&nl, &o);
+        assert_eq!(o.num_luts(), 0, "both LUTs must fold away");
+        assert_eq!(s.const_folded, 2);
+        assert_eq!(o.outputs, vec![(Sig::Const(false), false), (Sig::Input(0), false)]);
+    }
+
+    #[test]
+    fn inverter_chain_folds_to_wire_with_inversion() {
+        // NOT(NOT(in0)) = in0; the inner NOT becomes an inverted wire the
+        // outer LUT absorbs into its table, then the outer folds too.
+        let inv = TruthTable::from_fn(1, |m| m == 0);
+        let mut nl = LutNetlist::new(1);
+        let a = nl.add_lut(vec![Sig::Input(0)], inv.clone());
+        let b = nl.add_lut(vec![a], inv);
+        nl.add_output(b, false);
+        nl.add_output(a, false);
+        let (o, s) = optimize(&nl);
+        assert_equivalent(&nl, &o);
+        assert_eq!(o.num_luts(), 0);
+        assert_eq!(s.const_folded, 2);
+        assert_eq!(o.outputs, vec![(Sig::Input(0), false), (Sig::Input(0), true)]);
+    }
+
+    #[test]
+    fn duplicate_inputs_merge_and_cascade() {
+        // XOR(a, a) = 0 — the duplicate occurrence merges into one
+        // variable, the table stops depending on it, and the LUT folds.
+        let mut nl = LutNetlist::new(2);
+        let a = nl.add_lut(vec![Sig::Input(0), Sig::Input(1)], and_tt());
+        let x = nl.add_lut(vec![a, a], xor_tt());
+        nl.add_output(x, false);
+        let (o, s) = optimize(&nl);
+        assert_equivalent(&nl, &o);
+        assert_eq!(o.num_luts(), 0, "XOR(a,a) folds to const0, AND goes dead");
+        assert_eq!(o.outputs, vec![(Sig::Const(false), false)]);
+        assert_eq!(s.const_folded, 1);
+        assert_eq!(s.dead_removed, 1);
+    }
+
+    #[test]
+    fn structural_duplicates_share_one_lut() {
+        // Two identical ANDs; a consumer XORs them — after dedup the XOR
+        // sees the same signal twice and folds to const0.
+        let mut nl = LutNetlist::new(2);
+        let a = nl.add_lut(vec![Sig::Input(0), Sig::Input(1)], and_tt());
+        let b = nl.add_lut(vec![Sig::Input(0), Sig::Input(1)], and_tt());
+        let x = nl.add_lut(vec![a, b], xor_tt());
+        nl.add_output(x, false);
+        nl.add_output(a, false);
+        let (o, s) = optimize(&nl);
+        assert_equivalent(&nl, &o);
+        assert_eq!(s.deduped, 1, "the second AND is a structural duplicate");
+        assert_eq!(s.const_folded, 1, "XOR(a,a) folds");
+        assert_eq!(o.num_luts(), 1, "one AND survives (it feeds an output)");
+    }
+
+    #[test]
+    fn dead_logic_is_swept() {
+        let mut nl = LutNetlist::new(2);
+        let _dead = nl.add_lut(vec![Sig::Input(0), Sig::Input(1)], xor_tt());
+        let live = nl.add_lut(vec![Sig::Input(0), Sig::Input(1)], and_tt());
+        nl.add_output(live, true);
+        let (o, s) = optimize(&nl);
+        assert_equivalent(&nl, &o);
+        assert_eq!(o.num_luts(), 1);
+        assert_eq!(s.dead_removed, 1);
+    }
+
+    #[test]
+    fn stats_partition_the_removed_luts_on_random_netlists() {
+        for seed in 0..20u64 {
+            let mut rng = Xoshiro256::new(seed);
+            let nin = 1 + rng.below(8) as usize;
+            let nluts = 1 + rng.below(30) as usize;
+            let mut nl = LutNetlist::new(nin);
+            for j in 0..nluts {
+                let navail = nin + j;
+                let k = rng.below(5) as usize; // arities 0..=4 incl. const LUTs
+                let inputs: Vec<Sig> = (0..k)
+                    .map(|_| {
+                        // constants, duplicates, and LUT refs all occur
+                        match rng.below(8) {
+                            0 => Sig::Const(rng.bernoulli(0.5)),
+                            _ => {
+                                let pick = rng.below(navail as u64) as usize;
+                                if pick < nin {
+                                    Sig::Input(pick as u32)
+                                } else {
+                                    Sig::Lut((pick - nin) as u32)
+                                }
+                            }
+                        }
+                    })
+                    .collect();
+                let tt = TruthTable::from_fn(k, |_| rng.bernoulli(0.5));
+                nl.add_lut(inputs, tt);
+            }
+            for j in 0..nluts.min(3) {
+                nl.add_output(Sig::Lut(j as u32), rng.bernoulli(0.5));
+            }
+            nl.add_output(Sig::Input(0), true);
+            let (o, s) = optimize(&nl);
+            assert_equivalent(&nl, &o);
+            assert_eq!(s.luts_before, nl.num_luts(), "seed {seed}");
+            assert_eq!(s.luts_after, o.num_luts(), "seed {seed}");
+            assert_eq!(
+                s.removed(),
+                s.const_folded + s.deduped + s.dead_removed,
+                "seed {seed}: passes must partition the removed LUTs"
+            );
+        }
+    }
+
+    #[test]
+    fn optimize_is_idempotent() {
+        let mut rng = Xoshiro256::new(0xD0);
+        let mut nl = LutNetlist::new(4);
+        for j in 0..12 {
+            let navail = 4 + j;
+            let k = 1 + rng.below(3) as usize;
+            let inputs: Vec<Sig> = (0..k)
+                .map(|_| {
+                    let pick = rng.below(navail as u64) as usize;
+                    if pick < 4 {
+                        Sig::Input(pick as u32)
+                    } else {
+                        Sig::Lut((pick - 4) as u32)
+                    }
+                })
+                .collect();
+            let tt = TruthTable::from_fn(k, |_| rng.bernoulli(0.5));
+            nl.add_lut(inputs, tt);
+        }
+        nl.add_output(Sig::Lut(11), false);
+        let (once, _) = optimize(&nl);
+        let (twice, s2) = optimize(&once);
+        assert_eq!(once.num_luts(), twice.num_luts(), "second pass must find nothing");
+        assert_eq!(s2.removed(), 0);
+        assert_equivalent(&nl, &twice);
+    }
+}

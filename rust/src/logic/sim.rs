@@ -1,53 +1,102 @@
 //! Compiled bit-parallel netlist simulation — the inference engine.
 //!
 //! This is the software stand-in for the FPGA fabric: the combinational-
-//! logic inference path the coordinator serves requests from. The netlist is
-//! "compiled" once into flat arrays (signal codes, packed ≤6-input tables as
-//! single `u64`s, and a levelized evaluation schedule) and then evaluated 64
-//! samples per pass with pure word operations — no allocation, no hash
-//! lookups, no `TruthTable` indirection on the hot path.
+//! logic inference path the coordinator serves requests from. The netlist
+//! is first run through the compile-time optimizer
+//! ([`crate::logic::opt::optimize`]: constant folding, structural dedup,
+//! dead-LUT sweep — fewer LUTs evaluated on *every* word pass), then
+//! "compiled" into an **arity-segregated, schedule-ordered flat instruction
+//! stream**: LUTs are levelized, stably ordered by `(level, arity)`, and
+//! grouped into same-arity *runs*, so evaluation dispatches once per run
+//! into a straight-line arity-specialized fold loop instead of matching on
+//! arity per LUT.
 //!
-//! The compiled program is **immutable and shareable**: all evaluation state
-//! lives in an external [`SimScratch`], so a single `Arc<CompiledNetlist>`
-//! can be hit by many worker threads concurrently. Whole batches travel as
-//! [`PackedBatch`]es (one `u64` word per input signal per 64-sample lane
-//! group, lane-group-major), so handing a lane group to the engine is a
-//! slice borrow, not a transpose; [`CompiledNetlist::run_packed_sharded`]
-//! shards the lane groups of a large batch across a
-//! [`ThreadPool`](crate::util::threadpool::ThreadPool). See `rust/DESIGN.md`
-//! §Serving for the measured speedup over the per-sample `Vec<bool>` path.
+//! Evaluation is a **wide-lane block kernel**: `run_block::<W>` evaluates
+//! `W × 64` samples per pass over `[u64; W]` value blocks (W ∈ {1, 2, 4,
+//! 8}). The per-instruction Shannon fold iterates the W lane words in its
+//! innermost loop — fixed trip count, no data dependence across words — so
+//! LLVM auto-vectorizes it. [`CompiledNetlist::run_groups`] picks the block
+//! width from what remains of the batch (8 → 4 → 2 → 1), which keeps W = 1
+//! for latency-sensitive single-group batches;
+//! [`CompiledNetlist::run_groups_capped`] pins a maximum width for
+//! benchmarking.
+//!
+//! The compiled program is **immutable and shareable**: all evaluation
+//! state lives in an external [`SimScratch`], so a single
+//! `Arc<CompiledNetlist>` can be hit by many worker threads concurrently.
+//! Whole batches travel as [`PackedBatch`]es (one `u64` word per input
+//! signal per 64-sample lane group, lane-group-major), so handing a lane
+//! group to the engine is a slice borrow, not a transpose. For steady-state
+//! serving, [`ShardRunner`] owns a [`ScratchPool`] of per-worker scratches
+//! and one persistent group-major output buffer that shard workers write
+//! disjoint ranges of directly — no per-batch scratch, shard, or output
+//! allocation. See `rust/DESIGN.md` §Serving.
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::logic::netlist::{LutNetlist, Sig};
-use crate::util::bitvec::PackedBatch;
+use crate::logic::opt::OptStats;
+use crate::util::bitvec::{mask_group_tail, PackedBatch};
 use crate::util::threadpool::ThreadPool;
 
 /// Signal encoding: 0 = const0, 1 = const1, `2+i` = primary input `i`,
-/// `2 + num_inputs + j` = LUT `j`.
+/// `2 + num_inputs + j` = LUT `j` (of the *optimized* netlist).
 type Code = u32;
+
+/// Largest lane-group block width the kernel is compiled for (`W` ≤ 8, so
+/// one block is up to 512 samples per pass).
+pub const MAX_BLOCK_WIDTH: usize = 8;
+
+/// One maximal run of equal-arity instructions in the schedule-ordered
+/// stream: instructions `start .. start + count`, whose flattened input
+/// codes begin at `input_start` (`arity` codes per instruction).
+struct Run {
+    arity: u32,
+    start: u32,
+    count: u32,
+    input_start: u32,
+}
+
+/// Process-unique id source for compiled netlists: scratches are bound to
+/// the id, not the netlist's address, so moving a `CompiledNetlist` (e.g.
+/// into an `Arc`) after `make_scratch` stays valid, and a recycled
+/// allocation can never masquerade as the scratch's owner.
+static NEXT_SIM_ID: AtomicUsize = AtomicUsize::new(0);
 
 /// A netlist compiled for fast repeated evaluation. Immutable after
 /// [`CompiledNetlist::compile`]; evaluation state lives in [`SimScratch`].
 pub struct CompiledNetlist {
+    /// Process-unique identity (from `NEXT_SIM_ID`).
+    id: usize,
     num_inputs: usize,
-    /// Flattened LUT input codes.
-    lut_inputs: Vec<Code>,
-    /// Offset of each LUT's inputs in `lut_inputs` (len = luts + 1).
-    offsets: Vec<u32>,
-    /// ≤ 64-bit truth table per LUT (k ≤ 6).
-    tables: Vec<u64>,
+    /// LUT count after optimization (sizes the value array).
+    num_luts: usize,
     /// Output codes + inversion flags.
     outputs: Vec<(Code, bool)>,
-    /// Levelized evaluation schedule: LUT indices grouped by logic level
-    /// (stable within a level, so it is also a valid topological order).
-    schedule: Vec<u32>,
+    /// Same-arity runs over the schedule-ordered stream below.
+    runs: Vec<Run>,
+    /// ≤ 64-bit packed truth table per instruction, schedule order.
+    s_tables: Vec<u64>,
+    /// Destination value index (`2 + num_inputs + j`) per instruction.
+    s_dest: Vec<Code>,
+    /// Flattened input codes, `arity` per instruction, schedule order.
+    s_inputs: Vec<Code>,
+    /// What the compile-time optimizer removed.
+    opt: OptStats,
 }
 
-/// Per-worker evaluation state: values for [const0, const1, inputs…, luts…].
+/// Per-worker evaluation state: `W` lane words per value slot
+/// (`[const0, const1, inputs…, luts…]`, signal-major with stride `W`).
 /// Create one per thread via [`CompiledNetlist::make_scratch`] and reuse it
-/// across calls; it is sized for exactly one compiled netlist.
+/// across calls; it grows once to the widest block it has served and is
+/// allocation-free afterwards. It is bound to exactly one compiled netlist.
 pub struct SimScratch {
+    /// Value slots (2 consts + inputs + LUTs) of the owning netlist.
+    slots: usize,
+    /// [`CompiledNetlist`] id this scratch was built for, so cross-netlist
+    /// use fails loudly even when slot counts collide.
+    owner: usize,
     vals: Vec<u64>,
 }
 
@@ -57,76 +106,111 @@ fn lane_mask(table: u64, m: u32) -> u64 {
     0u64.wrapping_sub((table >> m) & 1)
 }
 
-/// Specialized k = 1 Shannon fold over the packed table.
+/// Shannon fold of a packed table over `W`-word selector blocks
+/// (`T = 2^k` table entries, `sel.len() = k`). The mux ladder's innermost
+/// loop runs over the `W` lane words of the block — fixed trip count, no
+/// cross-word dependence — which is the loop LLVM vectorizes.
 #[inline(always)]
-fn fold1(t: u64, s0: u64) -> u64 {
-    (!s0 & lane_mask(t, 0)) | (s0 & lane_mask(t, 1))
-}
-
-/// Specialized k = 2 Shannon fold over the packed table.
-#[inline(always)]
-fn fold2(t: u64, s0: u64, s1: u64) -> u64 {
-    let v0 = (!s0 & lane_mask(t, 0)) | (s0 & lane_mask(t, 1));
-    let v1 = (!s0 & lane_mask(t, 2)) | (s0 & lane_mask(t, 3));
-    (!s1 & v0) | (s1 & v1)
-}
-
-/// Shannon fold for k = 3..6 over a fixed-width table expansion (`W = 2^k`).
-/// The constant bounds let the compiler fully unroll each arity, replacing
-/// the old 64-entry mux ladder whose width was only known at run time.
-#[inline(always)]
-fn fold_table<const W: usize>(t: u64, sel: &[u64]) -> u64 {
-    debug_assert_eq!(W, 1usize << sel.len());
-    let mut v = [0u64; W];
+fn fold_block<const W: usize, const T: usize>(t: u64, sel: &[[u64; W]]) -> [u64; W] {
+    debug_assert_eq!(T, 1usize << sel.len());
+    let mut v = [[0u64; W]; T];
     for (m, vm) in v.iter_mut().enumerate() {
-        *vm = lane_mask(t, m as u32);
+        let lm = lane_mask(t, m as u32);
+        for x in vm.iter_mut() {
+            *x = lm;
+        }
     }
-    let mut width = W;
-    for &s in sel.iter().rev() {
+    let mut width = T;
+    for s in sel.iter().rev() {
         width >>= 1;
         let (lo, hi) = v.split_at_mut(width);
-        for (a, &b) in lo.iter_mut().zip(hi.iter()) {
-            *a = (!s & *a) | (s & b);
+        for (a, b) in lo.iter_mut().zip(hi.iter()) {
+            for w in 0..W {
+                a[w] = (!s[w] & a[w]) | (s[w] & b[w]);
+            }
         }
     }
     v[0]
 }
 
 impl CompiledNetlist {
-    /// Compile a netlist (all LUTs must have ≤ 6 inputs).
+    /// Compile a netlist (all LUTs must have ≤ 6 inputs), running the
+    /// compile-time optimizer first — constant folding, structural dedup,
+    /// and dead-LUT removal ([`crate::logic::opt`]); the removal counts are
+    /// available via [`CompiledNetlist::opt_stats`]. The compiled program
+    /// is bit-exact against the input netlist's [`LutNetlist::eval`].
     pub fn compile(nl: &LutNetlist) -> CompiledNetlist {
-        assert!(nl.max_arity() <= 6, "compiled simulator supports k ≤ 6");
-        let code_of = |s: &Sig| -> Code { s.to_code(nl.num_inputs) };
-        let mut lut_inputs = Vec::new();
-        let mut offsets = vec![0u32];
-        let mut tables = Vec::with_capacity(nl.luts.len());
-        for lut in &nl.luts {
-            for s in &lut.inputs {
-                lut_inputs.push(code_of(s));
+        Self::build(nl, true)
+    }
+
+    /// Compile without the optimizer pass — the benchmark baseline the
+    /// optimized kernel is measured against (`nullanet bench`).
+    pub fn compile_unoptimized(nl: &LutNetlist) -> CompiledNetlist {
+        Self::build(nl, false)
+    }
+
+    fn build(src: &LutNetlist, run_optimizer: bool) -> CompiledNetlist {
+        assert!(src.max_arity() <= 6, "compiled simulator supports k ≤ 6");
+        let optimized;
+        let (nl, opt) = if run_optimizer {
+            let (o, s) = crate::logic::opt::optimize(src);
+            optimized = o;
+            (&optimized, s)
+        } else {
+            (src, OptStats::unchanged(src.num_luts()))
+        };
+        let ni = nl.num_inputs;
+        let code_of = |s: &Sig| -> Code { s.to_code(ni) };
+
+        // Levelized schedule, stably sub-ordered by arity inside each
+        // level: LUTs at one level never feed each other, so any
+        // within-level permutation is still topological, and grouping by
+        // arity lets equal-arity neighbors (often spanning several levels)
+        // merge into one dispatch run.
+        let levels = nl.levels();
+        let mut order: Vec<u32> = (0..nl.luts.len() as u32).collect();
+        order.sort_by_key(|&j| (levels[j as usize], nl.luts[j as usize].arity()));
+
+        let mut runs: Vec<Run> = Vec::new();
+        let mut s_tables = Vec::with_capacity(nl.luts.len());
+        let mut s_dest = Vec::with_capacity(nl.luts.len());
+        let mut s_inputs: Vec<Code> = Vec::new();
+        for (pos, &j) in order.iter().enumerate() {
+            let lut = &nl.luts[j as usize];
+            let k = lut.arity() as u32;
+            match runs.last_mut() {
+                Some(r) if r.arity == k => r.count += 1,
+                _ => runs.push(Run {
+                    arity: k,
+                    start: pos as u32,
+                    count: 1,
+                    input_start: s_inputs.len() as u32,
+                }),
             }
-            offsets.push(lut_inputs.len() as u32);
-            // Pack table into u64 (2^k bits, k ≤ 6).
+            for s in &lut.inputs {
+                s_inputs.push(code_of(s));
+            }
+            // Pack the table into a u64 (2^k bits, k ≤ 6).
             let mut t = 0u64;
             for m in 0..1u64 << lut.table.nvars() {
                 if lut.table.eval(m) {
                     t |= 1 << m;
                 }
             }
-            tables.push(t);
+            s_tables.push(t);
+            s_dest.push(2 + ni as u32 + j);
         }
         let outputs = nl.outputs.iter().map(|(s, inv)| (code_of(s), *inv)).collect();
-        // Levelized schedule: evaluate level by level. The stable sort keeps
-        // the (already topological) index order inside each level.
-        let levels = nl.levels();
-        let mut schedule: Vec<u32> = (0..nl.luts.len() as u32).collect();
-        schedule.sort_by_key(|&j| levels[j as usize]);
         CompiledNetlist {
-            num_inputs: nl.num_inputs,
-            lut_inputs,
-            offsets,
-            tables,
+            id: NEXT_SIM_ID.fetch_add(1, Ordering::Relaxed),
+            num_inputs: ni,
+            num_luts: nl.luts.len(),
             outputs,
-            schedule,
+            runs,
+            s_tables,
+            s_dest,
+            s_inputs,
+            opt,
         }
     }
 
@@ -140,9 +224,128 @@ impl CompiledNetlist {
         self.outputs.len()
     }
 
+    /// LUTs evaluated per word pass (after optimization).
+    pub fn num_luts(&self) -> usize {
+        self.num_luts
+    }
+
+    /// What the compile-time optimizer removed (`luts_before` is the raw
+    /// netlist, `luts_after` what every word pass now evaluates).
+    pub fn opt_stats(&self) -> &OptStats {
+        &self.opt
+    }
+
+    /// Value slots per lane word: 2 consts + inputs + (optimized) LUTs.
+    fn slots(&self) -> usize {
+        2 + self.num_inputs + self.num_luts
+    }
+
     /// Allocate evaluation state for this netlist (one per worker thread).
     pub fn make_scratch(&self) -> SimScratch {
-        SimScratch { vals: vec![0u64; 2 + self.num_inputs + self.tables.len()] }
+        SimScratch { slots: self.slots(), owner: self.id, vals: Vec::new() }
+    }
+
+    /// Pool of reusable scratches for shard workers (see [`ScratchPool`]).
+    pub fn make_scratch_pool(&self) -> ScratchPool {
+        ScratchPool {
+            slots: self.slots(),
+            owner: self.id,
+            free: Mutex::new(Vec::new()),
+            created: AtomicUsize::new(0),
+        }
+    }
+
+    /// Check the scratch belongs to this netlist and hand back its value
+    /// array sized for block width `width` (growing it at most once per
+    /// width increase — steady state is allocation-free).
+    fn checked_vals<'a>(&self, scratch: &'a mut SimScratch, width: usize) -> &'a mut [u64] {
+        assert_eq!(
+            scratch.slots,
+            self.slots(),
+            "scratch was built for a different netlist"
+        );
+        assert_eq!(scratch.owner, self.id, "scratch was built for a different netlist");
+        let need = self.slots() * width;
+        if scratch.vals.len() < need {
+            scratch.vals.resize(need, 0);
+        }
+        &mut scratch.vals[..need]
+    }
+
+    /// The straight-line block kernel: consts + inputs are already loaded
+    /// into `vals` (signal-major, stride `W`); evaluates every run, one
+    /// arity dispatch per run.
+    fn exec<const W: usize>(&self, vals: &mut [u64]) {
+        for x in vals[..W].iter_mut() {
+            *x = 0;
+        }
+        for x in vals[W..2 * W].iter_mut() {
+            *x = !0u64;
+        }
+        for run in &self.runs {
+            let start = run.start as usize;
+            let count = run.count as usize;
+            let inp = run.input_start as usize;
+            match run.arity {
+                0 => self.exec_run::<W, 0, 1>(vals, start, count, inp),
+                1 => self.exec_run::<W, 1, 2>(vals, start, count, inp),
+                2 => self.exec_run::<W, 2, 4>(vals, start, count, inp),
+                3 => self.exec_run::<W, 3, 8>(vals, start, count, inp),
+                4 => self.exec_run::<W, 4, 16>(vals, start, count, inp),
+                5 => self.exec_run::<W, 5, 32>(vals, start, count, inp),
+                _ => self.exec_run::<W, 6, 64>(vals, start, count, inp),
+            }
+        }
+    }
+
+    /// One same-arity run (`K` inputs, `T = 2^K` table entries): gather the
+    /// K selector blocks, fold, store — no per-LUT dispatch.
+    #[inline(always)]
+    fn exec_run<const W: usize, const K: usize, const T: usize>(
+        &self,
+        vals: &mut [u64],
+        start: usize,
+        count: usize,
+        mut inp: usize,
+    ) {
+        for i in start..start + count {
+            let mut sel = [[0u64; W]; K];
+            for s in sel.iter_mut() {
+                let code = self.s_inputs[inp] as usize * W;
+                s.copy_from_slice(&vals[code..code + W]);
+                inp += 1;
+            }
+            let out = fold_block::<W, T>(self.s_tables[i], &sel);
+            let dest = self.s_dest[i] as usize * W;
+            vals[dest..dest + W].copy_from_slice(&out);
+        }
+    }
+
+    /// Evaluate one `W`-group block of a packed batch (groups `g0 .. g0+W`),
+    /// writing output words group-major into `out` (`W * num_outputs()`).
+    fn run_block<const W: usize>(
+        &self,
+        batch: &PackedBatch,
+        g0: usize,
+        scratch: &mut SimScratch,
+        out: &mut [u64],
+    ) {
+        let ni = self.num_inputs;
+        let vals = self.checked_vals(scratch, W);
+        let words = batch.words();
+        for i in 0..ni {
+            for w in 0..W {
+                vals[(2 + i) * W + w] = words[(g0 + w) * ni + i];
+            }
+        }
+        self.exec::<W>(vals);
+        let no = self.outputs.len();
+        for w in 0..W {
+            for (j, (code, inv)) in self.outputs.iter().enumerate() {
+                out[w * no + j] =
+                    vals[*code as usize * W + w] ^ if *inv { !0u64 } else { 0 };
+            }
+        }
     }
 
     /// Evaluate 64 samples at once. `inputs[i]` = word of input `i`;
@@ -167,42 +370,18 @@ impl CompiledNetlist {
             self.outputs.len()
         );
         let ni = self.num_inputs;
-        let vals = &mut scratch.vals;
-        assert_eq!(
-            vals.len(),
-            2 + ni + self.tables.len(),
-            "run_words: scratch was built for a different netlist"
-        );
-        vals[0] = 0;
-        vals[1] = !0u64;
+        let vals = self.checked_vals(scratch, 1);
         vals[2..2 + ni].copy_from_slice(inputs);
-        for &j in &self.schedule {
-            let j = j as usize;
-            let lo = self.offsets[j] as usize;
-            let hi = self.offsets[j + 1] as usize;
-            let table = self.tables[j];
-            let mut sel = [0u64; 6];
-            for (s, &code) in sel.iter_mut().zip(&self.lut_inputs[lo..hi]) {
-                *s = vals[code as usize];
-            }
-            vals[2 + ni + j] = match hi - lo {
-                0 => lane_mask(table, 0),
-                1 => fold1(table, sel[0]),
-                2 => fold2(table, sel[0], sel[1]),
-                3 => fold_table::<8>(table, &sel[..3]),
-                4 => fold_table::<16>(table, &sel[..4]),
-                5 => fold_table::<32>(table, &sel[..5]),
-                _ => fold_table::<64>(table, &sel[..6]),
-            };
-        }
+        self.exec::<1>(vals);
         for (o, (code, inv)) in out.iter_mut().zip(&self.outputs) {
             *o = vals[*code as usize] ^ if *inv { !0u64 } else { 0 };
         }
     }
 
     /// Evaluate lane groups `g0..g1` of a packed batch, writing output words
-    /// group-major into `out` (`(g1 - g0) * num_outputs()` words). This is
-    /// the shard body of [`CompiledNetlist::run_packed_sharded`].
+    /// group-major into `out` (`(g1 - g0) * num_outputs()` words), stepping
+    /// through the widest block the remaining range supports (8 → 4 → 2 →
+    /// 1). This is the shard body of the sharded serving path.
     pub fn run_groups(
         &self,
         batch: &PackedBatch,
@@ -210,6 +389,21 @@ impl CompiledNetlist {
         g1: usize,
         scratch: &mut SimScratch,
         out: &mut [u64],
+    ) {
+        self.run_groups_capped(batch, g0, g1, scratch, out, MAX_BLOCK_WIDTH)
+    }
+
+    /// [`CompiledNetlist::run_groups`] with the block width capped at
+    /// `max_width` ∈ {1, 2, 4, 8} — the per-width benchmark entry point
+    /// (`nullanet bench` sweeps it); serving always uses the full cap.
+    pub fn run_groups_capped(
+        &self,
+        batch: &PackedBatch,
+        g0: usize,
+        g1: usize,
+        scratch: &mut SimScratch,
+        out: &mut [u64],
+        max_width: usize,
     ) {
         assert_eq!(
             batch.num_signals(),
@@ -219,105 +413,239 @@ impl CompiledNetlist {
             self.num_inputs
         );
         assert!(g0 <= g1 && g1 <= batch.num_groups(), "run_groups: bad group range");
+        assert!(
+            matches!(max_width, 1 | 2 | 4 | 8),
+            "run_groups: block width must be 1, 2, 4, or 8"
+        );
         let no = self.outputs.len();
         assert_eq!(out.len(), (g1 - g0) * no, "run_groups: output slice width");
-        for g in g0..g1 {
-            let dst = &mut out[(g - g0) * no..(g - g0 + 1) * no];
-            self.run_words(scratch, batch.group_words(g), dst);
+        let mut g = g0;
+        while g < g1 {
+            let rem = g1 - g;
+            let off = (g - g0) * no;
+            if rem >= 8 && max_width >= 8 {
+                self.run_block::<8>(batch, g, scratch, &mut out[off..off + 8 * no]);
+                g += 8;
+            } else if rem >= 4 && max_width >= 4 {
+                self.run_block::<4>(batch, g, scratch, &mut out[off..off + 4 * no]);
+                g += 4;
+            } else if rem >= 2 && max_width >= 2 {
+                self.run_block::<2>(batch, g, scratch, &mut out[off..off + 2 * no]);
+                g += 2;
+            } else {
+                self.run_block::<1>(batch, g, scratch, &mut out[off..off + no]);
+                g += 1;
+            }
         }
     }
 
     /// Evaluate a whole packed batch on the calling thread; returns the
-    /// packed output batch (tail lanes masked).
+    /// packed output batch (tail lanes masked). Allocates the output —
+    /// steady-state callers use [`CompiledNetlist::run_packed_into`].
     pub fn run_packed(&self, batch: &PackedBatch, scratch: &mut SimScratch) -> PackedBatch {
         let groups = batch.num_groups();
         let no = self.outputs.len();
         let mut words = vec![0u64; groups * no];
         self.run_groups(batch, 0, groups, scratch, &mut words);
+        // `from_group_major_words` masks the tail lanes.
         PackedBatch::from_group_major_words(no, batch.num_samples(), words)
     }
 
+    /// Evaluate a whole packed batch into a reusable group-major word
+    /// buffer (`num_groups() * num_outputs()` words, tail lanes masked).
+    /// `out`'s capacity is reused: after the first batch of a given size,
+    /// no allocation happens here.
+    pub fn run_packed_into(
+        &self,
+        batch: &PackedBatch,
+        scratch: &mut SimScratch,
+        out: &mut Vec<u64>,
+    ) {
+        let groups = batch.num_groups();
+        let no = self.outputs.len();
+        out.clear();
+        out.resize(groups * no, 0);
+        self.run_groups(batch, 0, groups, scratch, &mut out[..]);
+        mask_group_tail(out, no, batch.num_samples());
+    }
+
     /// Evaluate a packed batch with its lane groups sharded across a worker
-    /// pool, every worker sharing one `Arc<CompiledNetlist>` with its own
-    /// [`SimScratch`]. Falls back to the inline path when the batch has a
-    /// single lane group (or the pool a single worker). Associated function
-    /// (`&Arc<Self>` is not a valid method receiver on stable Rust):
+    /// pool, every worker sharing one `Arc<CompiledNetlist>`. Convenience
+    /// wrapper that allocates a fresh [`ShardRunner`] (and therefore fresh
+    /// buffers) per call — the steady-state serving path keeps one
+    /// `ShardRunner` alive instead. Associated function (`&Arc<Self>` is
+    /// not a valid method receiver on stable Rust):
     /// `CompiledNetlist::run_packed_sharded(&sim, &pool, &batch)`.
     pub fn run_packed_sharded(
         this: &Arc<Self>,
         pool: &ThreadPool,
         batch: &Arc<PackedBatch>,
     ) -> PackedBatch {
-        let groups = batch.num_groups();
-        let shards = pool.size().min(groups);
-        if shards <= 1 {
-            let mut scratch = this.make_scratch();
-            return this.run_packed(batch, &mut scratch);
-        }
-        let per = groups.div_ceil(shards);
-        let ranges: Vec<(usize, usize)> = (0..shards)
-            .map(|i| (i * per, ((i + 1) * per).min(groups)))
-            .filter(|&(a, b)| a < b)
-            .collect();
-        let sim = Arc::clone(this);
-        let shared = Arc::clone(batch);
-        let no = this.outputs.len();
-        let chunks = pool.par_map(ranges, move |(g0, g1)| {
-            let mut scratch = sim.make_scratch();
-            let mut out = vec![0u64; (g1 - g0) * sim.num_outputs()];
-            sim.run_groups(&shared, g0, g1, &mut scratch, &mut out);
-            out
-        });
-        let mut words = Vec::with_capacity(groups * no);
-        for c in &chunks {
-            words.extend_from_slice(c);
-        }
-        PackedBatch::from_group_major_words(no, batch.num_samples(), words)
+        let mut runner = ShardRunner::new(this);
+        let words = runner.run(this, pool, batch).to_vec();
+        PackedBatch::from_group_major_words(this.outputs.len(), batch.num_samples(), words)
     }
 
     /// Evaluate a batch of arbitrary size: `samples[s][i]` = input `i` of
     /// sample `s`; returns `result[s][j]` = output `j` of sample `s`.
     ///
-    /// Legacy per-sample path, kept for offline evaluation and as the
-    /// baseline the packed path is benchmarked against; the serving hot path
-    /// uses [`CompiledNetlist::run_packed`] / `run_packed_sharded`.
+    /// Legacy per-sample-container path, kept for offline evaluation and as
+    /// the baseline the packed path is benchmarked against. The transpose
+    /// packs each sample's bools into words and pushes them word-level
+    /// ([`PackedBatch::push_sample_words`]); evaluation then runs the block
+    /// kernel.
     pub fn run_batch(&self, samples: &[Vec<bool>]) -> Vec<Vec<bool>> {
         let n = samples.len();
-        let mut scratch = self.make_scratch();
-        let mut results = vec![vec![false; self.outputs.len()]; n];
-        let mut in_words = vec![0u64; self.num_inputs];
-        let mut out_words = vec![0u64; self.outputs.len()];
-        let mut base = 0;
-        while base < n {
-            let lanes = (n - base).min(64);
-            for w in in_words.iter_mut() {
+        let ni = self.num_inputs;
+        let no = self.outputs.len();
+        let mut packed = PackedBatch::with_capacity(ni, n);
+        let mut wordbuf = vec![0u64; ni.div_ceil(64)];
+        for (s_idx, s) in samples.iter().enumerate() {
+            assert_eq!(
+                s.len(),
+                ni,
+                "run_batch: sample {} has {} bits for a {}-input netlist",
+                s_idx,
+                s.len(),
+                ni
+            );
+            for w in wordbuf.iter_mut() {
                 *w = 0;
             }
-            for lane in 0..lanes {
-                let s = &samples[base + lane];
-                assert_eq!(
-                    s.len(),
-                    self.num_inputs,
-                    "run_batch: sample {} has {} bits for a {}-input netlist",
-                    base + lane,
-                    s.len(),
-                    self.num_inputs
-                );
-                for (i, &b) in s.iter().enumerate() {
-                    if b {
-                        in_words[i] |= 1 << lane;
-                    }
+            for (i, &b) in s.iter().enumerate() {
+                if b {
+                    wordbuf[i >> 6] |= 1 << (i & 63);
                 }
             }
-            self.run_words(&mut scratch, &in_words, &mut out_words);
-            for lane in 0..lanes {
-                for (j, w) in out_words.iter().enumerate() {
-                    results[base + lane][j] = (w >> lane) & 1 == 1;
-                }
-            }
-            base += lanes;
+            packed.push_sample_words(&wordbuf);
         }
-        results
+        let mut scratch = self.make_scratch();
+        let out = self.run_packed(&packed, &mut scratch);
+        (0..n)
+            .map(|s| (0..no).map(|j| out.get(s, j)).collect())
+            .collect()
+    }
+}
+
+/// A pool of reusable [`SimScratch`]es keyed to one compiled netlist.
+/// Shard workers take a scratch per shard and return it afterwards, so the
+/// number of scratches ever allocated equals the peak shard concurrency —
+/// not the batch count. [`ScratchPool::created`] exposes the allocation
+/// count as the zero-allocation test hook.
+pub struct ScratchPool {
+    slots: usize,
+    owner: usize,
+    free: Mutex<Vec<SimScratch>>,
+    created: AtomicUsize,
+}
+
+impl ScratchPool {
+    fn take(&self) -> SimScratch {
+        if let Some(s) = self.free.lock().unwrap().pop() {
+            return s;
+        }
+        self.created.fetch_add(1, Ordering::Relaxed);
+        SimScratch { slots: self.slots, owner: self.owner, vals: Vec::new() }
+    }
+
+    fn put(&self, s: SimScratch) {
+        self.free.lock().unwrap().push(s);
+    }
+
+    /// Scratches ever created (stable once every worker has one).
+    pub fn created(&self) -> usize {
+        self.created.load(Ordering::Relaxed)
+    }
+}
+
+/// Raw base pointer of the shared output buffer, smuggled into shard jobs.
+/// Safety rests on the shard ranges being disjoint and `par_map` acting as
+/// a barrier (see [`ShardRunner::run`]).
+#[derive(Clone, Copy)]
+struct SendPtr(*mut u64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Persistent state for the sharded serving path: a [`ScratchPool`] of
+/// per-worker scratches plus one group-major output buffer that shard
+/// workers write disjoint ranges of **directly** — no per-shard `Vec`s, no
+/// concatenation after the barrier, and (past the first batch of a given
+/// size) no allocation at all. One `ShardRunner` lives inside each
+/// [`crate::coordinator::engine::PackedLogicEngine`].
+pub struct ShardRunner {
+    scratches: Arc<ScratchPool>,
+    out: Vec<u64>,
+    grows: usize,
+}
+
+impl ShardRunner {
+    /// Runner bound to `sim` (scratches and buffers are sized for it).
+    pub fn new(sim: &CompiledNetlist) -> ShardRunner {
+        ShardRunner {
+            scratches: Arc::new(sim.make_scratch_pool()),
+            out: Vec::new(),
+            grows: 0,
+        }
+    }
+
+    /// Evaluate `batch`, sharding its lane groups across `pool`; returns
+    /// the group-major output words (`num_groups() * num_outputs()`, tail
+    /// lanes masked). Falls back to an inline single-scratch pass when the
+    /// batch has one group (or the pool one worker).
+    pub fn run(
+        &mut self,
+        sim: &Arc<CompiledNetlist>,
+        pool: &ThreadPool,
+        batch: &Arc<PackedBatch>,
+    ) -> &[u64] {
+        let groups = batch.num_groups();
+        let no = sim.num_outputs();
+        let need = groups * no;
+        if self.out.capacity() < need {
+            self.grows += 1;
+        }
+        self.out.clear();
+        self.out.resize(need, 0);
+        let shards = pool.size().min(groups);
+        if shards <= 1 {
+            let mut scratch = self.scratches.take();
+            sim.run_groups(batch, 0, groups, &mut scratch, &mut self.out[..]);
+            self.scratches.put(scratch);
+        } else {
+            let per = groups.div_ceil(shards);
+            let ranges: Vec<(usize, usize)> = (0..shards)
+                .map(|i| (i * per, ((i + 1) * per).min(groups)))
+                .filter(|&(a, b)| a < b)
+                .collect();
+            let base = SendPtr(self.out.as_mut_ptr());
+            let sim2 = Arc::clone(sim);
+            let shared = Arc::clone(batch);
+            let scratches = Arc::clone(&self.scratches);
+            // SAFETY: every shard writes the disjoint word range
+            // `[g0*no, g1*no)` of the buffer behind `base`; the ranges
+            // partition `[0, groups*no)`. `par_map` does not return until
+            // every job has finished (its remaining-counter barrier), and
+            // `self` is mutably borrowed for this whole call, so the buffer
+            // is neither read, resized, moved, nor dropped while any shard
+            // holds the pointer.
+            let _: Vec<()> = pool.par_map(ranges, move |(g0, g1)| {
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(base.0.add(g0 * no), (g1 - g0) * no)
+                };
+                let mut scratch = scratches.take();
+                sim2.run_groups(&shared, g0, g1, &mut scratch, dst);
+                scratches.put(scratch);
+            });
+        }
+        mask_group_tail(&mut self.out, no, batch.num_samples());
+        &self.out
+    }
+
+    /// Zero-allocation test hook: (scratches ever created across shard
+    /// workers, output-buffer capacity growths). Both stabilize after the
+    /// first batches of the steady-state size.
+    pub fn alloc_stats(&self) -> (usize, usize) {
+        (self.scratches.created(), self.grows)
     }
 }
 
@@ -370,6 +698,52 @@ mod tests {
     }
 
     #[test]
+    fn unoptimized_compile_matches_optimized() {
+        for seed in 0..10u64 {
+            let nl = random_netlist(seed ^ 0xAB, 7, 24);
+            let opt = CompiledNetlist::compile(&nl);
+            let raw = CompiledNetlist::compile_unoptimized(&nl);
+            assert!(opt.num_luts() <= raw.num_luts(), "seed={seed}");
+            assert_eq!(raw.opt_stats().removed(), 0);
+            let mut so = opt.make_scratch();
+            let mut sr = raw.make_scratch();
+            let mut rng = Xoshiro256::new(seed);
+            let inputs: Vec<u64> = (0..7).map(|_| rng.next_u64()).collect();
+            let mut go = vec![0u64; opt.num_outputs()];
+            let mut gr = vec![0u64; raw.num_outputs()];
+            opt.run_words(&mut so, &inputs, &mut go);
+            raw.run_words(&mut sr, &inputs, &mut gr);
+            assert_eq!(go, gr, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn optimizer_stats_partition_on_handcrafted_duplicates() {
+        // Two identical ANDs + a dead XOR: one dedup, one dead removal.
+        let and_tt = TruthTable::from_fn(2, |m| m == 3);
+        let xor_tt = TruthTable::from_fn(2, |m| (m.count_ones() & 1) == 1);
+        let mut nl = LutNetlist::new(2);
+        let a = nl.add_lut(vec![Sig::Input(0), Sig::Input(1)], and_tt.clone());
+        let b = nl.add_lut(vec![Sig::Input(0), Sig::Input(1)], and_tt);
+        let _dead = nl.add_lut(vec![Sig::Input(0), Sig::Input(1)], xor_tt);
+        nl.add_output(a, false);
+        nl.add_output(b, true);
+        let c = CompiledNetlist::compile(&nl);
+        let s = c.opt_stats();
+        assert_eq!(s.luts_before, 3);
+        assert_eq!(s.luts_after, 1);
+        assert_eq!(s.deduped, 1);
+        assert_eq!(s.dead_removed, 1);
+        assert_eq!(c.num_luts(), 1);
+        // Function preserved: out0 = AND, out1 = !AND.
+        let mut scratch = c.make_scratch();
+        let mut out = vec![0u64; 2];
+        c.run_words(&mut scratch, &[0b1010, 0b1100], &mut out);
+        assert_eq!(out[0] & 0xF, 0b1000);
+        assert_eq!(out[1] & 0xF, 0b0111);
+    }
+
+    #[test]
     fn run_batch_roundtrip() {
         let nl = random_netlist(77, 6, 15);
         let c = CompiledNetlist::compile(&nl);
@@ -396,12 +770,13 @@ mod tests {
         let a = nl.add_lut(vec![], t);
         nl.add_output(a, false);
         nl.add_output(a, true);
-        let c = CompiledNetlist::compile(&nl);
-        let mut scratch = c.make_scratch();
-        let mut out = vec![0u64; 2];
-        c.run_words(&mut scratch, &[0u64], &mut out);
-        assert_eq!(out[0], !0u64);
-        assert_eq!(out[1], 0u64);
+        for c in [CompiledNetlist::compile(&nl), CompiledNetlist::compile_unoptimized(&nl)] {
+            let mut scratch = c.make_scratch();
+            let mut out = vec![0u64; 2];
+            c.run_words(&mut scratch, &[0u64], &mut out);
+            assert_eq!(out[0], !0u64);
+            assert_eq!(out[1], 0u64);
+        }
     }
 
     #[test]
@@ -457,6 +832,55 @@ mod tests {
     }
 
     #[test]
+    fn every_block_width_matches_reference_eval() {
+        // 520 samples = 9 lane groups: exercises the 8-, 4-, 2-, and
+        // 1-group block paths in one run for every width cap.
+        let nl = random_netlist(31, 9, 26);
+        let c = CompiledNetlist::compile(&nl);
+        let mut rng = Xoshiro256::new(77);
+        let samples: Vec<u64> = (0..520).map(|_| rng.next_u64() & 0x1FF).collect();
+        let mut packed = PackedBatch::with_capacity(9, samples.len());
+        for &bits in &samples {
+            packed.push_sample_word(bits);
+        }
+        let groups = packed.num_groups();
+        let no = c.num_outputs();
+        let mut scratch = c.make_scratch();
+        for cap in [1usize, 2, 4, 8] {
+            let mut out = vec![0u64; groups * no];
+            c.run_groups_capped(&packed, 0, groups, &mut scratch, &mut out, cap);
+            for (s, &bits) in samples.iter().enumerate() {
+                let want = nl.eval(bits);
+                for (j, &w) in want.iter().enumerate() {
+                    let got = (out[(s >> 6) * no + j] >> (s & 63)) & 1 == 1;
+                    assert_eq!(got, w, "cap={cap} sample={s} output={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_packed_into_reuses_the_buffer() {
+        let nl = random_netlist(13, 6, 20);
+        let c = CompiledNetlist::compile(&nl);
+        let mut rng = Xoshiro256::new(5);
+        let mut packed = PackedBatch::with_capacity(6, 200);
+        for _ in 0..200 {
+            packed.push_sample_word(rng.next_u64() & 0x3F);
+        }
+        let mut scratch = c.make_scratch();
+        let mut out = Vec::new();
+        c.run_packed_into(&packed, &mut scratch, &mut out);
+        let cap = out.capacity();
+        let first = out.clone();
+        for _ in 0..5 {
+            c.run_packed_into(&packed, &mut scratch, &mut out);
+        }
+        assert_eq!(out, first, "same batch ⇒ same words");
+        assert_eq!(out.capacity(), cap, "steady state must not reallocate");
+    }
+
+    #[test]
     fn sharded_matches_inline_across_worker_counts() {
         let nl = random_netlist(11, 6, 22);
         let c = Arc::new(CompiledNetlist::compile(&nl));
@@ -476,6 +900,38 @@ mod tests {
             let sharded = CompiledNetlist::run_packed_sharded(&c, &pool, &batch);
             assert_eq!(sharded, inline, "workers={workers}");
         }
+    }
+
+    #[test]
+    fn shard_runner_is_allocation_stable_across_batches() {
+        let nl = random_netlist(17, 8, 30);
+        let c = Arc::new(CompiledNetlist::compile(&nl));
+        let pool = ThreadPool::new(4);
+        let mut rng = Xoshiro256::new(3);
+        let mut packed = PackedBatch::with_capacity(8, 640);
+        for _ in 0..640 {
+            packed.push_sample_word(rng.next_u64() & 0xFF);
+        }
+        let batch = Arc::new(packed);
+        let mut runner = ShardRunner::new(&c);
+        let first = runner.run(&c, &pool, &batch).to_vec();
+        let warm_grows = runner.alloc_stats().1;
+        for _ in 0..6 {
+            let words = runner.run(&c, &pool, &batch);
+            assert_eq!(words, &first[..], "sharded output must be deterministic");
+        }
+        // A smaller batch must also reuse the (larger) buffers.
+        let mut small = PackedBatch::with_capacity(8, 100);
+        for _ in 0..100 {
+            small.push_sample_word(rng.next_u64() & 0xFF);
+        }
+        let small = Arc::new(small);
+        let _ = runner.run(&c, &pool, &small);
+        let (created, grows) = runner.alloc_stats();
+        assert_eq!(grows, warm_grows, "steady state must not grow the output buffer");
+        // Scratch allocations are bounded by peak shard concurrency (4
+        // here), never by the batch count (8 runs).
+        assert!(created <= 4, "created {created} scratches for 4 shards");
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //!                    [--circuit file.circuit.json] [--workers N]
 //! nullanet serve     --models artifacts/circuits [--default-model name]
 //!                    [--addr …] [--max-batch N] [--max-wait-us N] [--workers N]
+//! nullanet bench     [--out BENCH_5.json] [--batch N] [--quick] [--jobs N]
 //! nullanet emit      --arch jsc-s --format blif|verilog --out file
 //! nullanet info      --arch jsc-s
 //! nullanet gen-model --features 6 --widths 5,4 --fanin 2 --act-bits 1 --out m.json
@@ -30,11 +31,18 @@ use nullanet_tiny::coordinator::{
 use nullanet_tiny::data::Dataset;
 use nullanet_tiny::error::NnError;
 use nullanet_tiny::flow::{artifact, circuit_accuracy, run_flow, FlowConfig};
-use nullanet_tiny::fpga::report::{format_table, Comparison, ResultRow};
+use nullanet_tiny::fpga::report::{format_opt_stats, format_table, Comparison, ResultRow};
 use nullanet_tiny::fpga::timing::TimingModel;
 use nullanet_tiny::logic::netlist::PipelinedCircuit;
+use nullanet_tiny::logic::sim::{CompiledNetlist, ShardRunner};
+use nullanet_tiny::nn::eval::{codes_to_bitvec, quantize_input};
 use nullanet_tiny::nn::model::{random_model, Arch, Model};
+use nullanet_tiny::util::bench::{Bench, BenchStats};
+use nullanet_tiny::util::bitvec::PackedBatch;
 use nullanet_tiny::util::cli::Args;
+use nullanet_tiny::util::json::Json;
+use nullanet_tiny::util::prng::Xoshiro256;
+use nullanet_tiny::util::threadpool::ThreadPool;
 
 fn main() -> ExitCode {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -50,6 +58,7 @@ fn main() -> ExitCode {
         Some("table1") => cmd_table1(&args),
         Some("verify") => cmd_verify(&args),
         Some("serve") => cmd_serve(&args),
+        Some("bench") => cmd_bench(&args),
         Some("emit") => cmd_emit(&args),
         Some("info") => cmd_info(&args),
         Some("gen-model") => cmd_gen_model(&args),
@@ -58,8 +67,8 @@ fn main() -> ExitCode {
         }
         None => {
             println!(
-                "usage: nullanet <flow|compile|table1|verify|serve|emit|info|gen-model> \
-                 [options]"
+                "usage: nullanet <flow|compile|table1|verify|serve|bench|emit|info|\
+                 gen-model> [options]"
             );
             Ok(())
         }
@@ -155,6 +164,7 @@ fn cmd_flow(args: &Args) -> Result<(), NnError> {
         r.total_cubes_before,
         r.total_cubes_after,
     );
+    println!("{}", format_opt_stats(&r.opt));
     let test_path = args.get_str("test-set", &format!("{dir}/jsc_test.bin"));
     if std::path::Path::new(&test_path).exists() {
         let test = Dataset::load(&test_path)?;
@@ -396,6 +406,135 @@ fn cmd_serve(args: &Args) -> Result<(), NnError> {
     nullanet_tiny::coordinator::server::serve(Arc::clone(&registry), &addr, None)
         .map_err(|e| NnError::Config(format!("serve on {addr}: {e}")))?;
     println!("{}", registry.metrics_report());
+    Ok(())
+}
+
+/// One kernel measurement as a JSON row (`nullanet bench`).
+fn kernel_row(width: usize, optimized: bool, s: &BenchStats, n: f64) -> Json {
+    Json::obj([
+        ("width", Json::int(width as i64)),
+        ("optimized", Json::Bool(optimized)),
+        ("ns_per_sample", Json::float(s.median_ns / n)),
+        ("samples_per_sec", Json::float(n * 1e9 / s.median_ns)),
+    ])
+}
+
+/// Fixed-seed packed-throughput benchmark. Writes machine-readable
+/// `BENCH_5.json`: ns/sample and samples/sec for every kernel width
+/// (W ∈ {1,2,4,8}) and shard-worker count, the optimizer's pre/post LUT
+/// counts, and the headline speedup of the W=4 kernel + optimizer over the
+/// pre-PR W=1 unoptimized path — the number the `BENCH_*.json` perf
+/// trajectory is tracked by from this PR on. Deterministic: models come
+/// from fixed-seed `gen-model` specs, inputs from a fixed-seed PRNG, so no
+/// trained artifacts are needed. `--quick` (CI smoke) shrinks the model
+/// set and batch; `NNT_BENCH_FAST=1` shrinks the measurement windows.
+fn cmd_bench(args: &Args) -> Result<(), NnError> {
+    conf(args.check_known(&["out", "batch", "quick", "jobs"]))?;
+    let quick = args.get_bool("quick");
+    let out_path = args.get_str("out", "BENCH_5.json");
+    let batch_n = conf(args.get_usize("batch", if quick { 256 } else { 4096 }))?;
+    let jobs = conf(args.get_usize("jobs", FlowConfig::default().jobs))?;
+    let models: Vec<Model> = if quick {
+        vec![random_model("bench-s", 8, &[6, 4], 2, 1, 5)]
+    } else {
+        vec![
+            random_model("bench-s", 8, &[6, 4], 2, 1, 5),
+            random_model("bench-m", 16, &[32, 16, 5], 3, 2, 5),
+        ]
+    };
+    let mut bench = Bench::new();
+    let mut model_rows: Vec<Json> = Vec::new();
+    let mut all_beat_baseline = true;
+    for model in &models {
+        println!("model {}: synthesizing…", model.summary());
+        let cfg = FlowConfig { verify: false, jobs, ..Default::default() };
+        let r = run_flow(model, &cfg, None)?;
+        let netlist = r.circuit.netlist;
+        let sim_opt = std::sync::Arc::new(CompiledNetlist::compile(&netlist));
+        let sim_raw = std::sync::Arc::new(CompiledNetlist::compile_unoptimized(&netlist));
+        println!("  {}", format_opt_stats(sim_opt.opt_stats()));
+
+        // Fixed-seed inputs, quantized + packed once.
+        let mut rng = Xoshiro256::new(0xBEBE);
+        let mut packed = PackedBatch::with_capacity(model.input_bits(), batch_n);
+        for _ in 0..batch_n {
+            let x: Vec<f64> = (0..model.input_features)
+                .map(|_| 2.0 * rng.next_gaussian())
+                .collect();
+            let codes = quantize_input(model, &x);
+            packed.push_sample(&codes_to_bitvec(&codes, model.input_quant.bits));
+        }
+        let groups = packed.num_groups();
+        let no = sim_opt.num_outputs();
+        let mut out = vec![0u64; groups * no];
+        let n = batch_n as f64;
+
+        // Baseline: the pre-PR path — W=1 kernel, unoptimized netlist.
+        let mut kernels: Vec<Json> = Vec::new();
+        let mut scratch_raw = sim_raw.make_scratch();
+        let base = bench.run(&format!("{} W=1 unoptimized", model.name), || {
+            sim_raw.run_groups_capped(&packed, 0, groups, &mut scratch_raw, &mut out, 1)
+        });
+        kernels.push(kernel_row(1, false, &base, n));
+
+        let mut scratch = sim_opt.make_scratch();
+        let mut w4_ns = base.median_ns;
+        for width in [1usize, 2, 4, 8] {
+            let s = bench.run(&format!("{} W={width} optimized", model.name), || {
+                sim_opt.run_groups_capped(&packed, 0, groups, &mut scratch, &mut out, width)
+            });
+            if width == 4 {
+                w4_ns = s.median_ns;
+            }
+            kernels.push(kernel_row(width, true, &s, n));
+        }
+
+        let mut sharded: Vec<Json> = Vec::new();
+        let shared = std::sync::Arc::new(packed);
+        for workers in [1usize, 2, 4] {
+            let pool = ThreadPool::new(workers);
+            let mut runner = ShardRunner::new(&sim_opt);
+            let s = bench.run(&format!("{} sharded x{workers}", model.name), || {
+                runner.run(&sim_opt, &pool, &shared);
+            });
+            sharded.push(Json::obj([
+                ("workers", Json::int(workers as i64)),
+                ("ns_per_sample", Json::float(s.median_ns / n)),
+                ("samples_per_sec", Json::float(n * 1e9 / s.median_ns)),
+            ]));
+        }
+
+        let speedup = base.median_ns / w4_ns;
+        println!("  speedup W=4+optimizer vs W=1 unoptimized: {speedup:.2}x");
+        all_beat_baseline &= speedup >= 1.0;
+        let os = sim_opt.opt_stats();
+        model_rows.push(Json::obj([
+            ("name", Json::str(model.name.clone())),
+            ("inputs", Json::int(sim_opt.num_inputs() as i64)),
+            ("outputs", Json::int(no as i64)),
+            ("batch", Json::int(batch_n as i64)),
+            ("luts_pre_opt", Json::int(os.luts_before as i64)),
+            ("luts_post_opt", Json::int(os.luts_after as i64)),
+            ("kernels", Json::Arr(kernels)),
+            ("sharded", Json::Arr(sharded)),
+            ("speedup_w4_opt_vs_w1_unopt", Json::float(speedup)),
+        ]));
+    }
+    let doc = Json::obj([
+        ("schema", Json::str("nullanet-bench")),
+        ("version", Json::int(1)),
+        ("bench_id", Json::int(5)),
+        ("quick", Json::Bool(quick)),
+        ("models", Json::Arr(model_rows)),
+    ]);
+    std::fs::write(&out_path, format!("{}\n", doc.to_pretty_string()))
+        .map_err(|e| NnError::Config(format!("write {out_path}: {e}")))?;
+    println!("wrote {out_path}");
+    if !all_beat_baseline {
+        println!(
+            "warning: a W=4+optimizer kernel did not beat its W=1 unoptimized baseline"
+        );
+    }
     Ok(())
 }
 

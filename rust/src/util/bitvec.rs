@@ -276,13 +276,7 @@ impl PackedBatch {
     pub fn from_group_major_words(signals: usize, samples: usize, mut words: Vec<u64>) -> Self {
         let groups = samples.div_ceil(64);
         assert_eq!(words.len(), groups * signals, "word count must be groups × signals");
-        let rem = samples & 63;
-        if rem != 0 {
-            let mask = (1u64 << rem) - 1;
-            for w in &mut words[(groups - 1) * signals..] {
-                *w &= mask;
-            }
-        }
+        mask_group_tail(&mut words, signals, samples);
         PackedBatch { signals, samples, words }
     }
 
@@ -335,14 +329,64 @@ impl PackedBatch {
     /// extension of the word storage.
     pub fn push_sample(&mut self, bits: &BitVec) {
         assert_eq!(bits.len(), self.signals, "sample width must match signal count");
+        self.push_sample_words(bits.words());
+    }
+
+    /// Append one sample whose bits are already packed into a single `u64`
+    /// (LSB-first; the batch must pack ≤ 64 signals — the common case for
+    /// circuit inputs). Word-level: only the *set* bits are scattered into
+    /// the transposed storage, one `trailing_zeros` step each, instead of
+    /// one branch per signal. This is the batcher's flush fast path.
+    pub fn push_sample_word(&mut self, bits: u64) {
+        assert!(
+            self.signals <= 64,
+            "push_sample_word: batch packs {} signals (> 64); use push_sample_words",
+            self.signals
+        );
+        if self.signals < 64 {
+            debug_assert_eq!(bits >> self.signals, 0, "set bit past the signal count");
+        }
         let (g, lane) = (self.samples >> 6, self.samples & 63);
         if lane == 0 {
             self.words.resize((g + 1) * self.signals, 0);
         }
         self.samples += 1;
         let base = g * self.signals;
-        for (wi, &w) in bits.words().iter().enumerate() {
-            let mut w = w;
+        let mut w = bits;
+        while w != 0 {
+            let b = w.trailing_zeros() as usize;
+            self.words[base + b] |= 1 << lane;
+            w &= w - 1;
+        }
+    }
+
+    /// Multi-word generalization of [`PackedBatch::push_sample_word`]:
+    /// append one sample given as `signals.div_ceil(64)` LSB-first words
+    /// (bits at or beyond the signal count must be zero — the [`BitVec`]
+    /// tail invariant).
+    pub fn push_sample_words(&mut self, words: &[u64]) {
+        assert_eq!(
+            words.len(),
+            self.signals.div_ceil(64),
+            "push_sample_words: {} words for {} signals",
+            words.len(),
+            self.signals
+        );
+        if self.signals & 63 != 0 {
+            debug_assert_eq!(
+                words[words.len() - 1] >> (self.signals & 63),
+                0,
+                "set bit past the signal count"
+            );
+        }
+        let (g, lane) = (self.samples >> 6, self.samples & 63);
+        if lane == 0 {
+            self.words.resize((g + 1) * self.signals, 0);
+        }
+        self.samples += 1;
+        let base = g * self.signals;
+        for (wi, &word) in words.iter().enumerate() {
+            let mut w = word;
             while w != 0 {
                 let b = w.trailing_zeros() as usize;
                 self.words[base + (wi << 6) + b] |= 1 << lane;
@@ -364,6 +408,22 @@ impl PackedBatch {
             if v {
                 self.words[base + i] |= 1 << lane;
             }
+        }
+    }
+}
+
+/// Zero every lane at or beyond `samples` in the last group of a
+/// group-major word buffer (`signals` words per 64-sample group) — the one
+/// implementation of the tail-lane invariant, shared by
+/// [`PackedBatch::from_group_major_words`] and the simulator's reusable
+/// output buffers ([`crate::logic::sim`]).
+pub fn mask_group_tail(words: &mut [u64], signals: usize, samples: usize) {
+    let rem = samples & 63;
+    if rem != 0 && signals > 0 {
+        let mask = (1u64 << rem) - 1;
+        let groups = samples.div_ceil(64);
+        for w in &mut words[(groups - 1) * signals..] {
+            *w &= mask;
         }
     }
 }
@@ -501,6 +561,51 @@ mod tests {
                 assert_eq!(p.get(s, i), (s * 7 + i) % 3 == 0, "sample {s} signal {i}");
             }
         }
+    }
+
+    #[test]
+    fn push_sample_word_matches_bool_push() {
+        let mut a = PackedBatch::with_capacity(7, 130);
+        let mut b = PackedBatch::with_capacity(7, 130);
+        for s in 0..130usize {
+            let bits: Vec<bool> = (0..7).map(|i| (s * 5 + i) % 3 == 0).collect();
+            let word: u64 = bits
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| if v { 1u64 << i } else { 0 })
+                .sum();
+            a.push_sample_bools(&bits);
+            b.push_sample_word(word);
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn push_sample_words_handles_wide_samples() {
+        // 70 signals span two words per sample.
+        let mut a = PackedBatch::with_capacity(70, 80);
+        let mut b = PackedBatch::with_capacity(70, 80);
+        for s in 0..80usize {
+            let bits: Vec<bool> = (0..70).map(|i| (s + i) % 4 == 0).collect();
+            let v = BitVec::from_bools(bits.iter().copied());
+            a.push_sample_bools(&bits);
+            b.push_sample_words(v.words());
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "push_sample_word")]
+    fn push_sample_word_rejects_wide_batches() {
+        let mut p = PackedBatch::with_capacity(65, 1);
+        p.push_sample_word(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "push_sample_words")]
+    fn push_sample_words_rejects_wrong_word_count() {
+        let mut p = PackedBatch::with_capacity(70, 1);
+        p.push_sample_words(&[0u64]);
     }
 
     #[test]

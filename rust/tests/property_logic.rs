@@ -255,51 +255,71 @@ fn compiled_sim_agrees_with_interpreter() {
     );
 }
 
+/// Random netlist generator shared by the packed-path differential
+/// properties: arities 0–6, inputs drawn with replacement (duplicate input
+/// signals), occasional constant inputs, occasional exact duplicates of an
+/// earlier LUT (structural-dedup fodder), and LUTs no output reaches (dead
+/// logic). Returns the netlist plus a non-multiple-of-64/-W sample list.
+fn gen_packed_case(g: &mut Gen) -> (nullanet_tiny::logic::netlist::LutNetlist, Vec<u64>) {
+    use nullanet_tiny::logic::netlist::{LutNetlist, Sig};
+    let nin = g.sized_range(1, 10);
+    let nluts = g.sized_range(1, 24);
+    let mut nl = LutNetlist::new(nin);
+    for j in 0..nluts {
+        let navail = nin + j;
+        // Sometimes clone an earlier LUT verbatim: structural duplicates
+        // the compile-time optimizer must merge without changing behavior.
+        if j > 0 && g.rng.bernoulli(0.15) {
+            let src = g.rng.below(j as u64) as usize;
+            let (inputs, table) =
+                (nl.luts[src].inputs.clone(), nl.luts[src].table.clone());
+            nl.add_lut(inputs, table);
+            continue;
+        }
+        let k = g.rng.below(7) as usize; // arity 0..=6
+        let inputs: Vec<Sig> = (0..k)
+            .map(|_| {
+                // Constant inputs occur too: constant-folding fodder.
+                if g.rng.bernoulli(0.1) {
+                    return Sig::Const(g.rng.bernoulli(0.5));
+                }
+                let pick = g.rng.below(navail as u64) as usize;
+                if pick < nin {
+                    Sig::Input(pick as u32)
+                } else {
+                    Sig::Lut((pick - nin) as u32)
+                }
+            })
+            .collect();
+        let tt = TruthTable::from_fn(k, |_| g.rng.bernoulli(0.5));
+        nl.add_lut(inputs, tt);
+    }
+    // Only the first few LUTs feed outputs, so later ones are often dead.
+    for j in 0..nluts.min(4) {
+        nl.add_output(Sig::Lut(j as u32), j % 2 == 1);
+    }
+    nl.add_output(Sig::Input(0), true);
+    nl.add_output(Sig::Const(true), false);
+    let nsamples = g.sized_range(1, 700);
+    let mask = if nin == 64 { !0u64 } else { (1u64 << nin) - 1 };
+    let samples: Vec<u64> = (0..nsamples).map(|_| g.rng.next_u64() & mask).collect();
+    (nl, samples)
+}
+
 #[test]
 fn packed_multiworker_matches_reference_eval() {
     // Differential property for the packed serving path: random netlists
-    // with arities 0–6 (inputs drawn with replacement, so duplicate input
-    // signals occur regularly), non-multiple-of-64 batch sizes, evaluated
-    // with 1/2/4 workers sharing one Arc<CompiledNetlist> — every sample's
-    // packed output bits must equal the LutNetlist::eval reference.
-    use nullanet_tiny::logic::netlist::{LutNetlist, Sig};
+    // (duplicate LUTs, constant inputs, dead logic, arities 0–6),
+    // non-multiple-of-64 batch sizes, evaluated with 1/2/4 workers sharing
+    // one Arc<CompiledNetlist> — every sample's packed output bits must
+    // equal the LutNetlist::eval reference.
     use nullanet_tiny::logic::sim::CompiledNetlist;
     use nullanet_tiny::util::bitvec::PackedBatch;
     use nullanet_tiny::util::threadpool::ThreadPool;
     use std::sync::Arc;
     check_simple(
         "packed-multiworker",
-        |g| {
-            let nin = g.sized_range(1, 10);
-            let nluts = g.sized_range(1, 24);
-            let mut nl = LutNetlist::new(nin);
-            for j in 0..nluts {
-                let navail = nin + j;
-                let k = g.rng.below(7) as usize; // arity 0..=6
-                let inputs: Vec<Sig> = (0..k)
-                    .map(|_| {
-                        let pick = g.rng.below(navail as u64) as usize;
-                        if pick < nin {
-                            Sig::Input(pick as u32)
-                        } else {
-                            Sig::Lut((pick - nin) as u32)
-                        }
-                    })
-                    .collect();
-                let tt = TruthTable::from_fn(k, |_| g.rng.bernoulli(0.5));
-                nl.add_lut(inputs, tt);
-            }
-            for j in 0..nluts.min(4) {
-                nl.add_output(Sig::Lut(j as u32), j % 2 == 1);
-            }
-            nl.add_output(Sig::Input(0), true);
-            nl.add_output(Sig::Const(true), false);
-            let nsamples = g.sized_range(1, 300);
-            let mask = if nin == 64 { !0u64 } else { (1u64 << nin) - 1 };
-            let samples: Vec<u64> =
-                (0..nsamples).map(|_| g.rng.next_u64() & mask).collect();
-            (nl, samples)
-        },
+        gen_packed_case,
         |(nl, samples)| {
             let nin = nl.num_inputs;
             let mut packed = PackedBatch::with_capacity(nin, samples.len());
@@ -325,6 +345,101 @@ fn packed_multiworker_matches_reference_eval() {
                             return Err(format!(
                                 "mismatch at sample {s} output {j} with {workers} workers"
                             ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn optimizer_and_every_block_width_match_reference_eval() {
+    // ISSUE 5 differential property: the compile-time optimizer and every
+    // wide-lane kernel width must be bit-exact against LutNetlist::eval on
+    // netlists with duplicate LUTs, constant inputs, dead logic, and
+    // arities 0–6, over batch sizes that are multiples of neither 64 nor
+    // the block width, with the sharded runner reused across batches.
+    use nullanet_tiny::logic::opt::optimize;
+    use nullanet_tiny::logic::sim::{CompiledNetlist, ShardRunner};
+    use nullanet_tiny::util::bitvec::PackedBatch;
+    use nullanet_tiny::util::threadpool::ThreadPool;
+    use std::sync::Arc;
+    check_simple(
+        "optimizer-block-widths",
+        gen_packed_case,
+        |(nl, samples)| {
+            // The optimizer itself: equivalent, and its stats partition the
+            // removed LUTs.
+            let (opt_nl, stats) = optimize(nl);
+            if stats.luts_after != opt_nl.num_luts() {
+                return Err("stats.luts_after disagrees with the netlist".into());
+            }
+            if stats.removed() != stats.const_folded + stats.deduped + stats.dead_removed
+            {
+                return Err("optimizer passes must partition the removed LUTs".into());
+            }
+            for &bits in samples.iter().take(16) {
+                if opt_nl.eval(bits) != nl.eval(bits) {
+                    return Err(format!("optimized netlist differs at {bits:#x}"));
+                }
+            }
+
+            let nin = nl.num_inputs;
+            let mut packed = PackedBatch::with_capacity(nin, samples.len());
+            let mut bools = vec![false; nin];
+            for &bits in samples {
+                for (i, b) in bools.iter_mut().enumerate() {
+                    *b = (bits >> i) & 1 == 1;
+                }
+                packed.push_sample_bools(&bools);
+            }
+            let groups = packed.num_groups();
+
+            // Every block width × {optimized, unoptimized} compile.
+            for (label, sim) in [
+                ("optimized", CompiledNetlist::compile(nl)),
+                ("unoptimized", CompiledNetlist::compile_unoptimized(nl)),
+            ] {
+                let no = sim.num_outputs();
+                let mut scratch = sim.make_scratch();
+                for cap in [1usize, 2, 4, 8] {
+                    let mut out = vec![0u64; groups * no];
+                    sim.run_groups_capped(&packed, 0, groups, &mut scratch, &mut out, cap);
+                    for (s, &bits) in samples.iter().enumerate() {
+                        let want = nl.eval(bits);
+                        for (j, &w) in want.iter().enumerate() {
+                            let got = (out[(s >> 6) * no + j] >> (s & 63)) & 1 == 1;
+                            if got != w {
+                                return Err(format!(
+                                    "{label} W≤{cap}: mismatch at sample {s} output {j}"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+
+            // Sharded runner, reused across two batches (1/2/4 workers).
+            let sim = Arc::new(CompiledNetlist::compile(nl));
+            let batch = Arc::new(packed);
+            let no = sim.num_outputs();
+            for workers in [1usize, 2, 4] {
+                let pool = ThreadPool::new(workers);
+                let mut runner = ShardRunner::new(&sim);
+                for round in 0..2 {
+                    let words = runner.run(&sim, &pool, &batch);
+                    for (s, &bits) in samples.iter().enumerate() {
+                        let want = nl.eval(bits);
+                        for (j, &w) in want.iter().enumerate() {
+                            let got = (words[(s >> 6) * no + j] >> (s & 63)) & 1 == 1;
+                            if got != w {
+                                return Err(format!(
+                                    "sharded ×{workers} round {round}: mismatch at \
+                                     sample {s} output {j}"
+                                ));
+                            }
                         }
                     }
                 }
