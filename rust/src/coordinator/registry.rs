@@ -206,6 +206,10 @@ impl ModelRegistry {
         circuit: crate::logic::netlist::PipelinedCircuit,
         source: String,
     ) -> Result<(), NnError> {
+        // Artifact loads already lint on parse; this re-check also covers
+        // circuits handed in directly (flow output, tests), so nothing
+        // structurally unsound can ever be installed behind a route.
+        crate::logic::check::lint_circuit(&circuit)?;
         let router = RouterBuilder::new(model)
             .circuit(circuit.netlist)
             .engine(Policy::Logic)
@@ -496,6 +500,21 @@ mod tests {
         let err = reg.classify(Some("a"), &[0.0; 4]).unwrap_err();
         assert!(err.to_string().contains("expected 5"), "{err}");
         reg.shutdown_all();
+    }
+
+    #[test]
+    fn install_rejects_a_structurally_unsound_circuit() {
+        let a = random_model("a", 5, &[4, 3], 2, 1, 3);
+        let r = run_flow(&a, &FlowConfig { jobs: 1, ..Default::default() }, None)
+            .unwrap();
+        let mut circuit = r.circuit;
+        circuit.num_stages = 0; // tamper: no pipeline stages
+        let reg = ModelRegistry::new(RegistryConfig::default());
+        let err = reg
+            .build_and_install("a", a, circuit, "test".into())
+            .unwrap_err();
+        assert!(matches!(err, NnError::Check(_)), "{err}");
+        assert!(reg.is_empty());
     }
 
     #[test]

@@ -9,6 +9,7 @@ use std::fmt;
 
 use crate::coordinator::engine::EngineError;
 use crate::flow::artifact::ArtifactError;
+use crate::logic::check::CheckError;
 use crate::runtime::pjrt::RuntimeError;
 
 /// Top-level error of the NullaNet Tiny crate.
@@ -25,6 +26,9 @@ pub enum NnError {
     Engine(EngineError),
     /// Compiled-circuit artifact I/O, format, or fingerprint failure.
     Artifact(ArtifactError),
+    /// Structural or equivalence check failure (lint / CEC) — the netlist
+    /// would miscompute if used.
+    Check(CheckError),
     /// Command-line / configuration error.
     Config(String),
 }
@@ -37,6 +41,7 @@ impl fmt::Display for NnError {
             NnError::Runtime(e) => write!(f, "runtime: {e}"),
             NnError::Engine(e) => write!(f, "engine: {e}"),
             NnError::Artifact(e) => write!(f, "artifact: {e}"),
+            NnError::Check(e) => write!(f, "check: {e}"),
             NnError::Config(m) => write!(f, "{m}"),
         }
     }
@@ -48,6 +53,7 @@ impl std::error::Error for NnError {
             NnError::Runtime(e) => Some(e),
             NnError::Engine(e) => Some(e),
             NnError::Artifact(e) => Some(e),
+            NnError::Check(e) => Some(e),
             _ => None,
         }
     }
@@ -73,7 +79,19 @@ impl From<EngineError> for NnError {
 
 impl From<ArtifactError> for NnError {
     fn from(e: ArtifactError) -> NnError {
-        NnError::Artifact(e)
+        // A lint failure detected while loading an artifact is a check
+        // failure first — surface it as such so callers can match on it
+        // regardless of which gate caught the malformed netlist.
+        match e {
+            ArtifactError::Check(c) => NnError::Check(c),
+            other => NnError::Artifact(other),
+        }
+    }
+}
+
+impl From<CheckError> for NnError {
+    fn from(e: CheckError) -> NnError {
+        NnError::Check(e)
     }
 }
 
@@ -103,5 +121,15 @@ mod tests {
         assert!(matches!(e, NnError::Data(_)));
         let e: NnError = EngineError::Unsupported("shape".into()).into();
         assert!(matches!(e, NnError::Engine(_)));
+    }
+
+    #[test]
+    fn artifact_check_failures_surface_as_check() {
+        let c = CheckError::Stage("zero stages".into());
+        let e: NnError = ArtifactError::Check(c.clone()).into();
+        assert!(matches!(e, NnError::Check(_)));
+        assert!(e.to_string().starts_with("check: "));
+        let e: NnError = c.into();
+        assert!(matches!(e, NnError::Check(_)));
     }
 }

@@ -65,6 +65,11 @@ pub enum ArtifactError {
     FingerprintMismatch { expected: String, found: String },
     /// Structurally invalid circuit (fields, topology, stages, widths).
     Invalid(String),
+    /// The parsed circuit failed the structural lint
+    /// ([`crate::logic::check::lint_circuit`]) — it would miscompute if
+    /// served. `From<ArtifactError> for NnError` surfaces this as
+    /// `NnError::Check`.
+    Check(crate::logic::check::CheckError),
 }
 
 impl fmt::Display for ArtifactError {
@@ -83,6 +88,7 @@ impl fmt::Display for ArtifactError {
                  (fingerprint {found}, model is {expected})"
             ),
             ArtifactError::Invalid(m) => write!(f, "invalid circuit: {m}"),
+            ArtifactError::Check(e) => write!(f, "circuit failed structural lint: {e}"),
         }
     }
 }
@@ -300,7 +306,11 @@ pub fn circuit_from_json(j: &Json, model: &Model) -> Result<PipelinedCircuit, Ar
     }
 
     let circuit = PipelinedCircuit { netlist: nl, stage_of_lut: stages, num_stages };
-    circuit.check_stages().map_err(ArtifactError::Invalid)?;
+    // Full structural lint — cycles, dangling signals, arity/table widths,
+    // stage soundness. The field-level checks above catch malformed JSON;
+    // this catches well-formed JSON describing a circuit that would
+    // miscompute.
+    crate::logic::check::lint_circuit(&circuit).map_err(ArtifactError::Check)?;
     Ok(circuit)
 }
 
@@ -482,6 +492,22 @@ mod tests {
         o.insert("model_spec".into(), other.to_json());
         let err = bundle_from_json(&Json::Obj(o)).unwrap_err();
         assert!(matches!(err, ArtifactError::FingerprintMismatch { .. }), "{err}");
+    }
+
+    #[test]
+    fn lint_failing_artifact_is_a_check_error() {
+        // Field-level parsing succeeds (every value well-typed and in
+        // range), but the described circuit is unservable: zero pipeline
+        // stages. The structural lint must reject it as a typed Check
+        // error, which `NnError::from` surfaces as `NnError::Check`.
+        let (m, circuit) = flow_circuit(29);
+        let j = circuit_to_json(&circuit, &m);
+        let Json::Obj(mut o) = j else { panic!() };
+        o.insert("num_stages".into(), Json::int(0));
+        let err = circuit_from_json(&Json::Obj(o), &m).unwrap_err();
+        assert!(matches!(err, ArtifactError::Check(_)), "{err}");
+        let top: crate::NnError = err.into();
+        assert!(matches!(top, crate::NnError::Check(_)), "{top}");
     }
 
     #[test]

@@ -122,6 +122,7 @@ pub fn run_flow(
         ..Default::default()
     };
     let mut layer_netlists: Vec<LutNetlist> = Vec::with_capacity(model.layers.len());
+    let mut preopt_netlists: Vec<LutNetlist> = Vec::new();
     let mut opt_total = OptStats::default();
     timer.time("aig+map", || {
         for (l, layer) in model.layers.iter().enumerate() {
@@ -176,9 +177,45 @@ pub fn run_flow(
             // and emitted netlist shrinks, not just the serving engine.
             let (optimized, ostats) = opt::optimize(&mapped.netlist);
             opt_total.absorb(&ostats);
+            if config.verify {
+                preopt_netlists.push(mapped.netlist);
+            }
             layer_netlists.push(optimized);
         }
     });
+
+    // ---- SAT proof that the optimizer preserved each layer ----
+    // The sampled/exhaustive differential checks below only cover the final
+    // stitched circuit; this proves every `opt::optimize` output equivalent
+    // to its pre-optimization input at full input width.
+    if config.verify {
+        timer
+            .time("verify-opt-cec", || -> Result<(), String> {
+                for (l, (pre, post)) in
+                    preopt_netlists.iter().zip(&layer_netlists).enumerate()
+                {
+                    match crate::logic::cec::check_netlists(pre, post) {
+                        Ok(crate::logic::cec::CecResult::Equivalent) => {}
+                        Ok(crate::logic::cec::CecResult::Inequivalent {
+                            assignment,
+                            output,
+                        }) => {
+                            let bits: String = assignment
+                                .iter()
+                                .map(|&b| if b { '1' } else { '0' })
+                                .collect();
+                            return Err(format!(
+                                "layer {l}: optimizer changed output {output} \
+                                 (witness inputs, bit 0 first: {bits})"
+                            ));
+                        }
+                        Err(e) => return Err(format!("layer {l}: cec: {e}")),
+                    }
+                }
+                Ok(())
+            })
+            .map_err(NnError::Flow)?;
+    }
 
     // ---- stitch layers into one pipelined circuit ----
     let (flat, stages) = timer.time("stitch", || stitch_layers(model, &layer_netlists));

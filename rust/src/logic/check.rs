@@ -1,0 +1,288 @@
+//! Structural lint for netlists, pipelined circuits, and compiled streams.
+//!
+//! The circuit *is* the program, so a malformed netlist — a combinational
+//! cycle, a dangling signal reference, a truth table narrower than its
+//! fanin — does not crash, it silently miscomputes. This module is the
+//! first tier of the verification ladder (see `rust/DESIGN.md`
+//! §Verification tiers): cheap, total, and run everywhere a netlist enters
+//! the system — inside [`crate::logic::sim::CompiledNetlist::compile`]
+//! (debug builds), on every artifact load ([`crate::flow::artifact`]), and
+//! before every [`crate::coordinator::registry::ModelRegistry`] install —
+//! so spliced or hand-edited bundles are rejected with a typed error
+//! instead of being served.
+
+use std::fmt;
+
+use crate::logic::netlist::{LutNetlist, PipelinedCircuit, Sig};
+
+/// Typed structural-check failure, surfaced as `NnError::Check`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CheckError {
+    /// Two netlists compared for equivalence have different I/O shapes.
+    SignatureMismatch {
+        /// Primary-input counts of the two sides.
+        inputs: (usize, usize),
+        /// Output counts of the two sides.
+        outputs: (usize, usize),
+    },
+    /// An exhaustive comparison was asked to enumerate too wide an input
+    /// space.
+    TooManyInputs {
+        /// Primary-input count of the offending netlist.
+        num_inputs: usize,
+        /// Enumeration limit.
+        limit: usize,
+    },
+    /// A LUT input references a signal that does not exist (dangling).
+    Undriven {
+        /// Index of the reading LUT.
+        lut: usize,
+        /// Input position within that LUT.
+        pos: usize,
+        /// Description of the missing signal.
+        signal: String,
+    },
+    /// A LUT reads itself or a later LUT — a combinational cycle in the
+    /// topologically-indexed representation.
+    Cycle {
+        /// Index of the reading LUT.
+        lut: usize,
+        /// Input position within that LUT.
+        pos: usize,
+        /// Index of the referenced (not-yet-defined) LUT.
+        referenced: usize,
+    },
+    /// LUT fanin exceeds the fabric bound.
+    Arity {
+        /// Index of the offending LUT.
+        lut: usize,
+        /// Its fanin.
+        arity: usize,
+        /// Maximum allowed fanin.
+        max: usize,
+    },
+    /// Truth-table variable count does not match the LUT's fanin.
+    TableWidth {
+        /// Index of the offending LUT.
+        lut: usize,
+        /// Variables in the truth table.
+        table_vars: usize,
+        /// Declared fanin.
+        fanin: usize,
+    },
+    /// A primary output references a missing signal.
+    BadOutput {
+        /// Output index.
+        index: usize,
+        /// Description of the missing signal.
+        signal: String,
+    },
+    /// Pipeline stage assignment is malformed (length, range, or a
+    /// backward edge).
+    Stage(String),
+    /// Compiled instruction stream violates schedule soundness (a LUT reads
+    /// a slot written later, a slot is written twice, codes out of range).
+    Schedule(String),
+}
+
+impl fmt::Display for CheckError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckError::SignatureMismatch { inputs, outputs } => write!(
+                f,
+                "netlist signatures differ: {} vs {} inputs, {} vs {} outputs",
+                inputs.0, inputs.1, outputs.0, outputs.1
+            ),
+            CheckError::TooManyInputs { num_inputs, limit } => {
+                write!(f, "{num_inputs} inputs exceed the exhaustive-check limit of {limit}")
+            }
+            CheckError::Undriven { lut, pos, signal } => {
+                write!(f, "LUT {lut} input {pos} reads undriven signal {signal}")
+            }
+            CheckError::Cycle { lut, pos, referenced } => write!(
+                f,
+                "LUT {lut} input {pos} reads LUT {referenced} at or after its own position \
+                 (combinational cycle)"
+            ),
+            CheckError::Arity { lut, arity, max } => {
+                write!(f, "LUT {lut} has fanin {arity}, above the bound of {max}")
+            }
+            CheckError::TableWidth { lut, table_vars, fanin } => write!(
+                f,
+                "LUT {lut} truth table covers {table_vars} variables but the LUT has fanin {fanin}"
+            ),
+            CheckError::BadOutput { index, signal } => {
+                write!(f, "output {index} reads undriven signal {signal}")
+            }
+            CheckError::Stage(msg) => write!(f, "stage assignment: {msg}"),
+            CheckError::Schedule(msg) => write!(f, "compiled schedule: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckError {}
+
+fn check_sig(sig: Sig, num_inputs: usize, defined_luts: usize) -> Result<(), String> {
+    match sig {
+        Sig::Const(_) => Ok(()),
+        Sig::Input(i) => {
+            if (i as usize) < num_inputs {
+                Ok(())
+            } else {
+                Err(format!("input {i} (netlist has {num_inputs} inputs)"))
+            }
+        }
+        Sig::Lut(j) => {
+            if (j as usize) < defined_luts {
+                Ok(())
+            } else {
+                Err(format!("LUT {j} (only {defined_luts} defined)"))
+            }
+        }
+    }
+}
+
+/// Lint a netlist: every LUT reads only constants, primary inputs, or
+/// strictly earlier LUTs (no combinational cycles, no dangling references),
+/// fanin is at most `max_arity`, each truth table covers exactly its LUT's
+/// fanin, and every output reads a driven signal.
+///
+/// `max_arity` is 6 for mapped/compiled fabrics; pre-mapping netlists may
+/// pass [`crate::logic::truthtable::TruthTable::MAX_VARS`].
+pub fn lint_netlist(nl: &LutNetlist, max_arity: usize) -> Result<(), CheckError> {
+    for (j, lut) in nl.luts.iter().enumerate() {
+        if lut.arity() > max_arity {
+            return Err(CheckError::Arity { lut: j, arity: lut.arity(), max: max_arity });
+        }
+        if lut.table.nvars() != lut.arity() {
+            return Err(CheckError::TableWidth {
+                lut: j,
+                table_vars: lut.table.nvars(),
+                fanin: lut.arity(),
+            });
+        }
+        for (pos, &sig) in lut.inputs.iter().enumerate() {
+            if let Sig::Lut(i) = sig {
+                // A reference to an existing-but-not-earlier LUT is a cycle;
+                // anything past the end of the array is dangling.
+                if (i as usize) >= j && (i as usize) < nl.luts.len() {
+                    return Err(CheckError::Cycle { lut: j, pos, referenced: i as usize });
+                }
+            }
+            if let Err(signal) = check_sig(sig, nl.num_inputs, nl.luts.len()) {
+                return Err(CheckError::Undriven { lut: j, pos, signal });
+            }
+        }
+    }
+    for (index, &(sig, _inverted)) in nl.outputs.iter().enumerate() {
+        if let Err(signal) = check_sig(sig, nl.num_inputs, nl.luts.len()) {
+            return Err(CheckError::BadOutput { index, signal });
+        }
+    }
+    Ok(())
+}
+
+/// Lint a pipelined circuit: the mapped netlist (6-LUT fabric) plus the
+/// stage assignment — length, range, and edge monotonicity.
+pub fn lint_circuit(c: &PipelinedCircuit) -> Result<(), CheckError> {
+    lint_netlist(&c.netlist, 6)?;
+    if c.num_stages == 0 {
+        return Err(CheckError::Stage("circuit declares zero pipeline stages".into()));
+    }
+    c.check_stages().map_err(CheckError::Stage)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::netlist::Lut;
+    use crate::logic::truthtable::TruthTable;
+
+    fn and2() -> TruthTable {
+        TruthTable::from_fn(2, |m| m == 3)
+    }
+
+    fn good_netlist() -> LutNetlist {
+        let mut nl = LutNetlist::new(2);
+        let a = nl.add_lut(vec![Sig::Input(0), Sig::Input(1)], and2());
+        nl.add_output(a, false);
+        nl
+    }
+
+    #[test]
+    fn well_formed_netlist_passes() {
+        assert_eq!(lint_netlist(&good_netlist(), 6), Ok(()));
+    }
+
+    #[test]
+    fn self_reference_is_a_cycle() {
+        let mut nl = good_netlist();
+        nl.luts[0].inputs[1] = Sig::Lut(0);
+        assert!(matches!(
+            lint_netlist(&nl, 6),
+            Err(CheckError::Cycle { lut: 0, pos: 1, referenced: 0 })
+        ));
+    }
+
+    #[test]
+    fn dangling_lut_reference_is_undriven() {
+        let mut nl = good_netlist();
+        nl.luts[0].inputs[0] = Sig::Lut(9);
+        assert!(matches!(lint_netlist(&nl, 6), Err(CheckError::Undriven { lut: 0, pos: 0, .. })));
+    }
+
+    #[test]
+    fn out_of_range_input_is_undriven() {
+        let mut nl = good_netlist();
+        nl.luts[0].inputs[0] = Sig::Input(7);
+        assert!(matches!(lint_netlist(&nl, 6), Err(CheckError::Undriven { .. })));
+    }
+
+    #[test]
+    fn arity_bound_is_enforced() {
+        let mut nl = LutNetlist::new(8);
+        let inputs: Vec<Sig> = (0..7).map(Sig::Input).collect();
+        nl.luts.push(Lut { inputs, table: TruthTable::from_fn(7, |_| false) });
+        nl.add_output(Sig::Lut(0), false);
+        assert!(matches!(lint_netlist(&nl, 6), Err(CheckError::Arity { lut: 0, arity: 7, max: 6 })));
+        assert_eq!(lint_netlist(&nl, 7), Ok(()));
+    }
+
+    #[test]
+    fn table_width_mismatch_is_caught() {
+        let mut nl = good_netlist();
+        nl.luts[0].table = TruthTable::from_fn(3, |_| true);
+        assert!(matches!(
+            lint_netlist(&nl, 6),
+            Err(CheckError::TableWidth { lut: 0, table_vars: 3, fanin: 2 })
+        ));
+    }
+
+    #[test]
+    fn bad_output_is_caught() {
+        let mut nl = good_netlist();
+        nl.outputs[0] = (Sig::Lut(4), true);
+        assert!(matches!(lint_netlist(&nl, 6), Err(CheckError::BadOutput { index: 0, .. })));
+    }
+
+    #[test]
+    fn circuit_lint_covers_stages() {
+        let nl = good_netlist();
+        let good = PipelinedCircuit::single_stage(nl.clone());
+        assert_eq!(lint_circuit(&good), Ok(()));
+
+        let short = PipelinedCircuit { netlist: nl.clone(), stage_of_lut: vec![], num_stages: 1 };
+        assert!(matches!(lint_circuit(&short), Err(CheckError::Stage(_))));
+
+        let zero = PipelinedCircuit { netlist: nl, stage_of_lut: vec![0], num_stages: 0 };
+        assert!(matches!(lint_circuit(&zero), Err(CheckError::Stage(_))));
+    }
+
+    #[test]
+    fn errors_display_cleanly() {
+        let e = CheckError::Cycle { lut: 3, pos: 1, referenced: 5 };
+        assert!(e.to_string().contains("combinational cycle"));
+        let e = CheckError::SignatureMismatch { inputs: (2, 3), outputs: (1, 1) };
+        assert!(e.to_string().contains("2 vs 3"));
+    }
+}

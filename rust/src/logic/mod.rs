@@ -13,11 +13,17 @@
 //! * [`opt`] — compile-time netlist optimizer (fold / dedup / dead sweep)
 //! * [`retime`] — min-period retiming (Leiserson–Saxe)
 //! * [`sim`] — wide-lane bit-parallel netlist simulation
+//! * [`check`] — structural lint: cycles, dangling signals, arity/table
+//!   width, stage and schedule soundness
 //! * [`verify`] — exhaustive + sampled equivalence checking
+//! * [`cec`] — SAT-based combinational equivalence proofs (miter over
+//!   [`crate::util::sat`])
 //! * [`blif`] / [`verilog`] — interchange emitters for real FPGA tools
 
 pub mod aig;
 pub mod blif;
+pub mod cec;
+pub mod check;
 pub mod cube;
 pub mod espresso;
 pub mod mapper;

@@ -269,9 +269,9 @@ mod tests {
     }
 
     fn assert_equivalent(a: &LutNetlist, b: &LutNetlist) {
-        match exhaustive_netlists(a, b) {
+        match exhaustive_netlists(a, b).expect("same signature by construction") {
             EquivResult::Equivalent => {}
-            EquivResult::Mismatch { input_bits, got, want } => {
+            EquivResult::Mismatch { input_bits, got, want, .. } => {
                 panic!("optimizer changed the function at {input_bits:#b}: {got:?} vs {want:?}")
             }
         }

@@ -35,6 +35,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::logic::check::CheckError;
 use crate::logic::netlist::{LutNetlist, Sig};
 use crate::logic::opt::OptStats;
 use crate::util::bitvec::{mask_group_tail, PackedBatch};
@@ -201,7 +202,7 @@ impl CompiledNetlist {
             s_dest.push(2 + ni as u32 + j);
         }
         let outputs = nl.outputs.iter().map(|(s, inv)| (code_of(s), *inv)).collect();
-        CompiledNetlist {
+        let compiled = CompiledNetlist {
             id: NEXT_SIM_ID.fetch_add(1, Ordering::Relaxed),
             num_inputs: ni,
             num_luts: nl.luts.len(),
@@ -211,7 +212,104 @@ impl CompiledNetlist {
             s_dest,
             s_inputs,
             opt,
+        };
+        // Debug builds gate every compile behind the structural lint: the
+        // source netlist (which `pub` fields allow constructing without
+        // `add_lut`'s ordering asserts) and the schedule just emitted.
+        #[cfg(debug_assertions)]
+        {
+            crate::logic::check::lint_netlist(nl, 6)
+                .and_then(|()| compiled.lint())
+                .expect("CompiledNetlist::compile produced or received an unsound netlist");
         }
+        compiled
+    }
+
+    /// Structural lint of the compiled instruction stream: runs must tile
+    /// the stream contiguously with arity ≤ 6, every instruction may only
+    /// read slots written earlier in the schedule (or constants/inputs),
+    /// every destination slot is written exactly once (no scratch-slot
+    /// aliasing), packed truth tables carry no bits beyond `2^arity`, and
+    /// outputs read driven slots. Runs automatically in debug compiles and
+    /// on demand from `nullanet check`.
+    pub fn lint(&self) -> Result<(), CheckError> {
+        let fail = |m: String| Err(CheckError::Schedule(m));
+        let slots = self.slots();
+        let ni = self.num_inputs;
+        let total: usize = self.runs.iter().map(|r| r.count as usize).sum();
+        if total != self.num_luts || self.s_dest.len() != total || self.s_tables.len() != total
+        {
+            return fail(format!(
+                "runs cover {total} instructions but the stream has {} dests, {} tables, \
+                 {} LUTs",
+                self.s_dest.len(),
+                self.s_tables.len(),
+                self.num_luts
+            ));
+        }
+        let mut pos = 0usize;
+        let mut inp = 0usize;
+        for (ri, r) in self.runs.iter().enumerate() {
+            if r.arity > 6 {
+                return fail(format!("run {ri} has arity {} (fabric is k ≤ 6)", r.arity));
+            }
+            if r.start as usize != pos || r.input_start as usize != inp {
+                return fail(format!("run {ri} does not tile the stream contiguously"));
+            }
+            pos += r.count as usize;
+            inp += (r.count * r.arity) as usize;
+        }
+        if inp != self.s_inputs.len() {
+            return fail(format!(
+                "runs consume {inp} input codes, stream has {}",
+                self.s_inputs.len()
+            ));
+        }
+        // Single-assignment schedule walk: consts and inputs are pre-driven.
+        let mut written = vec![false; slots];
+        for w in written.iter_mut().take(2 + ni) {
+            *w = true;
+        }
+        let mut inp = 0usize;
+        for r in &self.runs {
+            for i in r.start as usize..(r.start + r.count) as usize {
+                for _ in 0..r.arity {
+                    let c = self.s_inputs[inp] as usize;
+                    inp += 1;
+                    if c >= slots {
+                        return fail(format!("instruction {i} reads out-of-range slot {c}"));
+                    }
+                    if !written[c] {
+                        return fail(format!(
+                            "instruction {i} reads slot {c} before the schedule writes it"
+                        ));
+                    }
+                }
+                let d = self.s_dest[i] as usize;
+                if d < 2 + ni || d >= slots {
+                    return fail(format!("instruction {i} writes non-LUT slot {d}"));
+                }
+                if written[d] {
+                    return fail(format!(
+                        "instruction {i} rewrites slot {d} (scratch-slot aliasing)"
+                    ));
+                }
+                written[d] = true;
+                if r.arity < 6 && self.s_tables[i] >> (1u32 << r.arity) != 0 {
+                    return fail(format!(
+                        "instruction {i} truth table has bits beyond 2^{}",
+                        r.arity
+                    ));
+                }
+            }
+        }
+        for (oi, &(code, _)) in self.outputs.iter().enumerate() {
+            let c = code as usize;
+            if c >= slots || !written[c] {
+                return fail(format!("output {oi} reads undriven slot {c}"));
+            }
+        }
+        Ok(())
     }
 
     /// Number of primary inputs.
@@ -563,7 +661,15 @@ impl ScratchPool {
 /// a barrier (see [`ShardRunner::run`]).
 #[derive(Clone, Copy)]
 struct SendPtr(*mut u64);
+// SAFETY: the pointer is only dereferenced inside `ShardRunner::run`'s shard
+// jobs, each of which carves out a word range disjoint from every other
+// shard's (asserted there before spawning), and the pointee buffer outlives
+// the jobs because `par_map` blocks until all of them finish while `self`
+// keeps the buffer borrowed. Sending the raw pointer across threads is
+// therefore no more than sending the (unique) range each job writes.
 unsafe impl Send for SendPtr {}
+// SAFETY: shard jobs never write overlapping ranges (see above), so shared
+// references to the wrapper across threads cannot race.
 unsafe impl Sync for SendPtr {}
 
 /// Persistent state for the sharded serving path: a [`ScratchPool`] of
@@ -617,18 +723,28 @@ impl ShardRunner {
                 .map(|i| (i * per, ((i + 1) * per).min(groups)))
                 .filter(|&(a, b)| a < b)
                 .collect();
+            // The disjointness invariant the raw-pointer writes below rely
+            // on: shard ranges must tile `[0, groups)` contiguously with no
+            // overlap and no gap.
+            debug_assert!(!ranges.is_empty() && ranges[0].0 == 0);
+            debug_assert_eq!(ranges.last().unwrap().1, groups);
+            debug_assert!(
+                ranges.windows(2).all(|w| w[0].1 == w[1].0),
+                "shard ranges must be non-overlapping and contiguous: {ranges:?}"
+            );
             let base = SendPtr(self.out.as_mut_ptr());
             let sim2 = Arc::clone(sim);
             let shared = Arc::clone(batch);
             let scratches = Arc::clone(&self.scratches);
-            // SAFETY: every shard writes the disjoint word range
-            // `[g0*no, g1*no)` of the buffer behind `base`; the ranges
-            // partition `[0, groups*no)`. `par_map` does not return until
-            // every job has finished (its remaining-counter barrier), and
-            // `self` is mutably borrowed for this whole call, so the buffer
-            // is neither read, resized, moved, nor dropped while any shard
-            // holds the pointer.
             let _: Vec<()> = pool.par_map(ranges, move |(g0, g1)| {
+                // SAFETY: this shard writes only the word range
+                // `[g0*no, g1*no)` of the buffer behind `base`; the ranges
+                // partition `[0, groups*no)` (asserted above), so no two
+                // shards alias. `par_map` does not return until every job
+                // has finished (its remaining-counter barrier), and `self`
+                // is mutably borrowed for this whole call, so the buffer is
+                // neither read, resized, moved, nor dropped while any shard
+                // holds the pointer.
                 let dst = unsafe {
                     std::slice::from_raw_parts_mut(base.0.add(g0 * no), (g1 - g0) * no)
                 };
@@ -683,6 +799,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // large batches; the small shard smoke covers Miri
     fn compiled_matches_reference_simulation() {
         for seed in 0..10u64 {
             let nl = random_netlist(seed, 8, 20);
@@ -698,6 +815,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // large batches; the small shard smoke covers Miri
     fn unoptimized_compile_matches_optimized() {
         for seed in 0..10u64 {
             let nl = random_netlist(seed ^ 0xAB, 7, 24);
@@ -744,6 +862,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // large batches; the small shard smoke covers Miri
     fn run_batch_roundtrip() {
         let nl = random_netlist(77, 6, 15);
         let c = CompiledNetlist::compile(&nl);
@@ -808,6 +927,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // large batches; the small shard smoke covers Miri
     fn run_packed_matches_run_batch() {
         let nl = random_netlist(5, 7, 18);
         let c = CompiledNetlist::compile(&nl);
@@ -832,6 +952,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // large batches; the small shard smoke covers Miri
     fn every_block_width_matches_reference_eval() {
         // 520 samples = 9 lane groups: exercises the 8-, 4-, 2-, and
         // 1-group block paths in one run for every width cap.
@@ -860,6 +981,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // large batches; the small shard smoke covers Miri
     fn run_packed_into_reuses_the_buffer() {
         let nl = random_netlist(13, 6, 20);
         let c = CompiledNetlist::compile(&nl);
@@ -881,6 +1003,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // large batches; the small shard smoke covers Miri
     fn sharded_matches_inline_across_worker_counts() {
         let nl = random_netlist(11, 6, 22);
         let c = Arc::new(CompiledNetlist::compile(&nl));
@@ -903,6 +1026,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // large batches; the small shard smoke covers Miri
     fn shard_runner_is_allocation_stable_across_batches() {
         let nl = random_netlist(17, 8, 30);
         let c = Arc::new(CompiledNetlist::compile(&nl));
@@ -950,5 +1074,73 @@ mod tests {
         let mut scratch = b.make_scratch();
         let mut out = vec![0u64; a.num_outputs()];
         a.run_words(&mut scratch, &[0u64; 6], &mut out);
+    }
+
+    #[test]
+    fn sharded_smoke_exercises_raw_pointer_path() {
+        // Small enough to run under Miri, which is what sanitizer-checks
+        // the SendPtr disjoint-write invariant on every CI run.
+        let nl = random_netlist(41, 5, 8);
+        let c = Arc::new(CompiledNetlist::compile(&nl));
+        let mut rng = Xoshiro256::new(19);
+        let mut packed = PackedBatch::with_capacity(5, 130);
+        let samples: Vec<u64> = (0..130).map(|_| rng.next_u64() & 0x1F).collect();
+        for &bits in &samples {
+            packed.push_sample_word(bits);
+        }
+        let batch = Arc::new(packed);
+        let pool = ThreadPool::new(2);
+        let mut runner = ShardRunner::new(&c);
+        let out = runner.run(&c, &pool, &batch);
+        let no = c.num_outputs();
+        for (s, &bits) in samples.iter().enumerate() {
+            let want = nl.eval(bits);
+            for (j, &w) in want.iter().enumerate() {
+                let got = (out[(s >> 6) * no + j] >> (s & 63)) & 1 == 1;
+                assert_eq!(got, w, "sample={s} output={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_stream_passes_its_own_lint() {
+        for seed in [1u64, 9, 23] {
+            let c = CompiledNetlist::compile(&random_netlist(seed, 7, 18));
+            assert_eq!(c.lint(), Ok(()));
+        }
+    }
+
+    #[test]
+    fn lint_catches_a_tampered_schedule() {
+        let nl = random_netlist(6, 6, 12);
+        // Skip the optimizer so the stream shape is exactly the 12
+        // constructed LUTs (all arity 1..=5): the tampers below need at
+        // least two instructions, a sub-6 run, and a non-empty input list.
+        let mut c = CompiledNetlist::compile_unoptimized(&nl);
+
+        // Read-before-write: point an input code at the last dest slot.
+        let last_dest = *c.s_dest.last().unwrap();
+        let orig = c.s_inputs[0];
+        c.s_inputs[0] = last_dest;
+        assert!(matches!(c.lint(), Err(CheckError::Schedule(_))));
+        c.s_inputs[0] = orig;
+        assert_eq!(c.lint(), Ok(()));
+
+        // Scratch-slot aliasing: two instructions writing one slot.
+        let first_dest = c.s_dest[0];
+        let orig = *c.s_dest.last().unwrap();
+        *c.s_dest.last_mut().unwrap() = first_dest;
+        assert!(matches!(c.lint(), Err(CheckError::Schedule(_))));
+        *c.s_dest.last_mut().unwrap() = orig;
+
+        // Truth table wider than the instruction's arity.
+        let narrow = c
+            .runs
+            .iter()
+            .find(|r| r.arity < 6)
+            .map(|r| r.start as usize)
+            .expect("random netlist has a sub-6 arity run");
+        c.s_tables[narrow] |= 1u64 << 63;
+        assert!(matches!(c.lint(), Err(CheckError::Schedule(_))));
     }
 }

@@ -6,6 +6,7 @@
 //! whole networks are checked by dense directed + random sampling against
 //! the exact integer NN evaluation.
 
+use crate::logic::check::CheckError;
 use crate::logic::netlist::LutNetlist;
 use crate::logic::truthtable::TruthTable;
 use crate::util::prng::Xoshiro256;
@@ -16,7 +17,18 @@ pub enum EquivResult {
     /// Functions agree on every checked assignment.
     Equivalent,
     /// First mismatching assignment and the (got, want) output vectors.
-    Mismatch { input_bits: u64, got: Vec<bool>, want: Vec<bool> },
+    Mismatch {
+        /// Index of the failing assignment in enumeration/sample order —
+        /// the exact case to replay.
+        sample: usize,
+        /// The failing assignment itself (first 64 inputs, bit `i` = input
+        /// `i`).
+        input_bits: u64,
+        /// Outputs the netlist produced.
+        got: Vec<bool>,
+        /// Outputs the reference produced.
+        want: Vec<bool>,
+    },
 }
 
 impl EquivResult {
@@ -62,7 +74,12 @@ pub fn exhaustive_netlist_vs_tables(nl: &LutNetlist, tables: &[TruthTable]) -> E
                         .map(|w| (w >> lane) & 1 == 1)
                         .collect();
                     let want_v: Vec<bool> = tables.iter().map(|t| t.eval(m)).collect();
-                    return EquivResult::Mismatch { input_bits: m, got: got_v, want: want_v };
+                    return EquivResult::Mismatch {
+                        sample: m as usize,
+                        input_bits: m,
+                        got: got_v,
+                        want: want_v,
+                    };
                 }
             }
         }
@@ -71,19 +88,38 @@ pub fn exhaustive_netlist_vs_tables(nl: &LutNetlist, tables: &[TruthTable]) -> E
     EquivResult::Equivalent
 }
 
-/// Exhaustively compare two netlists with identical I/O signatures.
-pub fn exhaustive_netlists(a: &LutNetlist, b: &LutNetlist) -> EquivResult {
-    assert_eq!(a.num_inputs, b.num_inputs);
-    assert_eq!(a.outputs.len(), b.outputs.len());
-    assert!(a.num_inputs <= 24);
+/// Input-count ceiling for exhaustive enumeration (2^24 assignments).
+pub const EXHAUSTIVE_LIMIT: usize = 24;
+
+/// Exhaustively compare two netlists. Mismatched I/O signatures and
+/// netlists too wide to enumerate are typed errors, not panics — callers
+/// (the CLI, the property suite) feed this arbitrary artifact pairs.
+pub fn exhaustive_netlists(a: &LutNetlist, b: &LutNetlist) -> Result<EquivResult, CheckError> {
+    if a.num_inputs != b.num_inputs || a.outputs.len() != b.outputs.len() {
+        return Err(CheckError::SignatureMismatch {
+            inputs: (a.num_inputs, b.num_inputs),
+            outputs: (a.outputs.len(), b.outputs.len()),
+        });
+    }
+    if a.num_inputs > EXHAUSTIVE_LIMIT {
+        return Err(CheckError::TooManyInputs {
+            num_inputs: a.num_inputs,
+            limit: EXHAUSTIVE_LIMIT,
+        });
+    }
     for m in 0..1u64 << a.num_inputs {
         let ga = a.eval(m);
         let gb = b.eval(m);
         if ga != gb {
-            return EquivResult::Mismatch { input_bits: m, got: ga, want: gb };
+            return Ok(EquivResult::Mismatch {
+                sample: m as usize,
+                input_bits: m,
+                got: ga,
+                want: gb,
+            });
         }
     }
-    EquivResult::Equivalent
+    Ok(EquivResult::Equivalent)
 }
 
 /// Compare a netlist against an arbitrary oracle on `samples` random
@@ -100,7 +136,7 @@ pub fn sampled_netlist_vs_fn(
         .map(|_| (0..nl.num_inputs).map(|_| rng.bernoulli(0.5)).collect())
         .collect();
     let got = sim.run_batch(&batch);
-    for (s, g) in batch.iter().zip(&got) {
+    for (sample, (s, g)) in batch.iter().zip(&got).enumerate() {
         let want = oracle(s);
         if *g != want {
             let bits: u64 = s
@@ -109,7 +145,7 @@ pub fn sampled_netlist_vs_fn(
                 .enumerate()
                 .map(|(i, &b)| if b { 1u64 << i } else { 0 })
                 .sum();
-            return EquivResult::Mismatch { input_bits: bits, got: g.clone(), want };
+            return EquivResult::Mismatch { sample, input_bits: bits, got: g.clone(), want };
         }
     }
     EquivResult::Equivalent
@@ -161,7 +197,34 @@ mod tests {
             TruthTable::from_fn(2, |m| (m.count_ones() & 1) == 0),
         );
         b.add_output(xn, true);
-        assert!(exhaustive_netlists(&a, &b).is_equivalent());
+        assert!(exhaustive_netlists(&a, &b).unwrap().is_equivalent());
+    }
+
+    #[test]
+    fn mismatched_signatures_are_typed_errors_not_panics() {
+        let a = LutNetlist::new(2);
+        let b = LutNetlist::new(3);
+        assert!(matches!(
+            exhaustive_netlists(&a, &b),
+            Err(CheckError::SignatureMismatch { inputs: (2, 3), .. })
+        ));
+        let mut c = LutNetlist::new(2);
+        c.add_output(Sig::Input(0), false);
+        let d = LutNetlist::new(2);
+        assert!(matches!(
+            exhaustive_netlists(&c, &d),
+            Err(CheckError::SignatureMismatch { outputs: (1, 0), .. })
+        ));
+    }
+
+    #[test]
+    fn too_wide_for_enumeration_is_a_typed_error() {
+        let a = LutNetlist::new(30);
+        let b = LutNetlist::new(30);
+        assert!(matches!(
+            exhaustive_netlists(&a, &b),
+            Err(CheckError::TooManyInputs { num_inputs: 30, limit: EXHAUSTIVE_LIMIT })
+        ));
     }
 
     #[test]
@@ -195,6 +258,11 @@ mod tests {
             500,
             42,
         );
-        assert!(!r2.is_equivalent());
+        // The inverted oracle disagrees everywhere, so the reported failing
+        // sample must be the very first one.
+        match r2 {
+            EquivResult::Mismatch { sample, .. } => assert_eq!(sample, 0),
+            EquivResult::Equivalent => panic!("inverted oracle must mismatch"),
+        }
     }
 }

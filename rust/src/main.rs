@@ -12,6 +12,8 @@
 //! nullanet bench     [--out BENCH_5.json] [--batch N] [--quick] [--jobs N]
 //! nullanet emit      --arch jsc-s --format blif|verilog --out file
 //! nullanet info      --arch jsc-s
+//! nullanet check     bundle.json [...]        (structural lint)
+//! nullanet check     --cec a.json b.json      (SAT equivalence proof)
 //! nullanet gen-model --features 6 --widths 5,4 --fanin 2 --act-bits 1 --out m.json
 //! ```
 //!
@@ -33,6 +35,7 @@ use nullanet_tiny::error::NnError;
 use nullanet_tiny::flow::{artifact, circuit_accuracy, run_flow, FlowConfig};
 use nullanet_tiny::fpga::report::{format_opt_stats, format_table, Comparison, ResultRow};
 use nullanet_tiny::fpga::timing::TimingModel;
+use nullanet_tiny::logic::cec::{check_netlists, CecResult};
 use nullanet_tiny::logic::netlist::PipelinedCircuit;
 use nullanet_tiny::logic::sim::{CompiledNetlist, ShardRunner};
 use nullanet_tiny::nn::eval::{codes_to_bitvec, quantize_input};
@@ -61,6 +64,7 @@ fn main() -> ExitCode {
         Some("bench") => cmd_bench(&args),
         Some("emit") => cmd_emit(&args),
         Some("info") => cmd_info(&args),
+        Some("check") => cmd_check(&args),
         Some("gen-model") => cmd_gen_model(&args),
         Some(other) => {
             Err(NnError::Config(format!("unknown command '{other}'; see README.md")))
@@ -68,7 +72,7 @@ fn main() -> ExitCode {
         None => {
             println!(
                 "usage: nullanet <flow|compile|table1|verify|serve|bench|emit|info|\
-                 gen-model> [options]"
+                 check|gen-model> [options]"
             );
             Ok(())
         }
@@ -557,6 +561,73 @@ fn cmd_emit(args: &Args) -> Result<(), NnError> {
         None => print!("{text}"),
     }
     Ok(())
+}
+
+/// Static checks over compiled-circuit bundles: structural lint (default)
+/// or a SAT-based combinational-equivalence proof between two bundles
+/// (`--cec a.json b.json`). Exits nonzero on any failure, so CI can gate
+/// artifact pipelines on it.
+fn cmd_check(args: &Args) -> Result<(), NnError> {
+    conf(args.check_known(&["cec"]))?;
+    if let Some(first) = args.get_opt("cec") {
+        // `--cec a.json b.json` parses as option value "a.json" plus one
+        // positional; a bare trailing `--cec` maps to "true" and both files
+        // come from positionals.
+        let mut files: Vec<String> = Vec::new();
+        if first != "true" {
+            files.push(first.to_string());
+        }
+        files.extend(args.positional.iter().cloned());
+        if files.len() != 2 {
+            return Err(NnError::Config(
+                "check --cec needs exactly two circuit bundles".into(),
+            ));
+        }
+        let (_, ca) = artifact::load_bundle(&files[0])?;
+        let (_, cb) = artifact::load_bundle(&files[1])?;
+        match check_netlists(&ca.netlist, &cb.netlist)? {
+            CecResult::Equivalent => {
+                println!(
+                    "EQUIVALENT: {} ≡ {} (SAT proof, {} inputs, {} vs {} LUTs)",
+                    files[0],
+                    files[1],
+                    ca.netlist.num_inputs,
+                    ca.netlist.num_luts(),
+                    cb.netlist.num_luts(),
+                );
+                Ok(())
+            }
+            CecResult::Inequivalent { assignment, output } => {
+                let bits: String =
+                    assignment.iter().map(|&b| if b { '1' } else { '0' }).collect();
+                Err(NnError::Config(format!(
+                    "NOT equivalent: output {output} differs under input \
+                     assignment (bit 0 first) {bits}"
+                )))
+            }
+        }
+    } else {
+        if args.positional.is_empty() {
+            return Err(NnError::Config(
+                "check needs at least one circuit bundle, or --cec a.json b.json"
+                    .into(),
+            ));
+        }
+        for path in &args.positional {
+            // `load_bundle` already lints the circuit on parse; re-run the
+            // compiled-stream lint on top so the instruction schedule the
+            // serving engine would execute is covered too.
+            let (model, circuit) = artifact::load_bundle(path)?;
+            CompiledNetlist::compile(&circuit.netlist).lint()?;
+            println!(
+                "{path}: ok ({}, {} LUTs, {} stages)",
+                model.summary(),
+                circuit.netlist.num_luts(),
+                circuit.num_stages,
+            );
+        }
+        Ok(())
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<(), NnError> {

@@ -14,6 +14,8 @@
 //! * [`proptest`] — property testing with shrinking (replaces proptest)
 //! * [`bench`] — benchmark statistics harness (replaces criterion)
 //! * [`timer`] — stage profiling for the flow report and §Perf
+//! * [`sat`] — CDCL SAT solver (replaces a solver crate) backing the
+//!   [`crate::logic::cec`] equivalence proofs
 
 pub mod bench;
 pub mod bitvec;
@@ -21,5 +23,6 @@ pub mod cli;
 pub mod json;
 pub mod prng;
 pub mod proptest;
+pub mod sat;
 pub mod threadpool;
 pub mod timer;

@@ -1,0 +1,572 @@
+//! Dependency-free CDCL SAT solver (MiniSat-style; crates.io is unavailable
+//! offline, see `rust/DESIGN.md` §3).
+//!
+//! Implements the classic architecture: two-watched-literal unit propagation,
+//! first-UIP conflict analysis with clause learning, exponential-decay
+//! variable activity, phase saving, and Luby restarts. The instances produced
+//! by [`crate::logic::cec`] — miters of structurally similar netlists with
+//! fanin-bounded cones — are easy for CDCL, so the solver favours clarity
+//! over throughput: no clause deletion, no literal-block-distance tracking,
+//! and an O(vars) linear scan for decisions.
+
+use std::ops::Not;
+
+/// Variable index (0-based, dense).
+pub type Var = u32;
+
+/// A literal: a variable plus polarity, packed as `var << 1 | negated`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Lit(u32);
+
+impl Lit {
+    /// The positive literal of `v`.
+    pub fn pos(v: Var) -> Lit {
+        Lit(v << 1)
+    }
+
+    /// The negative literal of `v`.
+    pub fn neg(v: Var) -> Lit {
+        Lit(v << 1 | 1)
+    }
+
+    /// The variable this literal tests.
+    pub fn var(self) -> Var {
+        self.0 >> 1
+    }
+
+    /// True for `¬v` literals.
+    pub fn is_neg(self) -> bool {
+        self.0 & 1 == 1
+    }
+
+    fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl Not for Lit {
+    type Output = Lit;
+    fn not(self) -> Lit {
+        Lit(self.0 ^ 1)
+    }
+}
+
+/// Outcome of [`Solver::solve`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SatResult {
+    /// Satisfiable; the witness assigns every variable, indexed by [`Var`].
+    Sat(Vec<bool>),
+    /// Proven unsatisfiable.
+    Unsat,
+}
+
+/// Sentinel for "assigned by decision, not propagation".
+const NO_REASON: u32 = u32::MAX;
+
+/// One-shot CDCL solver: create, [`Solver::new_var`] /
+/// [`Solver::add_clause`] the formula, then [`Solver::solve`].
+pub struct Solver {
+    /// Problem + learned clauses. Watched literals sit in slots 0 and 1.
+    clauses: Vec<Vec<Lit>>,
+    /// Per literal index: ids of clauses currently watching that literal.
+    watches: Vec<Vec<u32>>,
+    /// Per var: 1 = true, -1 = false, 0 = unassigned.
+    assign: Vec<i8>,
+    /// Last polarity each var was assigned (phase saving).
+    phase: Vec<bool>,
+    /// Decision level at which each var was assigned.
+    level: Vec<u32>,
+    /// Clause id that propagated each var, or [`NO_REASON`].
+    reason: Vec<u32>,
+    /// VSIDS-style activity, bumped on conflict participation.
+    activity: Vec<f64>,
+    var_inc: f64,
+    trail: Vec<Lit>,
+    trail_lim: Vec<usize>,
+    qhead: usize,
+    /// Scratch marks for conflict analysis.
+    seen: Vec<bool>,
+    unsat: bool,
+}
+
+impl Default for Solver {
+    fn default() -> Self {
+        Solver::new()
+    }
+}
+
+impl Solver {
+    /// Empty formula over zero variables.
+    pub fn new() -> Solver {
+        Solver {
+            clauses: Vec::new(),
+            watches: Vec::new(),
+            assign: Vec::new(),
+            phase: Vec::new(),
+            level: Vec::new(),
+            reason: Vec::new(),
+            activity: Vec::new(),
+            var_inc: 1.0,
+            trail: Vec::new(),
+            trail_lim: Vec::new(),
+            qhead: 0,
+            seen: Vec::new(),
+            unsat: false,
+        }
+    }
+
+    /// Number of variables allocated so far.
+    pub fn num_vars(&self) -> usize {
+        self.assign.len()
+    }
+
+    /// Allocate a fresh variable.
+    pub fn new_var(&mut self) -> Var {
+        let v = self.assign.len() as Var;
+        self.assign.push(0);
+        self.phase.push(false);
+        self.level.push(0);
+        self.reason.push(NO_REASON);
+        self.activity.push(0.0);
+        self.seen.push(false);
+        self.watches.push(Vec::new());
+        self.watches.push(Vec::new());
+        v
+    }
+
+    fn lit_value(&self, l: Lit) -> i8 {
+        let a = self.assign[l.var() as usize];
+        if l.is_neg() {
+            -a
+        } else {
+            a
+        }
+    }
+
+    /// Add a clause. Must be called before [`Solver::solve`] (the solver is
+    /// at decision level 0). Returns `false` once the formula is known
+    /// unsatisfiable — callers may stop encoding early.
+    pub fn add_clause(&mut self, lits: &[Lit]) -> bool {
+        debug_assert!(self.trail_lim.is_empty(), "clauses must be added at decision level 0");
+        if self.unsat {
+            return false;
+        }
+        // Simplify under the level-0 assignment: drop false literals, drop
+        // the whole clause on a true literal or a (p ∨ ¬p) tautology.
+        let mut c: Vec<Lit> = Vec::with_capacity(lits.len());
+        for &l in lits {
+            debug_assert!((l.var() as usize) < self.assign.len(), "literal for unknown variable");
+            match self.lit_value(l) {
+                1 => return true,
+                -1 => continue,
+                _ => {
+                    if c.contains(&!l) {
+                        return true;
+                    }
+                    if !c.contains(&l) {
+                        c.push(l);
+                    }
+                }
+            }
+        }
+        match c.len() {
+            0 => {
+                self.unsat = true;
+                false
+            }
+            1 => {
+                // Propagate eagerly so later add_clause calls see the unit.
+                self.enqueue(c[0], NO_REASON);
+                if self.propagate().is_some() {
+                    self.unsat = true;
+                }
+                !self.unsat
+            }
+            _ => {
+                let id = self.clauses.len() as u32;
+                self.watches[c[0].index()].push(id);
+                self.watches[c[1].index()].push(id);
+                self.clauses.push(c);
+                true
+            }
+        }
+    }
+
+    fn enqueue(&mut self, l: Lit, reason: u32) {
+        debug_assert_eq!(self.lit_value(l), 0);
+        let v = l.var() as usize;
+        self.assign[v] = if l.is_neg() { -1 } else { 1 };
+        self.phase[v] = !l.is_neg();
+        self.level[v] = self.trail_lim.len() as u32;
+        self.reason[v] = reason;
+        self.trail.push(l);
+    }
+
+    /// Unit propagation to fixpoint; returns a conflicting clause id, if any.
+    fn propagate(&mut self) -> Option<u32> {
+        while self.qhead < self.trail.len() {
+            let p = self.trail[self.qhead];
+            self.qhead += 1;
+            let false_lit = !p;
+            // Detach the watch list; surviving entries are re-attached below.
+            let mut ws = std::mem::take(&mut self.watches[false_lit.index()]);
+            let mut i = 0;
+            'clauses: while i < ws.len() {
+                let cid = ws[i] as usize;
+                // Normalize: the falsified watch goes to slot 1.
+                if self.clauses[cid][0] == false_lit {
+                    self.clauses[cid].swap(0, 1);
+                }
+                let first = self.clauses[cid][0];
+                if self.lit_value(first) == 1 {
+                    i += 1;
+                    continue;
+                }
+                // Find a non-false replacement watch.
+                for k in 2..self.clauses[cid].len() {
+                    let cand = self.clauses[cid][k];
+                    if self.lit_value(cand) != -1 {
+                        self.clauses[cid].swap(1, k);
+                        self.watches[cand.index()].push(cid as u32);
+                        ws.swap_remove(i);
+                        continue 'clauses;
+                    }
+                }
+                // Clause is unit or conflicting on `first`.
+                if self.lit_value(first) == -1 {
+                    self.watches[false_lit.index()] = ws;
+                    return Some(cid as u32);
+                }
+                self.enqueue(first, cid as u32);
+                i += 1;
+            }
+            self.watches[false_lit.index()] = ws;
+        }
+        None
+    }
+
+    /// First-UIP conflict analysis. Returns the learned clause (asserting
+    /// literal in slot 0, watch partner in slot 1) and the backtrack level.
+    fn analyze(&mut self, mut confl: u32) -> (Vec<Lit>, u32) {
+        let current = self.trail_lim.len() as u32;
+        let mut learnt: Vec<Lit> = vec![Lit::pos(0)]; // slot 0 patched below
+        let mut counter = 0usize;
+        let mut idx = self.trail.len();
+        let mut p: Option<Lit> = None;
+        loop {
+            // Reason clauses keep their propagated literal in slot 0; skip it
+            // on every round after the conflict clause itself.
+            let start = usize::from(p.is_some());
+            let lits: Vec<Lit> = self.clauses[confl as usize][start..].to_vec();
+            for q in lits {
+                let v = q.var() as usize;
+                if !self.seen[v] && self.level[v] > 0 {
+                    self.seen[v] = true;
+                    self.bump(v);
+                    if self.level[v] >= current {
+                        counter += 1;
+                    } else {
+                        learnt.push(q);
+                    }
+                }
+            }
+            // Walk the trail back to the most recent marked literal.
+            loop {
+                idx -= 1;
+                if self.seen[self.trail[idx].var() as usize] {
+                    break;
+                }
+            }
+            let pl = self.trail[idx];
+            self.seen[pl.var() as usize] = false;
+            counter -= 1;
+            p = Some(pl);
+            if counter == 0 {
+                break;
+            }
+            confl = self.reason[pl.var() as usize];
+        }
+        learnt[0] = !p.unwrap();
+        // Backtrack to the second-highest level in the clause; put that
+        // literal in slot 1 so it is watched.
+        let mut bt_level = 0u32;
+        if learnt.len() > 1 {
+            let mut max_k = 1;
+            for k in 2..learnt.len() {
+                if self.level[learnt[k].var() as usize] > self.level[learnt[max_k].var() as usize] {
+                    max_k = k;
+                }
+            }
+            learnt.swap(1, max_k);
+            bt_level = self.level[learnt[1].var() as usize];
+        }
+        for &l in &learnt {
+            self.seen[l.var() as usize] = false;
+        }
+        (learnt, bt_level)
+    }
+
+    fn bump(&mut self, v: usize) {
+        self.activity[v] += self.var_inc;
+        if self.activity[v] > 1e100 {
+            for a in &mut self.activity {
+                *a *= 1e-100;
+            }
+            self.var_inc *= 1e-100;
+        }
+    }
+
+    fn backtrack(&mut self, lvl: u32) {
+        while self.trail_lim.len() as u32 > lvl {
+            let lim = self.trail_lim.pop().unwrap();
+            while self.trail.len() > lim {
+                let l = self.trail.pop().unwrap();
+                let v = l.var() as usize;
+                self.assign[v] = 0;
+                self.reason[v] = NO_REASON;
+            }
+        }
+        self.qhead = self.trail.len();
+    }
+
+    /// Decide satisfiability. One-shot: adding clauses after a `solve` call
+    /// is unsupported.
+    pub fn solve(&mut self) -> SatResult {
+        if self.unsat {
+            return SatResult::Unsat;
+        }
+        let mut restart_idx = 0u64;
+        let mut budget = 64 * luby(restart_idx);
+        let mut since_restart = 0u64;
+        loop {
+            if let Some(confl) = self.propagate() {
+                if self.trail_lim.is_empty() {
+                    self.unsat = true;
+                    return SatResult::Unsat;
+                }
+                since_restart += 1;
+                let (learnt, bt) = self.analyze(confl);
+                self.backtrack(bt);
+                if learnt.len() == 1 {
+                    self.enqueue(learnt[0], NO_REASON);
+                } else {
+                    let id = self.clauses.len() as u32;
+                    self.watches[learnt[0].index()].push(id);
+                    self.watches[learnt[1].index()].push(id);
+                    let asserting = learnt[0];
+                    self.clauses.push(learnt);
+                    self.enqueue(asserting, id);
+                }
+                self.decay();
+            } else if since_restart >= budget {
+                since_restart = 0;
+                restart_idx += 1;
+                budget = 64 * luby(restart_idx);
+                self.backtrack(0);
+            } else {
+                // Decide: unassigned variable with maximal activity, saved
+                // polarity first.
+                let mut pick: Option<usize> = None;
+                for (v, &a) in self.assign.iter().enumerate() {
+                    if a == 0 && pick.map(|p| self.activity[v] > self.activity[p]).unwrap_or(true) {
+                        pick = Some(v);
+                    }
+                }
+                match pick {
+                    None => {
+                        return SatResult::Sat(self.assign.iter().map(|&a| a == 1).collect());
+                    }
+                    Some(v) => {
+                        self.trail_lim.push(self.trail.len());
+                        let l = if self.phase[v] {
+                            Lit::pos(v as Var)
+                        } else {
+                            Lit::neg(v as Var)
+                        };
+                        self.enqueue(l, NO_REASON);
+                    }
+                }
+            }
+        }
+    }
+
+    fn decay(&mut self) {
+        self.var_inc /= 0.95;
+    }
+}
+
+/// Luby restart sequence: 1, 1, 2, 1, 1, 2, 4, 1, 1, 2, 1, 1, 2, 4, 8, …
+fn luby(mut x: u64) -> u64 {
+    let (mut size, mut seq) = (1u64, 0u32);
+    while size < x + 1 {
+        seq += 1;
+        size = 2 * size + 1;
+    }
+    while size - 1 != x {
+        size = (size - 1) >> 1;
+        seq -= 1;
+        x %= size;
+    }
+    1u64 << seq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_model_satisfies(clauses: &[Vec<Lit>], model: &[bool]) {
+        for c in clauses {
+            assert!(
+                c.iter().any(|&l| model[l.var() as usize] != l.is_neg()),
+                "model does not satisfy {c:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn trivial_sat_with_forced_literal() {
+        let mut s = Solver::new();
+        let a = s.new_var();
+        let b = s.new_var();
+        assert!(s.add_clause(&[Lit::pos(a), Lit::pos(b)]));
+        assert!(s.add_clause(&[Lit::neg(a)]));
+        match s.solve() {
+            SatResult::Sat(m) => {
+                assert!(!m[a as usize]);
+                assert!(m[b as usize]);
+            }
+            SatResult::Unsat => panic!("expected SAT"),
+        }
+    }
+
+    #[test]
+    fn contradictory_units_are_unsat() {
+        let mut s = Solver::new();
+        let a = s.new_var();
+        s.add_clause(&[Lit::pos(a)]);
+        s.add_clause(&[Lit::neg(a)]);
+        assert_eq!(s.solve(), SatResult::Unsat);
+    }
+
+    #[test]
+    fn empty_clause_is_unsat() {
+        let mut s = Solver::new();
+        let _ = s.new_var();
+        assert!(!s.add_clause(&[]));
+        assert_eq!(s.solve(), SatResult::Unsat);
+    }
+
+    #[test]
+    fn tautology_and_duplicates_are_harmless() {
+        let mut s = Solver::new();
+        let a = s.new_var();
+        let b = s.new_var();
+        assert!(s.add_clause(&[Lit::pos(a), Lit::neg(a)]));
+        assert!(s.add_clause(&[Lit::pos(b), Lit::pos(b)]));
+        match s.solve() {
+            SatResult::Sat(m) => assert!(m[b as usize]),
+            SatResult::Unsat => panic!("expected SAT"),
+        }
+    }
+
+    #[test]
+    fn xor_chain_is_sat_with_consistent_model() {
+        // x0 ⊕ x1 = 1, x1 ⊕ x2 = 1, x2 ⊕ x3 = 1 — alternating assignment.
+        let mut s = Solver::new();
+        let xs: Vec<Var> = (0..4).map(|_| s.new_var()).collect();
+        let mut clauses = Vec::new();
+        for w in xs.windows(2) {
+            let (p, q) = (w[0], w[1]);
+            clauses.push(vec![Lit::pos(p), Lit::pos(q)]);
+            clauses.push(vec![Lit::neg(p), Lit::neg(q)]);
+        }
+        for c in &clauses {
+            assert!(s.add_clause(c));
+        }
+        match s.solve() {
+            SatResult::Sat(m) => {
+                assert_model_satisfies(&clauses, &m);
+                assert_ne!(m[0], m[1]);
+                assert_ne!(m[1], m[2]);
+                assert_ne!(m[2], m[3]);
+            }
+            SatResult::Unsat => panic!("expected SAT"),
+        }
+    }
+
+    #[test]
+    fn pigeonhole_4_into_3_is_unsat() {
+        // 4 pigeons, 3 holes: at-least-one hole per pigeon, at-most-one
+        // pigeon per hole. Forces real conflict analysis and restarts.
+        const P: usize = 4;
+        const H: usize = 3;
+        let mut s = Solver::new();
+        let mut v: [[Var; H]; P] = [[0; H]; P];
+        for row in v.iter_mut() {
+            for cell in row.iter_mut() {
+                *cell = s.new_var();
+            }
+        }
+        for row in &v {
+            let c: Vec<Lit> = row.iter().map(|&x| Lit::pos(x)).collect();
+            s.add_clause(&c);
+        }
+        for h in 0..H {
+            for (i, ri) in v.iter().enumerate() {
+                for rj in v.iter().skip(i + 1) {
+                    s.add_clause(&[Lit::neg(ri[h]), Lit::neg(rj[h])]);
+                }
+            }
+        }
+        assert_eq!(s.solve(), SatResult::Unsat);
+    }
+
+    #[test]
+    fn pigeonhole_3_into_3_is_sat() {
+        const P: usize = 3;
+        const H: usize = 3;
+        let mut s = Solver::new();
+        let mut v: [[Var; H]; P] = [[0; H]; P];
+        let mut clauses = Vec::new();
+        for row in v.iter_mut() {
+            for cell in row.iter_mut() {
+                *cell = s.new_var();
+            }
+        }
+        for row in &v {
+            clauses.push(row.iter().map(|&x| Lit::pos(x)).collect::<Vec<_>>());
+        }
+        for h in 0..H {
+            for (i, ri) in v.iter().enumerate() {
+                for rj in v.iter().skip(i + 1) {
+                    clauses.push(vec![Lit::neg(ri[h]), Lit::neg(rj[h])]);
+                }
+            }
+        }
+        for c in &clauses {
+            assert!(s.add_clause(c));
+        }
+        match s.solve() {
+            SatResult::Sat(m) => assert_model_satisfies(&clauses, &m),
+            SatResult::Unsat => panic!("expected SAT"),
+        }
+    }
+
+    #[test]
+    fn literal_packing_roundtrip() {
+        let l = Lit::pos(7);
+        assert_eq!(l.var(), 7);
+        assert!(!l.is_neg());
+        assert_eq!((!l).var(), 7);
+        assert!((!l).is_neg());
+        assert_eq!(!!l, l);
+        assert_eq!(Lit::neg(3), !Lit::pos(3));
+    }
+
+    #[test]
+    fn luby_prefix_is_correct() {
+        let want = [1, 1, 2, 1, 1, 2, 4, 1, 1, 2, 1, 1, 2, 4, 8];
+        let got: Vec<u64> = (0..want.len() as u64).map(luby).collect();
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,203 @@
+//! Property-based tests for the formal-verification stack: the CDCL SAT
+//! solver (`util::sat`) against brute-force enumeration, and the SAT-based
+//! equivalence checker (`logic::cec`) against both the exhaustive
+//! differential checker and deliberately mutated netlists.
+
+use nullanet_tiny::logic::cec::{check_netlists, CecResult};
+use nullanet_tiny::logic::netlist::{LutNetlist, Sig};
+use nullanet_tiny::logic::opt::optimize;
+use nullanet_tiny::logic::truthtable::TruthTable;
+use nullanet_tiny::logic::verify::exhaustive_netlists;
+use nullanet_tiny::util::proptest::{check_simple, Gen};
+use nullanet_tiny::util::sat::{Lit, SatResult, Solver};
+
+/// A random CNF formula: (num_vars, clauses), each clause a list of
+/// (variable, negated) pairs. Tautologies, duplicate literals, and repeated
+/// clauses are all allowed — the solver must handle them.
+type Cnf = (usize, Vec<Vec<(usize, bool)>>);
+
+fn gen_cnf(g: &mut Gen) -> Cnf {
+    let nvars = g.sized_range(1, 12);
+    let nclauses = g.sized_range(1, 40);
+    let clauses = (0..nclauses)
+        .map(|_| {
+            let len = g.sized_range(1, 4);
+            (0..len)
+                .map(|_| (g.rng.below(nvars as u64) as usize, g.rng.bernoulli(0.5)))
+                .collect()
+        })
+        .collect();
+    (nvars, clauses)
+}
+
+/// Evaluate a CNF under assignment `m` (bit `v` of `m` = variable `v`).
+fn cnf_eval(clauses: &[Vec<(usize, bool)>], m: u64) -> bool {
+    clauses
+        .iter()
+        .all(|c| c.iter().any(|&(v, neg)| ((m >> v) & 1 == 1) != neg))
+}
+
+#[test]
+fn sat_verdict_matches_brute_force() {
+    check_simple(
+        "sat-vs-brute-force",
+        gen_cnf,
+        |(nvars, clauses)| {
+            let mut s = Solver::new();
+            for _ in 0..*nvars {
+                s.new_var();
+            }
+            for c in clauses {
+                let lits: Vec<Lit> = c
+                    .iter()
+                    .map(|&(v, neg)| {
+                        if neg {
+                            Lit::neg(v as u32)
+                        } else {
+                            Lit::pos(v as u32)
+                        }
+                    })
+                    .collect();
+                s.add_clause(&lits);
+            }
+            let brute_sat = (0..1u64 << nvars).any(|m| cnf_eval(clauses, m));
+            match s.solve() {
+                SatResult::Unsat => {
+                    if brute_sat {
+                        return Err("solver says UNSAT but a model exists".into());
+                    }
+                }
+                SatResult::Sat(model) => {
+                    if !brute_sat {
+                        return Err("solver says SAT but no model exists".into());
+                    }
+                    let m: u64 = model
+                        .iter()
+                        .take(*nvars)
+                        .enumerate()
+                        .map(|(v, &b)| (b as u64) << v)
+                        .sum();
+                    if !cnf_eval(clauses, m) {
+                        return Err("solver model does not satisfy the formula".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random LUT netlist in the style the mapper emits: arities 0–6, inputs
+/// drawn with replacement, occasional constant inputs, duplicated LUTs and
+/// dead logic (optimizer fodder). ≤ 10 primary inputs so the exhaustive
+/// checker can cross-examine every CEC verdict.
+fn gen_netlist(g: &mut Gen) -> LutNetlist {
+    let nin = g.sized_range(1, 10);
+    let nluts = g.sized_range(1, 20);
+    let mut nl = LutNetlist::new(nin);
+    for j in 0..nluts {
+        let navail = nin + j;
+        if j > 0 && g.rng.bernoulli(0.15) {
+            let src = g.rng.below(j as u64) as usize;
+            let (inputs, table) =
+                (nl.luts[src].inputs.clone(), nl.luts[src].table.clone());
+            nl.add_lut(inputs, table);
+            continue;
+        }
+        let k = g.rng.below(7) as usize;
+        let inputs: Vec<Sig> = (0..k)
+            .map(|_| {
+                if g.rng.bernoulli(0.1) {
+                    return Sig::Const(g.rng.bernoulli(0.5));
+                }
+                let pick = g.rng.below(navail as u64) as usize;
+                if pick < nin {
+                    Sig::Input(pick as u32)
+                } else {
+                    Sig::Lut((pick - nin) as u32)
+                }
+            })
+            .collect();
+        let tt = TruthTable::from_fn(k, |_| g.rng.bernoulli(0.5));
+        nl.add_lut(inputs, tt);
+    }
+    for j in 0..nluts.min(4) {
+        nl.add_output(Sig::Lut(j as u32), j % 2 == 1);
+    }
+    nl.add_output(Sig::Input(0), true);
+    nl.add_output(Sig::Const(true), false);
+    nl
+}
+
+#[test]
+fn optimizer_output_is_sat_proven_equivalent() {
+    // The acceptance property of the formal checker: every `opt::optimize`
+    // output must be *proven* (not sampled) equivalent to its input, and
+    // the SAT verdict must agree with exhaustive enumeration.
+    check_simple(
+        "cec-optimizer",
+        gen_netlist,
+        |nl| {
+            let (opt_nl, _) = optimize(nl);
+            let cec = check_netlists(nl, &opt_nl).map_err(|e| e.to_string())?;
+            if !cec.is_equivalent() {
+                return Err(format!("optimizer broke equivalence: {cec:?}"));
+            }
+            let brute = exhaustive_netlists(nl, &opt_nl).map_err(|e| e.to_string())?;
+            if !brute.is_equivalent() {
+                return Err("exhaustive disagrees with the SAT proof".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn cec_verdict_matches_exhaustive_on_mutated_netlists() {
+    // Flip one truth-table bit in a clone: usually inequivalent, but a flip
+    // in a dead cone (or one masked downstream) keeps the functions equal —
+    // so the property is *agreement* with exhaustive enumeration, plus a
+    // genuine witness whenever the checker refutes.
+    check_simple(
+        "cec-mutations",
+        |g| {
+            let nl = gen_netlist(g);
+            let lut = g.rng.below(nl.luts.len() as u64) as usize;
+            let rows = 1u64 << nl.luts[lut].table.nvars();
+            let row = g.rng.below(rows) as usize;
+            (nl, lut, row)
+        },
+        |(nl, lut, row)| {
+            let mut mutated = nl.clone();
+            let mut t = mutated.luts[*lut].table.clone();
+            t.set_bit(*row, !t.eval(*row as u64));
+            mutated.luts[*lut].table = t;
+
+            let cec = check_netlists(nl, &mutated).map_err(|e| e.to_string())?;
+            let brute = exhaustive_netlists(nl, &mutated).map_err(|e| e.to_string())?;
+            if cec.is_equivalent() != brute.is_equivalent() {
+                return Err(format!(
+                    "SAT says {cec:?} but exhaustive says {brute:?}"
+                ));
+            }
+            if let CecResult::Inequivalent { assignment, output } = cec {
+                if assignment.len() != nl.num_inputs {
+                    return Err("witness width != num_inputs".into());
+                }
+                let bits: u64 = assignment
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &b)| (b as u64) << i)
+                    .sum();
+                let ga = nl.eval(bits);
+                let gb = mutated.eval(bits);
+                if ga[output] == gb[output] {
+                    return Err(format!(
+                        "witness {bits:#x} does not distinguish output {output}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
