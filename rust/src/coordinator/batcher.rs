@@ -7,14 +7,17 @@
 //! the dispatcher a [`Batch`] whose inputs are already a [`PackedBatch`] —
 //! one `u64` word per input signal per 64-sample lane group — so the logic
 //! engine consumes the batch with zero per-sample `Vec` traffic between
-//! [`Batcher::next_batch`] and the simulator. Built on std primitives — the
-//! offline environment has no tokio — with one or more dispatcher threads
-//! per [`crate::coordinator::router::Router`].
+//! [`Batcher::next_batch`] and the simulator. Built on the crate's sync shim
+//! (std-backed; no tokio offline) — with one or more dispatcher threads per
+//! [`crate::coordinator::router::Router`]. Under `--cfg nnt_model_check`
+//! the close-flush vs concurrent-submit protocol is exhaustively model
+//! checked (`tests/model_check.rs`).
 
 use std::collections::VecDeque;
-use std::sync::mpsc::Sender;
-use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::util::sync::mpsc::Sender;
+use crate::util::sync::{Condvar, Mutex};
 
 use crate::util::bitvec::{BitVec, PackedBatch};
 
@@ -90,7 +93,7 @@ impl Batcher {
         Batcher {
             policy,
             input_bits,
-            state: Mutex::new(QueueState { queue: VecDeque::new(), closed: false }),
+            state: Mutex::named("batcher.state", QueueState { queue: VecDeque::new(), closed: false }),
             signal: Condvar::new(),
         }
     }
@@ -118,7 +121,7 @@ impl Batcher {
             req.bits.len(),
             self.input_bits
         );
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         if s.closed {
             return Err(req);
         }
@@ -139,7 +142,7 @@ impl Batcher {
     /// Mark closed; wakes all dispatchers. Written under the queue lock so
     /// no dispatcher can park between observing "open + empty" and waiting.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        self.state.lock().closed = true;
         self.signal.notify_all();
     }
 
@@ -166,7 +169,7 @@ impl Batcher {
     }
 
     fn drain_requests(&self) -> Option<Vec<Request>> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         loop {
             if s.queue.len() >= self.policy.max_batch {
                 return Some(s.queue.drain(..self.policy.max_batch).collect());
@@ -191,29 +194,29 @@ impl Batcher {
                     return Some(s.queue.drain(..n).collect());
                 }
                 let remaining = self.policy.max_wait - age;
-                let (ns, _timeout) = self.signal.wait_timeout(s, remaining).unwrap();
+                let (ns, _timed_out) = self.signal.wait_timeout(s, remaining);
                 s = ns;
             } else {
-                s = self.signal.wait(s).unwrap();
+                s = self.signal.wait(s);
             }
         }
     }
 
     /// Number of queued requests (diagnostics).
     pub fn depth(&self) -> usize {
-        self.state.lock().unwrap().queue.len()
+        self.state.lock().queue.len()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
+    use crate::util::sync::mpsc::channel;
     use std::sync::Arc;
 
     const BITS: usize = 3;
 
-    fn req(pattern: usize) -> (Request, std::sync::mpsc::Receiver<Reply>) {
+    fn req(pattern: usize) -> (Request, crate::util::sync::mpsc::Receiver<Reply>) {
         let (tx, rx) = channel();
         let bits = BitVec::from_bools((0..BITS).map(|i| (pattern >> i) & 1 == 1));
         (

@@ -37,13 +37,14 @@
 //! Unload follows the same drain, minus the replacement.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 use crate::coordinator::batcher::{BatchPolicy, Reply};
 use crate::coordinator::router::{Policy, Router, RouterBuilder};
 use crate::error::NnError;
 use crate::flow::artifact;
 use crate::util::bitvec::BitVec;
+use crate::util::sync::{mpsc, RwLock};
 
 /// How the registry builds an engine stack for each loaded bundle.
 #[derive(Clone, Copy, Debug)]
@@ -104,7 +105,10 @@ impl ModelRegistry {
     pub fn new(config: RegistryConfig) -> ModelRegistry {
         ModelRegistry {
             config,
-            state: RwLock::new(RegState { models: BTreeMap::new(), default: None }),
+            state: RwLock::named(
+                "registry.state",
+                RegState { models: BTreeMap::new(), default: None },
+            ),
         }
     }
 
@@ -116,13 +120,15 @@ impl ModelRegistry {
     /// `"model"` field keep working unchanged.
     pub fn with_default(name: &str, router: Router) -> ModelRegistry {
         let reg = ModelRegistry::new(RegistryConfig::default());
-        reg.install(name, router, None);
+        reg.install(name, router, None)
+            .expect("a freshly created registry lock cannot be poisoned");
         reg
     }
 
-    /// Number of registered models.
+    /// Number of registered models. Diagnostic read: recovers through a
+    /// poisoned lock rather than failing an admin poll.
     pub fn len(&self) -> usize {
-        self.state.read().unwrap().models.len()
+        self.state.read().models.len()
     }
 
     /// True when no model is registered.
@@ -132,17 +138,17 @@ impl ModelRegistry {
 
     /// Registered names (sorted — the map is a `BTreeMap`).
     pub fn names(&self) -> Vec<String> {
-        self.state.read().unwrap().models.keys().cloned().collect()
+        self.state.read().models.keys().cloned().collect()
     }
 
     /// Name unnamed classify requests route to, if any.
     pub fn default_name(&self) -> Option<String> {
-        self.state.read().unwrap().default.clone()
+        self.state.read().default.clone()
     }
 
     /// Point unnamed classify requests at `name`.
     pub fn set_default(&self, name: &str) -> Result<(), NnError> {
-        let mut s = self.state.write().unwrap();
+        let mut s = self.state.write_checked()?;
         if !s.models.contains_key(name) {
             return Err(no_such_model(name, &s.models));
         }
@@ -152,7 +158,7 @@ impl ModelRegistry {
 
     /// Resolve a model name (or the default) to its router.
     pub fn get(&self, name: Option<&str>) -> Result<Arc<Router>, NnError> {
-        let s = self.state.read().unwrap();
+        let s = self.state.read_checked()?;
         let key = match name {
             Some(n) => n,
             None => s.default.as_deref().ok_or_else(|| {
@@ -178,10 +184,19 @@ impl ModelRegistry {
     /// until [`ModelRegistry::set_default`] re-points it deliberately
     /// (silently re-routing legacy clients to a different model would
     /// return wrong predictions with no indication anything changed).
-    pub fn install(&self, name: &str, router: Router, source: Option<String>) {
+    ///
+    /// Errs only when the registry lock was poisoned by a panicked thread
+    /// ([`NnError::Sync`]) — the map was not modified and the router was
+    /// not installed.
+    pub fn install(
+        &self,
+        name: &str,
+        router: Router,
+        source: Option<String>,
+    ) -> Result<(), NnError> {
         let entry = Entry { router: Arc::new(router), source };
         let displaced = {
-            let mut s = self.state.write().unwrap();
+            let mut s = self.state.write_checked()?;
             let was_empty = s.models.is_empty();
             let old = s.models.insert(name.to_string(), entry);
             if was_empty {
@@ -194,6 +209,7 @@ impl ModelRegistry {
             // traffic already flows to the replacement.
             old.router.shutdown();
         }
+        Ok(())
     }
 
     /// Build the registry-standard engine stack for a loaded bundle and
@@ -216,8 +232,7 @@ impl ModelRegistry {
             .batch_policy(self.config.batch_policy)
             .workers(self.config.workers)
             .build()?;
-        self.install(key, router, Some(source));
-        Ok(())
+        self.install(key, router, Some(source))
     }
 
     /// Load one circuit bundle and register it. `name` overrides the
@@ -255,7 +270,7 @@ impl ModelRegistry {
         for path in &paths {
             match artifact::load_bundle(path) {
                 Ok((model, circuit)) => {
-                    if self.state.read().unwrap().models.contains_key(&model.name) {
+                    if self.state.read_checked()?.models.contains_key(&model.name) {
                         return Err(NnError::Config(format!(
                             "--models {dir}: two artifacts provide model \
                              '{}' (second: {path})",
@@ -288,7 +303,7 @@ impl ModelRegistry {
     /// different model.
     pub fn unload(&self, name: &str) -> Result<(), NnError> {
         let removed = {
-            let mut s = self.state.write().unwrap();
+            let mut s = self.state.write_checked()?;
             let removed = s
                 .models
                 .remove(name)
@@ -313,7 +328,7 @@ impl ModelRegistry {
         &self,
         name: Option<&str>,
         features: &[f64],
-    ) -> Result<std::sync::mpsc::Receiver<Reply>, NnError> {
+    ) -> Result<mpsc::Receiver<Reply>, NnError> {
         // Bounded, not `loop`: every retry means the mapped router was
         // found closed, which a swap/unload always follows by replacing or
         // removing the map entry — so a second closed hit is already
@@ -363,7 +378,7 @@ impl ModelRegistry {
     /// formats histograms, and a writer-waiting `RwLock` would block every
     /// `classify`'s `get()` behind an admin poll for that whole duration.
     fn snapshot(&self) -> Vec<(String, Arc<Router>, bool, Option<String>)> {
-        let s = self.state.read().unwrap();
+        let s = self.state.read();
         s.models
             .iter()
             .map(|(name, e)| {
@@ -420,9 +435,10 @@ impl ModelRegistry {
 
     /// Drain every router (server shutdown). The registry stays usable —
     /// models can be reloaded — but all current engines stop.
+    /// Recovers through a poisoned lock: shutdown must always proceed.
     pub fn shutdown_all(&self) {
         let drained: Vec<Entry> = {
-            let mut s = self.state.write().unwrap();
+            let mut s = self.state.write();
             s.default = None;
             std::mem::take(&mut s.models).into_values().collect()
         };
@@ -464,12 +480,13 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full synthesis is too slow under Miri")]
     fn default_routing_and_named_routing() {
         let a = random_model("a", 5, &[4, 3], 2, 1, 1);
         let b = random_model("b", 5, &[4, 3], 2, 1, 2);
         let reg = ModelRegistry::new(RegistryConfig::default());
-        reg.install("a", make_router(&a), None);
-        reg.install("b", make_router(&b), None);
+        reg.install("a", make_router(&a), None).unwrap();
+        reg.install("b", make_router(&b), None).unwrap();
         assert_eq!(reg.names(), vec!["a".to_string(), "b".to_string()]);
         assert_eq!(reg.default_name().as_deref(), Some("a"));
 
@@ -491,10 +508,11 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full synthesis is too slow under Miri")]
     fn unknown_model_and_wrong_width_are_typed_errors() {
         let a = random_model("a", 5, &[4, 3], 2, 1, 3);
         let reg = ModelRegistry::new(RegistryConfig::default());
-        reg.install("a", make_router(&a), None);
+        reg.install("a", make_router(&a), None).unwrap();
         let err = reg.classify(Some("nope"), &[0.0; 5]).unwrap_err();
         assert!(err.to_string().contains("no model named 'nope'"), "{err}");
         let err = reg.classify(Some("a"), &[0.0; 4]).unwrap_err();
@@ -503,6 +521,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full synthesis is too slow under Miri")]
     fn install_rejects_a_structurally_unsound_circuit() {
         let a = random_model("a", 5, &[4, 3], 2, 1, 3);
         let r = run_flow(&a, &FlowConfig { jobs: 1, ..Default::default() }, None)
@@ -525,11 +544,31 @@ mod tests {
         assert!(err.to_string().contains("no default model"), "{err}");
     }
 
+    /// Every registry lock path that needs no synthesized router — read,
+    /// checked-read, and checked-write — on an empty map. This is the
+    /// subset the Miri CI job runs (the tests above are gated out there:
+    /// full synthesis is ~100× slower under the interpreter).
     #[test]
+    fn error_paths_exercise_every_lock_path_without_models() {
+        let reg = ModelRegistry::new(RegistryConfig::default());
+        assert!(reg.names().is_empty());
+        assert_eq!(reg.default_name(), None);
+        assert!(reg.infos().is_empty());
+        let err = reg.set_default("nope").unwrap_err();
+        assert!(err.to_string().contains("no model named 'nope'"), "{err}");
+        let err = reg.unload("nope").unwrap_err();
+        assert!(err.to_string().contains("no model named 'nope'"), "{err}");
+        let err = reg.get(Some("nope")).unwrap_err();
+        assert!(err.to_string().contains("no model named 'nope'"), "{err}");
+        reg.shutdown_all();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "full synthesis is too slow under Miri")]
     fn unload_clears_default_and_drains() {
         let a = random_model("a", 5, &[4, 3], 2, 1, 7);
         let reg = ModelRegistry::new(RegistryConfig::default());
-        reg.install("a", make_router(&a), None);
+        reg.install("a", make_router(&a), None).unwrap();
         // A reply in flight when unload starts must still be delivered:
         // unload drains (close-flush + join) before returning.
         let rx = reg.classify(Some("a"), &[0.1; 5]).unwrap();
@@ -542,10 +581,11 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full synthesis is too slow under Miri")]
     fn infos_surface_optimizer_lut_counts() {
         let a = random_model("a", 5, &[4, 3], 2, 1, 21);
         let reg = ModelRegistry::new(RegistryConfig::default());
-        reg.install("a", make_router(&a), None);
+        reg.install("a", make_router(&a), None).unwrap();
         let infos = reg.infos();
         let (pre, post) = infos[0].lut_counts.expect("logic engine reports LUT counts");
         assert!(post <= pre, "optimizer must not add LUTs ({pre} → {post})");
@@ -553,13 +593,14 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full synthesis is too slow under Miri")]
     fn classify_retry_is_bounded_on_an_externally_closed_router() {
         // An external shutdown (not via the registry) leaves a closed
         // router in the map: classify must exercise the bits-reuse retry
         // loop and give up with a typed error, not spin forever.
         let a = random_model("a", 5, &[4, 3], 2, 1, 33);
         let reg = ModelRegistry::new(RegistryConfig::default());
-        reg.install("a", make_router(&a), None);
+        reg.install("a", make_router(&a), None).unwrap();
         reg.get(Some("a")).unwrap().shutdown();
         let err = reg.classify(Some("a"), &[0.0; 5]).unwrap_err();
         assert!(err.to_string().contains("shutting down"), "{err}");
@@ -567,14 +608,15 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full synthesis is too slow under Miri")]
     fn install_hot_swaps_and_drains_the_old_router() {
         let a = random_model("a", 5, &[4, 3], 2, 1, 9);
         let reg = ModelRegistry::new(RegistryConfig::default());
-        reg.install("a", make_router(&a), None);
+        reg.install("a", make_router(&a), None).unwrap();
         let old = reg.get(Some("a")).unwrap();
         // Submit on the old router, then swap: the reply must arrive.
         let rx = reg.classify(Some("a"), &[0.2; 5]).unwrap();
-        reg.install("a", make_router(&a), None);
+        reg.install("a", make_router(&a), None).unwrap();
         let reply = rx
             .recv_timeout(Duration::from_secs(5))
             .expect("in-flight reply must survive the swap");
@@ -592,6 +634,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full synthesis is too slow under Miri")]
     fn install_after_default_unload_does_not_steal_default() {
         // Unloading the default leaves unnamed traffic failing; a later
         // install (e.g. a routine recompile reload of another model) must
@@ -600,29 +643,30 @@ mod tests {
         let a = random_model("a", 5, &[4, 3], 2, 1, 13);
         let b = random_model("b", 5, &[4, 3], 2, 1, 14);
         let reg = ModelRegistry::new(RegistryConfig::default());
-        reg.install("a", make_router(&a), None);
-        reg.install("b", make_router(&b), None);
+        reg.install("a", make_router(&a), None).unwrap();
+        reg.install("b", make_router(&b), None).unwrap();
         reg.unload("a").unwrap();
         assert_eq!(reg.default_name(), None);
-        reg.install("b", make_router(&b), None); // hot-swap reload of 'b'
+        reg.install("b", make_router(&b), None).unwrap(); // hot-swap reload of 'b'
         assert_eq!(reg.default_name(), None, "install must not grab the default");
         let err = reg.classify(None, &[0.0; 5]).unwrap_err();
         assert!(err.to_string().contains("no default model"), "{err}");
         // Empty registry resets: the next install is a fresh start and may
         // become the default again.
         reg.unload("b").unwrap();
-        reg.install("a", make_router(&a), None);
+        reg.install("a", make_router(&a), None).unwrap();
         assert_eq!(reg.default_name().as_deref(), Some("a"));
         reg.shutdown_all();
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full synthesis is too slow under Miri")]
     fn set_default_switches_unnamed_traffic() {
         let a = random_model("a", 5, &[4, 3], 2, 1, 11);
         let b = random_model("b", 5, &[4, 3], 2, 1, 12);
         let reg = ModelRegistry::new(RegistryConfig::default());
-        reg.install("a", make_router(&a), None);
-        reg.install("b", make_router(&b), None);
+        reg.install("a", make_router(&a), None).unwrap();
+        reg.install("b", make_router(&b), None).unwrap();
         assert!(reg.set_default("nope").is_err());
         reg.set_default("b").unwrap();
         let x = [0.5; 5];

@@ -28,7 +28,7 @@
 //! [`Batcher::next_batch`] and the simulator.
 
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::batcher::{Batch, BatchPolicy, Batcher, Reply, Request};
@@ -42,6 +42,7 @@ use crate::logic::netlist::LutNetlist;
 use crate::nn::eval::{codes_to_bitvec, quantize_input};
 use crate::nn::model::Model;
 use crate::util::bitvec::BitVec;
+use crate::util::sync::{mpsc, thread, Mutex};
 
 /// Routing policy: which engine stack the builder assembles.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -183,7 +184,7 @@ impl RouterBuilder {
     /// parallelism, capped at 4 (one place for the policy — the CLI and
     /// the serving example both quote it).
     pub fn default_workers() -> usize {
-        std::thread::available_parallelism()
+        thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1)
             .min(4)
@@ -219,8 +220,7 @@ impl RouterBuilder {
         // The engine is constructed on the dispatcher thread (it may own
         // non-`Send` handles); readiness — or the construction error — is
         // reported back over this channel before `build` returns.
-        let (ready_tx, ready_rx) =
-            std::sync::mpsc::channel::<Result<EngineMeta, EngineError>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<EngineMeta, EngineError>>();
         let b = Arc::clone(&batcher);
         let m = Arc::clone(&metrics);
         let model_for_engine = Arc::clone(&model);
@@ -271,7 +271,7 @@ impl RouterBuilder {
             }
         };
 
-        let dispatcher = std::thread::Builder::new()
+        let dispatcher = thread::Builder::new()
             .name("nnt-dispatcher".into())
             .spawn(move || {
                 let mut engine: Box<dyn InferenceEngine> = match make_engine() {
@@ -344,7 +344,7 @@ impl RouterBuilder {
                 wants_packed: meta.wants_packed,
                 engine_name: meta.name,
                 lut_counts: meta.lut_counts,
-                dispatcher: Mutex::new(Some(dispatcher)),
+                dispatcher: Mutex::named("router.dispatcher", Some(dispatcher)),
             }),
             Ok(Err(e)) => {
                 let _ = dispatcher.join();
@@ -374,7 +374,7 @@ pub struct Router {
     /// Behind a mutex so [`Router::shutdown`] works through a shared
     /// reference — a hot-swapping registry drains the old router via its
     /// `Arc` while in-flight submitters still hold clones.
-    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    dispatcher: Mutex<Option<thread::JoinHandle<()>>>,
 }
 
 impl Router {
@@ -386,7 +386,7 @@ impl Router {
     /// [`Router::try_submit`] and retry on a live router). If the engine
     /// fails on the batch, the receiver observes a disconnect instead of a
     /// reply.
-    pub fn submit(&self, features: Vec<f64>) -> std::sync::mpsc::Receiver<Reply> {
+    pub fn submit(&self, features: Vec<f64>) -> mpsc::Receiver<Reply> {
         let bits = self.binarize(&features);
         // Move, don't copy: an engine that wants the raw features takes the
         // caller's own Vec (the pre-registry zero-copy behavior).
@@ -402,7 +402,7 @@ impl Router {
     /// its receiver. A hot-swapping caller re-fetches the replacement
     /// router and retries; the slice is untouched, so the retry is free.
     /// The slice is copied only when the engine retains raw features.
-    pub fn try_submit(&self, features: &[f64]) -> Option<std::sync::mpsc::Receiver<Reply>> {
+    pub fn try_submit(&self, features: &[f64]) -> Option<mpsc::Receiver<Reply>> {
         let bits = self.binarize(features);
         self.try_submit_bits(bits, features).ok()
     }
@@ -419,7 +419,7 @@ impl Router {
         &self,
         bits: BitVec,
         features: &[f64],
-    ) -> Result<std::sync::mpsc::Receiver<Reply>, BitVec> {
+    ) -> Result<mpsc::Receiver<Reply>, BitVec> {
         let features = self.wants_features.then(|| features.to_vec());
         self.enqueue(bits, features).map_err(|rejected| rejected.bits)
     }
@@ -453,8 +453,8 @@ impl Router {
         &self,
         bits: BitVec,
         features: Option<Vec<f64>>,
-    ) -> Result<std::sync::mpsc::Receiver<Reply>, Request> {
-        let (tx, rx) = std::sync::mpsc::channel();
+    ) -> Result<mpsc::Receiver<Reply>, Request> {
+        let (tx, rx) = mpsc::channel();
         let req = Request { bits, features, enqueued: Instant::now(), reply: tx };
         self.batcher.submit(req).map(|_| rx)
     }
@@ -505,7 +505,7 @@ impl Router {
     /// clones; concurrent calls are safe (the second finds no handle).
     pub fn shutdown(&self) {
         self.batcher.close();
-        let handle = self.dispatcher.lock().unwrap().take();
+        let handle = self.dispatcher.lock().take();
         if let Some(h) = handle {
             let _ = h.join();
         }

@@ -38,12 +38,13 @@
 
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::coordinator::registry::ModelRegistry;
 use crate::util::json::Json;
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::{mpsc, thread};
 
 /// How often an idle connection thread wakes to poll the stop flag.
 const READ_POLL: Duration = Duration::from_millis(50);
@@ -60,7 +61,7 @@ const MAX_LINE_BYTES: usize = 1 << 20;
 pub fn serve(
     registry: Arc<ModelRegistry>,
     addr: &str,
-    ready: Option<std::sync::mpsc::Sender<u16>>,
+    ready: Option<mpsc::Sender<u16>>,
 ) -> std::io::Result<()> {
     let listener = TcpListener::bind(addr)?;
     let port = listener.local_addr()?.port();
@@ -70,16 +71,16 @@ pub fn serve(
     let stop = Arc::new(AtomicBool::new(false));
     // Accept loop with periodic stop checks.
     listener.set_nonblocking(true)?;
-    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut handles: Vec<thread::JoinHandle<()>> = Vec::new();
     while !stop.load(Ordering::Acquire) {
         match listener.accept() {
             Ok((stream, _)) => {
                 let r = Arc::clone(&registry);
                 let s = Arc::clone(&stop);
-                handles.push(std::thread::spawn(move || handle_client(stream, r, s)));
+                handles.push(thread::spawn(move || handle_client(stream, r, s)));
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(5));
+                thread::sleep(Duration::from_millis(5));
             }
             Err(e) => return Err(e),
         }
@@ -94,7 +95,7 @@ pub fn serve(
 }
 
 /// Join and drop handles whose threads have already exited.
-fn reap_finished(handles: Vec<std::thread::JoinHandle<()>>) -> Vec<std::thread::JoinHandle<()>> {
+fn reap_finished(handles: Vec<thread::JoinHandle<()>>) -> Vec<thread::JoinHandle<()>> {
     handles
         .into_iter()
         .filter_map(|h| {
@@ -344,7 +345,7 @@ mod tests {
     fn spawn_server(
         registry: Arc<ModelRegistry>,
     ) -> (std::thread::JoinHandle<()>, u16) {
-        let (tx, rx) = std::sync::mpsc::channel();
+        let (tx, rx) = mpsc::channel();
         let server = std::thread::spawn(move || {
             serve(registry, "127.0.0.1:0", Some(tx)).unwrap();
         });
@@ -459,7 +460,7 @@ mod tests {
         let m4 = random_model("four", 4, &[3, 3], 2, 1, 21);
         let m6 = random_model("six", 6, &[4, 3], 2, 1, 22);
         let registry = Arc::new(ModelRegistry::with_default("four", tiny_router_for(&m4)));
-        registry.install("six", tiny_router_for(&m6), None);
+        registry.install("six", tiny_router_for(&m6), None).unwrap();
         let (server, port) = spawn_server(Arc::clone(&registry));
 
         let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();

@@ -11,6 +11,7 @@ use crate::coordinator::engine::EngineError;
 use crate::flow::artifact::ArtifactError;
 use crate::logic::check::CheckError;
 use crate::runtime::pjrt::RuntimeError;
+use crate::util::sync::SyncError;
 
 /// Top-level error of the NullaNet Tiny crate.
 #[derive(Debug)]
@@ -31,6 +32,9 @@ pub enum NnError {
     Check(CheckError),
     /// Command-line / configuration error.
     Config(String),
+    /// A lock in the serving stack was poisoned by a panicked thread; the
+    /// lock healed, but this request saw the fault (checked lock paths).
+    Sync(SyncError),
 }
 
 impl fmt::Display for NnError {
@@ -43,6 +47,7 @@ impl fmt::Display for NnError {
             NnError::Artifact(e) => write!(f, "artifact: {e}"),
             NnError::Check(e) => write!(f, "check: {e}"),
             NnError::Config(m) => write!(f, "{m}"),
+            NnError::Sync(e) => write!(f, "sync: {e}"),
         }
     }
 }
@@ -54,6 +59,7 @@ impl std::error::Error for NnError {
             NnError::Engine(e) => Some(e),
             NnError::Artifact(e) => Some(e),
             NnError::Check(e) => Some(e),
+            NnError::Sync(e) => Some(e),
             _ => None,
         }
     }
@@ -92,6 +98,12 @@ impl From<ArtifactError> for NnError {
 impl From<CheckError> for NnError {
     fn from(e: CheckError) -> NnError {
         NnError::Check(e)
+    }
+}
+
+impl From<SyncError> for NnError {
+    fn from(e: SyncError) -> NnError {
+        NnError::Sync(e)
     }
 }
 

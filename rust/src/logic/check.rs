@@ -83,6 +83,15 @@ pub enum CheckError {
     /// Compiled instruction stream violates schedule soundness (a LUT reads
     /// a slot written later, a slot is written twice, codes out of range).
     Schedule(String),
+    /// The runtime lock-acquisition graph contains a cycle — two code paths
+    /// acquire the named locks in opposite orders, so a concurrent schedule
+    /// can deadlock. Reported by `nullanet check --locks` from the
+    /// lock-order recorder in [`crate::util::sync`].
+    LockOrder {
+        /// The locks on the cycle, in acquisition order; the last entry
+        /// closes the loop back to the first.
+        cycle: Vec<String>,
+    },
 }
 
 impl fmt::Display for CheckError {
@@ -116,6 +125,11 @@ impl fmt::Display for CheckError {
             }
             CheckError::Stage(msg) => write!(f, "stage assignment: {msg}"),
             CheckError::Schedule(msg) => write!(f, "compiled schedule: {msg}"),
+            CheckError::LockOrder { cycle } => write!(
+                f,
+                "lock-order cycle (potential deadlock): {}",
+                cycle.join(" -> ")
+            ),
         }
     }
 }

@@ -33,12 +33,13 @@
 //! allocation. See `rust/DESIGN.md` §Serving.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::logic::check::CheckError;
 use crate::logic::netlist::{LutNetlist, Sig};
 use crate::logic::opt::OptStats;
 use crate::util::bitvec::{mask_group_tail, PackedBatch};
+use crate::util::sync::Mutex;
 use crate::util::threadpool::ThreadPool;
 
 /// Signal encoding: 0 = const0, 1 = const1, `2+i` = primary input `i`,
@@ -348,7 +349,7 @@ impl CompiledNetlist {
         ScratchPool {
             slots: self.slots(),
             owner: self.id,
-            free: Mutex::new(Vec::new()),
+            free: Mutex::named("sim.scratch_pool", Vec::new()),
             created: AtomicUsize::new(0),
         }
     }
@@ -639,7 +640,7 @@ pub struct ScratchPool {
 
 impl ScratchPool {
     fn take(&self) -> SimScratch {
-        if let Some(s) = self.free.lock().unwrap().pop() {
+        if let Some(s) = self.free.lock().pop() {
             return s;
         }
         self.created.fetch_add(1, Ordering::Relaxed);
@@ -647,7 +648,7 @@ impl ScratchPool {
     }
 
     fn put(&self, s: SimScratch) {
-        self.free.lock().unwrap().push(s);
+        self.free.lock().push(s);
     }
 
     /// Scratches ever created (stable once every worker has one).

@@ -14,6 +14,7 @@
 //! nullanet info      --arch jsc-s
 //! nullanet check     bundle.json [...]        (structural lint)
 //! nullanet check     --cec a.json b.json      (SAT equivalence proof)
+//! nullanet check     --locks                  (serving-stack lock-order analysis)
 //! nullanet gen-model --features 6 --widths 5,4 --fanin 2 --act-bits 1 --out m.json
 //! ```
 //!
@@ -36,6 +37,7 @@ use nullanet_tiny::flow::{artifact, circuit_accuracy, run_flow, FlowConfig};
 use nullanet_tiny::fpga::report::{format_opt_stats, format_table, Comparison, ResultRow};
 use nullanet_tiny::fpga::timing::TimingModel;
 use nullanet_tiny::logic::cec::{check_netlists, CecResult};
+use nullanet_tiny::logic::check::CheckError;
 use nullanet_tiny::logic::netlist::PipelinedCircuit;
 use nullanet_tiny::logic::sim::{CompiledNetlist, ShardRunner};
 use nullanet_tiny::nn::eval::{codes_to_bitvec, quantize_input};
@@ -400,7 +402,7 @@ fn cmd_serve(args: &Args) -> Result<(), NnError> {
         batch_policy: bp,
         workers,
     }));
-    registry.install(&model.name, router, None);
+    registry.install(&model.name, router, None)?;
     let addr = args.get_str("addr", "127.0.0.1:7878");
     println!(
         "serving model '{}' on {addr} (policy {policy:?}, engine '{engine_name}'; \
@@ -563,12 +565,16 @@ fn cmd_emit(args: &Args) -> Result<(), NnError> {
     Ok(())
 }
 
-/// Static checks over compiled-circuit bundles: structural lint (default)
-/// or a SAT-based combinational-equivalence proof between two bundles
-/// (`--cec a.json b.json`). Exits nonzero on any failure, so CI can gate
+/// Static checks over compiled-circuit bundles: structural lint (default),
+/// a SAT-based combinational-equivalence proof between two bundles
+/// (`--cec a.json b.json`), or runtime lock-order analysis of the serving
+/// stack (`--locks`). Exits nonzero on any failure, so CI can gate
 /// artifact pipelines on it.
 fn cmd_check(args: &Args) -> Result<(), NnError> {
-    conf(args.check_known(&["cec"]))?;
+    conf(args.check_known(&["cec", "locks", "locks-fixture"]))?;
+    if args.get_bool("locks") || args.get_bool("locks-fixture") {
+        return cmd_check_locks(args.get_bool("locks-fixture"));
+    }
     if let Some(first) = args.get_opt("cec") {
         // `--cec a.json b.json` parses as option value "a.json" plus one
         // positional; a bare trailing `--cec` maps to "true" and both files
@@ -627,6 +633,69 @@ fn cmd_check(args: &Args) -> Result<(), NnError> {
             );
         }
         Ok(())
+    }
+}
+
+/// `check --locks`: exercise the real serving stack with the lock-order
+/// recorder on, then scan the acquisition graph for cycles. Every named
+/// lock in the stack (registry map, router dispatcher handle, batcher
+/// queue, thread-pool injector, sim scratch pool) is acquired on these
+/// paths, so any opposite-order pair shows up as a cycle —
+/// [`CheckError::LockOrder`], exit nonzero. `--locks-fixture` additionally
+/// runs the intentional A→B/B→A fixture to prove the detector fires.
+fn cmd_check_locks(with_fixture: bool) -> Result<(), NnError> {
+    use nullanet_tiny::util::sync as nsync;
+
+    fn lock_router(
+        model: &Model,
+        netlist: nullanet_tiny::logic::netlist::LutNetlist,
+    ) -> Result<nullanet_tiny::coordinator::Router, NnError> {
+        RouterBuilder::new(model.clone())
+            .circuit(netlist)
+            .engine(Policy::Logic)
+            .batch_policy(BatchPolicy::default())
+            .workers(2)
+            .build()
+    }
+
+    nsync::reset_lock_order();
+    nsync::set_lock_tracking(true);
+    // Drive traffic through registry → router → batcher → thread pool →
+    // shard runner, then hot-swap, unload, and drain: the full set of lock
+    // orderings the serving stack can produce.
+    let model = random_model("lockcheck", 6, &[4, 3], 2, 1, 17);
+    let flow = run_flow(&model, &FlowConfig { jobs: 2, ..Default::default() }, None)?;
+    let registry = ModelRegistry::new(RegistryConfig::default());
+    registry.install(
+        "lockcheck",
+        lock_router(&model, flow.circuit.netlist.clone())?,
+        None,
+    )?;
+    let x: Vec<f64> = (0..6).map(|j| (j as f64 * 0.3).sin()).collect();
+    for _ in 0..32 {
+        let rx = registry.classify(None, &x)?;
+        rx.recv_timeout(std::time::Duration::from_secs(10))
+            .map_err(|_| NnError::Config("check --locks: inference timed out".into()))?;
+    }
+    registry.install("lockcheck", lock_router(&model, flow.circuit.netlist)?, None)?;
+    registry.unload("lockcheck")?;
+    registry.shutdown_all();
+    if with_fixture {
+        nsync::run_deadlock_fixture();
+    }
+    let edges = nsync::lock_order_edges();
+    nsync::set_lock_tracking(false);
+    match nsync::find_lock_cycle() {
+        Some(cycle) => Err(NnError::Check(CheckError::LockOrder {
+            cycle: cycle.into_iter().map(str::to_string).collect(),
+        })),
+        None => {
+            println!("lock order: clean ({} acquisition edges, no cycles)", edges.len());
+            for (a, b) in edges {
+                println!("  {a} -> {b}");
+            }
+            Ok(())
+        }
     }
 }
 

@@ -1,0 +1,1602 @@
+//! Deterministic concurrency model checker (loom/CHESS style).
+//!
+//! This module is the engine behind the `crate::util::sync` shim when the
+//! crate is built with `--cfg nnt_model_check`. A *model run* executes a test
+//! closure on real OS threads, but only **one** thread is ever allowed to run
+//! at a time: every visible operation (lock acquire, condvar wait/notify,
+//! atomic access, channel send/recv, spawn, join, yield) first passes through
+//! a scheduling decision point where the executor picks which thread runs
+//! next. Recording those decisions yields a *schedule*; depth-first search
+//! over alternative decisions (with a context-switch/preemption bound)
+//! explores the interleaving space exhaustively. A failing schedule is
+//! reported as a compact seed string (`mc1:3.0.1...`) that [`replay`]
+//! re-executes deterministically.
+//!
+//! Design notes and limitations:
+//!
+//! - The checker is dependency-free and lives in-crate; it is always
+//!   compiled (so its own unit tests run under tier-1), but production code
+//!   only routes through it under `cfg(nnt_model_check)` via the shim.
+//! - Scheduling points are placed on *acquisition-like* operations. Releases
+//!   (guard drops, channel disconnects) update state and unblock waiters but
+//!   do not branch the search; this keeps the state space tractable while
+//!   still exposing lock-order deadlocks, lost wakeups and ordering races.
+//! - Timed waits (`wait_timeout`, `recv_timeout`) are modeled as an
+//!   "eventually" abstraction: a timed-blocked thread only fires its timeout
+//!   when **no** other thread can run. Protocols whose progress depends on
+//!   real wall-clock deadlines will livelock the model (caught by the
+//!   `max_steps` bound) — model tests should use deadlines that never need
+//!   to fire.
+//! - The test closure must be deterministic given a schedule: no real
+//!   randomness and no decisions based on elapsed wall-clock time.
+//!
+//! On failure (panic or deadlock) the run *aborts*: every parked thread is
+//! woken, unwinds with a private `AbortToken` panic payload, and is joined,
+//! so no OS threads leak between iterations. During an abort the model
+//! primitives degrade to plain (really-locked) operations so destructors can
+//! run safely without scheduling.
+
+use std::any::Any;
+use std::cell::{RefCell, UnsafeCell};
+use std::marker::PhantomData;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar as OsCondvar, Mutex as OsMutex, MutexGuard as OsMutexGuard, OnceLock};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Thread context
+// ---------------------------------------------------------------------------
+
+struct Ctx {
+    exec: Arc<Executor>,
+    tid: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+/// True when the calling thread is part of an active model run. The
+/// `util::sync` shim consults this at primitive construction time: primitives
+/// created outside a model run are std-backed even in model-check builds.
+pub fn active() -> bool {
+    CTX.with(|c| c.borrow().is_some())
+}
+
+fn ctx() -> (Arc<Executor>, usize) {
+    CTX.with(|c| {
+        let b = c.borrow();
+        let x = b
+            .as_ref()
+            .expect("model-check primitive used outside an active model run");
+        (Arc::clone(&x.exec), x.tid)
+    })
+}
+
+fn set_ctx(exec: &Arc<Executor>, tid: usize) {
+    CTX.with(|c| {
+        *c.borrow_mut() = Some(Ctx {
+            exec: Arc::clone(exec),
+            tid,
+        });
+    });
+}
+
+fn clear_ctx() {
+    CTX.with(|c| *c.borrow_mut() = None);
+}
+
+/// Fetch the caller's tid, checking the primitive belongs to this run.
+fn op_tid(exec: &Arc<Executor>) -> usize {
+    let (cur, tid) = ctx();
+    assert!(
+        Arc::ptr_eq(&cur, exec),
+        "model primitive used across model runs (leaked from an earlier iteration?)"
+    );
+    tid
+}
+
+// ---------------------------------------------------------------------------
+// Abort plumbing
+// ---------------------------------------------------------------------------
+
+/// Internal marker: the run is aborting; the current operation must not block.
+struct Abort;
+
+/// Panic payload used to unwind model threads during an abort. Recognized by
+/// the per-thread `catch_unwind` so it is not reported as a real failure.
+struct AbortToken;
+
+fn abort_unwind() -> ! {
+    // resume_unwind (unlike panic_any) does not invoke the panic hook, so
+    // aborted iterations do not spam stderr.
+    panic::resume_unwind(Box::new(AbortToken))
+}
+
+fn payload_msg(p: &(dyn Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executor
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Status {
+    Runnable,
+    Blocked(usize),
+    TimedBlocked(usize),
+    Finished,
+}
+
+struct Slot {
+    status: Status,
+    /// Set when a timed wait was force-fired (the "timeout elapsed" signal).
+    timed_out: bool,
+    name: String,
+    join_res: usize,
+    result: Option<Box<dyn Any + Send>>,
+}
+
+/// One recorded scheduling decision.
+#[derive(Clone, Debug)]
+struct Step {
+    chosen: usize,
+    /// The candidate set at this decision (runnable tids, or timed-blocked
+    /// tids for a timeout-fire step).
+    enabled: Vec<usize>,
+    /// True when this step force-fired a timed wait.
+    timed: bool,
+}
+
+struct Exec {
+    slots: Vec<Slot>,
+    current: usize,
+    schedule: Vec<Step>,
+    forced: Vec<usize>,
+    failure: Option<String>,
+    aborting: bool,
+    finished: usize,
+    next_res: usize,
+    max_steps: usize,
+    os_handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+struct Executor {
+    m: OsMutex<Exec>,
+    cv: OsCondvar,
+}
+
+impl Executor {
+    fn new(forced: Vec<usize>, max_steps: usize) -> Self {
+        let driver = Slot {
+            status: Status::Runnable,
+            timed_out: false,
+            name: "main".to_string(),
+            join_res: 0,
+            result: None,
+        };
+        Executor {
+            m: OsMutex::new(Exec {
+                slots: vec![driver],
+                current: 0,
+                schedule: Vec::new(),
+                forced,
+                failure: None,
+                aborting: false,
+                finished: 0,
+                next_res: 1,
+                max_steps,
+                os_handles: Vec::new(),
+            }),
+            cv: OsCondvar::new(),
+        }
+    }
+
+    fn lock(&self) -> OsMutexGuard<'_, Exec> {
+        self.m.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn new_res(&self) -> usize {
+        let mut g = self.lock();
+        let r = g.next_res;
+        g.next_res += 1;
+        r
+    }
+
+    fn fail(&self, g: &mut Exec, msg: String) {
+        if g.failure.is_none() {
+            g.failure = Some(msg);
+        }
+        g.aborting = true;
+        self.cv.notify_all();
+    }
+
+    /// Pick the next thread to run. `me` is the deciding thread (it may or
+    /// may not be runnable). Returns Err when the run is aborting.
+    fn decide(&self, g: &mut Exec, me: usize) -> Result<(), Abort> {
+        if g.aborting {
+            return Err(Abort);
+        }
+        if g.schedule.len() >= g.max_steps {
+            let max = g.max_steps;
+            self.fail(
+                g,
+                format!("schedule exceeded {max} steps: livelock or time-dependent loop"),
+            );
+            return Err(Abort);
+        }
+        let enabled: Vec<usize> = g
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s.status, Status::Runnable))
+            .map(|(i, _)| i)
+            .collect();
+        let forced_choice = g.forced.get(g.schedule.len()).copied();
+        if !enabled.is_empty() {
+            let chosen = match forced_choice {
+                Some(w) if enabled.contains(&w) => w,
+                Some(w) => {
+                    let at = g.schedule.len();
+                    self.fail(
+                        g,
+                        format!("replay divergence at step {at}: thread {w} not enabled"),
+                    );
+                    return Err(Abort);
+                }
+                // Default order: keep running the current thread if it can
+                // continue (non-preemptive), else lowest enabled tid.
+                None if enabled.contains(&me) => me,
+                None => enabled[0],
+            };
+            g.schedule.push(Step {
+                chosen,
+                enabled,
+                timed: false,
+            });
+            g.current = chosen;
+            return Ok(());
+        }
+        // Nothing runnable: fire a timed wait if one exists, else deadlock.
+        let timed: Vec<usize> = g
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s.status, Status::TimedBlocked(_)))
+            .map(|(i, _)| i)
+            .collect();
+        if timed.is_empty() {
+            let dump: Vec<String> = g
+                .slots
+                .iter()
+                .enumerate()
+                .map(|(i, s)| format!("  [{i}] {:?} {}", s.status, s.name))
+                .collect();
+            self.fail(
+                g,
+                format!("deadlock: no runnable threads\n{}", dump.join("\n")),
+            );
+            return Err(Abort);
+        }
+        let chosen = match forced_choice {
+            Some(w) if timed.contains(&w) => w,
+            Some(w) => {
+                let at = g.schedule.len();
+                self.fail(
+                    g,
+                    format!("replay divergence at timed step {at}: thread {w} not timed-blocked"),
+                );
+                return Err(Abort);
+            }
+            None => timed[0],
+        };
+        g.slots[chosen].status = Status::Runnable;
+        g.slots[chosen].timed_out = true;
+        g.schedule.push(Step {
+            chosen,
+            enabled: timed,
+            timed: true,
+        });
+        g.current = chosen;
+        Ok(())
+    }
+
+    /// Park until the scheduler hands `me` the token. Returns the (and
+    /// clears) the thread's `timed_out` flag.
+    fn wait_my_turn(&self, mut g: OsMutexGuard<'_, Exec>, me: usize) -> Result<bool, Abort> {
+        self.cv.notify_all();
+        loop {
+            if g.aborting {
+                return Err(Abort);
+            }
+            if g.current == me && matches!(g.slots[me].status, Status::Runnable) {
+                let t = g.slots[me].timed_out;
+                g.slots[me].timed_out = false;
+                return Ok(t);
+            }
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// A scheduling decision point for a runnable thread.
+    fn op_point(&self, me: usize) -> Result<(), Abort> {
+        let mut g = self.lock();
+        if g.aborting {
+            return Err(Abort);
+        }
+        self.decide(&mut g, me)?;
+        self.wait_my_turn(g, me).map(|_| ())
+    }
+
+    /// Deterministic round-robin switch: recorded as a single-alternative
+    /// step, so spin loops that yield do not branch the DFS.
+    fn yield_point(&self, me: usize) -> Result<(), Abort> {
+        let mut g = self.lock();
+        if g.aborting {
+            return Err(Abort);
+        }
+        if g.schedule.len() >= g.max_steps {
+            let max = g.max_steps;
+            self.fail(
+                &mut g,
+                format!("schedule exceeded {max} steps in a yield loop: livelock"),
+            );
+            return Err(Abort);
+        }
+        let n = g.slots.len();
+        let mut next = me;
+        for k in 1..=n {
+            let c = (me + k) % n;
+            if matches!(g.slots[c].status, Status::Runnable) {
+                next = c;
+                break;
+            }
+        }
+        g.schedule.push(Step {
+            chosen: next,
+            enabled: vec![next],
+            timed: false,
+        });
+        g.current = next;
+        self.wait_my_turn(g, me).map(|_| ())
+    }
+
+    /// Mark `me` blocked on `res` (no scheduling yet).
+    fn block_prepare(&self, me: usize, res: usize, timed: bool) {
+        let mut g = self.lock();
+        g.slots[me].status = if timed {
+            Status::TimedBlocked(res)
+        } else {
+            Status::Blocked(res)
+        };
+        g.slots[me].timed_out = false;
+    }
+
+    /// Hand the token away and park until unblocked *and* scheduled.
+    /// Returns true if the wait was force-fired as a timeout.
+    fn block_commit(&self, me: usize) -> Result<bool, Abort> {
+        let mut g = self.lock();
+        if g.aborting {
+            return Err(Abort);
+        }
+        self.decide(&mut g, me)?;
+        self.wait_my_turn(g, me)
+    }
+
+    fn block_on(&self, me: usize, res: usize, timed: bool) -> Result<bool, Abort> {
+        self.block_prepare(me, res, timed);
+        self.block_commit(me)
+    }
+
+    fn unblock_in(g: &mut Exec, res: usize, max: usize) {
+        let mut n = 0;
+        for s in g.slots.iter_mut() {
+            let hit = matches!(s.status, Status::Blocked(r) | Status::TimedBlocked(r) if r == res);
+            if hit {
+                s.status = Status::Runnable;
+                s.timed_out = false;
+                n += 1;
+                if n == max {
+                    break;
+                }
+            }
+        }
+    }
+
+    fn unblock_all(&self, res: usize) {
+        let mut g = self.lock();
+        Self::unblock_in(&mut g, res, usize::MAX);
+    }
+
+    fn unblock_one(&self, res: usize) {
+        let mut g = self.lock();
+        Self::unblock_in(&mut g, res, 1);
+    }
+
+    /// First scheduling of a freshly spawned thread.
+    fn wait_first(&self, me: usize) -> Result<(), Abort> {
+        let mut g = self.lock();
+        loop {
+            if g.aborting {
+                return Err(Abort);
+            }
+            if g.current == me && matches!(g.slots[me].status, Status::Runnable) {
+                return Ok(());
+            }
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn finish(&self, me: usize, result: Option<Box<dyn Any + Send>>) {
+        let mut g = self.lock();
+        g.slots[me].status = Status::Finished;
+        g.slots[me].result = result;
+        g.finished += 1;
+        let jr = g.slots[me].join_res;
+        Self::unblock_in(&mut g, jr, usize::MAX);
+        if !g.aborting && g.finished < g.slots.len() {
+            // Hand the token to someone else; Err means the failure (e.g.
+            // deadlock among the survivors) is already recorded.
+            let _ = self.decide(&mut g, me);
+        }
+        self.cv.notify_all();
+    }
+
+    fn on_panic(&self, me: usize, payload: Box<dyn Any + Send>) {
+        let is_abort = payload.downcast_ref::<AbortToken>().is_some();
+        let mut g = self.lock();
+        if !is_abort && g.failure.is_none() {
+            let name = g.slots[me].name.clone();
+            g.failure = Some(format!(
+                "thread '{name}' panicked: {}",
+                payload_msg(payload.as_ref())
+            ));
+        }
+        g.aborting = true;
+        g.slots[me].status = Status::Finished;
+        g.finished += 1;
+        let jr = g.slots[me].join_res;
+        Self::unblock_in(&mut g, jr, usize::MAX);
+        self.cv.notify_all();
+    }
+
+    fn is_finished(&self, tid: usize) -> bool {
+        matches!(self.lock().slots[tid].status, Status::Finished)
+    }
+
+    fn take_result(&self, tid: usize) -> Option<Box<dyn Any + Send>> {
+        self.lock().slots[tid].result.take()
+    }
+
+    /// Abort-mode join: wait on the OS condvar (no scheduling) until the
+    /// target finishes. Safe to call from destructors.
+    fn wait_finished_os(&self, tid: usize) {
+        let mut g = self.lock();
+        while !matches!(g.slots[tid].status, Status::Finished) {
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Driver: wait for every registered thread (including the driver slot)
+    /// to finish.
+    fn wait_all(&self) {
+        let mut g = self.lock();
+        while g.finished < g.slots.len() {
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model primitives: Mutex / Condvar / RwLock
+// ---------------------------------------------------------------------------
+
+/// Model-checked mutex. Acquisitions are scheduling points; during an abort
+/// it degrades to a plain spin lock so destructors stay safe.
+pub struct Mutex<T> {
+    exec: Arc<Executor>,
+    res: usize,
+    locked: OsMutex<bool>,
+    data: UnsafeCell<T>,
+}
+
+// SAFETY: the `locked` flag (a real OsMutex) guarantees at most one guard
+// exists at a time, so `data` is only ever accessed exclusively; `T: Send`
+// lets that exclusive access hop between threads, mirroring std's bounds.
+unsafe impl<T: Send> Send for Mutex<T> {}
+// SAFETY: as above — all shared access to `data` is mediated by the guard.
+unsafe impl<T: Send> Sync for Mutex<T> {}
+
+impl<T> Mutex<T> {
+    pub fn new(value: T) -> Self {
+        let (exec, _) = ctx();
+        let res = exec.new_res();
+        Mutex {
+            exec,
+            res,
+            locked: OsMutex::new(false),
+            data: UnsafeCell::new(value),
+        }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.data.into_inner()
+    }
+
+    fn try_acquire_real(&self) -> bool {
+        let mut l = self.locked.lock().unwrap_or_else(|e| e.into_inner());
+        if *l {
+            false
+        } else {
+            *l = true;
+            true
+        }
+    }
+
+    fn acquire_abort(&self) -> MutexGuard<'_, T> {
+        // The run is aborting: no scheduler discipline, threads really run
+        // concurrently while unwinding. Spin on the real flag.
+        loop {
+            if self.try_acquire_real() {
+                return MutexGuard { m: self };
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        let tid = op_tid(&self.exec);
+        loop {
+            if self.exec.op_point(tid).is_err() {
+                return self.acquire_abort();
+            }
+            if self.try_acquire_real() {
+                return MutexGuard { m: self };
+            }
+            if self.exec.block_on(tid, self.res, false).is_err() {
+                return self.acquire_abort();
+            }
+        }
+    }
+
+    fn release(&self) {
+        let mut l = self.locked.lock().unwrap_or_else(|e| e.into_inner());
+        *l = false;
+        drop(l);
+        self.exec.unblock_all(self.res);
+    }
+}
+
+pub struct MutexGuard<'a, T> {
+    m: &'a Mutex<T>,
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        // SAFETY: the guard holds the (model) lock exclusively.
+        unsafe { &*self.m.data.get() }
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // SAFETY: the guard holds the (model) lock exclusively.
+        unsafe { &mut *self.m.data.get() }
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        self.m.release();
+    }
+}
+
+/// Model-checked condvar. `wait` releases the paired model mutex, parks on
+/// the condvar's resource, and reacquires on wakeup.
+pub struct Condvar {
+    exec: Arc<Executor>,
+    res: usize,
+}
+
+impl Condvar {
+    pub fn new() -> Self {
+        let (exec, _) = ctx();
+        let res = exec.new_res();
+        Condvar { exec, res }
+    }
+
+    fn wait_inner<'a, T>(&self, guard: MutexGuard<'a, T>, timed: bool) -> (MutexGuard<'a, T>, bool) {
+        let tid = op_tid(&self.exec);
+        let m = guard.m;
+        // Atomically (w.r.t. the model: no scheduling point in between):
+        // register as blocked, then release the mutex.
+        self.exec.block_prepare(tid, self.res, timed);
+        std::mem::forget(guard);
+        m.release();
+        match self.exec.block_commit(tid) {
+            Err(Abort) => abort_unwind(),
+            Ok(timed_out) => {
+                let g = m.lock();
+                (g, timed_out)
+            }
+        }
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        self.wait_inner(guard, false).0
+    }
+
+    /// Returns `(guard, timed_out)`. The timeout only "fires" when no other
+    /// thread is runnable (see module docs).
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        _dur: Duration,
+    ) -> (MutexGuard<'a, T>, bool) {
+        self.wait_inner(guard, true)
+    }
+
+    pub fn notify_one(&self) {
+        let tid = op_tid(&self.exec);
+        // Soft point: on abort, still deliver the wakeup (drop-safe).
+        let _ = self.exec.op_point(tid);
+        self.exec.unblock_one(self.res);
+    }
+
+    pub fn notify_all(&self) {
+        let tid = op_tid(&self.exec);
+        let _ = self.exec.op_point(tid);
+        self.exec.unblock_all(self.res);
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+struct RwState {
+    writer: bool,
+    readers: usize,
+}
+
+/// Model-checked RwLock (no writer preference; acquisitions are scheduling
+/// points, releases unblock everyone waiting).
+pub struct RwLock<T> {
+    exec: Arc<Executor>,
+    res: usize,
+    st: OsMutex<RwState>,
+    data: UnsafeCell<T>,
+}
+
+// SAFETY: `st` serializes state transitions; a write guard is exclusive and
+// read guards are shared read-only, mirroring std's `T: Send` requirement.
+unsafe impl<T: Send> Send for RwLock<T> {}
+// SAFETY: read guards hand out `&T` from multiple threads (needs `T: Sync`);
+// write guards are exclusive (needs `T: Send`). Same bounds as std.
+unsafe impl<T: Send + Sync> Sync for RwLock<T> {}
+
+impl<T> RwLock<T> {
+    pub fn new(value: T) -> Self {
+        let (exec, _) = ctx();
+        let res = exec.new_res();
+        RwLock {
+            exec,
+            res,
+            st: OsMutex::new(RwState {
+                writer: false,
+                readers: 0,
+            }),
+            data: UnsafeCell::new(value),
+        }
+    }
+
+    fn try_read_real(&self) -> bool {
+        let mut s = self.st.lock().unwrap_or_else(|e| e.into_inner());
+        if s.writer {
+            false
+        } else {
+            s.readers += 1;
+            true
+        }
+    }
+
+    fn try_write_real(&self) -> bool {
+        let mut s = self.st.lock().unwrap_or_else(|e| e.into_inner());
+        if s.writer || s.readers > 0 {
+            false
+        } else {
+            s.writer = true;
+            true
+        }
+    }
+
+    pub fn read(&self) -> RwLockReadGuard<'_, T> {
+        let tid = op_tid(&self.exec);
+        loop {
+            if self.exec.op_point(tid).is_err() {
+                return self.read_abort();
+            }
+            if self.try_read_real() {
+                return RwLockReadGuard { l: self };
+            }
+            if self.exec.block_on(tid, self.res, false).is_err() {
+                return self.read_abort();
+            }
+        }
+    }
+
+    pub fn write(&self) -> RwLockWriteGuard<'_, T> {
+        let tid = op_tid(&self.exec);
+        loop {
+            if self.exec.op_point(tid).is_err() {
+                return self.write_abort();
+            }
+            if self.try_write_real() {
+                return RwLockWriteGuard { l: self };
+            }
+            if self.exec.block_on(tid, self.res, false).is_err() {
+                return self.write_abort();
+            }
+        }
+    }
+
+    fn read_abort(&self) -> RwLockReadGuard<'_, T> {
+        loop {
+            if self.try_read_real() {
+                return RwLockReadGuard { l: self };
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    fn write_abort(&self) -> RwLockWriteGuard<'_, T> {
+        loop {
+            if self.try_write_real() {
+                return RwLockWriteGuard { l: self };
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    fn release_read(&self) {
+        let mut s = self.st.lock().unwrap_or_else(|e| e.into_inner());
+        s.readers -= 1;
+        drop(s);
+        self.exec.unblock_all(self.res);
+    }
+
+    fn release_write(&self) {
+        let mut s = self.st.lock().unwrap_or_else(|e| e.into_inner());
+        s.writer = false;
+        drop(s);
+        self.exec.unblock_all(self.res);
+    }
+}
+
+pub struct RwLockReadGuard<'a, T> {
+    l: &'a RwLock<T>,
+}
+
+impl<T> std::ops::Deref for RwLockReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        // SAFETY: read guard held — no writer can exist.
+        unsafe { &*self.l.data.get() }
+    }
+}
+
+impl<T> Drop for RwLockReadGuard<'_, T> {
+    fn drop(&mut self) {
+        self.l.release_read();
+    }
+}
+
+pub struct RwLockWriteGuard<'a, T> {
+    l: &'a RwLock<T>,
+}
+
+impl<T> std::ops::Deref for RwLockWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        // SAFETY: write guard held — exclusive access.
+        unsafe { &*self.l.data.get() }
+    }
+}
+
+impl<T> std::ops::DerefMut for RwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // SAFETY: write guard held — exclusive access.
+        unsafe { &mut *self.l.data.get() }
+    }
+}
+
+impl<T> Drop for RwLockWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        self.l.release_write();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model atomics (sequentially consistent; every access is a soft point)
+// ---------------------------------------------------------------------------
+
+macro_rules! model_atomic {
+    ($name:ident, $ty:ty) => {
+        pub struct $name {
+            exec: Arc<Executor>,
+            st: OsMutex<$ty>,
+        }
+
+        impl $name {
+            pub fn new(v: $ty) -> Self {
+                let (exec, _) = ctx();
+                $name {
+                    exec,
+                    st: OsMutex::new(v),
+                }
+            }
+
+            /// Soft scheduling point: during an abort the access still
+            /// happens (destructor paths touch atomics) without scheduling.
+            fn point(&self) {
+                let tid = op_tid(&self.exec);
+                let _ = self.exec.op_point(tid);
+            }
+
+            pub fn load(&self) -> $ty {
+                self.point();
+                *self.st.lock().unwrap_or_else(|e| e.into_inner())
+            }
+
+            pub fn store(&self, v: $ty) {
+                self.point();
+                *self.st.lock().unwrap_or_else(|e| e.into_inner()) = v;
+            }
+
+            pub fn swap(&self, v: $ty) -> $ty {
+                self.point();
+                let mut g = self.st.lock().unwrap_or_else(|e| e.into_inner());
+                std::mem::replace(&mut *g, v)
+            }
+        }
+    };
+}
+
+model_atomic!(AtomicBool, bool);
+model_atomic!(AtomicUsize, usize);
+
+impl AtomicUsize {
+    pub fn fetch_add(&self, v: usize) -> usize {
+        self.point();
+        let mut g = self.st.lock().unwrap_or_else(|e| e.into_inner());
+        let old = *g;
+        *g = old.wrapping_add(v);
+        old
+    }
+
+    pub fn fetch_sub(&self, v: usize) -> usize {
+        self.point();
+        let mut g = self.st.lock().unwrap_or_else(|e| e.into_inner());
+        let old = *g;
+        *g = old.wrapping_sub(v);
+        old
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model mpsc channel
+// ---------------------------------------------------------------------------
+
+pub mod mpsc {
+    //! Cooperative multi-producer single-consumer channel with std's
+    //! disconnect semantics, schedulable by the model executor.
+
+    use super::{abort_unwind, ctx, op_tid, Abort, Executor, OsMutex};
+    use std::collections::VecDeque;
+    use std::sync::mpsc::{RecvError, RecvTimeoutError, SendError, TryRecvError};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    struct ChanState<T> {
+        queue: VecDeque<T>,
+        senders: usize,
+        rx_alive: bool,
+    }
+
+    struct Chan<T> {
+        exec: Arc<Executor>,
+        res: usize,
+        st: OsMutex<ChanState<T>>,
+    }
+
+    pub struct Sender<T> {
+        ch: Arc<Chan<T>>,
+    }
+
+    pub struct Receiver<T> {
+        ch: Arc<Chan<T>>,
+    }
+
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        let (exec, _) = ctx();
+        let res = exec.new_res();
+        let ch = Arc::new(Chan {
+            exec,
+            res,
+            st: OsMutex::new(ChanState {
+                queue: VecDeque::new(),
+                senders: 1,
+                rx_alive: true,
+            }),
+        });
+        (
+            Sender {
+                ch: Arc::clone(&ch),
+            },
+            Receiver { ch },
+        )
+    }
+
+    impl<T> Chan<T> {
+        fn st(&self) -> std::sync::MutexGuard<'_, ChanState<T>> {
+            self.st.lock().unwrap_or_else(|e| e.into_inner())
+        }
+    }
+
+    impl<T> Sender<T> {
+        pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+            let tid = op_tid(&self.ch.exec);
+            // Soft point: a send from an unwinding frame still lands.
+            let _ = self.ch.exec.op_point(tid);
+            let mut s = self.ch.st();
+            if !s.rx_alive {
+                return Err(SendError(value));
+            }
+            s.queue.push_back(value);
+            drop(s);
+            self.ch.exec.unblock_all(self.ch.res);
+            Ok(())
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Self {
+            self.ch.st().senders += 1;
+            Sender {
+                ch: Arc::clone(&self.ch),
+            }
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            let mut s = self.ch.st();
+            s.senders -= 1;
+            let disconnected = s.senders == 0;
+            drop(s);
+            if disconnected {
+                self.ch.exec.unblock_all(self.ch.res);
+            }
+        }
+    }
+
+    impl<T> Receiver<T> {
+        pub fn recv(&self) -> Result<T, RecvError> {
+            let tid = op_tid(&self.ch.exec);
+            loop {
+                if self.ch.exec.op_point(tid).is_err() {
+                    abort_unwind()
+                }
+                {
+                    let mut s = self.ch.st();
+                    if let Some(v) = s.queue.pop_front() {
+                        return Ok(v);
+                    }
+                    if s.senders == 0 {
+                        return Err(RecvError);
+                    }
+                }
+                match self.ch.exec.block_on(tid, self.ch.res, false) {
+                    Err(Abort) => abort_unwind(),
+                    Ok(_) => {}
+                }
+            }
+        }
+
+        pub fn recv_timeout(&self, _dur: Duration) -> Result<T, RecvTimeoutError> {
+            let tid = op_tid(&self.ch.exec);
+            loop {
+                if self.ch.exec.op_point(tid).is_err() {
+                    abort_unwind()
+                }
+                {
+                    let mut s = self.ch.st();
+                    if let Some(v) = s.queue.pop_front() {
+                        return Ok(v);
+                    }
+                    if s.senders == 0 {
+                        return Err(RecvTimeoutError::Disconnected);
+                    }
+                }
+                match self.ch.exec.block_on(tid, self.ch.res, true) {
+                    Err(Abort) => abort_unwind(),
+                    Ok(timed_out) => {
+                        if timed_out {
+                            let mut s = self.ch.st();
+                            if let Some(v) = s.queue.pop_front() {
+                                return Ok(v);
+                            }
+                            return Err(RecvTimeoutError::Timeout);
+                        }
+                    }
+                }
+            }
+        }
+
+        pub fn try_recv(&self) -> Result<T, TryRecvError> {
+            let tid = op_tid(&self.ch.exec);
+            if self.ch.exec.op_point(tid).is_err() {
+                abort_unwind()
+            }
+            let mut s = self.ch.st();
+            if let Some(v) = s.queue.pop_front() {
+                return Ok(v);
+            }
+            if s.senders == 0 {
+                Err(TryRecvError::Disconnected)
+            } else {
+                Err(TryRecvError::Empty)
+            }
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            self.ch.st().rx_alive = false;
+            self.ch.exec.unblock_all(self.ch.res);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model threads
+// ---------------------------------------------------------------------------
+
+pub struct JoinHandle<T> {
+    exec: Arc<Executor>,
+    tid: usize,
+    join_res: usize,
+    _marker: PhantomData<fn() -> T>,
+}
+
+impl<T: 'static> JoinHandle<T> {
+    pub fn is_finished(&self) -> bool {
+        self.exec.is_finished(self.tid)
+    }
+
+    pub fn join(self) -> std::thread::Result<T> {
+        let tid = op_tid(&self.exec);
+        loop {
+            match self.exec.op_point(tid) {
+                Err(Abort) => {
+                    // Abort-mode: wait for the target on the raw condvar so
+                    // destructor-driven joins cannot panic or hang.
+                    self.exec.wait_finished_os(self.tid);
+                    break;
+                }
+                Ok(()) => {}
+            }
+            if self.exec.is_finished(self.tid) {
+                break;
+            }
+            match self.exec.block_on(tid, self.join_res, false) {
+                Err(Abort) => {
+                    self.exec.wait_finished_os(self.tid);
+                    break;
+                }
+                Ok(_) => {}
+            }
+        }
+        match self.exec.take_result(self.tid) {
+            Some(b) => Ok(*b
+                .downcast::<T>()
+                .expect("model join: result type mismatch")),
+            None => Err(Box::new(AbortToken) as Box<dyn Any + Send>),
+        }
+    }
+}
+
+pub fn spawn<T, F>(name: String, f: F) -> JoinHandle<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let (exec, me) = ctx();
+    if exec.op_point(me).is_err() {
+        abort_unwind()
+    }
+    let (tid, join_res) = {
+        let mut g = exec.lock();
+        let join_res = g.next_res;
+        g.next_res += 1;
+        let tid = g.slots.len();
+        g.slots.push(Slot {
+            status: Status::Runnable,
+            timed_out: false,
+            name: name.clone(),
+            join_res,
+            result: None,
+        });
+        (tid, join_res)
+    };
+    let exec2 = Arc::clone(&exec);
+    let os = std::thread::Builder::new()
+        .name(name)
+        .spawn(move || {
+            set_ctx(&exec2, tid);
+            if exec2.wait_first(tid).is_ok() {
+                let r = panic::catch_unwind(AssertUnwindSafe(|| {
+                    Box::new(f()) as Box<dyn Any + Send>
+                }));
+                match r {
+                    Ok(v) => exec2.finish(tid, Some(v)),
+                    Err(p) => exec2.on_panic(tid, p),
+                }
+            } else {
+                // Aborted before first scheduling: drop the closure's
+                // captures with ctx set, then finish quietly.
+                drop(f);
+                exec2.finish(tid, None);
+            }
+            clear_ctx();
+        })
+        .expect("failed to spawn model OS thread");
+    exec.lock().os_handles.push(os);
+    JoinHandle {
+        exec,
+        tid,
+        join_res,
+        _marker: PhantomData,
+    }
+}
+
+/// Cooperative yield: deterministic round-robin, does not branch the DFS.
+pub fn yield_now() {
+    let (exec, tid) = ctx();
+    if exec.yield_point(tid).is_err() {
+        abort_unwind()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Check driver: DFS with preemption bounding + seeded replay
+// ---------------------------------------------------------------------------
+
+/// Exploration bounds for [`check`].
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Max preemptive context switches per schedule (CHESS-style bound).
+    pub max_preemptions: usize,
+    /// Give up (Pass with `complete: false`) after this many schedules.
+    pub max_iterations: usize,
+    /// Per-run step bound; exceeding it is reported as a livelock failure.
+    pub max_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            max_preemptions: 2,
+            max_iterations: 200_000,
+            max_steps: 20_000,
+        }
+    }
+}
+
+/// Result of a model-check exploration.
+#[derive(Debug)]
+pub enum Outcome {
+    Pass {
+        iterations: usize,
+        /// True when the bounded schedule space was fully explored.
+        complete: bool,
+    },
+    Fail {
+        /// Replayable schedule seed ("mc1:...").
+        seed: String,
+        message: String,
+        iterations: usize,
+    },
+}
+
+impl Outcome {
+    /// Panic (with the replay seed) unless the exploration passed.
+    pub fn assert_pass(&self, what: &str) {
+        match self {
+            Outcome::Pass { .. } => {}
+            Outcome::Fail {
+                seed,
+                message,
+                iterations,
+            } => panic!(
+                "model '{what}' failed after {iterations} schedules: {message}\nreplay seed: {seed}"
+            ),
+        }
+    }
+
+    /// Panic unless the exploration passed *and* was exhaustive.
+    pub fn assert_complete(&self, what: &str) {
+        self.assert_pass(what);
+        if let Outcome::Pass {
+            complete: false,
+            iterations,
+        } = self
+        {
+            panic!("model '{what}' hit the iteration bound ({iterations}) before exhausting the schedule space");
+        }
+    }
+
+    /// Extract the counterexample, panicking if the model unexpectedly passed.
+    pub fn expect_fail(&self, what: &str) -> (String, String) {
+        match self {
+            Outcome::Fail { seed, message, .. } => (seed.clone(), message.clone()),
+            Outcome::Pass { iterations, .. } => panic!(
+                "model '{what}' unexpectedly passed ({iterations} schedules) — the fixture is supposed to be buggy"
+            ),
+        }
+    }
+}
+
+fn encode_seed(schedule: &[Step]) -> String {
+    let mut s = String::from("mc1:");
+    for (i, st) in schedule.iter().enumerate() {
+        if i > 0 {
+            s.push('.');
+        }
+        s.push_str(&st.chosen.to_string());
+    }
+    s
+}
+
+/// Parse an "mc1:" seed back into a forced-choice list.
+pub fn decode_seed(seed: &str) -> Option<Vec<usize>> {
+    let rest = seed.strip_prefix("mc1:")?;
+    if rest.is_empty() {
+        return Some(Vec::new());
+    }
+    rest.split('.').map(|t| t.parse::<usize>().ok()).collect()
+}
+
+fn prev_runner(schedule: &[Step], i: usize) -> usize {
+    if i == 0 {
+        0
+    } else {
+        schedule[i - 1].chosen
+    }
+}
+
+/// A switch is preemptive when the previously running thread could have
+/// continued but a different thread was chosen.
+fn is_preemptive(schedule: &[Step], i: usize, cand: usize) -> bool {
+    let p = prev_runner(schedule, i);
+    !schedule[i].timed && schedule[i].enabled.contains(&p) && cand != p
+}
+
+fn admissible(schedule: &[Step], i: usize, max_preemptions: usize) -> Vec<usize> {
+    let s = &schedule[i];
+    if s.enabled.len() == 1 {
+        return vec![s.chosen];
+    }
+    let budget_used = (0..i)
+        .filter(|&j| is_preemptive(schedule, j, schedule[j].chosen))
+        .count();
+    let mut alts = vec![s.chosen];
+    for &t in &s.enabled {
+        if t == s.chosen {
+            continue;
+        }
+        if !is_preemptive(schedule, i, t) || budget_used < max_preemptions {
+            alts.push(t);
+        }
+    }
+    alts
+}
+
+struct Node {
+    alts: Vec<usize>,
+    idx: usize,
+}
+
+fn gate() -> &'static OsMutex<()> {
+    static GATE: OnceLock<OsMutex<()>> = OnceLock::new();
+    GATE.get_or_init(|| OsMutex::new(()))
+}
+
+fn run_once(forced: &[usize], max_steps: usize, f: &dyn Fn()) -> (Vec<Step>, Option<String>) {
+    let exec = Arc::new(Executor::new(forced.to_vec(), max_steps));
+    set_ctx(&exec, 0);
+    let r = panic::catch_unwind(AssertUnwindSafe(|| f()));
+    match r {
+        Ok(()) => exec.finish(0, None),
+        Err(p) => exec.on_panic(0, p),
+    }
+    exec.wait_all();
+    clear_ctx();
+    let handles = std::mem::take(&mut exec.lock().os_handles);
+    for h in handles {
+        let _ = h.join();
+    }
+    let mut g = exec.lock();
+    (std::mem::take(&mut g.schedule), g.failure.take())
+}
+
+/// Exhaustively explore interleavings of `f` (up to the preemption bound).
+///
+/// `f` is run once per schedule; it must create all its threads and sync
+/// primitives through the model (via the `util::sync` shim under
+/// `cfg(nnt_model_check)`, or the `mc` types directly) and must not leak
+/// primitives across iterations.
+pub fn check<F: Fn()>(cfg: Config, f: F) -> Outcome {
+    let _gate = gate().lock().unwrap_or_else(|e| e.into_inner());
+    assert!(!active(), "nested model check is not supported");
+    let mut stack: Vec<Node> = Vec::new();
+    let mut forced: Vec<usize> = Vec::new();
+    let mut iterations = 0usize;
+    loop {
+        iterations += 1;
+        let (schedule, failure) = run_once(&forced, cfg.max_steps, &f);
+        if let Some(message) = failure {
+            return Outcome::Fail {
+                seed: encode_seed(&schedule),
+                message,
+                iterations,
+            };
+        }
+        if iterations >= cfg.max_iterations {
+            return Outcome::Pass {
+                iterations,
+                complete: false,
+            };
+        }
+        for i in stack.len()..schedule.len() {
+            stack.push(Node {
+                alts: admissible(&schedule, i, cfg.max_preemptions),
+                idx: 0,
+            });
+        }
+        loop {
+            match stack.last_mut() {
+                None => {
+                    return Outcome::Pass {
+                        iterations,
+                        complete: true,
+                    }
+                }
+                Some(n) if n.idx + 1 < n.alts.len() => {
+                    n.idx += 1;
+                    break;
+                }
+                Some(_) => {
+                    stack.pop();
+                }
+            }
+        }
+        forced = stack.iter().map(|n| n.alts[n.idx]).collect();
+    }
+}
+
+/// Deterministically re-run a single schedule from a seed produced by a
+/// failing [`check`]. Returns the outcome of that one run.
+pub fn replay<F: Fn()>(seed: &str, f: F) -> Outcome {
+    let _gate = gate().lock().unwrap_or_else(|e| e.into_inner());
+    assert!(!active(), "nested model check is not supported");
+    let forced = decode_seed(seed).expect("malformed model-check seed");
+    let (schedule, failure) = run_once(&forced, Config::default().max_steps, &f);
+    match failure {
+        Some(message) => Outcome::Fail {
+            seed: encode_seed(&schedule),
+            message,
+            iterations: 1,
+        },
+        None => Outcome::Pass {
+            iterations: 1,
+            complete: false,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_preemptions: usize) -> Config {
+        Config {
+            max_preemptions,
+            ..Config::default()
+        }
+    }
+
+    /// A correct mutex-protected counter passes exhaustively.
+    #[test]
+    fn mutex_counter_passes() {
+        let out = check(cfg(2), || {
+            let m = Arc::new(Mutex::new(0u32));
+            let hs: Vec<_> = (0..2)
+                .map(|i| {
+                    let m = Arc::clone(&m);
+                    spawn(format!("inc{i}"), move || {
+                        let mut g = m.lock();
+                        *g += 1;
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(*m.lock(), 2);
+        });
+        out.assert_complete("mutex counter");
+        if let Outcome::Pass { iterations, .. } = out {
+            assert!(iterations > 1, "expected more than one interleaving");
+        }
+    }
+
+    /// A racy read-modify-write on a model atomic is caught.
+    #[test]
+    fn racy_increment_fails() {
+        let out = check(cfg(2), || {
+            let a = Arc::new(AtomicUsize::new(0));
+            let hs: Vec<_> = (0..2)
+                .map(|i| {
+                    let a = Arc::clone(&a);
+                    spawn(format!("racy{i}"), move || {
+                        let v = a.load();
+                        a.store(v + 1);
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(a.load(), 2, "lost update");
+        });
+        let (seed, msg) = out.expect_fail("racy increment");
+        assert!(msg.contains("lost update"), "unexpected message: {msg}");
+        assert!(seed.starts_with("mc1:"), "bad seed: {seed}");
+    }
+
+    /// The classic lost-wakeup bug: flag outside the mutex + `if` instead of
+    /// `while` around the condvar wait. The model finds the deadlock.
+    fn lost_wakeup_fixture() {
+        let m = Arc::new(Mutex::new(()));
+        let cv = Arc::new(Condvar::new());
+        let flag = Arc::new(AtomicBool::new(false));
+        let waiter = {
+            let (m, cv, flag) = (Arc::clone(&m), Arc::clone(&cv), Arc::clone(&flag));
+            spawn("waiter".to_string(), move || {
+                let g = m.lock();
+                if !flag.load() {
+                    let _g = cv.wait(g);
+                }
+            })
+        };
+        let setter = {
+            let (cv, flag) = (Arc::clone(&cv), Arc::clone(&flag));
+            spawn("setter".to_string(), move || {
+                flag.store(true);
+                cv.notify_all();
+            })
+        };
+        setter.join().unwrap();
+        waiter.join().unwrap();
+    }
+
+    #[test]
+    fn lost_wakeup_found_and_replays_deterministically() {
+        let out = check(cfg(2), lost_wakeup_fixture);
+        let (seed, msg) = out.expect_fail("lost wakeup");
+        assert!(msg.contains("deadlock"), "expected a deadlock, got: {msg}");
+
+        // The seed must reproduce the identical failure, twice.
+        for round in 0..2 {
+            let r = replay(&seed, lost_wakeup_fixture);
+            let (seed2, msg2) = r.expect_fail("lost wakeup replay");
+            assert_eq!(seed2, seed, "replay diverged on round {round}");
+            assert_eq!(msg2, msg, "replay failure differs on round {round}");
+        }
+    }
+
+    /// The fixed version (check under the lock, `while` loop) passes.
+    #[test]
+    fn correct_wakeup_passes() {
+        let out = check(cfg(2), || {
+            let m = Arc::new(Mutex::new(false));
+            let cv = Arc::new(Condvar::new());
+            let waiter = {
+                let (m, cv) = (Arc::clone(&m), Arc::clone(&cv));
+                spawn("waiter".to_string(), move || {
+                    let mut g = m.lock();
+                    while !*g {
+                        g = cv.wait(g);
+                    }
+                })
+            };
+            let setter = {
+                let (m, cv) = (Arc::clone(&m), Arc::clone(&cv));
+                spawn("setter".to_string(), move || {
+                    *m.lock() = true;
+                    cv.notify_all();
+                })
+            };
+            setter.join().unwrap();
+            waiter.join().unwrap();
+        });
+        out.assert_complete("correct wakeup");
+    }
+
+    /// Channel send/recv with disconnect semantics under the model.
+    #[test]
+    fn channel_disconnect_passes() {
+        let out = check(cfg(2), || {
+            let (tx, rx) = mpsc::channel::<u32>();
+            let tx2 = tx.clone();
+            let p1 = spawn("p1".to_string(), move || {
+                tx.send(1).unwrap();
+            });
+            let p2 = spawn("p2".to_string(), move || {
+                tx2.send(2).unwrap();
+            });
+            let mut got = vec![rx.recv().unwrap(), rx.recv().unwrap()];
+            got.sort_unstable();
+            assert_eq!(got, vec![1, 2]);
+            p1.join().unwrap();
+            p2.join().unwrap();
+            assert!(rx.recv().is_err(), "all senders gone: recv must error");
+        });
+        out.assert_complete("channel disconnect");
+    }
+
+    /// RwLock: concurrent readers plus a writer keep the invariant.
+    #[test]
+    fn rwlock_passes() {
+        let out = check(cfg(1), || {
+            let l = Arc::new(RwLock::new((0u32, 0u32)));
+            let w = {
+                let l = Arc::clone(&l);
+                spawn("writer".to_string(), move || {
+                    let mut g = l.write();
+                    g.0 += 1;
+                    g.1 += 1;
+                })
+            };
+            let r = {
+                let l = Arc::clone(&l);
+                spawn("reader".to_string(), move || {
+                    let g = l.read();
+                    assert_eq!(g.0, g.1, "reader saw a torn write");
+                })
+            };
+            w.join().unwrap();
+            r.join().unwrap();
+        });
+        out.assert_complete("rwlock invariant");
+    }
+
+    #[test]
+    fn seed_roundtrip() {
+        assert_eq!(decode_seed("mc1:"), Some(vec![]));
+        assert_eq!(decode_seed("mc1:3.0.12"), Some(vec![3, 0, 12]));
+        assert_eq!(decode_seed("bogus"), None);
+        assert_eq!(decode_seed("mc1:x"), None);
+    }
+}

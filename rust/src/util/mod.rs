@@ -16,13 +16,18 @@
 //! * [`timer`] — stage profiling for the flow report and §Perf
 //! * [`sat`] — CDCL SAT solver (replaces a solver crate) backing the
 //!   [`crate::logic::cec`] equivalence proofs
+//! * [`mc`] — deterministic concurrency model checker (replaces loom)
+//! * [`sync`] — crate-wide sync shim: std-backed normally, model-checked
+//!   under `--cfg nnt_model_check`; poison policy + lock-order analysis
 
 pub mod bench;
 pub mod bitvec;
 pub mod cli;
 pub mod json;
+pub mod mc;
 pub mod prng;
 pub mod proptest;
 pub mod sat;
+pub mod sync;
 pub mod threadpool;
 pub mod timer;

@@ -1,0 +1,1086 @@
+//! Crate-wide synchronization shim.
+//!
+//! Every module in the serving stack (`coordinator::*`, `util::threadpool`,
+//! the `ShardRunner` path in `logic::sim`) takes its sync primitives from
+//! here instead of `std::sync` (CI enforces this with a source lint). The
+//! shim buys three things:
+//!
+//! 1. **Model checking.** Under `--cfg nnt_model_check`, primitives
+//!    constructed inside an active `util::mc` model run route through the
+//!    deterministic cooperative scheduler, so thread interleavings of the
+//!    real production code can be explored exhaustively. In normal builds
+//!    (and outside model runs even in model-check builds) everything is
+//!    std-backed; the `mpsc`/`thread`/`atomic` modules are plain re-exports
+//!    of std in normal builds.
+//!
+//! 2. **One poison policy.** `lock()`/`read()`/`write()` recover from
+//!    poisoning (log + heal + return the guard) so a panicked serving thread
+//!    cannot wedge every subsequent request; `lock_checked()` /
+//!    `read_checked()` / `write_checked()` return a typed [`SyncError`]
+//!    (convertible to `NnError`) for correctness-critical registry/router
+//!    paths that must not silently observe torn state.
+//!
+//! 3. **Lock-order analysis.** Locks constructed with `named()` record
+//!    runtime acquisition-order edges into a global graph (on by default in
+//!    debug builds, opt-in via [`set_lock_tracking`] in release). Cycle
+//!    detection over that graph powers `nullanet check --locks`.
+
+#[cfg(nnt_model_check)]
+use crate::util::mc;
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool as StdAtomicBool, AtomicU64 as StdAtomicU64, Ordering};
+use std::sync::{Mutex as StdMutex, OnceLock};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Poison policy plumbing
+// ---------------------------------------------------------------------------
+
+/// Typed error for the checked lock accessors: the lock was poisoned by a
+/// panicking thread. The lock is healed (`clear_poison`) as a side effect,
+/// so the *next* caller proceeds; the current caller gets a clean error
+/// instead of a panic or silently-torn state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SyncError {
+    /// Static name of the lock (or `"<unnamed>"`).
+    pub lock: &'static str,
+}
+
+impl std::fmt::Display for SyncError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "lock '{}' was poisoned by a panicked thread", self.lock)
+    }
+}
+
+impl std::error::Error for SyncError {}
+
+static POISON_RECOVERIES: StdAtomicU64 = StdAtomicU64::new(0);
+
+/// How many poisoned-lock recoveries the recovering accessors performed.
+pub fn poison_recoveries() -> u64 {
+    POISON_RECOVERIES.load(Ordering::Relaxed)
+}
+
+fn note_poison(name: Option<&'static str>) {
+    POISON_RECOVERIES.fetch_add(1, Ordering::Relaxed);
+    eprintln!(
+        "[sync] recovered a poisoned lock ({}); state may reflect a partial update",
+        name.unwrap_or("<unnamed>")
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Lock-order analysis
+// ---------------------------------------------------------------------------
+
+static TRACK_LOCK_ORDER: StdAtomicBool = StdAtomicBool::new(cfg!(debug_assertions));
+
+/// Enable/disable lock-order edge recording (debug builds default to on).
+pub fn set_lock_tracking(on: bool) {
+    TRACK_LOCK_ORDER.store(on, Ordering::Relaxed);
+}
+
+fn tracking() -> bool {
+    TRACK_LOCK_ORDER.load(Ordering::Relaxed)
+}
+
+fn edge_graph() -> &'static StdMutex<BTreeSet<(&'static str, &'static str)>> {
+    static EDGES: OnceLock<StdMutex<BTreeSet<(&'static str, &'static str)>>> = OnceLock::new();
+    EDGES.get_or_init(|| StdMutex::new(BTreeSet::new()))
+}
+
+thread_local! {
+    static HELD: std::cell::RefCell<Vec<&'static str>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Snapshot of the recorded acquisition-order edges (held-lock -> acquired).
+pub fn lock_order_edges() -> Vec<(&'static str, &'static str)> {
+    edge_graph()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .iter()
+        .copied()
+        .collect()
+}
+
+/// Clear the recorded graph (tests and repeated CLI runs).
+pub fn reset_lock_order() {
+    edge_graph()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .clear();
+}
+
+/// Find a cycle in an acquisition-order edge list. A cycle means two locks
+/// are taken in opposite orders somewhere — a potential deadlock. Returns
+/// the lock names along the cycle (first == last omitted).
+pub fn find_cycle_in(
+    edges: &[(&'static str, &'static str)],
+) -> Option<Vec<&'static str>> {
+    use std::collections::BTreeMap;
+    let mut adj: BTreeMap<&'static str, Vec<&'static str>> = BTreeMap::new();
+    for &(a, b) in edges {
+        adj.entry(a).or_default().push(b);
+        adj.entry(b).or_default();
+    }
+    // 0 = unvisited, 1 = on the current DFS path, 2 = done.
+    let mut state: BTreeMap<&'static str, u8> = adj.keys().map(|&k| (k, 0u8)).collect();
+
+    fn dfs(
+        node: &'static str,
+        adj: &BTreeMap<&'static str, Vec<&'static str>>,
+        state: &mut BTreeMap<&'static str, u8>,
+        path: &mut Vec<&'static str>,
+    ) -> Option<Vec<&'static str>> {
+        state.insert(node, 1);
+        path.push(node);
+        if let Some(next) = adj.get(node) {
+            for &nb in next {
+                match state.get(&nb).copied().unwrap_or(0) {
+                    1 => {
+                        let start = path.iter().position(|&p| p == nb).unwrap_or(0);
+                        return Some(path[start..].to_vec());
+                    }
+                    0 => {
+                        if let Some(c) = dfs(nb, adj, state, path) {
+                            return Some(c);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        path.pop();
+        state.insert(node, 2);
+        None
+    }
+
+    let nodes: Vec<&'static str> = state.keys().copied().collect();
+    for n in nodes {
+        if state.get(&n).copied() == Some(0) {
+            let mut path = Vec::new();
+            if let Some(c) = dfs(n, &adj, &mut state, &mut path) {
+                return Some(c);
+            }
+        }
+    }
+    None
+}
+
+/// Detect a cycle in the currently recorded graph.
+pub fn find_lock_cycle() -> Option<Vec<&'static str>> {
+    find_cycle_in(&lock_order_edges())
+}
+
+/// Crafted deadlocking fixture for `nullanet check --locks`: takes two named
+/// locks in opposite orders (sequentially, so it never actually hangs) and
+/// thereby plants an A->B / B->A cycle in the acquisition graph.
+pub fn run_deadlock_fixture() {
+    let a = Mutex::named("fixture.lock_a", 0u32);
+    let b = Mutex::named("fixture.lock_b", 0u32);
+    {
+        let _ga = a.lock();
+        let _gb = b.lock();
+    }
+    {
+        let _gb = b.lock();
+        let _ga = a.lock();
+    }
+}
+
+/// RAII token for one held named lock; records edges on acquisition and pops
+/// the thread-local held stack on release.
+struct Held {
+    name: Option<&'static str>,
+}
+
+impl Held {
+    fn acquire(name: Option<&'static str>) -> Held {
+        let Some(n) = name else {
+            return Held { name: None };
+        };
+        if !tracking() {
+            return Held { name: None };
+        }
+        HELD.with(|h| {
+            let mut stack = h.borrow_mut();
+            if !stack.is_empty() {
+                let mut g = edge_graph().lock().unwrap_or_else(|e| e.into_inner());
+                for &held in stack.iter() {
+                    if held != n {
+                        g.insert((held, n));
+                    }
+                }
+            }
+            stack.push(n);
+        });
+        Held { name: Some(n) }
+    }
+}
+
+impl Drop for Held {
+    fn drop(&mut self) {
+        if let Some(n) = self.name {
+            HELD.with(|h| {
+                let mut stack = h.borrow_mut();
+                if let Some(pos) = stack.iter().rposition(|&x| x == n) {
+                    stack.remove(pos);
+                }
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mutex
+// ---------------------------------------------------------------------------
+
+enum MutexInner<T> {
+    Std(std::sync::Mutex<T>),
+    #[cfg(nnt_model_check)]
+    Model(mc::Mutex<T>),
+}
+
+/// Shim mutex: std-backed normally, scheduler-backed inside a model run.
+pub struct Mutex<T> {
+    name: Option<&'static str>,
+    inner: MutexInner<T>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(value: T) -> Self {
+        Self::build(None, value)
+    }
+
+    /// A named mutex participates in lock-order analysis.
+    pub fn named(name: &'static str, value: T) -> Self {
+        Self::build(Some(name), value)
+    }
+
+    fn build(name: Option<&'static str>, value: T) -> Self {
+        #[cfg(nnt_model_check)]
+        if mc::active() {
+            return Mutex {
+                name,
+                inner: MutexInner::Model(mc::Mutex::new(value)),
+            };
+        }
+        Mutex {
+            name,
+            inner: MutexInner::Std(std::sync::Mutex::new(value)),
+        }
+    }
+
+    /// Acquire with the recover-and-log poison policy.
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        match &self.inner {
+            MutexInner::Std(m) => {
+                let g = m.lock().unwrap_or_else(|e| {
+                    note_poison(self.name);
+                    m.clear_poison();
+                    e.into_inner()
+                });
+                MutexGuard {
+                    inner: MutexGuardInner::Std(g),
+                    name: self.name,
+                    _held: Held::acquire(self.name),
+                }
+            }
+            #[cfg(nnt_model_check)]
+            MutexInner::Model(m) => MutexGuard {
+                inner: MutexGuardInner::Model(m.lock()),
+                name: self.name,
+                _held: Held::acquire(self.name),
+            },
+        }
+    }
+
+    /// Acquire with the typed-error poison policy: a poisoned lock heals but
+    /// reports `SyncError` to the caller instead of handing out the guard.
+    pub fn lock_checked(&self) -> Result<MutexGuard<'_, T>, SyncError> {
+        match &self.inner {
+            MutexInner::Std(m) => match m.lock() {
+                Ok(g) => Ok(MutexGuard {
+                    inner: MutexGuardInner::Std(g),
+                    name: self.name,
+                    _held: Held::acquire(self.name),
+                }),
+                Err(_) => {
+                    note_poison(self.name);
+                    m.clear_poison();
+                    Err(SyncError {
+                        lock: self.name.unwrap_or("<unnamed>"),
+                    })
+                }
+            },
+            #[cfg(nnt_model_check)]
+            MutexInner::Model(m) => Ok(MutexGuard {
+                inner: MutexGuardInner::Model(m.lock()),
+                name: self.name,
+                _held: Held::acquire(self.name),
+            }),
+        }
+    }
+
+    /// Consume the mutex, returning the data (poison recovered).
+    pub fn into_inner(self) -> T {
+        match self.inner {
+            MutexInner::Std(m) => m.into_inner().unwrap_or_else(|e| e.into_inner()),
+            #[cfg(nnt_model_check)]
+            MutexInner::Model(m) => m.into_inner(),
+        }
+    }
+}
+
+enum MutexGuardInner<'a, T> {
+    Std(std::sync::MutexGuard<'a, T>),
+    #[cfg(nnt_model_check)]
+    Model(mc::MutexGuard<'a, T>),
+}
+
+pub struct MutexGuard<'a, T> {
+    inner: MutexGuardInner<'a, T>,
+    name: Option<&'static str>,
+    _held: Held,
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        match &self.inner {
+            MutexGuardInner::Std(g) => g,
+            #[cfg(nnt_model_check)]
+            MutexGuardInner::Model(g) => g,
+        }
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        match &mut self.inner {
+            MutexGuardInner::Std(g) => g,
+            #[cfg(nnt_model_check)]
+            MutexGuardInner::Model(g) => g,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Condvar
+// ---------------------------------------------------------------------------
+
+enum CondvarInner {
+    Std(std::sync::Condvar),
+    #[cfg(nnt_model_check)]
+    Model(mc::Condvar),
+}
+
+/// Shim condvar; must be paired with a shim [`Mutex`] from the same world
+/// (both created inside, or both outside, a model run).
+pub struct Condvar {
+    inner: CondvarInner,
+}
+
+impl Condvar {
+    pub fn new() -> Self {
+        #[cfg(nnt_model_check)]
+        if mc::active() {
+            return Condvar {
+                inner: CondvarInner::Model(mc::Condvar::new()),
+            };
+        }
+        Condvar {
+            inner: CondvarInner::Std(std::sync::Condvar::new()),
+        }
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        let MutexGuard { inner, name, _held } = guard;
+        drop(_held);
+        match (&self.inner, inner) {
+            (CondvarInner::Std(cv), MutexGuardInner::Std(g)) => {
+                let g = cv.wait(g).unwrap_or_else(|e| {
+                    note_poison(name);
+                    e.into_inner()
+                });
+                MutexGuard {
+                    inner: MutexGuardInner::Std(g),
+                    name,
+                    _held: Held::acquire(name),
+                }
+            }
+            #[cfg(nnt_model_check)]
+            (CondvarInner::Model(cv), MutexGuardInner::Model(g)) => MutexGuard {
+                inner: MutexGuardInner::Model(cv.wait(g)),
+                name,
+                _held: Held::acquire(name),
+            },
+            #[cfg(nnt_model_check)]
+            _ => unreachable!("condvar paired with a mutex from a different world"),
+        }
+    }
+
+    /// Wait with a timeout; returns `(guard, timed_out)`.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, bool) {
+        let MutexGuard { inner, name, _held } = guard;
+        drop(_held);
+        match (&self.inner, inner) {
+            (CondvarInner::Std(cv), MutexGuardInner::Std(g)) => {
+                let (g, to) = cv.wait_timeout(g, dur).unwrap_or_else(|e| {
+                    note_poison(name);
+                    e.into_inner()
+                });
+                (
+                    MutexGuard {
+                        inner: MutexGuardInner::Std(g),
+                        name,
+                        _held: Held::acquire(name),
+                    },
+                    to.timed_out(),
+                )
+            }
+            #[cfg(nnt_model_check)]
+            (CondvarInner::Model(cv), MutexGuardInner::Model(g)) => {
+                let (g, timed_out) = cv.wait_timeout(g, dur);
+                (
+                    MutexGuard {
+                        inner: MutexGuardInner::Model(g),
+                        name,
+                        _held: Held::acquire(name),
+                    },
+                    timed_out,
+                )
+            }
+            #[cfg(nnt_model_check)]
+            _ => unreachable!("condvar paired with a mutex from a different world"),
+        }
+    }
+
+    pub fn notify_one(&self) {
+        match &self.inner {
+            CondvarInner::Std(cv) => cv.notify_one(),
+            #[cfg(nnt_model_check)]
+            CondvarInner::Model(cv) => cv.notify_one(),
+        }
+    }
+
+    pub fn notify_all(&self) {
+        match &self.inner {
+            CondvarInner::Std(cv) => cv.notify_all(),
+            #[cfg(nnt_model_check)]
+            CondvarInner::Model(cv) => cv.notify_all(),
+        }
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RwLock
+// ---------------------------------------------------------------------------
+
+enum RwLockInner<T> {
+    Std(std::sync::RwLock<T>),
+    #[cfg(nnt_model_check)]
+    Model(mc::RwLock<T>),
+}
+
+/// Shim RwLock with the same dual poison policy as [`Mutex`].
+pub struct RwLock<T> {
+    name: Option<&'static str>,
+    inner: RwLockInner<T>,
+}
+
+impl<T> RwLock<T> {
+    pub fn new(value: T) -> Self {
+        Self::build(None, value)
+    }
+
+    pub fn named(name: &'static str, value: T) -> Self {
+        Self::build(Some(name), value)
+    }
+
+    fn build(name: Option<&'static str>, value: T) -> Self {
+        #[cfg(nnt_model_check)]
+        if mc::active() {
+            return RwLock {
+                name,
+                inner: RwLockInner::Model(mc::RwLock::new(value)),
+            };
+        }
+        RwLock {
+            name,
+            inner: RwLockInner::Std(std::sync::RwLock::new(value)),
+        }
+    }
+
+    pub fn read(&self) -> RwLockReadGuard<'_, T> {
+        match &self.inner {
+            RwLockInner::Std(l) => {
+                let g = l.read().unwrap_or_else(|e| {
+                    note_poison(self.name);
+                    l.clear_poison();
+                    e.into_inner()
+                });
+                RwLockReadGuard {
+                    inner: ReadGuardInner::Std(g),
+                    _held: Held::acquire(self.name),
+                }
+            }
+            #[cfg(nnt_model_check)]
+            RwLockInner::Model(l) => RwLockReadGuard {
+                inner: ReadGuardInner::Model(l.read()),
+                _held: Held::acquire(self.name),
+            },
+        }
+    }
+
+    pub fn write(&self) -> RwLockWriteGuard<'_, T> {
+        match &self.inner {
+            RwLockInner::Std(l) => {
+                let g = l.write().unwrap_or_else(|e| {
+                    note_poison(self.name);
+                    l.clear_poison();
+                    e.into_inner()
+                });
+                RwLockWriteGuard {
+                    inner: WriteGuardInner::Std(g),
+                    _held: Held::acquire(self.name),
+                }
+            }
+            #[cfg(nnt_model_check)]
+            RwLockInner::Model(l) => RwLockWriteGuard {
+                inner: WriteGuardInner::Model(l.write()),
+                _held: Held::acquire(self.name),
+            },
+        }
+    }
+
+    pub fn read_checked(&self) -> Result<RwLockReadGuard<'_, T>, SyncError> {
+        match &self.inner {
+            RwLockInner::Std(l) => match l.read() {
+                Ok(g) => Ok(RwLockReadGuard {
+                    inner: ReadGuardInner::Std(g),
+                    _held: Held::acquire(self.name),
+                }),
+                Err(_) => {
+                    note_poison(self.name);
+                    l.clear_poison();
+                    Err(SyncError {
+                        lock: self.name.unwrap_or("<unnamed>"),
+                    })
+                }
+            },
+            #[cfg(nnt_model_check)]
+            RwLockInner::Model(l) => Ok(RwLockReadGuard {
+                inner: ReadGuardInner::Model(l.read()),
+                _held: Held::acquire(self.name),
+            }),
+        }
+    }
+
+    pub fn write_checked(&self) -> Result<RwLockWriteGuard<'_, T>, SyncError> {
+        match &self.inner {
+            RwLockInner::Std(l) => match l.write() {
+                Ok(g) => Ok(RwLockWriteGuard {
+                    inner: WriteGuardInner::Std(g),
+                    _held: Held::acquire(self.name),
+                }),
+                Err(_) => {
+                    note_poison(self.name);
+                    l.clear_poison();
+                    Err(SyncError {
+                        lock: self.name.unwrap_or("<unnamed>"),
+                    })
+                }
+            },
+            #[cfg(nnt_model_check)]
+            RwLockInner::Model(l) => Ok(RwLockWriteGuard {
+                inner: WriteGuardInner::Model(l.write()),
+                _held: Held::acquire(self.name),
+            }),
+        }
+    }
+}
+
+enum ReadGuardInner<'a, T> {
+    Std(std::sync::RwLockReadGuard<'a, T>),
+    #[cfg(nnt_model_check)]
+    Model(mc::RwLockReadGuard<'a, T>),
+}
+
+pub struct RwLockReadGuard<'a, T> {
+    inner: ReadGuardInner<'a, T>,
+    _held: Held,
+}
+
+impl<T> std::ops::Deref for RwLockReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        match &self.inner {
+            ReadGuardInner::Std(g) => g,
+            #[cfg(nnt_model_check)]
+            ReadGuardInner::Model(g) => g,
+        }
+    }
+}
+
+enum WriteGuardInner<'a, T> {
+    Std(std::sync::RwLockWriteGuard<'a, T>),
+    #[cfg(nnt_model_check)]
+    Model(mc::RwLockWriteGuard<'a, T>),
+}
+
+pub struct RwLockWriteGuard<'a, T> {
+    inner: WriteGuardInner<'a, T>,
+    _held: Held,
+}
+
+impl<T> std::ops::Deref for RwLockWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        match &self.inner {
+            WriteGuardInner::Std(g) => g,
+            #[cfg(nnt_model_check)]
+            WriteGuardInner::Model(g) => g,
+        }
+    }
+}
+
+impl<T> std::ops::DerefMut for RwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        match &mut self.inner {
+            WriteGuardInner::Std(g) => g,
+            #[cfg(nnt_model_check)]
+            WriteGuardInner::Model(g) => g,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomics
+// ---------------------------------------------------------------------------
+
+#[cfg(not(nnt_model_check))]
+pub mod atomic {
+    //! Plain re-export of std atomics in normal builds.
+    pub use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+}
+
+#[cfg(nnt_model_check)]
+pub mod atomic {
+    //! Model-aware atomics: std-backed outside model runs, scheduler-backed
+    //! (sequentially consistent) inside. Ordering arguments are accepted for
+    //! API parity and ignored by the model.
+    use crate::util::mc;
+    pub use std::sync::atomic::Ordering;
+
+    enum BoolInner {
+        Std(std::sync::atomic::AtomicBool),
+        Model(mc::AtomicBool),
+    }
+
+    pub struct AtomicBool {
+        inner: BoolInner,
+    }
+
+    impl AtomicBool {
+        pub fn new(v: bool) -> Self {
+            if mc::active() {
+                AtomicBool {
+                    inner: BoolInner::Model(mc::AtomicBool::new(v)),
+                }
+            } else {
+                AtomicBool {
+                    inner: BoolInner::Std(std::sync::atomic::AtomicBool::new(v)),
+                }
+            }
+        }
+
+        pub fn load(&self, order: Ordering) -> bool {
+            match &self.inner {
+                BoolInner::Std(a) => a.load(order),
+                BoolInner::Model(a) => a.load(),
+            }
+        }
+
+        pub fn store(&self, v: bool, order: Ordering) {
+            match &self.inner {
+                BoolInner::Std(a) => a.store(v, order),
+                BoolInner::Model(a) => a.store(v),
+            }
+        }
+
+        pub fn swap(&self, v: bool, order: Ordering) -> bool {
+            match &self.inner {
+                BoolInner::Std(a) => a.swap(v, order),
+                BoolInner::Model(a) => a.swap(v),
+            }
+        }
+    }
+
+    enum UsizeInner {
+        Std(std::sync::atomic::AtomicUsize),
+        Model(mc::AtomicUsize),
+    }
+
+    pub struct AtomicUsize {
+        inner: UsizeInner,
+    }
+
+    impl AtomicUsize {
+        pub fn new(v: usize) -> Self {
+            if mc::active() {
+                AtomicUsize {
+                    inner: UsizeInner::Model(mc::AtomicUsize::new(v)),
+                }
+            } else {
+                AtomicUsize {
+                    inner: UsizeInner::Std(std::sync::atomic::AtomicUsize::new(v)),
+                }
+            }
+        }
+
+        pub fn load(&self, order: Ordering) -> usize {
+            match &self.inner {
+                UsizeInner::Std(a) => a.load(order),
+                UsizeInner::Model(a) => a.load(),
+            }
+        }
+
+        pub fn store(&self, v: usize, order: Ordering) {
+            match &self.inner {
+                UsizeInner::Std(a) => a.store(v, order),
+                UsizeInner::Model(a) => a.store(v),
+            }
+        }
+
+        pub fn fetch_add(&self, v: usize, order: Ordering) -> usize {
+            match &self.inner {
+                UsizeInner::Std(a) => a.fetch_add(v, order),
+                UsizeInner::Model(a) => a.fetch_add(v),
+            }
+        }
+
+        pub fn fetch_sub(&self, v: usize, order: Ordering) -> usize {
+            match &self.inner {
+                UsizeInner::Std(a) => a.fetch_sub(v, order),
+                UsizeInner::Model(a) => a.fetch_sub(v),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mpsc
+// ---------------------------------------------------------------------------
+
+#[cfg(not(nnt_model_check))]
+pub use std::sync::mpsc;
+
+#[cfg(nnt_model_check)]
+pub mod mpsc {
+    //! Model-aware mpsc channel: std-backed outside model runs.
+    use crate::util::mc;
+    use std::time::Duration;
+    pub use std::sync::mpsc::{RecvError, RecvTimeoutError, SendError, TryRecvError};
+
+    enum SenderInner<T> {
+        Std(std::sync::mpsc::Sender<T>),
+        Model(mc::mpsc::Sender<T>),
+    }
+
+    pub struct Sender<T> {
+        inner: SenderInner<T>,
+    }
+
+    enum ReceiverInner<T> {
+        Std(std::sync::mpsc::Receiver<T>),
+        Model(mc::mpsc::Receiver<T>),
+    }
+
+    pub struct Receiver<T> {
+        inner: ReceiverInner<T>,
+    }
+
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        if mc::active() {
+            let (tx, rx) = mc::mpsc::channel();
+            (
+                Sender {
+                    inner: SenderInner::Model(tx),
+                },
+                Receiver {
+                    inner: ReceiverInner::Model(rx),
+                },
+            )
+        } else {
+            let (tx, rx) = std::sync::mpsc::channel();
+            (
+                Sender {
+                    inner: SenderInner::Std(tx),
+                },
+                Receiver {
+                    inner: ReceiverInner::Std(rx),
+                },
+            )
+        }
+    }
+
+    impl<T> Sender<T> {
+        pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+            match &self.inner {
+                SenderInner::Std(tx) => tx.send(value),
+                SenderInner::Model(tx) => tx.send(value),
+            }
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Self {
+            match &self.inner {
+                SenderInner::Std(tx) => Sender {
+                    inner: SenderInner::Std(tx.clone()),
+                },
+                SenderInner::Model(tx) => Sender {
+                    inner: SenderInner::Model(tx.clone()),
+                },
+            }
+        }
+    }
+
+    impl<T> Receiver<T> {
+        pub fn recv(&self) -> Result<T, RecvError> {
+            match &self.inner {
+                ReceiverInner::Std(rx) => rx.recv(),
+                ReceiverInner::Model(rx) => rx.recv(),
+            }
+        }
+
+        pub fn recv_timeout(&self, dur: Duration) -> Result<T, RecvTimeoutError> {
+            match &self.inner {
+                ReceiverInner::Std(rx) => rx.recv_timeout(dur),
+                ReceiverInner::Model(rx) => rx.recv_timeout(dur),
+            }
+        }
+
+        pub fn try_recv(&self) -> Result<T, TryRecvError> {
+            match &self.inner {
+                ReceiverInner::Std(rx) => rx.try_recv(),
+                ReceiverInner::Model(rx) => rx.try_recv(),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// thread
+// ---------------------------------------------------------------------------
+
+#[cfg(not(nnt_model_check))]
+pub use std::thread;
+
+#[cfg(nnt_model_check)]
+pub mod thread {
+    //! Model-aware thread spawn/join: std-backed outside model runs.
+    use crate::util::mc;
+    use std::time::Duration;
+
+    enum HandleInner<T> {
+        Std(std::thread::JoinHandle<T>),
+        Model(mc::JoinHandle<T>),
+    }
+
+    pub struct JoinHandle<T> {
+        inner: HandleInner<T>,
+    }
+
+    impl<T: 'static> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            match self.inner {
+                HandleInner::Std(h) => h.join(),
+                HandleInner::Model(h) => h.join(),
+            }
+        }
+
+        pub fn is_finished(&self) -> bool {
+            match &self.inner {
+                HandleInner::Std(h) => h.is_finished(),
+                HandleInner::Model(h) => h.is_finished(),
+            }
+        }
+    }
+
+    pub struct Builder {
+        name: Option<String>,
+    }
+
+    impl Builder {
+        pub fn new() -> Self {
+            Builder { name: None }
+        }
+
+        pub fn name(mut self, name: String) -> Self {
+            self.name = Some(name);
+            self
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            if mc::active() {
+                let name = self.name.unwrap_or_else(|| "model".to_string());
+                Ok(JoinHandle {
+                    inner: HandleInner::Model(mc::spawn(name, f)),
+                })
+            } else {
+                let mut b = std::thread::Builder::new();
+                if let Some(n) = self.name {
+                    b = b.name(n);
+                }
+                b.spawn(f).map(|h| JoinHandle {
+                    inner: HandleInner::Std(h),
+                })
+            }
+        }
+    }
+
+    impl Default for Builder {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        Builder::new().spawn(f).expect("failed to spawn thread")
+    }
+
+    pub fn yield_now() {
+        if mc::active() {
+            mc::yield_now();
+        } else {
+            std::thread::yield_now();
+        }
+    }
+
+    pub fn sleep(dur: Duration) {
+        if mc::active() {
+            // Time does not advance in the model; a sleep is just a
+            // scheduling opportunity.
+            mc::yield_now();
+        } else {
+            std::thread::sleep(dur);
+        }
+    }
+
+    pub fn available_parallelism() -> std::io::Result<std::num::NonZeroUsize> {
+        std::thread::available_parallelism()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovering_lock_survives_poison() {
+        let m = std::sync::Arc::new(Mutex::named("test.poison", 7u32));
+        let before = poison_recoveries();
+        let m2 = std::sync::Arc::clone(&m);
+        let r = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison it");
+        })
+        .join();
+        assert!(r.is_err());
+        // Recover-and-log path hands out the guard.
+        assert_eq!(*m.lock(), 7);
+        assert!(poison_recoveries() > before);
+        // Once healed, the checked path succeeds again.
+        assert!(m.lock_checked().is_ok());
+    }
+
+    #[test]
+    fn checked_lock_reports_poison_once_then_heals() {
+        let m = std::sync::Arc::new(Mutex::named("test.checked", 1u32));
+        let m2 = std::sync::Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock_checked().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        let err = m.lock_checked().expect_err("first access sees the error");
+        assert_eq!(err.lock, "test.checked");
+        assert!(m.lock_checked().is_ok(), "lock healed after report");
+    }
+
+    #[test]
+    fn rwlock_poison_policies() {
+        let l = std::sync::Arc::new(RwLock::named("test.rw", 5u32));
+        let l2 = std::sync::Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write();
+            panic!("poison it");
+        })
+        .join();
+        assert_eq!(*l.read(), 5, "recovering read survives");
+        assert!(l.write_checked().is_ok(), "healed by the recovery");
+    }
+
+    #[test]
+    fn condvar_roundtrip() {
+        let m = std::sync::Arc::new(Mutex::new(false));
+        let cv = std::sync::Arc::new(Condvar::new());
+        let (m2, cv2) = (std::sync::Arc::clone(&m), std::sync::Arc::clone(&cv));
+        let h = std::thread::spawn(move || {
+            let mut g = m2.lock();
+            while !*g {
+                g = cv2.wait(g);
+            }
+        });
+        *m.lock() = true;
+        cv.notify_all();
+        h.join().unwrap();
+        let (g, timed_out) = cv.wait_timeout(m.lock(), Duration::from_millis(1));
+        assert!(*g && timed_out, "nobody signals: must time out");
+    }
+
+    #[test]
+    fn lock_order_cycle_detection() {
+        let edges = [("a", "b"), ("b", "c")];
+        assert!(find_cycle_in(&edges).is_none());
+        let edges = [("a", "b"), ("b", "c"), ("c", "a")];
+        let cycle = find_cycle_in(&edges).expect("cycle exists");
+        assert!(cycle.len() >= 2, "cycle too short: {cycle:?}");
+    }
+
+    #[test]
+    fn deadlock_fixture_plants_a_cycle() {
+        let was = tracking();
+        set_lock_tracking(true);
+        reset_lock_order();
+        run_deadlock_fixture();
+        let cycle = find_lock_cycle().expect("fixture must produce a cycle");
+        assert!(
+            cycle.iter().any(|n| n.starts_with("fixture.")),
+            "cycle should involve the fixture locks: {cycle:?}"
+        );
+        reset_lock_order();
+        set_lock_tracking(was);
+    }
+}

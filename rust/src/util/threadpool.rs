@@ -10,26 +10,39 @@
 //! per pop) queue contention is unmeasurable, which keeps the
 //! implementation auditable.
 //!
+//! All synchronization goes through the [`crate::util::sync`] shim, so the
+//! pool's shutdown protocol is model-checked under `--cfg nnt_model_check`
+//! (see `tests/model_check.rs`). The shutdown flag lives *inside* the queue
+//! mutex: an earlier revision kept it in a separate atomic, which had a
+//! lost-wakeup window (worker checks the flag, drop stores it and notifies,
+//! worker then parks forever) — exactly the class of bug the model checker
+//! exists to catch.
+//!
 //! [`PackedBatch`]: crate::util::bitvec::PackedBatch
 //! [`CompiledNetlist::run_packed_sharded`]: crate::logic::sim::CompiledNetlist::run_packed_sharded
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+use std::sync::Arc;
+
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::{thread, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+struct PoolState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
 struct Shared {
-    queue: Mutex<VecDeque<Job>>,
+    queue: Mutex<PoolState>,
     available: Condvar,
-    shutdown: AtomicBool,
 }
 
 /// Fixed-size worker pool.
 pub struct ThreadPool {
     shared: Arc<Shared>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
     size: usize,
 }
 
@@ -38,14 +51,19 @@ impl ThreadPool {
     pub fn new(size: usize) -> Self {
         let size = size.max(1);
         let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::named(
+                "threadpool.queue",
+                PoolState {
+                    jobs: VecDeque::new(),
+                    shutdown: false,
+                },
+            ),
             available: Condvar::new(),
-            shutdown: AtomicBool::new(false),
         });
         let workers = (0..size)
             .map(|i| {
                 let shared = Arc::clone(&shared);
-                std::thread::Builder::new()
+                thread::Builder::new()
                     .name(format!("nnt-worker-{i}"))
                     .spawn(move || worker_loop(&shared))
                     .expect("spawn worker")
@@ -56,7 +74,7 @@ impl ThreadPool {
 
     /// Pool sized to the machine (`available_parallelism`, capped at 16).
     pub fn with_default_size() -> Self {
-        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         Self::new(n.min(16))
     }
 
@@ -67,8 +85,8 @@ impl ThreadPool {
 
     /// Enqueue a job.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
-        let mut q = self.shared.queue.lock().unwrap();
-        q.push_back(Box::new(job));
+        let mut q = self.shared.queue.lock();
+        q.jobs.push_back(Box::new(job));
         drop(q);
         self.shared.available.notify_one();
     }
@@ -98,7 +116,7 @@ impl ThreadPool {
             let remaining = Arc::clone(&remaining);
             self.execute(move || {
                 let r = f(item);
-                results.lock().unwrap()[i] = Some(r);
+                results.lock()[i] = Some(r);
                 remaining.fetch_sub(1, Ordering::Release);
             });
         }
@@ -106,10 +124,10 @@ impl ThreadPool {
         // Help drain the queue while waiting; this both avoids idle spinning
         // on the caller and makes a 1-worker pool behave like 2-way.
         while remaining.load(Ordering::Acquire) != 0 {
-            let job = { self.shared.queue.lock().unwrap().pop_front() };
+            let job = { self.shared.queue.lock().jobs.pop_front() };
             match job {
                 Some(job) => job(),
-                None => std::thread::yield_now(),
+                None => thread::yield_now(),
             }
         }
 
@@ -117,7 +135,6 @@ impl ThreadPool {
             .ok()
             .expect("no outstanding refs")
             .into_inner()
-            .unwrap()
             .into_iter()
             .map(|r| r.expect("all jobs completed"))
             .collect()
@@ -127,15 +144,15 @@ impl ThreadPool {
 fn worker_loop(shared: &Shared) {
     loop {
         let job = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = shared.queue.lock();
             loop {
-                if let Some(job) = q.pop_front() {
+                if let Some(job) = q.jobs.pop_front() {
                     break Some(job);
                 }
-                if shared.shutdown.load(Ordering::Acquire) {
+                if q.shutdown {
                     break None;
                 }
-                q = shared.available.wait(q).unwrap();
+                q = shared.available.wait(q);
             }
         };
         match job {
@@ -147,7 +164,9 @@ fn worker_loop(shared: &Shared) {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.shared.shutdown.store(true, Ordering::Release);
+        // The flag flip and the notify are both under/after the queue lock:
+        // no worker can re-check the flag and park between them.
+        self.shared.queue.lock().shutdown = true;
         self.shared.available.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -167,11 +186,11 @@ mod tests {
         for _ in 0..100 {
             let c = Arc::clone(&counter);
             pool.execute(move || {
-                c.fetch_add(1, Ordering::Relaxed);
+                c.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             });
         }
         drop(pool); // join workers
-        assert_eq!(counter.load(Ordering::Relaxed), 100);
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 100);
     }
 
     #[test]

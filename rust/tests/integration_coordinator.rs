@@ -127,7 +127,7 @@ fn tcp_server_multiple_clients() {
     let (router, model) = build_router(Policy::Logic, 8);
     let registry =
         Arc::new(nullanet_tiny::coordinator::ModelRegistry::with_default("coord", router));
-    let (tx, rx) = std::sync::mpsc::channel();
+    let (tx, rx) = nullanet_tiny::util::sync::mpsc::channel();
     let r2 = Arc::clone(&registry);
     let server = std::thread::spawn(move || {
         nullanet_tiny::coordinator::server::serve(r2, "127.0.0.1:0", Some(tx)).unwrap();

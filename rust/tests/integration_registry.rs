@@ -40,8 +40,8 @@ fn concurrent_classify_against_two_models_is_bit_exact_per_model() {
         batch_policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(500) },
         workers: 2,
     }));
-    reg.install("rega", router_for(&ma, synth(&ma)), None);
-    reg.install("regb", router_for(&mb, synth(&mb)), None);
+    reg.install("rega", router_for(&ma, synth(&ma)), None).unwrap();
+    reg.install("regb", router_for(&mb, synth(&mb)), None).unwrap();
 
     let mut joins = Vec::new();
     for t in 0..4u64 {
@@ -89,7 +89,7 @@ fn hot_swap_under_load_drops_and_misroutes_nothing() {
     let model = random_model("swap", 6, &[5, 4], 3, 1, 43);
     let netlist = synth(&model);
     let reg = Arc::new(ModelRegistry::new(RegistryConfig::default()));
-    reg.install("swap", router_for(&model, netlist.clone()), None);
+    reg.install("swap", router_for(&model, netlist.clone()), None).unwrap();
 
     let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
     let mut joins = Vec::new();
@@ -121,7 +121,7 @@ fn hot_swap_under_load_drops_and_misroutes_nothing() {
         std::thread::spawn(move || {
             let mut swaps = 0u64;
             while !stop.load(std::sync::atomic::Ordering::Acquire) {
-                reg.install("swap", router_for(&model, netlist.clone()), None);
+                reg.install("swap", router_for(&model, netlist.clone()), None).unwrap();
                 swaps += 1;
                 std::thread::sleep(Duration::from_millis(5));
             }
@@ -164,7 +164,7 @@ fn models_dir_scan_and_live_load_over_tcp() {
     // Sorted scan ⇒ deterministic default.
     assert_eq!(reg.default_name().as_deref(), Some("dira"));
 
-    let (tx, rx) = std::sync::mpsc::channel();
+    let (tx, rx) = nullanet_tiny::util::sync::mpsc::channel();
     let r2 = Arc::clone(&reg);
     let server = std::thread::spawn(move || {
         nullanet_tiny::coordinator::server::serve(r2, "127.0.0.1:0", Some(tx)).unwrap();

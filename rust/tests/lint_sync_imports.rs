@@ -1,0 +1,101 @@
+//! Source lint: every lock in the crate must come from `util::sync`.
+//!
+//! The model checker (ISSUE 7) can only explore interleavings of code that
+//! routes its synchronization through the shim layer, and the lock-order
+//! analysis only sees named shim locks. A direct `std::sync::Mutex`,
+//! `Condvar`, or `RwLock` anywhere else silently escapes both, so this test
+//! walks the source tree and fails on any such use outside the two files
+//! that implement the shim itself (`util/sync.rs`, `util/mc.rs`).
+//!
+//! Atomics, `Arc`, `mpsc`, and `std::thread` remain fine to use directly in
+//! code that never crosses a shim API boundary (the shim re-exports them
+//! for code that does).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+const FORBIDDEN: [&str; 3] = ["Mutex", "Condvar", "RwLock"];
+
+/// Files that are allowed to touch `std::sync` lock primitives directly:
+/// the shim and the scheduler underneath it (which must not recurse into
+/// itself), plus this lint (its docs name the forbidden paths).
+const EXEMPT: [&str; 3] = ["util/sync.rs", "util/mc.rs", "lint_sync_imports.rs"];
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in fs::read_dir(dir).unwrap_or_else(|e| panic!("read_dir {dir:?}: {e}")) {
+        let path = entry.unwrap().path();
+        if path.is_dir() {
+            rust_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Scan one line (comments already stripped) for `std::sync::<Lock>` or a
+/// brace import `std::sync::{..., <Lock>, ...}`. Brace groups in practice
+/// fit on one line in this codebase; a multi-line group would still be
+/// caught when the lock name follows `std::sync::{` on its opening line,
+/// and rustfmt keeps imports single-line here.
+fn violation(line: &str) -> Option<&'static str> {
+    let mut rest = line;
+    while let Some(pos) = rest.find("std::sync::") {
+        let tail = &rest[pos + "std::sync::".len()..];
+        if let Some(group) = tail.strip_prefix('{') {
+            let group = group.split('}').next().unwrap_or(group);
+            for name in FORBIDDEN {
+                // Token match: `Mutex` but not `MutexGuard` or `StdMutex`.
+                if group
+                    .split(|c: char| !c.is_alphanumeric() && c != '_')
+                    .any(|tok| tok == name)
+                {
+                    return Some(name);
+                }
+            }
+        } else {
+            for name in FORBIDDEN {
+                if tail.starts_with(name)
+                    && !tail[name.len()..]
+                        .chars()
+                        .next()
+                        .is_some_and(|c| c.is_alphanumeric() || c == '_')
+                {
+                    return Some(name);
+                }
+            }
+        }
+        rest = tail;
+    }
+    None
+}
+
+#[test]
+fn no_direct_std_sync_locks_outside_the_shim() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut files = Vec::new();
+    rust_files(&root.join("rust/src"), &mut files);
+    rust_files(&root.join("rust/tests"), &mut files);
+    files.sort();
+
+    let mut report = String::new();
+    for path in &files {
+        let rel = path.strip_prefix(root).unwrap_or(path).to_string_lossy().replace('\\', "/");
+        if EXEMPT.iter().any(|e| rel.ends_with(e)) {
+            continue;
+        }
+        let text = fs::read_to_string(path).unwrap_or_else(|e| panic!("read {rel}: {e}"));
+        for (i, raw) in text.lines().enumerate() {
+            let code = raw.split("//").next().unwrap_or(raw);
+            if let Some(name) = violation(code) {
+                writeln!(report, "  {rel}:{}: direct std::sync::{name}", i + 1).unwrap();
+            }
+        }
+    }
+    assert!(
+        report.is_empty(),
+        "direct std::sync lock primitives outside util/sync.rs — \
+         route them through crate::util::sync so the model checker and \
+         lock-order analysis can see them:\n{report}"
+    );
+}

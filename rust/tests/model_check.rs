@@ -1,0 +1,235 @@
+//! Exhaustive concurrency models for the serving stack, driven by the
+//! in-crate deterministic model checker ([`nullanet_tiny::util::mc`]).
+//!
+//! Build with `RUSTFLAGS="--cfg nnt_model_check" cargo test --test
+//! model_check` to route every `util::sync` primitive through the
+//! cooperative scheduler; the checker then explores thread interleavings of
+//! each protocol below by DFS with preemption bounding, and prints a
+//! replayable `mc1:…` schedule seed on any failure.
+//!
+//! Under a normal build the shim is a zero-cost `std::sync` re-export and
+//! only the smoke test below compiles, so tier-1 wall-clock cost is nil.
+//!
+//! The four models (ISSUE 7):
+//! 1. batcher close-flush vs concurrent submit — every accepted request is
+//!    flushed, every rejected one is handed back, none is stranded;
+//! 2. registry hot-swap drain vs a racing classify — the in-flight reply
+//!    survives the swap and is bit-exact;
+//! 3. thread-pool shutdown — no lost wakeup parks a worker forever, all
+//!    queued jobs run;
+//! 4. `ShardRunner` disjoint-range `SendPtr` writes — the sharded result
+//!    equals the single-threaded reference under every schedule.
+
+#[cfg(not(nnt_model_check))]
+#[test]
+fn model_checker_is_dormant_without_the_cfg() {
+    // The shim routes straight to std; the checker only engages under
+    // `--cfg nnt_model_check` (see the CI `model-check` job).
+    assert!(!nullanet_tiny::util::mc::active());
+}
+
+#[cfg(nnt_model_check)]
+mod models {
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use nullanet_tiny::coordinator::batcher::{BatchPolicy, Batcher, Reply, Request};
+    use nullanet_tiny::coordinator::{
+        ModelRegistry, Policy, RegistryConfig, Router, RouterBuilder,
+    };
+    use nullanet_tiny::flow::{run_flow, FlowConfig};
+    use nullanet_tiny::logic::netlist::LutNetlist;
+    use nullanet_tiny::logic::sim::CompiledNetlist;
+    use nullanet_tiny::nn::model::{random_model, Model};
+    use nullanet_tiny::util::bitvec::{BitVec, PackedBatch};
+    use nullanet_tiny::util::mc;
+    use nullanet_tiny::util::sync::atomic::{AtomicUsize, Ordering};
+    use nullanet_tiny::util::sync::{mpsc, thread};
+    use nullanet_tiny::util::threadpool::ThreadPool;
+
+    /// An hour: the age-flush path must never fire inside a model run
+    /// (model time only advances when nothing else is runnable, so a
+    /// wall-clock-dependent flush would be schedule noise, not protocol).
+    const NEVER: Duration = Duration::from_secs(3600);
+
+    const BITS: usize = 3;
+
+    fn request(pattern: usize) -> (Request, mpsc::Receiver<Reply>) {
+        let (tx, rx) = mpsc::channel();
+        let bits = BitVec::from_bools((0..BITS).map(|i| (pattern >> i) & 1 == 1));
+        (Request { bits, features: None, enqueued: Instant::now(), reply: tx }, rx)
+    }
+
+    /// Model 1: two submitters race a `close()` while a dispatcher drains.
+    /// Invariant: flushed + rejected == submitted — a request is either
+    /// batched (reply side alive) or handed back, never silently stranded
+    /// in a queue no dispatcher will ever drain.
+    #[test]
+    fn batcher_close_flush_vs_concurrent_submit() {
+        let cfg = mc::Config::default();
+        mc::check(cfg, || {
+            let b = Arc::new(Batcher::new(
+                BatchPolicy { max_batch: 2, max_wait: NEVER },
+                BITS,
+            ));
+            let flushed = Arc::new(AtomicUsize::new(0));
+            let rejected = Arc::new(AtomicUsize::new(0));
+
+            let bd = Arc::clone(&b);
+            let fd = Arc::clone(&flushed);
+            let dispatcher = thread::spawn(move || {
+                while let Some(batch) = bd.next_batch() {
+                    fd.fetch_add(batch.requests.len(), Ordering::SeqCst);
+                }
+            });
+
+            let mut submitters = Vec::new();
+            for p in 0..2usize {
+                let bs = Arc::clone(&b);
+                let rj = Arc::clone(&rejected);
+                submitters.push(thread::spawn(move || {
+                    let (req, _rx) = request(p);
+                    if bs.submit(req).is_err() {
+                        rj.fetch_add(1, Ordering::SeqCst);
+                    }
+                }));
+            }
+            let bc = Arc::clone(&b);
+            let closer = thread::spawn(move || bc.close());
+
+            for s in submitters {
+                s.join().unwrap();
+            }
+            closer.join().unwrap();
+            dispatcher.join().unwrap();
+
+            let f = flushed.load(Ordering::SeqCst);
+            let r = rejected.load(Ordering::SeqCst);
+            assert_eq!(f + r, 2, "flushed {f} + rejected {r} != submitted 2");
+            assert_eq!(b.depth(), 0, "drained batcher must be empty");
+            assert!(b.next_batch().is_none(), "closed+empty batcher returns None");
+        })
+        .assert_pass("batcher close-flush vs concurrent submit");
+    }
+
+    fn tiny_router(model: &Model, netlist: LutNetlist) -> Router {
+        RouterBuilder::new(model.clone())
+            .circuit(netlist)
+            .engine(Policy::Logic)
+            .batch_policy(BatchPolicy { max_batch: 1, max_wait: NEVER })
+            .workers(1)
+            .build()
+            .expect("router build inside the model")
+    }
+
+    /// Model 2: a classify races a hot-swap install. The registry contract:
+    /// whichever side of the swap the submit lands on, the reply arrives
+    /// and is bit-exact (a submit rejected by the draining router retries
+    /// on the replacement inside `classify`). Synthesis runs *outside* the
+    /// model; only the serving-stack interleavings are explored.
+    #[test]
+    fn registry_hot_swap_vs_racing_classify() {
+        let model = random_model("mcswap", 4, &[3], 2, 1, 5);
+        let netlist = run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None)
+            .expect("synthesis outside the model")
+            .circuit
+            .netlist;
+        let x: Vec<f64> = (0..4).map(|j| (j as f64 * 0.4).sin()).collect();
+        let expected = nullanet_tiny::nn::eval::classify(&model, &x);
+
+        let cfg = mc::Config {
+            max_preemptions: 1,
+            max_iterations: 30_000,
+            ..mc::Config::default()
+        };
+        mc::check(cfg, || {
+            let reg = Arc::new(ModelRegistry::new(RegistryConfig {
+                batch_policy: BatchPolicy { max_batch: 1, max_wait: NEVER },
+                workers: 1,
+            }));
+            reg.install("m", tiny_router(&model, netlist.clone()), None).unwrap();
+
+            let rc = Arc::clone(&reg);
+            let xc = x.clone();
+            let classifier = thread::spawn(move || {
+                let rx = rc.classify(Some("m"), &xc).expect("model stays routable");
+                let reply = rx.recv().expect("reply must survive the hot-swap drain");
+                reply.class
+            });
+
+            // Racing hot-swap: drains the old router while the classify is
+            // in flight.
+            reg.install("m", tiny_router(&model, netlist.clone()), None).unwrap();
+
+            let class = classifier.join().unwrap();
+            assert_eq!(class, expected, "reply must be bit-exact across the swap");
+            reg.shutdown_all();
+        })
+        .assert_pass("registry hot-swap vs racing classify");
+    }
+
+    /// Model 3: pool shutdown with queued jobs. The lost-wakeup bug class
+    /// this guards: a shutdown flag outside the queue mutex lets a worker
+    /// check the flag, miss the notify, and park forever — `drop(pool)`
+    /// then never joins. Under the model that schedule WILL be explored,
+    /// and the deadlock reported with a replay seed.
+    #[test]
+    fn threadpool_shutdown_loses_no_wakeup_and_no_job() {
+        mc::check(mc::Config::default(), || {
+            let pool = ThreadPool::new(2);
+            let done = Arc::new(AtomicUsize::new(0));
+            for _ in 0..2 {
+                let d = Arc::clone(&done);
+                pool.execute(move || {
+                    d.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            drop(pool); // close + join: must terminate under every schedule
+            assert_eq!(done.load(Ordering::SeqCst), 2, "queued jobs must all run");
+        })
+        .assert_pass("threadpool shutdown");
+    }
+
+    /// Model 4: the sharded packed kernel writes disjoint ranges of one
+    /// shared output buffer through a raw base pointer. Under every
+    /// interleaving of the two shard workers and the helping caller, the
+    /// result must equal the single-threaded reference — any aliasing or
+    /// missing-barrier bug shows up as a wrong bit.
+    #[test]
+    fn shard_runner_disjoint_writes_match_reference() {
+        let model = random_model("mcshard", 4, &[3], 2, 1, 9);
+        let netlist = run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None)
+            .expect("synthesis outside the model")
+            .circuit
+            .netlist;
+        let sim = Arc::new(CompiledNetlist::compile(&netlist));
+
+        // 130 samples -> 3 lane groups -> 2 shards on a 2-worker pool.
+        let n = 130;
+        let ni = sim.num_inputs();
+        let mut batch = PackedBatch::with_capacity(ni, n);
+        for s in 0..n {
+            batch.push_sample(&BitVec::from_bools(
+                (0..ni).map(|i| (s * 7 + i * 3) % 5 < 2),
+            ));
+        }
+        let batch = Arc::new(batch);
+        let mut scratch = sim.make_scratch();
+        let reference = sim.run_packed(&batch, &mut scratch);
+
+        mc::check(mc::Config::default(), || {
+            let pool = ThreadPool::new(2);
+            let out = CompiledNetlist::run_packed_sharded(&sim, &pool, &batch);
+            for s in 0..n {
+                for j in 0..sim.num_outputs() {
+                    assert_eq!(
+                        out.get(s, j),
+                        reference.get(s, j),
+                        "sharded output differs at sample {s} output {j}"
+                    );
+                }
+            }
+        })
+        .assert_pass("shard runner disjoint writes");
+    }
+}
