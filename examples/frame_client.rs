@@ -1,0 +1,154 @@
+//! Binary-protocol client for a running `nullanet serve` (ISSUE 8).
+//!
+//! Quantizes deterministic feature vectors client-side with the model's own
+//! input quantizer, packs them into length-prefixed classify frames, and
+//! drives the server through a pipelined window — the CI smoke uses it to
+//! exercise the sniffed binary path and the typed overload rejection
+//! end to end.
+//!
+//! ```bash
+//! cargo run --release --example frame_client -- \
+//!     --addr 127.0.0.1:7878 --model-file /tmp/tiny.model.json \
+//!     --count 64 --window 8 [--model NAME] [--expect-overload]
+//! ```
+//!
+//! Exit status: `0` when every request got a classify response (or, with
+//! `--expect-overload`, when at least one typed overload frame came back);
+//! nonzero on protocol errors, transport errors, or unmet expectations.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::process::ExitCode;
+use std::time::{Duration, Instant};
+
+use nullanet_tiny::coordinator::frame::{self, Frame};
+use nullanet_tiny::nn::eval::{codes_to_bitvec, quantize_input};
+use nullanet_tiny::nn::model::Model;
+use nullanet_tiny::util::cli::Args;
+use nullanet_tiny::util::prng::Xoshiro256;
+
+/// Read one complete frame, accumulating partial reads in `buf`.
+fn read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Frame, String> {
+    loop {
+        match frame::decode(buf).map_err(|e| format!("protocol error: {e}"))? {
+            Some((f, n)) => {
+                buf.drain(..n);
+                return Ok(f);
+            }
+            None => {
+                let mut chunk = [0u8; 4096];
+                let n = stream.read(&mut chunk).map_err(|e| format!("read: {e}"))?;
+                if n == 0 {
+                    return Err("server closed the connection mid-reply".into());
+                }
+                buf.extend_from_slice(&chunk[..n]);
+            }
+        }
+    }
+}
+
+fn run() -> Result<(), String> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    args.check_known(&[
+        "addr",
+        "model-file",
+        "model",
+        "count",
+        "window",
+        "expect-overload",
+    ])?;
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+    let model_file = args.get_str("model-file", "");
+    if model_file.is_empty() {
+        return Err("--model-file <model.json> is required (client-side quantizer)".into());
+    }
+    let named = args.get_str("model", "");
+    let named = (!named.is_empty()).then_some(named);
+    let count = args.get_usize("count", 64)?;
+    let window = args.get_usize("window", 8)?.max(1);
+    let expect_overload = args.get_bool("expect-overload");
+
+    let model = Model::load(&model_file).map_err(|e| format!("{model_file}: {e}"))?;
+
+    // Deterministic inputs → deterministic frames (same seed the serve
+    // bench uses, so smoke failures replay exactly).
+    let mut rng = Xoshiro256::new(0xC0FFEE);
+    let frames: Vec<Vec<u8>> = (0..count)
+        .map(|_| {
+            let x: Vec<f64> = (0..model.input_features)
+                .map(|_| 2.0 * rng.next_gaussian())
+                .collect();
+            let codes = quantize_input(&model, &x);
+            let bits = codes_to_bitvec(&codes, model.input_quant.bits);
+            frame::encode_classify_req(named.as_deref(), bits.len() as u16, bits.words())
+        })
+        .collect();
+
+    let mut stream = TcpStream::connect(&addr).map_err(|e| format!("{addr}: {e}"))?;
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .map_err(|e| e.to_string())?;
+
+    let (mut ok, mut overload, mut error) = (0usize, 0usize, 0usize);
+    let mut buf = Vec::new();
+    let mut sent = 0usize;
+    let t0 = Instant::now();
+    while ok + overload + error < count {
+        // Keep `window` requests in flight: the server answers strictly in
+        // order, so replies pair with requests positionally.
+        while sent < count && sent < ok + overload + error + window {
+            stream
+                .write_all(&frames[sent])
+                .map_err(|e| format!("write: {e}"))?;
+            sent += 1;
+        }
+        match read_frame(&mut stream, &mut buf)? {
+            Frame::ClassifyResp { classes } => {
+                if classes.len() != 1 {
+                    return Err(format!("expected 1 class per reply, got {}", classes.len()));
+                }
+                ok += 1;
+            }
+            Frame::Overload { message } => {
+                if overload == 0 {
+                    println!("overload: {message}");
+                }
+                overload += 1;
+            }
+            Frame::Error { message } => {
+                eprintln!("server error: {message}");
+                error += 1;
+            }
+            f => return Err(format!("unexpected frame from server: {f:?}")),
+        }
+    }
+    let wall = t0.elapsed();
+    println!(
+        "{count} requests over binary frames (window {window}): {ok} ok, \
+         {overload} overloaded, {error} errors, {:.0} req/s",
+        count as f64 / wall.as_secs_f64().max(1e-9),
+    );
+
+    if error > 0 {
+        return Err(format!("{error} typed error replies"));
+    }
+    if expect_overload {
+        if overload == 0 {
+            return Err("expected at least one overload rejection, saw none".into());
+        }
+    } else if overload > 0 {
+        return Err(format!("{overload} unexpected overload rejections"));
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("frame_client: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -52,7 +52,11 @@ fn main() {
     let mut builder = RouterBuilder::new(model.clone())
         .circuit(flow.circuit.netlist.clone())
         .engine(policy)
-        .batch_policy(BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(100) })
+        .batch_policy(BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_micros(100),
+            ..Default::default()
+        })
         .workers(workers);
     if let Some(spec) = pjrt {
         builder = builder.pjrt(spec);

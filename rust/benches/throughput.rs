@@ -112,7 +112,11 @@ fn main() {
         RouterBuilder::new(model.clone())
             .circuit(r.circuit.netlist.clone())
             .engine(Policy::Logic)
-            .batch_policy(BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(50) })
+            .batch_policy(BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_micros(50),
+                ..Default::default()
+            })
             .workers(4)
             .build()
             .expect("router"),

@@ -7,19 +7,31 @@
 //! the dispatcher a [`Batch`] whose inputs are already a [`PackedBatch`] —
 //! one `u64` word per input signal per 64-sample lane group — so the logic
 //! engine consumes the batch with zero per-sample `Vec` traffic between
-//! [`Batcher::next_batch`] and the simulator. Built on the crate's sync shim
+//! [`Batcher::next_batch`] and the simulator. The queue is **bounded**:
+//! a submit past [`BatchPolicy::max_depth`] is rejected as
+//! [`SubmitError::Overloaded`] (counted per model), so a saturated engine
+//! sheds load as typed overload replies instead of growing an unbounded
+//! queue. Built on the crate's sync shim
 //! (std-backed; no tokio offline) — with one or more dispatcher threads per
 //! [`crate::coordinator::router::Router`]. Under `--cfg nnt_model_check`
 //! the close-flush vs concurrent-submit protocol is exhaustively model
 //! checked (`tests/model_check.rs`).
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::metrics::Metrics;
 use crate::util::sync::mpsc::Sender;
 use crate::util::sync::{Condvar, Mutex};
 
 use crate::util::bitvec::{BitVec, PackedBatch};
+
+/// Callback the dispatcher invokes once a request's reply (or failure) has
+/// been sent — how a *nonblocking* front end learns a reply is ready
+/// without parking a thread on the receiver. The event loop passes its
+/// waker here; blocking callers pass `None` and park on `reply` directly.
+pub type ReplyNotify = Arc<dyn Fn() + Send + Sync>;
 
 /// One queued inference request.
 pub struct Request {
@@ -32,6 +44,10 @@ pub struct Request {
     pub enqueued: Instant,
     /// Completion channel: (predicted class, engine label).
     pub reply: Sender<Reply>,
+    /// Invoked after `reply` is resolved (sent **or** dropped on engine
+    /// failure) so an event-loop caller wakes exactly when polling the
+    /// receiver will succeed. `None` for blocking callers.
+    pub notify: Option<ReplyNotify>,
 }
 
 /// Completion message.
@@ -61,11 +77,46 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// Flush when the oldest request has waited this long.
     pub max_wait: Duration,
+    /// Admission cap: reject (rather than queue) a submit that would push
+    /// the queue past this depth. Bounds worst-case queueing latency and
+    /// memory per model; the rejection surfaces as a typed overload reply,
+    /// not unbounded queue growth.
+    pub max_depth: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(200) }
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            max_depth: DEFAULT_MAX_DEPTH,
+        }
+    }
+}
+
+/// Default admission cap — deep enough that only a genuinely saturated
+/// model trips it (64 full batches at the default `max_batch`).
+pub const DEFAULT_MAX_DEPTH: usize = 4096;
+
+/// Why [`Batcher::submit`] refused a request. Both variants hand the
+/// request back intact (reply sender included) — the two cases demand
+/// opposite reactions, which is why this is not a bare `Err(Request)`:
+/// a closed batcher means "re-fetch the live router and resubmit"
+/// (hot-swap race), an overloaded one means "tell the client to back off".
+pub enum SubmitError {
+    /// The batcher was closed (shutdown or hot-swap drain).
+    Closed(Request),
+    /// The queue is at [`BatchPolicy::max_depth`]; admission control
+    /// rejected the request.
+    Overloaded(Request),
+}
+
+impl SubmitError {
+    /// The rejected request, whichever way it was rejected.
+    pub fn into_request(self) -> Request {
+        match self {
+            SubmitError::Closed(r) | SubmitError::Overloaded(r) => r,
+        }
     }
 }
 
@@ -85,16 +136,31 @@ pub struct Batcher {
     input_bits: usize,
     state: Mutex<QueueState>,
     signal: Condvar,
+    /// Per-model metrics for the admission counters (overload rejections,
+    /// queue high-watermark). `None` for standalone batchers in tests.
+    metrics: Option<Arc<Metrics>>,
 }
 
 impl Batcher {
     /// New empty batcher over requests of `input_bits` circuit-input bits.
     pub fn new(policy: BatchPolicy, input_bits: usize) -> Self {
+        Self::with_metrics(policy, input_bits, None)
+    }
+
+    /// Like [`new`](Self::new), wired to a model's [`Metrics`] so admission
+    /// decisions (overload rejections, queue high-watermark) are counted
+    /// where the `metrics` admin command reports them.
+    pub fn with_metrics(
+        policy: BatchPolicy,
+        input_bits: usize,
+        metrics: Option<Arc<Metrics>>,
+    ) -> Self {
         Batcher {
             policy,
             input_bits,
             state: Mutex::named("batcher.state", QueueState { queue: VecDeque::new(), closed: false }),
             signal: Condvar::new(),
+            metrics,
         }
     }
 
@@ -108,12 +174,19 @@ impl Batcher {
         self.input_bits
     }
 
-    /// Enqueue a request. Returns the request back (`Err`) when the batcher
-    /// has been closed: a closed batcher's dispatcher may already have
-    /// drained its final batch and exited, so accepting the request would
-    /// strand its reply sender in the queue forever. Callers racing a
-    /// shutdown or hot-swap re-fetch a live router and resubmit.
-    pub fn submit(&self, req: Request) -> Result<(), Request> {
+    /// Enqueue a request. Two typed rejections, both handing the request
+    /// back intact (reply sender included):
+    ///
+    /// * [`SubmitError::Closed`] — the batcher has been closed: its
+    ///   dispatcher may already have drained the final batch and exited,
+    ///   so accepting the request would strand its reply sender forever.
+    ///   Callers racing a shutdown or hot-swap re-fetch a live router and
+    ///   resubmit.
+    /// * [`SubmitError::Overloaded`] — admission control: the queue is at
+    ///   [`BatchPolicy::max_depth`]. Resubmitting immediately would fail
+    ///   again; the caller surfaces a typed overload reply so the client
+    ///   backs off.
+    pub fn submit(&self, req: Request) -> Result<(), SubmitError> {
         assert_eq!(
             req.bits.len(),
             self.input_bits,
@@ -123,11 +196,22 @@ impl Batcher {
         );
         let mut s = self.state.lock();
         if s.closed {
-            return Err(req);
+            return Err(SubmitError::Closed(req));
+        }
+        if s.queue.len() >= self.policy.max_depth {
+            drop(s);
+            if let Some(m) = &self.metrics {
+                m.rejected_overload.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+            return Err(SubmitError::Overloaded(req));
         }
         s.queue.push_back(req);
-        let full = s.queue.len() >= self.policy.max_batch;
+        let depth = s.queue.len();
+        let full = depth >= self.policy.max_batch;
         drop(s);
+        if let Some(m) = &self.metrics {
+            m.observe_queue_depth(depth as u64);
+        }
         if full {
             // A full queue can satisfy the flush condition of every parked
             // dispatcher at once; wake them all so none strands a flush.
@@ -220,7 +304,7 @@ mod tests {
         let (tx, rx) = channel();
         let bits = BitVec::from_bools((0..BITS).map(|i| (pattern >> i) & 1 == 1));
         (
-            Request { bits, features: None, enqueued: Instant::now(), reply: tx },
+            Request { bits, features: None, enqueued: Instant::now(), reply: tx, notify: None },
             rx,
         )
     }
@@ -228,7 +312,7 @@ mod tests {
     #[test]
     fn flushes_on_max_batch() {
         let b = Batcher::new(
-            BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10) },
+            BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10), ..Default::default() },
             BITS,
         );
         for i in 0..3 {
@@ -245,7 +329,7 @@ mod tests {
     #[test]
     fn packs_request_bits_in_lane_order() {
         let b = Batcher::new(
-            BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(10) },
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(10), ..Default::default() },
             BITS,
         );
         for pattern in 0..8usize {
@@ -265,7 +349,7 @@ mod tests {
     #[test]
     fn flushes_on_age() {
         let b = Arc::new(Batcher::new(
-            BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) },
+            BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5), ..Default::default() },
             BITS,
         ));
         let (r, _rx) = req(1);
@@ -290,7 +374,7 @@ mod tests {
         // wakeup re-entered the age branch and slept out the full window —
         // here, 10 s. The flush must happen in milliseconds.
         let b = Batcher::new(
-            BatchPolicy { max_batch: 64, max_wait: Duration::from_secs(10) },
+            BatchPolicy { max_batch: 64, max_wait: Duration::from_secs(10), ..Default::default() },
             BITS,
         );
         let (r, _rx) = req(5);
@@ -313,7 +397,7 @@ mod tests {
         // Same stall, other interleaving: the dispatcher is already parked
         // in the age branch's wait_timeout when close() arrives.
         let b = Arc::new(Batcher::new(
-            BatchPolicy { max_batch: 64, max_wait: Duration::from_secs(10) },
+            BatchPolicy { max_batch: 64, max_wait: Duration::from_secs(10), ..Default::default() },
             BITS,
         ));
         let b2 = Arc::clone(&b);
@@ -342,10 +426,54 @@ mod tests {
         b.close();
         let (r, _rx) = req(3);
         let rejected = b.submit(r).expect_err("closed batcher must reject");
+        assert!(matches!(rejected, SubmitError::Closed(_)), "a close is not an overload");
         // The caller gets the request back intact (reply sender included),
         // so it can resubmit to a replacement router.
-        assert_eq!(rejected.bits.len(), BITS);
+        assert_eq!(rejected.into_request().bits.len(), BITS);
         assert_eq!(b.depth(), 0, "rejected request must not sit in the queue");
+    }
+
+    #[test]
+    fn submit_past_max_depth_is_rejected_as_overload() {
+        let metrics = Arc::new(Metrics::new());
+        let b = Batcher::with_metrics(
+            BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10), max_depth: 2 },
+            BITS,
+            Some(Arc::clone(&metrics)),
+        );
+        for i in 0..2 {
+            let (r, rx) = req(i);
+            std::mem::forget(rx);
+            b.submit(r).unwrap();
+        }
+        let (r, _rx) = req(7);
+        let rejected = b.submit(r).expect_err("queue at max_depth must reject");
+        assert!(matches!(rejected, SubmitError::Overloaded(_)));
+        assert_eq!(rejected.into_request().bits.len(), BITS, "request comes back intact");
+        assert_eq!(b.depth(), 2, "rejected request must not grow the queue");
+        use std::sync::atomic::Ordering;
+        assert_eq!(metrics.rejected_overload.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.queue_depth_high_watermark.load(Ordering::Relaxed), 2);
+        // Draining the queue reopens admission.
+        assert!(b.next_batch().is_some());
+        let (r, _rx2) = req(1);
+        b.submit(r).expect("drained queue admits again");
+    }
+
+    #[test]
+    fn depth_capped_below_max_batch_still_flushes_on_age() {
+        // A depth cap below max_batch (e.g. --max-queue-depth 1 to induce
+        // overload in CI) must not starve the queue: the age timer still
+        // flushes whatever is admitted.
+        let b = Batcher::new(
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2), max_depth: 1 },
+            BITS,
+        );
+        let (r, _rx) = req(1);
+        std::mem::forget(_rx);
+        b.submit(r).unwrap();
+        let batch = b.next_batch().expect("age flush below max_batch");
+        assert_eq!(batch.requests.len(), 1);
     }
 
     #[test]
@@ -358,13 +486,14 @@ mod tests {
             features: None,
             enqueued: Instant::now(),
             reply: tx,
+            notify: None,
         });
     }
 
     #[test]
     fn concurrent_submit_and_drain() {
         let b = Arc::new(Batcher::new(
-            BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(1) },
+            BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(1), ..Default::default() },
             BITS,
         ));
         let b2 = Arc::clone(&b);

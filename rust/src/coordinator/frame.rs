@@ -1,0 +1,537 @@
+//! Length-prefixed binary wire frames for the serving front end.
+//!
+//! The JSON-lines protocol re-parses floats and re-binarizes on every
+//! request — fine for `nc`, fatal for the latency budget the paper buys
+//! with fixed-function logic. A binary frame carries **pre-binarized**
+//! packed `u64` feature words end to end, so the server-side cost of a
+//! classify request is a bounds check plus a word scatter into the
+//! [`PackedBatch`] the engine consumes (no float parse, no quantize).
+//!
+//! ## Frame layout (version 1, all integers little-endian)
+//!
+//! ```text
+//! offset size field
+//! 0      1    magic       0xF5 (never a JSON first byte — see sniffing)
+//! 1      1    version     0x01
+//! 2      1    type        1 = CLASSIFY_REQ   2 = CLASSIFY_RESP
+//!                         3 = ERROR          4 = OVERLOAD
+//! 3      1    name_len M  model-name bytes (0 = default model)
+//! 4      4    payload_len P = bytes after this 12-byte header
+//! 8      2    samples S
+//! 10     2    bits B      circuit-input bits per sample (requests only)
+//! 12     M    model name  UTF-8
+//! 12+M   …    body        REQ:  S × ceil(B/64) × 8 bytes of u64 words,
+//!                               sample-major, LSB-first within a word
+//!                         RESP: S × 2 bytes of u16 class ids
+//!                         ERROR/OVERLOAD: UTF-8 message
+//! ```
+//!
+//! `P` must equal `M + body-size` exactly; a frame longer than
+//! [`MAX_FRAME_PAYLOAD`] is rejected before any buffering decision, so a
+//! hostile length prefix cannot balloon a connection buffer. Bits at or
+//! beyond `B` in a sample's last word must be zero (the [`BitVec`] tail
+//! invariant the batcher's word-scatter fast path relies on) — stray bits
+//! are a protocol error, not silently masked.
+//!
+//! ## Protocol sniffing
+//!
+//! The magic byte `0xF5` is not valid UTF-8 as a first byte, so it can
+//! never begin a JSON-lines request (`{`, whitespace, or any printable
+//! text). The server sniffs the first byte of each connection and routes
+//! it to the JSON or binary state machine — both protocols share one port
+//! and every pre-existing JSON client keeps working unchanged. See
+//! `rust/DESIGN.md` §Serving-v2 for why sniffing beat a version-negotiation
+//! handshake.
+//!
+//! ## Incremental parsing
+//!
+//! [`decode`] is a pure function over an accumulation buffer: it returns
+//! `Ok(None)` while the buffer holds only a partial frame, and
+//! `Ok(Some((frame, consumed)))` once a whole frame is available — the
+//! caller drains `consumed` bytes and calls again, so any byte-split
+//! across reads (one syscall delivering half a header, ten frames, or a
+//! frame and a half) parses identically. Fatal errors ([`FrameError`])
+//! mean the stream is unsynchronized and the connection must be dropped
+//! after a best-effort error frame.
+
+use std::fmt;
+
+use crate::util::bitvec::{BitVec, PackedBatch};
+
+/// First byte of every binary frame. `0xF5` is a UTF-8 continuation-range
+/// byte, so no JSON-lines request can ever start with it.
+pub const MAGIC: u8 = 0xF5;
+
+/// Wire-format version this module speaks.
+pub const VERSION: u8 = 1;
+
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 12;
+
+/// Hard cap on one frame's payload — same budget as the JSON path's
+/// per-line cap, enforced straight off the length prefix so a hostile
+/// header cannot grow the connection buffer without bound.
+pub const MAX_FRAME_PAYLOAD: usize = 1 << 20;
+
+/// Hard cap on samples per classify request frame.
+pub const MAX_SAMPLES: usize = 4096;
+
+/// Frame type tags (byte 2).
+pub const TYPE_CLASSIFY_REQ: u8 = 1;
+/// Classify response: `S` u16 class ids.
+pub const TYPE_CLASSIFY_RESP: u8 = 2;
+/// Typed protocol/engine error; connection stays usable unless the stream
+/// itself is unsynchronized.
+pub const TYPE_ERROR: u8 = 3;
+/// Typed admission-control rejection: the model's queue is full. Distinct
+/// from [`TYPE_ERROR`] so clients can back off instead of treating
+/// overload as a malformed request.
+pub const TYPE_OVERLOAD: u8 = 4;
+
+/// Words per sample for a `bits`-wide circuit input.
+#[inline]
+pub fn words_per_sample(bits: u16) -> usize {
+    (bits as usize).div_ceil(64)
+}
+
+/// One decoded frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Classify `words.len() / ceil(bits/64)` samples on `model` (or the
+    /// default). `words` is sample-major: each sample's `ceil(bits/64)`
+    /// LSB-first words are contiguous.
+    ClassifyReq { model: Option<String>, bits: u16, words: Vec<u64> },
+    /// Per-sample predicted classes, in request sample order.
+    ClassifyResp { classes: Vec<u16> },
+    /// Protocol or engine error.
+    Error { message: String },
+    /// Admission-control rejection (queue full) — resubmit after backoff.
+    Overload { message: String },
+}
+
+impl Frame {
+    /// Samples carried by a classify request (0 for other frame types).
+    pub fn num_samples(&self) -> usize {
+        match self {
+            Frame::ClassifyReq { bits, words, .. } => {
+                words.len() / words_per_sample(*bits)
+            }
+            Frame::ClassifyResp { classes } => classes.len(),
+            _ => 0,
+        }
+    }
+}
+
+/// Why a byte stream failed to parse as a frame. Every variant is fatal
+/// for the connection: the stream is unsynchronized past the bad header.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// First byte was not [`MAGIC`] (the caller should have sniffed JSON).
+    BadMagic(u8),
+    /// Unsupported wire-format version.
+    BadVersion(u8),
+    /// Unknown frame type tag.
+    BadType(u8),
+    /// Length prefix exceeds [`MAX_FRAME_PAYLOAD`].
+    Oversized(u32),
+    /// Length prefix disagrees with the header's own field arithmetic.
+    LengthMismatch { expected: usize, got: usize },
+    /// Classify request with more than [`MAX_SAMPLES`] samples.
+    TooManySamples(u16),
+    /// Classify request with a zero-bit sample width or zero samples.
+    EmptyRequest,
+    /// A sample word has bits set at or beyond the declared width.
+    StrayBits { sample: usize },
+    /// Model name is not valid UTF-8.
+    BadName,
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::BadMagic(b) => write!(f, "bad magic byte 0x{b:02X}"),
+            FrameError::BadVersion(v) => {
+                write!(f, "unsupported frame version {v} (speak {VERSION})")
+            }
+            FrameError::BadType(t) => write!(f, "unknown frame type {t}"),
+            FrameError::Oversized(n) => write!(
+                f,
+                "frame payload {n} bytes exceeds the {MAX_FRAME_PAYLOAD}-byte cap"
+            ),
+            FrameError::LengthMismatch { expected, got } => write!(
+                f,
+                "length prefix says {got} payload bytes, header fields imply {expected}"
+            ),
+            FrameError::TooManySamples(s) => {
+                write!(f, "{s} samples exceeds the {MAX_SAMPLES}-sample frame cap")
+            }
+            FrameError::EmptyRequest => {
+                write!(f, "classify request needs ≥ 1 sample of ≥ 1 bit")
+            }
+            FrameError::StrayBits { sample } => write!(
+                f,
+                "sample {sample} has bits set past the declared width"
+            ),
+            FrameError::BadName => write!(f, "model name is not valid UTF-8"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+#[inline]
+fn u16_le(b: &[u8]) -> u16 {
+    u16::from_le_bytes([b[0], b[1]])
+}
+
+#[inline]
+fn u32_le(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+/// Incrementally decode the first complete frame in `buf`.
+///
+/// * `Ok(None)` — `buf` holds only a partial frame; read more bytes and
+///   call again (nothing is consumed).
+/// * `Ok(Some((frame, consumed)))` — drain `consumed` bytes; more frames
+///   may follow in the remainder (pipelining).
+/// * `Err(_)` — the stream is unsynchronized; drop the connection.
+///
+/// Every header invariant — magic, version, type, the payload cap, and
+/// the exact length arithmetic — is checked *before* the payload is
+/// touched, so a truncated or hostile length prefix costs nothing.
+pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, FrameError> {
+    if buf.is_empty() {
+        return Ok(None);
+    }
+    if buf[0] != MAGIC {
+        return Err(FrameError::BadMagic(buf[0]));
+    }
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    if buf[1] != VERSION {
+        return Err(FrameError::BadVersion(buf[1]));
+    }
+    let ftype = buf[2];
+    let name_len = buf[3] as usize;
+    let payload = u32_le(&buf[4..8]);
+    if payload as usize > MAX_FRAME_PAYLOAD {
+        return Err(FrameError::Oversized(payload));
+    }
+    let payload = payload as usize;
+    let samples = u16_le(&buf[8..10]);
+    let bits = u16_le(&buf[10..12]);
+    // Validate the length arithmetic from header fields alone — before
+    // waiting for (or trusting) the payload bytes.
+    let body = match ftype {
+        TYPE_CLASSIFY_REQ => {
+            if samples == 0 || bits == 0 {
+                return Err(FrameError::EmptyRequest);
+            }
+            if samples as usize > MAX_SAMPLES {
+                return Err(FrameError::TooManySamples(samples));
+            }
+            samples as usize * words_per_sample(bits) * 8
+        }
+        TYPE_CLASSIFY_RESP => samples as usize * 2,
+        TYPE_ERROR | TYPE_OVERLOAD => payload.saturating_sub(name_len),
+        t => return Err(FrameError::BadType(t)),
+    };
+    let expected = name_len + body;
+    if payload != expected {
+        return Err(FrameError::LengthMismatch { expected, got: payload });
+    }
+    let total = HEADER_LEN + payload;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let name_bytes = &buf[HEADER_LEN..HEADER_LEN + name_len];
+    let body_bytes = &buf[HEADER_LEN + name_len..total];
+    let frame = match ftype {
+        TYPE_CLASSIFY_REQ => {
+            let model = if name_len == 0 {
+                None
+            } else {
+                Some(
+                    std::str::from_utf8(name_bytes)
+                        .map_err(|_| FrameError::BadName)?
+                        .to_string(),
+                )
+            };
+            let wps = words_per_sample(bits);
+            let mut words = Vec::with_capacity(samples as usize * wps);
+            for chunk in body_bytes.chunks_exact(8) {
+                words.push(u64::from_le_bytes(chunk.try_into().expect("chunks_exact(8)")));
+            }
+            // The batcher's word-scatter fast path assumes the BitVec tail
+            // invariant; enforce it on the wire instead of masking, so a
+            // client bug surfaces as a typed error, not silent truncation.
+            let tail = bits as usize & 63;
+            if tail != 0 {
+                for (s, sample) in words.chunks_exact(wps).enumerate() {
+                    if sample[wps - 1] >> tail != 0 {
+                        return Err(FrameError::StrayBits { sample: s });
+                    }
+                }
+            }
+            Frame::ClassifyReq { model, bits, words }
+        }
+        TYPE_CLASSIFY_RESP => {
+            let classes =
+                body_bytes.chunks_exact(2).map(u16_le).collect::<Vec<u16>>();
+            Frame::ClassifyResp { classes }
+        }
+        t => {
+            let message = String::from_utf8_lossy(body_bytes).into_owned();
+            if t == TYPE_ERROR {
+                Frame::Error { message }
+            } else {
+                Frame::Overload { message }
+            }
+        }
+    };
+    Ok(Some((frame, total)))
+}
+
+fn header(ftype: u8, name_len: u8, payload: u32, samples: u16, bits: u16) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[0] = MAGIC;
+    h[1] = VERSION;
+    h[2] = ftype;
+    h[3] = name_len;
+    h[4..8].copy_from_slice(&payload.to_le_bytes());
+    h[8..10].copy_from_slice(&samples.to_le_bytes());
+    h[10..12].copy_from_slice(&bits.to_le_bytes());
+    h
+}
+
+/// Encode a classify request. `words` is sample-major
+/// (`ceil(bits/64)` LSB-first words per sample); its length fixes the
+/// sample count. Panics on arithmetic the wire format cannot carry
+/// (encoders are in-process clients/tests — a wire peer can only produce
+/// [`FrameError`]s, never panics).
+pub fn encode_classify_req(model: Option<&str>, bits: u16, words: &[u64]) -> Vec<u8> {
+    assert!(bits > 0, "encode_classify_req: zero-bit samples");
+    let wps = words_per_sample(bits);
+    assert_eq!(words.len() % wps, 0, "words must be a whole number of samples");
+    let samples = words.len() / wps;
+    assert!(
+        (1..=MAX_SAMPLES).contains(&samples),
+        "encode_classify_req: {samples} samples (cap {MAX_SAMPLES})"
+    );
+    let name = model.unwrap_or("").as_bytes();
+    assert!(name.len() <= u8::MAX as usize, "model name exceeds 255 bytes");
+    let payload = name.len() + words.len() * 8;
+    let mut out = Vec::with_capacity(HEADER_LEN + payload);
+    out.extend_from_slice(&header(
+        TYPE_CLASSIFY_REQ,
+        name.len() as u8,
+        payload as u32,
+        samples as u16,
+        bits,
+    ));
+    out.extend_from_slice(name);
+    for w in words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out
+}
+
+/// Encode a classify response (one u16 class per request sample).
+pub fn encode_classify_resp(classes: &[u16]) -> Vec<u8> {
+    assert!(classes.len() <= u16::MAX as usize, "class count exceeds u16");
+    let payload = classes.len() * 2;
+    let mut out = Vec::with_capacity(HEADER_LEN + payload);
+    out.extend_from_slice(&header(
+        TYPE_CLASSIFY_RESP,
+        0,
+        payload as u32,
+        classes.len() as u16,
+        0,
+    ));
+    for c in classes {
+        out.extend_from_slice(&c.to_le_bytes());
+    }
+    out
+}
+
+fn encode_message(ftype: u8, message: &str) -> Vec<u8> {
+    // Truncate pathological messages instead of failing the reply path.
+    let msg = &message.as_bytes()[..message.len().min(MAX_FRAME_PAYLOAD)];
+    let mut out = Vec::with_capacity(HEADER_LEN + msg.len());
+    out.extend_from_slice(&header(ftype, 0, msg.len() as u32, 0, 0));
+    out.extend_from_slice(msg);
+    out
+}
+
+/// Encode a typed error frame.
+pub fn encode_error(message: &str) -> Vec<u8> {
+    encode_message(TYPE_ERROR, message)
+}
+
+/// Encode a typed overload (admission-control) rejection frame.
+pub fn encode_overload(message: &str) -> Vec<u8> {
+    encode_message(TYPE_OVERLOAD, message)
+}
+
+/// Scatter a decoded classify request straight into a [`PackedBatch`] —
+/// the "bounds check plus a word scatter" the module docs promise. The
+/// decode layer already validated widths and the tail invariant.
+pub fn request_into_packed(bits: u16, words: &[u64]) -> PackedBatch {
+    let wps = words_per_sample(bits);
+    let samples = words.len() / wps;
+    let mut packed = PackedBatch::with_capacity(bits as usize, samples);
+    for sample in words.chunks_exact(wps) {
+        packed.push_sample_words(sample);
+    }
+    packed
+}
+
+/// One sample of a decoded classify request as a [`BitVec`] in the
+/// batcher's native format (the decode layer already enforced the tail
+/// invariant).
+pub fn sample_bits(bits: u16, words: &[u64], sample: usize) -> BitVec {
+    let wps = words_per_sample(bits);
+    BitVec::from_words(bits as usize, words[sample * wps..(sample + 1) * wps].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req_words(samples: usize, bits: u16, seed: u64) -> Vec<u64> {
+        let wps = words_per_sample(bits);
+        let mut rng = crate::util::prng::Xoshiro256::new(seed);
+        let mut words = Vec::with_capacity(samples * wps);
+        for _ in 0..samples {
+            for w in 0..wps {
+                let mut v = rng.next_u64();
+                if w == wps - 1 && bits as usize & 63 != 0 {
+                    v &= (1u64 << (bits as usize & 63)) - 1;
+                }
+                words.push(v);
+            }
+        }
+        words
+    }
+
+    #[test]
+    fn classify_req_round_trips() {
+        for (samples, bits) in [(1usize, 6u16), (3, 64), (5, 70), (64, 1)] {
+            let words = req_words(samples, bits, 42);
+            let enc = encode_classify_req(Some("jsc-s"), bits, &words);
+            let (frame, consumed) = decode(&enc).unwrap().expect("complete frame");
+            assert_eq!(consumed, enc.len());
+            match frame {
+                Frame::ClassifyReq { model, bits: b, words: w } => {
+                    assert_eq!(model.as_deref(), Some("jsc-s"));
+                    assert_eq!(b, bits);
+                    assert_eq!(w, words);
+                }
+                f => panic!("wrong frame {f:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn default_model_is_empty_name() {
+        let enc = encode_classify_req(None, 8, &[0xA5]);
+        let (frame, _) = decode(&enc).unwrap().unwrap();
+        assert!(matches!(frame, Frame::ClassifyReq { model: None, .. }));
+    }
+
+    #[test]
+    fn partial_header_and_partial_payload_return_none() {
+        let enc = encode_classify_req(Some("m"), 12, &[0x0FFF, 0x0ABC]);
+        for cut in 0..enc.len() {
+            assert_eq!(
+                decode(&enc[..cut]).unwrap(),
+                None,
+                "prefix of {cut} bytes must be incomplete, not an error"
+            );
+        }
+        assert!(decode(&enc).unwrap().is_some());
+    }
+
+    #[test]
+    fn pipelined_frames_decode_in_sequence() {
+        let mut buf = encode_classify_req(None, 6, &[0b101010]);
+        buf.extend_from_slice(&encode_classify_req(Some("b"), 6, &[0b111]));
+        let (f1, n1) = decode(&buf).unwrap().unwrap();
+        assert_eq!(f1.num_samples(), 1);
+        let (f2, n2) = decode(&buf[n1..]).unwrap().unwrap();
+        assert_eq!(n1 + n2, buf.len());
+        assert!(matches!(f2, Frame::ClassifyReq { model: Some(m), .. } if m == "b"));
+    }
+
+    #[test]
+    fn resp_error_and_overload_round_trip() {
+        let enc = encode_classify_resp(&[3, 0, 65535]);
+        let (f, _) = decode(&enc).unwrap().unwrap();
+        assert_eq!(f, Frame::ClassifyResp { classes: vec![3, 0, 65535] });
+
+        let enc = encode_error("no model named 'x'");
+        let (f, _) = decode(&enc).unwrap().unwrap();
+        assert_eq!(f, Frame::Error { message: "no model named 'x'".into() });
+
+        let enc = encode_overload("queue full (depth 64)");
+        let (f, _) = decode(&enc).unwrap().unwrap();
+        assert_eq!(f, Frame::Overload { message: "queue full (depth 64)".into() });
+    }
+
+    #[test]
+    fn bad_magic_version_type_are_typed_errors() {
+        let good = encode_classify_req(None, 6, &[1]);
+        let mut bad = good.clone();
+        bad[0] = b'{';
+        assert_eq!(decode(&bad), Err(FrameError::BadMagic(b'{')));
+        let mut bad = good.clone();
+        bad[1] = 9;
+        assert_eq!(decode(&bad), Err(FrameError::BadVersion(9)));
+        let mut bad = good.clone();
+        bad[2] = 77;
+        assert_eq!(decode(&bad), Err(FrameError::BadType(77)));
+    }
+
+    #[test]
+    fn hostile_length_prefix_is_rejected_from_the_header_alone() {
+        let mut enc = encode_classify_req(None, 6, &[1]);
+        // Claim a 64 MiB payload: must be rejected without buffering it.
+        enc[4..8].copy_from_slice(&(64u32 << 20).to_le_bytes());
+        assert_eq!(decode(&enc[..HEADER_LEN]), Err(FrameError::Oversized(64 << 20)));
+        // Length prefix that disagrees with S × W × 8.
+        let mut enc = encode_classify_req(None, 6, &[1]);
+        enc[4..8].copy_from_slice(&3u32.to_le_bytes());
+        assert!(matches!(decode(&enc), Err(FrameError::LengthMismatch { .. })));
+    }
+
+    #[test]
+    fn zero_sample_and_oversized_sample_counts_are_rejected() {
+        let mut enc = encode_classify_req(None, 6, &[1]);
+        enc[8..10].copy_from_slice(&0u16.to_le_bytes());
+        assert_eq!(decode(&enc), Err(FrameError::EmptyRequest));
+        let mut enc = encode_classify_req(None, 6, &[1]);
+        enc[8..10].copy_from_slice(&(MAX_SAMPLES as u16 + 1).to_le_bytes());
+        assert_eq!(decode(&enc), Err(FrameError::TooManySamples(MAX_SAMPLES as u16 + 1)));
+    }
+
+    #[test]
+    fn stray_bits_past_the_width_are_a_protocol_error() {
+        let enc = encode_classify_req(None, 6, &[0b100_0000]); // bit 6 of a 6-bit sample
+        assert_eq!(decode(&enc), Err(FrameError::StrayBits { sample: 0 }));
+    }
+
+    #[test]
+    fn request_into_packed_is_bit_exact() {
+        let bits = 10u16;
+        let words = req_words(130, bits, 7);
+        let packed = request_into_packed(bits, &words);
+        assert_eq!(packed.num_samples(), 130);
+        let mut want = PackedBatch::with_capacity(bits as usize, 130);
+        for s in 0..130 {
+            want.push_sample(&sample_bits(bits, &words, s));
+        }
+        assert_eq!(packed, want);
+    }
+}

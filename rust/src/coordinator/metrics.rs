@@ -123,6 +123,13 @@ pub struct Metrics {
     pub engine_failures: AtomicU64,
     /// Requests whose mirror *shadow* failed (the primary still replied).
     pub shadow_failures: AtomicU64,
+    /// Requests rejected by admission control (queue at its depth cap).
+    pub rejected_overload: AtomicU64,
+    /// Deepest the batch queue has ever been (samples queued at once).
+    pub queue_depth_high_watermark: AtomicU64,
+    /// Requests that arrived on a connection that already had requests in
+    /// flight — the event loop's per-connection pipelining at work.
+    pub pipelined_requests: AtomicU64,
 }
 
 impl Metrics {
@@ -131,11 +138,19 @@ impl Metrics {
         Self::default()
     }
 
+    /// Record the queue depth observed after an enqueue; keeps the
+    /// high-watermark monotone without a lock.
+    pub fn observe_queue_depth(&self, depth: u64) {
+        self.queue_depth_high_watermark.fetch_max(depth, Ordering::Relaxed);
+    }
+
     /// Render a human-readable report.
     pub fn report(&self) -> String {
         format!(
             "requests: logic={} numeric={} batches={} disagreements={} failures={} \
              shadow-failures={}\n\
+             admission: rejected_overload={} queue_depth_high_watermark={} \
+             pipelined_requests={}\n\
              request latency: {}\n\
              batch latency:   {}",
             self.logic_requests.load(Ordering::Relaxed),
@@ -144,6 +159,9 @@ impl Metrics {
             self.disagreements.load(Ordering::Relaxed),
             self.engine_failures.load(Ordering::Relaxed),
             self.shadow_failures.load(Ordering::Relaxed),
+            self.rejected_overload.load(Ordering::Relaxed),
+            self.queue_depth_high_watermark.load(Ordering::Relaxed),
+            self.pipelined_requests.load(Ordering::Relaxed),
             self.request_latency.summary(),
             self.batch_latency.summary(),
         )
@@ -235,5 +253,27 @@ mod tests {
         let r = m.report();
         assert!(r.contains("logic=5"));
         assert!(r.contains("p99"));
+        assert!(r.contains("rejected_overload=0"));
+    }
+
+    #[test]
+    fn queue_depth_watermark_is_monotone_max() {
+        let m = Metrics::new();
+        m.observe_queue_depth(3);
+        m.observe_queue_depth(7);
+        m.observe_queue_depth(5);
+        assert_eq!(m.queue_depth_high_watermark.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn admission_counters_surface_in_report() {
+        let m = Metrics::new();
+        m.rejected_overload.fetch_add(2, Ordering::Relaxed);
+        m.pipelined_requests.fetch_add(9, Ordering::Relaxed);
+        m.observe_queue_depth(64);
+        let r = m.report();
+        assert!(r.contains("rejected_overload=2"));
+        assert!(r.contains("queue_depth_high_watermark=64"));
+        assert!(r.contains("pipelined_requests=9"));
     }
 }

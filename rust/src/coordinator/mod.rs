@@ -10,20 +10,25 @@
 //!   runs the backend-agnostic dispatch loop
 //! * [`registry`] — [`registry::ModelRegistry`]: N named engine stacks in
 //!   one process, loaded from circuit bundles, with live hot-swap
-//! * [`server`] — JSON-lines TCP front end (model routing + admin
-//!   commands)
+//! * [`server`] — TCP front end (model routing + admin commands): JSON
+//!   lines and the length-prefixed binary protocol on one port, blocking
+//!   or epoll event-loop accept paths
+//! * [`frame`] — the versioned binary wire format ([`frame::decode`] /
+//!   encode), parsed incrementally from partial reads
 //! * [`metrics`] — latency histograms, counters (reported per model)
 
 pub mod batcher;
 pub mod engine;
+pub mod frame;
 pub mod metrics;
 pub mod registry;
 pub mod router;
 pub mod server;
 
-pub use batcher::{Batch, BatchPolicy, Batcher};
+pub use batcher::{Batch, BatchPolicy, Batcher, ReplyNotify, SubmitError};
+pub use frame::Frame;
 pub use engine::{
     EngineError, InferenceEngine, MirrorEngine, PackedLogicEngine, PjrtNumericEngine,
 };
 pub use registry::{ModelInfo, ModelRegistry, RegistryConfig};
-pub use router::{PjrtSpec, Policy, Router, RouterBuilder};
+pub use router::{PjrtSpec, Policy, Router, RouterBuilder, SubmitRejection};

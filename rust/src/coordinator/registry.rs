@@ -39,8 +39,8 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::coordinator::batcher::{BatchPolicy, Reply};
-use crate::coordinator::router::{Policy, Router, RouterBuilder};
+use crate::coordinator::batcher::{BatchPolicy, Reply, ReplyNotify};
+use crate::coordinator::router::{Policy, Router, RouterBuilder, SubmitRejection};
 use crate::error::NnError;
 use crate::flow::artifact;
 use crate::util::bitvec::BitVec;
@@ -329,6 +329,20 @@ impl ModelRegistry {
         name: Option<&str>,
         features: &[f64],
     ) -> Result<mpsc::Receiver<Reply>, NnError> {
+        self.classify_with(name, features, None, false)
+    }
+
+    /// [`classify`](Self::classify) with the nonblocking front end's extra
+    /// context: `notify` fires once the reply is resolved (sent or
+    /// dropped), and `pipelined` marks a request that arrived on a
+    /// connection with replies still in flight (counted per model).
+    pub fn classify_with(
+        &self,
+        name: Option<&str>,
+        features: &[f64],
+        notify: Option<ReplyNotify>,
+        pipelined: bool,
+    ) -> Result<mpsc::Receiver<Reply>, NnError> {
         // Bounded, not `loop`: every retry means the mapped router was
         // found closed, which a swap/unload always follows by replacing or
         // removing the map entry — so a second closed hit is already
@@ -358,19 +372,95 @@ impl ModelRegistry {
                 }
                 _ => router.binarize(features),
             };
-            match router.try_submit_bits(bits, features) {
-                Ok(rx) => return Ok(rx),
+            match router.try_submit_bits(bits, features, notify.clone()) {
+                Ok(rx) => {
+                    Self::count_pipelined(&router, pipelined);
+                    return Ok(rx);
+                }
                 // Raced a hot-swap: this router closed between the map read
                 // and the submit. The swap already installed (or removed)
                 // its replacement — re-resolve (`get` errors out if the
                 // model is gone) and carry the bits to the retry.
-                Err(bits) => prepared = Some((bits, router)),
+                Err(SubmitRejection::Closed(bits)) => prepared = Some((bits, router)),
+                // Admission control is NOT retried: the queue is full, and
+                // an immediate resubmit would amplify the overload. Typed
+                // so the server replies with the overload frame / field.
+                Err(SubmitRejection::Overloaded(_)) => {
+                    return Err(Self::overload_error(name, &router));
+                }
             }
         }
         Err(NnError::Config(format!(
             "model '{}' is shutting down",
             name.unwrap_or("<default>")
         )))
+    }
+
+    /// Submit one classify request whose circuit-input bits arrived
+    /// **already packed** — the binary-frame fast path: no float parse, no
+    /// quantize, just a width check and the queue. Only packed-input
+    /// (logic) engines can serve it: a numeric engine needs the raw
+    /// feature vector the frame deliberately does not carry. Retries
+    /// through hot-swaps exactly like [`classify`](Self::classify),
+    /// reusing the same bits (any same-width replacement accepts them —
+    /// the wire format *is* the packed representation).
+    pub fn classify_bits(
+        &self,
+        name: Option<&str>,
+        bits: BitVec,
+        notify: Option<ReplyNotify>,
+        pipelined: bool,
+    ) -> Result<mpsc::Receiver<Reply>, NnError> {
+        let mut bits = bits;
+        for _ in 0..64 {
+            let router = self.get(name)?;
+            if !router.wants_packed() || router.wants_features() {
+                return Err(NnError::Config(format!(
+                    "model '{}' runs a numeric or mirror engine that needs \
+                     raw feature vectors; binary frames carry packed bits \
+                     only — use the JSON protocol's features field",
+                    name.unwrap_or("<default>")
+                )));
+            }
+            if bits.len() != router.model().input_bits() {
+                return Err(NnError::Config(format!(
+                    "bits: expected {} circuit-input bits, got {}",
+                    router.model().input_bits(),
+                    bits.len()
+                )));
+            }
+            match router.try_submit_bits(bits, &[], notify.clone()) {
+                Ok(rx) => {
+                    Self::count_pipelined(&router, pipelined);
+                    return Ok(rx);
+                }
+                Err(SubmitRejection::Closed(b)) => bits = b,
+                Err(SubmitRejection::Overloaded(_)) => {
+                    return Err(Self::overload_error(name, &router));
+                }
+            }
+        }
+        Err(NnError::Config(format!(
+            "model '{}' is shutting down",
+            name.unwrap_or("<default>")
+        )))
+    }
+
+    fn count_pipelined(router: &Router, pipelined: bool) {
+        if pipelined {
+            router
+                .metrics()
+                .pipelined_requests
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+    }
+
+    fn overload_error(name: Option<&str>, router: &Router) -> NnError {
+        NnError::Overload(format!(
+            "model '{}' queue is at its depth cap ({}); back off and resubmit",
+            name.unwrap_or("<default>"),
+            router.batch_policy().max_depth
+        ))
     }
 
     /// Snapshot the map under the read lock and drop it before touching
@@ -473,6 +563,7 @@ mod tests {
             .batch_policy(BatchPolicy {
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
+                ..Default::default()
             })
             .workers(1)
             .build()
@@ -578,6 +669,69 @@ mod tests {
         assert!(reg.is_empty());
         assert_eq!(reg.default_name(), None);
         assert!(reg.unload("a").is_err(), "double unload is an error");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "full synthesis is too slow under Miri")]
+    fn classify_bits_serves_prepacked_requests_bit_exactly() {
+        let a = random_model("a", 5, &[4, 3], 2, 1, 17);
+        let reg = ModelRegistry::new(RegistryConfig::default());
+        reg.install("a", make_router(&a), None).unwrap();
+        let x: Vec<f64> = (0..5).map(|j| (j as f64 * 0.7).sin()).collect();
+        // Pack the way a binary-frame client would, then submit bits only.
+        let bits = reg.get(Some("a")).unwrap().binarize(&x);
+        let reply = reg
+            .classify_bits(Some("a"), bits, None, false)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(reply.class, crate::nn::eval::classify(&a, &x));
+        // Width mismatches are typed protocol errors, not panics.
+        let err = reg
+            .classify_bits(Some("a"), BitVec::zeros(3), None, false)
+            .unwrap_err();
+        assert!(err.to_string().contains("circuit-input bits"), "{err}");
+        reg.shutdown_all();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "full synthesis is too slow under Miri")]
+    fn overload_surfaces_as_a_typed_error_not_a_retry_spin() {
+        // Deterministic induction: max_batch higher than the depth cap and
+        // a long max_wait park the dispatcher on the age timer, so the
+        // first two submits sit in the queue and the third MUST hit the
+        // cap — no timing dependence.
+        let a = random_model("a", 5, &[4, 3], 2, 1, 19);
+        let r = run_flow(&a, &FlowConfig { jobs: 1, ..Default::default() }, None)
+            .unwrap();
+        let router = RouterBuilder::new(a.clone())
+            .circuit(r.circuit.netlist)
+            .engine(Policy::Logic)
+            .batch_policy(BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_secs(5),
+                max_depth: 2,
+            })
+            .workers(1)
+            .build()
+            .unwrap();
+        let reg = ModelRegistry::with_default("a", router);
+        let rx1 = reg.classify_with(Some("a"), &[0.1; 5], None, false).unwrap();
+        let rx2 = reg.classify_with(Some("a"), &[0.2; 5], None, false).unwrap();
+        let err = reg
+            .classify_with(Some("a"), &[0.3; 5], None, false)
+            .expect_err("third submit must trip the depth-2 cap");
+        assert!(matches!(&err, NnError::Overload(_)), "{err}");
+        assert!(err.to_string().contains("depth cap (2)"), "{err}");
+        let m = reg.get(Some("a")).unwrap().metrics();
+        use std::sync::atomic::Ordering;
+        assert_eq!(m.rejected_overload.load(Ordering::Relaxed), 1);
+        assert_eq!(m.queue_depth_high_watermark.load(Ordering::Relaxed), 2);
+        // Shutdown close-flushes the parked queue: both admitted replies
+        // are still delivered.
+        reg.shutdown_all();
+        rx1.recv_timeout(Duration::from_secs(5)).expect("admitted reply 1 delivered");
+        rx2.recv_timeout(Duration::from_secs(5)).expect("admitted reply 2 delivered");
     }
 
     #[test]

@@ -31,7 +31,9 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::batcher::{Batch, BatchPolicy, Batcher, Reply, Request};
+use crate::coordinator::batcher::{
+    Batch, BatchPolicy, Batcher, Reply, ReplyNotify, Request, SubmitError,
+};
 use crate::coordinator::engine::{
     self, EngineError, InferenceEngine, MirrorEngine, PackedLogicEngine,
     PjrtNumericEngine,
@@ -214,8 +216,15 @@ impl RouterBuilder {
         }
 
         let model = Arc::new(model);
-        let batcher = Arc::new(Batcher::new(batch_policy, model.input_bits()));
         let metrics = Arc::new(Metrics::new());
+        // The batcher shares the model's metrics so admission decisions
+        // (overload rejections, queue high-watermark) land in the same
+        // per-model report the `metrics` admin command renders.
+        let batcher = Arc::new(Batcher::with_metrics(
+            batch_policy,
+            model.input_bits(),
+            Some(Arc::clone(&metrics)),
+        ));
 
         // The engine is constructed on the dispatcher thread (it may own
         // non-`Send` handles); readiness — or the construction error — is
@@ -315,16 +324,31 @@ impl RouterBuilder {
                                 let latency = req.enqueued.elapsed();
                                 m.request_latency.record_ns(latency.as_nanos() as u64);
                                 let _ = req.reply.send(Reply { class, engine: name, latency });
+                                // Notify *after* the send: a nonblocking
+                                // caller that wakes now finds the reply.
+                                if let Some(notify) = req.notify {
+                                    notify();
+                                }
                             }
                         }
                         Err(e) => {
-                            // Dropping `requests` drops the reply senders:
-                            // submitters observe a disconnect, never a hang.
+                            // Dropping each reply sender makes submitters
+                            // observe a disconnect, never a hang — and the
+                            // notify fires *after* the drop, so an
+                            // event-loop caller wakes to the disconnect
+                            // rather than sleeping forever on it.
                             m.engine_failures.fetch_add(n, Ordering::Relaxed);
                             eprintln!(
                                 "engine '{}': batch of {n} failed: {e}",
                                 engine.name()
                             );
+                            for req in requests {
+                                let Request { reply, notify, .. } = req;
+                                drop(reply);
+                                if let Some(notify) = notify {
+                                    notify();
+                                }
+                            }
                         }
                     }
                 }
@@ -360,6 +384,29 @@ impl RouterBuilder {
     }
 }
 
+/// Why [`Router::try_submit_bits`] refused a request. Both variants hand
+/// the binarized bits back untouched; they demand opposite reactions:
+/// `Closed` means "re-fetch the live router and resubmit the same bits"
+/// (hot-swap race), `Overloaded` means "surface a typed overload reply so
+/// the client backs off" — retrying an overload immediately would fail
+/// again and amplify the load that caused it.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitRejection {
+    /// The router was shut down (or is draining for a hot-swap).
+    Closed(BitVec),
+    /// Admission control: the model's queue is at its depth cap.
+    Overloaded(BitVec),
+}
+
+impl SubmitRejection {
+    /// The rejected bits, whichever way they were rejected.
+    pub fn into_bits(self) -> BitVec {
+        match self {
+            SubmitRejection::Closed(b) | SubmitRejection::Overloaded(b) => b,
+        }
+    }
+}
+
 /// The serving router: owns the batcher, metrics, and the dispatcher
 /// thread that drives one [`InferenceEngine`]. Construct via
 /// [`RouterBuilder`].
@@ -391,9 +438,15 @@ impl Router {
         // Move, don't copy: an engine that wants the raw features takes the
         // caller's own Vec (the pre-registry zero-copy behavior).
         let features = self.wants_features.then_some(features);
-        self.enqueue(bits, features).unwrap_or_else(|_| {
-            panic!("submit on a shut-down router (use try_submit to handle hot-swap)")
-        })
+        match self.enqueue(bits, features, None) {
+            Ok(rx) => rx,
+            Err(SubmitError::Overloaded(_)) => {
+                panic!("submit on an overloaded router (use try_submit_bits for typed backpressure)")
+            }
+            Err(SubmitError::Closed(_)) => {
+                panic!("submit on a shut-down router (use try_submit to handle hot-swap)")
+            }
+        }
     }
 
     /// Submit one request from a borrowed feature slice. Returns `None`
@@ -404,24 +457,33 @@ impl Router {
     /// The slice is copied only when the engine retains raw features.
     pub fn try_submit(&self, features: &[f64]) -> Option<mpsc::Receiver<Reply>> {
         let bits = self.binarize(features);
-        self.try_submit_bits(bits, features).ok()
+        self.try_submit_bits(bits, features, None).ok()
     }
 
     /// Submit one request whose circuit-input bits are **already
     /// binarized** (via [`Router::binarize`] — possibly on a displaced
-    /// router serving the same quantization). On a closed router the bits
-    /// come back in `Err` untouched, so a hot-swap retry resubmits them to
-    /// the replacement without re-quantizing the features — the resubmit
-    /// double-work fix of ISSUE 5. `features` is copied only when the
-    /// engine retains raw feature vectors. The bit width must match this
-    /// router's circuit (the registry checks compatibility before reuse).
+    /// router serving the same quantization). Both rejection variants hand
+    /// the bits back untouched: [`SubmitRejection::Closed`] lets a
+    /// hot-swap retry resubmit them to the replacement without
+    /// re-quantizing the features (the resubmit double-work fix of
+    /// ISSUE 5), [`SubmitRejection::Overloaded`] is admission control —
+    /// the caller surfaces a typed overload reply instead of retrying.
+    /// `features` is copied only when the engine retains raw feature
+    /// vectors. `notify` (if any) fires once the reply is resolved — sent
+    /// or dropped — so a nonblocking caller can park on its event loop.
+    /// The bit width must match this router's circuit (the registry checks
+    /// compatibility before reuse).
     pub fn try_submit_bits(
         &self,
         bits: BitVec,
         features: &[f64],
-    ) -> Result<mpsc::Receiver<Reply>, BitVec> {
+        notify: Option<ReplyNotify>,
+    ) -> Result<mpsc::Receiver<Reply>, SubmitRejection> {
         let features = self.wants_features.then(|| features.to_vec());
-        self.enqueue(bits, features).map_err(|rejected| rejected.bits)
+        self.enqueue(bits, features, notify).map_err(|rejected| match rejected {
+            SubmitError::Closed(req) => SubmitRejection::Closed(req.bits),
+            SubmitError::Overloaded(req) => SubmitRejection::Overloaded(req.bits),
+        })
     }
 
     /// Quantize + pack features for the engine (width-checked), or a
@@ -447,15 +509,16 @@ impl Router {
     }
 
     /// The one place a [`Request`] is built and offered to the batcher;
-    /// every submit variant funnels through it. A closed batcher hands the
-    /// request back so retry paths can salvage its bits.
+    /// every submit variant funnels through it. A rejecting batcher hands
+    /// the request back so retry paths can salvage its bits.
     fn enqueue(
         &self,
         bits: BitVec,
         features: Option<Vec<f64>>,
-    ) -> Result<mpsc::Receiver<Reply>, Request> {
+        notify: Option<ReplyNotify>,
+    ) -> Result<mpsc::Receiver<Reply>, SubmitError> {
         let (tx, rx) = mpsc::channel();
-        let req = Request { bits, features, enqueued: Instant::now(), reply: tx };
+        let req = Request { bits, features, enqueued: Instant::now(), reply: tx, notify };
         self.batcher.submit(req).map(|_| rx)
     }
 
@@ -487,9 +550,22 @@ impl Router {
         self.wants_packed
     }
 
+    /// Whether the engine retains raw feature vectors (numeric and mirror
+    /// engines). Such engines cannot serve bits-only submissions — the
+    /// binary wire protocol deliberately carries no floats.
+    pub fn wants_features(&self) -> bool {
+        self.wants_features
+    }
+
     /// Metrics handle.
     pub fn metrics(&self) -> Arc<Metrics> {
         Arc::clone(&self.metrics)
+    }
+
+    /// The batch policy this router's batcher flushes under (surfaced so
+    /// overload replies can quote the configured depth cap).
+    pub fn batch_policy(&self) -> BatchPolicy {
+        self.batcher.policy()
     }
 
     /// Queue depth.
@@ -532,7 +608,11 @@ mod tests {
         let router = RouterBuilder::new(model.clone())
             .circuit(r.circuit.netlist)
             .engine(policy)
-            .batch_policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) })
+            .batch_policy(BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            })
             .workers(2)
             .build()
             .unwrap();
@@ -574,6 +654,7 @@ mod tests {
             .batch_policy(BatchPolicy {
                 max_batch: 256,
                 max_wait: Duration::from_millis(2),
+                ..Default::default()
             })
             .workers(4)
             .build()
@@ -615,16 +696,41 @@ mod tests {
         let x: Vec<f64> = (0..6).map(|j| (j as f64 * 0.4).sin()).collect();
         let bits = router.binarize(&x);
         // Live router: pre-binarized bits serve normally, bit-exact.
-        let rx = router.try_submit_bits(bits.clone(), &x).expect("live router accepts");
+        let rx = router
+            .try_submit_bits(bits.clone(), &x, None)
+            .expect("live router accepts");
         let reply = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(reply.class, crate::nn::eval::classify(&model, &x));
-        // Closed router: the same bits come back untouched, so a hot-swap
-        // retry can resubmit without re-binarizing the features.
+        // Closed router: the same bits come back untouched — and typed as
+        // Closed, not Overloaded — so a hot-swap retry can resubmit
+        // without re-binarizing the features.
         router.shutdown();
         let back = router
-            .try_submit_bits(bits.clone(), &x)
+            .try_submit_bits(bits.clone(), &x, None)
             .expect_err("closed router rejects");
-        assert_eq!(back, bits, "bits must come back for a free resubmit");
+        assert_eq!(back, SubmitRejection::Closed(bits), "bits must come back for a free resubmit");
+    }
+
+    #[test]
+    fn notify_fires_after_the_reply_is_sent() {
+        use std::sync::atomic::AtomicU64;
+        let (router, _) = make_router(Policy::Logic);
+        let x: Vec<f64> = (0..6).map(|j| (j as f64 * 0.9).cos()).collect();
+        let bits = router.binarize(&x);
+        let fired = Arc::new(AtomicU64::new(0));
+        let f = Arc::clone(&fired);
+        let notify: ReplyNotify = Arc::new(move || {
+            f.fetch_add(1, Ordering::Relaxed);
+        });
+        let rx = router
+            .try_submit_bits(bits, &x, Some(notify))
+            .expect("live router accepts");
+        let _ = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        // The notify is ordered after the send, so the receiver can observe
+        // the reply a beat before the callback runs — shutdown joins the
+        // dispatcher, after which the callback must have fired exactly once.
+        router.shutdown();
+        assert_eq!(fired.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -1,7 +1,13 @@
-//! TCP line-protocol inference server.
+//! TCP inference server: JSON lines and binary frames on one port, with a
+//! blocking thread-per-connection path and an epoll event-loop path.
 //!
-//! A deliberately simple wire format (one JSON object per line) so any
-//! client — `nc`, Python, curl-less scripts — can drive the coordinator:
+//! ## Wire protocols
+//!
+//! Every connection speaks one of two protocols, chosen by its first byte
+//! (see [`crate::coordinator::frame`] for the sniffing argument):
+//!
+//! * **JSON lines** — one object per line, so any client (`nc`, Python,
+//!   `/dev/tcp` scripts) can drive the coordinator:
 //!
 //! ```text
 //! → {"features": [0.1, -0.5, …]}                 # default model
@@ -23,170 +29,87 @@
 //! → {"cmd": "shutdown"}
 //! ```
 //!
-//! One thread per connection (std::net; no tokio offline). The server owns
-//! a [`ModelRegistry`]; classify requests name a model (or fall through to
-//! the registry default, which keeps every pre-registry client working
-//! unchanged), and all inference for one model goes through that model's
-//! dynamic batcher, so concurrent clients share batches.
+//!   A classify rejected by admission control replies
+//!   `{"error": …, "overloaded": true}` so clients can tell "back off"
+//!   from "your request is malformed".
 //!
-//! Client sockets carry a read timeout so every connection thread polls the
-//! shared stop flag even while its client is silent — a shutdown therefore
-//! terminates `serve` promptly instead of joining threads parked forever in
-//! a blocking read. Finished connection threads are reaped from the accept
-//! loop, so a long-lived server does not accumulate one `JoinHandle` per
-//! connection ever served.
+//! * **Binary frames** — length-prefixed, carrying pre-binarized packed
+//!   `u64` feature words ([`frame`]); classify-only (admin commands stay
+//!   JSON). Overload comes back as a typed [`frame::TYPE_OVERLOAD`] frame.
+//!
+//! ## Accept paths
+//!
+//! [`serve`] runs one *blocking* thread per connection — simple, portable,
+//! and fine for a handful of clients. Connection streams are registered in
+//! a named-lock table (`"server.conns"`, visible to `nullanet check
+//! --locks`); shutdown stores the stop flag, half-closes every registered
+//! stream (unparking blocked reads as EOF), and self-connects once to wake
+//! the blocking accept — O(1) work per connection with **no polling**, so
+//! an idle server burns zero CPU and shutdown completes in microseconds,
+//! not read-timeout periods.
+//!
+//! [`serve_event`] multiplexes every connection on one thread over
+//! [`crate::util::evloop`] (Linux epoll). Requests pipeline per
+//! connection — replies are written strictly in request order — and reply
+//! readiness is signalled by the dispatcher through a [`ReplyNotify`] that
+//! wakes the loop's eventfd. Writes never block: partial writes buffer per
+//! connection and drain under `EPOLLOUT`; a connection whose client stops
+//! reading is paused (read interest dropped) once its out-buffer passes
+//! [`HIGH_WATER`] and resumed below [`LOW_WATER`], so one slow consumer
+//! cannot balloon server memory.
 
-use std::io::{BufRead, BufReader, ErrorKind, Write};
-use std::net::{TcpListener, TcpStream};
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::coordinator::batcher::{Reply, ReplyNotify};
+use crate::coordinator::frame;
 use crate::coordinator::registry::ModelRegistry;
+use crate::error::NnError;
 use crate::util::json::Json;
-use crate::util::sync::atomic::{AtomicBool, Ordering};
-use crate::util::sync::{mpsc, thread};
+use crate::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::sync::{mpsc, thread, Mutex};
 
-/// How often an idle connection thread wakes to poll the stop flag.
-const READ_POLL: Duration = Duration::from_millis(50);
-
-/// Hard cap on one request line; a client streaming bytes without a
+/// Hard cap on one JSON request line; a client streaming bytes without a
 /// newline gets a protocol error and is disconnected instead of growing
 /// the per-connection buffer without bound.
 const MAX_LINE_BYTES: usize = 1 << 20;
 
-/// Serve until a client sends `{"cmd": "shutdown"}`. Binds to `addr`
-/// (e.g. "127.0.0.1:7878"); `ready` is signalled once listening (tests).
-/// The registry is left intact on return (the caller may still read
-/// per-model metrics); its routers drain when the registry drops.
-pub fn serve(
-    registry: Arc<ModelRegistry>,
-    addr: &str,
-    ready: Option<mpsc::Sender<u16>>,
-) -> std::io::Result<()> {
-    let listener = TcpListener::bind(addr)?;
-    let port = listener.local_addr()?.port();
-    if let Some(tx) = ready {
-        let _ = tx.send(port);
-    }
-    let stop = Arc::new(AtomicBool::new(false));
-    // Accept loop with periodic stop checks.
-    listener.set_nonblocking(true)?;
-    let mut handles: Vec<thread::JoinHandle<()>> = Vec::new();
-    while !stop.load(Ordering::Acquire) {
-        match listener.accept() {
-            Ok((stream, _)) => {
-                let r = Arc::clone(&registry);
-                let s = Arc::clone(&stop);
-                handles.push(thread::spawn(move || handle_client(stream, r, s)));
-            }
-            Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                thread::sleep(Duration::from_millis(5));
-            }
-            Err(e) => return Err(e),
-        }
-        handles = reap_finished(handles);
-    }
-    // Every thread polls the stop flag at READ_POLL cadence, so this join
-    // completes promptly even for connections that never sent a byte.
-    for h in handles {
-        let _ = h.join();
-    }
-    Ok(())
+/// How long a blocking session waits for an engine reply.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Read granularity for both accept paths.
+const READ_CHUNK: usize = 8192;
+
+/// Unflushed reply bytes past which the event loop stops reading a
+/// connection (write backpressure engages).
+const HIGH_WATER: usize = 1 << 20;
+
+/// Unflushed reply bytes below which a paused connection resumes reading.
+const LOW_WATER: usize = 64 << 10;
+
+// ---------------------------------------------------------------------------
+// Shared request handling (both accept paths, both protocols)
+// ---------------------------------------------------------------------------
+
+/// What one JSON request line asks for. Admin commands resolve immediately
+/// (`Reply`); classifies come back unsubmitted so each accept path can
+/// choose blocking (`recv_timeout`) or pipelined (pending-queue) delivery.
+enum Parsed {
+    Reply(Json),
+    Classify { model: Option<String>, features: Vec<f64> },
 }
 
-/// Join and drop handles whose threads have already exited.
-fn reap_finished(handles: Vec<thread::JoinHandle<()>>) -> Vec<thread::JoinHandle<()>> {
-    handles
-        .into_iter()
-        .filter_map(|h| {
-            if h.is_finished() {
-                let _ = h.join();
-                None
-            } else {
-                Some(h)
-            }
-        })
-        .collect()
-}
-
-fn handle_client(stream: TcpStream, registry: Arc<ModelRegistry>, stop: Arc<AtomicBool>) {
-    // A blocking read would pin this thread (and the final join in `serve`)
-    // on a silent client forever; time out reads and treat the timeout as a
-    // stop-flag poll. Writes get a generous timeout too: a client that
-    // pipelines requests but never reads replies would otherwise park this
-    // thread in `write_all` with the stop flag unpolled — the same hang,
-    // one direction over.
-    let _ = stream.set_read_timeout(Some(READ_POLL));
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::new(stream);
-    // Accumulate raw bytes, not a String: `read_line`'s UTF-8 guard
-    // truncates everything appended by a call that errors, so a timeout
-    // landing mid-multibyte-sequence would silently drop consumed bytes.
-    // `read_until` documents that partially read bytes stay in the buffer.
-    let mut raw: Vec<u8> = Vec::new();
-    loop {
-        if stop.load(Ordering::Acquire) {
-            return;
-        }
-        // `take` bounds a single call: a client firehosing bytes with no
-        // newline (and no ≥ READ_POLL gap) must not grow `raw` past the cap
-        // inside one unbounded `read_until`. The loop keeps
-        // `raw.len() ≤ MAX_LINE_BYTES` here, so the budget is ≥ 1 and
-        // `Ok(0)` unambiguously means EOF.
-        let budget = (MAX_LINE_BYTES + 1 - raw.len()) as u64;
-        let eof = match (&mut reader).take(budget).read_until(b'\n', &mut raw) {
-            Ok(0) => true,
-            Ok(_) => false,
-            // Timed out while idle or mid-line; bytes read so far stay in
-            // `raw` — keep accumulating after the stop-flag poll.
-            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
-                false
-            }
-            Err(_) => return,
-        };
-        if raw.len() > MAX_LINE_BYTES {
-            let e = Json::obj([(
-                "error",
-                Json::str(format!("request line exceeds {MAX_LINE_BYTES} bytes")),
-            )]);
-            let _ = writer.write_all(format!("{}\n", e.to_string()).as_bytes());
-            return;
-        }
-        if !raw.ends_with(b"\n") && !eof {
-            continue; // mid-line: wait for the rest
-        }
-        let line = String::from_utf8_lossy(&raw);
-        if !line.trim().is_empty() {
-            let response = match handle_line(&line, &registry, &stop) {
-                Ok(j) => j,
-                Err(msg) => Json::obj([("error", Json::str(msg))]),
-            };
-            if writer
-                .write_all(format!("{}\n", response.to_string()).as_bytes())
-                .is_err()
-            {
-                return;
-            }
-        }
-        if eof {
-            return;
-        }
-        raw.clear();
-    }
-}
-
-fn handle_line(
+fn parse_request(
     line: &str,
     registry: &ModelRegistry,
     stop: &AtomicBool,
-) -> Result<Json, String> {
+) -> Result<Parsed, String> {
     let req = Json::parse(line).map_err(|e| e.to_string())?;
     if let Some(cmd) = req.get("cmd").and_then(|c| c.as_str()) {
-        return handle_cmd(cmd, &req, registry, stop);
+        return handle_cmd(cmd, &req, registry, stop).map(Parsed::Reply);
     }
     // `model` must be a string when present (`null` counts as absent); a
     // numeric id from a buggy client must not be silently routed to the
@@ -195,7 +118,8 @@ fn handle_line(
         None | Some(Json::Null) => None,
         Some(m) => Some(
             m.as_str()
-                .ok_or_else(|| "model must be a string".to_string())?,
+                .ok_or_else(|| "model must be a string".to_string())?
+                .to_string(),
         ),
     };
     let features = req
@@ -203,18 +127,7 @@ fn handle_line(
         .map_err(|e| e.to_string())?
         .to_f64_vec()
         .map_err(|e| format!("features: {e}"))?;
-    // The registry validates the model name and feature width, so an
-    // unknown model or wrong-width request comes back as a protocol error,
-    // not a panic inside the serving path.
-    let rx = registry.classify(model, &features).map_err(|e| e.to_string())?;
-    let reply = rx
-        .recv_timeout(Duration::from_secs(10))
-        .map_err(|_| "inference failed or timed out".to_string())?;
-    Ok(Json::obj([
-        ("class", Json::int(reply.class as i64)),
-        ("engine", Json::str(reply.engine)),
-        ("latency_us", Json::float(reply.latency.as_secs_f64() * 1e6)),
-    ]))
+    Ok(Parsed::Classify { model, features })
 }
 
 /// Admin commands: registry introspection, live load/unload, shutdown.
@@ -315,6 +228,850 @@ fn handle_cmd(
     }
 }
 
+/// Render a successful classify reply.
+fn json_reply(reply: &Reply) -> Json {
+    Json::obj([
+        ("class", Json::int(reply.class as i64)),
+        ("engine", Json::str(reply.engine)),
+        ("latency_us", Json::float(reply.latency.as_secs_f64() * 1e6)),
+    ])
+}
+
+/// Render a classify error; admission-control rejections carry an explicit
+/// `"overloaded": true` so JSON clients can back off instead of treating
+/// the rejection as a malformed request.
+fn json_error(err: &NnError) -> Json {
+    if matches!(err, NnError::Overload(_)) {
+        Json::obj([
+            ("error", Json::str(err.to_string())),
+            ("overloaded", Json::Bool(true)),
+        ])
+    } else {
+        Json::obj([("error", Json::str(err.to_string()))])
+    }
+}
+
+fn json_line(j: &Json) -> Vec<u8> {
+    let mut bytes = j.to_string().into_bytes();
+    bytes.push(b'\n');
+    bytes
+}
+
+fn oversized_line_reply() -> Vec<u8> {
+    json_line(&Json::obj([(
+        "error",
+        Json::str(format!("request line exceeds {MAX_LINE_BYTES} bytes")),
+    )]))
+}
+
+/// Serve one decoded binary frame synchronously (blocking path). The
+/// registry enforces model/width invariants; overload comes back as the
+/// typed overload frame.
+fn respond_frame_blocking(
+    f: frame::Frame,
+    registry: &ModelRegistry,
+    pipelined: bool,
+) -> Vec<u8> {
+    let frame::Frame::ClassifyReq { model, bits, words } = f else {
+        return frame::encode_error("unexpected frame type from client");
+    };
+    let wps = frame::words_per_sample(bits);
+    let samples = words.len() / wps;
+    let mut rxs = Vec::with_capacity(samples);
+    for s in 0..samples {
+        let sample = frame::sample_bits(bits, &words, s);
+        match registry.classify_bits(model.as_deref(), sample, None, pipelined) {
+            Ok(rx) => rxs.push(rx),
+            // Reject the whole frame; replies for samples already admitted
+            // are dropped with their receivers (the dispatcher tolerates a
+            // closed reply channel).
+            Err(e @ NnError::Overload(_)) => {
+                return frame::encode_overload(&e.to_string());
+            }
+            Err(e) => return frame::encode_error(&e.to_string()),
+        }
+    }
+    let mut classes = Vec::with_capacity(samples);
+    for rx in &rxs {
+        match rx.recv_timeout(REPLY_TIMEOUT) {
+            Ok(r) => classes.push(r.class as u16),
+            Err(_) => return frame::encode_error("inference failed or timed out"),
+        }
+    }
+    frame::encode_classify_resp(&classes)
+}
+
+// ---------------------------------------------------------------------------
+// Blocking thread-per-connection path
+// ---------------------------------------------------------------------------
+
+/// State shared by the accept loop and every connection thread. The
+/// connection table is what makes shutdown O(1)-per-connection without
+/// read timeouts: the thread that serves `{"cmd":"shutdown"}` half-closes
+/// every registered stream, which unparks blocked reads as EOF, then
+/// self-connects once to wake the blocking accept.
+struct Shared {
+    stop: AtomicBool,
+    conns: Mutex<HashMap<usize, TcpStream>>,
+    next_token: AtomicUsize,
+    /// Where the shutdown wake connects (the listener address, rewritten
+    /// to loopback when the bind address is unspecified).
+    wake_addr: SocketAddr,
+}
+
+impl Shared {
+    /// Unblock every parked connection thread and the accept loop. Safe to
+    /// call from several threads; shutting down an already-shut stream is
+    /// a no-op.
+    fn begin_shutdown(&self) {
+        for stream in self.conns.lock().values() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        let _ = TcpStream::connect_timeout(&self.wake_addr, Duration::from_secs(1));
+    }
+}
+
+/// RAII registration in the connection table: the entry disappears no
+/// matter which path the handler thread exits through.
+struct TableGuard {
+    shared: Arc<Shared>,
+    token: usize,
+}
+
+impl Drop for TableGuard {
+    fn drop(&mut self) {
+        self.shared.conns.lock().remove(&self.token);
+    }
+}
+
+/// Serve until a client sends `{"cmd": "shutdown"}`. Binds to `addr`
+/// (e.g. "127.0.0.1:7878"); `ready` is signalled once listening (tests).
+/// The registry is left intact on return (the caller may still read
+/// per-model metrics); its routers drain when the registry drops.
+pub fn serve(
+    registry: Arc<ModelRegistry>,
+    addr: &str,
+    ready: Option<mpsc::Sender<u16>>,
+) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    if let Some(tx) = ready {
+        let _ = tx.send(local.port());
+    }
+    let wake_addr = if local.ip().is_unspecified() {
+        // 0.0.0.0 / :: accepts loopback but is not connectable as a
+        // destination; the wake must target a real interface.
+        SocketAddr::new(
+            std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+            local.port(),
+        )
+    } else {
+        local
+    };
+    let shared = Arc::new(Shared {
+        stop: AtomicBool::new(false),
+        conns: Mutex::named("server.conns", HashMap::new()),
+        next_token: AtomicUsize::new(0),
+        wake_addr,
+    });
+    let mut handles: Vec<thread::JoinHandle<()>> = Vec::new();
+    loop {
+        let (stream, _) = match listener.accept() {
+            Ok(accepted) => accepted,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        // The shutdown self-connect lands here: dropped unserved.
+        if shared.stop.load(Ordering::Acquire) {
+            break;
+        }
+        let r = Arc::clone(&registry);
+        let s = Arc::clone(&shared);
+        handles.push(thread::spawn(move || handle_client(stream, r, s)));
+        handles = reap_finished(handles);
+    }
+    // Every connection stream was half-closed by `begin_shutdown`, so each
+    // thread's blocked read has already returned EOF — this join is prompt.
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+/// Join and drop handles whose threads have already exited.
+fn reap_finished(handles: Vec<thread::JoinHandle<()>>) -> Vec<thread::JoinHandle<()>> {
+    handles
+        .into_iter()
+        .filter_map(|h| {
+            if h.is_finished() {
+                let _ = h.join();
+                None
+            } else {
+                Some(h)
+            }
+        })
+        .collect()
+}
+
+fn handle_client(mut stream: TcpStream, registry: Arc<ModelRegistry>, shared: Arc<Shared>) {
+    // Register in the connection table *before* checking the stop flag:
+    // `begin_shutdown` stores the flag before walking the table (both
+    // under no lock and the walk under the table lock), so a connection
+    // either gets half-closed by the walk or observes the flag here —
+    // never neither, which would leave its read parked forever.
+    let token = shared.next_token.fetch_add(1, Ordering::Relaxed);
+    let Ok(clone) = stream.try_clone() else { return };
+    shared.conns.lock().insert(token, clone);
+    let _guard = TableGuard { shared: Arc::clone(&shared), token };
+    if shared.stop.load(Ordering::Acquire) {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    // A client that pipelines requests but never reads replies would park
+    // this thread in `write_all` past shutdown; bound that direction.
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+
+    // Sniff the protocol off the first byte: 0xF5 can never begin a JSON
+    // line (it is not valid leading UTF-8), so one read disambiguates the
+    // whole connection.
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; READ_CHUNK];
+    let n = loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => return,
+            Ok(n) => break n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+    };
+    buf.extend_from_slice(&chunk[..n]);
+    if buf[0] == frame::MAGIC {
+        blocking_binary_session(stream, buf, &registry, &shared);
+    } else {
+        blocking_json_session(stream, buf, &registry, &shared);
+    }
+}
+
+fn blocking_json_session(
+    mut stream: TcpStream,
+    mut buf: Vec<u8>,
+    registry: &ModelRegistry,
+    shared: &Shared,
+) {
+    let mut chunk = [0u8; READ_CHUNK];
+    loop {
+        // Serve every complete line already buffered.
+        while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = buf.drain(..=pos).collect();
+            if line.len() > MAX_LINE_BYTES {
+                let _ = stream.write_all(&oversized_line_reply());
+                return;
+            }
+            // Lossy, not strict: a stray invalid byte yields a JSON parse
+            // error reply instead of silently dropping consumed input.
+            let text = String::from_utf8_lossy(&line);
+            let trimmed = text.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let response = respond_json_blocking(trimmed, registry, &shared.stop);
+            if stream.write_all(&json_line(&response)).is_err() {
+                return;
+            }
+            if shared.stop.load(Ordering::Acquire) {
+                // This thread served the shutdown (or observed one):
+                // unpark everyone else, wake the accept loop, exit.
+                shared.begin_shutdown();
+                return;
+            }
+        }
+        if buf.len() > MAX_LINE_BYTES {
+            let _ = stream.write_all(&oversized_line_reply());
+            return;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                // EOF with a trailing unterminated line: still serve it —
+                // a one-shot `printf '{…}' | nc` client deserves a reply.
+                let text = String::from_utf8_lossy(&buf);
+                let trimmed = text.trim();
+                if !trimmed.is_empty() {
+                    let response =
+                        respond_json_blocking(trimmed, registry, &shared.stop);
+                    let _ = stream.write_all(&json_line(&response));
+                    if shared.stop.load(Ordering::Acquire) {
+                        shared.begin_shutdown();
+                    }
+                }
+                return;
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+    }
+}
+
+fn respond_json_blocking(line: &str, registry: &ModelRegistry, stop: &AtomicBool) -> Json {
+    match parse_request(line, registry, stop) {
+        Err(msg) => Json::obj([("error", Json::str(msg))]),
+        Ok(Parsed::Reply(j)) => j,
+        Ok(Parsed::Classify { model, features }) => {
+            // The registry validates the model name and feature width, so
+            // an unknown model or wrong-width request comes back as a
+            // protocol error, not a panic inside the serving path.
+            match registry.classify(model.as_deref(), &features) {
+                Err(e) => json_error(&e),
+                Ok(rx) => match rx.recv_timeout(REPLY_TIMEOUT) {
+                    Ok(r) => json_reply(&r),
+                    Err(_) => Json::obj([(
+                        "error",
+                        Json::str("inference failed or timed out"),
+                    )]),
+                },
+            }
+        }
+    }
+}
+
+fn blocking_binary_session(
+    mut stream: TcpStream,
+    mut buf: Vec<u8>,
+    registry: &ModelRegistry,
+    shared: &Shared,
+) {
+    let mut chunk = [0u8; READ_CHUNK];
+    loop {
+        loop {
+            match frame::decode(&buf) {
+                Ok(None) => break,
+                Ok(Some((f, consumed))) => {
+                    buf.drain(..consumed);
+                    // Bytes already queued behind this frame are pipelined
+                    // requests (the same signal the event loop feeds into
+                    // the `pipelined_requests` counter).
+                    let pipelined = !buf.is_empty();
+                    let reply = respond_frame_blocking(f, registry, pipelined);
+                    if stream.write_all(&reply).is_err() {
+                        return;
+                    }
+                }
+                Err(e) => {
+                    // The stream is unsynchronized past a bad header: a
+                    // best-effort typed error, then disconnect.
+                    let _ = stream.write_all(&frame::encode_error(&e.to_string()));
+                    return;
+                }
+            }
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+        if shared.stop.load(Ordering::Acquire) {
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event-loop path (Linux)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod event {
+    use super::*;
+    use crate::util::evloop::{Event, EventLoop, Interest, WAKER_TOKEN};
+    use std::collections::VecDeque;
+    use std::os::fd::AsRawFd;
+
+    const LISTENER_TOKEN: u64 = 0;
+
+    /// Cap on reads per readiness event so one firehosing connection
+    /// cannot starve the rest of the loop; level-triggered epoll re-arms
+    /// whatever input is left.
+    const MAX_READS_PER_EVENT: usize = 16;
+
+    /// One queued reply, in request order. `Ready` replies (admin results,
+    /// protocol errors, overload rejections) still queue behind earlier
+    /// classifies so a pipelined client sees responses in exactly the
+    /// order it sent requests.
+    enum Pending {
+        Ready(Vec<u8>),
+        Json(mpsc::Receiver<Reply>),
+        Frame {
+            rxs: Vec<mpsc::Receiver<Reply>>,
+            classes: Vec<Option<u16>>,
+            failed: bool,
+        },
+    }
+
+    impl Pending {
+        /// Bytes to write, once this reply is fully resolved.
+        fn poll(&mut self) -> Option<Vec<u8>> {
+            match self {
+                Pending::Ready(bytes) => Some(std::mem::take(bytes)),
+                Pending::Json(rx) => match rx.try_recv() {
+                    Ok(r) => Some(json_line(&json_reply(&r))),
+                    Err(mpsc::TryRecvError::Empty) => None,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        Some(json_line(&Json::obj([(
+                            "error",
+                            Json::str("inference failed or timed out"),
+                        )])))
+                    }
+                },
+                Pending::Frame { rxs, classes, failed } => {
+                    for (i, rx) in rxs.iter().enumerate() {
+                        if classes[i].is_some() {
+                            continue;
+                        }
+                        match rx.try_recv() {
+                            Ok(r) => classes[i] = Some(r.class as u16),
+                            Err(mpsc::TryRecvError::Empty) => {}
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                *failed = true;
+                                classes[i] = Some(0);
+                            }
+                        }
+                    }
+                    if classes.iter().all(Option::is_some) {
+                        if *failed {
+                            Some(frame::encode_error("inference failed or timed out"))
+                        } else {
+                            let out: Vec<u16> =
+                                classes.iter().map(|c| c.unwrap_or(0)).collect();
+                            Some(frame::encode_classify_resp(&out))
+                        }
+                    } else {
+                        None
+                    }
+                }
+            }
+        }
+    }
+
+    #[derive(Clone, Copy, PartialEq)]
+    enum Proto {
+        Json,
+        Binary,
+    }
+
+    struct Conn {
+        stream: TcpStream,
+        token: u64,
+        proto: Option<Proto>,
+        in_buf: Vec<u8>,
+        pending: VecDeque<Pending>,
+        out: Vec<u8>,
+        out_pos: usize,
+        /// Peer sent EOF (or RDHUP): no more requests, but queued replies
+        /// still flush — half-close is a legal client pattern.
+        read_closed: bool,
+        /// Protocol violation: stop reading, flush queued replies, drop.
+        closing: bool,
+        /// Fatal I/O error: drop immediately.
+        dead: bool,
+        /// Read interest withdrawn because the out-buffer passed
+        /// [`HIGH_WATER`].
+        paused: bool,
+        registered: Interest,
+    }
+
+    impl Conn {
+        fn new(stream: TcpStream, token: u64) -> Conn {
+            Conn {
+                stream,
+                token,
+                proto: None,
+                in_buf: Vec::new(),
+                pending: VecDeque::new(),
+                out: Vec::new(),
+                out_pos: 0,
+                read_closed: false,
+                closing: false,
+                dead: false,
+                paused: false,
+                registered: Interest::READ,
+            }
+        }
+
+        fn backlog(&self) -> usize {
+            self.out.len() - self.out_pos
+        }
+
+        fn done(&self) -> bool {
+            self.dead
+                || ((self.read_closed || self.closing)
+                    && self.pending.is_empty()
+                    && self.backlog() == 0)
+        }
+
+        fn push_ready(&mut self, bytes: Vec<u8>) {
+            self.pending.push_back(Pending::Ready(bytes));
+        }
+
+        fn read_and_process(
+            &mut self,
+            registry: &ModelRegistry,
+            notify: &ReplyNotify,
+            stop: &AtomicBool,
+        ) {
+            if self.closing || self.read_closed {
+                return;
+            }
+            let mut chunk = [0u8; READ_CHUNK];
+            let mut budget = MAX_READS_PER_EVENT;
+            while budget > 0 {
+                budget -= 1;
+                match self.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        self.read_closed = true;
+                        break;
+                    }
+                    Ok(n) => self.in_buf.extend_from_slice(&chunk[..n]),
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        self.dead = true;
+                        return;
+                    }
+                }
+            }
+            self.process(registry, notify, stop);
+        }
+
+        fn process(
+            &mut self,
+            registry: &ModelRegistry,
+            notify: &ReplyNotify,
+            stop: &AtomicBool,
+        ) {
+            if self.proto.is_none() {
+                let Some(&first) = self.in_buf.first() else { return };
+                self.proto = Some(if first == frame::MAGIC {
+                    Proto::Binary
+                } else {
+                    Proto::Json
+                });
+            }
+            match self.proto {
+                Some(Proto::Binary) => self.process_frames(registry, notify),
+                Some(Proto::Json) => self.process_lines(registry, notify, stop),
+                None => {}
+            }
+        }
+
+        fn process_lines(
+            &mut self,
+            registry: &ModelRegistry,
+            notify: &ReplyNotify,
+            stop: &AtomicBool,
+        ) {
+            while let Some(pos) = self.in_buf.iter().position(|&b| b == b'\n') {
+                let line: Vec<u8> = self.in_buf.drain(..=pos).collect();
+                if line.len() > MAX_LINE_BYTES {
+                    self.push_ready(oversized_line_reply());
+                    self.closing = true;
+                    return;
+                }
+                let text = String::from_utf8_lossy(&line);
+                let trimmed = text.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                match parse_request(trimmed, registry, stop) {
+                    Err(msg) => self.push_ready(json_line(&Json::obj([(
+                        "error",
+                        Json::str(msg),
+                    )]))),
+                    Ok(Parsed::Reply(j)) => {
+                        self.push_ready(json_line(&j));
+                        if stop.load(Ordering::Acquire) {
+                            return;
+                        }
+                    }
+                    Ok(Parsed::Classify { model, features }) => {
+                        let pipelined = !self.pending.is_empty();
+                        match registry.classify_with(
+                            model.as_deref(),
+                            &features,
+                            Some(notify.clone()),
+                            pipelined,
+                        ) {
+                            Ok(rx) => self.pending.push_back(Pending::Json(rx)),
+                            Err(e) => self.push_ready(json_line(&json_error(&e))),
+                        }
+                    }
+                }
+            }
+            if self.in_buf.len() > MAX_LINE_BYTES {
+                self.push_ready(oversized_line_reply());
+                self.closing = true;
+            }
+        }
+
+        fn process_frames(&mut self, registry: &ModelRegistry, notify: &ReplyNotify) {
+            loop {
+                match frame::decode(&self.in_buf) {
+                    Ok(None) => break,
+                    Ok(Some((f, consumed))) => {
+                        self.in_buf.drain(..consumed);
+                        self.handle_frame(f, registry, notify);
+                    }
+                    Err(e) => {
+                        self.push_ready(frame::encode_error(&e.to_string()));
+                        self.closing = true;
+                        break;
+                    }
+                }
+            }
+        }
+
+        fn handle_frame(
+            &mut self,
+            f: frame::Frame,
+            registry: &ModelRegistry,
+            notify: &ReplyNotify,
+        ) {
+            let frame::Frame::ClassifyReq { model, bits, words } = f else {
+                self.push_ready(frame::encode_error(
+                    "unexpected frame type from client",
+                ));
+                return;
+            };
+            let pipelined = !self.pending.is_empty();
+            let wps = frame::words_per_sample(bits);
+            let samples = words.len() / wps;
+            let mut rxs = Vec::with_capacity(samples);
+            for s in 0..samples {
+                let sample = frame::sample_bits(bits, &words, s);
+                match registry.classify_bits(
+                    model.as_deref(),
+                    sample,
+                    Some(notify.clone()),
+                    pipelined,
+                ) {
+                    Ok(rx) => rxs.push(rx),
+                    Err(e) => {
+                        // Reject the whole frame; replies for samples
+                        // already admitted are dropped with their
+                        // receivers (the dispatcher tolerates that).
+                        let bytes = if matches!(e, NnError::Overload(_)) {
+                            frame::encode_overload(&e.to_string())
+                        } else {
+                            frame::encode_error(&e.to_string())
+                        };
+                        self.push_ready(bytes);
+                        return;
+                    }
+                }
+            }
+            let n = rxs.len();
+            self.pending.push_back(Pending::Frame {
+                rxs,
+                classes: vec![None; n],
+                failed: false,
+            });
+        }
+
+        /// Move every resolved reply at the front of the queue into the
+        /// out-buffer. Stops at the first unresolved reply: responses go
+        /// out strictly in request order.
+        fn pump(&mut self) {
+            while let Some(front) = self.pending.front_mut() {
+                match front.poll() {
+                    Some(bytes) => {
+                        self.out.extend_from_slice(&bytes);
+                        self.pending.pop_front();
+                    }
+                    None => break,
+                }
+            }
+            self.update_pause();
+        }
+
+        /// Write as much of the out-buffer as the socket accepts.
+        fn flush(&mut self) {
+            while self.out_pos < self.out.len() {
+                match self.stream.write(&self.out[self.out_pos..]) {
+                    Ok(0) => {
+                        self.dead = true;
+                        return;
+                    }
+                    Ok(n) => self.out_pos += n,
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        self.dead = true;
+                        return;
+                    }
+                }
+            }
+            if self.out_pos == self.out.len() {
+                self.out.clear();
+                self.out_pos = 0;
+            } else if self.out_pos > LOW_WATER {
+                // Reclaim the flushed prefix occasionally so a long-lived
+                // slow consumer does not pin peak-backlog memory.
+                self.out.drain(..self.out_pos);
+                self.out_pos = 0;
+            }
+            self.update_pause();
+        }
+
+        /// Hysteresis: pause reads past [`HIGH_WATER`] of unflushed reply
+        /// bytes, resume below [`LOW_WATER`].
+        fn update_pause(&mut self) {
+            let backlog = self.backlog();
+            if backlog > HIGH_WATER {
+                self.paused = true;
+            } else if backlog < LOW_WATER {
+                self.paused = false;
+            }
+        }
+
+        /// Re-register with epoll when the wanted interest set changed.
+        fn update_interest(&mut self, lp: &EventLoop) {
+            let want = Interest {
+                readable: !self.paused && !self.read_closed && !self.closing,
+                writable: self.backlog() > 0,
+            };
+            if want != self.registered
+                && lp.modify(self.stream.as_raw_fd(), self.token, want).is_ok()
+            {
+                self.registered = want;
+            }
+        }
+    }
+
+    /// Serve on one thread over epoll until a client sends
+    /// `{"cmd": "shutdown"}`. Both wire protocols, pipelined requests,
+    /// ordered replies, write backpressure — see the module docs. Errors
+    /// with [`ErrorKind::Unsupported`] where epoll is unavailable; callers
+    /// fall back to [`serve`].
+    pub fn serve_event(
+        registry: Arc<ModelRegistry>,
+        addr: &str,
+        ready: Option<mpsc::Sender<u16>>,
+    ) -> std::io::Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let port = listener.local_addr()?.port();
+        let mut lp = EventLoop::new()?;
+        lp.register(listener.as_raw_fd(), LISTENER_TOKEN, Interest::READ)?;
+        if let Some(tx) = ready {
+            let _ = tx.send(port);
+        }
+        // The dispatcher thread resolves replies; this closure is its
+        // doorbell into the loop (coalesced by the eventfd).
+        let waker = lp.waker();
+        let notify: ReplyNotify = Arc::new(move || waker.wake());
+        let stop = AtomicBool::new(false);
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut next_token: u64 = LISTENER_TOKEN + 1;
+        let mut events: Vec<Event> = Vec::new();
+
+        loop {
+            // Purely event-driven: no timeout, no polling. Every wakeup is
+            // socket readiness or the dispatcher's reply doorbell.
+            lp.wait(&mut events, None)?;
+            for ev in &events {
+                match ev.token {
+                    WAKER_TOKEN => {} // replies are pumped below, for all conns
+                    LISTENER_TOKEN => loop {
+                        match listener.accept() {
+                            Ok((s, _)) => {
+                                let _ = s.set_nonblocking(true);
+                                let _ = s.set_nodelay(true);
+                                let token = next_token;
+                                next_token += 1;
+                                if lp
+                                    .register(s.as_raw_fd(), token, Interest::READ)
+                                    .is_ok()
+                                {
+                                    conns.insert(token, Conn::new(s, token));
+                                }
+                            }
+                            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                            Err(_) => break,
+                        }
+                    },
+                    t => {
+                        if let Some(c) = conns.get_mut(&t) {
+                            if ev.readable {
+                                c.read_and_process(&registry, &notify, &stop);
+                            }
+                            if ev.closed {
+                                c.read_closed = true;
+                            }
+                            if ev.writable {
+                                c.flush();
+                            }
+                        }
+                    }
+                }
+            }
+            // Pump every connection: a waker event names no connection,
+            // and an admitted request's reply may belong to any of them.
+            let mut gone: Vec<u64> = Vec::new();
+            for c in conns.values_mut() {
+                c.pump();
+                c.flush();
+                if c.done() {
+                    gone.push(c.token);
+                } else {
+                    c.update_interest(&lp);
+                }
+            }
+            for t in gone {
+                if let Some(c) = conns.remove(&t) {
+                    let _ = lp.deregister(c.stream.as_raw_fd());
+                }
+            }
+            if stop.load(Ordering::Acquire) {
+                break;
+            }
+        }
+        // Final drain: give every connection a short blocking window to
+        // receive what it is owed (the shutdown "ok" above all), then
+        // close. Unresolved classifies are abandoned — their clients see
+        // the connection close, the contract for requests in flight at
+        // shutdown.
+        for mut c in conns.into_values() {
+            let _ = lp.deregister(c.stream.as_raw_fd());
+            c.pump();
+            if c.backlog() > 0 {
+                let _ = c.stream.set_nonblocking(false);
+                let _ = c.stream.set_write_timeout(Some(Duration::from_millis(250)));
+                let _ = c.stream.write_all(&c.out[c.out_pos..]);
+            }
+            let _ = c.stream.shutdown(Shutdown::Both);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+pub use event::serve_event;
+
+/// Stub off Linux: the event loop needs epoll. Callers fall back to the
+/// blocking [`serve`] path.
+#[cfg(not(target_os = "linux"))]
+pub fn serve_event(
+    _registry: Arc<ModelRegistry>,
+    _addr: &str,
+    _ready: Option<mpsc::Sender<u16>>,
+) -> std::io::Result<()> {
+    Err(std::io::Error::new(
+        std::io::ErrorKind::Unsupported,
+        "serve_event requires Linux epoll; use the blocking serve path",
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -330,7 +1087,11 @@ mod tests {
         RouterBuilder::new(model.clone())
             .circuit(flow.circuit.netlist)
             .engine(Policy::Logic)
-            .batch_policy(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) })
+            .batch_policy(BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            })
             .workers(2)
             .build()
             .unwrap()
@@ -351,6 +1112,29 @@ mod tests {
         });
         let port = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         (server, port)
+    }
+
+    /// Encode one sample as a classify-request frame the way a binary
+    /// client would: binarize through the model's own quantizer, ship the
+    /// packed words.
+    fn frame_for(registry: &ModelRegistry, model: Option<&str>, x: &[f64]) -> Vec<u8> {
+        let router = registry.get(model).unwrap();
+        let bits = router.binarize(x);
+        frame::encode_classify_req(model, bits.len() as u16, bits.words())
+    }
+
+    /// Read one complete frame off a blocking client socket.
+    fn read_frame(stream: &mut std::net::TcpStream, buf: &mut Vec<u8>) -> frame::Frame {
+        let mut chunk = [0u8; 4096];
+        loop {
+            if let Some((f, n)) = frame::decode(buf).unwrap() {
+                buf.drain(..n);
+                return f;
+            }
+            let n = stream.read(&mut chunk).unwrap();
+            assert!(n > 0, "server closed mid-frame");
+            buf.extend_from_slice(&chunk[..n]);
+        }
     }
 
     #[test]
@@ -587,9 +1371,12 @@ mod tests {
 
     #[test]
     fn shutdown_completes_with_an_idle_client_attached() {
-        // Regression: `serve` used to join per-client threads that could
-        // block forever in a read; an idle (never-writing) client therefore
-        // hung the shutdown. The read timeout turns that into a poll.
+        // Regression, twice over. Originally `serve` joined per-client
+        // threads that could block forever in a read, so an idle client
+        // hung the shutdown; then a 50 ms read-timeout poll fixed the hang
+        // but made every idle connection burn syscalls. The conn-table
+        // design must shut down promptly with *zero* polling — pin the
+        // latency so a poll-based regression (or a lost wakeup) fails here.
         let (registry, _model) = tiny_registry(3);
         let (server, port) = spawn_server(Arc::clone(&registry));
 
@@ -602,8 +1389,289 @@ mod tests {
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("ok"));
-        // Must return despite the idle client still being connected.
+        // Must return despite the idle client still being connected — and
+        // fast: the shutdown path is event-driven, not poll-driven.
+        let t0 = std::time::Instant::now();
         server.join().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_millis(250),
+            "shutdown took {:?}; the O(1) wake path regressed",
+            t0.elapsed()
+        );
         drop(idle);
+    }
+
+    #[test]
+    fn binary_frames_are_sniffed_on_the_blocking_path() {
+        let (registry, model) = tiny_registry(6);
+        let (server, port) = spawn_server(Arc::clone(&registry));
+
+        // Binary client: one two-sample frame first.
+        let mut bin = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let xs = [vec![0.3, -0.2, 0.9, -1.0], vec![-0.5, 0.1, 0.2, 0.8]];
+        let router = registry.get(None).unwrap();
+        let b0 = router.binarize(&xs[0]);
+        let b1 = router.binarize(&xs[1]);
+        let mut words = b0.words().to_vec();
+        words.extend_from_slice(b1.words());
+        let req = frame::encode_classify_req(Some("tcp"), b0.len() as u16, &words);
+        bin.write_all(&req).unwrap();
+        let mut buf = Vec::new();
+        let resp = read_frame(&mut bin, &mut buf);
+        let want: Vec<u16> = xs
+            .iter()
+            .map(|x| crate::nn::eval::classify(&model, x) as u16)
+            .collect();
+        assert_eq!(resp, frame::Frame::ClassifyResp { classes: want });
+
+        // Pipelined single-sample frames answer in order.
+        let mut two = frame_for(&registry, None, &xs[0]);
+        two.extend_from_slice(&frame_for(&registry, None, &xs[1]));
+        bin.write_all(&two).unwrap();
+        for x in &xs {
+            let resp = read_frame(&mut bin, &mut buf);
+            let want = crate::nn::eval::classify(&model, x) as u16;
+            assert_eq!(resp, frame::Frame::ClassifyResp { classes: vec![want] });
+        }
+        drop(bin);
+
+        // JSON admin on the same port still works: one port, two protocols.
+        let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("ok"), "{line}");
+        server.join().unwrap();
+    }
+
+    #[cfg(target_os = "linux")]
+    mod event_loop {
+        use super::*;
+
+        fn spawn_event_server(
+            registry: Arc<ModelRegistry>,
+        ) -> (std::thread::JoinHandle<()>, u16) {
+            let (tx, rx) = mpsc::channel();
+            let server = std::thread::spawn(move || {
+                serve_event(registry, "127.0.0.1:0", Some(tx)).unwrap();
+            });
+            let port = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            (server, port)
+        }
+
+        #[test]
+        fn serves_json_and_binary_on_one_port() {
+            let (registry, model) = tiny_registry(11);
+            let (server, port) = spawn_event_server(Arc::clone(&registry));
+
+            // JSON session (the legacy protocol, unchanged).
+            let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let x = vec![0.3, -0.2, 0.9, -1.0];
+            conn.write_all(b"{\"features\": [0.3, -0.2, 0.9, -1.0]}\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let resp = crate::util::json::Json::parse(&line).unwrap();
+            assert_eq!(
+                resp.get("class").unwrap().as_usize().unwrap(),
+                crate::nn::eval::classify(&model, &x)
+            );
+            conn.write_all(b"{\"cmd\": \"metrics\"}\n").unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("logic=1"), "{line}");
+            // Malformed JSON → error reply, session continues.
+            conn.write_all(b"not json\n").unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("error"), "{line}");
+
+            // Binary session on the same port, concurrently.
+            let mut bin = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            bin.write_all(&frame_for(&registry, Some("tcp"), &x)).unwrap();
+            let mut buf = Vec::new();
+            let resp = read_frame(&mut bin, &mut buf);
+            let want = crate::nn::eval::classify(&model, &x) as u16;
+            assert_eq!(resp, frame::Frame::ClassifyResp { classes: vec![want] });
+            drop(bin);
+
+            conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("ok"), "{line}");
+            server.join().unwrap();
+        }
+
+        #[test]
+        fn pipelined_frames_answer_in_order_and_count() {
+            // A flush policy that parks the batcher briefly guarantees the
+            // second and third frames arrive while the first's reply is
+            // still pending — deterministic pipelining.
+            let model = random_model("tcp", 4, &[3, 3], 2, 1, 12);
+            let flow =
+                run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None)
+                    .unwrap();
+            let router = RouterBuilder::new(model.clone())
+                .circuit(flow.circuit.netlist)
+                .engine(Policy::Logic)
+                .batch_policy(BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(100),
+                    ..Default::default()
+                })
+                .workers(1)
+                .build()
+                .unwrap();
+            let registry = Arc::new(ModelRegistry::with_default("tcp", router));
+            let (server, port) = spawn_event_server(Arc::clone(&registry));
+
+            let xs = [
+                vec![0.3, -0.2, 0.9, -1.0],
+                vec![-0.5, 0.1, 0.2, 0.8],
+                vec![0.7, 0.7, -0.7, -0.7],
+            ];
+            let mut burst = Vec::new();
+            for x in &xs {
+                burst.extend_from_slice(&frame_for(&registry, None, x));
+            }
+            let mut bin = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            bin.write_all(&burst).unwrap();
+            let mut buf = Vec::new();
+            for x in &xs {
+                let resp = read_frame(&mut bin, &mut buf);
+                let want = crate::nn::eval::classify(&model, x) as u16;
+                assert_eq!(
+                    resp,
+                    frame::Frame::ClassifyResp { classes: vec![want] },
+                    "replies must come back in request order"
+                );
+            }
+            // Frames 2 and 3 were submitted while frame 1's reply was
+            // parked on the batcher's age timer.
+            let m = registry.get(None).unwrap().metrics();
+            assert!(
+                m.pipelined_requests.load(std::sync::atomic::Ordering::Relaxed) >= 2,
+                "pipelined requests must be counted"
+            );
+            drop(bin);
+
+            let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            server.join().unwrap();
+        }
+
+        #[test]
+        fn overload_comes_back_as_a_typed_frame() {
+            // Depth cap 1 with the dispatcher parked on a 200 ms age
+            // timer: the first frame is admitted, the second MUST be
+            // rejected while the first still occupies the queue.
+            let model = random_model("tcp", 4, &[3, 3], 2, 1, 13);
+            let flow =
+                run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None)
+                    .unwrap();
+            let router = RouterBuilder::new(model.clone())
+                .circuit(flow.circuit.netlist)
+                .engine(Policy::Logic)
+                .batch_policy(BatchPolicy {
+                    max_batch: 64,
+                    max_wait: Duration::from_millis(200),
+                    max_depth: 1,
+                })
+                .workers(1)
+                .build()
+                .unwrap();
+            let registry = Arc::new(ModelRegistry::with_default("tcp", router));
+            let (server, port) = spawn_event_server(Arc::clone(&registry));
+
+            let x = vec![0.3, -0.2, 0.9, -1.0];
+            let mut burst = frame_for(&registry, None, &x);
+            burst.extend_from_slice(&frame_for(&registry, None, &x));
+            let mut bin = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            bin.write_all(&burst).unwrap();
+            let mut buf = Vec::new();
+            // Reply 1: the admitted classify (after the age flush).
+            let first = read_frame(&mut bin, &mut buf);
+            assert!(
+                matches!(first, frame::Frame::ClassifyResp { .. }),
+                "admitted request must still serve: {first:?}"
+            );
+            // Reply 2: the typed overload rejection, in order.
+            let second = read_frame(&mut bin, &mut buf);
+            assert!(
+                matches!(&second, frame::Frame::Overload { message }
+                    if message.contains("depth cap")),
+                "expected overload frame, got {second:?}"
+            );
+            let m = registry.get(None).unwrap().metrics();
+            assert!(
+                m.rejected_overload.load(std::sync::atomic::Ordering::Relaxed) >= 1
+            );
+            drop(bin);
+
+            let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            server.join().unwrap();
+        }
+
+        #[test]
+        fn shutdown_is_prompt_with_idle_clients_attached() {
+            let (registry, _model) = tiny_registry(14);
+            let (server, port) = spawn_event_server(Arc::clone(&registry));
+
+            let idle1 = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            let idle2 = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+
+            let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("ok"), "{line}");
+            let t0 = std::time::Instant::now();
+            server.join().unwrap();
+            assert!(
+                t0.elapsed() < Duration::from_millis(250),
+                "event-loop shutdown took {:?}",
+                t0.elapsed()
+            );
+            drop(idle1);
+            drop(idle2);
+        }
+
+        #[test]
+        fn bad_frame_gets_a_typed_error_then_disconnect() {
+            let (registry, _model) = tiny_registry(15);
+            let (server, port) = spawn_event_server(Arc::clone(&registry));
+
+            let mut bin = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            // Valid magic, hostile version byte.
+            let mut bad = frame_for(&registry, None, &[0.3, -0.2, 0.9, -1.0]);
+            bad[1] = 9;
+            bin.write_all(&bad).unwrap();
+            let mut buf = Vec::new();
+            let resp = read_frame(&mut bin, &mut buf);
+            assert!(
+                matches!(&resp, frame::Frame::Error { message }
+                    if message.contains("version")),
+                "{resp:?}"
+            );
+            // The server closes the unsynchronized stream afterwards.
+            let mut probe = [0u8; 1];
+            assert_eq!(bin.read(&mut probe).unwrap_or(0), 0, "stream must close");
+
+            let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            server.join().unwrap();
+        }
     }
 }

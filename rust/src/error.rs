@@ -35,6 +35,10 @@ pub enum NnError {
     /// A lock in the serving stack was poisoned by a panicked thread; the
     /// lock healed, but this request saw the fault (checked lock paths).
     Sync(SyncError),
+    /// Admission control rejected the request: the model's batch queue is
+    /// at its configured depth cap. Transient by design — clients should
+    /// back off and resubmit, not treat this as a malformed request.
+    Overload(String),
 }
 
 impl fmt::Display for NnError {
@@ -48,6 +52,7 @@ impl fmt::Display for NnError {
             NnError::Check(e) => write!(f, "check: {e}"),
             NnError::Config(m) => write!(f, "{m}"),
             NnError::Sync(e) => write!(f, "sync: {e}"),
+            NnError::Overload(m) => write!(f, "overloaded: {m}"),
         }
     }
 }
@@ -133,6 +138,14 @@ mod tests {
         assert!(matches!(e, NnError::Data(_)));
         let e: NnError = EngineError::Unsupported("shape".into()).into();
         assert!(matches!(e, NnError::Engine(_)));
+    }
+
+    #[test]
+    fn overload_is_typed_and_names_itself() {
+        let e = NnError::Overload("queue full (depth 64)".into());
+        assert_eq!(e.to_string(), "overloaded: queue full (depth 64)");
+        use std::error::Error;
+        assert!(e.source().is_none());
     }
 
     #[test]

@@ -7,9 +7,12 @@
 //! nullanet verify    --arch jsc-s [--samples 2000] [--circuit file.circuit.json]
 //! nullanet serve     --arch jsc-s --addr 127.0.0.1:7878 --engine logic|pjrt|compare
 //!                    [--circuit file.circuit.json] [--workers N]
+//!                    [--event-loop] [--max-queue-depth N]
 //! nullanet serve     --models artifacts/circuits [--default-model name]
 //!                    [--addr …] [--max-batch N] [--max-wait-us N] [--workers N]
+//!                    [--event-loop] [--max-queue-depth N]
 //! nullanet bench     [--out BENCH_5.json] [--batch N] [--quick] [--jobs N]
+//! nullanet bench     --serve [--out BENCH_8.json] [--conns N] [--reqs N] [--quick]
 //! nullanet emit      --arch jsc-s --format blif|verilog --out file
 //! nullanet info      --arch jsc-s
 //! nullanet check     bundle.json [...]        (structural lint)
@@ -275,17 +278,48 @@ fn cmd_verify(args: &Args) -> Result<(), NnError> {
     Ok(())
 }
 
+/// Run the chosen accept path. `--event-loop` prefers the epoll front end
+/// and falls back to the blocking path (with a notice) where epoll is
+/// unavailable, so the flag is safe in portable scripts.
+fn run_server(
+    registry: &Arc<ModelRegistry>,
+    addr: &str,
+    event_loop: bool,
+) -> Result<(), NnError> {
+    let res = if event_loop {
+        match nullanet_tiny::coordinator::server::serve_event(
+            Arc::clone(registry),
+            addr,
+            None,
+        ) {
+            Err(e) if e.kind() == std::io::ErrorKind::Unsupported => {
+                println!("(--event-loop unsupported here; using the blocking accept loop)");
+                nullanet_tiny::coordinator::server::serve(Arc::clone(registry), addr, None)
+            }
+            r => r,
+        }
+    } else {
+        nullanet_tiny::coordinator::server::serve(Arc::clone(registry), addr, None)
+    };
+    res.map_err(|e| NnError::Config(format!("serve on {addr}: {e}")))
+}
+
 fn cmd_serve(args: &Args) -> Result<(), NnError> {
     conf(args.check_known(&[
         "arch", "model", "artifacts", "addr", "engine", "max-batch", "max-wait-us",
-        "jobs", "workers", "circuit", "models", "default-model",
+        "jobs", "workers", "circuit", "models", "default-model", "event-loop",
+        "max-queue-depth",
     ]))?;
     let bp = BatchPolicy {
         max_batch: conf(args.get_usize("max-batch", 64))?,
         max_wait: std::time::Duration::from_micros(
             conf(args.get_usize("max-wait-us", 200))? as u64,
         ),
+        // Admission control: classifies beyond this many queued samples per
+        // model are rejected with a typed overload reply instead of queued.
+        max_depth: conf(args.get_usize("max-queue-depth", BatchPolicy::default().max_depth))?,
     };
+    let event_loop = args.get_bool("event-loop");
     // Logic-engine shard workers: batches spanning several 64-sample lane
     // groups are evaluated in parallel on one shared compiled netlist.
     let workers = conf(args.get_usize("workers", RouterBuilder::default_workers()))?;
@@ -341,8 +375,7 @@ fn cmd_serve(args: &Args) -> Result<(), NnError> {
             "serving {} models on {addr} (send {{\"cmd\":\"shutdown\"}} to stop)",
             registry.len()
         );
-        nullanet_tiny::coordinator::server::serve(Arc::clone(&registry), &addr, None)
-            .map_err(|e| NnError::Config(format!("serve on {addr}: {e}")))?;
+        run_server(&registry, &addr, event_loop)?;
         println!("{}", registry.metrics_report());
         return Ok(());
     }
@@ -409,8 +442,7 @@ fn cmd_serve(args: &Args) -> Result<(), NnError> {
          send {{\"cmd\":\"shutdown\"}} to stop)",
         model.name
     );
-    nullanet_tiny::coordinator::server::serve(Arc::clone(&registry), &addr, None)
-        .map_err(|e| NnError::Config(format!("serve on {addr}: {e}")))?;
+    run_server(&registry, &addr, event_loop)?;
     println!("{}", registry.metrics_report());
     Ok(())
 }
@@ -435,7 +467,10 @@ fn kernel_row(width: usize, optimized: bool, s: &BenchStats, n: f64) -> Json {
 /// trained artifacts are needed. `--quick` (CI smoke) shrinks the model
 /// set and batch; `NNT_BENCH_FAST=1` shrinks the measurement windows.
 fn cmd_bench(args: &Args) -> Result<(), NnError> {
-    conf(args.check_known(&["out", "batch", "quick", "jobs"]))?;
+    conf(args.check_known(&["out", "batch", "quick", "jobs", "serve", "conns", "reqs"]))?;
+    if args.get_bool("serve") {
+        return cmd_bench_serve(args);
+    }
     let quick = args.get_bool("quick");
     let out_path = args.get_str("out", "BENCH_5.json");
     let batch_n = conf(args.get_usize("batch", if quick { 256 } else { 4096 }))?;
@@ -541,6 +576,279 @@ fn cmd_bench(args: &Args) -> Result<(), NnError> {
             "warning: a W=4+optimizer kernel did not beat its W=1 unoptimized baseline"
         );
     }
+    Ok(())
+}
+
+/// Nearest-rank percentile of a sorted sample set (µs).
+fn pct_us(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// One client connection's worth of pipelined requests. `frames[i]` is the
+/// pre-encoded request (a JSON line or a binary frame); `read_reply` pulls
+/// exactly one response off the stream. Keeps up to `window` requests in
+/// flight and returns one latency sample (µs) per request.
+fn drive_pipelined<F>(
+    addr: std::net::SocketAddr,
+    frames: &[Vec<u8>],
+    window: usize,
+    mut read_reply: F,
+) -> std::io::Result<Vec<f64>>
+where
+    F: FnMut(&mut std::net::TcpStream, &mut Vec<u8>) -> std::io::Result<()>,
+{
+    use std::io::Write;
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let mut latencies = Vec::with_capacity(frames.len());
+    let mut in_flight: std::collections::VecDeque<std::time::Instant> =
+        std::collections::VecDeque::new();
+    let mut buf: Vec<u8> = Vec::new();
+    let mut next = 0usize;
+    let mut received = 0usize;
+    while received < frames.len() {
+        while next < frames.len() && in_flight.len() < window {
+            stream.write_all(&frames[next])?;
+            in_flight.push_back(std::time::Instant::now());
+            next += 1;
+        }
+        read_reply(&mut stream, &mut buf)?;
+        let t0 = in_flight.pop_front().expect("a reply implies a request in flight");
+        latencies.push(t0.elapsed().as_secs_f64() * 1e6);
+        received += 1;
+    }
+    Ok(latencies)
+}
+
+/// Pull one newline-terminated JSON reply into `buf`, then consume it.
+fn read_json_reply(
+    stream: &mut std::net::TcpStream,
+    buf: &mut Vec<u8>,
+) -> std::io::Result<()> {
+    use std::io::Read;
+    let mut chunk = [0u8; 4096];
+    loop {
+        if let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            buf.drain(..=pos);
+            return Ok(());
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed mid-reply",
+            ));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+/// Pull one length-prefixed binary reply into `buf`, then consume it.
+fn read_frame_reply(
+    stream: &mut std::net::TcpStream,
+    buf: &mut Vec<u8>,
+) -> std::io::Result<()> {
+    use nullanet_tiny::coordinator::frame;
+    use std::io::Read;
+    let mut chunk = [0u8; 4096];
+    loop {
+        match frame::decode(buf)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?
+        {
+            Some((_f, n)) => {
+                buf.drain(..n);
+                return Ok(());
+            }
+            None => {
+                let n = stream.read(&mut chunk)?;
+                if n == 0 {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "server closed mid-frame",
+                    ));
+                }
+                buf.extend_from_slice(&chunk[..n]);
+            }
+        }
+    }
+}
+
+/// `bench --serve`: loopback serving benchmark. Mode 1 drives JSON lines
+/// through the blocking thread-per-connection accept path (the pre-PR
+/// serving stack, strict request/reply per connection); mode 2 drives
+/// binary frames through the epoll event loop with `window` requests
+/// pipelined per connection. Deterministic inputs (fixed-seed model and
+/// PRNG); writes `BENCH_8.json` with p50/p99 latency and req/s per mode
+/// plus the binary-over-JSON throughput speedup — the number this PR's
+/// perf trajectory is tracked by. `--quick`/`NNT_BENCH_FAST=1` shrink the
+/// connection count and request volume for CI smoke.
+fn cmd_bench_serve(args: &Args) -> Result<(), NnError> {
+    use nullanet_tiny::coordinator::frame;
+
+    let quick = args.get_bool("quick") || std::env::var("NNT_BENCH_FAST").is_ok();
+    let out_path = args.get_str("out", "BENCH_8.json");
+    let conns = conf(args.get_usize("conns", if quick { 8 } else { 64 }))?;
+    let reqs = conf(args.get_usize("reqs", if quick { 64 } else { 1024 }))?;
+    let window = 8usize;
+
+    let model = random_model("bench-serve", 8, &[6, 4], 2, 1, 5);
+    println!("model {}: synthesizing…", model.summary());
+    let cfg = FlowConfig { verify: false, jobs: 2, ..Default::default() };
+    let flow = run_flow(&model, &cfg, None)?;
+    let netlist = flow.circuit.netlist;
+
+    // Deterministic request mix shared by both modes.
+    let mut rng = Xoshiro256::new(0xC0FFEE);
+    let inputs: Vec<Vec<f64>> = (0..reqs)
+        .map(|_| {
+            (0..model.input_features).map(|_| 2.0 * rng.next_gaussian()).collect()
+        })
+        .collect();
+    let json_frames: Vec<Vec<u8>> = inputs
+        .iter()
+        .map(|x| {
+            let vals: Vec<String> = x.iter().map(|v| format!("{v:.6}")).collect();
+            format!("{{\"features\": [{}]}}\n", vals.join(", ")).into_bytes()
+        })
+        .collect();
+    let bin_frames: Vec<Vec<u8>> = inputs
+        .iter()
+        .map(|x| {
+            let codes = quantize_input(&model, x);
+            let bits = codes_to_bitvec(&codes, model.input_quant.bits);
+            frame::encode_classify_req(None, bits.len() as u16, bits.words())
+        })
+        .collect();
+
+    let mk_registry = |netlist: nullanet_tiny::logic::netlist::LutNetlist| {
+        RouterBuilder::new(model.clone())
+            .circuit(netlist)
+            .engine(Policy::Logic)
+            .batch_policy(BatchPolicy {
+                max_batch: 256,
+                max_wait: std::time::Duration::from_micros(100),
+                ..Default::default()
+            })
+            .workers(2)
+            .build()
+            .map(|router| Arc::new(ModelRegistry::with_default("bench-serve", router)))
+    };
+
+    // Each mode: spawn the server, hammer it from `conns` client threads,
+    // then shut it down over the wire.
+    let run_mode = |event_loop: bool,
+                        frames: &[Vec<u8>],
+                        win: usize,
+                        json: bool|
+     -> Result<(f64, f64, f64), NnError> {
+        let registry = mk_registry(netlist.clone())?;
+        let (tx, rx) = std::sync::mpsc::channel();
+        let server = std::thread::spawn(move || {
+            if event_loop {
+                nullanet_tiny::coordinator::server::serve_event(
+                    registry,
+                    "127.0.0.1:0",
+                    Some(tx),
+                )
+            } else {
+                nullanet_tiny::coordinator::server::serve(registry, "127.0.0.1:0", Some(tx))
+            }
+        });
+        let port = rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .map_err(|_| NnError::Config("bench --serve: server did not start".into()))?;
+        let addr = std::net::SocketAddr::from(([127, 0, 0, 1], port));
+        let t0 = std::time::Instant::now();
+        let mut workers = Vec::new();
+        for _ in 0..conns {
+            let frames = frames.to_vec();
+            workers.push(std::thread::spawn(move || {
+                if json {
+                    drive_pipelined(addr, &frames, win, read_json_reply)
+                } else {
+                    drive_pipelined(addr, &frames, win, read_frame_reply)
+                }
+            }));
+        }
+        let mut latencies: Vec<f64> = Vec::with_capacity(conns * reqs);
+        for w in workers {
+            let lats = w
+                .join()
+                .map_err(|_| NnError::Config("bench --serve: client panicked".into()))?
+                .map_err(|e| NnError::Config(format!("bench --serve client: {e}")))?;
+            latencies.extend(lats);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        // Orderly shutdown over the JSON protocol (both paths speak it).
+        {
+            use std::io::Write;
+            let mut admin = std::net::TcpStream::connect(addr)
+                .map_err(|e| NnError::Config(format!("bench --serve admin: {e}")))?;
+            admin
+                .write_all(b"{\"cmd\": \"shutdown\"}\n")
+                .map_err(|e| NnError::Config(format!("bench --serve admin: {e}")))?;
+            let mut buf = Vec::new();
+            let _ = read_json_reply(&mut admin, &mut buf);
+        }
+        server
+            .join()
+            .map_err(|_| NnError::Config("bench --serve: server panicked".into()))?
+            .map_err(|e| NnError::Config(format!("bench --serve server: {e}")))?;
+        latencies.sort_by(f64::total_cmp);
+        let rps = (conns * reqs) as f64 / wall;
+        Ok((rps, pct_us(&latencies, 0.50), pct_us(&latencies, 0.99)))
+    };
+
+    println!(
+        "serving bench: {conns} connections × {reqs} requests (window {window} pipelined)"
+    );
+    let (json_rps, json_p50, json_p99) = run_mode(false, &json_frames, 1, true)?;
+    println!(
+        "  json/blocking:      {json_rps:>10.0} req/s  p50 {json_p50:.1}µs  p99 {json_p99:.1}µs"
+    );
+    // The binary mode prefers the event loop; off Linux it degrades to the
+    // blocking path so the bench still runs (recorded in the output).
+    let event_capable = cfg!(target_os = "linux");
+    let (bin_rps, bin_p50, bin_p99) = run_mode(event_capable, &bin_frames, window, false)?;
+    let accept_path = if event_capable { "event-loop" } else { "blocking" };
+    println!(
+        "  binary/{accept_path}: {bin_rps:>10.0} req/s  p50 {bin_p50:.1}µs  p99 {bin_p99:.1}µs"
+    );
+    let speedup = bin_rps / json_rps;
+    println!("  speedup binary+{accept_path} vs json+blocking: {speedup:.2}x");
+
+    let mode_row = |mode: &str, path: &str, win: usize, rps: f64, p50: f64, p99: f64| {
+        Json::obj([
+            ("mode", Json::str(mode)),
+            ("accept_path", Json::str(path)),
+            ("window", Json::int(win as i64)),
+            ("req_per_sec", Json::float(rps)),
+            ("p50_us", Json::float(p50)),
+            ("p99_us", Json::float(p99)),
+        ])
+    };
+    let doc = Json::obj([
+        ("schema", Json::str("nullanet-bench")),
+        ("version", Json::int(1)),
+        ("bench_id", Json::int(8)),
+        ("quick", Json::Bool(quick)),
+        ("serve", Json::obj([
+            ("connections", Json::int(conns as i64)),
+            ("requests_per_conn", Json::int(reqs as i64)),
+            ("modes", Json::Arr(vec![
+                mode_row("json", "blocking", 1, json_rps, json_p50, json_p99),
+                mode_row("binary", accept_path, window, bin_rps, bin_p50, bin_p99),
+            ])),
+            ("speedup_binary_vs_json", Json::float(speedup)),
+        ])),
+    ]);
+    std::fs::write(&out_path, format!("{}\n", doc.to_pretty_string()))
+        .map_err(|e| NnError::Config(format!("write {out_path}: {e}")))?;
+    println!("wrote {out_path}");
     Ok(())
 }
 
@@ -677,9 +985,52 @@ fn cmd_check_locks(with_fixture: bool) -> Result<(), NnError> {
         rx.recv_timeout(std::time::Duration::from_secs(10))
             .map_err(|_| NnError::Config("check --locks: inference timed out".into()))?;
     }
-    registry.install("lockcheck", lock_router(&model, flow.circuit.netlist)?, None)?;
+    registry.install(
+        "lockcheck",
+        lock_router(&model, flow.circuit.netlist.clone())?,
+        None,
+    )?;
     registry.unload("lockcheck")?;
     registry.shutdown_all();
+    // The TCP front end owns one more named lock — the connection table
+    // ("server.conns") that the shutdown wake protocol walks. Serve one
+    // classify and a shutdown over loopback so its acquisition edges join
+    // the graph alongside the registry/router/batcher locks.
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let srv_registry = Arc::new(ModelRegistry::new(RegistryConfig::default()));
+        srv_registry.install("lockcheck", lock_router(&model, flow.circuit.netlist)?, None)?;
+        let (tx, rx) = std::sync::mpsc::channel();
+        let server = std::thread::spawn(move || {
+            nullanet_tiny::coordinator::server::serve(srv_registry, "127.0.0.1:0", Some(tx))
+        });
+        let port = rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .map_err(|_| NnError::Config("check --locks: server did not start".into()))?;
+        let mut conn = std::net::TcpStream::connect(("127.0.0.1", port))
+            .map_err(|e| NnError::Config(format!("check --locks: connect: {e}")))?;
+        let mut reader = BufReader::new(
+            conn.try_clone()
+                .map_err(|e| NnError::Config(format!("check --locks: clone: {e}")))?,
+        );
+        let vals: Vec<String> = x.iter().map(|v| format!("{v:.6}")).collect();
+        let mut line = String::new();
+        for req in [
+            format!("{{\"features\": [{}]}}\n", vals.join(", ")),
+            "{\"cmd\": \"shutdown\"}\n".to_string(),
+        ] {
+            conn.write_all(req.as_bytes())
+                .map_err(|e| NnError::Config(format!("check --locks: send: {e}")))?;
+            line.clear();
+            reader
+                .read_line(&mut line)
+                .map_err(|e| NnError::Config(format!("check --locks: recv: {e}")))?;
+        }
+        server
+            .join()
+            .map_err(|_| NnError::Config("check --locks: server panicked".into()))?
+            .map_err(|e| NnError::Config(format!("check --locks: serve: {e}")))?;
+    }
     if with_fixture {
         nsync::run_deadlock_fixture();
     }

@@ -41,6 +41,17 @@ impl BitVec {
         v
     }
 
+    /// Build from pre-packed LSB-first words (e.g. straight off a binary
+    /// wire frame). `words.len()` must be exactly `len.div_ceil(64)`; any
+    /// stray bits past `len` in the last word are masked to keep equality
+    /// and popcount canonical.
+    pub fn from_words(len: usize, words: Vec<u64>) -> Self {
+        assert_eq!(words.len(), len.div_ceil(64), "from_words: wrong word count for {len} bits");
+        let mut v = Self { len, words };
+        v.mask_tail();
+        v
+    }
+
     /// Build from an iterator of bools.
     pub fn from_bools(bits: impl IntoIterator<Item = bool>) -> Self {
         let bits: Vec<bool> = bits.into_iter().collect();

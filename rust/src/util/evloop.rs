@@ -1,0 +1,443 @@
+//! Dependency-free nonblocking event loop over thin epoll syscall shims.
+//!
+//! The serving front end (`coordinator::server`) historically ran one
+//! blocking thread per connection with a 50 ms read-timeout poll to notice
+//! shutdown — the exact host-side overhead the paper's fixed-function
+//! datapath is supposed to eliminate. This module is the substrate for the
+//! event-driven replacement (S8 in the `rust/DESIGN.md` §3 substitution
+//! table, standing in for `mio`): a level-triggered epoll wrapper plus an
+//! `eventfd` waker, with **no timers and no polling** — every wakeup is a
+//! readiness edge or an explicit [`Waker::wake`].
+//!
+//! Scope is deliberately thin: readiness multiplexing only. Accept loops,
+//! per-connection state machines, framing, and backpressure live in the
+//! caller (`coordinator::server::serve_event`); this module owns exactly
+//! the `unsafe` FFI surface, so everything above it stays safe Rust.
+//!
+//! The syscall shims are direct `extern "C"` declarations against the
+//! platform libc that `std` already links — no crates, no bindings
+//! generator. On non-Linux targets the module compiles to a stub whose
+//! constructor reports [`std::io::ErrorKind::Unsupported`]; the serving
+//! binary falls back to the blocking path there.
+
+#![allow(clippy::needless_return)]
+
+use std::io;
+use std::time::Duration;
+
+/// Token [`EventLoop::wait`] reports when [`Waker::wake`] was called.
+/// Reserved: user registrations must not use it.
+pub const WAKER_TOKEN: u64 = u64::MAX;
+
+/// Which readiness a registration wants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    /// Wake when the fd is readable (or the peer hung up).
+    pub readable: bool,
+    /// Wake when the fd accepts writes without blocking.
+    pub writable: bool,
+}
+
+impl Interest {
+    /// Read readiness only — the steady state of an idle connection.
+    pub const READ: Interest = Interest { readable: true, writable: false };
+    /// Write readiness only — a connection paused for backpressure.
+    pub const WRITE: Interest = Interest { readable: false, writable: true };
+    /// Both directions — a connection flushing a partial write while
+    /// still accepting pipelined requests.
+    pub const BOTH: Interest = Interest { readable: true, writable: true };
+}
+
+/// One readiness notification from [`EventLoop::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The token the fd was registered with ([`WAKER_TOKEN`] for wakeups).
+    pub token: u64,
+    /// Reading will not block (data, EOF, or a pending accept).
+    pub readable: bool,
+    /// Writing will not block.
+    pub writable: bool,
+    /// The peer closed or the fd errored (`EPOLLERR`/`EPOLLHUP`/
+    /// `EPOLLRDHUP`); the connection should be torn down after draining.
+    pub closed: bool,
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use super::{Event, Interest, WAKER_TOKEN};
+    use std::ffi::{c_int, c_uint, c_void};
+    use std::io;
+    use std::os::fd::RawFd;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    const EPOLL_CLOEXEC: c_int = 0x80000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLLIN: u32 = 0x1;
+    const EPOLLOUT: u32 = 0x4;
+    const EPOLLERR: u32 = 0x8;
+    const EPOLLHUP: u32 = 0x10;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const EFD_CLOEXEC: c_int = 0x80000;
+    const EFD_NONBLOCK: c_int = 0x800;
+
+    // The kernel ABI packs the 12-byte epoll_event on x86 so the 64-bit
+    // data field sits at offset 4; other architectures use natural layout.
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    #[repr(C, packed)]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+    #[cfg(not(any(target_arch = "x86", target_arch = "x86_64")))]
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    // Declarations against the libc `std` already links — prototypes match
+    // epoll_create1(2), epoll_ctl(2), epoll_wait(2), eventfd(2), close(2),
+    // read(2), write(2).
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+        fn close(fd: c_int) -> c_int;
+        fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    }
+
+    fn interest_mask(interest: Interest) -> u32 {
+        let mut ev = EPOLLRDHUP; // always learn about peer half-close
+        if interest.readable {
+            ev |= EPOLLIN;
+        }
+        if interest.writable {
+            ev |= EPOLLOUT;
+        }
+        ev
+    }
+
+    /// Owns the eventfd; closed exactly once when the last clone
+    /// (event loop or any [`Waker`]) drops.
+    struct WakeFd(RawFd);
+
+    impl Drop for WakeFd {
+        fn drop(&mut self) {
+            // SAFETY: self.0 is the eventfd this struct uniquely owns; it
+            // is closed exactly once, here.
+            unsafe { close(self.0) };
+        }
+    }
+
+    /// Cloneable, `Send + Sync` handle that interrupts a blocked
+    /// [`EventLoop::wait`] from any thread.
+    #[derive(Clone)]
+    pub struct Waker {
+        fd: Arc<WakeFd>,
+    }
+
+    impl Waker {
+        /// Wake the event loop. Nonblocking and async-signal-cheap: a
+        /// single 8-byte write to an eventfd. Multiple wakes before the
+        /// loop runs coalesce into one [`WAKER_TOKEN`] event.
+        pub fn wake(&self) {
+            let one: u64 = 1;
+            // SAFETY: fd is a live eventfd (kept alive by the Arc), and we
+            // pass a valid 8-byte buffer as eventfd(2) requires. A full
+            // counter (EAGAIN) still leaves the fd readable, which is all
+            // a wakeup needs, so the result is intentionally ignored.
+            unsafe { write(self.fd.0, (&one as *const u64).cast::<c_void>(), 8) };
+        }
+    }
+
+    /// Level-triggered epoll instance plus its wakeup eventfd.
+    pub struct EventLoop {
+        epfd: RawFd,
+        waker: Waker,
+        buf: Vec<EpollEvent>,
+    }
+
+    impl EventLoop {
+        /// Create the epoll instance and its waker eventfd, both
+        /// close-on-exec.
+        pub fn new() -> io::Result<EventLoop> {
+            // SAFETY: epoll_create1 takes a flags word and returns a new
+            // fd or -1; no pointers are involved.
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            // SAFETY: eventfd takes an initial counter and flags and
+            // returns a new fd or -1; no pointers are involved.
+            let efd = unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) };
+            if efd < 0 {
+                let err = io::Error::last_os_error();
+                // SAFETY: epfd was just returned by epoll_create1.
+                unsafe { close(epfd) };
+                return Err(err);
+            }
+            let waker = Waker { fd: Arc::new(WakeFd(efd)) };
+            let lp = EventLoop { epfd, waker, buf: Vec::new() };
+            lp.ctl(EPOLL_CTL_ADD, efd, EPOLLIN, WAKER_TOKEN)?;
+            Ok(lp)
+        }
+
+        /// A handle other threads use to interrupt [`wait`](Self::wait).
+        pub fn waker(&self) -> Waker {
+            self.waker.clone()
+        }
+
+        fn ctl(&self, op: c_int, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+            let mut ev = EpollEvent { events, data: token };
+            // SAFETY: epfd is our live epoll fd, and `ev` is a valid
+            // epoll_event for the duration of the call (epoll_ctl copies
+            // it into the kernel before returning).
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        /// Start watching `fd` with `token`. `token` must not be
+        /// [`WAKER_TOKEN`]. The caller keeps ownership of the fd and must
+        /// [`deregister`](Self::deregister) before closing it.
+        pub fn register(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            assert_ne!(token, WAKER_TOKEN, "WAKER_TOKEN is reserved");
+            self.ctl(EPOLL_CTL_ADD, fd, interest_mask(interest), token)
+        }
+
+        /// Change the interest set of an already-registered fd.
+        pub fn modify(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            assert_ne!(token, WAKER_TOKEN, "WAKER_TOKEN is reserved");
+            self.ctl(EPOLL_CTL_MOD, fd, interest_mask(interest), token)
+        }
+
+        /// Stop watching `fd`.
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        /// Block until at least one fd is ready, a waker fires, or
+        /// `timeout` elapses (`None` = wait forever). Appends to nothing:
+        /// `events` is cleared first. Returns the number of events
+        /// delivered (0 = timeout). `EINTR` restarts the wait.
+        ///
+        /// A waker firing is reported as an [`Event`] with
+        /// [`WAKER_TOKEN`]; the eventfd counter is drained here so a
+        /// level-triggered loop does not spin.
+        pub fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<usize> {
+            events.clear();
+            let ms: c_int = match timeout {
+                None => -1,
+                // Round up so a 1 ns timeout still sleeps ~1 ms instead
+                // of busy-looping at timeout 0.
+                Some(d) => {
+                    let up = u128::from(d.subsec_nanos() % 1_000_000 != 0);
+                    (d.as_millis() + up).min(c_int::MAX as u128) as c_int
+                }
+            };
+            self.buf.resize(64, EpollEvent { events: 0, data: 0 });
+            let n = loop {
+                // SAFETY: epfd is our live epoll fd and buf is a live,
+                // properly-sized array of epoll_event the kernel fills in.
+                let rc = unsafe {
+                    epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as c_int, ms)
+                };
+                if rc >= 0 {
+                    break rc as usize;
+                }
+                let err = io::Error::last_os_error();
+                if err.kind() != io::ErrorKind::Interrupted {
+                    return Err(err);
+                }
+            };
+            for raw in &self.buf[..n] {
+                let (bits, token) = { (raw.events, raw.data) };
+                if token == WAKER_TOKEN {
+                    let mut counter: u64 = 0;
+                    // SAFETY: the waker fd is a live nonblocking eventfd
+                    // and we pass a valid 8-byte buffer; reading drains
+                    // the coalesced counter (EAGAIN is fine).
+                    unsafe {
+                        read(self.waker.fd.0, (&mut counter as *mut u64).cast::<c_void>(), 8)
+                    };
+                    events.push(Event {
+                        token: WAKER_TOKEN,
+                        readable: false,
+                        writable: false,
+                        closed: false,
+                    });
+                    continue;
+                }
+                events.push(Event {
+                    token,
+                    readable: bits & (EPOLLIN | EPOLLRDHUP | EPOLLHUP) != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    closed: bits & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0,
+                });
+            }
+            Ok(events.len())
+        }
+    }
+
+    impl Drop for EventLoop {
+        fn drop(&mut self) {
+            // SAFETY: epfd is the epoll fd this struct uniquely owns; it
+            // is closed exactly once, here. The waker eventfd is closed by
+            // the last WakeFd clone's Drop.
+            unsafe { close(self.epfd) };
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod sys {
+    //! Stub for non-Linux targets: constructing an [`EventLoop`] reports
+    //! `Unsupported`, and the serving binary falls back to the blocking
+    //! thread-per-connection path.
+    use super::{Event, Interest};
+    use std::io;
+    use std::time::Duration;
+
+    /// No-op waker for targets without the event loop.
+    #[derive(Clone)]
+    pub struct Waker;
+
+    impl Waker {
+        /// No-op.
+        pub fn wake(&self) {}
+    }
+
+    /// Unsupported on this target; [`EventLoop::new`] always errors.
+    pub struct EventLoop;
+
+    type RawFd = i32;
+
+    impl EventLoop {
+        /// Always `Err(Unsupported)` off Linux.
+        pub fn new() -> io::Result<EventLoop> {
+            Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "evloop requires Linux epoll; use the blocking serve path",
+            ))
+        }
+
+        /// Unreachable (no instance can exist).
+        pub fn waker(&self) -> Waker {
+            Waker
+        }
+
+        /// Unreachable (no instance can exist).
+        pub fn register(&self, _fd: RawFd, _token: u64, _i: Interest) -> io::Result<()> {
+            unreachable!("no EventLoop instance exists off Linux")
+        }
+
+        /// Unreachable (no instance can exist).
+        pub fn modify(&self, _fd: RawFd, _token: u64, _i: Interest) -> io::Result<()> {
+            unreachable!("no EventLoop instance exists off Linux")
+        }
+
+        /// Unreachable (no instance can exist).
+        pub fn deregister(&self, _fd: RawFd) -> io::Result<()> {
+            unreachable!("no EventLoop instance exists off Linux")
+        }
+
+        /// Unreachable (no instance can exist).
+        pub fn wait(&mut self, _ev: &mut Vec<Event>, _t: Option<Duration>) -> io::Result<usize> {
+            unreachable!("no EventLoop instance exists off Linux")
+        }
+    }
+}
+
+pub use sys::{EventLoop, Waker};
+
+#[cfg(all(test, target_os = "linux"))]
+mod tests {
+    use super::*;
+    use std::io::{Read as _, Write as _};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+    use std::time::Instant;
+
+    #[test]
+    fn timeout_expires_with_no_events() {
+        let mut lp = EventLoop::new().unwrap();
+        let mut events = Vec::new();
+        let t0 = Instant::now();
+        let n = lp.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+        assert_eq!(n, 0);
+        assert!(t0.elapsed() >= Duration::from_millis(15), "returned too early");
+    }
+
+    #[test]
+    fn waker_interrupts_a_blocked_wait_from_another_thread() {
+        let mut lp = EventLoop::new().unwrap();
+        let waker = lp.waker();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            waker.wake();
+            waker.wake(); // coalesces with the first
+        });
+        let mut events = Vec::new();
+        // No timeout: only the waker can end this wait.
+        let n = lp.wait(&mut events, None).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(events[0].token, WAKER_TOKEN);
+        handle.join().unwrap();
+        // The counter was drained: a short follow-up wait sees nothing.
+        let n = lp.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn tcp_accept_read_write_readiness_round_trip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut lp = EventLoop::new().unwrap();
+        lp.register(listener.as_raw_fd(), 1, Interest::READ).unwrap();
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        let mut events = Vec::new();
+        lp.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 1 && e.readable), "accept readiness");
+
+        let (mut conn, _) = listener.accept().unwrap();
+        conn.set_nonblocking(true).unwrap();
+        lp.register(conn.as_raw_fd(), 2, Interest::READ).unwrap();
+
+        client.write_all(b"ping").unwrap();
+        lp.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 2 && e.readable), "read readiness");
+        let mut buf = [0u8; 4];
+        conn.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"ping");
+
+        // An idle socket's send buffer is writable immediately.
+        lp.modify(conn.as_raw_fd(), 2, Interest::BOTH).unwrap();
+        lp.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 2 && e.writable), "write readiness");
+
+        // Peer close surfaces as closed+readable so the conn drains then dies.
+        drop(client);
+        lp.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        let ev = events.iter().find(|e| e.token == 2).expect("hup event");
+        assert!(ev.closed && ev.readable);
+
+        lp.deregister(conn.as_raw_fd()).unwrap();
+        lp.deregister(listener.as_raw_fd()).unwrap();
+    }
+}

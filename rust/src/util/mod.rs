@@ -19,10 +19,13 @@
 //! * [`mc`] — deterministic concurrency model checker (replaces loom)
 //! * [`sync`] — crate-wide sync shim: std-backed normally, model-checked
 //!   under `--cfg nnt_model_check`; poison policy + lock-order analysis
+//! * [`evloop`] — epoll event loop + eventfd waker (replaces mio) backing
+//!   the nonblocking serving front end
 
 pub mod bench;
 pub mod bitvec;
 pub mod cli;
+pub mod evloop;
 pub mod json;
 pub mod mc;
 pub mod prng;

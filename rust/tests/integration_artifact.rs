@@ -115,7 +115,11 @@ fn compile_then_load_serves_bit_exact_without_resynthesis() {
     let router = RouterBuilder::new(m.clone())
         .circuit(circuit.netlist)
         .engine(Policy::Logic)
-        .batch_policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) })
+        .batch_policy(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        })
         .workers(2)
         .build()
         .unwrap();

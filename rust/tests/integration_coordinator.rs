@@ -15,7 +15,11 @@ fn build_router(policy: Policy, max_batch: usize) -> (Router, Model) {
     let router = RouterBuilder::new(model.clone())
         .circuit(r.circuit.netlist)
         .engine(policy)
-        .batch_policy(BatchPolicy { max_batch, max_wait: Duration::from_micros(500) })
+        .batch_policy(BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_micros(500),
+            ..Default::default()
+        })
         .workers(2)
         .build()
         .unwrap();
@@ -93,7 +97,11 @@ fn pjrt_routing_with_real_artifacts() {
         .circuit(flow.circuit.netlist)
         .pjrt(spec)
         .engine(Policy::Compare)
-        .batch_policy(BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(300) })
+        .batch_policy(BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_micros(300),
+            ..Default::default()
+        })
         .workers(2)
         .build()
     {

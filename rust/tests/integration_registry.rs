@@ -23,7 +23,11 @@ fn router_for(model: &Model, netlist: LutNetlist) -> Router {
     RouterBuilder::new(model.clone())
         .circuit(netlist)
         .engine(Policy::Logic)
-        .batch_policy(BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(500) })
+        .batch_policy(BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_micros(500),
+            ..Default::default()
+        })
         .workers(2)
         .build()
         .unwrap()
@@ -37,7 +41,11 @@ fn concurrent_classify_against_two_models_is_bit_exact_per_model() {
     let ma = random_model("rega", 6, &[5, 4], 3, 1, 41);
     let mb = random_model("regb", 6, &[5, 4], 3, 1, 42);
     let reg = Arc::new(ModelRegistry::new(RegistryConfig {
-        batch_policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(500) },
+        batch_policy: BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_micros(500),
+            ..Default::default()
+        },
         workers: 2,
     }));
     reg.install("rega", router_for(&ma, synth(&ma)), None).unwrap();

@@ -19,6 +19,16 @@
 //!    queued jobs run;
 //! 4. `ShardRunner` disjoint-range `SendPtr` writes — the sharded result
 //!    equals the single-threaded reference under every schedule.
+//!
+//! Two more (ISSUE 8), modeling the serving front end's shutdown paths:
+//! 5. the blocking server's connection-table handshake — a registering
+//!    connection is either half-closed by the shutdown walk or observes
+//!    the stop flag itself, never neither (which would park its blocking
+//!    read forever);
+//! 6. event-loop shutdown vs a racing dispatcher reply — the loop always
+//!    terminates and the reply is delivered exactly once or left visibly
+//!    queued (abandoned with the connection), never silently lost while
+//!    the loop still runs.
 
 #[cfg(not(nnt_model_check))]
 #[test]
@@ -43,8 +53,8 @@ mod models {
     use nullanet_tiny::nn::model::{random_model, Model};
     use nullanet_tiny::util::bitvec::{BitVec, PackedBatch};
     use nullanet_tiny::util::mc;
-    use nullanet_tiny::util::sync::atomic::{AtomicUsize, Ordering};
-    use nullanet_tiny::util::sync::{mpsc, thread};
+    use nullanet_tiny::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use nullanet_tiny::util::sync::{mpsc, thread, Condvar, Mutex};
     use nullanet_tiny::util::threadpool::ThreadPool;
 
     /// An hour: the age-flush path must never fire inside a model run
@@ -57,7 +67,16 @@ mod models {
     fn request(pattern: usize) -> (Request, mpsc::Receiver<Reply>) {
         let (tx, rx) = mpsc::channel();
         let bits = BitVec::from_bools((0..BITS).map(|i| (pattern >> i) & 1 == 1));
-        (Request { bits, features: None, enqueued: Instant::now(), reply: tx }, rx)
+        (
+            Request {
+                bits,
+                features: None,
+                enqueued: Instant::now(),
+                reply: tx,
+                notify: None,
+            },
+            rx,
+        )
     }
 
     /// Model 1: two submitters race a `close()` while a dispatcher drains.
@@ -69,7 +88,7 @@ mod models {
         let cfg = mc::Config::default();
         mc::check(cfg, || {
             let b = Arc::new(Batcher::new(
-                BatchPolicy { max_batch: 2, max_wait: NEVER },
+                BatchPolicy { max_batch: 2, max_wait: NEVER, ..Default::default() },
                 BITS,
             ));
             let flushed = Arc::new(AtomicUsize::new(0));
@@ -116,7 +135,7 @@ mod models {
         RouterBuilder::new(model.clone())
             .circuit(netlist)
             .engine(Policy::Logic)
-            .batch_policy(BatchPolicy { max_batch: 1, max_wait: NEVER })
+            .batch_policy(BatchPolicy { max_batch: 1, max_wait: NEVER, ..Default::default() })
             .workers(1)
             .build()
             .expect("router build inside the model")
@@ -144,7 +163,11 @@ mod models {
         };
         mc::check(cfg, || {
             let reg = Arc::new(ModelRegistry::new(RegistryConfig {
-                batch_policy: BatchPolicy { max_batch: 1, max_wait: NEVER },
+                batch_policy: BatchPolicy {
+                    max_batch: 1,
+                    max_wait: NEVER,
+                    ..Default::default()
+                },
                 workers: 1,
             }));
             reg.install("m", tiny_router(&model, netlist.clone()), None).unwrap();
@@ -231,5 +254,128 @@ mod models {
             }
         })
         .assert_pass("shard runner disjoint writes");
+    }
+
+    /// Model 5 (ISSUE 8): the blocking server's connection-table handshake.
+    /// `handle_client` inserts its token into the table FIRST and checks the
+    /// stop flag second; `begin_shutdown` sets the flag FIRST and walks the
+    /// table second. That pairing guarantees a connection is either
+    /// half-closed by the walk or sees the flag before parking in a blocking
+    /// read — flipping either ordering admits a schedule where a freshly
+    /// accepted connection parks forever, which the checker reports as a
+    /// deadlock with a replay seed.
+    #[test]
+    fn blocking_server_register_then_stop_check_never_strands_a_read() {
+        mc::check(mc::Config::default(), || {
+            let stop = Arc::new(AtomicBool::new(false));
+            // (registered, closed): one table slot standing in for the
+            // connection-table entry plus its socket's half-close state.
+            let table = Arc::new((
+                Mutex::named("server.conns", (false, false)),
+                Condvar::new(),
+            ));
+
+            let st = Arc::clone(&stop);
+            let tb = Arc::clone(&table);
+            let handler = thread::spawn(move || {
+                let (m, cv) = &*tb;
+                {
+                    let mut g = m.lock();
+                    g.0 = true; // register the token...
+                }
+                if st.load(Ordering::SeqCst) {
+                    return; // ...then check stop before parking in read
+                }
+                // Park in the blocking read; only shutdown() on the socket
+                // (modeled as the closed flag) can wake it now.
+                let mut g = m.lock();
+                while !g.1 {
+                    g = cv.wait(g);
+                }
+            });
+
+            let st2 = Arc::clone(&stop);
+            let tb2 = Arc::clone(&table);
+            let admin = thread::spawn(move || {
+                st2.store(true, Ordering::SeqCst); // set the flag first...
+                let (m, cv) = &*tb2;
+                let mut g = m.lock();
+                if g.0 {
+                    g.1 = true; // ...then walk the table and half-close
+                    cv.notify_all();
+                }
+            });
+
+            // Termination under every schedule IS the invariant.
+            handler.join().unwrap();
+            admin.join().unwrap();
+        })
+        .assert_pass("blocking server register/stop handshake");
+    }
+
+    /// Model 6 (ISSUE 8): event-loop shutdown vs racing reply writes. The
+    /// event loop parks in `wait()`; a batcher dispatcher publishes a reply
+    /// and rings the waker; an admin shutdown races both. The loop's pending
+    /// queue is the shared state, the eventfd waker a condvar. Invariant: a
+    /// published reply is delivered exactly once, or — if it landed after the
+    /// final drain — left visibly queued (abandoned with the connection, the
+    /// documented shutdown contract). Never lost while the loop still runs,
+    /// never double-delivered.
+    #[test]
+    fn event_loop_shutdown_vs_racing_reply_writes() {
+        mc::check(mc::Config::default(), || {
+            // (waker signals, pending replies, stop)
+            let state = Arc::new((
+                Mutex::named("server.evloop", (0usize, Vec::<usize>::new(), false)),
+                Condvar::new(),
+            ));
+            let delivered = Arc::new(AtomicUsize::new(0));
+
+            let s1 = Arc::clone(&state);
+            let dispatcher = thread::spawn(move || {
+                let (m, cv) = &*s1;
+                let mut g = m.lock();
+                g.1.push(1);
+                g.0 += 1;
+                cv.notify_one();
+            });
+            let s2 = Arc::clone(&state);
+            let admin = thread::spawn(move || {
+                let (m, cv) = &*s2;
+                let mut g = m.lock();
+                g.2 = true;
+                g.0 += 1;
+                cv.notify_one();
+            });
+
+            // The loop body: wait -> pump -> stop-check, then a final drain
+            // on the way out (mirrors serve_event's structure).
+            let (m, cv) = &*state;
+            loop {
+                let mut g = m.lock();
+                while g.0 == 0 {
+                    g = cv.wait(g);
+                }
+                g.0 = 0;
+                delivered.fetch_add(g.1.drain(..).count(), Ordering::SeqCst);
+                if g.2 {
+                    break;
+                }
+            }
+            {
+                let mut g = m.lock();
+                delivered.fetch_add(g.1.drain(..).count(), Ordering::SeqCst);
+            }
+            dispatcher.join().unwrap();
+            admin.join().unwrap();
+
+            let g = m.lock();
+            assert_eq!(
+                delivered.load(Ordering::SeqCst) + g.1.len(),
+                1,
+                "reply must be delivered exactly once or still visibly queued"
+            );
+        })
+        .assert_pass("event-loop shutdown vs racing reply writes");
     }
 }

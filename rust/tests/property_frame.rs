@@ -1,0 +1,312 @@
+//! Seeded property/fuzz suite for the binary frame parser (ISSUE 8).
+//!
+//! The frame layer's contract is that [`frame::decode`] is a pure function
+//! over an accumulation buffer: any split of the byte stream across reads
+//! parses identically, every strict prefix of a valid frame is "incomplete"
+//! (never an error), hostile length prefixes are rejected from the header
+//! alone, and no input — corrupted or pure byte soup — can panic the parser
+//! or make it consume past the buffer. Each property is seeded and
+//! replayable (`NNT_PROPTEST_SEED`), with shrinking where the case shape
+//! allows it.
+
+use nullanet_tiny::coordinator::frame::{
+    self, Frame, FrameError, HEADER_LEN, MAX_FRAME_PAYLOAD,
+};
+use nullanet_tiny::util::bitvec::PackedBatch;
+use nullanet_tiny::util::proptest::{check, check_simple, Config, Gen};
+
+/// A random well-formed classify request (tail bits masked per the wire
+/// invariant).
+#[derive(Clone, Debug)]
+struct ReqCase {
+    model: Option<String>,
+    bits: u16,
+    words: Vec<u64>,
+}
+
+fn gen_req(g: &mut Gen) -> ReqCase {
+    let bits = g.sized_range(1, 150) as u16; // crosses the 64/128 word edges
+    let samples = g.sized_range(1, 24);
+    let wps = frame::words_per_sample(bits);
+    let tail = bits as usize & 63;
+    let mut words = Vec::with_capacity(samples * wps);
+    for _ in 0..samples {
+        for w in 0..wps {
+            let mut v = g.rng.next_u64();
+            if w == wps - 1 && tail != 0 {
+                v &= (1u64 << tail) - 1;
+            }
+            words.push(v);
+        }
+    }
+    let model = match g.rng.below(3) {
+        0 => None,
+        1 => Some("m".to_string()),
+        _ => Some(format!("model-{}", g.rng.below(100))),
+    };
+    ReqCase { model, bits, words }
+}
+
+fn encode(c: &ReqCase) -> Vec<u8> {
+    frame::encode_classify_req(c.model.as_deref(), c.bits, &c.words)
+}
+
+#[test]
+fn classify_req_round_trips_bit_exactly() {
+    check_simple("frame-roundtrip", gen_req, |c| {
+        let enc = encode(c);
+        match frame::decode(&enc) {
+            Ok(Some((Frame::ClassifyReq { model, bits, words }, consumed))) => {
+                if consumed != enc.len() {
+                    return Err(format!("consumed {consumed} of {}", enc.len()));
+                }
+                if model != c.model || bits != c.bits || words != c.words {
+                    return Err("decoded frame differs from the encoded one".into());
+                }
+                Ok(())
+            }
+            other => Err(format!("expected a complete classify req, got {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn decoded_request_scatters_into_packed_bit_exactly() {
+    check_simple("frame-into-packed", gen_req, |c| {
+        let samples = c.words.len() / frame::words_per_sample(c.bits);
+        let packed = frame::request_into_packed(c.bits, &c.words);
+        if packed.num_samples() != samples {
+            return Err(format!(
+                "packed {} samples, request carried {samples}",
+                packed.num_samples()
+            ));
+        }
+        let mut want = PackedBatch::with_capacity(c.bits as usize, samples);
+        for s in 0..samples {
+            want.push_sample(&frame::sample_bits(c.bits, &c.words, s));
+        }
+        if packed == want {
+            Ok(())
+        } else {
+            Err("word-scatter fast path differs from per-sample push".into())
+        }
+    });
+}
+
+#[test]
+fn any_strict_prefix_is_incomplete_never_an_error() {
+    check_simple(
+        "frame-prefix",
+        |g| {
+            let enc = encode(&gen_req(g));
+            let cut = g.rng.below(enc.len() as u64) as usize;
+            (enc, cut)
+        },
+        |(enc, cut)| match frame::decode(&enc[..*cut]) {
+            Ok(None) => Ok(()),
+            other => Err(format!("prefix of {cut} bytes gave {other:?}")),
+        },
+    );
+}
+
+/// A valid multi-frame stream plus a random chunking of it into reads.
+#[derive(Clone, Debug)]
+struct SplitCase {
+    stream: Vec<u8>,
+    cuts: Vec<usize>,
+}
+
+fn gen_split(g: &mut Gen) -> SplitCase {
+    let nframes = g.sized_range(1, 5);
+    let mut stream = Vec::new();
+    for _ in 0..nframes {
+        match g.rng.below(4) {
+            0 => stream.extend(encode(&gen_req(g))),
+            1 => {
+                let n = g.sized_range(0, 9);
+                let classes: Vec<u16> =
+                    (0..n).map(|_| g.rng.next_u32() as u16).collect();
+                stream.extend(frame::encode_classify_resp(&classes));
+            }
+            2 => stream.extend(frame::encode_error("boom")),
+            _ => stream.extend(frame::encode_overload("queue full")),
+        }
+    }
+    let mut cuts = Vec::new();
+    let mut rem = stream.len();
+    while rem > 0 {
+        let c = 1 + g.rng.below(rem.min(17) as u64) as usize;
+        cuts.push(c);
+        rem -= c;
+    }
+    SplitCase { stream, cuts }
+}
+
+/// Shrink by merging adjacent read chunks — the stream itself must stay
+/// intact (cutting it mid-frame would change the case, not shrink it).
+fn shrink_split(c: &SplitCase) -> Vec<SplitCase> {
+    let mut out = Vec::new();
+    for i in 0..c.cuts.len().saturating_sub(1) {
+        let mut cuts = c.cuts.clone();
+        let merged = cuts[i] + cuts[i + 1];
+        cuts[i] = merged;
+        cuts.remove(i + 1);
+        out.push(SplitCase { stream: c.stream.clone(), cuts });
+    }
+    out
+}
+
+#[test]
+fn any_byte_split_across_reads_decodes_identically() {
+    check(
+        "frame-split-equivalence",
+        &Config::default(),
+        gen_split,
+        shrink_split,
+        |c| {
+            // Reference: sequential decode of the whole stream at once.
+            let mut expected = Vec::new();
+            let mut off = 0;
+            while off < c.stream.len() {
+                match frame::decode(&c.stream[off..]) {
+                    Ok(Some((f, n))) => {
+                        expected.push(f);
+                        off += n;
+                    }
+                    other => return Err(format!("reference decode gave {other:?}")),
+                }
+            }
+            // Incremental: feed the chunks through an accumulation buffer
+            // exactly the way a connection's read loop does.
+            let mut buf: Vec<u8> = Vec::new();
+            let mut got = Vec::new();
+            let mut fed = 0;
+            for &cut in &c.cuts {
+                buf.extend_from_slice(&c.stream[fed..fed + cut]);
+                fed += cut;
+                loop {
+                    match frame::decode(&buf) {
+                        Ok(Some((f, n))) => {
+                            got.push(f);
+                            buf.drain(..n);
+                        }
+                        Ok(None) => break,
+                        Err(e) => return Err(format!("incremental decode: {e}")),
+                    }
+                }
+            }
+            if !buf.is_empty() {
+                return Err(format!("{} bytes left undecoded", buf.len()));
+            }
+            if got == expected {
+                Ok(())
+            } else {
+                Err(format!(
+                    "split decode gave {} frames, reference {}",
+                    got.len(),
+                    expected.len()
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn hostile_length_prefixes_are_rejected_from_the_header_alone() {
+    check_simple(
+        "frame-oversized-prefix",
+        |g| {
+            let mut enc = encode(&gen_req(g));
+            let excess =
+                MAX_FRAME_PAYLOAD as u32 + 1 + g.rng.next_u32() % 1_000_000;
+            enc[4..8].copy_from_slice(&excess.to_le_bytes());
+            enc.truncate(HEADER_LEN); // the payload must never be needed
+            (enc, excess)
+        },
+        |(buf, excess)| match frame::decode(buf) {
+            Err(FrameError::Oversized(n)) if n == *excess => Ok(()),
+            other => Err(format!("expected Oversized({excess}), got {other:?}")),
+        },
+    );
+}
+
+#[test]
+fn bad_magic_and_bad_version_are_typed_errors() {
+    check_simple(
+        "frame-bad-magic-version",
+        |g| {
+            let enc = encode(&gen_req(g));
+            (enc, g.rng.next_u32() as u8, g.rng.next_u32() as u8)
+        },
+        |(enc, magic, version)| {
+            if *magic != frame::MAGIC {
+                let mut b = enc.clone();
+                b[0] = *magic;
+                if frame::decode(&b) != Err(FrameError::BadMagic(*magic)) {
+                    return Err(format!("magic {magic:#04x} not rejected"));
+                }
+            }
+            if *version != frame::VERSION {
+                let mut b = enc.clone();
+                b[1] = *version;
+                if frame::decode(&b) != Err(FrameError::BadVersion(*version)) {
+                    return Err(format!("version {version} not rejected"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn random_corruption_never_panics_or_over_consumes() {
+    check_simple(
+        "frame-corruption",
+        |g| {
+            let mut enc = encode(&gen_req(g));
+            let flips = g.sized_range(1, 8);
+            for _ in 0..flips {
+                let i = g.rng.below(enc.len() as u64) as usize;
+                enc[i] ^= g.rng.next_u32() as u8; // xor-with-0 is a legal no-op
+            }
+            enc
+        },
+        |enc| match frame::decode(enc) {
+            Ok(Some((_, consumed))) if consumed > enc.len() => {
+                Err(format!("consumed {consumed} past the {}-byte buffer", enc.len()))
+            }
+            _ => Ok(()), // any verdict is fine; not panicking is the property
+        },
+    );
+}
+
+#[test]
+fn arbitrary_byte_soup_never_panics_and_always_terminates() {
+    check_simple(
+        "frame-byte-soup",
+        |g| {
+            let n = g.sized_range(0, 64);
+            let mut v: Vec<u8> = (0..n).map(|_| g.rng.next_u32() as u8).collect();
+            // Half the cases start with the magic byte so the parser gets
+            // past the sniff check and into header validation.
+            if !v.is_empty() && g.rng.below(2) == 0 {
+                v[0] = frame::MAGIC;
+            }
+            v
+        },
+        |bytes| {
+            let mut buf = bytes.clone();
+            loop {
+                match frame::decode(&buf) {
+                    Ok(Some((_, n))) => {
+                        if n == 0 {
+                            return Err("zero-byte consume would spin forever".into());
+                        }
+                        buf.drain(..n);
+                    }
+                    Ok(None) | Err(_) => return Ok(()),
+                }
+            }
+        },
+    );
+}
