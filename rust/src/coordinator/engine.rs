@@ -30,11 +30,12 @@ use std::sync::Arc;
 
 use crate::coordinator::metrics::Metrics;
 use crate::flow::build::classify_packed_words;
+use crate::logic::codegen::{self, CacheOutcome, NativeLib};
 use crate::logic::netlist::LutNetlist;
 use crate::logic::sim::{CompiledNetlist, ShardRunner, SimScratch};
 use crate::nn::model::Model;
 use crate::runtime::PjrtEngine;
-use crate::util::bitvec::PackedBatch;
+use crate::util::bitvec::{mask_group_tail, PackedBatch};
 use crate::util::threadpool::ThreadPool;
 
 /// Typed failure of an inference engine.
@@ -144,6 +145,42 @@ pub fn dispatch(
     }
 }
 
+/// Shared construction-time validation for circuit-evaluating engines: the
+/// circuit must pack exactly the model's input bits, stay within the k ≤ 6
+/// fabric, and expose the output words the model's argmax decode reads.
+fn validate_circuit(model: &Model, netlist: &LutNetlist) -> Result<(), EngineError> {
+    if netlist.num_inputs != model.input_bits() {
+        return Err(EngineError::Construction(format!(
+            "circuit has {} inputs but model '{}' packs {} input bits",
+            netlist.num_inputs,
+            model.name,
+            model.input_bits()
+        )));
+    }
+    if netlist.max_arity() > 6 {
+        return Err(EngineError::Construction(format!(
+            "circuit contains a {}-input LUT; the compiled simulator supports k ≤ 6",
+            netlist.max_arity()
+        )));
+    }
+    let last = model
+        .layers
+        .last()
+        .ok_or_else(|| EngineError::Construction("model has no layers".into()))?;
+    let want_outputs = last.out_width * last.act.bits;
+    if netlist.outputs.len() != want_outputs {
+        return Err(EngineError::Construction(format!(
+            "circuit has {} outputs but model '{}' decodes {want_outputs} \
+             ({} neurons × {} bits)",
+            netlist.outputs.len(),
+            model.name,
+            last.out_width,
+            last.act.bits
+        )));
+    }
+    Ok(())
+}
+
 /// The combinational-logic engine: an immutable compiled netlist shared
 /// across shard workers, classifying straight from packed output words.
 ///
@@ -178,35 +215,7 @@ impl PackedLogicEngine {
         workers: usize,
         metrics: Arc<Metrics>,
     ) -> Result<PackedLogicEngine, EngineError> {
-        if netlist.num_inputs != model.input_bits() {
-            return Err(EngineError::Construction(format!(
-                "circuit has {} inputs but model '{}' packs {} input bits",
-                netlist.num_inputs,
-                model.name,
-                model.input_bits()
-            )));
-        }
-        if netlist.max_arity() > 6 {
-            return Err(EngineError::Construction(format!(
-                "circuit contains a {}-input LUT; the compiled simulator supports k ≤ 6",
-                netlist.max_arity()
-            )));
-        }
-        let last = model
-            .layers
-            .last()
-            .ok_or_else(|| EngineError::Construction("model has no layers".into()))?;
-        let want_outputs = last.out_width * last.act.bits;
-        if netlist.outputs.len() != want_outputs {
-            return Err(EngineError::Construction(format!(
-                "circuit has {} outputs but model '{}' decodes {want_outputs} \
-                 ({} neurons × {} bits)",
-                netlist.outputs.len(),
-                model.name,
-                last.out_width,
-                last.act.bits
-            )));
-        }
+        validate_circuit(&model, netlist)?;
         let sim = Arc::new(CompiledNetlist::compile(netlist));
         let scratch = sim.make_scratch();
         let runner = ShardRunner::new(&sim);
@@ -321,6 +330,104 @@ impl InferenceEngine for PackedLogicEngine {
     fn lut_counts(&self) -> Option<(usize, usize)> {
         let s = self.sim.opt_stats();
         Some((s.luts_before, s.luts_after))
+    }
+}
+
+/// The native codegen engine: the circuit lowered to straight-line machine
+/// code by `logic::codegen` — emitted as branch-free Rust, built with
+/// `rustc` as a `cdylib`, loaded through dependency-free `dlopen` shims,
+/// and cached keyed by model fingerprint + rustc version.
+///
+/// Construction fails with a typed [`EngineError::Construction`] whenever
+/// any rung is missing (no `rustc` on the host, non-Linux `dlopen` stub,
+/// build failure); the router's `Policy::Native` arm then falls back to
+/// the SIMD interpreter ([`PackedLogicEngine`]) — the ladder documented in
+/// `rust/DESIGN.md` §Engine-API.
+pub struct NativeCodegenEngine {
+    lib: NativeLib,
+    /// Output words, group-major, reused across batches.
+    out_words: Vec<u64>,
+    /// `(LUTs before, LUTs after)` optimization — the generated code
+    /// evaluates exactly the post-optimizer netlist.
+    luts: (usize, usize),
+    model: Arc<Model>,
+    metrics: Arc<Metrics>,
+}
+
+impl NativeCodegenEngine {
+    /// Compile `netlist`, lower it to native code, and load the library.
+    /// `cache_path` is where the `.so` is cached (next to the circuit
+    /// bundle when serving from one); `None` uses a fingerprint-keyed path
+    /// under the temp dir. A stale cache (fingerprint, rustc version, or
+    /// shape mismatch) is rejected and rebuilt, with a notice on stderr.
+    pub fn new(
+        model: Arc<Model>,
+        netlist: &LutNetlist,
+        cache_path: Option<&str>,
+        metrics: Arc<Metrics>,
+    ) -> Result<NativeCodegenEngine, EngineError> {
+        validate_circuit(&model, netlist)?;
+        let sim = CompiledNetlist::compile(netlist);
+        let fp = crate::flow::artifact::model_fingerprint(&model);
+        let so_path = match cache_path {
+            Some(p) => p.to_string(),
+            None => codegen::default_cache_path(&fp),
+        };
+        let (lib, outcome) = codegen::load_or_build(&sim, &fp, &so_path)
+            .map_err(|e| EngineError::Construction(e.to_string()))?;
+        match outcome {
+            CacheOutcome::Cached => {
+                eprintln!("native engine: loaded cached {so_path}");
+            }
+            CacheOutcome::Rebuilt(reason) => {
+                eprintln!("native engine: rebuilt {so_path} ({reason})");
+            }
+        }
+        let s = sim.opt_stats();
+        Ok(NativeCodegenEngine {
+            lib,
+            out_words: Vec::new(),
+            luts: (s.luts_before, s.luts_after),
+            model,
+            metrics,
+        })
+    }
+
+    fn classify(&mut self, batch: &PackedBatch) -> Result<Vec<usize>, EngineError> {
+        if batch.num_signals() != self.lib.num_inputs() {
+            return Err(EngineError::Inference(format!(
+                "batch packs {} signals for a {}-input native circuit",
+                batch.num_signals(),
+                self.lib.num_inputs()
+            )));
+        }
+        let n = batch.num_samples();
+        let groups = batch.num_groups();
+        let no = self.lib.num_outputs();
+        self.out_words.clear();
+        self.out_words.resize(groups * no, 0);
+        self.lib.eval_groups(batch.words(), groups, &mut self.out_words);
+        mask_group_tail(&mut self.out_words, no, n);
+        let preds = classify_packed_words(&self.model, &self.out_words, n);
+        self.metrics.logic_requests.fetch_add(n as u64, Ordering::Relaxed);
+        Ok(preds)
+    }
+}
+
+impl InferenceEngine for NativeCodegenEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn classify_packed_batch(
+        &mut self,
+        batch: &PackedBatch,
+    ) -> Result<Vec<usize>, EngineError> {
+        self.classify(batch)
+    }
+
+    fn lut_counts(&self) -> Option<(usize, usize)> {
+        Some(self.luts)
     }
 }
 
@@ -642,6 +749,98 @@ mod tests {
         .err()
         .expect("input-width mismatch must fail construction");
         assert!(matches!(err, EngineError::Construction(_)), "{err}");
+    }
+
+    #[test]
+    fn native_engine_rejects_mismatched_circuit() {
+        // Validation runs before any rustc/dlopen work, so this is
+        // deterministic on every host.
+        let model = random_model("nm", 6, &[4, 3], 2, 1, 1);
+        let other = random_model("no", 8, &[4, 3], 2, 1, 2);
+        let r = run_flow(&other, &FlowConfig { jobs: 1, ..Default::default() }, None)
+            .unwrap();
+        let err = NativeCodegenEngine::new(
+            Arc::new(model),
+            &r.circuit.netlist,
+            None,
+            Arc::new(Metrics::new()),
+        )
+        .err()
+        .expect("input-width mismatch must fail construction");
+        assert!(matches!(err, EngineError::Construction(_)), "{err}");
+    }
+
+    #[test]
+    fn native_engine_fails_typed_when_the_cache_dir_is_unwritable() {
+        // The fallback contract: whatever rung of the ladder is missing
+        // (here the cache path; elsewhere rustc or dlopen), construction
+        // is a typed error the router can catch — never a panic.
+        let model = random_model("nf", 6, &[4, 3], 2, 1, 3);
+        let r = run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None)
+            .unwrap();
+        let err = NativeCodegenEngine::new(
+            Arc::new(model),
+            &r.circuit.netlist,
+            Some("/nonexistent-nnt-dir/x.so"),
+            Arc::new(Metrics::new()),
+        )
+        .err()
+        .expect("unwritable cache must fail construction");
+        assert!(matches!(err, EngineError::Construction(_)), "{err}");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // spawns rustc and dlopens — not a Miri workload
+    fn mirror_pins_native_bit_exact_against_logic() {
+        if !codegen::rustc_available() {
+            eprintln!("skipping: rustc or dlopen unavailable on this host");
+            return;
+        }
+        let model = random_model("nat", 6, &[5, 3], 2, 1, 29);
+        let r = run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None)
+            .unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let model = Arc::new(model);
+        let so = std::env::temp_dir()
+            .join(format!("nnt-engine-test-{}.so", std::process::id()));
+        let so = so.to_string_lossy().into_owned();
+        let native = NativeCodegenEngine::new(
+            Arc::clone(&model),
+            &r.circuit.netlist,
+            Some(&so),
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+        let logic = PackedLogicEngine::new(
+            Arc::clone(&model),
+            &r.circuit.netlist,
+            2,
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+        let mut mirror =
+            MirrorEngine::new(Box::new(native), Box::new(logic), Arc::clone(&metrics));
+        assert_eq!(mirror.name(), "native");
+
+        let xs: Vec<Vec<f64>> = (0..200)
+            .map(|i| (0..6).map(|j| ((i * 5 + j) as f64 * 0.31).sin()).collect())
+            .collect();
+        let mut batch = PackedBatch::with_capacity(model.input_bits(), xs.len());
+        for x in &xs {
+            let codes = crate::nn::eval::quantize_input(&model, x);
+            let bits = crate::nn::eval::codes_to_bitvec(&codes, model.input_quant.bits);
+            batch.push_sample(&bits);
+        }
+        let preds = mirror.classify_packed_batch(&batch).unwrap();
+        for (x, p) in xs.iter().zip(&preds) {
+            assert_eq!(*p, crate::nn::eval::classify(&model, x));
+        }
+        // The shadow interpreter saw every sample and never disagreed.
+        assert_eq!(metrics.disagreements.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.shadow_failures.load(Ordering::Relaxed), 0);
+        let _ = std::fs::remove_file(&so);
+        let _ = std::fs::remove_file(format!("{so}.rs"));
+        let _ = std::fs::remove_file(format!("{so}.meta"));
     }
 
     #[cfg(not(feature = "xla"))]

@@ -28,7 +28,8 @@ pub mod server;
 pub use batcher::{Batch, BatchPolicy, Batcher, ReplyNotify, SubmitError};
 pub use frame::Frame;
 pub use engine::{
-    EngineError, InferenceEngine, MirrorEngine, PackedLogicEngine, PjrtNumericEngine,
+    EngineError, InferenceEngine, MirrorEngine, NativeCodegenEngine, PackedLogicEngine,
+    PjrtNumericEngine,
 };
 pub use registry::{ModelInfo, ModelRegistry, RegistryConfig};
 pub use router::{PjrtSpec, Policy, Router, RouterBuilder, SubmitRejection};

@@ -53,11 +53,19 @@ pub struct RegistryConfig {
     pub batch_policy: BatchPolicy,
     /// Shard workers per logic engine.
     pub workers: usize,
+    /// Engine policy for every loaded model's router. `Policy::Native`
+    /// degrades per-model to the interpreter when codegen is unavailable
+    /// (see [`crate::coordinator::router`]).
+    pub policy: Policy,
 }
 
 impl Default for RegistryConfig {
     fn default() -> Self {
-        RegistryConfig { batch_policy: BatchPolicy::default(), workers: 1 }
+        RegistryConfig {
+            batch_policy: BatchPolicy::default(),
+            workers: 1,
+            policy: Policy::Logic,
+        }
     }
 }
 
@@ -226,9 +234,13 @@ impl ModelRegistry {
         // circuits handed in directly (flow output, tests), so nothing
         // structurally unsound can ever be installed behind a route.
         crate::logic::check::lint_circuit(&circuit)?;
+        // Native codegen caches its compiled `.so` next to the bundle it
+        // came from, keyed by model fingerprint + rustc version, so a
+        // registry restart reuses the build instead of re-invoking rustc.
         let router = RouterBuilder::new(model)
             .circuit(circuit.netlist)
-            .engine(Policy::Logic)
+            .engine(self.config.policy)
+            .native_cache(artifact::native_so_path(&source))
             .batch_policy(self.config.batch_policy)
             .workers(self.config.workers)
             .build()?;
@@ -625,6 +637,39 @@ mod tests {
             .unwrap_err();
         assert!(matches!(err, NnError::Check(_)), "{err}");
         assert!(reg.is_empty());
+    }
+
+    /// A `Policy::Native` registry serves bit-exactly through
+    /// `build_and_install` whether or not codegen is actually available on
+    /// this host — the router degrades to the interpreter per model — and
+    /// the `.so` cache lands next to the bundle source path.
+    #[test]
+    #[cfg_attr(miri, ignore = "full synthesis is too slow under Miri")]
+    fn native_policy_registry_serves_through_build_and_install() {
+        let a = random_model("a", 5, &[4, 3], 2, 1, 23);
+        let r = run_flow(&a, &FlowConfig { jobs: 1, ..Default::default() }, None)
+            .unwrap();
+        let reg = ModelRegistry::new(RegistryConfig {
+            policy: Policy::Native,
+            ..Default::default()
+        });
+        let source = std::env::temp_dir()
+            .join(format!("nnt-reg-native-{}.circuit.json", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        reg.build_and_install("a", a.clone(), r.circuit, source.clone()).unwrap();
+        let x: Vec<f64> = (0..5).map(|j| (j as f64 * 0.3).cos()).collect();
+        let reply = reg
+            .classify(Some("a"), &x)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(10))
+            .unwrap();
+        assert_eq!(reply.class, crate::nn::eval::classify(&a, &x));
+        reg.shutdown_all();
+        let so = artifact::native_so_path(&source);
+        for p in [so.clone(), format!("{so}.rs"), format!("{so}.meta")] {
+            let _ = std::fs::remove_file(p);
+        }
     }
 
     #[test]

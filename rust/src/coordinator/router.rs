@@ -11,6 +11,10 @@
 //! * `Numeric` — everything on PJRT
 //! * `Compare` — a [`MirrorEngine`]: reply from logic, shadow onto PJRT,
 //!   count disagreements
+//! * `Native` — the circuit lowered to machine code
+//!   ([`crate::coordinator::engine::NativeCodegenEngine`]); when codegen is
+//!   unavailable (no rustc, non-Linux) the build falls back to the
+//!   interpreter engine with a notice instead of failing the router
 //!
 //! The dispatcher itself is backend-agnostic: it drains batches and hands
 //! them to the engine via [`crate::coordinator::engine::dispatch`]. Engine
@@ -35,8 +39,8 @@ use crate::coordinator::batcher::{
     Batch, BatchPolicy, Batcher, Reply, ReplyNotify, Request, SubmitError,
 };
 use crate::coordinator::engine::{
-    self, EngineError, InferenceEngine, MirrorEngine, PackedLogicEngine,
-    PjrtNumericEngine,
+    self, EngineError, InferenceEngine, MirrorEngine, NativeCodegenEngine,
+    PackedLogicEngine, PjrtNumericEngine,
 };
 use crate::coordinator::metrics::Metrics;
 use crate::error::NnError;
@@ -52,15 +56,18 @@ pub enum Policy {
     Logic,
     Numeric,
     Compare,
+    /// Native codegen with interpreter fallback (see the module docs).
+    Native,
 }
 
 impl Policy {
-    /// Parse "logic" / "pjrt" / "compare".
+    /// Parse "logic" / "pjrt" / "compare" / "native".
     pub fn parse(s: &str) -> Option<Policy> {
         match s {
             "logic" => Some(Policy::Logic),
             "pjrt" | "numeric" => Some(Policy::Numeric),
             "compare" | "both" => Some(Policy::Compare),
+            "native" => Some(Policy::Native),
             _ => None,
         }
     }
@@ -132,6 +139,7 @@ pub struct RouterBuilder {
     policy: Policy,
     batch_policy: BatchPolicy,
     workers: usize,
+    native_cache: Option<String>,
 }
 
 impl RouterBuilder {
@@ -145,6 +153,7 @@ impl RouterBuilder {
             policy: Policy::Logic,
             batch_policy: BatchPolicy::default(),
             workers: 1,
+            native_cache: None,
         }
     }
 
@@ -165,6 +174,14 @@ impl RouterBuilder {
     /// Select the engine stack (default: `Policy::Logic`).
     pub fn engine(mut self, policy: Policy) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// Where the `Native` policy caches its built `.so` (next to the
+    /// circuit bundle when serving from one). Without it, a
+    /// fingerprint-keyed path under the temp dir is used.
+    pub fn native_cache(mut self, so_path: impl Into<String>) -> Self {
+        self.native_cache = Some(so_path.into());
         self
     }
 
@@ -197,8 +214,16 @@ impl RouterBuilder {
     /// HLO artifact, absent backend, incompatible widths) return here as
     /// typed errors — the router never starts half-alive.
     pub fn build(self) -> Result<Router, NnError> {
-        let RouterBuilder { model, netlist, pjrt, policy, batch_policy, workers } = self;
-        let needs_logic = matches!(policy, Policy::Logic | Policy::Compare);
+        let RouterBuilder {
+            model,
+            netlist,
+            pjrt,
+            policy,
+            batch_policy,
+            workers,
+            native_cache,
+        } = self;
+        let needs_logic = matches!(policy, Policy::Logic | Policy::Compare | Policy::Native);
         if needs_logic && netlist.is_none() {
             return Err(NnError::Engine(EngineError::Construction(format!(
                 "{policy:?} routing needs a logic circuit (RouterBuilder::circuit)"
@@ -209,7 +234,7 @@ impl RouterBuilder {
                 "Numeric routing needs a PJRT spec (RouterBuilder::pjrt)".into(),
             )));
         }
-        if policy != Policy::Logic {
+        if matches!(policy, Policy::Numeric | Policy::Compare) {
             if let Some(spec) = &pjrt {
                 spec.preflight().map_err(NnError::Engine)?;
             }
@@ -275,6 +300,32 @@ impl RouterBuilder {
                         }
                         // No numeric reference available: serve logic alone.
                         None => Ok(primary),
+                    }
+                }
+                Policy::Native => {
+                    let nl = netlist.as_ref().ok_or_else(|| {
+                        EngineError::Construction("native engine needs a circuit".into())
+                    })?;
+                    match NativeCodegenEngine::new(
+                        Arc::clone(&model_for_engine),
+                        nl,
+                        native_cache.as_deref(),
+                        Arc::clone(&metrics_for_engine),
+                    ) {
+                        Ok(native) => Ok(Box::new(native)),
+                        // The fallback ladder: native construction failing
+                        // (no rustc, dlopen stub, build error) downgrades
+                        // to the SIMD interpreter with a notice — the
+                        // router still comes up and serves bit-identical
+                        // results, just slower.
+                        Err(EngineError::Construction(msg)) => {
+                            eprintln!(
+                                "native engine unavailable ({msg}); falling back to the \
+                                 interpreter engine"
+                            );
+                            Ok(logic(metrics_for_engine)?)
+                        }
+                        Err(e) => Err(e),
                     }
                 }
             }
@@ -532,7 +583,8 @@ impl Router {
         &self.model
     }
 
-    /// Label of the engine replies come from ("logic" / "pjrt").
+    /// Label of the engine replies come from ("logic" / "pjrt" /
+    /// "native" — the latter degrades to "logic" when codegen fell back).
     pub fn engine_name(&self) -> &'static str {
         self.engine_name
     }
@@ -679,7 +731,47 @@ mod tests {
         assert_eq!(Policy::parse("logic"), Some(Policy::Logic));
         assert_eq!(Policy::parse("pjrt"), Some(Policy::Numeric));
         assert_eq!(Policy::parse("compare"), Some(Policy::Compare));
+        assert_eq!(Policy::parse("native"), Some(Policy::Native));
         assert_eq!(Policy::parse("x"), None);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // may spawn rustc — not a Miri workload
+    fn native_policy_serves_bit_exact_with_or_without_codegen() {
+        // On a host with rustc this serves from the generated library; on
+        // one without, construction falls back to the interpreter. Either
+        // way the router must come up and replies must match the NN.
+        let (router, model) = make_router(Policy::Native);
+        assert!(
+            matches!(router.engine_name(), "native" | "logic"),
+            "unexpected engine {}",
+            router.engine_name()
+        );
+        if !crate::logic::codegen::rustc_available() {
+            assert_eq!(router.engine_name(), "logic", "fallback must select the interpreter");
+        }
+        let mut rxs = Vec::new();
+        let mut want = Vec::new();
+        for i in 0..80 {
+            let x: Vec<f64> = (0..6).map(|j| ((i * 7 + j) as f64 * 0.23).sin()).collect();
+            want.push(crate::nn::eval::classify(&model, &x));
+            rxs.push(router.submit(x));
+        }
+        for (rx, w) in rxs.into_iter().zip(want) {
+            let reply = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(reply.class, w, "native path must match NN exactly");
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn native_build_without_circuit_is_a_typed_error() {
+        let model = random_model("nnc", 4, &[3], 2, 1, 5);
+        let err = RouterBuilder::new(model).engine(Policy::Native).build().unwrap_err();
+        assert!(
+            matches!(err, NnError::Engine(EngineError::Construction(_))),
+            "{err}"
+        );
     }
 
     #[test]

@@ -339,6 +339,18 @@ pub fn load_bundle(path: &str) -> Result<(Model, PipelinedCircuit), ArtifactErro
     bundle_from_json(&j)
 }
 
+/// Where the native-codegen `.so` for a circuit bundle lives: next to the
+/// bundle, `<bundle stem>.native.so`. Keeping the shared object beside the
+/// artifact (rather than in a temp dir) means a registry restart finds the
+/// cached build, and deleting a bundle directory removes every derived
+/// file with it. The `.so` itself is validated on load — embedded model
+/// fingerprint plus a rustc-version sidecar — so a stale or foreign file
+/// at this path is rejected and rebuilt, never trusted.
+pub fn native_so_path(bundle_path: &str) -> String {
+    let stem = bundle_path.strip_suffix(".json").unwrap_or(bundle_path);
+    format!("{stem}.native.so")
+}
+
 fn parse_file(path: &str) -> Result<Json, ArtifactError> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| ArtifactError::Io { path: path.to_string(), msg: e.to_string() })?;
@@ -350,6 +362,12 @@ mod tests {
     use super::*;
     use crate::flow::{run_flow, FlowConfig};
     use crate::nn::model::random_model;
+
+    #[test]
+    fn native_so_path_sits_next_to_the_bundle() {
+        assert_eq!(native_so_path("models/a.circuit.json"), "models/a.circuit.native.so");
+        assert_eq!(native_so_path("plain"), "plain.native.so");
+    }
 
     fn flow_circuit(seed: u64) -> (Model, PipelinedCircuit) {
         let m = random_model("art", 5, &[4, 3], 2, 1, seed);

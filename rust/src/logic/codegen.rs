@@ -1,0 +1,671 @@
+//! Netlist-to-native code generation — the circuit as straight-line code.
+//!
+//! The paper's core claim is that the circuit **is** the program: fixed-
+//! function combinational logic, not an instruction stream fed to a
+//! generic evaluator. The compiled simulator (`logic::sim`) is still an
+//! interpreter — it walks arity runs and folds packed truth tables at run
+//! time. This module removes that last layer: it lowers an optimized
+//! [`CompiledNetlist`] into **branch-free straight-line Rust source**
+//! (every LUT becomes a constant-folded Shannon-mux expression over `u64`
+//! lane words, the levelized schedule becomes program order, scratch slots
+//! become `let` bindings), drives `rustc` to build it as a `cdylib`, and
+//! loads the result through dependency-free `dlopen`/`dlsym` shims.
+//!
+//! Why source emission + `rustc` instead of a hand-rolled JIT: the emitted
+//! program is *data-independent straight-line code*, exactly what an
+//! ahead-of-time optimizing compiler is best at (constant folding the
+//! tables away, register-allocating the live slot window, vectorizing the
+//! lane loop), and the generated `.rs` is a human-auditable artifact the
+//! differential suite can pin against `LutNetlist::eval`. See
+//! `rust/DESIGN.md` §Engine-API for the full ADR.
+//!
+//! Built libraries are cached next to the circuit bundle (or under the
+//! temp dir when serving without one) keyed by **model fingerprint +
+//! rustc version**: the fingerprint is baked into the `.so` as an exported
+//! symbol and re-checked at every load, the rustc version lives in a
+//! `.meta` sidecar; either mismatching forces a rebuild. The fallback
+//! ladder when any step is unavailable (no `rustc` on the serving host,
+//! non-Linux `dlopen` stub) is native → SIMD interpreter → scalar
+//! interpreter — construction fails with a typed error and the caller
+//! (`coordinator::router`) selects the interpreter engine.
+//!
+//! The `dlopen` shims follow `util::evloop`'s FFI idiom: direct
+//! `extern "C"` declarations against the platform libc `std` already
+//! links — no crates, no bindings generator. On non-Linux targets the
+//! loader compiles to a stub whose constructor reports the platform as
+//! unsupported.
+
+use std::fmt;
+use std::path::PathBuf;
+
+use crate::logic::sim::CompiledNetlist;
+
+/// ABI version stamped into every generated library; the loader rejects
+/// anything else. Bump when the exported symbol set or layout changes.
+pub const ABI_VERSION: u64 = 1;
+
+/// Typed failure of native code generation, build, or load.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodegenError {
+    /// `rustc` could not be run (not installed, not on PATH) — the caller
+    /// should fall back to the interpreter.
+    RustcUnavailable(String),
+    /// `rustc` ran but rejected the generated source.
+    Build(String),
+    /// The built library could not be loaded or is missing symbols.
+    Load(String),
+    /// The library was generated from a different model (embedded
+    /// fingerprint or netlist shape mismatch) — stale cache.
+    Mismatch { expected: String, found: String },
+    /// Filesystem failure around the cache.
+    Io { path: String, msg: String },
+}
+
+impl fmt::Display for CodegenError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodegenError::RustcUnavailable(m) => write!(f, "rustc unavailable: {m}"),
+            CodegenError::Build(m) => write!(f, "native build failed: {m}"),
+            CodegenError::Load(m) => write!(f, "native library load failed: {m}"),
+            CodegenError::Mismatch { expected, found } => write!(
+                f,
+                "native library was generated from a different model \
+                 (embedded {found}, expected {expected})"
+            ),
+            CodegenError::Io { path, msg } => write!(f, "{path}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CodegenError {}
+
+/// How [`load_or_build`] satisfied the request — callers surface this so
+/// CI can assert that a stale `.so` was rejected and rebuilt.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// The cached library matched fingerprint, rustc version, and shape.
+    Cached,
+    /// The library was (re)built; the reason is human-readable.
+    Rebuilt(String),
+}
+
+/// `rustc -V`, trimmed — half of the cache key. Fails typed when the
+/// serving host has no toolchain.
+pub fn rustc_version() -> Result<String, CodegenError> {
+    let out = std::process::Command::new("rustc")
+        .arg("-V")
+        .output()
+        .map_err(|e| CodegenError::RustcUnavailable(format!("running `rustc -V`: {e}")))?;
+    if !out.status.success() {
+        return Err(CodegenError::RustcUnavailable(format!(
+            "`rustc -V` exited with {}",
+            out.status
+        )));
+    }
+    Ok(String::from_utf8_lossy(&out.stdout).trim().to_string())
+}
+
+/// Whether a native build can work here at all (toolchain present and the
+/// platform has a real `dlopen`). Tests use this to skip, not fail.
+pub fn rustc_available() -> bool {
+    cfg!(target_os = "linux") && rustc_version().is_ok()
+}
+
+/// Default cache location for a circuit served without a bundle file:
+/// `$TMPDIR/nnt-native-<fingerprint>.so`.
+pub fn default_cache_path(fingerprint: &str) -> String {
+    let mut p: PathBuf = std::env::temp_dir();
+    p.push(format!("nnt-native-{fingerprint}.so"));
+    p.to_string_lossy().into_owned()
+}
+
+/// One selector-name table: expression string for every signal code
+/// (0/1 consts, `2+i` inputs, `2+num_inputs+j` LUT bindings).
+fn signal_names(num_inputs: usize, num_luts: usize) -> Vec<String> {
+    let mut names = Vec::with_capacity(2 + num_inputs + num_luts);
+    names.push("0u64".to_string());
+    names.push("!0u64".to_string());
+    for i in 0..num_inputs {
+        names.push(format!("i{i}"));
+    }
+    for j in 0..num_luts {
+        names.push(format!("t{j}"));
+    }
+    names
+}
+
+/// Shannon-fold a packed truth table into a branch-free expression over
+/// the selector names, constant-folding as it recurses: cofactor halves
+/// that agree collapse, constant cofactors reduce the mux to AND/OR/NOT.
+/// The selector order matches the interpreter's `fold_block` (selector `j`
+/// indexes bit `j` of the table address, so the *last* selector is the top
+/// mux), which is what keeps the emitted code bit-exact by construction.
+fn fold_expr(table: u64, sels: &[&str]) -> String {
+    let Some((top, rest)) = sels.split_last() else {
+        return if table & 1 == 1 { "!0u64".into() } else { "0u64".into() };
+    };
+    let half_bits = 1u32 << rest.len();
+    let mask = if half_bits == 64 { !0u64 } else { (1u64 << half_bits) - 1 };
+    let lo = fold_expr(table & mask, rest);
+    let hi = fold_expr((table >> half_bits) & mask, rest);
+    if lo == hi {
+        lo // cofactors agree: the function does not depend on `top`
+    } else if lo == "0u64" && hi == "!0u64" {
+        (*top).to_string() // mux(s, 0, 1) = s
+    } else if lo == "!0u64" && hi == "0u64" {
+        format!("!{top}") // mux(s, 1, 0) = !s
+    } else if lo == "0u64" {
+        format!("({top} & {hi})")
+    } else if hi == "0u64" {
+        format!("(!{top} & {lo})")
+    } else if lo == "!0u64" {
+        format!("(!{top} | {hi})")
+    } else if hi == "!0u64" {
+        format!("({top} | {lo})")
+    } else {
+        format!("((!{top} & {lo}) | ({top} & {hi}))")
+    }
+}
+
+/// Lower a compiled netlist into the source of a standalone `cdylib`: the
+/// schedule-ordered instruction stream becomes one `let` binding per LUT,
+/// each a branch-free Shannon-fold expression over 64-sample `u64` lane
+/// words; the exported `nnt_eval_groups` runs it once per lane group.
+pub fn emit_source(sim: &CompiledNetlist, fingerprint: &str) -> String {
+    let ni = sim.num_inputs();
+    let no = sim.num_outputs();
+    let names = signal_names(ni, sim.num_luts());
+    let mut src = String::with_capacity(4096);
+    src.push_str(&format!(
+        "// Generated by `nullanet codegen` — the circuit as straight-line code.\n\
+         // model fingerprint: {fingerprint}. Do not edit.\n\
+         #![allow(unused)]\n\n\
+         const NI: usize = {ni};\n\
+         const NO: usize = {no};\n\
+         static FP: [u8; {fp_len}] = *b\"{fingerprint}\";\n\n\
+         #[no_mangle]\n\
+         pub extern \"C\" fn nnt_abi_version() -> u64 {{\n    {abi}\n}}\n\n\
+         #[no_mangle]\n\
+         pub extern \"C\" fn nnt_num_inputs() -> u64 {{\n    NI as u64\n}}\n\n\
+         #[no_mangle]\n\
+         pub extern \"C\" fn nnt_num_outputs() -> u64 {{\n    NO as u64\n}}\n\n\
+         #[no_mangle]\n\
+         pub extern \"C\" fn nnt_fingerprint_len() -> u64 {{\n    FP.len() as u64\n}}\n\n\
+         #[no_mangle]\n\
+         pub extern \"C\" fn nnt_fingerprint() -> *const u8 {{\n    FP.as_ptr()\n}}\n\n",
+        fp_len = fingerprint.len(),
+        abi = ABI_VERSION,
+    ));
+    src.push_str("#[inline(always)]\nfn eval_word(inp: &[u64; NI], out: &mut [u64; NO]) {\n");
+    for i in 0..ni {
+        src.push_str(&format!("    let i{i} = inp[{i}];\n"));
+    }
+    for (arity, table, dest, inputs) in sim.instructions() {
+        let sels: Vec<&str> = inputs.iter().map(|&c| names[c as usize].as_str()).collect();
+        debug_assert_eq!(sels.len(), arity as usize);
+        let j = dest as usize - 2 - ni;
+        src.push_str(&format!("    let t{j} = {};\n", fold_expr(table, &sels)));
+    }
+    for (j, &(code, inv)) in sim.output_codes().iter().enumerate() {
+        let name = names[code as usize].as_str();
+        if inv {
+            src.push_str(&format!("    out[{j}] = !{name};\n"));
+        } else {
+            src.push_str(&format!("    out[{j}] = {name};\n"));
+        }
+    }
+    src.push_str("}\n\n");
+    src.push_str(
+        "/// # Safety\n\
+         /// `words` must point to `groups * NI` readable `u64`s (lane-group-major\n\
+         /// packed batch words) and `out` to `groups * NO` writable `u64`s.\n\
+         #[no_mangle]\n\
+         pub unsafe extern \"C\" fn nnt_eval_groups(words: *const u64, groups: u64, out: *mut u64) {\n\
+         \x20   for g in 0..groups as usize {\n\
+         \x20       let inp = &*(words.add(g * NI) as *const [u64; NI]);\n\
+         \x20       let o = &mut *(out.add(g * NO) as *mut [u64; NO]);\n\
+         \x20       eval_word(inp, o);\n\
+         \x20   }\n\
+         }\n",
+    );
+    src
+}
+
+/// Write `source` next to `so_path` (as `<so_path>.rs`) and build it with
+/// `rustc --crate-type cdylib -C opt-level=3`.
+pub fn build_so(source: &str, so_path: &str) -> Result<(), CodegenError> {
+    let src_path = format!("{so_path}.rs");
+    std::fs::write(&src_path, source).map_err(|e| CodegenError::Io {
+        path: src_path.clone(),
+        msg: e.to_string(),
+    })?;
+    let out = std::process::Command::new("rustc")
+        .args([
+            "--edition",
+            "2021",
+            "--crate-type",
+            "cdylib",
+            "-C",
+            "opt-level=3",
+            "-C",
+            "debuginfo=0",
+            "-o",
+            so_path,
+            &src_path,
+        ])
+        .output()
+        .map_err(|e| CodegenError::RustcUnavailable(format!("running rustc: {e}")))?;
+    if !out.status.success() {
+        // Char-wise cap: byte-indexed truncate could split a multi-byte
+        // character in rustc's diagnostics and panic.
+        let msg: String =
+            String::from_utf8_lossy(&out.stderr).trim().chars().take(2000).collect();
+        return Err(CodegenError::Build(msg));
+    }
+    Ok(())
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::ffi::{c_char, c_int, c_void, CStr, CString};
+
+    const RTLD_NOW: c_int = 2;
+
+    // Declarations against the libc `std` already links — prototypes match
+    // dlopen(3), dlsym(3), dlclose(3), dlerror(3).
+    extern "C" {
+        fn dlopen(filename: *const c_char, flags: c_int) -> *mut c_void;
+        fn dlsym(handle: *mut c_void, symbol: *const c_char) -> *mut c_void;
+        fn dlclose(handle: *mut c_void) -> c_int;
+        fn dlerror() -> *mut c_char;
+    }
+
+    fn last_error(context: &str) -> String {
+        // SAFETY: dlerror returns null or a NUL-terminated string owned by
+        // the dynamic loader; it is copied out before any further dl call.
+        let msg = unsafe {
+            let p = dlerror();
+            if p.is_null() {
+                None
+            } else {
+                Some(CStr::from_ptr(p).to_string_lossy().into_owned())
+            }
+        };
+        match msg {
+            Some(m) => format!("{context}: {m}"),
+            None => context.to_string(),
+        }
+    }
+
+    /// Owned `dlopen` handle, `dlclose`d exactly once on drop.
+    pub struct Lib {
+        handle: *mut c_void,
+    }
+
+    impl Lib {
+        pub fn open(path: &str) -> Result<Lib, String> {
+            let c = CString::new(path).map_err(|_| format!("{path}: path contains NUL"))?;
+            // SAFETY: `c` is a valid NUL-terminated path. RTLD_NOW resolves
+            // every relocation up front so missing symbols fail here, not
+            // at call time.
+            let handle = unsafe { dlopen(c.as_ptr(), RTLD_NOW) };
+            if handle.is_null() {
+                return Err(last_error(&format!("dlopen {path}")));
+            }
+            Ok(Lib { handle })
+        }
+
+        pub fn sym(&self, name: &str) -> Result<*mut c_void, String> {
+            let c = CString::new(name).map_err(|_| format!("{name}: symbol contains NUL"))?;
+            // SAFETY: `self.handle` came from a successful dlopen and is
+            // alive for `self`'s lifetime; `c` is NUL-terminated.
+            let p = unsafe { dlsym(self.handle, c.as_ptr()) };
+            if p.is_null() {
+                return Err(last_error(&format!("dlsym {name}")));
+            }
+            Ok(p)
+        }
+    }
+
+    impl Drop for Lib {
+        fn drop(&mut self) {
+            // SAFETY: the handle came from a successful dlopen and is
+            // closed exactly once, here. Function pointers resolved from it
+            // are only held by `NativeLib`, which owns this `Lib` and drops
+            // them together.
+            unsafe { dlclose(self.handle) };
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod sys {
+    use std::ffi::c_void;
+
+    /// Stub loader: dynamic loading is wired up for Linux only; every
+    /// constructor reports the platform as unsupported so the caller falls
+    /// back to the interpreter engine.
+    pub struct Lib {
+        _private: (),
+    }
+
+    impl Lib {
+        pub fn open(_path: &str) -> Result<Lib, String> {
+            Err("dynamic library loading is unsupported on this platform".into())
+        }
+
+        pub fn sym(&self, _name: &str) -> Result<*mut c_void, String> {
+            Err("dynamic library loading is unsupported on this platform".into())
+        }
+    }
+}
+
+/// A loaded native circuit library: validated ABI version and embedded
+/// fingerprint, plus the resolved `nnt_eval_groups` entry point. Owns the
+/// `dlopen` handle; dropping unloads the library.
+pub struct NativeLib {
+    _lib: sys::Lib,
+    eval: unsafe extern "C" fn(*const u64, u64, *mut u64),
+    num_inputs: usize,
+    num_outputs: usize,
+    fingerprint: String,
+}
+
+impl NativeLib {
+    /// Load a built library and verify it: ABI version, embedded model
+    /// fingerprint (`expected_fp`), and sane dimensions. Every failure is
+    /// typed so callers can distinguish "stale cache" from "broken host".
+    pub fn load(so_path: &str, expected_fp: &str) -> Result<NativeLib, CodegenError> {
+        let lib = sys::Lib::open(so_path).map_err(CodegenError::Load)?;
+        type GetU64 = unsafe extern "C" fn() -> u64;
+        type GetPtr = unsafe extern "C" fn() -> *const u8;
+        let abi = lib.sym("nnt_abi_version").map_err(CodegenError::Load)?;
+        // SAFETY: the symbol was emitted by `emit_source` with exactly this
+        // `extern "C" fn() -> u64` signature; transmuting the dlsym address
+        // to that type is the defined way to call it.
+        let abi: GetU64 = unsafe { std::mem::transmute(abi) };
+        // SAFETY: calling the zero-argument C function resolved above.
+        let got_abi = unsafe { abi() };
+        if got_abi != ABI_VERSION {
+            return Err(CodegenError::Load(format!(
+                "{so_path}: ABI version {got_abi} (this build speaks {ABI_VERSION})"
+            )));
+        }
+        let fp_len = lib.sym("nnt_fingerprint_len").map_err(CodegenError::Load)?;
+        // SAFETY: symbol emitted as `extern "C" fn() -> u64` (see above).
+        let fp_len: GetU64 = unsafe { std::mem::transmute(fp_len) };
+        let fp_ptr = lib.sym("nnt_fingerprint").map_err(CodegenError::Load)?;
+        // SAFETY: symbol emitted as `extern "C" fn() -> *const u8`.
+        let fp_ptr: GetPtr = unsafe { std::mem::transmute(fp_ptr) };
+        // SAFETY: `nnt_fingerprint` returns the address of a static byte
+        // array inside the (still loaded) library whose length is exactly
+        // `nnt_fingerprint_len()`; the bytes are copied before `lib` can
+        // drop.
+        let fingerprint = unsafe {
+            let len = fp_len() as usize;
+            let bytes = std::slice::from_raw_parts(fp_ptr(), len.min(256));
+            String::from_utf8_lossy(bytes).into_owned()
+        };
+        if fingerprint != expected_fp {
+            return Err(CodegenError::Mismatch {
+                expected: expected_fp.to_string(),
+                found: fingerprint,
+            });
+        }
+        let ni = lib.sym("nnt_num_inputs").map_err(CodegenError::Load)?;
+        // SAFETY: symbol emitted as `extern "C" fn() -> u64` (see above).
+        let ni: GetU64 = unsafe { std::mem::transmute(ni) };
+        let no = lib.sym("nnt_num_outputs").map_err(CodegenError::Load)?;
+        // SAFETY: symbol emitted as `extern "C" fn() -> u64` (see above).
+        let no: GetU64 = unsafe { std::mem::transmute(no) };
+        let eval = lib.sym("nnt_eval_groups").map_err(CodegenError::Load)?;
+        // SAFETY: symbol emitted as
+        // `unsafe extern "C" fn(*const u64, u64, *mut u64)`.
+        let eval: unsafe extern "C" fn(*const u64, u64, *mut u64) =
+            unsafe { std::mem::transmute(eval) };
+        // SAFETY: calling the zero-argument C getters resolved above.
+        let (num_inputs, num_outputs) = unsafe { (ni() as usize, no() as usize) };
+        Ok(NativeLib { _lib: lib, eval, num_inputs, num_outputs, fingerprint })
+    }
+
+    /// Primary inputs of the compiled-in circuit.
+    pub fn num_inputs(&self) -> usize {
+        self.num_inputs
+    }
+
+    /// Outputs of the compiled-in circuit.
+    pub fn num_outputs(&self) -> usize {
+        self.num_outputs
+    }
+
+    /// The fingerprint baked into the library at emission time.
+    pub fn fingerprint(&self) -> &str {
+        &self.fingerprint
+    }
+
+    /// Evaluate `groups` lane groups: `words` is lane-group-major packed
+    /// input (`groups * num_inputs()` words), `out` receives group-major
+    /// output words (`groups * num_outputs()`). Slice widths are checked
+    /// with real assertions — the FFI boundary must never read garbage.
+    pub fn eval_groups(&self, words: &[u64], groups: usize, out: &mut [u64]) {
+        assert_eq!(
+            words.len(),
+            groups * self.num_inputs,
+            "native eval: input words for {groups} groups of {} inputs",
+            self.num_inputs
+        );
+        assert_eq!(
+            out.len(),
+            groups * self.num_outputs,
+            "native eval: output words for {groups} groups of {} outputs",
+            self.num_outputs
+        );
+        // SAFETY: the asserts above guarantee exactly the contract
+        // `nnt_eval_groups` documents — `groups * NI` readable input words
+        // and `groups * NO` writable output words — and the library stays
+        // loaded for `&self`'s lifetime.
+        unsafe { (self.eval)(words.as_ptr(), groups as u64, out.as_mut_ptr()) }
+    }
+}
+
+/// Load the cached native library for `sim` at `so_path`, rebuilding when
+/// the cache is missing, was generated from a different model (embedded
+/// fingerprint mismatch), was built by a different rustc (`.meta`
+/// sidecar), is shape-incompatible, or simply fails to load. Returns the
+/// library plus whether the cache was hit or rebuilt (and why).
+pub fn load_or_build(
+    sim: &CompiledNetlist,
+    fingerprint: &str,
+    so_path: &str,
+) -> Result<(NativeLib, CacheOutcome), CodegenError> {
+    let meta_path = format!("{so_path}.meta");
+    let rustc = rustc_version();
+    let mut reason = String::new();
+    if std::path::Path::new(so_path).exists() {
+        let meta = std::fs::read_to_string(&meta_path).unwrap_or_default();
+        let stale_rustc = match &rustc {
+            Ok(v) => !meta.trim().is_empty() && meta.trim() != v,
+            Err(_) => false, // can't rebuild anyway; trust the cache
+        };
+        if stale_rustc {
+            reason = format!(
+                "cached library was built by `{}`, current is `{}`",
+                meta.trim(),
+                rustc.as_ref().unwrap_or(&String::new())
+            );
+        } else {
+            match NativeLib::load(so_path, fingerprint) {
+                Ok(lib)
+                    if lib.num_inputs() == sim.num_inputs()
+                        && lib.num_outputs() == sim.num_outputs() =>
+                {
+                    return Ok((lib, CacheOutcome::Cached));
+                }
+                Ok(lib) => {
+                    reason = format!(
+                        "cached library has shape {}x{}, circuit is {}x{}",
+                        lib.num_inputs(),
+                        lib.num_outputs(),
+                        sim.num_inputs(),
+                        sim.num_outputs()
+                    );
+                }
+                Err(e) => reason = e.to_string(),
+            }
+        }
+    } else {
+        reason = format!("no cached library at {so_path}");
+    }
+    let rustc = rustc?;
+    build_so(&emit_source(sim, fingerprint), so_path)?;
+    let lib = NativeLib::load(so_path, fingerprint)?;
+    // Best-effort sidecar: losing it only costs a spurious rebuild later.
+    let _ = std::fs::write(&meta_path, &rustc);
+    Ok((lib, CacheOutcome::Rebuilt(reason)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::netlist::{LutNetlist, Sig};
+    use crate::logic::truthtable::TruthTable;
+    use crate::util::bitvec::PackedBatch;
+    use crate::util::prng::Xoshiro256;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn tmp_so(tag: &str) -> String {
+        static N: AtomicUsize = AtomicUsize::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        let mut p = std::env::temp_dir();
+        p.push(format!("nnt-codegen-test-{}-{tag}-{n}.so", std::process::id()));
+        p.to_string_lossy().into_owned()
+    }
+
+    fn random_netlist(seed: u64, num_inputs: usize, num_luts: usize) -> LutNetlist {
+        let mut rng = Xoshiro256::new(seed);
+        let mut nl = LutNetlist::new(num_inputs);
+        for j in 0..num_luts {
+            let max_sig = num_inputs + j;
+            let k = 1 + rng.below(5.min(max_sig as u64)) as usize;
+            let mut inputs = Vec::with_capacity(k);
+            for _ in 0..k {
+                let pick = rng.below(max_sig as u64) as usize;
+                inputs.push(if pick < num_inputs {
+                    Sig::Input(pick as u32)
+                } else {
+                    Sig::Lut((pick - num_inputs) as u32)
+                });
+            }
+            let tt = TruthTable::from_fn(k, |_| rng.bernoulli(0.5));
+            nl.add_lut(inputs, tt);
+        }
+        for j in num_luts.saturating_sub(3)..num_luts {
+            nl.add_output(Sig::Lut(j as u32), rng.bernoulli(0.5));
+        }
+        nl.add_output(Sig::Const(true), false);
+        nl.add_output(Sig::Input(0), true);
+        nl
+    }
+
+    #[test]
+    fn fold_expr_constant_folds() {
+        // mux(s, 0, 1) = s; mux(s, 1, 0) = !s; independent cofactors drop.
+        assert_eq!(fold_expr(0b10, &["i0"]), "i0");
+        assert_eq!(fold_expr(0b01, &["i0"]), "!i0");
+        assert_eq!(fold_expr(0b11, &["i0"]), "!0u64");
+        assert_eq!(fold_expr(0b00, &["i0"]), "0u64");
+        // AND: only minterm 3 set over (i0, i1).
+        assert_eq!(fold_expr(0b1000, &["i0", "i1"]), "(i1 & i0)");
+        // table independent of the second selector
+        assert_eq!(fold_expr(0b1010, &["i0", "i1"]), "i0");
+    }
+
+    #[test]
+    fn emitted_source_is_straight_line() {
+        let nl = random_netlist(7, 6, 14);
+        let sim = CompiledNetlist::compile(&nl);
+        let src = emit_source(&sim, "00000000deadbeef");
+        // Branch-free body: no `if`, `match`, or `while` in eval_word.
+        let body = src.split("fn eval_word").nth(1).unwrap();
+        let body = body.split("fn nnt_eval_groups").next().unwrap();
+        for kw in ["if ", "match ", "while ", "loop "] {
+            assert!(!body.contains(kw), "eval_word must be straight-line, found {kw:?}");
+        }
+        // One binding per compiled LUT, one store per output.
+        assert_eq!(body.matches("    let t").count(), sim.num_luts());
+        assert_eq!(body.matches("    out[").count(), sim.num_outputs());
+        assert!(src.contains("nnt_eval_groups"));
+        assert!(src.contains("*b\"00000000deadbeef\""));
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // spawns rustc and dlopens — not a Miri workload
+    fn built_library_matches_reference_eval() {
+        if !rustc_available() {
+            eprintln!("skipping: rustc or dlopen unavailable on this host");
+            return;
+        }
+        let nl = random_netlist(42, 7, 20);
+        let sim = CompiledNetlist::compile(&nl);
+        let so = tmp_so("diff");
+        let (lib, outcome) = load_or_build(&sim, "cafebabe00000001", &so).unwrap();
+        assert!(matches!(outcome, CacheOutcome::Rebuilt(_)));
+        let mut rng = Xoshiro256::new(9);
+        let samples: Vec<u64> = (0..300).map(|_| rng.next_u64() & 0x7F).collect();
+        let mut packed = PackedBatch::with_capacity(7, samples.len());
+        for &bits in &samples {
+            packed.push_sample_word(bits);
+        }
+        let groups = packed.num_groups();
+        let no = sim.num_outputs();
+        let mut out = vec![0u64; groups * no];
+        lib.eval_groups(packed.words(), groups, &mut out);
+        for (s, &bits) in samples.iter().enumerate() {
+            let want = nl.eval(bits);
+            for (j, &w) in want.iter().enumerate() {
+                let got = (out[(s >> 6) * no + j] >> (s & 63)) & 1 == 1;
+                assert_eq!(got, w, "sample={s} output={j}");
+            }
+        }
+        // Second load is a cache hit; a wrong fingerprint is a typed reject.
+        let (_lib2, outcome2) = load_or_build(&sim, "cafebabe00000001", &so).unwrap();
+        assert_eq!(outcome2, CacheOutcome::Cached);
+        match NativeLib::load(&so, "0000000000000000") {
+            Err(CodegenError::Mismatch { expected, found }) => {
+                assert_eq!(expected, "0000000000000000");
+                assert_eq!(found, "cafebabe00000001");
+            }
+            other => panic!("expected fingerprint mismatch, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&so);
+        let _ = std::fs::remove_file(format!("{so}.rs"));
+        let _ = std::fs::remove_file(format!("{so}.meta"));
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // spawns rustc and dlopens — not a Miri workload
+    fn stale_cache_is_rejected_and_rebuilt() {
+        if !rustc_available() {
+            eprintln!("skipping: rustc or dlopen unavailable on this host");
+            return;
+        }
+        // Build a library for netlist A, then ask for netlist B at the same
+        // cache path: the embedded fingerprint must force a rebuild.
+        let a = CompiledNetlist::compile(&random_netlist(1, 6, 12));
+        let b = CompiledNetlist::compile(&random_netlist(2, 6, 12));
+        let so = tmp_so("stale");
+        let (_, first) = load_or_build(&a, "aaaaaaaaaaaaaaaa", &so).unwrap();
+        assert!(matches!(first, CacheOutcome::Rebuilt(_)));
+        let (lib, second) = load_or_build(&b, "bbbbbbbbbbbbbbbb", &so).unwrap();
+        match second {
+            CacheOutcome::Rebuilt(reason) => {
+                assert!(reason.contains("different model"), "reason: {reason}")
+            }
+            CacheOutcome::Cached => panic!("stale cache must not be served"),
+        }
+        assert_eq!(lib.fingerprint(), "bbbbbbbbbbbbbbbb");
+        let _ = std::fs::remove_file(&so);
+        let _ = std::fs::remove_file(format!("{so}.rs"));
+        let _ = std::fs::remove_file(format!("{so}.meta"));
+    }
+}

@@ -18,12 +18,15 @@
 //! * [`verify`] — exhaustive + sampled equivalence checking
 //! * [`cec`] — SAT-based combinational equivalence proofs (miter over
 //!   [`crate::util::sat`])
+//! * [`codegen`] — netlist-to-native lowering: emit the circuit as
+//!   straight-line Rust, build with `rustc`, load via `dlopen` shims
 //! * [`blif`] / [`verilog`] — interchange emitters for real FPGA tools
 
 pub mod aig;
 pub mod blif;
 pub mod cec;
 pub mod check;
+pub mod codegen;
 pub mod cube;
 pub mod espresso;
 pub mod mapper;

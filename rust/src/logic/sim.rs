@@ -50,6 +50,38 @@ type Code = u32;
 /// one block is up to 512 samples per pass).
 pub const MAX_BLOCK_WIDTH: usize = 8;
 
+/// Instruction-set variant the block kernel dispatches into. Detected once
+/// at [`CompiledNetlist::compile`] via `is_x86_feature_detected!` and baked
+/// into the compiled program: the fold loop is re-monomorphized under
+/// `#[target_feature]` so LLVM may emit 256-/512-bit vector code for the
+/// `W`-word inner loop, with the plain scalar/SSE build retained as the
+/// portable fallback. This is the interpreter's half of the fallback ladder
+/// native codegen → SIMD interpreter → scalar (see `logic::codegen`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelIsa {
+    /// Portable build — whatever the target baseline allows.
+    Scalar,
+    /// AVX2 monomorphization (x86-64 only).
+    Avx2,
+    /// AVX-512F monomorphization (x86-64 only).
+    Avx512,
+}
+
+/// Pick the widest kernel the running CPU supports. Non-x86-64 targets
+/// always get the portable build.
+fn detect_isa() -> KernelIsa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            return KernelIsa::Avx512;
+        }
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return KernelIsa::Avx2;
+        }
+    }
+    KernelIsa::Scalar
+}
+
 /// One maximal run of equal-arity instructions in the schedule-ordered
 /// stream: instructions `start .. start + count`, whose flattened input
 /// codes begin at `input_start` (`arity` codes per instruction).
@@ -86,6 +118,8 @@ pub struct CompiledNetlist {
     s_inputs: Vec<Code>,
     /// What the compile-time optimizer removed.
     opt: OptStats,
+    /// Kernel variant selected at compile time (runtime CPU detection).
+    isa: KernelIsa,
 }
 
 /// Per-worker evaluation state: `W` lane words per value slot
@@ -213,6 +247,7 @@ impl CompiledNetlist {
             s_dest,
             s_inputs,
             opt,
+            isa: detect_isa(),
         };
         // Debug builds gate every compile behind the structural lint: the
         // source netlist (which `pub` fields allow constructing without
@@ -334,6 +369,43 @@ impl CompiledNetlist {
         &self.opt
     }
 
+    /// Kernel variant the runtime CPU detection selected at compile time.
+    pub fn kernel_isa(&self) -> KernelIsa {
+        self.isa
+    }
+
+    /// Test hook: downgrade to the portable kernel so the detected SIMD
+    /// monomorphization can be differential-tested against it.
+    #[cfg(test)]
+    fn with_isa(mut self, isa: KernelIsa) -> Self {
+        self.isa = isa;
+        self
+    }
+
+    /// Crate-internal view of the compiled instruction stream for the
+    /// native code generator (`logic::codegen`): one
+    /// `(arity, packed table, dest code, input codes)` tuple per
+    /// instruction, in schedule order. Codes use the signal encoding at the
+    /// top of this file (0/1 consts, `2+i` inputs, `2+num_inputs+j` LUTs).
+    pub(crate) fn instructions(&self) -> Vec<(u32, u64, u32, &[u32])> {
+        let mut v = Vec::with_capacity(self.num_luts);
+        for r in &self.runs {
+            let k = r.arity as usize;
+            for off in 0..r.count as usize {
+                let i = r.start as usize + off;
+                let inp = r.input_start as usize + off * k;
+                v.push((r.arity, self.s_tables[i], self.s_dest[i], &self.s_inputs[inp..inp + k]));
+            }
+        }
+        v
+    }
+
+    /// Crate-internal view of the output list (code, inverted) for the
+    /// native code generator.
+    pub(crate) fn output_codes(&self) -> &[(u32, bool)] {
+        &self.outputs
+    }
+
     /// Value slots per lane word: 2 consts + inputs + (optimized) LUTs.
     fn slots(&self) -> usize {
         2 + self.num_inputs + self.num_luts
@@ -373,7 +445,9 @@ impl CompiledNetlist {
 
     /// The straight-line block kernel: consts + inputs are already loaded
     /// into `vals` (signal-major, stride `W`); evaluates every run, one
-    /// arity dispatch per run.
+    /// arity dispatch per run. `inline(always)` so the `target_feature`
+    /// wrappers below re-monomorphize the whole fold under AVX2/AVX-512.
+    #[inline(always)]
     fn exec<const W: usize>(&self, vals: &mut [u64]) {
         for x in vals[..W].iter_mut() {
             *x = 0;
@@ -422,7 +496,62 @@ impl CompiledNetlist {
 
     /// Evaluate one `W`-group block of a packed batch (groups `g0 .. g0+W`),
     /// writing output words group-major into `out` (`W * num_outputs()`).
+    /// Dispatches once into the kernel monomorphization selected at compile
+    /// time (see [`KernelIsa`]); every variant runs the same portable body.
     fn run_block<const W: usize>(
+        &self,
+        batch: &PackedBatch,
+        g0: usize,
+        scratch: &mut SimScratch,
+        out: &mut [u64],
+    ) {
+        match self.isa {
+            KernelIsa::Scalar => self.run_block_body::<W>(batch, g0, scratch, out),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `self.isa` is only ever set to `Avx2` by `detect_isa`
+            // after `is_x86_feature_detected!("avx2")` returned true on this
+            // very CPU, so the target-feature contract holds.
+            KernelIsa::Avx2 => unsafe { self.run_block_avx2::<W>(batch, g0, scratch, out) },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: as above — `Avx512` is only selected when
+            // `is_x86_feature_detected!("avx512f")` returned true.
+            KernelIsa::Avx512 => unsafe { self.run_block_avx512::<W>(batch, g0, scratch, out) },
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => self.run_block_body::<W>(batch, g0, scratch, out),
+        }
+    }
+
+    /// AVX2 monomorphization of the block kernel: same body, recompiled
+    /// with 256-bit vectors available to the fold's inner `W`-word loop.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn run_block_avx2<const W: usize>(
+        &self,
+        batch: &PackedBatch,
+        g0: usize,
+        scratch: &mut SimScratch,
+        out: &mut [u64],
+    ) {
+        self.run_block_body::<W>(batch, g0, scratch, out)
+    }
+
+    /// AVX-512F monomorphization of the block kernel.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn run_block_avx512<const W: usize>(
+        &self,
+        batch: &PackedBatch,
+        g0: usize,
+        scratch: &mut SimScratch,
+        out: &mut [u64],
+    ) {
+        self.run_block_body::<W>(batch, g0, scratch, out)
+    }
+
+    /// Portable body of the block kernel (ISA-agnostic; inlined into each
+    /// `target_feature` wrapper above so the fold re-vectorizes).
+    #[inline(always)]
+    fn run_block_body<const W: usize>(
         &self,
         batch: &PackedBatch,
         g0: usize,
@@ -1075,6 +1204,42 @@ mod tests {
         let mut scratch = b.make_scratch();
         let mut out = vec![0u64; a.num_outputs()];
         a.run_words(&mut scratch, &[0u64; 6], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "scratch was built for a different netlist")]
+    fn scratch_of_a_dropped_netlist_is_rejected_after_realloc() {
+        // Same seed ⇒ identical shape ⇒ identical slot count, and dropping
+        // `a` first invites the allocator to recycle its address for `b`.
+        // Only the monotonic compile-generation id distinguishes them — an
+        // address-keyed owner check would accept the stale scratch here.
+        let a = CompiledNetlist::compile(&random_netlist(1, 6, 10));
+        let mut scratch = a.make_scratch();
+        drop(a);
+        let b = CompiledNetlist::compile(&random_netlist(1, 6, 10));
+        let mut out = vec![0u64; b.num_outputs()];
+        b.run_words(&mut scratch, &[0u64; 6], &mut out);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // large batches; the small shard smoke covers Miri
+    fn detected_simd_kernel_matches_the_portable_kernel() {
+        // Differential check of the `target_feature` monomorphizations: on
+        // a machine without AVX this degenerates to scalar-vs-scalar, which
+        // is fine — CI x86-64 runners exercise the AVX2 path.
+        let nl = random_netlist(29, 8, 24);
+        let detected = CompiledNetlist::compile(&nl);
+        let portable = CompiledNetlist::compile(&nl).with_isa(KernelIsa::Scalar);
+        let mut rng = Xoshiro256::new(101);
+        let mut packed = PackedBatch::with_capacity(8, 600);
+        for _ in 0..600 {
+            packed.push_sample_word(rng.next_u64() & 0xFF);
+        }
+        let mut sd = detected.make_scratch();
+        let mut sp = portable.make_scratch();
+        let got = detected.run_packed(&packed, &mut sd);
+        let want = portable.run_packed(&packed, &mut sp);
+        assert_eq!(got, want, "isa={:?}", detected.kernel_isa());
     }
 
     #[test]

@@ -5,13 +5,16 @@
 //! nullanet compile   --arch jsc-s [--out artifacts/jsc-s.circuit.json]
 //! nullanet table1    [--test-set artifacts/jsc_test.bin] [--quick]
 //! nullanet verify    --arch jsc-s [--samples 2000] [--circuit file.circuit.json]
-//! nullanet serve     --arch jsc-s --addr 127.0.0.1:7878 --engine logic|pjrt|compare
+//! nullanet serve     --arch jsc-s --addr 127.0.0.1:7878
+//!                    --engine logic|pjrt|compare|native
 //!                    [--circuit file.circuit.json] [--workers N]
 //!                    [--event-loop] [--max-queue-depth N]
 //! nullanet serve     --models artifacts/circuits [--default-model name]
-//!                    [--addr …] [--max-batch N] [--max-wait-us N] [--workers N]
+//!                    [--engine logic|native] [--addr …] [--max-batch N]
+//!                    [--max-wait-us N] [--workers N]
 //!                    [--event-loop] [--max-queue-depth N]
-//! nullanet bench     [--out BENCH_5.json] [--batch N] [--quick] [--jobs N]
+//! nullanet codegen   --arch jsc-s [--circuit file.circuit.json] [--out file.so]
+//! nullanet bench     [--out BENCH_9.json] [--batch N] [--quick] [--jobs N]
 //! nullanet bench     --serve [--out BENCH_8.json] [--conns N] [--reqs N] [--quick]
 //! nullanet emit      --arch jsc-s --format blif|verilog --out file
 //! nullanet info      --arch jsc-s
@@ -66,6 +69,7 @@ fn main() -> ExitCode {
         Some("table1") => cmd_table1(&args),
         Some("verify") => cmd_verify(&args),
         Some("serve") => cmd_serve(&args),
+        Some("codegen") => cmd_codegen(&args),
         Some("bench") => cmd_bench(&args),
         Some("emit") => cmd_emit(&args),
         Some("info") => cmd_info(&args),
@@ -76,8 +80,8 @@ fn main() -> ExitCode {
         }
         None => {
             println!(
-                "usage: nullanet <flow|compile|table1|verify|serve|bench|emit|info|\
-                 check|gen-model> [options]"
+                "usage: nullanet <flow|compile|table1|verify|serve|codegen|bench|emit|\
+                 info|check|gen-model> [options]"
             );
             Ok(())
         }
@@ -329,13 +333,18 @@ fn cmd_serve(args: &Args) -> Result<(), NnError> {
     // each with its own batcher + engine stack). Hot-swap/load/unload then
     // happen live over the wire protocol.
     if let Some(dir) = args.get_opt("models") {
-        if args.get_str("engine", "logic") != "logic" {
-            return Err(NnError::Config(
-                "--models serves compiled logic circuits; --engine pjrt/compare \
-                 needs the single-model path (--arch/--model)"
-                    .into(),
-            ));
-        }
+        let engine = args.get_str("engine", "logic");
+        let dir_policy = match engine.as_str() {
+            "logic" => Policy::Logic,
+            "native" => Policy::Native,
+            _ => {
+                return Err(NnError::Config(
+                    "--models serves compiled logic circuits (--engine logic|native); \
+                     --engine pjrt/compare needs the single-model path (--arch/--model)"
+                        .into(),
+                ))
+            }
+        };
         if args.get_opt("arch").is_some()
             || args.get_opt("model").is_some()
             || args.get_opt("circuit").is_some()
@@ -349,6 +358,7 @@ fn cmd_serve(args: &Args) -> Result<(), NnError> {
         let registry = Arc::new(ModelRegistry::new(RegistryConfig {
             batch_policy: bp,
             workers,
+            policy: dir_policy,
         }));
         let loaded = registry.load_dir(dir)?;
         if loaded.is_empty() {
@@ -382,7 +392,7 @@ fn cmd_serve(args: &Args) -> Result<(), NnError> {
 
     let model = load_model(args)?;
     let policy = Policy::parse(&args.get_str("engine", "logic"))
-        .ok_or_else(|| NnError::Config("bad --engine (logic|pjrt|compare)".into()))?;
+        .ok_or_else(|| NnError::Config("bad --engine (logic|pjrt|compare|native)".into()))?;
     if policy == Policy::Numeric && args.get_opt("circuit").is_some() {
         return Err(NnError::Config(
             "--circuit is unused with --engine pjrt (the numeric engine loads the \
@@ -400,7 +410,14 @@ fn cmd_serve(args: &Args) -> Result<(), NnError> {
         let circuit = load_or_synthesize(args, &model)?;
         builder = builder.circuit(circuit.netlist);
     }
-    if policy != Policy::Logic {
+    if policy == Policy::Native {
+        // Cache the generated `.so` next to the circuit bundle when one was
+        // given; a synthesized-on-the-fly circuit uses the temp-dir default.
+        if let Some(path) = args.get_opt("circuit") {
+            builder = builder.native_cache(artifact::native_so_path(path));
+        }
+    }
+    if matches!(policy, Policy::Numeric | Policy::Compare) {
         let dir = args.get_str("artifacts", "artifacts");
         let arch = args.get_str("arch", "jsc-s");
         let out_w = model.layers.last().map(|l| l.out_width).unwrap_or(model.num_classes);
@@ -434,6 +451,11 @@ fn cmd_serve(args: &Args) -> Result<(), NnError> {
     let registry = Arc::new(ModelRegistry::new(RegistryConfig {
         batch_policy: bp,
         workers,
+        // Live {"cmd":"load"} bundles build with the serve engine when it is
+        // one the registry can construct standalone (logic/native); the
+        // pjrt/compare paths need an HLO spec only the CLI single-model
+        // path carries, so their live loads fall back to the interpreter.
+        policy: if policy == Policy::Native { Policy::Native } else { Policy::Logic },
     }));
     registry.install(&model.name, router, None)?;
     let addr = args.get_str("addr", "127.0.0.1:7878");
@@ -444,6 +466,74 @@ fn cmd_serve(args: &Args) -> Result<(), NnError> {
     );
     run_server(&registry, &addr, event_loop)?;
     println!("{}", registry.metrics_report());
+    Ok(())
+}
+
+/// `nullanet codegen`: lower the compiled netlist to straight-line Rust,
+/// build it as a shared object with `rustc`, load it back through `dlopen`,
+/// and self-check it word-exactly against the interpreter. The `.so` (with
+/// its `.rs` source and rustc-version sidecar) lands at `--out`, defaulting
+/// next to `--circuit` — exactly where `serve --engine native` looks for
+/// it, so this command is the cache-warming step before deployment.
+fn cmd_codegen(args: &Args) -> Result<(), NnError> {
+    use nullanet_tiny::logic::codegen;
+    use nullanet_tiny::util::bitvec::mask_group_tail;
+
+    conf(args.check_known(&[
+        "arch", "model", "artifacts", "circuit", "out", "samples", "jobs",
+        "no-espresso", "no-retime", "dc-from-data", "map-for-area", "no-verify",
+    ]))?;
+    let model = load_model(args)?;
+    let circuit = load_or_synthesize(args, &model)?;
+    let sim = CompiledNetlist::compile(&circuit.netlist);
+    let fp = artifact::model_fingerprint(&model);
+    let so_path = match (args.get_opt("out"), args.get_opt("circuit")) {
+        (Some(out), _) => out.to_string(),
+        (None, Some(circuit_path)) => artifact::native_so_path(circuit_path),
+        (None, None) => codegen::default_cache_path(&fp),
+    };
+    let (lib, outcome) = codegen::load_or_build(&sim, &fp, &so_path)
+        .map_err(|e| NnError::Config(format!("codegen: {e}")))?;
+    match outcome {
+        codegen::CacheOutcome::Cached => {
+            println!("cache hit: {so_path} is current (fingerprint {fp})")
+        }
+        codegen::CacheOutcome::Rebuilt(reason) => {
+            println!("built {so_path} ({reason}; fingerprint {fp})")
+        }
+    }
+    // Self-check: the loaded native library must agree word-exactly with
+    // the interpreter on random packed inputs before anyone serves it.
+    let samples = conf(args.get_usize("samples", 512))?;
+    let ni = sim.num_inputs();
+    let no = sim.num_outputs();
+    let mut rng = Xoshiro256::new(0xC0DE);
+    let mut packed = PackedBatch::with_capacity(ni, samples);
+    for _ in 0..samples {
+        let bits: Vec<bool> = (0..ni).map(|_| rng.next_u64() & 1 == 1).collect();
+        packed.push_sample_bools(&bits);
+    }
+    let groups = packed.num_groups();
+    let mut native_out = vec![0u64; groups * no];
+    lib.eval_groups(packed.words(), groups, &mut native_out);
+    mask_group_tail(&mut native_out, no, samples);
+    let mut scratch = sim.make_scratch();
+    let reference = sim.run_packed(&packed, &mut scratch);
+    let mut ref_out = reference.words().to_vec();
+    mask_group_tail(&mut ref_out, no, samples);
+    if native_out != ref_out {
+        return Err(NnError::Config(format!(
+            "codegen self-check FAILED: native output diverges from the \
+             interpreter on {samples} random samples ({so_path})"
+        )));
+    }
+    println!(
+        "self-check OK: native ≡ interpreter on {samples} random samples \
+         ({} LUTs, {} inputs, {} outputs)",
+        sim.num_luts(),
+        ni,
+        no,
+    );
     Ok(())
 }
 
@@ -458,21 +548,26 @@ fn kernel_row(width: usize, optimized: bool, s: &BenchStats, n: f64) -> Json {
 }
 
 /// Fixed-seed packed-throughput benchmark. Writes machine-readable
-/// `BENCH_5.json`: ns/sample and samples/sec for every kernel width
-/// (W ∈ {1,2,4,8}) and shard-worker count, the optimizer's pre/post LUT
-/// counts, and the headline speedup of the W=4 kernel + optimizer over the
-/// pre-PR W=1 unoptimized path — the number the `BENCH_*.json` perf
-/// trajectory is tracked by from this PR on. Deterministic: models come
-/// from fixed-seed `gen-model` specs, inputs from a fixed-seed PRNG, so no
+/// `BENCH_9.json`: ns/sample and samples/sec for every interpreter kernel
+/// width (W ∈ {1,2,4,8}), shard-worker counts, the optimizer's pre/post LUT
+/// counts, the three-way interpreter vs SIMD-interpreter vs native-codegen
+/// comparison, and the headline `speedup_native_vs_w4_opt` — the number the
+/// `BENCH_*.json` perf trajectory is tracked by from this PR on. A shrunk
+/// loopback serving sweep rides along under `"serve"` so one command covers
+/// both the kernel and the wire path. Deterministic: models come from
+/// fixed-seed `gen-model` specs, inputs from a fixed-seed PRNG, so no
 /// trained artifacts are needed. `--quick` (CI smoke) shrinks the model
-/// set and batch; `NNT_BENCH_FAST=1` shrinks the measurement windows.
+/// set, batch, and serve sweep (8 conns × 64 reqs); `NNT_BENCH_FAST=1`
+/// shrinks the measurement windows.
 fn cmd_bench(args: &Args) -> Result<(), NnError> {
+    use nullanet_tiny::logic::codegen;
+
     conf(args.check_known(&["out", "batch", "quick", "jobs", "serve", "conns", "reqs"]))?;
     if args.get_bool("serve") {
         return cmd_bench_serve(args);
     }
     let quick = args.get_bool("quick");
-    let out_path = args.get_str("out", "BENCH_5.json");
+    let out_path = args.get_str("out", "BENCH_9.json");
     let batch_n = conf(args.get_usize("batch", if quick { 256 } else { 4096 }))?;
     let jobs = conf(args.get_usize("jobs", FlowConfig::default().jobs))?;
     let models: Vec<Model> = if quick {
@@ -545,6 +640,38 @@ fn cmd_bench(args: &Args) -> Result<(), NnError> {
             ]));
         }
 
+        // Tentpole three-way comparison: the same packed batch through the
+        // rustc-built straight-line kernel. The interpreter rows above are
+        // already SIMD-dispatched (the detected-ISA monomorphization), so
+        // this is interpreter vs native head-to-head. Hosts without rustc
+        // keep the interpreter rows and record null for the native side.
+        let mut native_row = Json::Null;
+        let mut native_speedup = Json::Null;
+        if codegen::rustc_available() {
+            let fp = artifact::model_fingerprint(model);
+            match codegen::load_or_build(&sim_opt, &fp, &codegen::default_cache_path(&fp))
+            {
+                Ok((lib, _)) => {
+                    let words = shared.words();
+                    let s = bench.run(&format!("{} native codegen", model.name), || {
+                        lib.eval_groups(words, groups, &mut out)
+                    });
+                    let sp = w4_ns / s.median_ns;
+                    println!("  speedup native vs W=4 optimized: {sp:.2}x");
+                    all_beat_baseline &= sp >= 1.0;
+                    native_row = Json::obj([
+                        ("ns_per_sample", Json::float(s.median_ns / n)),
+                        ("samples_per_sec", Json::float(n * 1e9 / s.median_ns)),
+                        ("isa", Json::str(format!("{:?}", sim_opt.kernel_isa()))),
+                    ]);
+                    native_speedup = Json::float(sp);
+                }
+                Err(e) => println!("  native codegen unavailable: {e}"),
+            }
+        } else {
+            println!("  native codegen skipped (no rustc on this host)");
+        }
+
         let speedup = base.median_ns / w4_ns;
         println!("  speedup W=4+optimizer vs W=1 unoptimized: {speedup:.2}x");
         all_beat_baseline &= speedup >= 1.0;
@@ -558,15 +685,23 @@ fn cmd_bench(args: &Args) -> Result<(), NnError> {
             ("luts_post_opt", Json::int(os.luts_after as i64)),
             ("kernels", Json::Arr(kernels)),
             ("sharded", Json::Arr(sharded)),
+            ("native", native_row),
             ("speedup_w4_opt_vs_w1_unopt", Json::float(speedup)),
+            ("speedup_native_vs_w4_opt", native_speedup),
         ]));
     }
+    // Shrunk loopback serving sweep (satellite of the codegen PR): the full
+    // `bench --serve` matrix at reduced volume, so BENCH_9 also tracks the
+    // wire path without a second command.
+    let (sv_conns, sv_reqs) = if quick { (8, 64) } else { (16, 256) };
+    let serve_section = serve_sweep(sv_conns, sv_reqs)?;
     let doc = Json::obj([
         ("schema", Json::str("nullanet-bench")),
         ("version", Json::int(1)),
-        ("bench_id", Json::int(5)),
+        ("bench_id", Json::int(9)),
         ("quick", Json::Bool(quick)),
         ("models", Json::Arr(model_rows)),
+        ("serve", serve_section),
     ]);
     std::fs::write(&out_path, format!("{}\n", doc.to_pretty_string()))
         .map_err(|e| NnError::Config(format!("write {out_path}: {e}")))?;
@@ -682,17 +817,40 @@ fn read_frame_reply(
 /// serving stack, strict request/reply per connection); mode 2 drives
 /// binary frames through the epoll event loop with `window` requests
 /// pipelined per connection. Deterministic inputs (fixed-seed model and
-/// PRNG); writes `BENCH_8.json` with p50/p99 latency and req/s per mode
-/// plus the binary-over-JSON throughput speedup — the number this PR's
-/// perf trajectory is tracked by. `--quick`/`NNT_BENCH_FAST=1` shrink the
-/// connection count and request volume for CI smoke.
+/// PRNG); writes `BENCH_8.json` with p50/p99 latency (raw and normalized
+/// per in-flight request, so the two windows compare apples-to-apples) and
+/// req/s per mode plus the binary-over-JSON throughput speedup.
+/// `--quick`/`NNT_BENCH_FAST=1` shrink the connection count and request
+/// volume for CI smoke.
 fn cmd_bench_serve(args: &Args) -> Result<(), NnError> {
-    use nullanet_tiny::coordinator::frame;
-
     let quick = args.get_bool("quick") || std::env::var("NNT_BENCH_FAST").is_ok();
     let out_path = args.get_str("out", "BENCH_8.json");
     let conns = conf(args.get_usize("conns", if quick { 8 } else { 64 }))?;
     let reqs = conf(args.get_usize("reqs", if quick { 64 } else { 1024 }))?;
+    let serve_section = serve_sweep(conns, reqs)?;
+    let doc = Json::obj([
+        ("schema", Json::str("nullanet-bench")),
+        ("version", Json::int(1)),
+        ("bench_id", Json::int(8)),
+        ("quick", Json::Bool(quick)),
+        ("serve", serve_section),
+    ]);
+    std::fs::write(&out_path, format!("{}\n", doc.to_pretty_string()))
+        .map_err(|e| NnError::Config(format!("write {out_path}: {e}")))?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
+/// The shared loopback serving sweep behind both `bench --serve` (full
+/// volume, BENCH_8) and plain `bench` (shrunk ride-along section in
+/// BENCH_9). Returns the `"serve"` JSON section. Latencies are reported
+/// raw and normalized per in-flight request: the JSON mode runs strict
+/// request/reply (window 1) while the binary mode keeps `window` requests
+/// pipelined, so raw p50s are not comparable across modes — the
+/// `*_per_inflight_us` fields divide by each mode's recorded window.
+fn serve_sweep(conns: usize, reqs: usize) -> Result<Json, NnError> {
+    use nullanet_tiny::coordinator::frame;
+
     let window = 8usize;
 
     let model = random_model("bench-serve", 8, &[6, 4], 2, 1, 5);
@@ -829,27 +987,19 @@ fn cmd_bench_serve(args: &Args) -> Result<(), NnError> {
             ("req_per_sec", Json::float(rps)),
             ("p50_us", Json::float(p50)),
             ("p99_us", Json::float(p99)),
+            ("p50_per_inflight_us", Json::float(p50 / win as f64)),
+            ("p99_per_inflight_us", Json::float(p99 / win as f64)),
         ])
     };
-    let doc = Json::obj([
-        ("schema", Json::str("nullanet-bench")),
-        ("version", Json::int(1)),
-        ("bench_id", Json::int(8)),
-        ("quick", Json::Bool(quick)),
-        ("serve", Json::obj([
-            ("connections", Json::int(conns as i64)),
-            ("requests_per_conn", Json::int(reqs as i64)),
-            ("modes", Json::Arr(vec![
-                mode_row("json", "blocking", 1, json_rps, json_p50, json_p99),
-                mode_row("binary", accept_path, window, bin_rps, bin_p50, bin_p99),
-            ])),
-            ("speedup_binary_vs_json", Json::float(speedup)),
+    Ok(Json::obj([
+        ("connections", Json::int(conns as i64)),
+        ("requests_per_conn", Json::int(reqs as i64)),
+        ("modes", Json::Arr(vec![
+            mode_row("json", "blocking", 1, json_rps, json_p50, json_p99),
+            mode_row("binary", accept_path, window, bin_rps, bin_p50, bin_p99),
         ])),
-    ]);
-    std::fs::write(&out_path, format!("{}\n", doc.to_pretty_string()))
-        .map_err(|e| NnError::Config(format!("write {out_path}: {e}")))?;
-    println!("wrote {out_path}");
-    Ok(())
+        ("speedup_binary_vs_json", Json::float(speedup)),
+    ]))
 }
 
 fn cmd_emit(args: &Args) -> Result<(), NnError> {
