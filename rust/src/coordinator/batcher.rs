@@ -11,7 +11,11 @@
 //! a submit past [`BatchPolicy::max_depth`] is rejected as
 //! [`SubmitError::Overloaded`] (counted per model), so a saturated engine
 //! sheds load as typed overload replies instead of growing an unbounded
-//! queue. Built on the crate's sync shim
+//! queue. Requests may carry a **deadline**: an expired request is shed
+//! before evaluation (its reply sender dropped, its notify fired, counted
+//! in `deadline_expired`) and never burns a batch lane — and a queue at
+//! its depth cap purges expired entries before judging admission, so dead
+//! requests do not hold live slots. Built on the crate's sync shim
 //! (std-backed; no tokio offline) — with one or more dispatcher threads per
 //! [`crate::coordinator::router::Router`]. Under `--cfg nnt_model_check`
 //! the close-flush vs concurrent-submit protocol is exhaustively model
@@ -42,12 +46,25 @@ pub struct Request {
     pub features: Option<Vec<f64>>,
     /// Enqueue timestamp (for latency accounting).
     pub enqueued: Instant,
+    /// Optional completion deadline. Once passed, the batcher sheds the
+    /// request before evaluation: the reply sender is dropped (the waiting
+    /// receiver observes disconnection, which the submit side surfaces as
+    /// a typed `NnError::Deadline`) and `notify` still fires.
+    pub deadline: Option<Instant>,
     /// Completion channel: (predicted class, engine label).
     pub reply: Sender<Reply>,
     /// Invoked after `reply` is resolved (sent **or** dropped on engine
-    /// failure) so an event-loop caller wakes exactly when polling the
-    /// receiver will succeed. `None` for blocking callers.
+    /// failure or deadline shed) so an event-loop caller wakes exactly
+    /// when polling the receiver will succeed. `None` for blocking
+    /// callers.
     pub notify: Option<ReplyNotify>,
+}
+
+impl Request {
+    /// Whether this request's deadline (if any) has passed as of `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| d <= now)
+    }
 }
 
 /// Completion message.
@@ -198,8 +215,31 @@ impl Batcher {
         if s.closed {
             return Err(SubmitError::Closed(req));
         }
+        // A queue at its cap may be full of requests whose clients already
+        // gave up; purge expired entries before judging admission so dead
+        // requests never hold live slots.
+        let mut dead: Vec<Request> = Vec::new();
+        if s.queue.len() >= self.policy.max_depth {
+            let now = Instant::now();
+            if s.queue.iter().any(|r| r.expired(now)) {
+                let kept: VecDeque<Request> = s
+                    .queue
+                    .drain(..)
+                    .filter_map(|r| {
+                        if r.expired(now) {
+                            dead.push(r);
+                            None
+                        } else {
+                            Some(r)
+                        }
+                    })
+                    .collect();
+                s.queue = kept;
+            }
+        }
         if s.queue.len() >= self.policy.max_depth {
             drop(s);
+            self.shed(dead);
             if let Some(m) = &self.metrics {
                 m.rejected_overload.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             }
@@ -209,6 +249,7 @@ impl Batcher {
         let depth = s.queue.len();
         let full = depth >= self.policy.max_batch;
         drop(s);
+        self.shed(dead);
         if let Some(m) = &self.metrics {
             m.observe_queue_depth(depth as u64);
         }
@@ -230,26 +271,65 @@ impl Batcher {
         self.signal.notify_all();
     }
 
+    /// Shed requests whose deadline has passed: count them, drop each
+    /// reply sender (the receiver observes disconnection), and fire each
+    /// notify — always called with the queue lock released.
+    fn shed(&self, dead: Vec<Request>) {
+        if dead.is_empty() {
+            return;
+        }
+        if let Some(m) = &self.metrics {
+            m.deadline_expired
+                .fetch_add(dead.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        }
+        for r in dead {
+            let Request { reply, notify, .. } = r;
+            drop(reply);
+            if let Some(n) = notify {
+                n();
+            }
+        }
+    }
+
     /// Dispatcher side: wait for the next batch (or `None` once closed and
     /// drained). Blocks up to the age deadline of the oldest request. The
     /// drained requests are bit-packed into the returned [`Batch`] outside
-    /// the queue lock.
+    /// the queue lock; expired requests are shed here — after the drain,
+    /// before packing — so no dead request ever reaches an engine.
     pub fn next_batch(&self) -> Option<Batch> {
-        let requests = self.drain_requests()?;
-        let mut inputs = PackedBatch::with_capacity(self.input_bits, requests.len());
-        if self.input_bits <= 64 {
-            // Word-level fast path: a request's pre-binarized bits are one
-            // packed word (circuit inputs rarely exceed 64 bits), so the
-            // flush transpose scatters only the set bits.
-            for r in &requests {
-                inputs.push_sample_word(r.bits.words().first().copied().unwrap_or(0));
+        loop {
+            let drained = self.drain_requests()?;
+            let now = Instant::now();
+            let mut requests = Vec::with_capacity(drained.len());
+            let mut dead = Vec::new();
+            for r in drained {
+                if r.expired(now) {
+                    dead.push(r);
+                } else {
+                    requests.push(r);
+                }
             }
-        } else {
-            for r in &requests {
-                inputs.push_sample(&r.bits);
+            self.shed(dead);
+            if requests.is_empty() {
+                // Every drained request had expired; go back to waiting
+                // rather than hand the engine an empty batch.
+                continue;
             }
+            let mut inputs = PackedBatch::with_capacity(self.input_bits, requests.len());
+            if self.input_bits <= 64 {
+                // Word-level fast path: a request's pre-binarized bits are
+                // one packed word (circuit inputs rarely exceed 64 bits),
+                // so the flush transpose scatters only the set bits.
+                for r in &requests {
+                    inputs.push_sample_word(r.bits.words().first().copied().unwrap_or(0));
+                }
+            } else {
+                for r in &requests {
+                    inputs.push_sample(&r.bits);
+                }
+            }
+            return Some(Batch { inputs, requests });
         }
-        Some(Batch { inputs, requests })
     }
 
     fn drain_requests(&self) -> Option<Vec<Request>> {
@@ -301,10 +381,24 @@ mod tests {
     const BITS: usize = 3;
 
     fn req(pattern: usize) -> (Request, crate::util::sync::mpsc::Receiver<Reply>) {
+        req_deadline(pattern, None)
+    }
+
+    fn req_deadline(
+        pattern: usize,
+        deadline: Option<Instant>,
+    ) -> (Request, crate::util::sync::mpsc::Receiver<Reply>) {
         let (tx, rx) = channel();
         let bits = BitVec::from_bools((0..BITS).map(|i| (pattern >> i) & 1 == 1));
         (
-            Request { bits, features: None, enqueued: Instant::now(), reply: tx, notify: None },
+            Request {
+                bits,
+                features: None,
+                enqueued: Instant::now(),
+                deadline,
+                reply: tx,
+                notify: None,
+            },
             rx,
         )
     }
@@ -485,9 +579,89 @@ mod tests {
             bits: BitVec::zeros(BITS + 1),
             features: None,
             enqueued: Instant::now(),
+            deadline: None,
             reply: tx,
             notify: None,
         });
+    }
+
+    #[test]
+    fn expired_requests_are_shed_not_evaluated() {
+        let metrics = Arc::new(Metrics::new());
+        let b = Batcher::with_metrics(
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10), ..Default::default() },
+            BITS,
+            Some(Arc::clone(&metrics)),
+        );
+        let past = Instant::now() - Duration::from_millis(5);
+        let mut dead_rxs = Vec::new();
+        for i in 0..3 {
+            let (r, rx) = req_deadline(i, Some(past));
+            dead_rxs.push(rx);
+            b.submit(r).unwrap();
+        }
+        let (live, live_rx) = req(7);
+        b.submit(live).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests.len(), 1, "only the live request reaches the engine");
+        assert_eq!(batch.inputs.num_samples(), 1);
+        use std::sync::atomic::Ordering;
+        assert_eq!(metrics.deadline_expired.load(Ordering::Relaxed), 3);
+        // Shed requests' reply channels observe disconnection, never a class.
+        for rx in dead_rxs {
+            assert!(rx.try_recv().is_err(), "expired request must not get a reply");
+        }
+        drop(batch);
+        assert!(live_rx.try_recv().is_err(), "no reply sent yet — just not shed");
+    }
+
+    #[test]
+    fn shed_fires_the_notify_callback() {
+        let b = Batcher::new(
+            BatchPolicy { max_batch: 1, max_wait: Duration::from_secs(10), ..Default::default() },
+            BITS,
+        );
+        let fired = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let fired2 = Arc::clone(&fired);
+        let (tx, _rx) = channel();
+        let r = Request {
+            bits: BitVec::from_bools((0..BITS).map(|_| false)),
+            features: None,
+            enqueued: Instant::now(),
+            deadline: Some(Instant::now() - Duration::from_millis(1)),
+            reply: tx,
+            notify: Some(Arc::new(move || {
+                fired2.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            })),
+        };
+        b.submit(r).unwrap();
+        b.close();
+        assert!(b.next_batch().is_none(), "an all-expired drain sheds and keeps waiting");
+        assert_eq!(fired.load(std::sync::atomic::Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn expired_requests_do_not_count_against_max_depth() {
+        let metrics = Arc::new(Metrics::new());
+        let b = Batcher::with_metrics(
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(10), max_depth: 2 },
+            BITS,
+            Some(Arc::clone(&metrics)),
+        );
+        let past = Instant::now() - Duration::from_millis(5);
+        for i in 0..2 {
+            let (r, rx) = req_deadline(i, Some(past));
+            std::mem::forget(rx);
+            b.submit(r).unwrap();
+        }
+        assert_eq!(b.depth(), 2, "queue is at its cap");
+        // A live submit at the cap purges the dead entries and is admitted.
+        let (r, _rx) = req(5);
+        b.submit(r).expect("dead requests must not hold admission slots");
+        assert_eq!(b.depth(), 1, "two expired shed, one live admitted");
+        use std::sync::atomic::Ordering;
+        assert_eq!(metrics.deadline_expired.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.rejected_overload.load(Ordering::Relaxed), 0);
     }
 
     #[test]

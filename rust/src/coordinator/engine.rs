@@ -343,8 +343,25 @@ impl InferenceEngine for PackedLogicEngine {
 /// build failure); the router's `Policy::Native` arm then falls back to
 /// the SIMD interpreter ([`PackedLogicEngine`]) — the ladder documented in
 /// `rust/DESIGN.md` §Engine-API.
+///
+/// The ladder also holds **mid-serve**: the engine retains the compiled
+/// interpreter it was built from, and a native-library failure after
+/// construction (simulated by the `engine.eval` fault point; in the wild,
+/// an `.so` unlinked out from under a hot-swap) triggers a *permanent*
+/// per-model downgrade to the interpreter tier — counted in
+/// `fallback_downgrades`, labelled on every subsequent reply, and
+/// bit-exact by the differential suite — instead of erroring (and
+/// dropping) every subsequent batch.
 pub struct NativeCodegenEngine {
     lib: NativeLib,
+    /// The compiled interpreter the library was generated from — the
+    /// fallback tier, retained so a mid-serve downgrade needs no rebuild.
+    sim: CompiledNetlist,
+    /// Interpreter-tier scratch (unused until a downgrade).
+    scratch: SimScratch,
+    /// Set once by [`NativeCodegenEngine::downgrade`]; never cleared — a
+    /// library that failed once is not trusted again.
+    downgraded: bool,
     /// Output words, group-major, reused across batches.
     out_words: Vec<u64>,
     /// `(LUTs before, LUTs after)` optimization — the generated code
@@ -384,13 +401,34 @@ impl NativeCodegenEngine {
             }
         }
         let s = sim.opt_stats();
+        let scratch = sim.make_scratch();
         Ok(NativeCodegenEngine {
             lib,
+            scratch,
+            downgraded: false,
             out_words: Vec::new(),
             luts: (s.luts_before, s.luts_after),
             model,
             metrics,
+            sim,
         })
+    }
+
+    /// Whether this engine has permanently dropped to the interpreter tier.
+    pub fn is_downgraded(&self) -> bool {
+        self.downgraded
+    }
+
+    /// Permanently drop this model to the interpreter tier. Idempotent in
+    /// effect but only ever called on the first native failure.
+    fn downgrade(&mut self, why: &str) {
+        self.downgraded = true;
+        self.metrics.fallback_downgrades.fetch_add(1, Ordering::Relaxed);
+        eprintln!(
+            "native engine: library failure mid-serve ({why}); model '{}' permanently \
+             downgraded to the interpreter tier",
+            self.model.name
+        );
     }
 
     fn classify(&mut self, batch: &PackedBatch) -> Result<Vec<usize>, EngineError> {
@@ -402,6 +440,22 @@ impl NativeCodegenEngine {
             )));
         }
         let n = batch.num_samples();
+        if !self.downgraded && crate::util::fault::should_fail("engine.eval") {
+            // The only runtime failure a straight-line `.so` can exhibit is
+            // the catastrophic kind (unmapped library, torn relocation) that
+            // a test cannot survive observing directly — so the fault point
+            // stands in for it here, and the response is the real one: stop
+            // trusting the library, permanently.
+            self.downgrade("injected fault at engine.eval");
+        }
+        if self.downgraded {
+            // Interpreter tier: same netlist, same packing, bit-exact with
+            // the native library by the differential suite.
+            self.sim.run_packed_into(batch, &mut self.scratch, &mut self.out_words);
+            let preds = classify_packed_words(&self.model, &self.out_words, n);
+            self.metrics.logic_requests.fetch_add(n as u64, Ordering::Relaxed);
+            return Ok(preds);
+        }
         let groups = batch.num_groups();
         let no = self.lib.num_outputs();
         self.out_words.clear();
@@ -416,7 +470,13 @@ impl NativeCodegenEngine {
 
 impl InferenceEngine for NativeCodegenEngine {
     fn name(&self) -> &'static str {
-        "native"
+        // The downgrade is visible on every reply, not only in the
+        // counters: clients see which tier actually served them.
+        if self.downgraded {
+            "native>interp"
+        } else {
+            "native"
+        }
     }
 
     fn classify_packed_batch(
@@ -838,6 +898,60 @@ mod tests {
         // The shadow interpreter saw every sample and never disagreed.
         assert_eq!(metrics.disagreements.load(Ordering::Relaxed), 0);
         assert_eq!(metrics.shadow_failures.load(Ordering::Relaxed), 0);
+        let _ = std::fs::remove_file(&so);
+        let _ = std::fs::remove_file(format!("{so}.rs"));
+        let _ = std::fs::remove_file(format!("{so}.meta"));
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // spawns rustc and dlopens — not a Miri workload
+    fn native_downgrade_is_permanent_visible_and_bit_exact() {
+        if !codegen::rustc_available() {
+            eprintln!("skipping: rustc or dlopen unavailable on this host");
+            return;
+        }
+        let model = random_model("dwn", 6, &[5, 3], 2, 1, 31);
+        let r = run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None)
+            .unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let model = Arc::new(model);
+        let so = std::env::temp_dir()
+            .join(format!("nnt-engine-downgrade-{}.so", std::process::id()));
+        let so = so.to_string_lossy().into_owned();
+        let mut native = NativeCodegenEngine::new(
+            Arc::clone(&model),
+            &r.circuit.netlist,
+            Some(&so),
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+        let mut batch = PackedBatch::with_capacity(model.input_bits(), 64);
+        let xs: Vec<Vec<f64>> = (0..64)
+            .map(|i| (0..6).map(|j| ((i * 7 + j) as f64 * 0.17).cos()).collect())
+            .collect();
+        for x in &xs {
+            let codes = crate::nn::eval::quantize_input(&model, x);
+            let bits = crate::nn::eval::codes_to_bitvec(&codes, model.input_quant.bits);
+            batch.push_sample(&bits);
+        }
+        let before = native.classify_packed_batch(&batch).unwrap();
+        assert_eq!(native.name(), "native");
+        assert!(!native.is_downgraded());
+
+        // Force the mid-serve downgrade directly (the fault-injected path
+        // is exercised by the chaos suite under --cfg nnt_fault).
+        native.downgrade("test-forced");
+        assert!(native.is_downgraded());
+        assert_eq!(native.name(), "native>interp", "tier must be visible per-reply");
+        assert_eq!(metrics.fallback_downgrades.load(Ordering::Relaxed), 1);
+
+        // Interpreter tier serves the same batch bit-exactly, permanently.
+        for _ in 0..2 {
+            let after = native.classify_packed_batch(&batch).unwrap();
+            assert_eq!(before, after, "downgrade must stay bit-exact");
+            assert!(native.is_downgraded(), "downgrade is permanent");
+        }
+        assert_eq!(metrics.fallback_downgrades.load(Ordering::Relaxed), 1);
         let _ = std::fs::remove_file(&so);
         let _ = std::fs::remove_file(format!("{so}.rs"));
         let _ = std::fs::remove_file(format!("{so}.meta"));

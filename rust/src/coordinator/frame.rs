@@ -15,6 +15,7 @@
 //! 1      1    version     0x01
 //! 2      1    type        1 = CLASSIFY_REQ   2 = CLASSIFY_RESP
 //!                         3 = ERROR          4 = OVERLOAD
+//!                         5 = DEADLINE       6 = CLASSIFY_REQ_DL
 //! 3      1    name_len M  model-name bytes (0 = default model)
 //! 4      4    payload_len P = bytes after this 12-byte header
 //! 8      2    samples S
@@ -22,8 +23,10 @@
 //! 12     M    model name  UTF-8
 //! 12+M   …    body        REQ:  S × ceil(B/64) × 8 bytes of u64 words,
 //!                               sample-major, LSB-first within a word
+//!                         REQ_DL: u32 deadline budget in ms (LE), then
+//!                               the same word layout as REQ
 //!                         RESP: S × 2 bytes of u16 class ids
-//!                         ERROR/OVERLOAD: UTF-8 message
+//!                         ERROR/OVERLOAD/DEADLINE: UTF-8 message
 //! ```
 //!
 //! `P` must equal `M + body-size` exactly; a frame longer than
@@ -87,6 +90,15 @@ pub const TYPE_ERROR: u8 = 3;
 /// from [`TYPE_ERROR`] so clients can back off instead of treating
 /// overload as a malformed request.
 pub const TYPE_OVERLOAD: u8 = 4;
+/// Typed deadline rejection: the request's latency budget elapsed before
+/// an engine evaluated it, so it was shed unanswered. Distinct from
+/// [`TYPE_OVERLOAD`] — retrying an expired request verbatim is pointless;
+/// the client should raise its budget or reduce load.
+pub const TYPE_DEADLINE: u8 = 5;
+/// Classify request carrying a deadline budget: identical to
+/// [`TYPE_CLASSIFY_REQ`] except the body starts with a `u32`
+/// little-endian millisecond budget before the sample words.
+pub const TYPE_CLASSIFY_REQ_DL: u8 = 6;
 
 /// Words per sample for a `bits`-wide circuit input.
 #[inline]
@@ -99,14 +111,26 @@ pub fn words_per_sample(bits: u16) -> usize {
 pub enum Frame {
     /// Classify `words.len() / ceil(bits/64)` samples on `model` (or the
     /// default). `words` is sample-major: each sample's `ceil(bits/64)`
-    /// LSB-first words are contiguous.
-    ClassifyReq { model: Option<String>, bits: u16, words: Vec<u64> },
+    /// LSB-first words are contiguous. `deadline_ms` is the optional
+    /// latency budget from a [`TYPE_CLASSIFY_REQ_DL`] frame; requests
+    /// still queued when it elapses are shed with a [`Frame::Deadline`]
+    /// reply instead of being evaluated late.
+    ClassifyReq {
+        model: Option<String>,
+        bits: u16,
+        words: Vec<u64>,
+        deadline_ms: Option<u32>,
+    },
     /// Per-sample predicted classes, in request sample order.
     ClassifyResp { classes: Vec<u16> },
     /// Protocol or engine error.
     Error { message: String },
     /// Admission-control rejection (queue full) — resubmit after backoff.
     Overload { message: String },
+    /// Deadline rejection — the request's budget elapsed before
+    /// evaluation. Raise the budget or reduce load; a verbatim retry of
+    /// an already-late request only wastes queue capacity.
+    Deadline { message: String },
 }
 
 impl Frame {
@@ -225,17 +249,20 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, FrameError> {
     // Validate the length arithmetic from header fields alone — before
     // waiting for (or trusting) the payload bytes.
     let body = match ftype {
-        TYPE_CLASSIFY_REQ => {
+        TYPE_CLASSIFY_REQ | TYPE_CLASSIFY_REQ_DL => {
             if samples == 0 || bits == 0 {
                 return Err(FrameError::EmptyRequest);
             }
             if samples as usize > MAX_SAMPLES {
                 return Err(FrameError::TooManySamples(samples));
             }
-            samples as usize * words_per_sample(bits) * 8
+            let prefix = if ftype == TYPE_CLASSIFY_REQ_DL { 4 } else { 0 };
+            prefix + samples as usize * words_per_sample(bits) * 8
         }
         TYPE_CLASSIFY_RESP => samples as usize * 2,
-        TYPE_ERROR | TYPE_OVERLOAD => payload.saturating_sub(name_len),
+        TYPE_ERROR | TYPE_OVERLOAD | TYPE_DEADLINE => {
+            payload.saturating_sub(name_len)
+        }
         t => return Err(FrameError::BadType(t)),
     };
     let expected = name_len + body;
@@ -249,7 +276,7 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, FrameError> {
     let name_bytes = &buf[HEADER_LEN..HEADER_LEN + name_len];
     let body_bytes = &buf[HEADER_LEN + name_len..total];
     let frame = match ftype {
-        TYPE_CLASSIFY_REQ => {
+        TYPE_CLASSIFY_REQ | TYPE_CLASSIFY_REQ_DL => {
             let model = if name_len == 0 {
                 None
             } else {
@@ -259,9 +286,14 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, FrameError> {
                         .to_string(),
                 )
             };
+            let (deadline_ms, word_bytes) = if ftype == TYPE_CLASSIFY_REQ_DL {
+                (Some(u32_le(&body_bytes[..4])), &body_bytes[4..])
+            } else {
+                (None, body_bytes)
+            };
             let wps = words_per_sample(bits);
             let mut words = Vec::with_capacity(samples as usize * wps);
-            for chunk in body_bytes.chunks_exact(8) {
+            for chunk in word_bytes.chunks_exact(8) {
                 words.push(u64::from_le_bytes(chunk.try_into().expect("chunks_exact(8)")));
             }
             // The batcher's word-scatter fast path assumes the BitVec tail
@@ -275,7 +307,7 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, FrameError> {
                     }
                 }
             }
-            Frame::ClassifyReq { model, bits, words }
+            Frame::ClassifyReq { model, bits, words, deadline_ms }
         }
         TYPE_CLASSIFY_RESP => {
             let classes =
@@ -284,10 +316,10 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, FrameError> {
         }
         t => {
             let message = String::from_utf8_lossy(body_bytes).into_owned();
-            if t == TYPE_ERROR {
-                Frame::Error { message }
-            } else {
-                Frame::Overload { message }
+            match t {
+                TYPE_ERROR => Frame::Error { message },
+                TYPE_OVERLOAD => Frame::Overload { message },
+                _ => Frame::Deadline { message },
             }
         }
     };
@@ -312,6 +344,27 @@ fn header(ftype: u8, name_len: u8, payload: u32, samples: u16, bits: u16) -> [u8
 /// (encoders are in-process clients/tests — a wire peer can only produce
 /// [`FrameError`]s, never panics).
 pub fn encode_classify_req(model: Option<&str>, bits: u16, words: &[u64]) -> Vec<u8> {
+    encode_req(model, bits, words, None)
+}
+
+/// Encode a classify request carrying a `deadline_ms` latency budget
+/// ([`TYPE_CLASSIFY_REQ_DL`]). Same layout and panics as
+/// [`encode_classify_req`] plus the 4-byte budget prefix.
+pub fn encode_classify_req_deadline(
+    model: Option<&str>,
+    bits: u16,
+    words: &[u64],
+    deadline_ms: u32,
+) -> Vec<u8> {
+    encode_req(model, bits, words, Some(deadline_ms))
+}
+
+fn encode_req(
+    model: Option<&str>,
+    bits: u16,
+    words: &[u64],
+    deadline_ms: Option<u32>,
+) -> Vec<u8> {
     assert!(bits > 0, "encode_classify_req: zero-bit samples");
     let wps = words_per_sample(bits);
     assert_eq!(words.len() % wps, 0, "words must be a whole number of samples");
@@ -322,16 +375,25 @@ pub fn encode_classify_req(model: Option<&str>, bits: u16, words: &[u64]) -> Vec
     );
     let name = model.unwrap_or("").as_bytes();
     assert!(name.len() <= u8::MAX as usize, "model name exceeds 255 bytes");
-    let payload = name.len() + words.len() * 8;
+    let prefix = if deadline_ms.is_some() { 4 } else { 0 };
+    let payload = name.len() + prefix + words.len() * 8;
+    let ftype = if deadline_ms.is_some() {
+        TYPE_CLASSIFY_REQ_DL
+    } else {
+        TYPE_CLASSIFY_REQ
+    };
     let mut out = Vec::with_capacity(HEADER_LEN + payload);
     out.extend_from_slice(&header(
-        TYPE_CLASSIFY_REQ,
+        ftype,
         name.len() as u8,
         payload as u32,
         samples as u16,
         bits,
     ));
     out.extend_from_slice(name);
+    if let Some(ms) = deadline_ms {
+        out.extend_from_slice(&ms.to_le_bytes());
+    }
     for w in words {
         out.extend_from_slice(&w.to_le_bytes());
     }
@@ -373,6 +435,12 @@ pub fn encode_error(message: &str) -> Vec<u8> {
 /// Encode a typed overload (admission-control) rejection frame.
 pub fn encode_overload(message: &str) -> Vec<u8> {
     encode_message(TYPE_OVERLOAD, message)
+}
+
+/// Encode a typed deadline rejection frame — the request's latency
+/// budget elapsed while it was still queued, so it was shed unevaluated.
+pub fn encode_deadline(message: &str) -> Vec<u8> {
+    encode_message(TYPE_DEADLINE, message)
 }
 
 /// Scatter a decoded classify request straight into a [`PackedBatch`] —
@@ -424,10 +492,31 @@ mod tests {
             let (frame, consumed) = decode(&enc).unwrap().expect("complete frame");
             assert_eq!(consumed, enc.len());
             match frame {
-                Frame::ClassifyReq { model, bits: b, words: w } => {
+                Frame::ClassifyReq { model, bits: b, words: w, deadline_ms } => {
                     assert_eq!(model.as_deref(), Some("jsc-s"));
                     assert_eq!(b, bits);
                     assert_eq!(w, words);
+                    assert_eq!(deadline_ms, None);
+                }
+                f => panic!("wrong frame {f:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn deadline_classify_req_round_trips() {
+        for (samples, bits, budget) in [(1usize, 6u16, 0u32), (3, 70, 25), (2, 64, u32::MAX)] {
+            let words = req_words(samples, bits, 99);
+            let enc = encode_classify_req_deadline(Some("jsc-s"), bits, &words, budget);
+            assert_eq!(enc[2], TYPE_CLASSIFY_REQ_DL);
+            let (frame, consumed) = decode(&enc).unwrap().expect("complete frame");
+            assert_eq!(consumed, enc.len());
+            match frame {
+                Frame::ClassifyReq { model, bits: b, words: w, deadline_ms } => {
+                    assert_eq!(model.as_deref(), Some("jsc-s"));
+                    assert_eq!(b, bits);
+                    assert_eq!(w, words);
+                    assert_eq!(deadline_ms, Some(budget));
                 }
                 f => panic!("wrong frame {f:?}"),
             }
@@ -478,6 +567,13 @@ mod tests {
         let enc = encode_overload("queue full (depth 64)");
         let (f, _) = decode(&enc).unwrap().unwrap();
         assert_eq!(f, Frame::Overload { message: "queue full (depth 64)".into() });
+
+        let enc = encode_deadline("deadline exceeded: shed after 5 ms");
+        let (f, _) = decode(&enc).unwrap().unwrap();
+        assert_eq!(
+            f,
+            Frame::Deadline { message: "deadline exceeded: shed after 5 ms".into() }
+        );
     }
 
     #[test]

@@ -130,6 +130,12 @@ pub struct Metrics {
     /// Requests that arrived on a connection that already had requests in
     /// flight — the event loop's per-connection pipelining at work.
     pub pipelined_requests: AtomicU64,
+    /// Requests shed because their deadline expired before evaluation —
+    /// the batcher dropped them without burning a batch slot.
+    pub deadline_expired: AtomicU64,
+    /// Times this model's engine dropped a tier on the native→SIMD→scalar
+    /// fallback ladder (at construction or permanently mid-serve).
+    pub fallback_downgrades: AtomicU64,
 }
 
 impl Metrics {
@@ -144,13 +150,18 @@ impl Metrics {
         self.queue_depth_high_watermark.fetch_max(depth, Ordering::Relaxed);
     }
 
-    /// Render a human-readable report.
+    /// Render a human-readable report. The resilience line joins this
+    /// model's own shed/downgrade counters with the two process-wide
+    /// recovery counters (store restores and lock-poison heals) so one
+    /// read shows every degradation the stack has absorbed.
     pub fn report(&self) -> String {
         format!(
             "requests: logic={} numeric={} batches={} disagreements={} failures={} \
              shadow-failures={}\n\
              admission: rejected_overload={} queue_depth_high_watermark={} \
              pipelined_requests={}\n\
+             resilience: deadline_expired={} fallback_downgrades={} \
+             store_recoveries={} poison_recoveries={}\n\
              request latency: {}\n\
              batch latency:   {}",
             self.logic_requests.load(Ordering::Relaxed),
@@ -162,6 +173,10 @@ impl Metrics {
             self.rejected_overload.load(Ordering::Relaxed),
             self.queue_depth_high_watermark.load(Ordering::Relaxed),
             self.pipelined_requests.load(Ordering::Relaxed),
+            self.deadline_expired.load(Ordering::Relaxed),
+            self.fallback_downgrades.load(Ordering::Relaxed),
+            crate::flow::store::store_recoveries(),
+            crate::util::sync::poison_recoveries(),
             self.request_latency.summary(),
             self.batch_latency.summary(),
         )
@@ -275,5 +290,23 @@ mod tests {
         assert!(r.contains("rejected_overload=2"));
         assert!(r.contains("queue_depth_high_watermark=64"));
         assert!(r.contains("pipelined_requests=9"));
+    }
+
+    #[test]
+    fn resilience_counters_surface_in_report() {
+        let m = Metrics::new();
+        m.deadline_expired.fetch_add(4, Ordering::Relaxed);
+        m.fallback_downgrades.fetch_add(1, Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("resilience: deadline_expired=4 fallback_downgrades=1"));
+        // The process-wide recovery counters are monotone, so pin the key
+        // names, not the values (other tests may have bumped them).
+        assert!(r.contains("store_recoveries="));
+        assert!(r.contains("poison_recoveries="));
+        // The resilience line sits between admission and latency lines.
+        let lines: Vec<&str> = r.lines().collect();
+        assert!(lines[1].starts_with("admission:"));
+        assert!(lines[2].starts_with("resilience:"));
+        assert!(lines[3].starts_with("request latency:"));
     }
 }

@@ -38,6 +38,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::coordinator::batcher::{BatchPolicy, Reply, ReplyNotify};
 use crate::coordinator::router::{Policy, Router, RouterBuilder, SubmitRejection};
@@ -341,17 +342,21 @@ impl ModelRegistry {
         name: Option<&str>,
         features: &[f64],
     ) -> Result<mpsc::Receiver<Reply>, NnError> {
-        self.classify_with(name, features, None, false)
+        self.classify_with(name, features, None, None, false)
     }
 
     /// [`classify`](Self::classify) with the nonblocking front end's extra
-    /// context: `notify` fires once the reply is resolved (sent or
-    /// dropped), and `pipelined` marks a request that arrived on a
-    /// connection with replies still in flight (counted per model).
+    /// context: `deadline` rides the request into the batcher, which sheds
+    /// it unevaluated once past (the receiver observes a disconnect that
+    /// the submitter surfaces as [`NnError::Deadline`]); `notify` fires
+    /// once the reply is resolved (sent, dropped, or shed); `pipelined`
+    /// marks a request that arrived on a connection with replies still in
+    /// flight (counted per model).
     pub fn classify_with(
         &self,
         name: Option<&str>,
         features: &[f64],
+        deadline: Option<Instant>,
         notify: Option<ReplyNotify>,
         pipelined: bool,
     ) -> Result<mpsc::Receiver<Reply>, NnError> {
@@ -384,7 +389,7 @@ impl ModelRegistry {
                 }
                 _ => router.binarize(features),
             };
-            match router.try_submit_bits(bits, features, notify.clone()) {
+            match router.try_submit_bits(bits, features, deadline, notify.clone()) {
                 Ok(rx) => {
                     Self::count_pipelined(&router, pipelined);
                     return Ok(rx);
@@ -420,6 +425,7 @@ impl ModelRegistry {
         &self,
         name: Option<&str>,
         bits: BitVec,
+        deadline: Option<Instant>,
         notify: Option<ReplyNotify>,
         pipelined: bool,
     ) -> Result<mpsc::Receiver<Reply>, NnError> {
@@ -441,7 +447,7 @@ impl ModelRegistry {
                     bits.len()
                 )));
             }
-            match router.try_submit_bits(bits, &[], notify.clone()) {
+            match router.try_submit_bits(bits, &[], deadline, notify.clone()) {
                 Ok(rx) => {
                     Self::count_pipelined(&router, pipelined);
                     return Ok(rx);
@@ -726,14 +732,14 @@ mod tests {
         // Pack the way a binary-frame client would, then submit bits only.
         let bits = reg.get(Some("a")).unwrap().binarize(&x);
         let reply = reg
-            .classify_bits(Some("a"), bits, None, false)
+            .classify_bits(Some("a"), bits, None, None, false)
             .unwrap()
             .recv_timeout(Duration::from_secs(5))
             .unwrap();
         assert_eq!(reply.class, crate::nn::eval::classify(&a, &x));
         // Width mismatches are typed protocol errors, not panics.
         let err = reg
-            .classify_bits(Some("a"), BitVec::zeros(3), None, false)
+            .classify_bits(Some("a"), BitVec::zeros(3), None, None, false)
             .unwrap_err();
         assert!(err.to_string().contains("circuit-input bits"), "{err}");
         reg.shutdown_all();
@@ -761,10 +767,10 @@ mod tests {
             .build()
             .unwrap();
         let reg = ModelRegistry::with_default("a", router);
-        let rx1 = reg.classify_with(Some("a"), &[0.1; 5], None, false).unwrap();
-        let rx2 = reg.classify_with(Some("a"), &[0.2; 5], None, false).unwrap();
+        let rx1 = reg.classify_with(Some("a"), &[0.1; 5], None, None, false).unwrap();
+        let rx2 = reg.classify_with(Some("a"), &[0.2; 5], None, None, false).unwrap();
         let err = reg
-            .classify_with(Some("a"), &[0.3; 5], None, false)
+            .classify_with(Some("a"), &[0.3; 5], None, None, false)
             .expect_err("third submit must trip the depth-2 cap");
         assert!(matches!(&err, NnError::Overload(_)), "{err}");
         assert!(err.to_string().contains("depth cap (2)"), "{err}");

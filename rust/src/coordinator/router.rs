@@ -317,12 +317,16 @@ impl RouterBuilder {
                         // (no rustc, dlopen stub, build error) downgrades
                         // to the SIMD interpreter with a notice — the
                         // router still comes up and serves bit-identical
-                        // results, just slower.
+                        // results, just slower. The downgrade is counted so
+                        // the metrics report shows which tier is serving.
                         Err(EngineError::Construction(msg)) => {
                             eprintln!(
                                 "native engine unavailable ({msg}); falling back to the \
                                  interpreter engine"
                             );
+                            metrics_for_engine
+                                .fallback_downgrades
+                                .fetch_add(1, Ordering::Relaxed);
                             Ok(logic(metrics_for_engine)?)
                         }
                         Err(e) => Err(e),
@@ -489,7 +493,7 @@ impl Router {
         // Move, don't copy: an engine that wants the raw features takes the
         // caller's own Vec (the pre-registry zero-copy behavior).
         let features = self.wants_features.then_some(features);
-        match self.enqueue(bits, features, None) {
+        match self.enqueue(bits, features, None, None) {
             Ok(rx) => rx,
             Err(SubmitError::Overloaded(_)) => {
                 panic!("submit on an overloaded router (use try_submit_bits for typed backpressure)")
@@ -508,7 +512,7 @@ impl Router {
     /// The slice is copied only when the engine retains raw features.
     pub fn try_submit(&self, features: &[f64]) -> Option<mpsc::Receiver<Reply>> {
         let bits = self.binarize(features);
-        self.try_submit_bits(bits, features, None).ok()
+        self.try_submit_bits(bits, features, None, None).ok()
     }
 
     /// Submit one request whose circuit-input bits are **already
@@ -520,20 +524,27 @@ impl Router {
     /// ISSUE 5), [`SubmitRejection::Overloaded`] is admission control —
     /// the caller surfaces a typed overload reply instead of retrying.
     /// `features` is copied only when the engine retains raw feature
-    /// vectors. `notify` (if any) fires once the reply is resolved — sent
-    /// or dropped — so a nonblocking caller can park on its event loop.
-    /// The bit width must match this router's circuit (the registry checks
+    /// vectors. `deadline` (if any) rides the request into the batcher:
+    /// once it passes, the batcher sheds the request without evaluation
+    /// and the receiver observes a disconnect — the submitter, which knows
+    /// the deadline it set, surfaces that as [`NnError::Deadline`].
+    /// `notify` (if any) fires once the reply is resolved — sent, dropped,
+    /// or shed — so a nonblocking caller can park on its event loop. The
+    /// bit width must match this router's circuit (the registry checks
     /// compatibility before reuse).
     pub fn try_submit_bits(
         &self,
         bits: BitVec,
         features: &[f64],
+        deadline: Option<Instant>,
         notify: Option<ReplyNotify>,
     ) -> Result<mpsc::Receiver<Reply>, SubmitRejection> {
         let features = self.wants_features.then(|| features.to_vec());
-        self.enqueue(bits, features, notify).map_err(|rejected| match rejected {
-            SubmitError::Closed(req) => SubmitRejection::Closed(req.bits),
-            SubmitError::Overloaded(req) => SubmitRejection::Overloaded(req.bits),
+        self.enqueue(bits, features, deadline, notify).map_err(|rejected| {
+            match rejected {
+                SubmitError::Closed(req) => SubmitRejection::Closed(req.bits),
+                SubmitError::Overloaded(req) => SubmitRejection::Overloaded(req.bits),
+            }
         })
     }
 
@@ -566,10 +577,18 @@ impl Router {
         &self,
         bits: BitVec,
         features: Option<Vec<f64>>,
+        deadline: Option<Instant>,
         notify: Option<ReplyNotify>,
     ) -> Result<mpsc::Receiver<Reply>, SubmitError> {
         let (tx, rx) = mpsc::channel();
-        let req = Request { bits, features, enqueued: Instant::now(), reply: tx, notify };
+        let req = Request {
+            bits,
+            features,
+            enqueued: Instant::now(),
+            deadline,
+            reply: tx,
+            notify,
+        };
         self.batcher.submit(req).map(|_| rx)
     }
 
@@ -789,7 +808,7 @@ mod tests {
         let bits = router.binarize(&x);
         // Live router: pre-binarized bits serve normally, bit-exact.
         let rx = router
-            .try_submit_bits(bits.clone(), &x, None)
+            .try_submit_bits(bits.clone(), &x, None, None)
             .expect("live router accepts");
         let reply = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(reply.class, crate::nn::eval::classify(&model, &x));
@@ -798,9 +817,35 @@ mod tests {
         // without re-binarizing the features.
         router.shutdown();
         let back = router
-            .try_submit_bits(bits.clone(), &x, None)
+            .try_submit_bits(bits.clone(), &x, None, None)
             .expect_err("closed router rejects");
         assert_eq!(back, SubmitRejection::Closed(bits), "bits must come back for a free resubmit");
+    }
+
+    #[test]
+    fn expired_deadline_sheds_and_disconnects_the_receiver() {
+        let (router, model) = make_router(Policy::Logic);
+        let x: Vec<f64> = (0..6).map(|j| (j as f64 * 0.6).sin()).collect();
+        let bits = router.binarize(&x);
+        // A deadline already in the past: the batcher sheds the request
+        // before evaluation, so the receiver observes a disconnect instead
+        // of a reply. A live deadline serves normally.
+        let dead = Instant::now() - Duration::from_millis(5);
+        let rx = router
+            .try_submit_bits(bits.clone(), &x, Some(dead), None)
+            .expect("admission still accepts; shedding happens at flush");
+        assert!(
+            rx.recv_timeout(Duration::from_secs(5)).is_err(),
+            "expired request must be shed, not answered"
+        );
+        let live = Instant::now() + Duration::from_secs(30);
+        let rx = router
+            .try_submit_bits(bits, &x, Some(live), None)
+            .expect("live router accepts");
+        let reply = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(reply.class, crate::nn::eval::classify(&model, &x));
+        assert_eq!(router.metrics().deadline_expired.load(Ordering::Relaxed), 1);
+        router.shutdown();
     }
 
     #[test]
@@ -815,7 +860,7 @@ mod tests {
             f.fetch_add(1, Ordering::Relaxed);
         });
         let rx = router
-            .try_submit_bits(bits, &x, Some(notify))
+            .try_submit_bits(bits, &x, None, Some(notify))
             .expect("live router accepts");
         let _ = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         // The notify is ordered after the send, so the receiver can observe

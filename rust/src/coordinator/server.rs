@@ -61,8 +61,9 @@
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::AtomicU64;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{Reply, ReplyNotify};
 use crate::coordinator::frame;
@@ -90,6 +91,45 @@ const HIGH_WATER: usize = 1 << 20;
 /// Unflushed reply bytes below which a paused connection resumes reading.
 const LOW_WATER: usize = 64 << 10;
 
+/// Server-wide default latency budget in milliseconds, applied to
+/// classify requests that carry no explicit `deadline_ms`. Zero means no
+/// default. Set once by the CLI (`--deadline-ms`) before serving starts;
+/// a per-request budget always wins over the default.
+static DEFAULT_DEADLINE_MS: AtomicU64 = AtomicU64::new(0);
+
+/// Install the server-wide default deadline budget (`--deadline-ms`).
+/// `None` or `Some(0)` clears it.
+pub fn set_default_deadline_ms(ms: Option<u64>) {
+    DEFAULT_DEADLINE_MS.store(ms.unwrap_or(0), Ordering::Relaxed);
+}
+
+/// Resolve a request's absolute deadline from its explicit budget or the
+/// server-wide default, anchored at request arrival (now), not at
+/// evaluation — queueing time counts against the budget, which is the
+/// whole point of shedding.
+fn resolve_deadline(explicit_ms: Option<u64>) -> Option<Instant> {
+    let ms = match explicit_ms {
+        Some(ms) => Some(ms),
+        None => match DEFAULT_DEADLINE_MS.load(Ordering::Relaxed) {
+            0 => None,
+            d => Some(d),
+        },
+    };
+    ms.map(|ms| Instant::now() + Duration::from_millis(ms))
+}
+
+/// Classify a dropped reply channel: a disconnect after the request's
+/// deadline passed is the batcher shedding it — report the typed
+/// deadline error, not a generic timeout.
+fn shed_past_deadline(deadline: Option<Instant>) -> Option<NnError> {
+    match deadline {
+        Some(d) if Instant::now() >= d => Some(NnError::Deadline(
+            "request shed before evaluation".to_string(),
+        )),
+        _ => None,
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Shared request handling (both accept paths, both protocols)
 // ---------------------------------------------------------------------------
@@ -99,7 +139,11 @@ const LOW_WATER: usize = 64 << 10;
 /// choose blocking (`recv_timeout`) or pipelined (pending-queue) delivery.
 enum Parsed {
     Reply(Json),
-    Classify { model: Option<String>, features: Vec<f64> },
+    Classify {
+        model: Option<String>,
+        features: Vec<f64>,
+        deadline_ms: Option<u64>,
+    },
 }
 
 fn parse_request(
@@ -127,7 +171,18 @@ fn parse_request(
         .map_err(|e| e.to_string())?
         .to_f64_vec()
         .map_err(|e| format!("features: {e}"))?;
-    Ok(Parsed::Classify { model, features })
+    // Strict like `model`: a deadline the server cannot honor as given
+    // must be a protocol error, not a silently unbounded request.
+    let deadline_ms = match req.get("deadline_ms") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            let ms = v.as_i64().filter(|ms| *ms >= 0).ok_or_else(|| {
+                "deadline_ms must be a non-negative integer".to_string()
+            })?;
+            Some(ms as u64)
+        }
+    };
+    Ok(Parsed::Classify { model, features, deadline_ms })
 }
 
 /// Admin commands: registry introspection, live load/unload, shutdown.
@@ -239,15 +294,20 @@ fn json_reply(reply: &Reply) -> Json {
 
 /// Render a classify error; admission-control rejections carry an explicit
 /// `"overloaded": true` so JSON clients can back off instead of treating
-/// the rejection as a malformed request.
+/// the rejection as a malformed request, and deadline sheds carry
+/// `"deadline_exceeded": true` so clients know a verbatim retry of an
+/// already-late request is pointless.
 fn json_error(err: &NnError) -> Json {
-    if matches!(err, NnError::Overload(_)) {
-        Json::obj([
+    match err {
+        NnError::Overload(_) => Json::obj([
             ("error", Json::str(err.to_string())),
             ("overloaded", Json::Bool(true)),
-        ])
-    } else {
-        Json::obj([("error", Json::str(err.to_string()))])
+        ]),
+        NnError::Deadline(_) => Json::obj([
+            ("error", Json::str(err.to_string())),
+            ("deadline_exceeded", Json::Bool(true)),
+        ]),
+        _ => Json::obj([("error", Json::str(err.to_string()))]),
     }
 }
 
@@ -266,21 +326,22 @@ fn oversized_line_reply() -> Vec<u8> {
 
 /// Serve one decoded binary frame synchronously (blocking path). The
 /// registry enforces model/width invariants; overload comes back as the
-/// typed overload frame.
+/// typed overload frame and a deadline shed as the typed deadline frame.
 fn respond_frame_blocking(
     f: frame::Frame,
     registry: &ModelRegistry,
     pipelined: bool,
 ) -> Vec<u8> {
-    let frame::Frame::ClassifyReq { model, bits, words } = f else {
+    let frame::Frame::ClassifyReq { model, bits, words, deadline_ms } = f else {
         return frame::encode_error("unexpected frame type from client");
     };
+    let deadline = resolve_deadline(deadline_ms.map(u64::from));
     let wps = frame::words_per_sample(bits);
     let samples = words.len() / wps;
     let mut rxs = Vec::with_capacity(samples);
     for s in 0..samples {
         let sample = frame::sample_bits(bits, &words, s);
-        match registry.classify_bits(model.as_deref(), sample, None, pipelined) {
+        match registry.classify_bits(model.as_deref(), sample, deadline, None, pipelined) {
             Ok(rx) => rxs.push(rx),
             // Reject the whole frame; replies for samples already admitted
             // are dropped with their receivers (the dispatcher tolerates a
@@ -295,7 +356,12 @@ fn respond_frame_blocking(
     for rx in &rxs {
         match rx.recv_timeout(REPLY_TIMEOUT) {
             Ok(r) => classes.push(r.class as u16),
-            Err(_) => return frame::encode_error("inference failed or timed out"),
+            Err(_) => {
+                return match shed_past_deadline(deadline) {
+                    Some(e) => frame::encode_deadline(&e.to_string()),
+                    None => frame::encode_error("inference failed or timed out"),
+                };
+            }
         }
     }
     frame::encode_classify_resp(&classes)
@@ -516,18 +582,22 @@ fn respond_json_blocking(line: &str, registry: &ModelRegistry, stop: &AtomicBool
     match parse_request(line, registry, stop) {
         Err(msg) => Json::obj([("error", Json::str(msg))]),
         Ok(Parsed::Reply(j)) => j,
-        Ok(Parsed::Classify { model, features }) => {
+        Ok(Parsed::Classify { model, features, deadline_ms }) => {
             // The registry validates the model name and feature width, so
             // an unknown model or wrong-width request comes back as a
             // protocol error, not a panic inside the serving path.
-            match registry.classify(model.as_deref(), &features) {
+            let deadline = resolve_deadline(deadline_ms);
+            match registry.classify_with(model.as_deref(), &features, deadline, None, false) {
                 Err(e) => json_error(&e),
                 Ok(rx) => match rx.recv_timeout(REPLY_TIMEOUT) {
                     Ok(r) => json_reply(&r),
-                    Err(_) => Json::obj([(
-                        "error",
-                        Json::str("inference failed or timed out"),
-                    )]),
+                    Err(_) => match shed_past_deadline(deadline) {
+                        Some(e) => json_error(&e),
+                        None => Json::obj([(
+                            "error",
+                            Json::str("inference failed or timed out"),
+                        )]),
+                    },
                 },
             }
         }
@@ -600,30 +670,41 @@ mod event {
     /// order it sent requests.
     enum Pending {
         Ready(Vec<u8>),
-        Json(mpsc::Receiver<Reply>),
+        Json {
+            rx: mpsc::Receiver<Reply>,
+            deadline: Option<Instant>,
+        },
         Frame {
             rxs: Vec<mpsc::Receiver<Reply>>,
             classes: Vec<Option<u16>>,
             failed: bool,
+            deadline: Option<Instant>,
         },
     }
 
     impl Pending {
-        /// Bytes to write, once this reply is fully resolved.
+        /// Bytes to write, once this reply is fully resolved. A dropped
+        /// reply channel past the request's deadline is the batcher
+        /// shedding it — rendered as the typed deadline reply, not a
+        /// generic failure.
         fn poll(&mut self) -> Option<Vec<u8>> {
             match self {
                 Pending::Ready(bytes) => Some(std::mem::take(bytes)),
-                Pending::Json(rx) => match rx.try_recv() {
+                Pending::Json { rx, deadline } => match rx.try_recv() {
                     Ok(r) => Some(json_line(&json_reply(&r))),
                     Err(mpsc::TryRecvError::Empty) => None,
                     Err(mpsc::TryRecvError::Disconnected) => {
-                        Some(json_line(&Json::obj([(
-                            "error",
-                            Json::str("inference failed or timed out"),
-                        )])))
+                        let reply = match shed_past_deadline(*deadline) {
+                            Some(e) => json_error(&e),
+                            None => Json::obj([(
+                                "error",
+                                Json::str("inference failed or timed out"),
+                            )]),
+                        };
+                        Some(json_line(&reply))
                     }
                 },
-                Pending::Frame { rxs, classes, failed } => {
+                Pending::Frame { rxs, classes, failed, deadline } => {
                     for (i, rx) in rxs.iter().enumerate() {
                         if classes[i].is_some() {
                             continue;
@@ -639,7 +720,14 @@ mod event {
                     }
                     if classes.iter().all(Option::is_some) {
                         if *failed {
-                            Some(frame::encode_error("inference failed or timed out"))
+                            match shed_past_deadline(*deadline) {
+                                Some(e) => {
+                                    Some(frame::encode_deadline(&e.to_string()))
+                                }
+                                None => Some(frame::encode_error(
+                                    "inference failed or timed out",
+                                )),
+                            }
                         } else {
                             let out: Vec<u16> =
                                 classes.iter().map(|c| c.unwrap_or(0)).collect();
@@ -793,15 +881,19 @@ mod event {
                             return;
                         }
                     }
-                    Ok(Parsed::Classify { model, features }) => {
+                    Ok(Parsed::Classify { model, features, deadline_ms }) => {
                         let pipelined = !self.pending.is_empty();
+                        let deadline = resolve_deadline(deadline_ms);
                         match registry.classify_with(
                             model.as_deref(),
                             &features,
+                            deadline,
                             Some(notify.clone()),
                             pipelined,
                         ) {
-                            Ok(rx) => self.pending.push_back(Pending::Json(rx)),
+                            Ok(rx) => {
+                                self.pending.push_back(Pending::Json { rx, deadline })
+                            }
                             Err(e) => self.push_ready(json_line(&json_error(&e))),
                         }
                     }
@@ -836,13 +928,14 @@ mod event {
             registry: &ModelRegistry,
             notify: &ReplyNotify,
         ) {
-            let frame::Frame::ClassifyReq { model, bits, words } = f else {
+            let frame::Frame::ClassifyReq { model, bits, words, deadline_ms } = f else {
                 self.push_ready(frame::encode_error(
                     "unexpected frame type from client",
                 ));
                 return;
             };
             let pipelined = !self.pending.is_empty();
+            let deadline = resolve_deadline(deadline_ms.map(u64::from));
             let wps = frame::words_per_sample(bits);
             let samples = words.len() / wps;
             let mut rxs = Vec::with_capacity(samples);
@@ -851,6 +944,7 @@ mod event {
                 match registry.classify_bits(
                     model.as_deref(),
                     sample,
+                    deadline,
                     Some(notify.clone()),
                     pipelined,
                 ) {
@@ -874,6 +968,7 @@ mod event {
                 rxs,
                 classes: vec![None; n],
                 failed: false,
+                deadline,
             });
         }
 
@@ -896,7 +991,15 @@ mod event {
         /// Write as much of the out-buffer as the socket accepts.
         fn flush(&mut self) {
             while self.out_pos < self.out.len() {
-                match self.stream.write(&self.out[self.out_pos..]) {
+                // Fault point `socket.write`: pretend the kernel accepted a
+                // single byte, so reply ordering and the backpressure
+                // hysteresis face maximal short-write fragmentation.
+                let end = if crate::util::fault::should_fail("socket.write") {
+                    self.out_pos + 1
+                } else {
+                    self.out.len()
+                };
+                match self.stream.write(&self.out[self.out_pos..end]) {
                     Ok(0) => {
                         self.dead = true;
                         return;
@@ -1370,6 +1473,72 @@ mod tests {
     }
 
     #[test]
+    fn deadline_ms_sheds_and_replies_typed_error() {
+        // An age-timer flush 200 ms out guarantees a 0 ms budget expires
+        // while the request is still queued: the batcher sheds it and the
+        // session gets the typed deadline reply, not a generic timeout.
+        let model = random_model("tcp", 4, &[3, 3], 2, 1, 41);
+        let flow =
+            run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+        let router = RouterBuilder::new(model.clone())
+            .circuit(flow.circuit.netlist)
+            .engine(Policy::Logic)
+            .batch_policy(BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_millis(200),
+                ..Default::default()
+            })
+            .workers(1)
+            .build()
+            .unwrap();
+        let registry = Arc::new(ModelRegistry::with_default("tcp", router));
+        let (server, port) = spawn_server(Arc::clone(&registry));
+
+        let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        conn.write_all(b"{\"features\": [0.3, -0.2, 0.9, -1.0], \"deadline_ms\": 0}\n")
+            .unwrap();
+        reader.read_line(&mut line).unwrap();
+        let resp = crate::util::json::Json::parse(&line).unwrap();
+        let msg = resp.get("error").and_then(|e| e.as_str()).unwrap_or("");
+        assert!(msg.contains("deadline exceeded"), "{line}");
+        assert_eq!(
+            resp.get("deadline_exceeded").and_then(|v| v.as_bool()),
+            Some(true),
+            "{line}"
+        );
+        let m = registry.get(None).unwrap().metrics();
+        assert!(m.deadline_expired.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+
+        // A generous budget still serves normally on the same session.
+        let x = vec![0.3, -0.2, 0.9, -1.0];
+        conn.write_all(
+            b"{\"features\": [0.3, -0.2, 0.9, -1.0], \"deadline_ms\": 30000}\n",
+        )
+        .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(
+            resp.get("class").unwrap().as_usize().unwrap(),
+            crate::nn::eval::classify(&model, &x),
+            "{line}"
+        );
+
+        // A negative budget is a protocol error; the session continues.
+        conn.write_all(b"{\"features\": [0.3], \"deadline_ms\": -5}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("deadline_ms must be a non-negative integer"), "{line}");
+
+        conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
     fn shutdown_completes_with_an_idle_client_attached() {
         // Regression, twice over. Originally `serve` joined per-client
         // threads that could block forever in a read, so an idle client
@@ -1610,6 +1779,70 @@ mod tests {
             assert!(
                 m.rejected_overload.load(std::sync::atomic::Ordering::Relaxed) >= 1
             );
+            drop(bin);
+
+            let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            server.join().unwrap();
+        }
+
+        #[test]
+        fn deadline_frame_comes_back_typed_on_the_event_loop() {
+            // Same shape as the blocking deadline test, through the wire:
+            // a type-6 frame with a 0 ms budget is shed on the batcher's
+            // 200 ms age timer and answered with a typed DEADLINE frame.
+            let model = random_model("tcp", 4, &[3, 3], 2, 1, 42);
+            let flow =
+                run_flow(&model, &FlowConfig { jobs: 1, ..Default::default() }, None)
+                    .unwrap();
+            let router = RouterBuilder::new(model.clone())
+                .circuit(flow.circuit.netlist)
+                .engine(Policy::Logic)
+                .batch_policy(BatchPolicy {
+                    max_batch: 64,
+                    max_wait: Duration::from_millis(200),
+                    ..Default::default()
+                })
+                .workers(1)
+                .build()
+                .unwrap();
+            let registry = Arc::new(ModelRegistry::with_default("tcp", router));
+            let (server, port) = spawn_event_server(Arc::clone(&registry));
+
+            let x = vec![0.3, -0.2, 0.9, -1.0];
+            let bits = registry.get(None).unwrap().binarize(&x);
+            let req = frame::encode_classify_req_deadline(
+                None,
+                bits.len() as u16,
+                bits.words(),
+                0,
+            );
+            let mut bin = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            bin.write_all(&req).unwrap();
+            let mut buf = Vec::new();
+            let resp = read_frame(&mut bin, &mut buf);
+            assert!(
+                matches!(&resp, frame::Frame::Deadline { message }
+                    if message.contains("deadline exceeded")),
+                "expected a typed DEADLINE frame, got {resp:?}"
+            );
+            let m = registry.get(None).unwrap().metrics();
+            assert!(m.deadline_expired.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+
+            // A budget-carrying frame with headroom still classifies.
+            let req = frame::encode_classify_req_deadline(
+                None,
+                bits.len() as u16,
+                bits.words(),
+                30_000,
+            );
+            bin.write_all(&req).unwrap();
+            let resp = read_frame(&mut bin, &mut buf);
+            let want = crate::nn::eval::classify(&model, &x) as u16;
+            assert_eq!(resp, frame::Frame::ClassifyResp { classes: vec![want] });
             drop(bin);
 
             let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();

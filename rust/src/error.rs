@@ -39,6 +39,10 @@ pub enum NnError {
     /// at its configured depth cap. Transient by design — clients should
     /// back off and resubmit, not treat this as a malformed request.
     Overload(String),
+    /// The request's deadline expired before an answer was produced; the
+    /// batcher shed it without evaluation. The client already stopped
+    /// caring — this names why no classification came back.
+    Deadline(String),
 }
 
 impl fmt::Display for NnError {
@@ -53,6 +57,7 @@ impl fmt::Display for NnError {
             NnError::Config(m) => write!(f, "{m}"),
             NnError::Sync(e) => write!(f, "sync: {e}"),
             NnError::Overload(m) => write!(f, "overloaded: {m}"),
+            NnError::Deadline(m) => write!(f, "deadline exceeded: {m}"),
         }
     }
 }
@@ -144,6 +149,14 @@ mod tests {
     fn overload_is_typed_and_names_itself() {
         let e = NnError::Overload("queue full (depth 64)".into());
         assert_eq!(e.to_string(), "overloaded: queue full (depth 64)");
+        use std::error::Error;
+        assert!(e.source().is_none());
+    }
+
+    #[test]
+    fn deadline_is_typed_and_names_itself() {
+        let e = NnError::Deadline("request expired 3ms before evaluation".into());
+        assert_eq!(e.to_string(), "deadline exceeded: request expired 3ms before evaluation");
         use std::error::Error;
         assert!(e.source().is_none());
     }

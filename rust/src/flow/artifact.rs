@@ -314,14 +314,19 @@ pub fn circuit_from_json(j: &Json, model: &Model) -> Result<PipelinedCircuit, Ar
     Ok(circuit)
 }
 
-/// Write a circuit artifact (pretty-printed for inspectability).
+/// Write a circuit artifact (pretty-printed for inspectability) through
+/// the crash-safe store: write-to-temp → fsync → atomic rename, with a
+/// generation entry journaled before the payload is published. A crash at
+/// any instruction leaves either the previous generation or the new one —
+/// never a torn file that a later `load_circuit` would half-parse.
 pub fn save_circuit(
     path: &str,
     circuit: &PipelinedCircuit,
     model: &Model,
 ) -> Result<(), ArtifactError> {
     let text = circuit_to_json(circuit, model).to_pretty_string();
-    std::fs::write(path, text)
+    crate::flow::store::publish(path, text.as_bytes())
+        .map(|_generation| ())
         .map_err(|e| ArtifactError::Io { path: path.to_string(), msg: e.to_string() })
 }
 
@@ -352,8 +357,20 @@ pub fn native_so_path(bundle_path: &str) -> String {
 }
 
 fn parse_file(path: &str) -> Result<Json, ArtifactError> {
-    let text = std::fs::read_to_string(path)
+    // The store detects torn payloads against the generation journal,
+    // quarantines them, and restores the previous generation when one
+    // survives — a recovered load is a notice (and a counter bump), not an
+    // error. Only an unrecoverable tear or real I/O failure surfaces here.
+    let loaded = crate::flow::store::load(path)
         .map_err(|e| ArtifactError::Io { path: path.to_string(), msg: e.to_string() })?;
+    if loaded.recovered {
+        eprintln!(
+            "artifact store: {path} was torn; quarantined it and restored \
+             generation {}",
+            loaded.generation
+        );
+    }
+    let text = String::from_utf8_lossy(&loaded.bytes);
     Json::parse(&text).map_err(|e| ArtifactError::Parse(format!("{path}: {e}")))
 }
 
@@ -397,7 +414,44 @@ mod tests {
         save_circuit(path, &circuit, &m).unwrap();
         let back = load_circuit(path, &m).unwrap();
         assert_eq!(back.stats(), circuit.stats());
-        std::fs::remove_file(path).ok();
+        // Saving went through the store: the generation journal exists.
+        assert_eq!(crate::flow::store::generation(path), Some(1));
+        for p in [
+            path.to_string(),
+            crate::flow::store::journal_path(path),
+            crate::flow::store::prev_path(path),
+        ] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn torn_artifact_recovers_previous_generation() {
+        // Two published generations, then the payload is torn mid-file (a
+        // crash between write and rename can't produce this through the
+        // store, but a disk-level tear can). Loading quarantines the torn
+        // bytes and restores generation 1 — the request path never sees a
+        // parse panic.
+        let (m, circuit) = flow_circuit(31);
+        let (m2, circuit2) = flow_circuit(32);
+        let path = "/tmp/nnt_artifact_torn_test.circuit.json";
+        save_circuit(path, &circuit, &m).unwrap();
+        save_circuit(path, &circuit2, &m2).unwrap();
+        assert_eq!(crate::flow::store::generation(path), Some(2));
+        let text = std::fs::read_to_string(path).unwrap();
+        std::fs::write(path, &text[..text.len() / 2]).unwrap();
+        // `.prev` holds generation 1 (the circuit compiled from `m`), so
+        // that is what recovery hands back.
+        let back = load_circuit(path, &m).unwrap();
+        assert_eq!(back.stats(), circuit.stats());
+        for p in [
+            path.to_string(),
+            crate::flow::store::journal_path(path),
+            crate::flow::store::prev_path(path),
+            crate::flow::store::quarantine_path(path),
+        ] {
+            std::fs::remove_file(p).ok();
+        }
     }
 
     #[test]

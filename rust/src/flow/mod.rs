@@ -6,10 +6,13 @@
 //! * [`build`] — layer AIGs, LUT mapping, stitching, retiming, verification
 //! * [`artifact`] — persistent compiled-circuit files (`nullanet compile` /
 //!   `--circuit`), fingerprint-bound to the model
+//! * [`store`] — crash-safe artifact store: atomic replace, generation
+//!   journal, torn-file quarantine (every bundle/cache write goes here)
 
 pub mod artifact;
 pub mod build;
 pub mod config;
+pub mod store;
 pub mod synth;
 
 pub use artifact::ArtifactError;

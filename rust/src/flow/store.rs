@@ -1,0 +1,429 @@
+//! Crash-safe artifact store: atomic writes, generation journal, torn-file
+//! quarantine.
+//!
+//! A compiled circuit bundle is the unit of deployment — `nullanet
+//! compile` may be killed at any byte, and `serve --models` must still
+//! come up with *some* intact generation or say precisely why it cannot.
+//! A bare `std::fs::write` to the final path cannot promise that: a crash
+//! mid-write leaves a half-JSON file that only fails at the next load.
+//! This module is the single write path for bundles and native-cache
+//! files, built on three primitives:
+//!
+//! 1. **Atomic replace** ([`atomic_write`] / [`promote`]): payload goes to
+//!    a unique temp file in the destination directory, is `fsync`ed, and
+//!    is published with `rename(2)` — readers see the old bytes or the
+//!    new bytes, never a mixture. The parent directory is fsynced
+//!    best-effort so the rename itself survives power loss.
+//! 2. **Generation journal** ([`publish`]): a `<path>.journal` sidecar
+//!    records the last two generations as `(gen, len, fnv64)` triples,
+//!    and the displaced payload is kept at `<path>.prev`. The journal is
+//!    updated *before* the payload rename, so a crash between the two
+//!    steps leaves a payload matching the journal's previous entry — an
+//!    older consistent state, not an inconsistency.
+//! 3. **Verified load with quarantine** ([`load`]): payload bytes are
+//!    checked against the journal; a file matching no recorded
+//!    generation (a torn legacy write, disk corruption, tampering) is
+//!    renamed to `<path>.quarantined` and the previous generation is
+//!    restored when it verifies — counted in [`store_recoveries`], which
+//!    the metrics report surfaces. Files with no journal load as
+//!    generation 0 for compatibility; their validation is the parser's.
+//!
+//! The [`crate::util::fault`] point `artifact.write` sits on the temp
+//! write: an injected fault truncates the temp file and returns an error
+//! without renaming, which is exactly what `kill -9` mid-`compile` does.
+//! The chaos suite proves no sequence of injected crashes ever makes
+//! [`load`] return torn bytes.
+
+use std::fmt;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::fault;
+use crate::util::json::Json;
+
+/// Format tag of the `<path>.journal` sidecar.
+pub const JOURNAL_FORMAT: &str = "nullanet-store-journal";
+/// Journal version this build reads and writes.
+pub const JOURNAL_VERSION: i64 = 1;
+
+/// Typed failure of a store operation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StoreError {
+    /// Filesystem failure (including injected `artifact.write` faults).
+    Io { path: String, msg: String },
+    /// The payload matches no journaled generation and no previous
+    /// generation could be restored; the torn file was moved aside.
+    Torn { path: String, quarantine: String },
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Io { path, msg } => write!(f, "{path}: {msg}"),
+            StoreError::Torn { path, quarantine } => write!(
+                f,
+                "{path}: torn artifact quarantined to {quarantine} \
+                 (matches no journaled generation; no recoverable previous \
+                 generation)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+fn io_err(path: &str, e: impl fmt::Display) -> StoreError {
+    StoreError::Io { path: path.to_string(), msg: e.to_string() }
+}
+
+static STORE_RECOVERIES: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of loads that quarantined a torn payload and
+/// restored the previous generation. Joins `poison_recoveries` in the
+/// metrics resilience report.
+pub fn store_recoveries() -> u64 {
+    STORE_RECOVERIES.load(Ordering::Relaxed)
+}
+
+/// FNV-1a 64 over raw bytes — the journal's integrity check (same
+/// algorithm as [`crate::flow::artifact::model_fingerprint`], different
+/// domain: file bytes, not model JSON).
+pub fn fnv64(bytes: &[u8]) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+/// `<path>.journal` — generation records for `path`.
+pub fn journal_path(path: &str) -> String {
+    format!("{path}.journal")
+}
+
+/// `<path>.prev` — the displaced previous generation's payload.
+pub fn prev_path(path: &str) -> String {
+    format!("{path}.prev")
+}
+
+/// `<path>.quarantined` — where a torn payload is moved aside.
+pub fn quarantine_path(path: &str) -> String {
+    format!("{path}.quarantined")
+}
+
+fn temp_path(path: &str) -> String {
+    static N: AtomicU64 = AtomicU64::new(0);
+    let n = N.fetch_add(1, Ordering::Relaxed);
+    format!("{path}.tmp.{}.{n}", std::process::id())
+}
+
+/// Best-effort fsync of `path`'s parent directory, so the rename that
+/// just published into it survives power loss. Directory fds are a
+/// Linux-ism; failures here degrade durability, not atomicity.
+fn sync_parent_dir(path: &str) {
+    let parent = std::path::Path::new(path).parent();
+    if let Some(dir) = parent.filter(|p| !p.as_os_str().is_empty()) {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+}
+
+/// Write `bytes` to a unique temp file next to `path` and fsync it.
+/// Carries the `artifact.write` fault point: an injected fault leaves a
+/// *truncated* temp file behind (the on-disk state a mid-write crash
+/// produces) and reports failure without touching `path`.
+fn write_temp(path: &str, bytes: &[u8]) -> Result<String, StoreError> {
+    let tmp = temp_path(path);
+    let mut f = std::fs::File::create(&tmp).map_err(|e| io_err(&tmp, e))?;
+    if fault::should_fail("artifact.write") {
+        let _ = f.write_all(&bytes[..bytes.len() / 2]);
+        return Err(StoreError::Io {
+            path: path.to_string(),
+            msg: format!("injected fault at artifact.write (torn temp left at {tmp})"),
+        });
+    }
+    f.write_all(bytes).map_err(|e| io_err(&tmp, e))?;
+    f.sync_all().map_err(|e| io_err(&tmp, e))?;
+    Ok(tmp)
+}
+
+/// Atomically replace `path` with `bytes`: temp write → fsync → rename.
+/// No journal — use [`publish`] for generation-tracked artifacts. This is
+/// the right call for derived caches (`.so` sources, `.meta` sidecars)
+/// whose loss only costs a rebuild.
+pub fn atomic_write(path: &str, bytes: &[u8]) -> Result<(), StoreError> {
+    let tmp = write_temp(path, bytes)?;
+    std::fs::rename(&tmp, path).map_err(|e| io_err(path, e))?;
+    sync_parent_dir(path);
+    Ok(())
+}
+
+/// Atomically promote an already-written file (e.g. rustc's `.so`
+/// output) to its final path: fsync → rename → dir fsync.
+pub fn promote(temp: &str, path: &str) -> Result<(), StoreError> {
+    let f = std::fs::File::open(temp).map_err(|e| io_err(temp, e))?;
+    f.sync_all().map_err(|e| io_err(temp, e))?;
+    drop(f);
+    std::fs::rename(temp, path).map_err(|e| io_err(path, e))?;
+    sync_parent_dir(path);
+    Ok(())
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Entry {
+    gen: u64,
+    len: u64,
+    fnv: String,
+}
+
+impl Entry {
+    fn of(gen: u64, bytes: &[u8]) -> Entry {
+        Entry { gen, len: bytes.len() as u64, fnv: fnv64(bytes) }
+    }
+
+    fn matches(&self, bytes: &[u8]) -> bool {
+        self.len == bytes.len() as u64 && self.fnv == fnv64(bytes)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj([
+            ("gen", Json::int(self.gen as i64)),
+            ("len", Json::int(self.len as i64)),
+            ("fnv", Json::str(self.fnv.clone())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<Entry> {
+        Some(Entry {
+            gen: j.get("gen")?.as_i64().filter(|&g| g >= 0)? as u64,
+            len: j.get("len")?.as_i64().filter(|&l| l >= 0)? as u64,
+            fnv: j.get("fnv")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// Read the journal for `path`. `None` when absent or unreadable — a
+/// missing journal means "legacy file, no integrity claim", and a
+/// corrupt journal must not brick an intact payload.
+fn read_journal(path: &str) -> Option<Vec<Entry>> {
+    let text = std::fs::read_to_string(journal_path(path)).ok()?;
+    let j = Json::parse(&text).ok()?;
+    if j.get("format").and_then(|v| v.as_str()) != Some(JOURNAL_FORMAT) {
+        return None;
+    }
+    if j.get("version").and_then(|v| v.as_i64()) != Some(JOURNAL_VERSION) {
+        return None;
+    }
+    let entries = j.get("entries")?.as_arr()?;
+    let parsed: Vec<Entry> = entries.iter().filter_map(Entry::from_json).collect();
+    if parsed.len() == entries.len() {
+        Some(parsed)
+    } else {
+        None
+    }
+}
+
+fn write_journal(path: &str, entries: &[Entry]) -> Result<(), StoreError> {
+    let j = Json::obj([
+        ("format", Json::str(JOURNAL_FORMAT)),
+        ("version", Json::int(JOURNAL_VERSION)),
+        ("entries", Json::Arr(entries.iter().map(Entry::to_json).collect())),
+    ]);
+    atomic_write(&journal_path(path), j.to_string().as_bytes())
+}
+
+/// The journaled generation `path` currently claims, if any.
+pub fn generation(path: &str) -> Option<u64> {
+    read_journal(path)?.last().map(|e| e.gen)
+}
+
+/// A verified payload returned by [`load`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Loaded {
+    /// The verified payload bytes.
+    pub bytes: Vec<u8>,
+    /// Journal generation the bytes matched (0 for legacy un-journaled
+    /// files).
+    pub generation: u64,
+    /// Whether the current payload was torn and these bytes were
+    /// restored from the previous generation.
+    pub recovered: bool,
+}
+
+/// Publish a new generation of `path`: temp write → keep the displaced
+/// payload at `<path>.prev` → journal update (old + new entries) →
+/// payload rename. A crash at any step leaves `path` matching some
+/// journal entry, so [`load`] always finds a consistent generation.
+pub fn publish(path: &str, bytes: &[u8]) -> Result<u64, StoreError> {
+    let entries = read_journal(path).unwrap_or_default();
+    let current = entries.last().cloned();
+    let next_gen = current.as_ref().map_or(1, |e| e.gen + 1);
+    let tmp = write_temp(path, bytes)?;
+
+    // Preserve the displaced generation before the rename clobbers it.
+    // A legacy file (no journal) is journaled as generation 0 so it stays
+    // loadable — and recoverable — after this publish. A payload that
+    // mismatches its own journal is already torn: keep the bytes aside
+    // but do not journal them as a valid generation.
+    let mut new_entries: Vec<Entry> = Vec::with_capacity(2);
+    if let Ok(old_bytes) = std::fs::read(path) {
+        let old_entry = match current {
+            Some(e) if e.matches(&old_bytes) => Some(e),
+            Some(_) => None,
+            None => Some(Entry::of(next_gen - 1, &old_bytes)),
+        };
+        let prev = prev_path(path);
+        std::fs::copy(path, &prev).map_err(|e| io_err(&prev, e))?;
+        if let Ok(p) = std::fs::File::open(&prev) {
+            let _ = p.sync_all();
+        }
+        new_entries.extend(old_entry);
+    }
+    new_entries.push(Entry::of(next_gen, bytes));
+
+    write_journal(path, &new_entries)?;
+    std::fs::rename(&tmp, path).map_err(|e| io_err(path, e))?;
+    sync_parent_dir(path);
+    Ok(next_gen)
+}
+
+/// Load and verify `path` against its journal. Torn payloads are
+/// quarantined to `<path>.quarantined`; if `<path>.prev` verifies
+/// against the journal it is restored (and counted in
+/// [`store_recoveries`]), otherwise the load fails typed with
+/// [`StoreError::Torn`] — never a parse of half-written bytes.
+pub fn load(path: &str) -> Result<Loaded, StoreError> {
+    let bytes = std::fs::read(path).map_err(|e| io_err(path, e))?;
+    let Some(entries) = read_journal(path) else {
+        return Ok(Loaded { bytes, generation: 0, recovered: false });
+    };
+    if let Some(e) = entries.iter().find(|e| e.matches(&bytes)) {
+        return Ok(Loaded { bytes, generation: e.gen, recovered: false });
+    }
+
+    // Torn: move the payload aside, then try the previous generation.
+    let quarantine = quarantine_path(path);
+    std::fs::rename(path, &quarantine).map_err(|e| io_err(&quarantine, e))?;
+    let prev = prev_path(path);
+    if let Ok(prev_bytes) = std::fs::read(&prev) {
+        if let Some(e) = entries.iter().find(|e| e.matches(&prev_bytes)) {
+            // Restore without consulting the fault point: the recoverer
+            // is the loader, not the (possibly crashing) writer.
+            let tmp = temp_path(path);
+            let write_back = std::fs::write(&tmp, &prev_bytes)
+                .and_then(|()| std::fs::rename(&tmp, path));
+            write_back.map_err(|er| io_err(path, er))?;
+            sync_parent_dir(path);
+            STORE_RECOVERIES.fetch_add(1, Ordering::Relaxed);
+            return Ok(Loaded { bytes: prev_bytes, generation: e.gen, recovered: true });
+        }
+    }
+    Err(StoreError::Torn { path: path.to_string(), quarantine })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> String {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir()
+            .join(format!("nnt-store-test-{}-{tag}-{n}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn atomic_write_round_trips() {
+        let dir = tmp_dir("aw");
+        let p = format!("{dir}/x.bin");
+        atomic_write(&p, b"hello").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"hello");
+        atomic_write(&p, b"world!").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"world!");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn publish_journals_generations_and_keeps_prev() {
+        let dir = tmp_dir("gen");
+        let p = format!("{dir}/a.json");
+        assert_eq!(publish(&p, b"gen-one").unwrap(), 1);
+        assert_eq!(publish(&p, b"gen-two").unwrap(), 2);
+        assert_eq!(generation(&p), Some(2));
+        assert_eq!(std::fs::read(prev_path(&p)).unwrap(), b"gen-one");
+        let l = load(&p).unwrap();
+        assert_eq!((l.bytes.as_slice(), l.generation, l.recovered), (&b"gen-two"[..], 2, false));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_payload_is_quarantined_and_prev_restored() {
+        let dir = tmp_dir("torn");
+        let p = format!("{dir}/a.json");
+        publish(&p, b"first-generation").unwrap();
+        publish(&p, b"second-generation").unwrap();
+        // Tear the payload the way a crashed legacy writer would.
+        std::fs::write(&p, b"second-gen").unwrap();
+        let before = store_recoveries();
+        let l = load(&p).unwrap();
+        assert!(l.recovered);
+        assert_eq!(l.bytes, b"first-generation");
+        assert_eq!(l.generation, 1);
+        assert_eq!(store_recoveries(), before + 1);
+        // The torn bytes were preserved for inspection, and the restored
+        // payload now loads clean.
+        assert_eq!(std::fs::read(quarantine_path(&p)).unwrap(), b"second-gen");
+        assert!(!load(&p).unwrap().recovered);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_payload_without_prev_fails_typed() {
+        let dir = tmp_dir("noprev");
+        let p = format!("{dir}/a.json");
+        publish(&p, b"only-generation").unwrap();
+        std::fs::remove_file(prev_path(&p)).ok();
+        std::fs::write(&p, b"only-gen").unwrap();
+        let err = load(&p).unwrap_err();
+        match &err {
+            StoreError::Torn { quarantine, .. } => {
+                assert_eq!(std::fs::read(quarantine).unwrap(), b"only-gen");
+            }
+            other => panic!("expected Torn, got {other:?}"),
+        }
+        assert!(err.to_string().contains("quarantined"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_file_without_journal_loads_as_generation_zero() {
+        let dir = tmp_dir("legacy");
+        let p = format!("{dir}/old.json");
+        std::fs::write(&p, b"pre-store artifact").unwrap();
+        let l = load(&p).unwrap();
+        assert_eq!((l.generation, l.recovered), (0, false));
+        assert_eq!(l.bytes, b"pre-store artifact");
+        // Publishing over it journals the legacy bytes as generation 0.
+        publish(&p, b"journaled now").unwrap();
+        std::fs::write(&p, b"torn").unwrap();
+        let l = load(&p).unwrap();
+        assert!(l.recovered);
+        assert_eq!(l.bytes, b"pre-store artifact");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_journal_does_not_brick_an_intact_payload() {
+        let dir = tmp_dir("cj");
+        let p = format!("{dir}/a.json");
+        publish(&p, b"payload").unwrap();
+        std::fs::write(journal_path(&p), b"{ not json").unwrap();
+        let l = load(&p).unwrap();
+        assert_eq!((l.bytes.as_slice(), l.generation), (&b"payload"[..], 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

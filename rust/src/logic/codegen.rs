@@ -233,12 +233,20 @@ pub fn emit_source(sim: &CompiledNetlist, fingerprint: &str) -> String {
 
 /// Write `source` next to `so_path` (as `<so_path>.rs`) and build it with
 /// `rustc --crate-type cdylib -C opt-level=3`.
+///
+/// Both artifacts land crash-safely: the source goes through the store's
+/// atomic write, and rustc emits to a temp path that is fsynced and
+/// renamed into place only on success — a crash mid-build can never leave
+/// a torn `.so` where a loadable one used to be.
 pub fn build_so(source: &str, so_path: &str) -> Result<(), CodegenError> {
+    if crate::util::fault::should_fail("codegen.rustc") {
+        return Err(CodegenError::Build("injected fault at codegen.rustc".into()));
+    }
     let src_path = format!("{so_path}.rs");
-    std::fs::write(&src_path, source).map_err(|e| CodegenError::Io {
-        path: src_path.clone(),
-        msg: e.to_string(),
+    crate::flow::store::atomic_write(&src_path, source.as_bytes()).map_err(|e| {
+        CodegenError::Io { path: src_path.clone(), msg: e.to_string() }
     })?;
+    let build_path = format!("{so_path}.build.{}", std::process::id());
     let out = std::process::Command::new("rustc")
         .args([
             "--edition",
@@ -250,18 +258,23 @@ pub fn build_so(source: &str, so_path: &str) -> Result<(), CodegenError> {
             "-C",
             "debuginfo=0",
             "-o",
-            so_path,
+            &build_path,
             &src_path,
         ])
         .output()
         .map_err(|e| CodegenError::RustcUnavailable(format!("running rustc: {e}")))?;
     if !out.status.success() {
+        let _ = std::fs::remove_file(&build_path);
         // Char-wise cap: byte-indexed truncate could split a multi-byte
         // character in rustc's diagnostics and panic.
         let msg: String =
             String::from_utf8_lossy(&out.stderr).trim().chars().take(2000).collect();
         return Err(CodegenError::Build(msg));
     }
+    crate::flow::store::promote(&build_path, so_path).map_err(|e| CodegenError::Io {
+        path: so_path.to_string(),
+        msg: e.to_string(),
+    })?;
     Ok(())
 }
 
@@ -376,6 +389,9 @@ impl NativeLib {
     /// fingerprint (`expected_fp`), and sane dimensions. Every failure is
     /// typed so callers can distinguish "stale cache" from "broken host".
     pub fn load(so_path: &str, expected_fp: &str) -> Result<NativeLib, CodegenError> {
+        if crate::util::fault::should_fail("dlopen") {
+            return Err(CodegenError::Load(format!("injected fault at dlopen ({so_path})")));
+        }
         let lib = sys::Lib::open(so_path).map_err(CodegenError::Load)?;
         type GetU64 = unsafe extern "C" fn() -> u64;
         type GetPtr = unsafe extern "C" fn() -> *const u8;
@@ -520,7 +536,7 @@ pub fn load_or_build(
     build_so(&emit_source(sim, fingerprint), so_path)?;
     let lib = NativeLib::load(so_path, fingerprint)?;
     // Best-effort sidecar: losing it only costs a spurious rebuild later.
-    let _ = std::fs::write(&meta_path, &rustc);
+    let _ = crate::flow::store::atomic_write(&meta_path, rustc.as_bytes());
     Ok((lib, CacheOutcome::Rebuilt(reason)))
 }
 

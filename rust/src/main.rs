@@ -8,11 +8,11 @@
 //! nullanet serve     --arch jsc-s --addr 127.0.0.1:7878
 //!                    --engine logic|pjrt|compare|native
 //!                    [--circuit file.circuit.json] [--workers N]
-//!                    [--event-loop] [--max-queue-depth N]
+//!                    [--event-loop] [--max-queue-depth N] [--deadline-ms N]
 //! nullanet serve     --models artifacts/circuits [--default-model name]
 //!                    [--engine logic|native] [--addr …] [--max-batch N]
 //!                    [--max-wait-us N] [--workers N]
-//!                    [--event-loop] [--max-queue-depth N]
+//!                    [--event-loop] [--max-queue-depth N] [--deadline-ms N]
 //! nullanet codegen   --arch jsc-s [--circuit file.circuit.json] [--out file.so]
 //! nullanet bench     [--out BENCH_9.json] [--batch N] [--quick] [--jobs N]
 //! nullanet bench     --serve [--out BENCH_8.json] [--conns N] [--reqs N] [--quick]
@@ -21,6 +21,7 @@
 //! nullanet check     bundle.json [...]        (structural lint)
 //! nullanet check     --cec a.json b.json      (SAT equivalence proof)
 //! nullanet check     --locks                  (serving-stack lock-order analysis)
+//! nullanet check     --faults                 (fault-injection point inventory)
 //! nullanet gen-model --features 6 --widths 5,4 --fanin 2 --act-bits 1 --out m.json
 //! ```
 //!
@@ -312,7 +313,7 @@ fn cmd_serve(args: &Args) -> Result<(), NnError> {
     conf(args.check_known(&[
         "arch", "model", "artifacts", "addr", "engine", "max-batch", "max-wait-us",
         "jobs", "workers", "circuit", "models", "default-model", "event-loop",
-        "max-queue-depth",
+        "max-queue-depth", "deadline-ms",
     ]))?;
     let bp = BatchPolicy {
         max_batch: conf(args.get_usize("max-batch", 64))?,
@@ -327,6 +328,14 @@ fn cmd_serve(args: &Args) -> Result<(), NnError> {
     // Logic-engine shard workers: batches spanning several 64-sample lane
     // groups are evaluated in parallel on one shared compiled netlist.
     let workers = conf(args.get_usize("workers", RouterBuilder::default_workers()))?;
+    // Deadline-driven shedding: a request still queued when its budget
+    // elapses is dropped with a typed deadline reply instead of served
+    // late. This flag sets the server-wide default budget (0 = none);
+    // per-request `deadline_ms` / type-6 frames always override it.
+    let deadline_ms = conf(args.get_usize("deadline-ms", 0))? as u64;
+    nullanet_tiny::coordinator::server::set_default_deadline_ms(
+        (deadline_ms > 0).then_some(deadline_ms),
+    );
 
     // Multi-model mode: scan a directory of self-contained circuit bundles
     // and serve every one from the registry (each under its model name,
@@ -1025,13 +1034,16 @@ fn cmd_emit(args: &Args) -> Result<(), NnError> {
 
 /// Static checks over compiled-circuit bundles: structural lint (default),
 /// a SAT-based combinational-equivalence proof between two bundles
-/// (`--cec a.json b.json`), or runtime lock-order analysis of the serving
-/// stack (`--locks`). Exits nonzero on any failure, so CI can gate
-/// artifact pipelines on it.
+/// (`--cec a.json b.json`), runtime lock-order analysis of the serving
+/// stack (`--locks`), or the fault-injection inventory (`--faults`).
+/// Exits nonzero on any failure, so CI can gate artifact pipelines on it.
 fn cmd_check(args: &Args) -> Result<(), NnError> {
-    conf(args.check_known(&["cec", "locks", "locks-fixture"]))?;
+    conf(args.check_known(&["cec", "locks", "locks-fixture", "faults"]))?;
     if args.get_bool("locks") || args.get_bool("locks-fixture") {
         return cmd_check_locks(args.get_bool("locks-fixture"));
+    }
+    if args.get_bool("faults") {
+        return cmd_check_faults();
     }
     if let Some(first) = args.get_opt("cec") {
         // `--cec a.json b.json` parses as option value "a.json" plus one
@@ -1092,6 +1104,20 @@ fn cmd_check(args: &Args) -> Result<(), NnError> {
         }
         Ok(())
     }
+}
+
+/// `check --faults`: print the fault-injection point inventory and whether
+/// the harness is compiled into this binary (`--cfg nnt_fault`). The chaos
+/// CI job greps the output to assert it is driving a fault-armed build;
+/// release binaries report the harness compiled out (every point a no-op).
+fn cmd_check_faults() -> Result<(), NnError> {
+    use nullanet_tiny::util::fault;
+    let state = if fault::armed() { "compiled in" } else { "compiled out (no-op)" };
+    println!("fault injection: {state} ({} points)", fault::POINTS.len());
+    for p in fault::POINTS {
+        println!("  {p}: calls={} injected={}", fault::calls(p), fault::injected(p));
+    }
+    Ok(())
 }
 
 /// `check --locks`: exercise the real serving stack with the lock-order

@@ -1,0 +1,273 @@
+//! Deterministic fault injection for the resilience test suite.
+//!
+//! The serving stack promises graceful degradation — crash-safe artifact
+//! writes, a native→SIMD→scalar engine ladder, deadline shedding — but a
+//! recovery path that is never executed is a recovery path that does not
+//! work. This module places **named injection points** at the exact
+//! boundaries where the real world fails:
+//!
+//! | point            | site                                   | simulates                       |
+//! |------------------|----------------------------------------|---------------------------------|
+//! | `artifact.write` | [`crate::flow::store`] temp-file write | crash / full disk mid-write     |
+//! | `codegen.rustc`  | [`crate::logic::codegen::build_so`]    | toolchain missing on serve host |
+//! | `dlopen`         | [`crate::logic::codegen::NativeLib`]   | `.so` unlinked / loader failure |
+//! | `engine.eval`    | `NativeCodegenEngine::classify`        | native library failing mid-serve|
+//! | `socket.write`   | event-loop `Conn::flush`               | short writes / tiny send buffers|
+//!
+//! Following the `util::sync` / `util::mc` pattern, the harness has two
+//! builds selected by `--cfg nnt_fault`:
+//!
+//! * **Default (release and tier-1 test builds):** [`should_fail`] is a
+//!   `const`-foldable `false` — the injection points compile to nothing
+//!   and the hot path pays zero cost.
+//! * **`--cfg nnt_fault` (chaos builds):** each point carries an armed
+//!   [`Plan`] — fire always, fire the next *n* calls, or fire a seeded
+//!   per-mille fraction of calls. Rate decisions hash `(seed, point,
+//!   call-index)`, so a given seed produces the same fault sequence at
+//!   each point regardless of thread interleaving *between* points —
+//!   the chaos suite (`rust/tests/chaos.rs`) replays bug reports by seed.
+//!
+//! State is process-global atomics (no locks: an injection point must
+//! never block or reorder the code around it). Tests that arm points
+//! serialize themselves and call [`reset`] when done.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Every named injection point, in registry order. Indexes into the
+/// per-point atomics; [`point_index`] maps names back.
+pub const POINTS: [&str; 5] =
+    ["artifact.write", "codegen.rustc", "dlopen", "engine.eval", "socket.write"];
+
+/// What an armed injection point does on each call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Plan {
+    /// Never fire (the disarmed state).
+    Off,
+    /// Fire on every call.
+    Always,
+    /// Fire on the next `n` calls, then disarm.
+    Times(u32),
+    /// Fire on `p` calls per thousand, decided by a seeded hash of the
+    /// per-point call index — deterministic for a given seed.
+    Permille(u32),
+}
+
+/// Whether fault injection is compiled into this build (`--cfg nnt_fault`).
+/// The chaos suite asserts this; `nullanet check --faults` reports it.
+pub const fn armed() -> bool {
+    cfg!(nnt_fault)
+}
+
+/// Index of a point name in [`POINTS`], if known.
+pub fn point_index(point: &str) -> Option<usize> {
+    POINTS.iter().position(|&p| p == point)
+}
+
+const NPOINTS: usize = POINTS.len();
+
+// Plan encoding, one u64 per point: bits 32..34 = mode (0 off, 1 always,
+// 2 times, 3 permille), bits 0..32 = parameter (remaining count or
+// per-mille rate). `Times` decrements the parameter with a CAS loop so
+// concurrent callers fire exactly `n` times in total.
+const MODE_OFF: u64 = 0;
+const MODE_ALWAYS: u64 = 1 << 32;
+const MODE_TIMES: u64 = 2 << 32;
+const MODE_PERMILLE: u64 = 3 << 32;
+const MODE_MASK: u64 = 3 << 32;
+const PARAM_MASK: u64 = (1 << 32) - 1;
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static PLANS: [AtomicU64; NPOINTS] = [ZERO; NPOINTS];
+static CALLS: [AtomicU64; NPOINTS] = [ZERO; NPOINTS];
+static FIRED: [AtomicU64; NPOINTS] = [ZERO; NPOINTS];
+static SEED: AtomicU64 = AtomicU64::new(0);
+
+fn encode(plan: Plan) -> u64 {
+    match plan {
+        Plan::Off => MODE_OFF,
+        Plan::Always => MODE_ALWAYS,
+        Plan::Times(n) => MODE_TIMES | u64::from(n),
+        Plan::Permille(p) => MODE_PERMILLE | u64::from(p.min(1000)),
+    }
+}
+
+/// Arm one injection point with a plan. Unknown point names are ignored
+/// (the inventory in [`POINTS`] is the contract; `check --faults`
+/// exercises every entry). No-op without `--cfg nnt_fault`.
+pub fn arm(point: &str, plan: Plan) {
+    if !armed() {
+        return;
+    }
+    if let Some(i) = point_index(point) {
+        PLANS[i].store(encode(plan), Ordering::SeqCst);
+    }
+}
+
+/// Arm every point at `permille` per-thousand, seeded: the canonical
+/// chaos-sweep configuration. No-op without `--cfg nnt_fault`.
+pub fn arm_all(seed: u64, permille: u32) {
+    if !armed() {
+        return;
+    }
+    SEED.store(seed, Ordering::SeqCst);
+    for p in PLANS.iter() {
+        p.store(encode(Plan::Permille(permille)), Ordering::SeqCst);
+    }
+}
+
+/// Set the seed used by [`Plan::Permille`] decisions without changing
+/// any plan. No-op without `--cfg nnt_fault`.
+pub fn set_seed(seed: u64) {
+    if armed() {
+        SEED.store(seed, Ordering::SeqCst);
+    }
+}
+
+/// Disarm every point and zero the call/fire counters.
+pub fn reset() {
+    for i in 0..NPOINTS {
+        PLANS[i].store(MODE_OFF, Ordering::SeqCst);
+        CALLS[i].store(0, Ordering::SeqCst);
+        FIRED[i].store(0, Ordering::SeqCst);
+    }
+    SEED.store(0, Ordering::SeqCst);
+}
+
+/// Disarm one point and zero its counters, leaving the others alone —
+/// lets parallel tests own disjoint points without a global gate.
+pub fn reset_point(point: &str) {
+    if let Some(i) = point_index(point) {
+        PLANS[i].store(MODE_OFF, Ordering::SeqCst);
+        CALLS[i].store(0, Ordering::SeqCst);
+        FIRED[i].store(0, Ordering::SeqCst);
+    }
+}
+
+/// How many times `point` has fired (decided to fail) since [`reset`].
+pub fn injected(point: &str) -> u64 {
+    point_index(point).map_or(0, |i| FIRED[i].load(Ordering::SeqCst))
+}
+
+/// How many times `point` has been consulted since [`reset`].
+pub fn calls(point: &str) -> u64 {
+    point_index(point).map_or(0, |i| CALLS[i].load(Ordering::SeqCst))
+}
+
+/// SplitMix64 — the same mix `util::prng` seeds with; good avalanche on
+/// sequential inputs, which is exactly the (seed, point, call) stream.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// The injection point itself: `true` means "fail here, now". Without
+/// `--cfg nnt_fault` this is a constant `false` the optimizer deletes.
+#[inline]
+pub fn should_fail(point: &str) -> bool {
+    if !armed() {
+        return false;
+    }
+    let Some(i) = point_index(point) else { return false };
+    let call = CALLS[i].fetch_add(1, Ordering::SeqCst);
+    let fire = loop {
+        let plan = PLANS[i].load(Ordering::SeqCst);
+        match plan & MODE_MASK {
+            MODE_ALWAYS => break true,
+            MODE_TIMES => {
+                let left = plan & PARAM_MASK;
+                if left == 0 {
+                    break false;
+                }
+                let next = if left == 1 { MODE_OFF } else { MODE_TIMES | (left - 1) };
+                if PLANS[i]
+                    .compare_exchange(plan, next, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+                {
+                    break true;
+                }
+                // lost the race; re-read the plan and retry
+            }
+            MODE_PERMILLE => {
+                let p = plan & PARAM_MASK;
+                let seed = SEED.load(Ordering::SeqCst);
+                let h = mix(seed ^ ((i as u64) << 48) ^ call);
+                break h % 1000 < p;
+            }
+            _ => break false,
+        }
+    };
+    if fire {
+        FIRED[i].fetch_add(1, Ordering::SeqCst);
+    }
+    fire
+}
+
+#[cfg(all(test, not(nnt_fault)))]
+mod tests_disarmed {
+    use super::*;
+
+    #[test]
+    fn disarmed_build_never_fires() {
+        assert!(!armed());
+        arm("engine.eval", Plan::Always);
+        arm_all(7, 1000);
+        for p in POINTS {
+            assert!(!should_fail(p), "{p} fired in a disarmed build");
+            assert_eq!(injected(p), 0);
+        }
+        reset();
+    }
+}
+
+#[cfg(all(test, nnt_fault))]
+mod tests_armed {
+    // Harness state is process-global and the test runner is parallel, so
+    // each test here owns a disjoint set of points and resets only those
+    // — never the whole registry. (The chaos suite, a separate process,
+    // serializes itself and may use the global `reset`.)
+    use super::*;
+
+    #[test]
+    fn times_plan_fires_exactly_n_then_disarms() {
+        reset_point("dlopen");
+        arm("dlopen", Plan::Times(3));
+        let fired: usize = (0..10).filter(|_| should_fail("dlopen")).count();
+        assert_eq!(fired, 3);
+        assert_eq!(injected("dlopen"), 3);
+        assert_eq!(calls("dlopen"), 10);
+        reset_point("dlopen");
+    }
+
+    #[test]
+    fn permille_is_deterministic_per_seed() {
+        let run = |seed: u64| -> Vec<bool> {
+            reset_point("socket.write");
+            set_seed(seed);
+            arm("socket.write", Plan::Permille(250));
+            (0..64).map(|_| should_fail("socket.write")).collect()
+        };
+        let a = run(11);
+        let b = run(11);
+        let c = run(12);
+        assert_eq!(a, b, "same seed must replay the same fault sequence");
+        assert_ne!(a, c, "different seeds should diverge (64 draws at 25%)");
+        assert!(a.iter().any(|&f| f) && a.iter().any(|&f| !f));
+        reset_point("socket.write");
+    }
+
+    #[test]
+    fn points_are_independent() {
+        reset_point("codegen.rustc");
+        reset_point("artifact.write");
+        arm("codegen.rustc", Plan::Always);
+        assert!(should_fail("codegen.rustc"));
+        assert!(!should_fail("artifact.write"));
+        assert_eq!(injected("codegen.rustc"), 1);
+        assert_eq!(injected("artifact.write"), 0);
+        reset_point("codegen.rustc");
+        reset_point("artifact.write");
+    }
+}

@@ -21,11 +21,14 @@
 //!   under `--cfg nnt_model_check`; poison policy + lock-order analysis
 //! * [`evloop`] — epoll event loop + eventfd waker (replaces mio) backing
 //!   the nonblocking serving front end
+//! * [`fault`] — named fault-injection points (no-ops unless
+//!   `--cfg nnt_fault`) driving the chaos suite
 
 pub mod bench;
 pub mod bitvec;
 pub mod cli;
 pub mod evloop;
+pub mod fault;
 pub mod json;
 pub mod mc;
 pub mod prng;

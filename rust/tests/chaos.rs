@@ -1,0 +1,370 @@
+//! Chaos suite (ISSUE 10): fault-injection tests for the resilience story.
+//!
+//! Compiled only under `--cfg nnt_fault` — in a tier-1 build this file is an
+//! empty test binary, so the suite can never slow or destabilize the default
+//! `cargo test`. Under the cfg, every test drives the seeded harness in
+//! [`util::fault`] against a real store / router / registry / server and
+//! asserts the degraded path, not just the absence of a crash:
+//!
+//! * the artifact store never serves a torn payload, no matter where the
+//!   writer dies;
+//! * a `Policy::Native` router always comes up (rustc or dlopen failure
+//!   downgrades to the interpreter, counted and correct);
+//! * a mid-serve eval fault downgrades the native tier permanently, visibly
+//!   (`native>interp` on every subsequent reply) and bit-exactly;
+//! * hot-swapping under injected construction/eval faults drops nothing;
+//! * the event loop's FIFO reply order survives pathological short writes.
+//!
+//! Fault decisions are process-global and seeded (`NNT_CHAOS_SEED`, default
+//! 1 — CI sweeps three fixed seeds), so the tests serialize on one gate and
+//! reset the harness on entry and exit.
+#![cfg(nnt_fault)]
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use nullanet_tiny::coordinator::{BatchPolicy, ModelRegistry, Policy, Router, RouterBuilder};
+use nullanet_tiny::flow::{run_flow, store, FlowConfig};
+use nullanet_tiny::logic::codegen;
+use nullanet_tiny::nn::model::{random_model, Model};
+use nullanet_tiny::util::fault::{self, Plan};
+use nullanet_tiny::util::sync::{Mutex, MutexGuard};
+
+/// Seed for the deterministic fault schedule. CI runs the suite once per
+/// seed in a small fixed set; a local repro is `NNT_CHAOS_SEED=n cargo test
+/// --test chaos` with `RUSTFLAGS="--cfg nnt_fault"`.
+fn chaos_seed() -> u64 {
+    std::env::var("NNT_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+/// The harness state (plans, seeds, counters) is process-global; tests that
+/// arm points must not interleave. `cargo test` runs test fns concurrently
+/// in one process, so every test holds this gate for its whole body.
+fn gate() -> MutexGuard<'static, ()> {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    GATE.get_or_init(|| Mutex::named("chaos.gate", ())).lock()
+}
+
+fn tmp_dir(tag: &str) -> String {
+    static N: AtomicU64 = AtomicU64::new(0);
+    let n = N.fetch_add(1, Ordering::Relaxed);
+    let dir =
+        std::env::temp_dir().join(format!("nnt-chaos-{}-{tag}-{n}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.to_string_lossy().into_owned()
+}
+
+/// The tiny model every serving test builds routers from.
+fn chaos_model(seed: u64) -> Model {
+    random_model("chaos", 6, &[5, 4], 3, 1, seed)
+}
+
+fn build_router(model: &Model, policy: Policy, cache: Option<&str>) -> Router {
+    let r = run_flow(model, &FlowConfig { jobs: 1, ..Default::default() }, None).unwrap();
+    let mut b = RouterBuilder::new(model.clone())
+        .circuit(r.circuit.netlist)
+        .engine(policy)
+        .batch_policy(BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_micros(500),
+            ..Default::default()
+        })
+        .workers(2);
+    if let Some(c) = cache {
+        b = b.native_cache(c);
+    }
+    b.build().unwrap()
+}
+
+fn sample(i: usize) -> Vec<f64> {
+    (0..6).map(|j| ((i * 7 + j) as f64 * 0.23).sin()).collect()
+}
+
+/// Kill-during-write never corrupts: across many publishes where the seeded
+/// harness aborts the writer at either fault site (payload temp write or
+/// journal write), `load` always returns the **last successfully published**
+/// payload — never a torn one, never an error — and the generation number
+/// advances exactly once per success.
+#[test]
+fn store_never_serves_a_torn_payload_under_write_faults() {
+    let _g = gate();
+    fault::reset();
+    let dir = tmp_dir("store");
+    let path = format!("{dir}/model.json");
+
+    // Generation 1 lands fault-free so there is always a last-good payload.
+    let mut last = b"chaos payload 0".to_vec();
+    assert_eq!(store::publish(&path, &last).unwrap(), 1);
+
+    fault::set_seed(chaos_seed());
+    fault::arm("artifact.write", Plan::Permille(400));
+    let (mut successes, mut failures) = (0u64, 0u64);
+    for i in 1..=40 {
+        let payload = format!("chaos payload {i}").into_bytes();
+        match store::publish(&path, &payload) {
+            Ok(_) => {
+                successes += 1;
+                last = payload;
+            }
+            Err(_) => failures += 1,
+        }
+        // The invariant, checked after every attempt: whatever the writer
+        // just did (or died doing), a reader sees the last good payload.
+        let loaded = store::load(&path).unwrap();
+        assert_eq!(loaded.bytes, last, "load diverged after attempt {i}");
+    }
+    assert!(failures > 0, "seed {} injected no write faults", chaos_seed());
+    assert!(successes > 0, "seed {} failed every publish", chaos_seed());
+    assert!(fault::injected("artifact.write") > 0);
+    assert_eq!(store::generation(&path), Some(1 + successes));
+    fault::reset();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// rustc failing at build time is a construction fault the router absorbs:
+/// `Policy::Native` still comes up, serving bit-identical answers on the
+/// interpreter tier, with the downgrade counted.
+#[test]
+fn injected_rustc_failure_downgrades_native_to_interpreter() {
+    let _g = gate();
+    fault::reset();
+    fault::set_seed(chaos_seed());
+    fault::arm("codegen.rustc", Plan::Always);
+    let dir = tmp_dir("rustc");
+    let model = chaos_model(6);
+    let cache = format!("{dir}/native.so");
+    let router = build_router(&model, Policy::Native, Some(cache.as_str()));
+    assert_eq!(router.engine_name(), "logic");
+    assert!(router.metrics().fallback_downgrades.load(Ordering::Relaxed) >= 1);
+    for i in 0..8 {
+        let x = sample(i);
+        let want = nullanet_tiny::nn::eval::classify(&model, &x);
+        let reply = router.submit(x).recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(reply.class, want);
+    }
+    // Without rustc the ladder falls back before ever reaching the build
+    // step, so the injection counter only moves where rustc exists.
+    if codegen::rustc_available() {
+        assert!(fault::injected("codegen.rustc") >= 1);
+    }
+    router.shutdown();
+    fault::reset();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Same ladder, next rung: the build succeeds but `dlopen` refuses the
+/// library. Still a construction fault, still absorbed.
+#[test]
+fn injected_dlopen_failure_downgrades_native_to_interpreter() {
+    let _g = gate();
+    fault::reset();
+    fault::set_seed(chaos_seed());
+    fault::arm("dlopen", Plan::Always);
+    let dir = tmp_dir("dlopen");
+    let model = chaos_model(7);
+    let cache = format!("{dir}/native.so");
+    let router = build_router(&model, Policy::Native, Some(cache.as_str()));
+    assert_eq!(router.engine_name(), "logic");
+    assert!(router.metrics().fallback_downgrades.load(Ordering::Relaxed) >= 1);
+    for i in 0..8 {
+        let x = sample(i);
+        let want = nullanet_tiny::nn::eval::classify(&model, &x);
+        let reply = router.submit(x).recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(reply.class, want);
+    }
+    if codegen::rustc_available() {
+        assert!(fault::injected("dlopen") >= 1);
+    }
+    router.shutdown();
+    fault::reset();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The mid-serve story (satellite f): a healthy native engine that takes an
+/// eval fault downgrades **permanently**, the tier change is visible on
+/// every subsequent reply (`native>interp`), and the interpreter re-serves
+/// the faulted batch bit-exactly — the client never sees the fault.
+#[test]
+fn eval_fault_downgrades_mid_serve_permanently_and_bit_exactly() {
+    let _g = gate();
+    if !codegen::rustc_available() {
+        eprintln!("skipping: mid-serve downgrade needs a real native engine (no rustc)");
+        return;
+    }
+    fault::reset();
+    fault::set_seed(chaos_seed());
+    let dir = tmp_dir("eval");
+    let model = chaos_model(8);
+    let cache = format!("{dir}/native.so");
+    let router = build_router(&model, Policy::Native, Some(cache.as_str()));
+    assert_eq!(router.engine_name(), "native");
+
+    // Healthy tier first.
+    let x = sample(0);
+    let want = nullanet_tiny::nn::eval::classify(&model, &x);
+    let reply = router.submit(x).recv_timeout(Duration::from_secs(10)).unwrap();
+    assert_eq!((reply.class, reply.engine), (want, "native"));
+
+    // One injected eval fault: the batch that absorbs it is still answered
+    // correctly (re-served on the interpreter) and labelled with the tier
+    // that actually produced it.
+    fault::arm("engine.eval", Plan::Times(1));
+    for i in 1..16 {
+        let x = sample(i);
+        let want = nullanet_tiny::nn::eval::classify(&model, &x);
+        let reply = router.submit(x).recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(reply.class, want, "request {i} after the fault");
+    }
+    assert_eq!(fault::injected("engine.eval"), 1);
+    assert_eq!(router.metrics().fallback_downgrades.load(Ordering::Relaxed), 1);
+
+    // Permanent: long after the fault plan is spent, the tier stays down.
+    let x = sample(99);
+    let want = nullanet_tiny::nn::eval::classify(&model, &x);
+    let reply = router.submit(x).recv_timeout(Duration::from_secs(10)).unwrap();
+    assert_eq!((reply.class, reply.engine), (want, "native>interp"));
+    router.shutdown();
+    fault::reset();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Hot-swapping under injected construction and eval faults drops nothing:
+/// clients hammer the registry while the same model is reinstalled behind
+/// their backs with `Policy::Native` routers whose construction randomly
+/// fails at rustc or dlopen (falling back to the interpreter) and whose
+/// native tier randomly downgrades mid-serve. Every reply arrives and every
+/// reply is correct.
+#[test]
+fn hot_swap_under_injected_faults_drops_nothing() {
+    let _g = gate();
+    fault::reset();
+    fault::set_seed(chaos_seed());
+    let dir = tmp_dir("swap");
+    let model = chaos_model(9);
+    let cache = format!("{dir}/native.so");
+
+    let first = build_router(&model, Policy::Logic, None);
+    let registry = Arc::new(ModelRegistry::with_default("chaos", first));
+
+    fault::arm("codegen.rustc", Plan::Permille(400));
+    fault::arm("dlopen", Plan::Permille(400));
+    fault::arm("engine.eval", Plan::Permille(200));
+
+    let mut clients = Vec::new();
+    for t in 0..2 {
+        let reg = Arc::clone(&registry);
+        let m = model.clone();
+        clients.push(std::thread::spawn(move || {
+            for i in 0..60 {
+                let x = sample(t * 1000 + i);
+                let want = nullanet_tiny::nn::eval::classify(&m, &x);
+                // Admission control may push back while a displaced router
+                // drains; overload is a typed, retryable verdict — what must
+                // never happen is an admitted request going unanswered.
+                let rx = loop {
+                    match reg.classify(None, &x) {
+                        Ok(rx) => break rx,
+                        Err(_) => std::thread::sleep(Duration::from_millis(1)),
+                    }
+                };
+                let reply = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+                assert_eq!(reply.class, want, "client {t} request {i}");
+            }
+        }));
+    }
+    for _ in 0..5 {
+        std::thread::sleep(Duration::from_millis(10));
+        let next = build_router(&model, Policy::Native, Some(cache.as_str()));
+        registry.install("chaos", next, None).unwrap();
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    registry.unload("chaos").unwrap();
+    fault::reset();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite (c), server side: the event loop's strict-FIFO reply order and
+/// backpressure machinery survive pathological short writes. With
+/// `socket.write` armed, every injected flush moves a single byte, so
+/// replies dribble out across many loop iterations while the backlog (and
+/// the pause/resume water marks guarding it) stays engaged — yet the client
+/// still receives every reply, complete and in request order.
+#[cfg(target_os = "linux")]
+#[test]
+fn event_loop_fifo_order_survives_injected_short_writes() {
+    use nullanet_tiny::coordinator::{frame, server};
+    use nullanet_tiny::util::sync::mpsc;
+    use std::io::Write;
+
+    let _g = gate();
+    fault::reset();
+    fault::set_seed(chaos_seed());
+    let model = chaos_model(10);
+    let router = build_router(&model, Policy::Logic, None);
+    let registry = Arc::new(ModelRegistry::with_default("chaos", router));
+
+    let (tx, rx) = mpsc::channel();
+    let reg = Arc::clone(&registry);
+    let srv = std::thread::spawn(move || {
+        server::serve_event(reg, "127.0.0.1:0", Some(tx)).unwrap();
+    });
+    let port = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+
+    fault::arm("socket.write", Plan::Permille(500));
+    let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let n = 16;
+    let mut expected = Vec::with_capacity(n);
+    let mut wire = Vec::new();
+    let r = registry.get(None).unwrap();
+    for i in 0..n {
+        let x = sample(i);
+        expected.push(nullanet_tiny::nn::eval::classify(&model, &x) as u16);
+        let bits = r.binarize(&x);
+        wire.extend(frame::encode_classify_req(None, bits.len() as u16, bits.words()));
+    }
+    // One pipelined burst: all requests on the wire before any reply read.
+    conn.write_all(&wire).unwrap();
+    let mut buf = Vec::new();
+    for (i, want) in expected.iter().enumerate() {
+        match read_frame(&mut conn, &mut buf) {
+            frame::Frame::ClassifyResp { classes } => {
+                assert_eq!(classes, vec![*want], "reply {i} out of FIFO order");
+            }
+            other => panic!("reply {i}: expected a classify resp, got {other:?}"),
+        }
+    }
+    assert!(
+        fault::injected("socket.write") > 0,
+        "seed {} never shortened a write",
+        chaos_seed()
+    );
+
+    fault::reset();
+    let mut ctl = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+    ctl.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+    srv.join().unwrap();
+}
+
+/// Read one complete frame off a blocking client socket, tolerating the
+/// byte-at-a-time arrival the short-write fault produces.
+#[cfg(target_os = "linux")]
+fn read_frame(
+    stream: &mut std::net::TcpStream,
+    buf: &mut Vec<u8>,
+) -> nullanet_tiny::coordinator::frame::Frame {
+    use nullanet_tiny::coordinator::frame;
+    use std::io::Read;
+    let mut chunk = [0u8; 4096];
+    loop {
+        if let Some((f, n)) = frame::decode(buf).unwrap() {
+            buf.drain(..n);
+            return f;
+        }
+        let n = stream.read(&mut chunk).unwrap();
+        assert!(n > 0, "server closed mid-frame");
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}

@@ -16,12 +16,14 @@ use nullanet_tiny::util::bitvec::PackedBatch;
 use nullanet_tiny::util::proptest::{check, check_simple, Config, Gen};
 
 /// A random well-formed classify request (tail bits masked per the wire
-/// invariant).
+/// invariant). Half the cases carry a deadline budget and encode as the
+/// `TYPE_CLASSIFY_REQ_DL` variant.
 #[derive(Clone, Debug)]
 struct ReqCase {
     model: Option<String>,
     bits: u16,
     words: Vec<u64>,
+    deadline_ms: Option<u32>,
 }
 
 fn gen_req(g: &mut Gen) -> ReqCase {
@@ -44,11 +46,20 @@ fn gen_req(g: &mut Gen) -> ReqCase {
         1 => Some("m".to_string()),
         _ => Some(format!("model-{}", g.rng.below(100))),
     };
-    ReqCase { model, bits, words }
+    let deadline_ms = match g.rng.below(4) {
+        0 => Some(0),
+        1 => Some(g.rng.next_u32()),
+        _ => None, // plain TYPE_CLASSIFY_REQ
+    };
+    ReqCase { model, bits, words, deadline_ms }
 }
 
 fn encode(c: &ReqCase) -> Vec<u8> {
-    frame::encode_classify_req(c.model.as_deref(), c.bits, &c.words)
+    let model = c.model.as_deref();
+    match c.deadline_ms {
+        Some(ms) => frame::encode_classify_req_deadline(model, c.bits, &c.words, ms),
+        None => frame::encode_classify_req(model, c.bits, &c.words),
+    }
 }
 
 #[test]
@@ -56,11 +67,15 @@ fn classify_req_round_trips_bit_exactly() {
     check_simple("frame-roundtrip", gen_req, |c| {
         let enc = encode(c);
         match frame::decode(&enc) {
-            Ok(Some((Frame::ClassifyReq { model, bits, words }, consumed))) => {
+            Ok(Some((Frame::ClassifyReq { model, bits, words, deadline_ms }, consumed))) => {
                 if consumed != enc.len() {
                     return Err(format!("consumed {consumed} of {}", enc.len()));
                 }
-                if model != c.model || bits != c.bits || words != c.words {
+                if model != c.model
+                    || bits != c.bits
+                    || words != c.words
+                    || deadline_ms != c.deadline_ms
+                {
                     return Err("decoded frame differs from the encoded one".into());
                 }
                 Ok(())
@@ -120,7 +135,7 @@ fn gen_split(g: &mut Gen) -> SplitCase {
     let nframes = g.sized_range(1, 5);
     let mut stream = Vec::new();
     for _ in 0..nframes {
-        match g.rng.below(4) {
+        match g.rng.below(5) {
             0 => stream.extend(encode(&gen_req(g))),
             1 => {
                 let n = g.sized_range(0, 9);
@@ -129,6 +144,7 @@ fn gen_split(g: &mut Gen) -> SplitCase {
                 stream.extend(frame::encode_classify_resp(&classes));
             }
             2 => stream.extend(frame::encode_error("boom")),
+            3 => stream.extend(frame::encode_deadline("budget elapsed")),
             _ => stream.extend(frame::encode_overload("queue full")),
         }
     }
